@@ -1,0 +1,62 @@
+//! End-to-end throughput bench: one compact offline run per mode
+//! (a condensed Fig. 5/10 — the full sweeps live in `llm42 experiments`).
+//!
+//!     cargo bench --bench e2e
+
+use llm42::engine::{Engine, EngineConfig, Mode};
+use llm42::runtime::Runtime;
+use llm42::trace::{LengthProfile, TraceSpec};
+use llm42::util::now_secs;
+use llm42::util::stats::Table;
+
+fn main() {
+    let artifacts =
+        std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let mut rt = match Runtime::load(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("bench skipped: {e}");
+            return;
+        }
+    };
+    let dims = rt.dims().clone();
+    let spec = |det: f64| TraceSpec {
+        profile: LengthProfile::Fixed { name: "bench", input: 32, output: 48 },
+        n_requests: 12,
+        det_ratio: det,
+        qps: None,
+        seed: 11,
+        temperature: 1.0,
+        vocab: dims.vocab,
+        max_seq: dims.max_seq,
+        window: 32,
+    };
+
+    let mut tab = Table::new(&["mode", "out_tok_per_s", "vs_nondet"]);
+    let mut base = None;
+    for (label, mode, det) in [
+        ("non-deterministic", Mode::NonDeterministic, 0.0),
+        ("batch-invariant", Mode::BatchInvariant, 0.0),
+        ("llm42 @10% det", Mode::Llm42, 0.10),
+        ("llm42 @100% det", Mode::Llm42, 1.0),
+    ] {
+        let cfg = EngineConfig { mode, ..Default::default() };
+        let mut eng = Engine::new(&mut rt, cfg).unwrap();
+        eng.warmup().unwrap();
+        let start = now_secs();
+        for tr in spec(det).generate() {
+            eng.submit(tr.req).unwrap();
+        }
+        eng.run_to_completion().unwrap();
+        let wall = now_secs() - start;
+        let tput = eng.metrics.committed_tokens as f64 / wall;
+        let b = *base.get_or_insert(tput);
+        tab.row(vec![
+            label.into(),
+            format!("{tput:.1}"),
+            format!("{:+.1}%", (tput / b - 1.0) * 100.0),
+        ]);
+        let _ = eng.take_finished();
+    }
+    println!("{}", tab.render());
+}

@@ -1,0 +1,92 @@
+//! Engine-path benchmarks: decode step per bucket (fast vs invariant),
+//! verify pass, prefill chunk, logits extraction, and the pure-rust hot
+//! pieces (sampler, batch bookkeeping) that must never dominate L3.
+//!
+//!     cargo bench --bench engine
+
+use llm42::engine::sampler::sample;
+use llm42::runtime::Runtime;
+use llm42::util::rng::SplitMix64;
+use llm42::util::stats::Table;
+
+fn main() {
+    let artifacts =
+        std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let mut rt = match Runtime::load(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("bench skipped: {e}");
+            return;
+        }
+    };
+    let dims = rt.dims().clone();
+    let trash = (dims.slots - 1) as i32;
+    let reps = 20;
+
+    // ---- forward passes ---------------------------------------------------
+    let mut tab = Table::new(&["pass", "avg_ms", "per_token_us"]);
+    let mut fwd = |rt: &mut Runtime, name: &str, g: usize, t: usize, tab: &mut Table| {
+        let tokens = vec![3i32; g * t];
+        let slots = vec![trash; g];
+        let pos = vec![0i32; g];
+        if rt.manifest.artifact(name).is_none() {
+            return;
+        }
+        rt.forward(name, &tokens, &slots, &pos).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            rt.forward(name, &tokens, &slots, &pos).unwrap();
+            rt.extract_logits(g * t).unwrap();
+        }
+        let avg = t0.elapsed().as_secs_f64() / reps as f64;
+        tab.row(vec![
+            name.to_string(),
+            format!("{:.2}", avg * 1e3),
+            format!("{:.1}", avg / (g * t) as f64 * 1e6),
+        ]);
+    };
+    for b in [1usize, 4, 16] {
+        fwd(&mut rt, &format!("decode_fast_b{b}"), b, 1, &mut tab);
+        fwd(&mut rt, &format!("decode_inv_b{b}"), b, 1, &mut tab);
+    }
+    fwd(&mut rt, "window_inv_g1_t64", 1, 64, &mut tab); // prefill chunk
+    fwd(&mut rt, "window_inv_g8_t32", 8, 32, &mut tab); // grouped verify
+    println!("{}", tab.render());
+
+    // ---- pure-rust hot pieces ----------------------------------------------
+    let mut rng = SplitMix64::new(1);
+    let vocab = dims.vocab;
+    let logits: Vec<f32> = (0..vocab).map(|_| rng.normal() as f32).collect();
+    let mut tab = Table::new(&["component", "ns_per_call", "calls_per_decode_step"]);
+
+    let t0 = std::time::Instant::now();
+    let iters = 2000u64;
+    let mut sink = 0u32;
+    for i in 0..iters {
+        sink ^= sample(&logits, 1.0, 42, i);
+    }
+    let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+    tab.row(vec![
+        "sampler (gumbel, V=2048)".into(),
+        format!("{per:.0}"),
+        "1 per lane".into(),
+    ]);
+
+    let t0 = std::time::Instant::now();
+    for i in 0..iters {
+        sink ^= sample(&logits, 0.0, 42, i);
+    }
+    let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+    tab.row(vec![
+        "sampler (greedy, V=2048)".into(),
+        format!("{per:.0}"),
+        "1 per lane".into(),
+    ]);
+    std::hint::black_box(sink);
+    println!("{}", tab.render());
+    println!(
+        "note: sampler cost per 16-lane decode step ≈ {:.2} ms vs ~25 ms forward — \
+         L3 is not the bottleneck (DESIGN.md §9 target)",
+        16.0 * per / 1e6
+    );
+}

@@ -1,0 +1,81 @@
+//! Kernel micro-benchmarks (Fig. 4 material): fast split-K vs the
+//! batch-invariant universal schedule, through the rust/PJRT path.
+//!
+//! The offline vendor set has no criterion; this is a plain
+//! `harness = false` bench binary that prints min/avg tables.
+//!
+//!     cargo bench --bench kernels
+
+use llm42::runtime::Runtime;
+use llm42::util::rng::SplitMix64;
+use llm42::util::stats::Table;
+
+fn main() {
+    let artifacts =
+        std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = match Runtime::load(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("bench skipped: {e}");
+            return;
+        }
+    };
+    if rt.manifest.artifact("gemm_fast_m1").is_none() {
+        eprintln!("bench skipped: micro artifacts missing (make artifacts-micro)");
+        return;
+    }
+    let dims = rt.dims().clone();
+    let (k, n) = (dims.ffn_hidden, dims.d_model);
+    let mut rng = SplitMix64::new(3);
+    let reps = 30;
+
+    let mut tab = Table::new(&[
+        "kernel", "m", "min_us", "avg_us", "gflops(avg)",
+    ]);
+    for &m in &[1usize, 8, 64, 512] {
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        for variant in ["fast", "inv"] {
+            let name = format!("gemm_{variant}_m{m}");
+            let _ = rt.run_micro(&name, (&x, &[m, k]), (&w, &[k, n]));
+            let mut min = f64::MAX;
+            let mut sum = 0.0;
+            for _ in 0..reps {
+                let t = rt.run_micro(&name, (&x, &[m, k]), (&w, &[k, n])).unwrap();
+                min = min.min(t);
+                sum += t;
+            }
+            let avg = sum / reps as f64;
+            tab.row(vec![
+                format!("gemm_{variant}"),
+                m.to_string(),
+                format!("{:.1}", min * 1e6),
+                format!("{:.1}", avg * 1e6),
+                format!("{:.2}", 2.0 * (m * k * n) as f64 / avg / 1e9),
+            ]);
+        }
+        let xn: Vec<f32> = (0..m * dims.d_model).map(|_| rng.normal() as f32).collect();
+        let wn = vec![1.0f32; dims.d_model];
+        for variant in ["fast", "inv"] {
+            let name = format!("rmsnorm_{variant}_m{m}");
+            let _ = rt.run_micro(&name, (&xn, &[m, dims.d_model]), (&wn, &[dims.d_model]));
+            let mut min = f64::MAX;
+            let mut sum = 0.0;
+            for _ in 0..reps {
+                let t = rt
+                    .run_micro(&name, (&xn, &[m, dims.d_model]), (&wn, &[dims.d_model]))
+                    .unwrap();
+                min = min.min(t);
+                sum += t;
+            }
+            tab.row(vec![
+                format!("rmsnorm_{variant}"),
+                m.to_string(),
+                format!("{:.1}", min * 1e6),
+                format!("{:.1}", sum / reps as f64 * 1e6),
+                "-".into(),
+            ]);
+        }
+    }
+    println!("{}", tab.render());
+}

@@ -1,0 +1,124 @@
+//! End-to-end serving driver (the EXPERIMENTS.md validation run).
+//!
+//!     cargo run --release --example mixed_traffic_serving -- \
+//!         [--requests 48] [--qps 4] [--det-ratio 0.1] [--mode llm42]
+//!
+//! Serves an online ShareGPT-shaped workload (Poisson arrivals) with a
+//! mixed deterministic ratio through the full three-layer stack — rust
+//! scheduler -> AOT HLO graphs -> pallas/jnp kernels — and reports
+//! throughput, latency, TTFT, and DVR overhead. Compares against the
+//! non-deterministic ceiling and the batch-invariant baseline when
+//! `--compare` is passed.
+
+use llm42::engine::{EngineConfig, Mode, StepKind};
+use llm42::prelude::*;
+use llm42::trace::{LengthProfile, TraceSpec};
+use llm42::util::cli::Args;
+use llm42::util::now_secs;
+use llm42::util::stats::Recorder;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let mut rt = Runtime::load(&artifacts)?;
+    let dims = rt.dims().clone();
+
+    let spec = TraceSpec {
+        profile: LengthProfile::sharegpt(),
+        n_requests: args.usize_or("requests", 48)?,
+        det_ratio: args.f64_or("det-ratio", 0.1)?,
+        qps: Some(args.f64_or("qps", 4.0)?),
+        seed: args.u64_or("seed", 42)?,
+        temperature: 1.0,
+        vocab: dims.vocab,
+        max_seq: dims.max_seq,
+        window: args.usize_or("window", 32)?,
+    };
+
+    let modes: Vec<Mode> = if args.has("compare") {
+        vec![Mode::NonDeterministic, Mode::BatchInvariant, Mode::Llm42]
+    } else {
+        vec![Mode::parse(&args.str_or("mode", "llm42"))?]
+    };
+
+    for mode in modes {
+        let cfg = EngineConfig {
+            mode,
+            verify_group: args.usize_or("group", 8)?,
+            verify_window: args.usize_or("window", 32)?,
+            ..Default::default()
+        };
+        serve(&mut rt, cfg, &spec)?;
+    }
+    Ok(())
+}
+
+fn serve(rt: &mut Runtime, cfg: EngineConfig, spec: &TraceSpec) -> Result<()> {
+    println!("== mode {:?}, det ratio {:.0}% ==", cfg.mode, spec.det_ratio * 100.0);
+    let trace = spec.generate();
+    let mut eng = Engine::new(rt, cfg)?;
+    eng.warmup()?;
+
+    let start = now_secs();
+    let mut next = 0usize;
+    loop {
+        while next < trace.len() && now_secs() - start >= trace[next].arrival_offset {
+            eng.submit(trace[next].req.clone())?;
+            next += 1;
+        }
+        if next >= trace.len() && eng.idle() {
+            break;
+        }
+        if eng.step()? == StepKind::Idle {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+    let wall = now_secs() - start;
+
+    let outs = eng.take_finished();
+    let mut e2e = Recorder::new();
+    let mut ttft = Recorder::new();
+    let (mut det_n, mut det_rollbacks, mut det_recomputed) = (0u64, 0u64, 0u64);
+    for o in &outs {
+        e2e.record(o.metrics.e2e());
+        ttft.record(o.metrics.ttft() * 1e3);
+        if o.deterministic {
+            det_n += 1;
+            det_rollbacks += o.metrics.rollbacks;
+            det_recomputed += o.metrics.recomputed_tokens;
+        }
+    }
+    let m = &eng.metrics;
+    println!(
+        "  {} requests ({} deterministic) in {:.1}s",
+        outs.len(),
+        det_n,
+        wall
+    );
+    println!(
+        "  throughput: {:.1} output tok/s | {:.1} total tok/s (incl. prefill)",
+        m.committed_tokens as f64 / wall,
+        (m.committed_tokens + m.prefill_tokens) as f64 / wall
+    );
+    println!(
+        "  latency e2e: p50 {:.2}s p90 {:.2}s p99 {:.2}s | ttft: p50 {:.0}ms p90 {:.0}ms",
+        e2e.percentile(50.0),
+        e2e.percentile(90.0),
+        e2e.percentile(99.0),
+        ttft.percentile(50.0),
+        ttft.percentile(90.0)
+    );
+    println!(
+        "  DVR: {} verify passes, {} rollbacks, {} recomputed tokens ({:.2}% of decoded)",
+        m.verify_passes,
+        det_rollbacks,
+        det_recomputed,
+        m.recompute_ratio() * 100.0
+    );
+    println!(
+        "  phase wall: decode {:.1}s, prefill {:.1}s, verify {:.1}s\n",
+        m.decode_secs, m.prefill_secs, m.verify_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Quickstart: load the engine, serve a handful of mixed requests
+//! in-process, and print decoded text.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Shows the paper's per-request `is_deterministic` flag (O4): two of the
+//! requests ask for determinism and go through decode-verify-rollback;
+//! the rest ride the fast path untouched.
+
+use llm42::prelude::*;
+use llm42::tokenizer::Tokenizer;
+
+fn main() -> Result<()> {
+    let artifacts =
+        std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    println!("loading runtime from {artifacts}/ ...");
+    let mut rt = Runtime::load(&artifacts)?;
+    println!(
+        "model '{}': {:.1}M params, vocab {}, {} KV slots",
+        rt.dims().name,
+        rt.dims().n_params() as f64 / 1e6,
+        rt.dims().vocab,
+        rt.dims().user_slots()
+    );
+
+    println!("training byte-BPE tokenizer (embedded corpus)...");
+    let tok = Tokenizer::default_trained(rt.dims().vocab)?;
+
+    let mut eng = Engine::new(&mut rt, EngineConfig::default())?;
+    eng.warmup()?;
+
+    let prompts = [
+        ("the quick brown fox", true),
+        ("deterministic inference with dynamic batching", true),
+        ("once upon a time", false),
+        ("large language model serving", false),
+        ("floating point addition is not associative", false),
+    ];
+    for (text, det) in prompts {
+        let req = Request {
+            prompt: tok.encode(text),
+            max_new_tokens: 24,
+            deterministic: det,
+            temperature: 1.0,
+            seed: 42,
+        };
+        let id = eng.submit(req)?;
+        println!("submitted #{id} (deterministic={det}): {text:?}");
+    }
+
+    eng.run_to_completion()?;
+
+    println!("\n--- outputs ---");
+    let mut outs = eng.take_finished();
+    outs.sort_by_key(|o| o.id);
+    for o in &outs {
+        println!(
+            "#{} [{}] {:>3} tokens, ttft {:.0} ms, rollbacks {}: {:?}",
+            o.id,
+            if o.deterministic { "det" } else { "fst" },
+            o.tokens.len(),
+            o.metrics.ttft() * 1e3,
+            o.metrics.rollbacks,
+            tok.decode(&o.tokens)
+        );
+    }
+    let m = &eng.metrics;
+    println!(
+        "\nengine: {} decode steps, {} verify passes, {} committed tokens, \
+         {} recomputed ({:.2}%)",
+        m.decode_steps,
+        m.verify_passes,
+        m.committed_tokens,
+        m.recomputed_tokens,
+        m.recompute_ratio() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,318 @@
+"""AOT pipeline: lower every forward-graph variant to HLO text + manifest.
+
+Python runs exactly once (`make artifacts`); the rust engine is then
+self-contained. Interchange format is HLO *text*, not serialized
+HloModuleProto — jax >= 0.5 emits 64-bit instruction ids that the xla
+crate's xla_extension 0.5.1 rejects, while the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Outputs (in --out-dir, default ../artifacts):
+  model_config.json   ModelConfig as JSON
+  weights.bin         f32 little-endian tensors, manifest order
+  manifest.json       state layout, weight table, artifact table
+  *.hlo.txt           one per (shape, strategy) graph variant
+
+Artifact sets:
+  default   decode buckets (fast + invariant), prefill/verify windows,
+            logits extracts — everything the engine needs at runtime
+  micro     standalone GEMM / RMSNorm graphs for the Fig. 4 harness
+  ablation  the wider window/group grid for Fig. 9 / Fig. 12
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import PRESETS, ModelConfig, Strategy
+from .kernels.rmsnorm import rmsnorm
+from .kernels.splitk_matmul import matmul
+from .model import extract_logits, forward, init_weights, weight_shapes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def decode_buckets(cfg: ModelConfig) -> list[int]:
+    """Powers of two up to the number of usable slots (capped at 32)."""
+    out, b = [], 1
+    while b <= min(32, cfg.slots - 1):
+        out.append(b)
+        b *= 2
+    return out
+
+
+def prefill_chunks(cfg: ModelConfig) -> list[int]:
+    out, c = [], 16
+    while c <= min(256, cfg.max_fwd_tokens):
+        out.append(c)
+        c *= 2
+    return out
+
+
+def default_windows(cfg: ModelConfig) -> list[tuple[int, int]]:
+    """(group, window) verify shapes emitted by default."""
+    shapes = [(1, t) for t in prefill_chunks(cfg)]
+    for g in (2, 4, 8):
+        for t in (16, 32, 64):
+            if g * t <= cfg.max_fwd_tokens and g <= cfg.slots - 1:
+                shapes.append((g, t))
+    return shapes
+
+
+def ablation_windows(cfg: ModelConfig) -> list[tuple[int, int]]:
+    shapes = []
+    for g in (1, 2, 4, 8, 16):
+        for t in (16, 32, 64, 128, 256, 512):
+            if g * t <= cfg.max_fwd_tokens and g <= cfg.slots - 1:
+                shapes.append((g, t))
+    return shapes
+
+
+def extract_sizes(cfg: ModelConfig) -> list[int]:
+    out, n = [], 1
+    while n <= cfg.max_fwd_tokens:
+        out.append(n)
+        n *= 2
+    return out
+
+
+class Emitter:
+    def __init__(self, cfg: ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.out_dir = out_dir
+        self.artifacts: list[dict] = []
+
+    def emit(self, name: str, lowered, *, kind: str, meta: dict, donates: bool):
+        t0 = time.time()
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        if donates and "alias" not in text[:2000]:
+            raise RuntimeError(f"{name}: expected input_output_alias, none found")
+        self.artifacts.append(
+            {"name": name, "file": fname, "kind": kind, "donates_state": donates, **meta}
+        )
+        print(
+            f"  {name}: {len(text) / 1e6:.2f} MB hlo, "
+            f"{time.time() - t0:.1f}s",
+            flush=True,
+        )
+
+    def fwd_shapes(self, g: int, t: int):
+        cfg = self.cfg
+        return (
+            jax.ShapeDtypeStruct((cfg.state_floats,), jnp.float32),
+            jax.ShapeDtypeStruct((g * t,), jnp.int32),
+            jax.ShapeDtypeStruct((g,), jnp.int32),
+            jax.ShapeDtypeStruct((g,), jnp.int32),
+            *[
+                jax.ShapeDtypeStruct(shape, jnp.float32)
+                for _, shape in weight_shapes(cfg)
+            ],
+        )
+
+    def emit_forward(self, name: str, g: int, t: int, strategy: Strategy, kind: str):
+        fn = functools.partial(forward, self.cfg, g, t, strategy)
+        lowered = jax.jit(fn, donate_argnums=(0,)).lower(*self.fwd_shapes(g, t))
+        self.emit(
+            name,
+            lowered,
+            kind=kind,
+            donates=True,
+            meta={"g": g, "t": t, "strategy": strategy.kind, "tag": strategy.tag},
+        )
+
+    def emit_extract(self, n: int):
+        cfg = self.cfg
+        fn = functools.partial(extract_logits, cfg, n)
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct((cfg.state_floats,), jnp.float32)
+        )
+        self.emit(
+            f"extract_r{n}",
+            lowered,
+            kind="extract",
+            donates=False,
+            meta={"g": n, "t": 1, "strategy": "none", "tag": "extract"},
+        )
+
+
+def emit_default(em: Emitter):
+    cfg = em.cfg
+    for b in decode_buckets(cfg):
+        em.emit_forward(f"decode_fast_b{b}", b, 1, Strategy.fast(b), "decode")
+        em.emit_forward(f"decode_inv_b{b}", b, 1, Strategy.invariant(), "decode")
+    for g, t in default_windows(cfg):
+        em.emit_forward(f"window_inv_g{g}_t{t}", g, t, Strategy.invariant(), "window")
+    for n in extract_sizes(cfg):
+        em.emit_extract(n)
+
+
+def emit_ablation(em: Emitter):
+    done = {(a["g"], a["t"]) for a in em.artifacts if a["kind"] == "window"}
+    for g, t in ablation_windows(em.cfg):
+        if (g, t) not in done:
+            em.emit_forward(
+                f"window_inv_g{g}_t{t}", g, t, Strategy.invariant(), "window"
+            )
+
+
+def emit_micro(em: Emitter):
+    """Standalone kernel graphs for the Fig. 4 analogue (fast vs invariant)."""
+    cfg = em.cfg
+    k, n = cfg.ffn_hidden, cfg.d_model  # down-projection shape, as in Fig. 4a
+    # shape-tuned split heuristic, like the model's decode buckets: more
+    # split-K parallelism at low token counts (this is what makes the fast
+    # GEMM batch-*variant*, Table 2)
+    splits_for = lambda m: {1: 8, 2: 8, 4: 4, 8: 4, 16: 2, 32: 2}.get(m, 1)
+    for m in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512):
+        xs = jax.ShapeDtypeStruct((m, k), jnp.float32)
+        ws = jax.ShapeDtypeStruct((k, n), jnp.float32)
+
+        def gemm_fast(x, w, s=splits_for(m)):
+            return matmul(
+                x, w, kind="fast", nsplits=s, partial_dtype=cfg.partial_dtype
+            )
+
+        def gemm_inv(x, w):
+            return matmul(x, w, kind="inv", seq_chunks=8)
+
+        em.emit(
+            f"gemm_fast_m{m}",
+            jax.jit(gemm_fast).lower(xs, ws),
+            kind="micro_gemm",
+            donates=False,
+            meta={"g": m, "t": 0, "strategy": "fast", "tag": "micro"},
+        )
+        em.emit(
+            f"gemm_inv_m{m}",
+            jax.jit(gemm_inv).lower(xs, ws),
+            kind="micro_gemm",
+            donates=False,
+            meta={"g": m, "t": 0, "strategy": "inv", "tag": "micro"},
+        )
+
+        xs2 = jax.ShapeDtypeStruct((m, cfg.d_model), jnp.float32)
+        ws2 = jax.ShapeDtypeStruct((cfg.d_model,), jnp.float32)
+        em.emit(
+            f"rmsnorm_fast_m{m}",
+            jax.jit(lambda x, w: rmsnorm(x, w, nsplit=4)).lower(xs2, ws2),
+            kind="micro_norm",
+            donates=False,
+            meta={"g": m, "t": 0, "strategy": "fast", "tag": "micro"},
+        )
+        em.emit(
+            f"rmsnorm_inv_m{m}",
+            jax.jit(lambda x, w: rmsnorm(x, w, nsplit=1)).lower(xs2, ws2),
+            kind="micro_norm",
+            donates=False,
+            meta={"g": m, "t": 0, "strategy": "inv", "tag": "micro"},
+        )
+
+
+def write_weights(cfg: ModelConfig, out_dir: str) -> list[dict]:
+    table, offset = [], 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for name, w in init_weights(cfg):
+            arr = np.asarray(w, dtype=np.float32)
+            arr.tofile(f)
+            table.append(
+                {
+                    "name": name,
+                    "shape": list(arr.shape),
+                    "offset_floats": offset,
+                    "size_floats": int(arr.size),
+                }
+            )
+            offset += int(arr.size)
+    return table
+
+
+def source_stamp(cfg: ModelConfig, sets: list[str]) -> str:
+    h = hashlib.sha256()
+    h.update(json.dumps(cfg.to_json(), sort_keys=True).encode())
+    h.update(",".join(sorted(sets)).encode())
+    base = os.path.dirname(__file__)
+    for fn in ("model.py", "aot.py", "config.py",
+               "kernels/splitk_matmul.py", "kernels/rmsnorm.py"):
+        with open(os.path.join(base, fn), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    p.add_argument("--preset", default=os.environ.get("LLM42_PRESET", "tiny"),
+                   choices=sorted(PRESETS))
+    p.add_argument("--sets", default="default",
+                   help="comma list of: default,micro,ablation")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args()
+
+    cfg = PRESETS[args.preset]
+    sets = [s for s in args.sets.split(",") if s]
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    stamp = source_stamp(cfg, sets)
+    stamp_path = os.path.join(out_dir, ".stamp")
+    if not args.force and os.path.exists(stamp_path):
+        if open(stamp_path).read().strip() == stamp:
+            print(f"artifacts up to date in {out_dir} (stamp match)")
+            return 0
+
+    t0 = time.time()
+    print(f"emitting artifacts for preset={args.preset} sets={sets} -> {out_dir}")
+    em = Emitter(cfg, out_dir)
+    if "default" in sets:
+        emit_default(em)
+    if "ablation" in sets:
+        emit_ablation(em)
+    if "micro" in sets:
+        emit_micro(em)
+
+    weights_table = write_weights(cfg, out_dir)
+    with open(os.path.join(out_dir, "model_config.json"), "w") as f:
+        json.dump(cfg.to_json(), f, indent=2)
+    manifest = {
+        "model": cfg.to_json(),
+        "state": {
+            "total_floats": cfg.state_floats,
+            "pool_floats": cfg.pool_floats,
+            "logits_offset": cfg.logits_offset,
+            "logits_rows": cfg.max_fwd_tokens,
+            "vocab": cfg.vocab,
+        },
+        "weight_order": [nm for nm, _ in weight_shapes(cfg)],
+        "weights": weights_table,
+        "artifacts": em.artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    with open(stamp_path, "w") as f:
+        f.write(stamp)
+    print(f"done: {len(em.artifacts)} artifacts in {time.time() - t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,184 @@
+"""Model configuration shared by the L2 graph builder and the AOT pipeline.
+
+The rust engine never imports this; it reads the JSON manifest emitted by
+`aot.py`. Keep every field JSON-serializable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A Llama-style decoder-only transformer, sized for CPU-PJRT serving.
+
+    `slots` includes one reserved *trash* slot (index `slots - 1`) used by
+    padding lanes in grouped verification; the engine only allocates user
+    requests to slots `0 .. slots - 2`.
+    """
+
+    name: str = "tiny"
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    head_dim: int = 32
+    ffn_hidden: int = 704
+    max_seq: int = 640          # Smax: per-slot KV capacity (tokens)
+    slots: int = 17             # S: concurrent sequences + 1 trash slot
+    max_fwd_tokens: int = 512   # R: logits region rows = max G*T per forward
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    logit_scale: float = 6.0    # sharpens/flattens logits; calibrates flip rate
+    partial_dtype: str = "bfloat16"  # cross-split partial storage (drift source)
+    seed: int = 42
+
+    # ---- derived sizes (floats) ------------------------------------------
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def pool_floats(self) -> int:
+        """K pool + V pool, layout [L, S, Smax, kv_dim] each."""
+        return 2 * self.n_layers * self.slots * self.max_seq * self.kv_dim
+
+    @property
+    def logits_floats(self) -> int:
+        return self.max_fwd_tokens * self.vocab
+
+    @property
+    def state_floats(self) -> int:
+        return self.pool_floats + self.logits_floats
+
+    def kv_offset(self, which: int, layer_like, slot_like, pos_like):
+        """Flat-state float offset of pool[which][layer][slot][pos][0].
+
+        Works with python ints or traced jax scalars. `which`: 0 = K, 1 = V.
+        """
+        per_pool = self.n_layers * self.slots * self.max_seq * self.kv_dim
+        per_layer = self.slots * self.max_seq * self.kv_dim
+        per_slot = self.max_seq * self.kv_dim
+        return (
+            which * per_pool
+            + layer_like * per_layer
+            + slot_like * per_slot
+            + pos_like * self.kv_dim
+        )
+
+    @property
+    def logits_offset(self) -> int:
+        return self.pool_floats
+
+    def n_params(self) -> int:
+        d, f, v = self.d_model, self.ffn_hidden, self.vocab
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * v * d + d
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+PRESETS = {
+    "tiny": ModelConfig(),
+    # ~26M params; for the larger end-to-end validation run.
+    "small": ModelConfig(
+        name="small",
+        vocab=4096,
+        d_model=512,
+        n_layers=8,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=64,
+        ffn_hidden=1376,
+        max_seq=640,
+        slots=17,
+    ),
+    # minimal config for fast unit tests
+    "test": ModelConfig(
+        name="test",
+        vocab=256,
+        d_model=64,
+        n_layers=2,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        ffn_hidden=128,
+        max_seq=96,
+        slots=5,
+        max_fwd_tokens=64,
+    ),
+}
+
+
+# Fast-path reduction-strategy heuristics, keyed by decode batch bucket.
+# Mirrors real GPU kernels: more split-K parallelism at low batch sizes
+# (split-K / FlashDecoding-style KV splits), none at high batch sizes.
+FFN_SPLITS_BY_BUCKET = {1: 8, 2: 8, 4: 4, 8: 2, 16: 1, 32: 1}
+HEAD_SPLITS_BY_BUCKET = {1: 8, 2: 8, 4: 4, 8: 2, 16: 1, 32: 1}
+ATTN_KSPLITS_BY_BUCKET = {1: 4, 2: 4, 4: 2, 8: 2, 16: 1, 32: 1}
+NORM_SPLITS_BY_BUCKET = {1: 4, 2: 4, 4: 2, 8: 2, 16: 1, 32: 1}
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """A reduction schedule for one compiled forward graph.
+
+    `fast(bucket)` mimics shape-tuned GPU kernels: the reduction tree varies
+    with the batch bucket and cross-split partials are rounded to
+    `ModelConfig.partial_dtype` (the floating-point drift source).
+
+    `invariant()` is the single universal schedule (split-K = 1, sequential
+    K-chunk accumulation, attention num_splits = 1) used by the verifier,
+    prefill, and the SGLang-Deterministic-analogue batch-invariant mode.
+    """
+
+    kind: str            # "fast" | "inv"
+    ffn_splits: int = 1
+    head_splits: int = 1
+    attn_ksplits: int = 1
+    norm_splits: int = 1
+    seq_chunks: int = 8  # invariant mode: sequential K chunks in GEMMs
+
+    @staticmethod
+    def fast(bucket: int) -> "Strategy":
+        return Strategy(
+            kind="fast",
+            ffn_splits=FFN_SPLITS_BY_BUCKET[bucket],
+            head_splits=HEAD_SPLITS_BY_BUCKET[bucket],
+            attn_ksplits=ATTN_KSPLITS_BY_BUCKET[bucket],
+            norm_splits=NORM_SPLITS_BY_BUCKET[bucket],
+        )
+
+    @staticmethod
+    def invariant() -> "Strategy":
+        return Strategy(kind="inv")
+
+    @property
+    def tag(self) -> str:
+        if self.kind == "inv":
+            return "inv"
+        return (
+            f"fast_f{self.ffn_splits}h{self.head_splits}"
+            f"a{self.attn_ksplits}n{self.norm_splits}"
+        )
+
+
+def config_from_json(d: dict) -> ModelConfig:
+    fields = {f.name for f in dataclasses.fields(ModelConfig)}
+    return ModelConfig(**{k: v for k, v in d.items() if k in fields})
+
+
+def load_config(path: str) -> ModelConfig:
+    with open(path) as f:
+        return config_from_json(json.load(f))

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the L1 pallas kernels and the L2 model blocks.
+
+These are the mathematical references: plain f32 computations with XLA's
+default schedules. Kernel tests assert `allclose` against these within the
+tolerance implied by the partial dtype, plus *exact* structural properties
+(position invariance, split-count divergence) that the system relies on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    ss = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ss + eps) * w[None, :]
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    g = matmul_ref(x, w_gate)
+    u = matmul_ref(x, w_up)
+    return matmul_ref(jax.nn.silu(g) * u, w_down)
+
+
+def attention_ref(q, k, v, mask, scale):
+    """q [T, H, hd]; k, v [Smax, H, hd]; mask [T, Smax] bool (True = attend)."""
+    scores = jnp.einsum("thd,shd->hts", q, k) * scale
+    scores = jnp.where(mask[None, :, :], scores, -1e9)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hts,shd->thd", p, v)
+
+
+def rope_ref(x, positions, theta: float = 10000.0):
+    """x [T, H, hd]; positions [T] i32. Rotates pairs (even, odd)."""
+    t, h, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    cos, sin = cos[:, None, :], sin[:, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)

@@ -1,0 +1,71 @@
+"""L1: RMSNorm as a Pallas kernel with a configurable split reduction.
+
+RMSNorm reduces over the feature dimension per token. GPU kernels split
+that reduction across warps for occupancy; the split count changes the
+accumulation tree (paper Table 2: RMSNorm is position-invariant at
+num_splits=1 but not batch-invariant in general). We reproduce both
+schedules: `nsplit=1` is the universal (invariant) schedule, `nsplit>1`
+computes per-chunk partial sums of squares combined by the same fixed
+pairwise tree as the split-K GEMM.
+
+The whole row block lives in VMEM (rows x d_model tiles are tiny relative
+to the 16 MB budget — DESIGN.md §8); grid is 1, matching a single-CTA
+per-token normalization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .splitk_matmul import combine_tree
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, nsplit, eps):
+    x = x_ref[...]  # [M, D] f32
+    m, d = x.shape
+    if nsplit == 1:
+        ss = jnp.sum(x * x, axis=-1)  # [M]
+    else:
+        parts = x.reshape(m, nsplit, d // nsplit)
+        partial = jnp.sum(parts * parts, axis=-1)        # [M, nsplit]
+        ss = combine_tree(jnp.moveaxis(partial, 1, 0))   # fixed tree -> [M]
+    inv = jax.lax.rsqrt(ss / d + eps)
+    o_ref[...] = x * inv[:, None] * w_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("nsplit", "eps"))
+def rmsnorm(
+    x: jax.Array, w: jax.Array, *, nsplit: int = 1, eps: float = 1e-5
+) -> jax.Array:
+    """f32 [M, D] RMSNorm with an `nsplit`-way feature-dim reduction."""
+    m, d = x.shape
+    assert d % nsplit == 0, (d, nsplit)
+    kernel = functools.partial(_rmsnorm_kernel, nsplit=nsplit, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("nsplit", "eps"))
+def jnp_rmsnorm(
+    x: jax.Array, w: jax.Array, *, nsplit: int = 1, eps: float = 1e-5
+) -> jax.Array:
+    """XLA-native form of the same schedule (bitwise-identical to `rmsnorm`,
+    asserted in pytest); used inside the serving graphs to avoid the pallas
+    interpret-mode per-call overhead on CPU-PJRT."""
+    m, d = x.shape
+    assert d % nsplit == 0, (d, nsplit)
+    if nsplit == 1:
+        ss = jnp.sum(x * x, axis=-1)
+    else:
+        parts = x.reshape(m, nsplit, d // nsplit)
+        partial = jnp.sum(parts * parts, axis=-1)
+        ss = combine_tree(jnp.moveaxis(partial, 1, 0))
+    inv = jax.lax.rsqrt(ss / d + eps)
+    return x * inv[:, None] * w[None, :]

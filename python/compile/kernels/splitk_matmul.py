@@ -1,0 +1,193 @@
+"""L1: split-K matmul as a Pallas kernel.
+
+This kernel *is* the paper's non-determinism mechanism, transplanted to the
+pallas programming model. A GPU split-K GEMM partitions the reduction (K)
+dimension across thread blocks and combines partial results in a second
+step; how many splits are chosen depends on the input shape, so the
+floating-point reduction tree — and therefore the low-order bits of the
+result — change with the batch bucket (paper §2.2, Fig. 3).
+
+Hardware adaptation (DESIGN.md §6): instead of threadblocks we use the
+pallas grid over K-blocks, with each partial product produced from a
+VMEM-resident tile pair (`BlockSpec` over the K axis plays the role of the
+threadblock split). Partials are rounded to `partial_dtype` before the
+cross-split combine — mirroring partial-result stores on real hardware and
+making the drift measurable at f32. The combine is an explicit fixed-shape
+pairwise tree, so for a *given* `nsplits` the kernel is position-invariant
+(paper O2): the result for a row does not depend on other rows' values or
+on the row's position in the batch.
+
+`nsplits=1` degenerates to a single full-K product — the universal schedule
+used by the invariant strategy. Kernels are lowered with `interpret=True`
+(CPU-PJRT cannot execute Mosaic custom-calls); real-TPU efficiency is
+estimated structurally in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def combine_tree(parts: jax.Array) -> jax.Array:
+    """Fixed pairwise reduction tree over axis 0 (length must be a power of 2).
+
+    The tree's *shape* is a compile-time function of `parts.shape[0]`; two
+    different split counts therefore produce different accumulation orders,
+    which is exactly the effect split-K has on GPU GEMMs.
+    """
+    n = parts.shape[0]
+    assert n & (n - 1) == 0, f"combine_tree needs a power-of-2 count, got {n}"
+    while n > 1:
+        parts = parts[0 : n // 2] + parts[n // 2 : n]
+        n //= 2
+    return parts[0]
+
+
+def _splitk_kernel(x_ref, w_ref, o_ref, *, partial_dtype):
+    """One grid step: a full [M, K/nsplits] x [K/nsplits, N] tile product.
+
+    The f32 MXU-style accumulation happens inside the tile; the *stored*
+    partial is rounded to `partial_dtype`, as real kernels round partial
+    results when staging them through memory.
+    """
+    acc = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+    o_ref[0, :, :] = acc.astype(partial_dtype).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("nsplits", "partial_dtype"))
+def splitk_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    nsplits: int = 1,
+    partial_dtype: str = "bfloat16",
+) -> jax.Array:
+    """f32 [M, K] @ [K, N] -> [M, N] with an `nsplits`-way split-K schedule.
+
+    nsplits == 1 reproduces a plain single-pass product (no partial
+    rounding): the batch-invariant universal schedule.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert k % nsplits == 0, f"K={k} not divisible by nsplits={nsplits}"
+    if nsplits == 1:
+        return _full_matmul_pallas(x, w)
+    pdt = jnp.dtype(partial_dtype)
+    kernel = functools.partial(_splitk_kernel, partial_dtype=pdt)
+    partials = pl.pallas_call(
+        kernel,
+        grid=(nsplits,),
+        in_specs=[
+            pl.BlockSpec((m, k // nsplits), lambda s: (0, s)),
+            pl.BlockSpec((k // nsplits, n), lambda s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda s: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nsplits, m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+    return combine_tree(partials)
+
+
+def _full_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _full_matmul_pallas(x: jax.Array, w: jax.Array) -> jax.Array:
+    m, k = x.shape
+    _, n = w.shape
+    return pl.pallas_call(
+        _full_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("nsplits", "partial_dtype"))
+def jnp_splitk_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    nsplits: int = 1,
+    partial_dtype: str = "bfloat16",
+) -> jax.Array:
+    """XLA-native lowering of the split-K schedule.
+
+    Bitwise-identical to `splitk_matmul` (asserted in pytest): the same
+    per-split f32 tile products, the same `partial_dtype` rounding, the
+    same fixed combine tree — expressed as a reshaped einsum instead of a
+    pallas grid. The serving graphs use this form for most GEMMs because
+    pallas `interpret=True` adds per-call emulation overhead on CPU-PJRT
+    (~0.4 ms/call; see EXPERIMENTS.md §Perf), while the pallas kernel
+    remains the ground truth and stays on the real path for the FFN
+    down-projection.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and k % nsplits == 0, (x.shape, w.shape, nsplits)
+    if nsplits == 1:
+        return jnp.dot(x, w, preferred_element_type=jnp.float32)
+    pdt = jnp.dtype(partial_dtype)
+    xs = x.reshape(m, nsplits, k // nsplits)
+    ws = w.reshape(nsplits, k // nsplits, n)
+    parts = jnp.einsum(
+        "msk,skn->smn", xs, ws, preferred_element_type=jnp.float32
+    )
+    parts = parts.astype(pdt).astype(jnp.float32)
+    return combine_tree(parts)
+
+
+def seqchunk_matmul(x: jax.Array, w: jax.Array, *, chunks: int = 8) -> jax.Array:
+    """Batch-invariant GEMM: a *sequential* fixed-chunk K accumulation.
+
+    This is the universal reduction schedule of batch-invariant computation
+    (He et al.): every token's dot product is accumulated left-to-right over
+    the same fixed K-chunks regardless of batch shape. The serial carry
+    chain is what real batch-invariant kernels pay for — XLA cannot
+    tree-reduce across `scan` steps, mirroring the forfeited split-K
+    parallelism the paper measures in Fig. 4a.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and k % chunks == 0, (x.shape, w.shape, chunks)
+    xc = x.reshape(m, chunks, k // chunks).transpose(1, 0, 2)
+    wc = w.reshape(chunks, k // chunks, n)
+
+    def body(acc, xw):
+        xi, wi = xw
+        return acc + jnp.dot(xi, wi, preferred_element_type=jnp.float32), None
+
+    acc0 = jnp.zeros((m, n), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (xc, wc))
+    return acc
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    kind: str,
+    nsplits: int = 1,
+    seq_chunks: int = 8,
+    partial_dtype: str = "bfloat16",
+    impl: str = "jnp",
+) -> jax.Array:
+    """Strategy-dispatched GEMM used by the L2 model.
+
+    `impl` selects the lowering for the fast path: "pallas" (the L1 kernel
+    itself) or "jnp" (its bitwise-identical XLA-native form).
+    """
+    if kind == "fast":
+        f = splitk_matmul if impl == "pallas" else jnp_splitk_matmul
+        return f(x, w, nsplits=nsplits, partial_dtype=partial_dtype)
+    if kind == "inv":
+        return seqchunk_matmul(x, w, chunks=seq_chunks)
+    raise ValueError(f"unknown GEMM strategy kind: {kind}")

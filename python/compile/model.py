@@ -1,0 +1,302 @@
+"""L2: the Llama-style decoder as a shape-specialized jax forward graph.
+
+One function — `forward(cfg, g, t, strategy)` — covers all three phases of
+the engine (paper §4.1, leveraging O3):
+
+* decode        = forward(B, 1, fast(B))   one token per lane, B = batch bucket
+* verify        = forward(G, T, invariant) fixed-shape grouped replay
+* prefill chunk = forward(1, C, invariant) one request at a time
+
+All graphs operate on a single flat f32 *state* array threaded through
+executions with buffer donation (input_output_alias), so the multi-MB KV
+pool never crosses the host boundary:
+
+    state = [ K pool | V pool | logits region ]
+              [L,S,Smax,kv]  [L,S,Smax,kv]  [R,V]
+
+Lane `g` writes its token logits to rows `g*t .. g*t+t` of the logits
+region; the rust engine reads them back with a tiny `extract` graph.
+
+Position invariance (paper O2) holds by construction: every per-token
+reduction (GEMM rows, per-token softmax, RMSNorm) has a fixed shape
+independent of lane index, and lanes interact only through disjoint KV
+slots. The rust integration tests assert this bitwise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, Strategy
+from .kernels.rmsnorm import jnp_rmsnorm
+from .kernels.splitk_matmul import matmul
+
+# Weight tensors, in the exact order they are passed to the compiled graphs
+# (and laid out in weights.bin). The rust runtime replays this order.
+WEIGHT_SPEC = [
+    ("embed", lambda c: (c.vocab, c.d_model)),
+    ("wq", lambda c: (c.n_layers, c.d_model, c.q_dim)),
+    ("wk", lambda c: (c.n_layers, c.d_model, c.kv_dim)),
+    ("wv", lambda c: (c.n_layers, c.d_model, c.kv_dim)),
+    ("wo", lambda c: (c.n_layers, c.q_dim, c.d_model)),
+    ("attn_norm", lambda c: (c.n_layers, c.d_model)),
+    ("ffn_norm", lambda c: (c.n_layers, c.d_model)),
+    ("w_gate", lambda c: (c.n_layers, c.d_model, c.ffn_hidden)),
+    ("w_up", lambda c: (c.n_layers, c.d_model, c.ffn_hidden)),
+    ("w_down", lambda c: (c.n_layers, c.ffn_hidden, c.d_model)),
+    ("final_norm", lambda c: (c.d_model,)),
+    ("lm_head", lambda c: (c.d_model, c.vocab)),
+]
+
+
+def weight_shapes(cfg: ModelConfig):
+    return [(name, shape_fn(cfg)) for name, shape_fn in WEIGHT_SPEC]
+
+
+def init_weights(cfg: ModelConfig):
+    """Synthetic weights, fixed seed (DESIGN.md §1: no real checkpoints)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    out = []
+    for name, shape in weight_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if "norm" in name:
+            w = jnp.ones(shape, jnp.float32)
+        else:
+            # scaled init keeps hidden-state magnitudes O(1) through depth
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+            w = jax.random.normal(sub, shape, jnp.float32) * std
+        out.append((name, w))
+    return out
+
+
+def _rope(x, positions, theta):
+    """x [T, H, hd] f32; positions [T] i32."""
+    t, h, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    cos, sin = jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _chunked_attention(q, k, v, mask, scale, ksplits):
+    """FlashDecoding-style attention over the KV (sequence) dimension.
+
+    q [T, H, hd]; k, v [Smax, KVH, hd]; mask [T, Smax] bool.
+
+    The sequence axis is split into `ksplits` fixed chunks; each chunk
+    yields an online-softmax partial (m, l, o) and partials are combined in
+    a fixed sequential order. `ksplits` is the analogue of FA/FlashDecoding
+    `num_splits`: different values change the reduction tree (paper §4.4
+    sets num_splits=1 in the verification pass). For a given ksplits the
+    computation is per-lane and fixed-shape, hence position-invariant.
+    """
+    t, h, hd = q.shape
+    smax, kvh, _ = k.shape
+    rep = h // kvh
+    k = jnp.repeat(k, rep, axis=1)  # [Smax, H, hd]
+    v = jnp.repeat(v, rep, axis=1)
+    assert smax % ksplits == 0, (smax, ksplits)
+    cs = smax // ksplits
+
+    m = jnp.full((h, t), -1e30, jnp.float32)
+    l = jnp.zeros((h, t), jnp.float32)
+    o = jnp.zeros((h, t, hd), jnp.float32)
+    for c in range(ksplits):
+        kc = k[c * cs : (c + 1) * cs]
+        vc = v[c * cs : (c + 1) * cs]
+        mc_mask = mask[:, c * cs : (c + 1) * cs]
+        s = jnp.einsum("thd,shd->hts", q, kc) * scale       # [H, T, cs]
+        s = jnp.where(mc_mask[None, :, :], s, -1e9)
+        m_c = jnp.max(s, axis=-1)                            # [H, T]
+        p = jnp.exp(s - m_c[:, :, None])
+        l_c = jnp.sum(p, axis=-1)
+        o_c = jnp.einsum("hts,shd->htd", p, vc)
+        m_new = jnp.maximum(m, m_c)
+        a = jnp.exp(m - m_new)
+        b = jnp.exp(m_c - m_new)
+        l = l * a + l_c * b
+        o = o * a[:, :, None] + o_c * b[:, :, None]
+        m = m_new
+    out = o / l[:, :, None]                                  # [H, T, hd]
+    return jnp.moveaxis(out, 0, 1).reshape(t, h * hd)
+
+
+def forward(
+    cfg: ModelConfig,
+    g: int,
+    t: int,
+    strategy: Strategy,
+    state: jax.Array,
+    tokens: jax.Array,     # [g*t] i32, lane-major
+    slots: jax.Array,      # [g] i32
+    start_pos: jax.Array,  # [g] i32 (first window position per lane)
+    *weights: jax.Array,
+) -> jax.Array:
+    """One forward pass over `g` lanes x `t` tokens; returns updated state."""
+    w = dict(zip([n for n, _ in WEIGHT_SPEC], weights))
+    n = g * t
+    mm = dict(
+        kind=strategy.kind,
+        seq_chunks=strategy.seq_chunks,
+        partial_dtype=cfg.partial_dtype,
+    )
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+    kvd = cfg.kv_dim
+
+    # [g, t] absolute positions
+    positions = start_pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    h = jnp.take(w["embed"], tokens, axis=0)  # [n, d]
+
+    col = jnp.arange(cfg.max_seq, dtype=jnp.int32)
+
+    for layer in range(cfg.n_layers):
+        x = jnp_rmsnorm(
+            h, w["attn_norm"][layer], nsplit=strategy.norm_splits,
+            eps=cfg.rms_eps,
+        )
+        q = matmul(x, w["wq"][layer], nsplits=strategy.ffn_splits, **mm)
+        k = matmul(x, w["wk"][layer], nsplits=strategy.ffn_splits, **mm)
+        v = matmul(x, w["wv"][layer], nsplits=strategy.ffn_splits, **mm)
+
+        # RoPE (per lane: positions differ)
+        qg = q.reshape(g, t, cfg.n_heads, cfg.head_dim)
+        kg = k.reshape(g, t, cfg.n_kv_heads, cfg.head_dim)
+        q_lanes, k_lanes = [], []
+        for lane in range(g):
+            q_lanes.append(_rope(qg[lane], positions[lane], cfg.rope_theta))
+            k_lanes.append(_rope(kg[lane], positions[lane], cfg.rope_theta))
+        vg = v.reshape(g, t, kvd)
+
+        # write K/V for the window: one contiguous DUS per lane per pool
+        for lane in range(g):
+            koff = cfg.kv_offset(0, layer, slots[lane], start_pos[lane])
+            voff = cfg.kv_offset(1, layer, slots[lane], start_pos[lane])
+            state = jax.lax.dynamic_update_slice(
+                state, k_lanes[lane].reshape(t * kvd), (koff,)
+            )
+            state = jax.lax.dynamic_update_slice(
+                state, vg[lane].reshape(t * kvd), (voff,)
+            )
+
+        # attention reads the (just-updated) pool row per lane
+        attn_rows = []
+        for lane in range(g):
+            koff = cfg.kv_offset(0, layer, slots[lane], 0)
+            voff = cfg.kv_offset(1, layer, slots[lane], 0)
+            k_pool = jax.lax.dynamic_slice(
+                state, (koff,), (cfg.max_seq * kvd,)
+            ).reshape(cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
+            v_pool = jax.lax.dynamic_slice(
+                state, (voff,), (cfg.max_seq * kvd,)
+            ).reshape(cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
+            # query j attends to absolute positions <= start + j
+            mask = col[None, :] <= positions[lane][:, None]  # [t, Smax]
+            attn_rows.append(
+                _chunked_attention(
+                    q_lanes[lane], k_pool, v_pool, mask, scale,
+                    strategy.attn_ksplits,
+                )
+            )
+        attn = jnp.concatenate(attn_rows, axis=0)  # [n, q_dim]
+        h = h + matmul(attn, w["wo"][layer], nsplits=strategy.ffn_splits, **mm)
+
+        x = jnp_rmsnorm(
+            h, w["ffn_norm"][layer], nsplit=strategy.norm_splits,
+            eps=cfg.rms_eps,
+        )
+        gate = matmul(x, w["w_gate"][layer], nsplits=strategy.ffn_splits, **mm)
+        up = matmul(x, w["w_up"][layer], nsplits=strategy.ffn_splits, **mm)
+        f = jax.nn.silu(gate) * up
+        # the FFN down-projection runs the actual pallas kernel in-graph
+        h = h + matmul(
+            f, w["w_down"][layer], nsplits=strategy.ffn_splits,
+            impl="pallas", **mm,
+        )
+
+    x = jnp_rmsnorm(h, w["final_norm"], nsplit=strategy.norm_splits, eps=cfg.rms_eps)
+    logits = matmul(x, w["lm_head"], nsplits=strategy.head_splits, **mm)
+    logits = logits * jnp.float32(cfg.logit_scale)
+
+    # publish [n, V] rows into the logits region
+    state = jax.lax.dynamic_update_slice(
+        state, logits.reshape(n * cfg.vocab), (cfg.logits_offset,)
+    )
+    return state
+
+
+def extract_logits(cfg: ModelConfig, n: int, state: jax.Array) -> jax.Array:
+    """Tiny companion graph: read the first n logits rows off the state."""
+    flat = jax.lax.slice(
+        state, (cfg.logits_offset,), (cfg.logits_offset + n * cfg.vocab,)
+    )
+    return flat.reshape(n, cfg.vocab)
+
+
+def forward_ref(cfg, g, t, state, tokens, slots, start_pos, weights):
+    """Oracle: same semantics via ref.py primitives (plain f32 schedules)."""
+    from .kernels import ref
+
+    w = dict(zip([nm for nm, _ in WEIGHT_SPEC], [jnp.asarray(x) for x in weights]))
+    state = jnp.asarray(state)
+    kvd = cfg.kv_dim
+    positions = jnp.asarray(start_pos)[:, None] + jnp.arange(t, dtype=jnp.int32)
+    h = jnp.take(w["embed"], jnp.asarray(tokens), axis=0)
+    col = jnp.arange(cfg.max_seq, dtype=jnp.int32)
+    scale = 1.0 / float(jnp.sqrt(jnp.float32(cfg.head_dim)))
+
+    for layer in range(cfg.n_layers):
+        x = ref.rmsnorm_ref(h, w["attn_norm"][layer], eps=cfg.rms_eps)
+        q = ref.matmul_ref(x, w["wq"][layer])
+        k = ref.matmul_ref(x, w["wk"][layer])
+        v = ref.matmul_ref(x, w["wv"][layer])
+        qg = q.reshape(g, t, cfg.n_heads, cfg.head_dim)
+        kg = k.reshape(g, t, cfg.n_kv_heads, cfg.head_dim)
+        vg = v.reshape(g, t, kvd)
+        for lane in range(g):
+            kr = ref.rope_ref(kg[lane], positions[lane], cfg.rope_theta)
+            koff = cfg.kv_offset(0, layer, int(slots[lane]), int(start_pos[lane]))
+            voff = cfg.kv_offset(1, layer, int(slots[lane]), int(start_pos[lane]))
+            state = jax.lax.dynamic_update_slice(
+                state, kr.reshape(t * kvd), (koff,)
+            )
+            state = jax.lax.dynamic_update_slice(
+                state, vg[lane].reshape(t * kvd), (voff,)
+            )
+        attn_rows = []
+        for lane in range(g):
+            koff = cfg.kv_offset(0, layer, int(slots[lane]), 0)
+            voff = cfg.kv_offset(1, layer, int(slots[lane]), 0)
+            k_pool = jax.lax.dynamic_slice(
+                state, (koff,), (cfg.max_seq * kvd,)
+            ).reshape(cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
+            v_pool = jax.lax.dynamic_slice(
+                state, (voff,), (cfg.max_seq * kvd,)
+            ).reshape(cfg.max_seq, cfg.n_kv_heads, cfg.head_dim)
+            rep = cfg.n_heads // cfg.n_kv_heads
+            mask = col[None, :] <= positions[lane][:, None]
+            qr = ref.rope_ref(qg[lane], positions[lane], cfg.rope_theta)
+            out = ref.attention_ref(
+                qr,
+                jnp.repeat(k_pool, rep, axis=1),
+                jnp.repeat(v_pool, rep, axis=1),
+                mask,
+                scale,
+            )
+            attn_rows.append(out.reshape(t, cfg.q_dim))
+        attn = jnp.concatenate(attn_rows, axis=0)
+        h = h + ref.matmul_ref(attn, w["wo"][layer])
+        x = ref.rmsnorm_ref(h, w["ffn_norm"][layer], eps=cfg.rms_eps)
+        h = h + ref.swiglu_ref(
+            x, w["w_gate"][layer], w["w_up"][layer], w["w_down"][layer]
+        )
+
+    x = ref.rmsnorm_ref(h, w["final_norm"], eps=cfg.rms_eps)
+    logits = ref.matmul_ref(x, w["lm_head"]) * cfg.logit_scale
+    state = jax.lax.dynamic_update_slice(
+        state, logits.reshape(g * t * cfg.vocab), (cfg.logits_offset,)
+    )
+    return state

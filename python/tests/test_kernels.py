@@ -1,0 +1,225 @@
+"""L1 kernel correctness: pallas kernels vs pure-jnp oracles.
+
+Covers the allclose contract, the exact structural properties the system
+relies on (split-count divergence, row independence), and randomized
+shape/value sweeps (a seeded mini-hypothesis: the environment has no
+`hypothesis` package, so we sweep an explicit seeded grid instead).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.ref import matmul_ref, rmsnorm_ref
+from compile.kernels.rmsnorm import rmsnorm
+from compile.kernels.splitk_matmul import (
+    combine_tree,
+    matmul,
+    seqchunk_matmul,
+    splitk_matmul,
+)
+
+RNG = np.random.default_rng(42)
+
+
+def rand(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(0, scale, shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- combine
+def test_combine_tree_exact_sum_small_ints():
+    # integers below 2^20 are exact in f32: tree must equal plain sum
+    parts = jnp.asarray(RNG.integers(-100, 100, (8, 4, 4)), jnp.float32)
+    got = combine_tree(parts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(parts.sum(0)))
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8, 16])
+def test_combine_tree_close_to_sum(n):
+    parts = rand((n, 8, 8))
+    got = combine_tree(parts)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(parts.sum(0)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_combine_tree_rejects_non_power_of_two():
+    with pytest.raises(AssertionError):
+        combine_tree(rand((3, 2, 2)))
+
+
+# ---------------------------------------------------------------- split-K
+@pytest.mark.parametrize("m", [1, 3, 16, 64])
+@pytest.mark.parametrize("nsplits", [1, 2, 4, 8])
+def test_splitk_matmul_close_to_ref(m, nsplits):
+    x, w = rand((m, 64)), rand((64, 48))
+    got = splitk_matmul(x, w, nsplits=nsplits)
+    want = matmul_ref(x, w)
+    # bf16 partials: tolerance scales with the partial magnitude
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.35, rtol=0.05)
+
+
+@pytest.mark.parametrize("nsplits", [1, 2, 4, 8])
+def test_splitk_f32_partials_tight(nsplits):
+    x, w = rand((8, 64)), rand((64, 32))
+    got = splitk_matmul(x, w, nsplits=nsplits, partial_dtype="float32")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(matmul_ref(x, w)), atol=2e-5, rtol=1e-5
+    )
+
+
+def test_splitk_deterministic_per_schedule():
+    x, w = rand((4, 64)), rand((64, 32))
+    a = np.asarray(splitk_matmul(x, w, nsplits=4))
+    b = np.asarray(splitk_matmul(x, w, nsplits=4))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_splitk_divergence_across_split_counts():
+    """The paper's Fig. 3 effect: different split counts, different bits."""
+    x, w = rand((4, 256), 2.0), rand((256, 64), 2.0)
+    a = np.asarray(splitk_matmul(x, w, nsplits=2))
+    b = np.asarray(splitk_matmul(x, w, nsplits=8))
+    assert not np.array_equal(a, b)
+
+
+def test_splitk_row_independence():
+    """Position invariance (O2): a row's result doesn't depend on others."""
+    x, w = rand((8, 64)), rand((64, 32))
+    full = np.asarray(splitk_matmul(x, w, nsplits=4))
+    x2 = x.at[3:].set(rand((5, 64)))  # perturb OTHER rows
+    part = np.asarray(splitk_matmul(x2, w, nsplits=4))
+    np.testing.assert_array_equal(full[:3], part[:3])
+
+
+def test_splitk_rejects_bad_split():
+    with pytest.raises(AssertionError):
+        splitk_matmul(rand((2, 30)), rand((30, 4)), nsplits=4)
+
+
+# ------------------------------------------------------------- invariant
+@pytest.mark.parametrize("m", [1, 5, 32])
+@pytest.mark.parametrize("chunks", [1, 4, 8])
+def test_seqchunk_matmul_close_to_ref(m, chunks):
+    x, w = rand((m, 64)), rand((64, 48))
+    got = seqchunk_matmul(x, w, chunks=chunks)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(matmul_ref(x, w)), atol=5e-5, rtol=1e-4
+    )
+
+
+def test_seqchunk_row_independence_across_batch_sizes():
+    """Batch invariance: row 0 identical whether batched with 1 or 16 rows."""
+    w = rand((64, 48))
+    x16 = rand((16, 64))
+    a = np.asarray(seqchunk_matmul(x16[:1], w, chunks=8))
+    b = np.asarray(seqchunk_matmul(x16, w, chunks=8))
+    np.testing.assert_array_equal(a[0], b[0])
+
+
+def test_matmul_dispatch():
+    x, w = rand((2, 32)), rand((32, 16))
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w, kind="fast", nsplits=2)),
+        np.asarray(matmul_ref(x, w)),
+        atol=0.3,
+        rtol=0.05,
+    )
+    with pytest.raises(ValueError):
+        matmul(x, w, kind="bogus")
+
+
+# --------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("m", [1, 4, 33])
+@pytest.mark.parametrize("nsplit", [1, 2, 4])
+def test_rmsnorm_close_to_ref(m, nsplit):
+    x, w = rand((m, 64)), rand((64,)) + 1.0
+    got = rmsnorm(x, w, nsplit=nsplit)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(rmsnorm_ref(x, w)), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_rmsnorm_split_schedules_agree_within_tolerance():
+    # Different reduction trees may drift in the low-order bits (on XLA-CPU
+    # the SIMD reduction often coincides for both schedules; the GEMM
+    # kernel is the guaranteed drift source). The contract we rely on is
+    # only that both schedules are *valid* RMSNorms.
+    x, w = rand((4, 256), 3.0), jnp.ones((256,), jnp.float32)
+    a = np.asarray(rmsnorm(x, w, nsplit=1))
+    b = np.asarray(rmsnorm(x, w, nsplit=4))
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_rmsnorm_row_independence():
+    x, w = rand((6, 64)), rand((64,))
+    full = np.asarray(rmsnorm(x, w, nsplit=2))
+    x2 = x.at[2:].set(rand((4, 64)))
+    part = np.asarray(rmsnorm(x2, w, nsplit=2))
+    np.testing.assert_array_equal(full[:2], part[:2])
+
+
+# ------------------------------------------ randomized shape/value sweep
+@pytest.mark.parametrize("case", range(12))
+def test_splitk_random_sweep(case):
+    """Seeded sweep over shapes/magnitudes (hypothesis-style, no dep)."""
+    rng = np.random.default_rng(1000 + case)
+    m = int(rng.integers(1, 64))
+    k = int(rng.choice([32, 64, 128, 256]))
+    n = int(rng.integers(1, 96))
+    nsplits = int(rng.choice([1, 2, 4, 8]))
+    scale = float(rng.choice([0.1, 1.0, 10.0]))
+    x = jnp.asarray(rng.normal(0, scale, (m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, scale, (k, n)), jnp.float32)
+    got = np.asarray(splitk_matmul(x, w, nsplits=nsplits))
+    want = np.asarray(matmul_ref(x, w))
+    tol = 0.02 * scale * scale * np.sqrt(k) + 1e-5
+    np.testing.assert_allclose(got, want, atol=tol, rtol=0.05)
+    assert got.shape == (m, n)
+    assert np.isfinite(got).all()
+
+
+# ---------------------------------------- pallas <-> XLA-native twins
+@pytest.mark.parametrize("nsplits", [1, 2, 4, 8])
+def test_jnp_splitk_bitwise_equals_pallas(nsplits):
+    """The serving graphs call jnp_splitk_matmul; it must be bit-for-bit
+    the pallas kernel (same tiles, same bf16 partial rounding, same tree).
+    """
+    from compile.kernels.splitk_matmul import jnp_splitk_matmul
+
+    rng = np.random.default_rng(5 + nsplits)
+    x = jnp.asarray(rng.normal(0, 2, (8, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 2, (64, 48)), jnp.float32)
+    a = np.asarray(splitk_matmul(x, w, nsplits=nsplits))
+    b = np.asarray(jnp_splitk_matmul(x, w, nsplits=nsplits))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("nsplit", [1, 2, 4])
+def test_jnp_rmsnorm_bitwise_equals_pallas(nsplit):
+    from compile.kernels.rmsnorm import jnp_rmsnorm
+
+    rng = np.random.default_rng(9 + nsplit)
+    x = jnp.asarray(rng.normal(0, 3, (6, 64)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1, (64,)), jnp.float32)
+    a = np.asarray(rmsnorm(x, w, nsplit=nsplit))
+    b = np.asarray(jnp_rmsnorm(x, w, nsplit=nsplit))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("case", range(6))
+def test_jnp_splitk_twin_random_sweep(case):
+    from compile.kernels.splitk_matmul import jnp_splitk_matmul
+
+    rng = np.random.default_rng(2000 + case)
+    m = int(rng.integers(1, 48))
+    k = int(rng.choice([64, 128, 256]))
+    n = int(rng.integers(1, 64))
+    nsplits = int(rng.choice([2, 4, 8]))
+    x = jnp.asarray(rng.normal(0, 1, (m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 1, (k, n)), jnp.float32)
+    a = np.asarray(splitk_matmul(x, w, nsplits=nsplits))
+    b = np.asarray(jnp_splitk_matmul(x, w, nsplits=nsplits))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,168 @@
+//! AllReduce reduction-order simulators (paper Table 2).
+//!
+//! Multi-GPU inference reduces partial results across ranks; *which order*
+//! a given element's partials are combined in determines its invariance
+//! class. There is no multi-device hardware here, so we model the three
+//! reduction topologies the paper discusses directly over f32 shards and
+//! test their invariance properties:
+//!
+//! * **ring**      — reduce-scatter: element order depends on its chunk
+//!   (hence its position) → neither batch- nor position-invariant.
+//! * **tree**      — a fixed binary tree over ranks, identical for every
+//!   element → position-invariant (deterministic with fixed NCCL config).
+//! * **multimem**  — switch-mediated in-order accumulation (CUDA 13 NVLS)
+//!   → position-invariant.
+
+/// Sum `shards[rank][elem]` across ranks with a ring reduce-scatter order:
+/// the accumulation for element `e` starts at rank `(chunk(e) + 1) % r`
+/// and walks the ring, so elements in different chunks see different
+/// association orders.
+pub fn ring_allreduce(shards: &[Vec<f32>]) -> Vec<f32> {
+    let r = shards.len();
+    let n = shards[0].len();
+    let mut out = vec![0f32; n];
+    for e in 0..n {
+        let chunk = e * r / n; // which ring chunk this element falls in
+        let start = (chunk + 1) % r;
+        let mut acc = shards[start][e];
+        for step in 1..r {
+            acc += shards[(start + step) % r][e];
+        }
+        out[e] = acc;
+    }
+    out
+}
+
+/// Fixed binary-tree combine over ranks (same tree for every element).
+pub fn tree_allreduce(shards: &[Vec<f32>]) -> Vec<f32> {
+    let n = shards[0].len();
+    let mut level: Vec<Vec<f32>> = shards.to_vec();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut i = 0;
+        while i < level.len() {
+            if i + 1 < level.len() {
+                let mut s = vec![0f32; n];
+                for e in 0..n {
+                    s[e] = level[i][e] + level[i + 1][e];
+                }
+                next.push(s);
+            } else {
+                next.push(level[i].clone());
+            }
+            i += 2;
+        }
+        level = next;
+    }
+    level.pop().unwrap()
+}
+
+/// Switch-mediated in-order accumulation (rank 0, 1, 2, ... for every
+/// element).
+pub fn multimem_allreduce(shards: &[Vec<f32>]) -> Vec<f32> {
+    let n = shards[0].len();
+    let mut out = shards[0].clone();
+    for shard in &shards[1..] {
+        for e in 0..n {
+            out[e] += shard[e];
+        }
+    }
+    out
+}
+
+/// Does `f` give every element the same reduction order regardless of its
+/// position? Checked by giving *every* element identical per-rank values
+/// (association-sensitive: mixed magnitudes with cancellation) — a
+/// position-invariant reduction must then produce bitwise-identical
+/// results at every element position.
+pub fn is_position_invariant<F>(f: F, ranks: usize, n: usize) -> bool
+where
+    F: Fn(&[Vec<f32>]) -> Vec<f32>,
+{
+    let vals: Vec<f32> = (0..ranks)
+        .map(|r| match r % 4 {
+            0 => 1e8 + r as f32,
+            1 => -(1e8 - 1.0) - r as f32,
+            2 => 1e-3 * (r as f32 + 1.0),
+            _ => 7e4 + 0.37 * r as f32,
+        })
+        .collect();
+    let shards: Vec<Vec<f32>> = vals.iter().map(|&v| vec![v; n]).collect();
+    let out = f(&shards);
+    let base = out[0].to_bits();
+    out.iter().all(|x| x.to_bits() == base)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn shards(ranks: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = SplitMix64::new(seed);
+        (0..ranks)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn all_close_to_true_sum() {
+        let s = shards(8, 64, 1);
+        let want: Vec<f32> = (0..64)
+            .map(|e| (0..8).map(|r| s[r][e] as f64).sum::<f64>() as f32)
+            .collect();
+        for f in [ring_allreduce, tree_allreduce, multimem_allreduce] {
+            let got = f(&s);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn table2_invariance_classes() {
+        // paper Table 2: ring X, tree OK, multimem OK
+        assert!(!is_position_invariant(ring_allreduce, 8, 64));
+        assert!(is_position_invariant(tree_allreduce, 8, 64));
+        assert!(is_position_invariant(multimem_allreduce, 8, 64));
+    }
+
+    #[test]
+    fn deterministic_per_topology() {
+        let s = shards(4, 32, 2);
+        for f in [ring_allreduce, tree_allreduce, multimem_allreduce] {
+            let a = f(&s);
+            let b = f(&s);
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn ring_order_differs_from_inorder() {
+        // same values, different association: ring's chunk-offset start
+        // must produce different bits somewhere for adversarial inputs
+        let mut s = shards(8, 64, 3);
+        for row in &mut s {
+            for v in row.iter_mut() {
+                *v = *v * 1e4 + 1e-4; // widen exponent spread
+            }
+        }
+        let ring = ring_allreduce(&s);
+        let inorder = multimem_allreduce(&s);
+        assert!(ring
+            .iter()
+            .zip(&inorder)
+            .any(|(a, b)| a.to_bits() != b.to_bits()));
+    }
+
+    #[test]
+    fn single_rank_identity() {
+        let s = shards(1, 16, 4);
+        for f in [ring_allreduce, tree_allreduce, multimem_allreduce] {
+            assert_eq!(f(&s), s[0]);
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Engine/server configuration files (JSON) with CLI overrides.
+//!
+//! A deployment pins its deterministic configuration in one reviewable
+//! file — mode, verification geometry, artifact directory — because the
+//! determinism guarantee is *per configuration*: changing the verifier's
+//! (G, T) shape (like changing a batch-invariant kernel version) changes
+//! the fixed reduction schedule and therefore the reproducible stream.
+//!
+//! ```json
+//! {
+//!   "artifacts": "artifacts",
+//!   "mode": "llm42",
+//!   "verify_group": 8,
+//!   "verify_window": 32,
+//!   "max_stall_steps": 8,
+//!   "eos_token": 1,
+//!   "server": { "addr": "127.0.0.1:4242" }
+//! }
+//! ```
+
+use crate::engine::{EngineConfig, FaultPlan, Mode};
+use crate::error::{Error, Result};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    pub artifacts: String,
+    pub engine: EngineConfig,
+    pub server_addr: String,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            artifacts: "artifacts".into(),
+            engine: EngineConfig::default(),
+            server_addr: "127.0.0.1:4242".into(),
+        }
+    }
+}
+
+impl AppConfig {
+    pub fn from_json(text: &str) -> Result<AppConfig> {
+        let v = Json::parse(text)?;
+        let mut cfg = AppConfig::default();
+        if let Some(a) = v.get("artifacts").and_then(|x| x.as_str()) {
+            cfg.artifacts = a.to_string();
+        }
+        if let Some(m) = v.get("mode").and_then(|x| x.as_str()) {
+            cfg.engine.mode = Mode::parse(m)?;
+        }
+        if let Some(g) = v.get("verify_group").and_then(|x| x.as_usize()) {
+            cfg.engine.verify_group = g;
+        }
+        if let Some(t) = v.get("verify_window").and_then(|x| x.as_usize()) {
+            cfg.engine.verify_window = t;
+        }
+        if let Some(s) = v.get("max_stall_steps").and_then(|x| x.as_usize()) {
+            cfg.engine.max_stall_steps = s;
+        }
+        if let Some(e) = v.get("eos_token").and_then(|x| x.as_usize()) {
+            cfg.engine.eos_token = e as u32;
+        }
+        if let Some(srv) = v.get("server") {
+            if let Some(a) = srv.get("addr").and_then(|x| x.as_str()) {
+                cfg.server_addr = a.to_string();
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<AppConfig> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    /// CLI flags override file values (`--mode`, `--group`, `--window`,
+    /// `--artifacts`, `--addr`, `--max-stall`, `--eos`).
+    pub fn apply_args(mut self, args: &Args) -> Result<AppConfig> {
+        if let Some(m) = args.get("mode") {
+            self.engine.mode = Mode::parse(m)?;
+        }
+        self.engine.verify_group = args.usize_or("group", self.engine.verify_group)?;
+        self.engine.verify_window = args.usize_or("window", self.engine.verify_window)?;
+        self.engine.max_stall_steps =
+            args.usize_or("max-stall", self.engine.max_stall_steps)?;
+        self.engine.eos_token =
+            args.usize_or("eos", self.engine.eos_token as usize)? as u32;
+        self.artifacts = args.str_or("artifacts", &self.artifacts);
+        self.server_addr = args.str_or("addr", &self.server_addr);
+        self.engine.fault = FaultPlan::None; // never configurable in prod
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.engine.verify_group == 0 || self.engine.verify_window < 2 {
+            return Err(Error::Config(
+                "verify_group >= 1 and verify_window >= 2 required".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Resolve from optional `--config FILE` plus flag overrides.
+    pub fn resolve(args: &Args) -> Result<AppConfig> {
+        let base = match args.get("config") {
+            Some(path) => AppConfig::load(path)?,
+            None => AppConfig::default(),
+        };
+        base.apply_args(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults() {
+        let c = AppConfig::resolve(&args("")).unwrap();
+        assert_eq!(c.engine.verify_group, 8);
+        assert_eq!(c.engine.verify_window, 32);
+        assert_eq!(c.engine.mode, Mode::Llm42);
+    }
+
+    #[test]
+    fn file_then_flags() {
+        let c = AppConfig::from_json(
+            r#"{"mode": "nondet", "verify_group": 4, "verify_window": 16,
+                "server": {"addr": "0.0.0.0:9"}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.engine.mode, Mode::NonDeterministic);
+        assert_eq!(c.server_addr, "0.0.0.0:9");
+        let c = c.apply_args(&args("--mode llm42 --group 2")).unwrap();
+        assert_eq!(c.engine.mode, Mode::Llm42);
+        assert_eq!(c.engine.verify_group, 2);
+        assert_eq!(c.engine.verify_window, 16); // file value survives
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(AppConfig::from_json(r#"{"verify_window": 1}"#).is_err());
+        assert!(AppConfig::from_json(r#"{"mode": "wat"}"#).is_err());
+        assert!(AppConfig::resolve(&args("--window 0")).is_err());
+    }
+
+    #[test]
+    fn fault_plan_never_from_config() {
+        let c = AppConfig::resolve(&args("")).unwrap();
+        assert_eq!(c.engine.fault, FaultPlan::None);
+    }
+}

@@ -1,0 +1,575 @@
+//! The serving engine: continuous batching + decode-verify-rollback.
+//!
+//! One `Engine` owns a borrowed [`Runtime`] and drives it with a
+//! synchronous step loop (one forward per step — verification is a global
+//! pause, exactly the limitation the paper's prototype documents in §5.2):
+//!
+//!   1. admit queued requests into free KV slots
+//!   2. prefill (one fixed-shape chunk per step, one request at a time —
+//!      deterministic by construction, paper O3)
+//!   3. grouped verification when enough lanes are ready (or a lane
+//!      stalled too long, or nothing else can run)
+//!   4. fast-path decode over the active batch, padded to a bucket
+//!
+//! Modes (paper §5 baselines):
+//! * `NonDeterministic` — fast path only, everything commits (SGLang
+//!   non-deterministic mode; the throughput upper bound).
+//! * `BatchInvariant`   — every decode runs the invariant artifacts at one
+//!   fixed bucket (the universal reduction schedule; SGLang-Deterministic
+//!   analogue). No verification needed: determinism is paid by every token.
+//! * `Llm42`            — fast-path decode + DVR for requests with
+//!   `deterministic = true`; other traffic is untouched (O4).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::engine::kv::SlotAllocator;
+use crate::engine::metrics::EngineMetrics;
+use crate::engine::sampler::sample;
+use crate::engine::sequence::{Phase, Request, RequestOutput, Sequence};
+use crate::engine::verify;
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+use crate::util::now_secs;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    NonDeterministic,
+    BatchInvariant,
+    Llm42,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        match s {
+            "nondet" | "non-deterministic" => Ok(Mode::NonDeterministic),
+            "batch-invariant" | "invariant" | "det" => Ok(Mode::BatchInvariant),
+            "llm42" => Ok(Mode::Llm42),
+            other => Err(Error::Config(format!(
+                "unknown mode '{other}' (nondet | batch-invariant | llm42)"
+            ))),
+        }
+    }
+}
+
+/// Deterministic fault injection for failure testing: force the verifier
+/// to report a mismatch on every `every`-th verified lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPlan {
+    None,
+    EveryNthLane { every: u64, at_index: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub mode: Mode,
+    /// G: lanes verified together (grouped verification, paper §4.3)
+    pub verify_group: usize,
+    /// T: window size — lanes stall at T-1 speculative tokens
+    pub verify_window: usize,
+    /// verify as soon as a ready lane has waited this many steps
+    pub max_stall_steps: usize,
+    pub eos_token: u32,
+    pub fault: FaultPlan,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 8,
+            verify_window: 32,
+            max_stall_steps: 8,
+            eos_token: 1,
+            fault: FaultPlan::None,
+        }
+    }
+}
+
+/// What a single `step()` did (the harness uses this for phase accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    Prefill,
+    Decode,
+    Verify,
+    Idle,
+}
+
+pub struct Engine<'rt> {
+    rt: &'rt mut Runtime,
+    pub cfg: EngineConfig,
+    slots: SlotAllocator,
+    seqs: Vec<Sequence>,
+    queue: VecDeque<usize>,
+    finished: Vec<RequestOutput>,
+    pub metrics: EngineMetrics,
+    next_id: u64,
+    verify_lane_counter: u64,
+    decode_buckets: Vec<usize>,
+    prefill_chunks: Vec<usize>,
+    invariant_bucket: usize,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt mut Runtime, cfg: EngineConfig) -> Result<Engine<'rt>> {
+        let dims = rt.dims().clone();
+        let decode_buckets = rt.manifest.decode_buckets();
+        let prefill_chunks = rt.manifest.prefill_chunks();
+        if decode_buckets.is_empty() || prefill_chunks.is_empty() {
+            return Err(Error::Manifest("manifest has no decode/window artifacts".into()));
+        }
+        if cfg.mode == Mode::Llm42 {
+            let name =
+                Runtime::window_artifact(cfg.verify_group, cfg.verify_window);
+            rt.manifest.require(&name)?;
+        }
+        let invariant_bucket = *decode_buckets.last().unwrap();
+        rt.reset_state()?;
+        Ok(Engine {
+            rt,
+            cfg,
+            slots: SlotAllocator::new(dims.slots, dims.max_seq),
+            seqs: Vec::new(),
+            queue: VecDeque::new(),
+            finished: Vec::new(),
+            metrics: EngineMetrics::default(),
+            next_id: 1,
+            verify_lane_counter: 0,
+            decode_buckets,
+            prefill_chunks,
+            invariant_bucket,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+
+    /// Pre-compile every artifact this engine's mode can touch, so the
+    /// serving loop never pays XLA compilation latency (~seconds per
+    /// graph). Compiled executables are cached for the process lifetime.
+    pub fn warmup(&self) -> Result<()> {
+        let mut names: Vec<String> = Vec::new();
+        match self.cfg.mode {
+            Mode::BatchInvariant => {
+                names.push(Runtime::decode_artifact(self.invariant_bucket, true));
+            }
+            _ => {
+                for &b in &self.decode_buckets {
+                    names.push(Runtime::decode_artifact(b, false));
+                }
+            }
+        }
+        for &c in &self.prefill_chunks {
+            names.push(Runtime::window_artifact(1, c));
+        }
+        if self.cfg.mode == Mode::Llm42 {
+            names.push(Runtime::window_artifact(
+                self.cfg.verify_group,
+                self.cfg.verify_window,
+            ));
+        }
+        for tier in self.rt.manifest.extract_tiers() {
+            names.push(format!("extract_r{tier}"));
+        }
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        self.rt.warmup(&refs)
+    }
+
+    fn dvr(&self) -> bool {
+        self.cfg.mode == Mode::Llm42
+    }
+
+    fn invariant_decode(&self) -> bool {
+        self.cfg.mode == Mode::BatchInvariant
+    }
+
+    /// Largest decode batch the artifacts support.
+    pub fn max_batch(&self) -> usize {
+        *self.decode_buckets.last().unwrap()
+    }
+
+    /// Submit a request; returns its id. Requests are queued until a KV
+    /// slot frees up (continuous batching admits at step granularity).
+    pub fn submit(&mut self, req: Request) -> Result<u64> {
+        let window = self.cfg.verify_window;
+        if !self.slots.fits(req.prompt.len(), req.max_new_tokens, window) {
+            return Err(Error::Capacity(format!(
+                "request does not fit a slot: prompt {} + max_new {} + window {window} > max_seq {}",
+                req.prompt.len(),
+                req.max_new_tokens,
+                self.rt.dims().max_seq
+            )));
+        }
+        let vocab = self.rt.dims().vocab as u32;
+        if req.prompt.iter().any(|&t| t >= vocab) {
+            return Err(Error::Engine("prompt token out of vocab".into()));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let seq = Sequence::new(id, req, now_secs());
+        self.seqs.push(seq);
+        self.queue.push_back(self.seqs.len() - 1);
+        Ok(id)
+    }
+
+    /// True when nothing is queued, active, or pending verification.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty()
+            && self
+                .seqs
+                .iter()
+                .all(|s| s.phase == Phase::Finished)
+    }
+
+    pub fn take_finished(&mut self) -> Vec<RequestOutput> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.seqs
+            .iter()
+            .filter(|s| matches!(s.phase, Phase::Prefilling | Phase::Decoding))
+            .count()
+    }
+
+    /// Drive everything currently submitted to completion.
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while !self.idle() {
+            if self.step()? == StepKind::Idle {
+                return Err(Error::Engine(
+                    "engine idle-stepped with unfinished sequences (scheduler bug)".into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// One scheduler iteration; executes at most one forward pass.
+    pub fn step(&mut self) -> Result<StepKind> {
+        self.metrics.steps += 1;
+        self.admit();
+
+        // 1. prefill-first: one chunk of the oldest prefilling sequence
+        if let Some(idx) = self
+            .seqs
+            .iter()
+            .position(|s| s.phase == Phase::Prefilling)
+        {
+            let t0 = Instant::now();
+            self.prefill_chunk(idx)?;
+            self.metrics.prefill_secs += t0.elapsed().as_secs_f64();
+            self.bump_stalls();
+            return Ok(StepKind::Prefill);
+        }
+
+        // 2. grouped verification when warranted
+        if self.dvr() {
+            let ready: Vec<usize> = self
+                .seqs
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.verify_ready(self.cfg.verify_window))
+                .map(|(i, _)| i)
+                .collect();
+            let decodable = self.decodable_lanes().len();
+            let stalled = ready
+                .iter()
+                .any(|&i| self.seqs[i].stall_steps >= self.cfg.max_stall_steps);
+            if !ready.is_empty()
+                && (ready.len() >= self.cfg.verify_group || stalled || decodable == 0)
+            {
+                let t0 = Instant::now();
+                let lanes: Vec<usize> =
+                    ready.into_iter().take(self.cfg.verify_group).collect();
+                self.verify_pass(&lanes)?;
+                self.metrics.verify_secs += t0.elapsed().as_secs_f64();
+                return Ok(StepKind::Verify);
+            }
+        }
+
+        // 3. fast-path decode over the active batch
+        let lanes = self.decodable_lanes();
+        if !lanes.is_empty() {
+            let t0 = Instant::now();
+            self.decode_step(&lanes)?;
+            self.metrics.decode_secs += t0.elapsed().as_secs_f64();
+            self.bump_stalls();
+            return Ok(StepKind::Decode);
+        }
+
+        self.bump_stalls();
+        Ok(StepKind::Idle)
+    }
+
+    fn bump_stalls(&mut self) {
+        let window = self.cfg.verify_window;
+        for s in &mut self.seqs {
+            if s.verify_ready(window) {
+                s.stall_steps += 1;
+            }
+        }
+    }
+
+    fn admit(&mut self) {
+        while let Some(&idx) = self.queue.front() {
+            if self.slots.free_count() == 0 {
+                break;
+            }
+            self.queue.pop_front();
+            let seq = &mut self.seqs[idx];
+            seq.slot = self.slots.alloc(seq.id).expect("checked free_count");
+            seq.phase = Phase::Prefilling;
+            seq.metrics.prefill_start = now_secs();
+        }
+    }
+
+    fn decodable_lanes(&self) -> Vec<usize> {
+        let window = self.cfg.verify_window;
+        let dvr = self.dvr();
+        self.seqs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.can_decode(window, dvr))
+            .map(|(i, _)| i)
+            .take(self.max_batch())
+            .collect()
+    }
+
+    // ---------------------------------------------------------- prefill
+    fn prefill_chunk(&mut self, idx: usize) -> Result<()> {
+        let (slot, start, real, chunk, tokens) = {
+            let seq = &self.seqs[idx];
+            let p = seq.prompt_len();
+            let remaining = p - seq.prefill_pos;
+            let chunk = self.pick_chunk(remaining);
+            let real = remaining.min(chunk);
+            let mut tokens: Vec<i32> = seq.req.prompt
+                [seq.prefill_pos..seq.prefill_pos + real]
+                .iter()
+                .map(|&t| t as i32)
+                .collect();
+            tokens.resize(chunk, 0); // pad tokens; their KV is overwritten
+                                     // before any later step can attend to it
+            (seq.slot, seq.prefill_pos, real, chunk, tokens)
+        };
+
+        let artifact = Runtime::window_artifact(1, chunk);
+        self.rt.forward(
+            &artifact,
+            &tokens,
+            &[slot as i32],
+            &[start as i32],
+        )?;
+        self.metrics.prefill_chunks += 1;
+        self.metrics.prefill_tokens += real as u64;
+
+        let seq = &mut self.seqs[idx];
+        seq.prefill_pos += real;
+        if seq.prefill_pos < seq.prompt_len() {
+            return Ok(());
+        }
+
+        // prompt complete: sample gen token 0 from the last real row.
+        // Prefill runs one request at a time on fixed shapes, so this token
+        // is deterministic by construction and commits immediately.
+        let rows = real;
+        let vocab = self.rt.dims().vocab;
+        let logits = self.rt.extract_logits(rows)?;
+        let row = &logits[(rows - 1) * vocab..rows * vocab];
+        let (temp, rseed) = (self.seqs[idx].req.temperature, self.seqs[idx].req.seed);
+        let tok = sample(row, temp, rseed, 0);
+        let seq = &mut self.seqs[idx];
+        seq.phase = Phase::Decoding;
+        seq.metrics.first_token_time = now_secs();
+        let finished = seq.push_fast_token(tok, self.cfg.eos_token, false);
+        self.metrics.decoded_tokens += 1;
+        self.metrics.committed_tokens += 1;
+        if finished {
+            self.retire(idx)?;
+        }
+        Ok(())
+    }
+
+    /// Largest chunk <= remaining, else the smallest chunk that covers the
+    /// final partial piece (padded). Chunk choice depends only on the
+    /// request itself, so prefill is reproducible across runs.
+    fn pick_chunk(&self, remaining: usize) -> usize {
+        let mut best = None;
+        for &c in &self.prefill_chunks {
+            if c <= remaining {
+                best = Some(c);
+            }
+        }
+        best.unwrap_or_else(|| {
+            *self
+                .prefill_chunks
+                .iter()
+                .find(|&&c| c >= remaining)
+                .unwrap_or_else(|| self.prefill_chunks.last().unwrap())
+        })
+    }
+
+    // ----------------------------------------------------------- decode
+    fn decode_step(&mut self, lanes: &[usize]) -> Result<()> {
+        let count = lanes.len();
+        let bucket = if self.invariant_decode() {
+            // the universal schedule: one fixed shape for every step
+            self.invariant_bucket
+        } else {
+            self.decode_buckets
+                .iter()
+                .copied()
+                .find(|&b| b >= count)
+                .ok_or_else(|| Error::Engine("batch exceeds max bucket".into()))?
+        };
+        let trash = self.slots.trash_slot() as i32;
+        let mut tokens = vec![0i32; bucket];
+        let mut slots = vec![trash; bucket];
+        let mut positions = vec![0i32; bucket];
+        for (lane, &idx) in lanes.iter().enumerate() {
+            let s = &self.seqs[idx];
+            tokens[lane] = s.next_input_token() as i32;
+            slots[lane] = s.slot as i32;
+            positions[lane] = s.next_input_position() as i32;
+        }
+
+        let artifact = Runtime::decode_artifact(bucket, self.invariant_decode());
+        self.rt.forward(&artifact, &tokens, &slots, &positions)?;
+        self.metrics.decode_steps += 1;
+
+        let vocab = self.rt.dims().vocab;
+        let logits = self.rt.extract_logits(count)?.to_vec();
+        let eos = self.cfg.eos_token;
+        let speculative = self.dvr();
+        let mut to_retire = Vec::new();
+        for (lane, &idx) in lanes.iter().enumerate() {
+            let row = &logits[lane * vocab..(lane + 1) * vocab];
+            let seq = &mut self.seqs[idx];
+            let gen_index = seq.next_gen_index() as u64;
+            let tok = sample(row, seq.req.temperature, seq.req.seed, gen_index);
+            let spec_lane = speculative && seq.req.deterministic;
+            let finished = seq.push_fast_token(tok, eos, spec_lane);
+            self.metrics.decoded_tokens += 1;
+            if !spec_lane {
+                self.metrics.committed_tokens += 1;
+            }
+            if finished {
+                to_retire.push(idx);
+            }
+        }
+        for idx in to_retire {
+            self.retire(idx)?;
+        }
+        Ok(())
+    }
+
+    // ----------------------------------------------------------- verify
+    fn verify_pass(&mut self, lanes: &[usize]) -> Result<()> {
+        let g = self.cfg.verify_group;
+        let t = self.cfg.verify_window;
+        debug_assert!(lanes.len() <= g);
+        let trash = self.slots.trash_slot() as i32;
+        let mut tokens = vec![0i32; g * t];
+        let mut slots = vec![trash; g];
+        let mut positions = vec![0i32; g];
+
+        for (lane, &idx) in lanes.iter().enumerate() {
+            let s = &self.seqs[idx];
+            debug_assert!(!s.committed.is_empty() && !s.speculative.is_empty());
+            // window inputs: last committed token, then the speculative run
+            let base = lane * t;
+            tokens[base] = *s.committed.last().unwrap() as i32;
+            for (j, &sp) in s.speculative.iter().take(t - 1).enumerate() {
+                tokens[base + 1 + j] = sp as i32;
+            }
+            slots[lane] = s.slot as i32;
+            positions[lane] =
+                (s.prompt_len() + s.committed.len() - 1) as i32;
+        }
+
+        let artifact = Runtime::window_artifact(g, t);
+        self.rt.forward(&artifact, &tokens, &slots, &positions)?;
+        self.metrics.verify_passes += 1;
+        self.metrics.verify_lanes += lanes.len() as u64;
+
+        let vocab = self.rt.dims().vocab;
+        let rows = lanes.len() * t;
+        let logits = self.rt.extract_logits(rows)?.to_vec();
+        let eos = self.cfg.eos_token;
+
+        let mut to_retire = Vec::new();
+        for (lane, &idx) in lanes.iter().enumerate() {
+            self.verify_lane_counter += 1;
+            let forced = match self.cfg.fault {
+                FaultPlan::None => None,
+                FaultPlan::EveryNthLane { every, at_index } => {
+                    if self.verify_lane_counter % every == 0 {
+                        Some(at_index.min(self.seqs[idx].speculative.len() - 1))
+                    } else {
+                        None
+                    }
+                }
+            };
+            let seq = &mut self.seqs[idx];
+            let c = seq.committed.len();
+            // sample the verifier's token for every window row
+            let mut vtokens = Vec::with_capacity(t);
+            for j in 0..t {
+                let row = &logits[(lane * t + j) * vocab..(lane * t + j + 1) * vocab];
+                vtokens.push(sample(
+                    row,
+                    seq.req.temperature,
+                    seq.req.seed,
+                    (c + j) as u64,
+                ));
+            }
+            let d = verify::decide(
+                c,
+                &seq.speculative,
+                &vtokens,
+                eos,
+                seq.req.max_new_tokens,
+                forced,
+            );
+            // apply
+            let matched: Vec<u32> = seq.speculative[..d.matched].to_vec();
+            seq.committed.extend(matched);
+            if let Some(f) = d.fresh {
+                seq.committed.push(f);
+            }
+            seq.speculative.clear();
+            seq.eos_sampled = seq.committed.last() == Some(&eos);
+            seq.stall_steps = 0;
+            seq.metrics.verify_passes += 1;
+            self.metrics.committed_tokens += d.committed() as u64;
+            if d.rolled_back() {
+                seq.metrics.rollbacks += 1;
+                seq.metrics.recomputed_tokens += d.discarded as u64;
+                self.metrics.rollbacks += 1;
+                self.metrics.recomputed_tokens += d.discarded as u64;
+            }
+            if let Some(reason) = d.finish {
+                seq.finish(reason);
+                to_retire.push(idx);
+            }
+        }
+        for idx in to_retire {
+            self.retire(idx)?;
+        }
+        Ok(())
+    }
+
+    /// Free the slot and move the sequence to the finished list.
+    fn retire(&mut self, idx: usize) -> Result<()> {
+        debug_assert_eq!(self.seqs[idx].phase, Phase::Finished);
+        let slot = self.seqs[idx].slot;
+        self.slots.release(slot)?;
+        let id = self.seqs[idx].id;
+        let mut tomb = Sequence::new(id, Request::greedy(vec![0], 1, false), 0.0);
+        tomb.phase = Phase::Finished;
+        let done = std::mem::replace(&mut self.seqs[idx], tomb);
+        self.finished.push(done.into_output(now_secs()));
+        Ok(())
+    }
+}

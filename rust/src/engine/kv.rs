@@ -1,0 +1,146 @@
+//! KV-cache slot allocator.
+//!
+//! The device-side KV pool (inside the flat state array) is divided into
+//! `slots` fixed-capacity sequence slots; the last slot is reserved as the
+//! *trash* slot for padding lanes in decode/verify batches. The allocator
+//! hands out user slots and tracks per-slot occupancy.
+//!
+//! Rollback is O(1) by construction: stale KV entries beyond a sequence's
+//! current position are never truncated physically — the attention mask
+//! (`col <= position`) makes them unreachable, and decode overwrites each
+//! position before (or at) the first step that can attend to it.
+
+use crate::error::{Error, Result};
+
+#[derive(Debug)]
+pub struct SlotAllocator {
+    /// total slots including the trash slot
+    slots: usize,
+    /// free user slots (LIFO for locality)
+    free: Vec<usize>,
+    /// occupying sequence id per slot (None = free / trash)
+    occupant: Vec<Option<u64>>,
+    max_seq: usize,
+}
+
+impl SlotAllocator {
+    pub fn new(slots: usize, max_seq: usize) -> Self {
+        assert!(slots >= 2, "need at least one user slot plus trash");
+        SlotAllocator {
+            slots,
+            free: (0..slots - 1).rev().collect(),
+            occupant: vec![None; slots],
+            max_seq,
+        }
+    }
+
+    pub fn user_slots(&self) -> usize {
+        self.slots - 1
+    }
+
+    pub fn trash_slot(&self) -> usize {
+        self.slots - 1
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.user_slots() - self.free.len()
+    }
+
+    /// Validate that a request fits a slot for its whole lifetime,
+    /// including the verifier's padded window (DESIGN.md §5): the last
+    /// window position is P + max_new - 1 + (T - 1), which must stay
+    /// below max_seq or padded KV writes would spill into the next slot.
+    pub fn fits(&self, prompt_len: usize, max_new: usize, window: usize) -> bool {
+        prompt_len >= 1
+            && max_new >= 1
+            && prompt_len + max_new + window <= self.max_seq
+    }
+
+    pub fn alloc(&mut self, seq_id: u64) -> Result<usize> {
+        let slot = self
+            .free
+            .pop()
+            .ok_or_else(|| Error::Capacity("no free KV slots".into()))?;
+        debug_assert!(self.occupant[slot].is_none());
+        self.occupant[slot] = Some(seq_id);
+        Ok(slot)
+    }
+
+    pub fn release(&mut self, slot: usize) -> Result<()> {
+        if slot >= self.user_slots() {
+            return Err(Error::Engine(format!("release of non-user slot {slot}")));
+        }
+        if self.occupant[slot].take().is_none() {
+            return Err(Error::Engine(format!("double release of slot {slot}")));
+        }
+        self.free.push(slot);
+        Ok(())
+    }
+
+    pub fn occupant(&self, slot: usize) -> Option<u64> {
+        self.occupant.get(slot).copied().flatten()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut a = SlotAllocator::new(5, 96);
+        assert_eq!(a.user_slots(), 4);
+        assert_eq!(a.trash_slot(), 4);
+        let s1 = a.alloc(1).unwrap();
+        let s2 = a.alloc(2).unwrap();
+        assert_ne!(s1, s2);
+        assert_eq!(a.in_use(), 2);
+        a.release(s1).unwrap();
+        assert_eq!(a.free_count(), 3);
+        let s3 = a.alloc(3).unwrap();
+        assert_eq!(s3, s1, "LIFO reuse");
+    }
+
+    #[test]
+    fn exhaustion() {
+        let mut a = SlotAllocator::new(3, 96);
+        a.alloc(1).unwrap();
+        a.alloc(2).unwrap();
+        assert!(a.alloc(3).is_err());
+    }
+
+    #[test]
+    fn double_release_rejected() {
+        let mut a = SlotAllocator::new(3, 96);
+        let s = a.alloc(1).unwrap();
+        a.release(s).unwrap();
+        assert!(a.release(s).is_err());
+    }
+
+    #[test]
+    fn trash_slot_not_releasable() {
+        let mut a = SlotAllocator::new(3, 96);
+        assert!(a.release(2).is_err());
+    }
+
+    #[test]
+    fn capacity_check_includes_window() {
+        let a = SlotAllocator::new(3, 100);
+        assert!(a.fits(50, 18, 32)); // 50+18+32 = 100
+        assert!(!a.fits(50, 19, 32));
+        assert!(!a.fits(0, 10, 32));
+        assert!(!a.fits(10, 0, 32));
+    }
+
+    #[test]
+    fn never_hands_out_trash() {
+        let mut a = SlotAllocator::new(4, 96);
+        for id in 0..3 {
+            assert_ne!(a.alloc(id).unwrap(), a.trash_slot());
+        }
+    }
+}

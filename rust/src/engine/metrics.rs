@@ -1,0 +1,89 @@
+//! Request- and engine-level metrics (throughput, latency, DVR overhead).
+
+/// Per-sequence timing and DVR counters, reported with each finished request.
+#[derive(Debug, Default, Clone)]
+pub struct SeqMetrics {
+    pub arrive_time: f64,
+    pub prefill_start: f64,
+    /// time the first committed token became available (TTFT)
+    pub first_token_time: f64,
+    pub finish_time: f64,
+    /// fast-path decode tokens produced (committed or later discarded)
+    pub decoded_tokens: u64,
+    /// tokens discarded by verification rollbacks
+    pub recomputed_tokens: u64,
+    pub rollbacks: u64,
+    pub verify_passes: u64,
+}
+
+impl SeqMetrics {
+    pub fn ttft(&self) -> f64 {
+        self.first_token_time - self.arrive_time
+    }
+
+    pub fn e2e(&self) -> f64 {
+        self.finish_time - self.arrive_time
+    }
+}
+
+/// Engine-wide counters (the Fig. 10 / Table 4 raw material).
+#[derive(Debug, Default, Clone)]
+pub struct EngineMetrics {
+    pub steps: u64,
+    pub decode_steps: u64,
+    pub prefill_chunks: u64,
+    pub verify_passes: u64,
+    /// real (non-pad) fast-path tokens decoded
+    pub decoded_tokens: u64,
+    /// tokens committed (returned to users)
+    pub committed_tokens: u64,
+    /// prompt tokens prefilled (excludes padding)
+    pub prefill_tokens: u64,
+    pub rollbacks: u64,
+    pub recomputed_tokens: u64,
+    /// wall time inside each phase (seconds)
+    pub decode_secs: f64,
+    pub prefill_secs: f64,
+    pub verify_secs: f64,
+    /// real verify lanes processed (for per-token verify cost)
+    pub verify_lanes: u64,
+}
+
+impl EngineMetrics {
+    /// Fraction of decoded tokens that were thrown away (paper Table 4).
+    pub fn recompute_ratio(&self) -> f64 {
+        if self.decoded_tokens == 0 {
+            0.0
+        } else {
+            self.recomputed_tokens as f64 / self.decoded_tokens as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_metrics() {
+        let m = SeqMetrics {
+            arrive_time: 1.0,
+            first_token_time: 1.5,
+            finish_time: 3.0,
+            ..Default::default()
+        };
+        assert!((m.ttft() - 0.5).abs() < 1e-12);
+        assert!((m.e2e() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recompute_ratio() {
+        let m = EngineMetrics {
+            decoded_tokens: 200,
+            recomputed_tokens: 20,
+            ..Default::default()
+        };
+        assert!((m.recompute_ratio() - 0.1).abs() < 1e-12);
+        assert_eq!(EngineMetrics::default().recompute_ratio(), 0.0);
+    }
+}

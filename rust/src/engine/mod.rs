@@ -1,0 +1,14 @@
+//! The LLM-42 serving engine (L3): continuous batching, the
+//! decode-verify-rollback protocol, grouped verification, and selective
+//! determinism.
+
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod sampler;
+pub mod sequence;
+pub mod verify;
+
+pub use engine::{Engine, EngineConfig, FaultPlan, Mode, StepKind};
+pub use metrics::{EngineMetrics, SeqMetrics};
+pub use sequence::{FinishReason, Request, RequestOutput};

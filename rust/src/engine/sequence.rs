@@ -1,0 +1,292 @@
+//! Per-request state for the decode-verify-rollback protocol.
+//!
+//! A sequence's generated tokens are split into `committed` (verified, or
+//! produced by deterministic-by-construction phases) and `speculative`
+//! (fast-path, unverified). Non-deterministic requests commit immediately
+//! and never populate `speculative`.
+//!
+//! Position bookkeeping (P = prompt length):
+//!   * prompt token i sits at position i (0 .. P-1)
+//!   * generated token j (gen index j) is *input* at position P + j
+//!   * gen token 0 comes from the prefill logits and is committed directly
+//!     (prefill is deterministic by construction, paper §4.1/O3)
+
+use crate::engine::metrics::SeqMetrics;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Queued,
+    Prefilling,
+    Decoding,
+    Finished,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    Length,
+}
+
+/// User-facing request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// The paper's per-request `is_deterministic` API flag (O4).
+    pub deterministic: bool,
+    /// 0.0 = greedy (argmax, first-max tiebreak); otherwise seeded-Gumbel
+    /// sampling at this temperature.
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Request {
+    pub fn greedy(prompt: Vec<u32>, max_new_tokens: usize, deterministic: bool) -> Self {
+        Request {
+            prompt,
+            max_new_tokens,
+            deterministic,
+            temperature: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Completed request returned by `Engine::take_finished`.
+#[derive(Debug, Clone)]
+pub struct RequestOutput {
+    pub id: u64,
+    pub deterministic: bool,
+    pub tokens: Vec<u32>,
+    pub finish_reason: FinishReason,
+    pub metrics: SeqMetrics,
+    /// every fast-path token produced (incl. later-discarded speculative
+    /// ones), for the Fig. 6 consistent-span analysis
+    pub fast_trace: Vec<u32>,
+}
+
+#[derive(Debug)]
+pub struct Sequence {
+    pub id: u64,
+    pub req: Request,
+    pub phase: Phase,
+    pub slot: usize,
+    /// prompt tokens already prefilled (chunk progress)
+    pub prefill_pos: usize,
+    /// committed generated tokens (consistent state)
+    pub committed: Vec<u32>,
+    /// speculative fast-path tokens awaiting verification (det only)
+    pub speculative: Vec<u32>,
+    /// set when EOS was sampled (may still sit in `speculative`)
+    pub eos_sampled: bool,
+    /// steps this sequence has been verify-ready but not verified
+    pub stall_steps: usize,
+    pub finish_reason: Option<FinishReason>,
+    pub metrics: SeqMetrics,
+    /// full fast-path token trace (committed or not), for Fig. 6 analysis
+    pub fast_trace: Vec<u32>,
+}
+
+impl Sequence {
+    pub fn new(id: u64, req: Request, arrive_time: f64) -> Self {
+        let mut metrics = SeqMetrics::default();
+        metrics.arrive_time = arrive_time;
+        Sequence {
+            id,
+            req,
+            phase: Phase::Queued,
+            slot: usize::MAX,
+            prefill_pos: 0,
+            committed: Vec::new(),
+            speculative: Vec::new(),
+            eos_sampled: false,
+            stall_steps: 0,
+            finish_reason: None,
+            metrics,
+            fast_trace: Vec::new(),
+        }
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.req.prompt.len()
+    }
+
+    /// Total generated tokens (committed + speculative).
+    pub fn gen_count(&self) -> usize {
+        self.committed.len() + self.speculative.len()
+    }
+
+    /// Token to feed at the next decode step.
+    pub fn next_input_token(&self) -> u32 {
+        if let Some(&t) = self.speculative.last() {
+            t
+        } else {
+            *self
+                .committed
+                .last()
+                .expect("decode before first committed token")
+        }
+    }
+
+    /// Position of the next decode input: P + gen_count - 1.
+    pub fn next_input_position(&self) -> usize {
+        self.prompt_len() + self.gen_count() - 1
+    }
+
+    /// Gen index of the token the next decode step will produce.
+    pub fn next_gen_index(&self) -> usize {
+        self.gen_count()
+    }
+
+    /// True once the sequence has produced all tokens it ever will on the
+    /// fast path (EOS sampled or length budget reached by spec+committed).
+    pub fn decoding_done(&self) -> bool {
+        self.eos_sampled || self.gen_count() >= self.req.max_new_tokens
+    }
+
+    /// Can this sequence take another fast-path decode step right now?
+    /// (`window` = verification window T; det sequences stop at T-1
+    /// speculative tokens and wait for verification.)
+    pub fn can_decode(&self, window: usize, dvr: bool) -> bool {
+        if self.phase != Phase::Decoding || self.decoding_done() {
+            return false;
+        }
+        if dvr && self.req.deterministic {
+            self.speculative.len() < window.saturating_sub(1)
+        } else {
+            true
+        }
+    }
+
+    /// Verification is useful when there is anything speculative, or when
+    /// decoding finished and the tail still needs a deterministic replay.
+    pub fn verify_ready(&self, window: usize) -> bool {
+        if self.phase != Phase::Decoding || !self.req.deterministic {
+            return false;
+        }
+        !self.speculative.is_empty()
+            && (self.speculative.len() >= window.saturating_sub(1) || self.decoding_done())
+    }
+
+    /// Record a fast-path token (speculative for det under DVR, committed
+    /// otherwise). Returns true if the sequence just finished (non-DVR).
+    pub fn push_fast_token(&mut self, tok: u32, eos: u32, speculative: bool) -> bool {
+        self.fast_trace.push(tok);
+        self.metrics.decoded_tokens += 1;
+        if speculative {
+            self.speculative.push(tok);
+            if tok == eos {
+                self.eos_sampled = true;
+            }
+            false
+        } else {
+            self.committed.push(tok);
+            if tok == eos {
+                self.eos_sampled = true;
+                self.finish(FinishReason::Eos);
+                true
+            } else if self.committed.len() >= self.req.max_new_tokens {
+                self.finish(FinishReason::Length);
+                true
+            } else {
+                false
+            }
+        }
+    }
+
+    pub fn finish(&mut self, reason: FinishReason) {
+        self.phase = Phase::Finished;
+        self.finish_reason = Some(reason);
+    }
+
+    pub fn into_output(self, finish_time: f64) -> RequestOutput {
+        let mut metrics = self.metrics;
+        metrics.finish_time = finish_time;
+        RequestOutput {
+            id: self.id,
+            deterministic: self.req.deterministic,
+            tokens: self.committed,
+            finish_reason: self.finish_reason.unwrap_or(FinishReason::Length),
+            metrics,
+            fast_trace: self.fast_trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(det: bool) -> Sequence {
+        let mut s = Sequence::new(1, Request::greedy(vec![1, 2, 3], 8, det), 0.0);
+        s.phase = Phase::Decoding;
+        s.committed.push(10); // t0 from prefill
+        s
+    }
+
+    #[test]
+    fn positions() {
+        let s = seq(true);
+        assert_eq!(s.gen_count(), 1);
+        assert_eq!(s.next_input_token(), 10);
+        assert_eq!(s.next_input_position(), 3); // P=3, gen token 0 at P+0
+        assert_eq!(s.next_gen_index(), 1);
+    }
+
+    #[test]
+    fn spec_capped_by_window() {
+        let mut s = seq(true);
+        let window = 4;
+        assert!(s.can_decode(window, true));
+        for t in [11, 12, 13] {
+            assert!(!s.push_fast_token(t, 999, true));
+        }
+        assert_eq!(s.speculative.len(), 3);
+        assert!(!s.can_decode(window, true)); // T-1 = 3 spec tokens -> stall
+        assert!(s.verify_ready(window));
+    }
+
+    #[test]
+    fn nondet_commits_directly() {
+        let mut s = seq(false);
+        assert!(!s.push_fast_token(11, 999, false));
+        assert_eq!(s.committed, vec![10, 11]);
+        assert!(s.speculative.is_empty());
+        assert!(!s.verify_ready(4));
+    }
+
+    #[test]
+    fn eos_stops_decode_and_triggers_verify() {
+        let mut s = seq(true);
+        s.push_fast_token(999, 999, true);
+        assert!(s.eos_sampled);
+        assert!(!s.can_decode(32, true));
+        assert!(s.verify_ready(32)); // short window, decoding_done
+    }
+
+    #[test]
+    fn nondet_finishes_on_eos() {
+        let mut s = seq(false);
+        assert!(s.push_fast_token(999, 999, false));
+        assert_eq!(s.phase, Phase::Finished);
+        assert_eq!(s.finish_reason, Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn length_limit() {
+        let mut s = seq(false);
+        for t in 0..7 {
+            let done = s.push_fast_token(t, 999, false);
+            assert_eq!(done, t == 6, "t={t}"); // 1 committed + 7 = 8 = max
+        }
+        assert_eq!(s.finish_reason, Some(FinishReason::Length));
+    }
+
+    #[test]
+    fn next_input_prefers_speculative() {
+        let mut s = seq(true);
+        s.push_fast_token(42, 999, true);
+        assert_eq!(s.next_input_token(), 42);
+        assert_eq!(s.next_input_position(), 4);
+    }
+}

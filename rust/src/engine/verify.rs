@@ -1,0 +1,223 @@
+//! The verification half of decode-verify-rollback (paper §4.2-§4.3).
+//!
+//! `decide` is the pure commit/rollback rule: given a lane's speculative
+//! tokens and the verifier's replayed tokens for the window, it determines
+//! what commits, what rolls back, and whether the sequence finishes. It is
+//! exhaustively unit-tested here; the engine applies the decision and the
+//! KV consistency falls out of the verifier graph overwriting the window's
+//! pool entries in-pass (paper: "Making KV cache consistent").
+
+use crate::engine::sequence::FinishReason;
+
+/// Outcome of verifying one lane.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifyDecision {
+    /// speculative tokens confirmed (committed in order)
+    pub matched: usize,
+    /// verifier-generated token committed after the matches (paper: the
+    /// token immediately after the last matching position)
+    pub fresh: Option<u32>,
+    /// speculative tokens discarded (> 0 iff a rollback happened)
+    pub discarded: usize,
+    pub finish: Option<FinishReason>,
+}
+
+impl VerifyDecision {
+    pub fn rolled_back(&self) -> bool {
+        self.discarded > 0
+    }
+
+    /// Tokens this verification commits in total (forward progress >= 1).
+    pub fn committed(&self) -> usize {
+        self.matched + usize::from(self.fresh.is_some())
+    }
+}
+
+/// Apply the DVR commit rule for one lane.
+///
+/// * `committed_len` — tokens already committed before this pass
+/// * `spec` — speculative tokens (never empty; `len <= window - 1`)
+/// * `verifier` — the verifier's sampled tokens for the window rows
+///   (`len == window`); row `j` is the token at gen index
+///   `committed_len + j`
+/// * `eos` / `max_new` — termination rules
+/// * `forced_mismatch_at` — fault-injection hook: treat this spec index as
+///   mismatched even if tokens agree (used by failure-injection tests)
+pub fn decide(
+    committed_len: usize,
+    spec: &[u32],
+    verifier: &[u32],
+    eos: u32,
+    max_new: usize,
+    forced_mismatch_at: Option<usize>,
+) -> VerifyDecision {
+    assert!(!spec.is_empty(), "verify with no speculative tokens");
+    assert!(
+        spec.len() < verifier.len(),
+        "window must cover spec plus one fresh row ({} vs {})",
+        spec.len(),
+        verifier.len()
+    );
+    debug_assert!(committed_len + spec.len() <= max_new);
+
+    // longest matching prefix
+    let mut matched = 0;
+    while matched < spec.len() {
+        if Some(matched) == forced_mismatch_at || spec[matched] != verifier[matched] {
+            break;
+        }
+        matched += 1;
+    }
+    let discarded = spec.len() - matched;
+
+    // Did the matched prefix itself terminate the sequence?
+    let commits_eos = matched > 0 && spec[matched - 1] == eos;
+    let new_len = committed_len + matched;
+    if commits_eos {
+        // decode stops at EOS, so EOS can only be the last spec token and
+        // everything after it in the window is padding
+        debug_assert_eq!(matched, spec.len());
+        return VerifyDecision {
+            matched,
+            fresh: None,
+            discarded,
+            finish: Some(FinishReason::Eos),
+        };
+    }
+    if new_len >= max_new {
+        return VerifyDecision {
+            matched,
+            fresh: None,
+            discarded,
+            finish: Some(FinishReason::Length),
+        };
+    }
+
+    // Commit the verifier's next token: on a full match this is the free
+    // extra token (paper case 1); on a mismatch it is the corrected token
+    // at the divergence point (paper case 2). Both are consistent because
+    // they depend only on matched inputs.
+    let fresh = verifier[matched];
+    let finish = if fresh == eos {
+        Some(FinishReason::Eos)
+    } else if new_len + 1 >= max_new {
+        Some(FinishReason::Length)
+    } else {
+        None
+    };
+    VerifyDecision {
+        matched,
+        fresh: Some(fresh),
+        discarded,
+        finish,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EOS: u32 = 999;
+
+    #[test]
+    fn full_match_commits_all_plus_fresh() {
+        // paper Fig. 8a: T1'..T3' match, T4 accepted for free
+        let d = decide(1, &[11, 12, 13], &[11, 12, 13, 14], EOS, 100, None);
+        assert_eq!(d.matched, 3);
+        assert_eq!(d.fresh, Some(14));
+        assert_eq!(d.discarded, 0);
+        assert!(!d.rolled_back());
+        assert_eq!(d.finish, None);
+        assert_eq!(d.committed(), 4);
+    }
+
+    #[test]
+    fn mismatch_commits_prefix_plus_corrected() {
+        // paper Fig. 8b: only T1' matches; T2 (verifier) accepted; rest dropped
+        let d = decide(1, &[11, 12, 13], &[11, 22, 33, 44], EOS, 100, None);
+        assert_eq!(d.matched, 1);
+        assert_eq!(d.fresh, Some(22));
+        assert_eq!(d.discarded, 2);
+        assert!(d.rolled_back());
+        assert_eq!(d.finish, None);
+    }
+
+    #[test]
+    fn immediate_mismatch_still_progresses() {
+        // guaranteed forward progress: even a first-token mismatch commits 1
+        let d = decide(1, &[11, 12], &[77, 1, 2, 3], EOS, 100, None);
+        assert_eq!(d.matched, 0);
+        assert_eq!(d.fresh, Some(77));
+        assert_eq!(d.discarded, 2);
+        assert!(d.committed() >= 1);
+    }
+
+    #[test]
+    fn eos_in_matched_prefix_finishes() {
+        let d = decide(1, &[11, EOS], &[11, EOS, 5, 6], EOS, 100, None);
+        assert_eq!(d.matched, 2);
+        assert_eq!(d.fresh, None);
+        assert_eq!(d.finish, Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn fresh_token_can_be_eos() {
+        let d = decide(1, &[11], &[11, EOS, 0, 0], EOS, 100, None);
+        assert_eq!(d.fresh, Some(EOS));
+        assert_eq!(d.finish, Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn corrected_token_replacing_eos() {
+        // fast path sampled EOS but the verifier disagrees: sequence continues
+        let d = decide(1, &[EOS], &[42, 0, 0, 0], EOS, 100, None);
+        assert_eq!(d.matched, 0);
+        assert_eq!(d.fresh, Some(42));
+        assert_eq!(d.finish, None);
+        assert!(d.rolled_back());
+    }
+
+    #[test]
+    fn length_limit_blocks_fresh() {
+        // committed 5 + 3 matched == max_new 8: no room for the fresh token
+        let d = decide(5, &[1, 2, 3], &[1, 2, 3, 4], EOS, 8, None);
+        assert_eq!(d.matched, 3);
+        assert_eq!(d.fresh, None);
+        assert_eq!(d.finish, Some(FinishReason::Length));
+    }
+
+    #[test]
+    fn fresh_token_hits_length_limit() {
+        let d = decide(5, &[1, 2], &[1, 2, 9, 9], EOS, 8, None);
+        assert_eq!(d.fresh, Some(9));
+        assert_eq!(d.finish, Some(FinishReason::Length));
+    }
+
+    #[test]
+    fn forced_mismatch_injection() {
+        let d = decide(1, &[11, 12, 13], &[11, 12, 13, 14], EOS, 100, Some(1));
+        assert_eq!(d.matched, 1);
+        assert_eq!(d.fresh, Some(12)); // verifier row at forced index
+        assert_eq!(d.discarded, 2);
+        assert!(d.rolled_back());
+    }
+
+    #[test]
+    fn forward_progress_under_constant_faults() {
+        // even if every pass forces an immediate mismatch, each pass commits
+        // the verifier's token at index 0 -> progress is monotone
+        let mut committed = 1usize;
+        for _ in 0..10 {
+            let d = decide(committed, &[7, 7, 7], &[8, 8, 8, 8], EOS, 100, Some(0));
+            assert!(d.committed() >= 1);
+            committed += d.committed();
+        }
+        assert_eq!(committed, 11);
+    }
+
+    #[test]
+    #[should_panic(expected = "window must cover")]
+    fn spec_must_fit_window() {
+        decide(0, &[1, 2, 3, 4], &[1, 2, 3, 4], EOS, 100, None);
+    }
+}

@@ -1,0 +1,41 @@
+//! Error type shared across the llm42 library.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json parse error at byte {pos}: {msg}")]
+    Json { pos: usize, msg: String },
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    #[error("capacity: {0}")]
+    Capacity(String),
+
+    #[error("tokenizer error: {0}")]
+    Tokenizer(String),
+
+    #[error("server error: {0}")]
+    Server(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

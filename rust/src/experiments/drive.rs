@@ -1,0 +1,175 @@
+//! Shared experiment driver: run a trace through an engine configuration
+//! and collect the metrics every figure/table is built from.
+
+use llm42::engine::{Engine, EngineConfig, StepKind};
+use llm42::error::{Error, Result};
+use llm42::prelude::*;
+use llm42::runtime::Runtime;
+use llm42::trace::TraceSpec;
+use llm42::util::now_secs;
+use llm42::util::stats::Recorder;
+
+/// Everything one trace run produces.
+pub struct TraceReport {
+    pub label: String,
+    pub n_requests: usize,
+    pub wall_secs: f64,
+    pub committed_tokens: u64,
+    pub prefill_tokens: u64,
+    pub decoded_tokens: u64,
+    pub recomputed_tokens: u64,
+    pub rollbacks: u64,
+    pub verify_passes: u64,
+    pub decode_secs: f64,
+    pub prefill_secs: f64,
+    pub verify_secs: f64,
+    pub e2e: Recorder,
+    pub ttft: Recorder,
+    pub outputs: Vec<RequestOutput>,
+}
+
+impl TraceReport {
+    /// Output-token throughput (the paper's decode-throughput metric).
+    pub fn out_tput(&self) -> f64 {
+        self.committed_tokens as f64 / self.wall_secs
+    }
+
+    /// Total processed-token throughput (prefill + committed output).
+    pub fn total_tput(&self) -> f64 {
+        (self.prefill_tokens + self.committed_tokens) as f64 / self.wall_secs
+    }
+
+    pub fn recompute_ratio(&self) -> f64 {
+        if self.decoded_tokens == 0 {
+            0.0
+        } else {
+            self.recomputed_tokens as f64 / self.decoded_tokens as f64
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut e2e = self.e2e.clone();
+        let mut ttft = self.ttft.clone();
+        format!(
+            "{}: {} reqs in {:.1}s | {:.1} out tok/s ({:.1} total tok/s) | \
+             e2e p50 {:.2}s p99 {:.2}s | ttft p50 {:.0}ms p90 {:.0}ms | \
+             rollbacks {} recomputed {} ({:.2}%) | phases d {:.1}s p {:.1}s v {:.1}s",
+            self.label,
+            self.n_requests,
+            self.wall_secs,
+            self.out_tput(),
+            self.total_tput(),
+            e2e.percentile(50.0),
+            e2e.percentile(99.0),
+            ttft.percentile(50.0) * 1000.0,
+            ttft.percentile(90.0) * 1000.0,
+            self.rollbacks,
+            self.recomputed_tokens,
+            self.recompute_ratio() * 100.0,
+            self.decode_secs,
+            self.prefill_secs,
+            self.verify_secs,
+        )
+    }
+}
+
+/// Run one trace to completion (offline or open-loop online per the spec).
+pub fn run_trace(
+    rt: &mut Runtime,
+    cfg: EngineConfig,
+    spec: &TraceSpec,
+) -> Result<TraceReport> {
+    let label = format!(
+        "{:?} det={:.0}% {}",
+        cfg.mode,
+        spec.det_ratio * 100.0,
+        spec.profile.name()
+    );
+    let trace = spec.generate();
+    let mut eng = Engine::new(rt, cfg)?;
+    eng.warmup()?; // compile outside the timed region
+    let start = now_secs();
+    let mut next = 0usize;
+
+    loop {
+        while next < trace.len()
+            && now_secs() - start >= trace[next].arrival_offset
+        {
+            eng.submit(trace[next].req.clone())?;
+            next += 1;
+        }
+        if next >= trace.len() && eng.idle() {
+            break;
+        }
+        let kind = eng.step()?;
+        if kind == StepKind::Idle {
+            if next >= trace.len() {
+                return Err(Error::Engine(
+                    "idle with pending sequences (scheduler bug)".into(),
+                ));
+            }
+            // open-loop: wait for the next arrival
+            let wait = trace[next].arrival_offset - (now_secs() - start);
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    wait.min(0.005),
+                ));
+            }
+        }
+    }
+    let wall_secs = now_secs() - start;
+
+    let c = eng.runtime().counters();
+    eprintln!(
+        "  [runtime] {} forwards {:.1}s ({:.1} ms avg) | {} extracts {:.1}s | \
+         upload {:.2}s | {} compiles {:.1}s | engine steps {} (d{} p{} v{})",
+        c.forward_calls,
+        c.forward_secs,
+        1e3 * c.forward_secs / c.forward_calls.max(1) as f64,
+        c.extract_calls,
+        c.extract_secs,
+        c.upload_secs,
+        c.compile_calls,
+        c.compile_secs,
+        eng.metrics.steps,
+        eng.metrics.decode_steps,
+        eng.metrics.prefill_chunks,
+        eng.metrics.verify_passes,
+    );
+
+    let outputs = eng.take_finished();
+    let mut e2e = Recorder::new();
+    let mut ttft = Recorder::new();
+    for o in &outputs {
+        e2e.record(o.metrics.e2e());
+        ttft.record(o.metrics.ttft());
+    }
+    let m = eng.metrics.clone();
+    Ok(TraceReport {
+        label,
+        n_requests: outputs.len(),
+        wall_secs,
+        committed_tokens: m.committed_tokens,
+        prefill_tokens: m.prefill_tokens,
+        decoded_tokens: m.decoded_tokens,
+        recomputed_tokens: m.recomputed_tokens,
+        rollbacks: m.rollbacks,
+        verify_passes: m.verify_passes,
+        decode_secs: m.decode_secs,
+        prefill_secs: m.prefill_secs,
+        verify_secs: m.verify_secs,
+        e2e,
+        ttft,
+        outputs,
+    })
+}
+
+/// Write a CSV artifact next to the experiment output.
+pub fn write_csv(path: &str, content: &str) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, content)?;
+    println!("  wrote {path}");
+    Ok(())
+}

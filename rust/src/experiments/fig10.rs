@@ -1,0 +1,109 @@
+//! Fig. 10 + Table 4 analogue: offline throughput across workloads and
+//! deterministic-traffic ratios.
+//!
+//! Paper shape under test:
+//!   * SGLang-Deterministic (batch-invariant) loses 24-36% vs the
+//!     non-deterministic ceiling on every workload.
+//!   * llm42 throughput improves monotonically as the deterministic ratio
+//!     falls, approaching the ceiling at low ratios, and beats the
+//!     batch-invariant baseline even at 100% det traffic (except ~one
+//!     workload where it is within a few %).
+//!   * rollbacks and recomputed tokens stay modest (Table 4).
+
+use llm42::engine::{EngineConfig, Mode};
+use llm42::error::Result;
+use llm42::runtime::Runtime;
+use llm42::trace::{LengthProfile, TraceSpec};
+use llm42::util::cli::Args;
+use llm42::util::stats::Table;
+
+use crate::experiments::drive::{run_trace, write_csv};
+
+pub fn run(args: &Args, artifacts: &str) -> Result<()> {
+    println!("== Fig. 10 / Table 4: offline throughput & rollback stats ==");
+    let mut rt = Runtime::load(artifacts)?;
+    let dims = rt.dims().clone();
+    let n = args.usize_or("requests", 32)?;
+    let group = args.usize_or("group", 8)?;
+    let window = args.usize_or("window", 32)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    let mut workloads: Vec<LengthProfile> =
+        vec![LengthProfile::sharegpt(), LengthProfile::arxiv()];
+    workloads.extend(LengthProfile::fixed_paper_configs());
+    if let Some(filter) = args.get("workloads") {
+        workloads.retain(|w| filter.split(',').any(|f| w.name().contains(f)));
+    }
+
+    let det_ratios = [0.02, 0.05, 0.10, 0.20, 0.50, 1.00];
+
+    let mut tput_tab = Table::new(&[
+        "workload", "nondet", "batch_inv",
+        "llm42@2%", "llm42@5%", "llm42@10%", "llm42@20%", "llm42@50%", "llm42@100%",
+    ]);
+    let mut t4_tab = Table::new(&[
+        "workload", "metric",
+        "2%", "5%", "10%", "20%", "50%", "100%", "recompute_pct@100%",
+    ]);
+
+    for wl in &workloads {
+        println!("-- workload {} --", wl.name());
+        let spec = |ratio: f64| TraceSpec {
+            profile: wl.clone(),
+            n_requests: n,
+            det_ratio: ratio,
+            qps: None,
+            seed,
+            temperature: 1.0,
+            vocab: dims.vocab,
+            max_seq: dims.max_seq,
+            window,
+        };
+        let cfg = |mode: Mode| EngineConfig {
+            mode,
+            verify_group: group,
+            verify_window: window,
+            ..Default::default()
+        };
+
+        let nondet = run_trace(&mut rt, cfg(Mode::NonDeterministic), &spec(0.0))?;
+        println!("  {}", nondet.render());
+        let inv = run_trace(&mut rt, cfg(Mode::BatchInvariant), &spec(0.0))?;
+        println!("  {}", inv.render());
+
+        let mut cells = vec![
+            wl.name().to_string(),
+            format!("{:.1}", nondet.out_tput()),
+            format!("{:.1}", inv.out_tput()),
+        ];
+        let mut rollbacks = Vec::new();
+        let mut recomputed = Vec::new();
+        let mut last_ratio = 0.0;
+        for &r in &det_ratios {
+            let rep = run_trace(&mut rt, cfg(Mode::Llm42), &spec(r))?;
+            println!("  {}", rep.render());
+            cells.push(format!("{:.1}", rep.out_tput()));
+            rollbacks.push(rep.rollbacks);
+            recomputed.push(rep.recomputed_tokens);
+            last_ratio = rep.recompute_ratio();
+        }
+        tput_tab.row(cells);
+
+        let mut row = vec![wl.name().to_string(), "rollbacks".to_string()];
+        row.extend(rollbacks.iter().map(|x| x.to_string()));
+        row.push(String::new());
+        t4_tab.row(row);
+        let mut row = vec![wl.name().to_string(), "recomputed".to_string()];
+        row.extend(recomputed.iter().map(|x| x.to_string()));
+        row.push(format!("{:.2}", last_ratio * 100.0));
+        t4_tab.row(row);
+    }
+
+    println!("\nFig. 10 — offline output-token throughput (tok/s):");
+    println!("{}", tput_tab.render());
+    println!("Table 4 — rollbacks & recomputed tokens by det ratio:");
+    println!("{}", t4_tab.render());
+    write_csv("results/fig10.csv", &tput_tab.csv())?;
+    write_csv("results/table4.csv", &t4_tab.csv())?;
+    Ok(())
+}

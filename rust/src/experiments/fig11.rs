@@ -1,0 +1,100 @@
+//! Fig. 11 + Table 5 analogue: online latency under increasing load.
+//!
+//! Open-loop Poisson arrivals on the ShareGPT-like profile. Paper shape:
+//! the batch-invariant baseline's latency CDF shifts right with a long
+//! tail at every QPS; llm42 tracks the non-deterministic baseline closely
+//! at low det ratios and degrades smoothly as the ratio rises; TTFT is
+//! monotone in the det ratio but far below the batch-invariant tail.
+
+use llm42::engine::{EngineConfig, Mode};
+use llm42::error::Result;
+use llm42::runtime::Runtime;
+use llm42::trace::{LengthProfile, TraceSpec};
+use llm42::util::cli::Args;
+use llm42::util::stats::Table;
+
+use crate::experiments::drive::{run_trace, write_csv};
+
+pub fn run(args: &Args, artifacts: &str) -> Result<()> {
+    println!("== Fig. 11 / Table 5: online latency & TTFT vs load ==");
+    let mut rt = Runtime::load(artifacts)?;
+    let dims = rt.dims().clone();
+    let n = args.usize_or("requests", 32)?;
+    let group = args.usize_or("group", 8)?;
+    let window = args.usize_or("window", 32)?;
+    let qps_list: Vec<f64> = args
+        .usize_list_or("qps", &[2, 4, 6])?
+        .into_iter()
+        .map(|q| q as f64)
+        .collect();
+    let det_ratios = [0.02, 0.10, 0.50, 1.00];
+
+    let mut lat_tab = Table::new(&[
+        "qps", "system", "e2e_p50_s", "e2e_p75_s", "e2e_p90_s", "e2e_p99_s",
+    ]);
+    let mut ttft_tab = Table::new(&[
+        "qps", "system", "ttft_p50_ms", "ttft_p75_ms", "ttft_p90_ms",
+    ]);
+    let mut cdf_csv = String::from("qps,system,latency_s,quantile\n");
+
+    for &qps in &qps_list {
+        println!("-- qps {qps} --");
+        let spec = |ratio: f64| TraceSpec {
+            profile: LengthProfile::sharegpt(),
+            n_requests: n,
+            det_ratio: ratio,
+            qps: Some(qps),
+            seed: args.u64_or("seed", 42).unwrap_or(42),
+            temperature: 1.0,
+            vocab: dims.vocab,
+            max_seq: dims.max_seq,
+            window,
+        };
+        let cfg = |mode: Mode| EngineConfig {
+            mode,
+            verify_group: group,
+            verify_window: window,
+            ..Default::default()
+        };
+
+        let mut runs: Vec<(String, Mode, f64)> = vec![
+            ("nondet".into(), Mode::NonDeterministic, 0.0),
+            ("batch-inv".into(), Mode::BatchInvariant, 0.0),
+        ];
+        for &r in &det_ratios {
+            runs.push((format!("llm42@{:.0}%", r * 100.0), Mode::Llm42, r));
+        }
+
+        for (name, mode, ratio) in runs {
+            let mut rep = run_trace(&mut rt, cfg(mode), &spec(ratio))?;
+            println!("  {}", rep.render());
+            lat_tab.row(vec![
+                format!("{qps}"),
+                name.clone(),
+                format!("{:.2}", rep.e2e.percentile(50.0)),
+                format!("{:.2}", rep.e2e.percentile(75.0)),
+                format!("{:.2}", rep.e2e.percentile(90.0)),
+                format!("{:.2}", rep.e2e.percentile(99.0)),
+            ]);
+            ttft_tab.row(vec![
+                format!("{qps}"),
+                name.clone(),
+                format!("{:.1}", rep.ttft.percentile(50.0) * 1e3),
+                format!("{:.1}", rep.ttft.percentile(75.0) * 1e3),
+                format!("{:.1}", rep.ttft.percentile(90.0) * 1e3),
+            ]);
+            for (v, q) in rep.e2e.cdf(20) {
+                cdf_csv.push_str(&format!("{qps},{name},{v:.4},{q:.2}\n"));
+            }
+        }
+    }
+
+    println!("\nFig. 11 — end-to-end latency percentiles (s):");
+    println!("{}", lat_tab.render());
+    println!("Table 5 — TTFT percentiles (ms):");
+    println!("{}", ttft_tab.render());
+    write_csv("results/fig11_latency.csv", &lat_tab.csv())?;
+    write_csv("results/table5_ttft.csv", &ttft_tab.csv())?;
+    write_csv("results/fig11_cdf.csv", &cdf_csv)?;
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Fig. 12 analogue: grouped-verification ablation (window x group size).
+//!
+//! All-deterministic online traffic; sweep the per-request window T and
+//! the number of requests verified together G. Paper shape:
+//!   * at G=1, latency is non-monotone in T (verification overhead vs
+//!     recomputation cost trade-off), with a sweet spot mid-range;
+//!   * grouping (G>1) beats every G=1 configuration, with the best
+//!     configurations verifying ~256 total tokens per pass;
+//!   * recompute cost grows with T regardless of G.
+//!
+//! Large windows/groups need `make artifacts-ablation`.
+
+use llm42::engine::{EngineConfig, Mode};
+use llm42::error::Result;
+use llm42::runtime::Runtime;
+use llm42::trace::{LengthProfile, TraceSpec};
+use llm42::util::cli::Args;
+use llm42::util::stats::Table;
+
+use crate::experiments::drive::{run_trace, write_csv};
+
+pub fn run(args: &Args, artifacts: &str) -> Result<()> {
+    println!("== Fig. 12: grouped verification ablation (100% det) ==");
+    let mut rt = Runtime::load(artifacts)?;
+    let dims = rt.dims().clone();
+    let n = args.usize_or("requests", 24)?;
+    let qps = args.f64_or("qps", 3.0)?;
+    let groups = args.usize_list_or("groups", &[1, 2, 4, 8])?;
+    let windows = args.usize_list_or("windows", &[16, 32, 64, 128])?;
+
+    let mut lat_tab = Table::new(&["group\\window"]);
+    // build a header row manually: Table is fixed-arity, so make one table
+    // per metric with explicit columns
+    let mut cols = vec!["group".to_string()];
+    cols.extend(windows.iter().map(|w| format!("T={w}")));
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut p99 = Table::new(&col_refs);
+    let mut recomp = Table::new(&col_refs);
+    drop(lat_tab);
+
+    for &g in &groups {
+        let mut p99_row = vec![format!("G={g}")];
+        let mut rc_row = vec![format!("G={g}")];
+        for &t in &windows {
+            let name = Runtime::window_artifact(g, t);
+            if rt.manifest.artifact(&name).is_none()
+                || g * t > dims.max_fwd_tokens
+            {
+                p99_row.push("-".into());
+                rc_row.push("-".into());
+                continue;
+            }
+            let cfg = EngineConfig {
+                mode: Mode::Llm42,
+                verify_group: g,
+                verify_window: t,
+                ..Default::default()
+            };
+            let spec = TraceSpec {
+                profile: LengthProfile::sharegpt(),
+                n_requests: n,
+                det_ratio: 1.0,
+                qps: Some(qps),
+                seed: args.u64_or("seed", 42)?,
+                temperature: 1.0,
+                vocab: dims.vocab,
+                max_seq: dims.max_seq,
+                window: t,
+            };
+            let mut rep = run_trace(&mut rt, cfg, &spec)?;
+            println!("  G={g} T={t}: {}", rep.render());
+            p99_row.push(format!("{:.2}", rep.e2e.percentile(99.0)));
+            rc_row.push(format!("{:.2}", rep.recompute_ratio() * 100.0));
+        }
+        p99.row(p99_row);
+        recomp.row(rc_row);
+    }
+
+    println!("\nFig. 12a — P99 end-to-end latency (s):");
+    println!("{}", p99.render());
+    println!("Fig. 12b — recomputation overhead (%):");
+    println!("{}", recomp.render());
+    write_csv("results/fig12_p99.csv", &p99.csv())?;
+    write_csv("results/fig12_recompute.csv", &recomp.csv())?;
+    Ok(())
+}

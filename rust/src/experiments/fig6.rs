@@ -1,0 +1,137 @@
+//! Fig. 6 analogue: consistent spans under dynamic batching (paper O1).
+//!
+//! Ground truth: each request decoded alone (batch size 1, fast path).
+//! Treatment: the same requests decoded concurrently under continuous
+//! batching (bucket sizes — and hence reduction schedules — now vary with
+//! co-traffic). For each request we report:
+//!   * first consistent span  — tokens matching ground truth from the start
+//!   * second consistent span — matching run right after the first flip
+//!
+//! Paper shape: first spans are long (hundreds of tokens; many requests
+//! match fully), second spans are near zero — a single flip derails the
+//! rest of the sequence.
+
+use llm42::engine::{Engine, EngineConfig, Mode};
+use llm42::error::Result;
+use llm42::runtime::Runtime;
+use llm42::trace::{LengthProfile, TraceSpec};
+use llm42::util::cli::Args;
+use llm42::util::stats::{Recorder, Table};
+
+use crate::experiments::drive::write_csv;
+
+pub fn run(args: &Args, artifacts: &str) -> Result<()> {
+    println!("== Fig. 6: consistent spans under dynamic batching ==");
+    let mut rt = Runtime::load(artifacts)?;
+    let dims = rt.dims().clone();
+    let n = args.usize_or("requests", 24)?;
+    let out_len = args.usize_or("out", 128)?;
+    let temp = args.f64_or("temp", 1.0)? as f32;
+
+    let spec = TraceSpec {
+        profile: LengthProfile::Fixed { name: "fig6", input: 48, output: out_len },
+        n_requests: n,
+        det_ratio: 0.0,
+        qps: None,
+        seed: args.u64_or("seed", 42)?,
+        temperature: temp,
+        vocab: dims.vocab,
+        max_seq: dims.max_seq,
+        window: 32,
+    };
+    let reqs: Vec<_> = spec.generate().into_iter().map(|t| t.req).collect();
+    let cfg = EngineConfig { mode: Mode::NonDeterministic, ..Default::default() };
+
+    // ground truth: one request at a time (no dynamic batching)
+    println!("  computing batch-size-1 ground truth ({n} requests)...");
+    let mut truth: Vec<Vec<u32>> = Vec::with_capacity(n);
+    for r in &reqs {
+        let mut eng = Engine::new(&mut rt, cfg.clone())?;
+        eng.warmup()?;
+        eng.submit(r.clone())?;
+        eng.run_to_completion()?;
+        truth.push(eng.take_finished().pop().unwrap().tokens);
+    }
+
+    // treatment: all requests at once under continuous batching
+    println!("  running under dynamic batching...");
+    let mut eng = Engine::new(&mut rt, cfg)?;
+    let mut ids = Vec::new();
+    for r in &reqs {
+        ids.push(eng.submit(r.clone())?);
+    }
+    eng.run_to_completion()?;
+    let mut outs = eng.take_finished();
+    outs.sort_by_key(|o| o.id);
+
+    let mut tab = Table::new(&["request", "out_len", "first_span", "second_span", "full_match"]);
+    let mut first = Recorder::new();
+    let mut second = Recorder::new();
+    let mut full = 0usize;
+    for (i, o) in outs.iter().enumerate() {
+        let (f, s) = spans(&truth[i], &o.tokens);
+        let is_full = f >= truth[i].len().min(o.tokens.len());
+        full += usize::from(is_full);
+        first.record(f as f64);
+        second.record(s as f64);
+        tab.row(vec![
+            (i + 1).to_string(),
+            o.tokens.len().to_string(),
+            f.to_string(),
+            s.to_string(),
+            is_full.to_string(),
+        ]);
+    }
+    println!("{}", tab.render());
+    println!(
+        "  first span:  mean {:.1} / p50 {:.0} of {} tokens; {}/{} full matches",
+        first.mean(),
+        first.clone().percentile(50.0),
+        out_len,
+        full,
+        n
+    );
+    println!(
+        "  second span: mean {:.1} / p50 {:.0}  (paper: near zero)",
+        second.mean(),
+        second.clone().percentile(50.0)
+    );
+    write_csv("results/fig6.csv", &tab.csv())?;
+    Ok(())
+}
+
+/// (first consistent span, second consistent span) per the paper's metric.
+fn spans(truth: &[u32], got: &[u32]) -> (usize, usize) {
+    let n = truth.len().min(got.len());
+    let mut i = 0;
+    while i < n && truth[i] == got[i] {
+        i += 1;
+    }
+    let first = i;
+    if i >= n {
+        return (first, 0);
+    }
+    // skip the first divergent token, then count the next matching run
+    let mut j = i + 1;
+    while j < n && truth[j] != got[j] {
+        j += 1;
+    }
+    let mut second = 0;
+    while j + second < n && truth[j + second] == got[j + second] {
+        second += 1;
+    }
+    (first, second)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::spans;
+
+    #[test]
+    fn span_math() {
+        assert_eq!(spans(&[1, 2, 3, 4], &[1, 2, 3, 4]), (4, 0));
+        assert_eq!(spans(&[1, 2, 3, 4], &[1, 9, 3, 4]), (1, 2));
+        assert_eq!(spans(&[1, 2, 3, 4], &[9, 9, 9, 9]), (0, 0));
+        assert_eq!(spans(&[1, 2, 3, 4, 5], &[1, 2, 9, 9, 5]), (2, 1));
+    }
+}

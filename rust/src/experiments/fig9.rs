@@ -1,0 +1,118 @@
+//! Fig. 9 analogue: the verification window trade-off (paper §4.3).
+//!
+//! (a) per-token verification cost vs window size — small windows are
+//!     memory-bound (paper: 0.75 ms/token at T=16 falling 15x by T=512);
+//!     the cost/token must fall steeply as T grows.
+//! (b-d) rollback frequency and recomputation overhead vs window size —
+//!     larger windows roll back longer runs, so recomputed tokens grow
+//!     roughly linearly with T (paper: 6.81% at T=32 -> 46.41% at T=256).
+
+use llm42::engine::{EngineConfig, Mode};
+use llm42::error::Result;
+use llm42::runtime::Runtime;
+use llm42::trace::{LengthProfile, TraceSpec};
+use llm42::util::cli::Args;
+use llm42::util::stats::Table;
+
+use crate::experiments::drive::{run_trace, write_csv};
+
+pub fn run(args: &Args, artifacts: &str) -> Result<()> {
+    println!("== Fig. 9a: per-token verification cost vs window ==");
+    let mut rt = Runtime::load(artifacts)?;
+    let dims = rt.dims().clone();
+    let trash = (dims.slots - 1) as i32;
+    let reps = args.usize_or("reps", 8)?;
+
+    let windows: Vec<usize> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == llm42::manifest::ArtifactKind::Window && a.g == 1)
+        .map(|a| a.t)
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+
+    let mut tab = Table::new(&["window", "pass_ms", "per_token_ms"]);
+    let mut baseline = None;
+    for &t in &windows {
+        let name = Runtime::window_artifact(1, t);
+        let tokens = vec![3i32; t];
+        // warmup (compile + caches)
+        rt.forward(&name, &tokens, &[trash], &[0])?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            rt.forward(&name, &tokens, &[trash], &[0])?;
+        }
+        let pass = t0.elapsed().as_secs_f64() / reps as f64;
+        let per_tok = pass / t as f64;
+        baseline.get_or_insert(per_tok);
+        tab.row(vec![
+            t.to_string(),
+            format!("{:.3}", pass * 1e3),
+            format!("{:.4}", per_tok * 1e3),
+        ]);
+    }
+    println!("{}", tab.render());
+    if let Some(base) = baseline {
+        let last = windows.last().copied().unwrap_or(16) as f64;
+        println!(
+            "  (paper: ~15x reduction from T=16 to T=512; measured windows up to {last})"
+        );
+        let _ = base;
+    }
+    write_csv("results/fig9a.csv", &tab.csv())?;
+
+    println!("== Fig. 9b-d: rollback/recompute vs window (100% det) ==");
+    let n = args.usize_or("requests", 32)?;
+    let req_windows = args.usize_list_or("windows", &[16, 32, 64, 128])?;
+    let mut tab = Table::new(&[
+        "window", "rollbacks", "reqs_with_rollback", "recomputed_tokens",
+        "recompute_pct", "out_tok_per_s",
+    ]);
+    for &t in &req_windows {
+        if rt
+            .manifest
+            .artifact(&Runtime::window_artifact(1, t))
+            .is_none()
+        {
+            println!("  window {t}: artifact missing (run `make artifacts-ablation`)");
+            continue;
+        }
+        let cfg = EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 1,
+            verify_window: t,
+            ..Default::default()
+        };
+        let spec = TraceSpec {
+            profile: LengthProfile::sharegpt(),
+            n_requests: n,
+            det_ratio: 1.0,
+            qps: Some(args.f64_or("qps", 2.0)?),
+            seed: args.u64_or("seed", 42)?,
+            temperature: 1.0,
+            vocab: dims.vocab,
+            max_seq: dims.max_seq,
+            window: t,
+        };
+        let rep = run_trace(&mut rt, cfg, &spec)?;
+        let with_rb = rep
+            .outputs
+            .iter()
+            .filter(|o| o.metrics.rollbacks > 0)
+            .count();
+        tab.row(vec![
+            t.to_string(),
+            rep.rollbacks.to_string(),
+            format!("{with_rb}/{n}"),
+            rep.recomputed_tokens.to_string(),
+            format!("{:.2}", rep.recompute_ratio() * 100.0),
+            format!("{:.1}", rep.out_tput()),
+        ]);
+        println!("  {}", rep.render());
+    }
+    println!("{}", tab.render());
+    write_csv("results/fig9bcd.csv", &tab.csv())?;
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Experiment harness: one module per paper figure/table (DESIGN.md §4).
+//!
+//! Every harness prints the paper-shaped rows and writes a CSV under
+//! `results/`. Scale flags (`--requests`, `--out`, ...) default to a
+//! reduced testbed scale; the *shape* of each result (who wins, trends,
+//! crossovers) is the reproduction target, not absolute numbers.
+
+pub mod drive;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig9;
+pub mod probe;
+pub mod table2;
+
+use llm42::error::Result;
+use llm42::util::cli::Args;
+
+pub fn dispatch(args: &Args, artifacts: &str) -> Result<()> {
+    let which = args
+        .positional()
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    match which {
+        "fig4" => fig4::run(args, artifacts),
+        "fig5" => fig5::run(args, artifacts),
+        "fig6" => fig6::run(args, artifacts),
+        "fig9" => fig9::run(args, artifacts),
+        "fig10" | "table4" => fig10::run(args, artifacts),
+        "fig11" | "table5" => fig11::run(args, artifacts),
+        "fig12" => fig12::run(args, artifacts),
+        "table2" => table2::run(args, artifacts),
+        "probe" => probe::run(args, artifacts),
+        "all" => {
+            table2::run(args, artifacts)?;
+            fig4::run(args, artifacts)?;
+            fig5::run(args, artifacts)?;
+            fig6::run(args, artifacts)?;
+            fig9::run(args, artifacts)?;
+            fig10::run(args, artifacts)?;
+            fig11::run(args, artifacts)?;
+            fig12::run(args, artifacts)
+        }
+        other => Err(llm42::error::Error::Config(format!(
+            "unknown experiment '{other}'"
+        ))),
+    }
+}

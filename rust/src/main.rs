@@ -1,0 +1,119 @@
+//! `llm42` CLI: serve, offline runs, trace generation, and the experiment
+//! harness that regenerates every table/figure of the paper.
+
+use llm42::engine::EngineConfig;
+use llm42::error::Result;
+use llm42::prelude::*;
+use llm42::tokenizer::Tokenizer;
+use llm42::trace::{LengthProfile, TraceSpec};
+use llm42::util::cli::Args;
+
+mod experiments;
+
+const USAGE: &str = "\
+llm42 — determinism in LLM inference via verified speculation
+
+USAGE:
+  llm42 serve        [--addr 127.0.0.1:4242] [--mode llm42] [--group 8] [--window 32]
+  llm42 offline      [--profile sharegpt|arxiv] [--requests 64] [--det-ratio 0.1]
+                     [--mode nondet|batch-invariant|llm42] [--qps Q] [--temp 1.0]
+  llm42 experiments  <fig4|fig5|fig6|fig9|fig10|fig11|fig12|table2|all> [opts]
+  llm42 info         [--artifacts artifacts]
+
+COMMON:
+  --artifacts DIR    artifact directory (default: artifacts)
+  --group G          verification group size (default 8)
+  --window T         verification window (default 32)
+  --seed S           trace seed (default 42)
+";
+
+fn main() {
+    let (cmd, args) = Args::from_env();
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    // `--config FILE` (JSON) provides defaults; flags override
+    Ok(llm42::config::AppConfig::resolve(args)?.engine)
+}
+
+fn profile(args: &Args) -> Result<LengthProfile> {
+    match args.str_or("profile", "sharegpt").as_str() {
+        "sharegpt" => Ok(LengthProfile::sharegpt()),
+        "arxiv" => Ok(LengthProfile::arxiv()),
+        other => Err(Error::Config(format!("unknown profile '{other}'"))),
+    }
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    match cmd {
+        "serve" => {
+            let cfg = engine_config(args)?;
+            let addr = args.str_or("addr", "127.0.0.1:4242");
+            println!("training tokenizer...");
+            let dims_probe = Manifest::load(&artifacts)?;
+            let tok = Tokenizer::default_trained(dims_probe.model.vocab)?;
+            let server =
+                llm42::server::Server::start(artifacts, cfg, tok, &addr)?;
+            println!("llm42 serving on {}", server.addr);
+            println!("ctrl-c to stop");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "offline" => {
+            let cfg = engine_config(args)?;
+            let mut rt = Runtime::load(&artifacts)?;
+            let dims = rt.dims().clone();
+            let spec = TraceSpec {
+                profile: profile(args)?,
+                n_requests: args.usize_or("requests", 64)?,
+                det_ratio: args.f64_or("det-ratio", 0.1)?,
+                qps: args.get("qps").map(|q| q.parse().unwrap_or(8.0)),
+                seed: args.u64_or("seed", 42)?,
+                temperature: args.f64_or("temp", 1.0)? as f32,
+                vocab: dims.vocab,
+                max_seq: dims.max_seq,
+                window: cfg.verify_window,
+            };
+            let report = experiments::drive::run_trace(&mut rt, cfg, &spec)?;
+            println!("{}", report.render());
+            Ok(())
+        }
+        "experiments" => experiments::dispatch(args, &artifacts),
+        "info" => {
+            let man = Manifest::load(&artifacts)?;
+            println!(
+                "model {}: {} params, vocab {}, d_model {}, {} layers, max_seq {}, {} slots",
+                man.model.name,
+                man.model.n_params(),
+                man.model.vocab,
+                man.model.d_model,
+                man.model.n_layers,
+                man.model.max_seq,
+                man.model.slots
+            );
+            println!("{} artifacts:", man.artifacts.len());
+            for a in &man.artifacts {
+                println!("  {:30} kind={:?} g={} t={}", a.name, a.kind, a.g, a.t);
+            }
+            Ok(())
+        }
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            Err(Error::Config("unknown command".into()))
+        }
+    }
+}

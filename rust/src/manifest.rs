@@ -1,0 +1,310 @@
+//! Parsed view of `artifacts/manifest.json` emitted by `python/compile/aot.py`.
+//!
+//! The manifest is the single source of truth shared between the build-time
+//! python pipeline and the runtime rust engine: model dimensions, the flat
+//! state layout, the weight table (order + offsets into `weights.bin`), and
+//! the table of compiled HLO artifacts.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_hidden: usize,
+    pub max_seq: usize,
+    pub slots: usize,
+    pub max_fwd_tokens: usize,
+    pub logit_scale: f64,
+}
+
+impl ModelDims {
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Usable request slots (the last slot is reserved for padding lanes).
+    pub fn user_slots(&self) -> usize {
+        self.slots - 1
+    }
+
+    pub fn trash_slot(&self) -> usize {
+        self.slots - 1
+    }
+
+    pub fn n_params(&self) -> usize {
+        let d = self.d_model;
+        let attn = d * self.n_heads * self.head_dim
+            + 2 * d * self.kv_dim()
+            + self.n_heads * self.head_dim * d;
+        let ffn = 3 * d * self.ffn_hidden;
+        self.n_layers * (attn + ffn + 2 * d) + 2 * self.vocab * d + d
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StateLayout {
+    pub total_floats: usize,
+    pub pool_floats: usize,
+    pub logits_offset: usize,
+    pub logits_rows: usize,
+    pub vocab: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_floats: usize,
+    pub size_floats: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Decode,
+    Window,
+    Extract,
+    MicroGemm,
+    MicroNorm,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub g: usize,
+    pub t: usize,
+    pub strategy: String,
+    pub donates_state: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub state: StateLayout,
+    pub weights: Vec<WeightEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let v = Json::parse(&text)?;
+
+        let m = v.req("model")?;
+        let model = ModelDims {
+            name: m.s("name")?.to_string(),
+            vocab: m.u("vocab")?,
+            d_model: m.u("d_model")?,
+            n_layers: m.u("n_layers")?,
+            n_heads: m.u("n_heads")?,
+            n_kv_heads: m.u("n_kv_heads")?,
+            head_dim: m.u("head_dim")?,
+            ffn_hidden: m.u("ffn_hidden")?,
+            max_seq: m.u("max_seq")?,
+            slots: m.u("slots")?,
+            max_fwd_tokens: m.u("max_fwd_tokens")?,
+            logit_scale: m.f("logit_scale")?,
+        };
+
+        let s = v.req("state")?;
+        let state = StateLayout {
+            total_floats: s.u("total_floats")?,
+            pool_floats: s.u("pool_floats")?,
+            logits_offset: s.u("logits_offset")?,
+            logits_rows: s.u("logits_rows")?,
+            vocab: s.u("vocab")?,
+        };
+
+        let mut weights = Vec::new();
+        for w in v.arr("weights")? {
+            weights.push(WeightEntry {
+                name: w.s("name")?.to_string(),
+                shape: w
+                    .arr("shape")?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                offset_floats: w.u("offset_floats")?,
+                size_floats: w.u("size_floats")?,
+            });
+        }
+
+        let mut artifacts = Vec::new();
+        for a in v.arr("artifacts")? {
+            let kind = match a.s("kind")? {
+                "decode" => ArtifactKind::Decode,
+                "window" => ArtifactKind::Window,
+                "extract" => ArtifactKind::Extract,
+                "micro_gemm" => ArtifactKind::MicroGemm,
+                "micro_norm" => ArtifactKind::MicroNorm,
+                other => return Err(Error::Manifest(format!("unknown kind {other}"))),
+            };
+            artifacts.push(ArtifactEntry {
+                name: a.s("name")?.to_string(),
+                file: a.s("file")?.to_string(),
+                kind,
+                g: a.u("g")?,
+                t: a.u("t")?,
+                strategy: a.s("strategy")?.to_string(),
+                donates_state: a.req("donates_state")?.as_bool().unwrap_or(false),
+            });
+        }
+
+        let man = Manifest { dir, model, state, weights, artifacts };
+        man.validate()?;
+        Ok(man)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let m = &self.model;
+        if self.state.logits_offset != self.state.pool_floats {
+            return Err(Error::Manifest("logits region must follow pool".into()));
+        }
+        let expect_pool = 2 * m.n_layers * m.slots * m.max_seq * m.kv_dim();
+        if self.state.pool_floats != expect_pool {
+            return Err(Error::Manifest(format!(
+                "pool size mismatch: manifest {} vs computed {expect_pool}",
+                self.state.pool_floats
+            )));
+        }
+        let total: usize = self.weights.iter().map(|w| w.size_floats).sum();
+        if total != m.n_params() {
+            return Err(Error::Manifest(format!(
+                "weight table covers {total} params, model has {}",
+                m.n_params()
+            )));
+        }
+        if self.artifact("extract_r1").is_none() {
+            return Err(Error::Manifest("missing extract_r1 artifact".into()));
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifact(name).ok_or_else(|| {
+            Error::Manifest(format!(
+                "artifact '{name}' not in manifest; re-run `make artifacts` \
+                 (or artifacts-ablation for wide window/group grids)"
+            ))
+        })
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Decode buckets present in the manifest, ascending.
+    pub fn decode_buckets(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Decode && a.strategy == "fast")
+            .map(|a| a.g)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Prefill chunk sizes (window artifacts with g == 1), ascending.
+    pub fn prefill_chunks(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Window && a.g == 1)
+            .map(|a| a.t)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Extract row tiers, ascending.
+    pub fn extract_tiers(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Extract)
+            .map(|a| a.g)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Load weights.bin as f32 tensors in manifest order.
+    pub fn load_weights(&self) -> Result<Vec<(WeightEntry, Vec<f32>)>> {
+        let path = self.dir.join("weights.bin");
+        let bytes = std::fs::read(&path)?;
+        let total: usize = self.weights.iter().map(|w| w.size_floats).sum();
+        if bytes.len() != total * 4 {
+            return Err(Error::Manifest(format!(
+                "weights.bin is {} bytes, expected {}",
+                bytes.len(),
+                total * 4
+            )));
+        }
+        let mut out = Vec::with_capacity(self.weights.len());
+        for w in &self.weights {
+            let start = w.offset_floats * 4;
+            let end = start + w.size_floats * 4;
+            let mut v = vec![0f32; w.size_floats];
+            for (i, chunk) in bytes[start..end].chunks_exact(4).enumerate() {
+                v[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            out.push((w.clone(), v));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_dims_derived() {
+        let m = ModelDims {
+            name: "t".into(),
+            vocab: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 16,
+            ffn_hidden: 128,
+            max_seq: 96,
+            slots: 5,
+            max_fwd_tokens: 64,
+            logit_scale: 6.0,
+        };
+        assert_eq!(m.kv_dim(), 32);
+        assert_eq!(m.user_slots(), 4);
+        assert_eq!(m.trash_slot(), 4);
+        // params: per layer attn 64*64+2*64*32+64*64 = 12288; ffn 3*64*128=24576
+        // + norms 128 -> 36992 per layer; x2 + embed/head 2*256*64 + 64
+        assert_eq!(m.n_params(), 2 * 36992 + 2 * 256 * 64 + 64);
+    }
+}

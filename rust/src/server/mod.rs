@@ -1,0 +1,306 @@
+//! JSON-lines-over-TCP serving frontend + client.
+//!
+//! The offline vendor set has no tokio/hyper, so the frontend is a plain
+//! `std::net` threaded server: connection threads parse one JSON request
+//! per line and forward it over an mpsc channel to the single engine
+//! thread (the PJRT client is not `Send`, so the engine owns its thread);
+//! finished outputs are routed back per-request.
+//!
+//! Wire protocol (one JSON object per line):
+//!   -> {"text": "...", "max_new_tokens": 32, "deterministic": true,
+//!       "temperature": 1.0, "seed": 7}           (or "prompt": [ids])
+//!   <- {"id": 3, "tokens": [...], "text": "...", "finish_reason": "eos",
+//!       "ttft_ms": 31.2, "e2e_ms": 410.0, "rollbacks": 0, "recomputed": 0}
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::engine::{Engine, EngineConfig, FinishReason, Request, RequestOutput, StepKind};
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
+
+/// Parse a request line. Needs the tokenizer for `"text"` prompts.
+pub fn parse_request(line: &str, tok: &Tokenizer) -> Result<Request> {
+    let v = Json::parse(line)?;
+    let prompt: Vec<u32> = if let Some(arr) = v.get("prompt").and_then(|p| p.as_arr()) {
+        arr.iter().map(|x| x.as_usize().unwrap_or(0) as u32).collect()
+    } else if let Some(text) = v.get("text").and_then(|t| t.as_str()) {
+        tok.encode(text)
+    } else {
+        return Err(Error::Server("request needs 'prompt' or 'text'".into()));
+    };
+    if prompt.is_empty() {
+        return Err(Error::Server("empty prompt".into()));
+    }
+    Ok(Request {
+        prompt,
+        max_new_tokens: v.get("max_new_tokens").and_then(|x| x.as_usize()).unwrap_or(32),
+        deterministic: v.get("deterministic").and_then(|x| x.as_bool()).unwrap_or(false),
+        temperature: v.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
+        seed: v.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+    })
+}
+
+/// Serialize a finished output.
+pub fn render_output(out: &RequestOutput, tok: &Tokenizer) -> String {
+    Json::obj(vec![
+        ("id", Json::num(out.id as f64)),
+        (
+            "tokens",
+            Json::Arr(out.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("text", Json::str(tok.decode(&out.tokens))),
+        (
+            "finish_reason",
+            Json::str(match out.finish_reason {
+                FinishReason::Eos => "eos",
+                FinishReason::Length => "length",
+            }),
+        ),
+        ("deterministic", Json::Bool(out.deterministic)),
+        ("ttft_ms", Json::num(out.metrics.ttft() * 1000.0)),
+        ("e2e_ms", Json::num(out.metrics.e2e() * 1000.0)),
+        ("rollbacks", Json::num(out.metrics.rollbacks as f64)),
+        ("recomputed", Json::num(out.metrics.recomputed_tokens as f64)),
+    ])
+    .dump()
+}
+
+enum ToEngine {
+    Submit(Request, mpsc::Sender<String>),
+}
+
+/// A running server; `shutdown()` stops the accept loop.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    engine_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and spin up the engine thread.
+    pub fn start(
+        artifacts_dir: String,
+        cfg: EngineConfig,
+        tok: Tokenizer,
+        addr: &str,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<ToEngine>();
+        let tok = Arc::new(tok);
+
+        // engine thread: owns the PJRT client; submits + steps + routes
+        let stop_e = stop.clone();
+        let tok_e = tok.clone();
+        let engine_thread = std::thread::spawn(move || {
+            let run = || -> Result<()> {
+                let mut rt = Runtime::load(&artifacts_dir)?;
+                let mut eng = Engine::new(&mut rt, cfg)?;
+                let mut waiters: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
+                loop {
+                    // drain incoming submissions
+                    while let Ok(ToEngine::Submit(req, reply)) = rx.try_recv() {
+                        match eng.submit(req) {
+                            Ok(id) => {
+                                waiters.insert(id, reply);
+                            }
+                            Err(e) => {
+                                let _ = reply.send(
+                                    Json::obj(vec![("error", Json::str(e.to_string()))]).dump(),
+                                );
+                            }
+                        }
+                    }
+                    let kind = eng.step()?;
+                    for out in eng.take_finished() {
+                        if let Some(reply) = waiters.remove(&out.id) {
+                            let _ = reply.send(render_output(&out, &tok_e));
+                        }
+                    }
+                    if kind == StepKind::Idle {
+                        if stop_e.load(Ordering::Relaxed) {
+                            return Ok(());
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                }
+            };
+            if let Err(e) = run() {
+                eprintln!("engine thread error: {e}");
+            }
+        });
+
+        // accept thread: one handler thread per connection
+        let stop_a = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            while !stop_a.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx = tx.clone();
+                        let tok = tok.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, tx, &tok);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+
+        Ok(Server {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            engine_thread: Some(engine_thread),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.engine_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: mpsc::Sender<ToEngine>,
+    tok: &Tokenizer,
+) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request(&line, tok) {
+            Ok(req) => {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(ToEngine::Submit(req, rtx))
+                    .map_err(|_| Error::Server("engine gone".into()))?;
+                let resp = rrx
+                    .recv()
+                    .map_err(|_| Error::Server("engine dropped reply".into()))?;
+                writeln!(writer, "{resp}")?;
+            }
+            Err(e) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![("error", Json::str(e.to_string()))]).dump()
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Blocking client for the JSON-lines protocol.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send one request object; block for the response.
+    pub fn request(&mut self, body: &Json) -> Result<Json> {
+        writeln!(self.stream, "{}", body.dump())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::FIRST_MERGE;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::train("a b c a b c", FIRST_MERGE as usize + 4).unwrap()
+    }
+
+    #[test]
+    fn parse_token_prompt() {
+        let r = parse_request(
+            r#"{"prompt":[4,5,6],"max_new_tokens":8,"deterministic":true,"seed":3}"#,
+            &tok(),
+        )
+        .unwrap();
+        assert_eq!(r.prompt, vec![4, 5, 6]);
+        assert_eq!(r.max_new_tokens, 8);
+        assert!(r.deterministic);
+        assert_eq!(r.seed, 3);
+        assert_eq!(r.temperature, 0.0);
+    }
+
+    #[test]
+    fn parse_text_prompt() {
+        let t = tok();
+        let r = parse_request(r#"{"text":"a b c"}"#, &t).unwrap();
+        assert_eq!(r.prompt, t.encode("a b c"));
+        assert!(!r.deterministic);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse_request(r#"{"max_new_tokens":4}"#, &tok()).is_err());
+        assert!(parse_request(r#"{"text":""}"#, &tok()).is_err());
+        assert!(parse_request("not json", &tok()).is_err());
+    }
+
+    #[test]
+    fn render_roundtrips_fields() {
+        use crate::engine::metrics::SeqMetrics;
+        let out = RequestOutput {
+            id: 9,
+            deterministic: true,
+            tokens: vec![10, 11],
+            finish_reason: FinishReason::Length,
+            metrics: SeqMetrics {
+                arrive_time: 1.0,
+                first_token_time: 1.1,
+                finish_time: 2.0,
+                rollbacks: 2,
+                recomputed_tokens: 5,
+                ..Default::default()
+            },
+            fast_trace: vec![],
+        };
+        let v = Json::parse(&render_output(&out, &tok())).unwrap();
+        assert_eq!(v.u("id").unwrap(), 9);
+        assert_eq!(v.s("finish_reason").unwrap(), "length");
+        assert_eq!(v.u("rollbacks").unwrap(), 2);
+        assert!((v.f("ttft_ms").unwrap() - 100.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,56 @@
+//! Embedded training corpus for the default tokenizer: a mix of technical
+//! prose (serving-systems flavored, echoing the paper's domain), plain
+//! english, and code-ish text, so merges cover the token distributions the
+//! examples exercise.
+
+pub const CORPUS: &str = r#"
+Large language model inference proceeds in two phases: a prefill phase that
+processes the prompt in parallel and a decode phase that generates one token
+at a time. Dynamic batching groups requests together to keep the accelerator
+busy, but the same request may be co-located with different neighbors across
+runs, and kernels pick different reduction strategies at different batch
+sizes. Floating point addition is not associative, so the same logical dot
+product can produce different low order bits depending on the reduction
+tree. Once a single token flips, autoregressive decoding amplifies the
+difference and the remainder of the output diverges.
+
+Deterministic inference matters for evaluation, auditing, regression testing
+and reproducible research. Batch invariant kernels enforce one universal
+reduction schedule for every token, which guarantees determinism but
+sacrifices the very optimizations that make batching fast: split-K matrix
+multiplication, shape aware tiling, and flash decoding style sequence
+splits. The alternative explored here verifies speculatively decoded tokens
+with a fixed shape replay pass and rolls back the rare mismatches.
+
+The quick brown fox jumps over the lazy dog. Pack my box with five dozen
+liquor jugs. How vexingly quick daft zebras jump! The five boxing wizards
+jump quickly. Sphinx of black quartz, judge my vow. A quart jar of oil mixed
+with zinc oxide makes a very bright paint.
+
+Once upon a time there was a small serving system that wanted to be both
+fast and reproducible. Every morning it accepted requests, batched them
+together, and decoded tokens as quickly as it could. Some requests asked for
+determinism, and for those it replayed a small window of recent tokens under
+a fixed schedule, committing only what it could prove consistent. More than
+half of the requests completed without any rollback at all, and only a small
+fraction required more than one.
+
+fn main() { let config = EngineConfig::default(); let engine = Engine::new(
+&mut runtime, config).unwrap(); for request in requests { engine.submit(
+request).unwrap(); } engine.run_to_completion().unwrap(); }
+
+def forward(state, tokens, slots, start_pos, *weights): h = embed[tokens]
+for layer in range(n_layers): x = rmsnorm(h, w[layer]) q, k, v = project(x)
+h = h + attention(q, k, v) + ffn(x) return logits(h)
+
+the of and to in is that it for as was with be by on not he this are or his
+from at which but have an had they you were her all she there would their we
+him been has when who will no more if out so up said what its about than
+into them can only other time new some could these two may first then do any
+like my now over such our man me even most made after also did many off
+before must well back through years much where your way down should because
+each just those people too mr how little state good very make world still
+see own men work long here get both between life being under never day same
+another know while last might us great old year come since against go came
+right used take three
+"#;

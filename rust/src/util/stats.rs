@@ -1,0 +1,202 @@
+//! Latency/throughput recording: percentile sketches and simple tables.
+
+/// A recorder that keeps raw samples (experiments are small enough that an
+/// exact percentile is affordable and simpler to trust than a sketch).
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile by linear interpolation; p in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let rank = (p / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi.min(n - 1)] * frac
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.samples.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.samples.last().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    /// CDF points (value at each of `k` evenly spaced quantiles), for the
+    /// Fig. 11-style latency CDF outputs.
+    pub fn cdf(&mut self, k: usize) -> Vec<(f64, f64)> {
+        (0..=k)
+            .map(|i| {
+                let q = i as f64 / k as f64;
+                (self.percentile(q * 100.0), q)
+            })
+            .collect()
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Plain-text table printer for experiment harness output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering for machine-readable experiment outputs.
+    pub fn csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact() {
+        let mut r = Recorder::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            r.record(v);
+        }
+        assert_eq!(r.percentile(0.0), 1.0);
+        assert_eq!(r.percentile(50.0), 3.0);
+        assert_eq!(r.percentile(100.0), 5.0);
+        assert_eq!(r.percentile(25.0), 2.0);
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut r = Recorder::new();
+        r.record(0.0);
+        r.record(10.0);
+        assert!((r.percentile(75.0) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut r = Recorder::new();
+        assert!(r.percentile(50.0).is_nan());
+        assert!(r.mean().is_nan());
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut r = Recorder::new();
+        for i in 0..100 {
+            r.record((i * 7 % 100) as f64);
+        }
+        let cdf = r.cdf(10);
+        assert_eq!(cdf.len(), 11);
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "long_header"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("long_header"));
+        assert_eq!(t.csv(), "a,long_header\n1,2\n");
+    }
+}

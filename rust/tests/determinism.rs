@@ -1,0 +1,277 @@
+//! Integration tests for the paper's headline guarantee: a request with
+//! `is_deterministic = true` produces a bitwise-identical token stream on
+//! every run, regardless of co-traffic, while the fast path alone does not.
+//!
+//! Requires `make artifacts` (the tiny-preset artifact set). Each test fn
+//! owns a PJRT client; assertions are grouped to amortize XLA compilation.
+
+use llm42::engine::{Engine, EngineConfig, FaultPlan, Mode, Request};
+use llm42::prelude::*;
+
+fn artifacts_dir() -> String {
+    std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn cfg(mode: Mode) -> EngineConfig {
+    EngineConfig {
+        mode,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 4,
+        eos_token: 1,
+        fault: FaultPlan::None,
+    }
+}
+
+fn det_request(seed: u64) -> Request {
+    Request {
+        prompt: (10..26).collect(),
+        max_new_tokens: 40,
+        deterministic: true,
+        temperature: 1.0,
+        seed,
+    }
+}
+
+fn co_request(seed: u64, len: usize) -> Request {
+    Request {
+        prompt: (30..30 + 12).collect(),
+        max_new_tokens: len,
+        deterministic: false,
+        temperature: 1.0,
+        seed,
+    }
+}
+
+/// Run one deterministic request in llm42 mode surrounded by arbitrary
+/// co-traffic; return its committed tokens (and its fast trace).
+fn run_with_cotraffic(
+    rt: &mut Runtime,
+    mode: Mode,
+    co: &[Request],
+    fault: FaultPlan,
+) -> (Vec<u32>, Vec<u32>, u64, u64) {
+    let mut c = cfg(mode);
+    c.fault = fault;
+    let mut eng = Engine::new(rt, c).unwrap();
+    let det_id = eng.submit(det_request(7)).unwrap();
+    for r in co {
+        eng.submit(r.clone()).unwrap();
+    }
+    eng.run_to_completion().unwrap();
+    let outs = eng.take_finished();
+    let out = outs.iter().find(|o| o.id == det_id).unwrap();
+    (
+        out.tokens.clone(),
+        out.fast_trace.clone(),
+        out.metrics.rollbacks,
+        out.metrics.recomputed_tokens,
+    )
+}
+
+#[test]
+fn deterministic_requests_are_bitwise_reproducible_across_cotraffic() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+
+    // co-traffic patterns that force different bucket trajectories:
+    // solo (bucket 1), two neighbors (bucket 4 ramps), three neighbors
+    let patterns: Vec<Vec<Request>> = vec![
+        vec![],
+        vec![co_request(100, 48), co_request(101, 32)],
+        vec![co_request(200, 16), co_request(201, 64), co_request(202, 40)],
+    ];
+
+    let mut streams = Vec::new();
+    for pat in &patterns {
+        let (tokens, _, _, _) =
+            run_with_cotraffic(&mut rt, Mode::Llm42, pat, FaultPlan::None);
+        assert!(!tokens.is_empty());
+        streams.push(tokens);
+    }
+    // headline guarantee: identical committed output under every pattern
+    assert_eq!(streams[0], streams[1], "solo vs 2-neighbor co-traffic");
+    assert_eq!(streams[0], streams[2], "solo vs 3-neighbor co-traffic");
+
+    // and re-running the same pattern is also identical (same-run control)
+    let (again, _, _, _) =
+        run_with_cotraffic(&mut rt, Mode::Llm42, &patterns[1], FaultPlan::None);
+    assert_eq!(streams[0], again);
+}
+
+#[test]
+fn fast_path_logits_diverge_across_bucket_trajectories() {
+    // The mechanism (paper Fig. 3 / O1): the same token through different
+    // batch buckets takes a different split-K reduction tree, so its
+    // logits are bitwise different. Token-level flips are then a
+    // *statistical* consequence measured by the Fig. 6 harness; here we
+    // assert the deterministic part bitwise.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let vocab = rt.dims().vocab;
+    let trash = (rt.dims().slots - 1) as i32;
+
+    // same token, same slot 0, same position, as lane 0 of bucket 1 vs 4
+    rt.reset_state().unwrap();
+    rt.forward("decode_fast_b1", &[42], &[0], &[0]).unwrap();
+    let l1 = rt.extract_logits(1).unwrap().to_vec();
+
+    rt.reset_state().unwrap();
+    rt.forward(
+        "decode_fast_b4",
+        &[42, 43, 44, 45],
+        &[0, 1, 2, trash],
+        &[0, 0, 0, 0],
+    )
+    .unwrap();
+    let l4 = rt.extract_logits(4).unwrap().to_vec();
+
+    let same_bits = l1[..vocab]
+        .iter()
+        .zip(&l4[..vocab])
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(
+        !same_bits,
+        "bucket-1 and bucket-4 schedules must produce different logits"
+    );
+    // ...but the drift is small: same argmax ordering magnitude-wise
+    let max_diff = l1[..vocab]
+        .iter()
+        .zip(&l4[..vocab])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1.0, "drift should be perturbative, got {max_diff}");
+
+    // per-schedule determinism (O2): re-running bucket 4 is bitwise equal
+    rt.reset_state().unwrap();
+    rt.forward(
+        "decode_fast_b4",
+        &[42, 43, 44, 45],
+        &[0, 1, 2, trash],
+        &[0, 0, 0, 0],
+    )
+    .unwrap();
+    let l4b = rt.extract_logits(4).unwrap().to_vec();
+    assert!(l4
+        .iter()
+        .zip(&l4b)
+        .all(|(a, b)| a.to_bits() == b.to_bits()));
+
+    // control at stream level: identical co-traffic -> identical stream
+    let co = vec![co_request(300, 48)];
+    let (a, _, _, _) =
+        run_with_cotraffic(&mut rt, Mode::NonDeterministic, &co, FaultPlan::None);
+    let (b, _, _, _) =
+        run_with_cotraffic(&mut rt, Mode::NonDeterministic, &co, FaultPlan::None);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn llm42_output_matches_batch_invariant_reference() {
+    // Both enforce determinism; they must agree with THEMSELVES across
+    // runs. (They need not agree with each other: the verifier's fixed
+    // schedule and the batch-invariant schedule are different fixed
+    // schedules — determinism is per-system, as in the paper.)
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let (inv_a, _, _, _) =
+        run_with_cotraffic(&mut rt, Mode::BatchInvariant, &[], FaultPlan::None);
+    let co = vec![co_request(400, 32)];
+    let (inv_b, _, _, _) =
+        run_with_cotraffic(&mut rt, Mode::BatchInvariant, &co, FaultPlan::None);
+    assert_eq!(inv_a, inv_b, "batch-invariant mode must be batch-insensitive");
+}
+
+#[test]
+fn forced_rollbacks_preserve_output_and_forward_progress() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+
+    let (clean, _, rb_clean, _) =
+        run_with_cotraffic(&mut rt, Mode::Llm42, &[], FaultPlan::None);
+
+    // fault injection: every verification lane reports a mismatch at the
+    // first window position -> maximum rollback pressure
+    let (faulted, _, rb_fault, recomputed) = run_with_cotraffic(
+        &mut rt,
+        Mode::Llm42,
+        &[],
+        FaultPlan::EveryNthLane { every: 1, at_index: 0 },
+    );
+    assert!(rb_fault > rb_clean, "fault injection must trigger rollbacks");
+    assert!(recomputed > 0);
+    // the committed stream still comes from the verifier's deterministic
+    // replay, so the output is unchanged — rollbacks cost work, not truth
+    assert_eq!(clean, faulted);
+}
+
+#[test]
+fn eos_and_length_edges_respect_limits() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut eng = Engine::new(&mut rt, cfg(Mode::Llm42)).unwrap();
+
+    // max_new_tokens = 1: prefill commits the only token
+    let id1 = eng
+        .submit(Request {
+            prompt: (10..20).collect(),
+            max_new_tokens: 1,
+            deterministic: true,
+            temperature: 0.0,
+            seed: 0,
+        })
+        .unwrap();
+    // a deterministic request that stops mid-window
+    let id2 = eng
+        .submit(Request {
+            prompt: (40..56).collect(),
+            max_new_tokens: 5,
+            deterministic: true,
+            temperature: 1.0,
+            seed: 9,
+        })
+        .unwrap();
+    eng.run_to_completion().unwrap();
+    let outs = eng.take_finished();
+    let o1 = outs.iter().find(|o| o.id == id1).unwrap();
+    let o2 = outs.iter().find(|o| o.id == id2).unwrap();
+    assert_eq!(o1.tokens.len(), 1);
+    assert!(o2.tokens.len() <= 5);
+    assert!(!o2.tokens.is_empty());
+
+    // oversized requests are rejected up front
+    let too_big = Request {
+        prompt: vec![5; 600],
+        max_new_tokens: 100,
+        deterministic: true,
+        temperature: 0.0,
+        seed: 0,
+    };
+    assert!(eng.submit(too_big).is_err());
+    // out-of-vocab prompt rejected
+    let bad = Request {
+        prompt: vec![1_000_000],
+        max_new_tokens: 4,
+        deterministic: false,
+        temperature: 0.0,
+        seed: 0,
+    };
+    assert!(eng.submit(bad).is_err());
+}
+
+#[test]
+fn greedy_zero_temperature_is_deterministic_even_without_dvr() {
+    // a sanity baseline: greedy + identical batching reproduces exactly
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let req = Request {
+        prompt: (10..26).collect(),
+        max_new_tokens: 24,
+        deterministic: false,
+        temperature: 0.0,
+        seed: 0,
+    };
+    let mut run = |rt: &mut Runtime| {
+        let mut eng = Engine::new(rt, cfg(Mode::NonDeterministic)).unwrap();
+        eng.submit(req.clone()).unwrap();
+        eng.run_to_completion().unwrap();
+        eng.take_finished().pop().unwrap().tokens
+    };
+    let a = run(&mut rt);
+    let b = run(&mut rt);
+    assert_eq!(a, b);
+}

@@ -1,0 +1,84 @@
+//! Server integration: JSON-lines protocol over a real TCP socket, with
+//! the engine thread serving a live model.
+
+use llm42::engine::{EngineConfig, Mode};
+use llm42::server::{Client, Server};
+use llm42::tokenizer::{Tokenizer, FIRST_MERGE};
+use llm42::util::json::Json;
+
+fn artifacts_dir() -> String {
+    std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+#[test]
+fn serve_roundtrip_mixed_clients() {
+    let tok = Tokenizer::default_trained(FIRST_MERGE as usize + 64).unwrap();
+    let cfg = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        ..Default::default()
+    };
+    let server =
+        Server::start(artifacts_dir(), cfg, tok, "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+
+    // deterministic request by token ids
+    let mut c1 = Client::connect(&addr).unwrap();
+    let req = Json::parse(
+        r#"{"prompt": [10,11,12,13,14,15], "max_new_tokens": 12,
+            "deterministic": true, "temperature": 1.0, "seed": 5}"#,
+    )
+    .unwrap();
+    let resp = c1.request(&req).unwrap();
+    assert!(resp.get("error").is_none(), "{resp:?}");
+    let tokens_a: Vec<usize> = resp
+        .arr("tokens")
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap())
+        .collect();
+    assert!(!tokens_a.is_empty() && tokens_a.len() <= 12);
+    assert!(resp.f("ttft_ms").unwrap() >= 0.0);
+    assert!(resp.req("deterministic").unwrap().as_bool().unwrap());
+
+    // text request on a second connection
+    let mut c2 = Client::connect(&addr).unwrap();
+    let req2 = Json::parse(
+        r#"{"text": "the quick brown fox", "max_new_tokens": 8}"#,
+    )
+    .unwrap();
+    let resp2 = c2.request(&req2).unwrap();
+    assert!(resp2.get("error").is_none(), "{resp2:?}");
+    assert!(resp2.get("text").is_some());
+
+    // same deterministic request again: bitwise-identical tokens
+    let resp3 = c1.request(&req).unwrap();
+    let tokens_b: Vec<usize> = resp3
+        .arr("tokens")
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap())
+        .collect();
+    assert_eq!(tokens_a, tokens_b, "server must honor the determinism flag");
+
+    // malformed and invalid requests produce error objects, not hangs
+    let bad = c1
+        .request(&Json::parse(r#"{"max_new_tokens": 4}"#).unwrap())
+        .unwrap();
+    assert!(bad.get("error").is_some());
+    let oversized = c1
+        .request(
+            &Json::obj(vec![
+                (
+                    "prompt",
+                    Json::Arr((0..700).map(|_| Json::num(5.0)).collect()),
+                ),
+                ("max_new_tokens", Json::num(10.0)),
+            ]),
+        )
+        .unwrap();
+    assert!(oversized.get("error").is_some());
+
+    server.shutdown();
+}
