@@ -1,0 +1,22 @@
+# Build entry points. The real AOT path (python/compile, JAX + PJRT) is
+# unavailable in the offline image; `artifacts` uses the rust generator,
+# which emits the simulator descriptor format (see rust/src/aot.rs).
+
+CARGO ?= cargo
+
+.PHONY: artifacts artifacts-test build test fmt-check
+
+artifacts:
+	cd rust && $(CARGO) run --release -- gen-artifacts --out artifacts --preset tiny
+
+artifacts-test:
+	cd rust && $(CARGO) run --release -- gen-artifacts --out artifacts --preset test
+
+build:
+	cd rust && $(CARGO) build --release
+
+test:
+	cd rust && $(CARGO) test -q
+
+fmt-check:
+	cd rust && $(CARGO) fmt --check

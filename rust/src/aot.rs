@@ -1,0 +1,507 @@
+//! Offline artifact generation (the rust twin of `python/compile/aot.py`).
+//!
+//! The python AOT pipeline lowers the L2 jax graphs to HLO text and needs a
+//! JAX + PJRT toolchain that the offline image does not carry. This module
+//! emits the same *artifact contract* — `manifest.json`, `weights.bin`, and
+//! one descriptor file per compiled graph — in the compact key/value format
+//! the vendored `xla` simulator executes (see `rust/vendor/xla`). The
+//! manifest layout, weight table order (`model.py::WEIGHT_SPEC`), state
+//! layout, and reduction-schedule tables (`config.py::*_SPLITS_BY_BUCKET`)
+//! are mirrored field-for-field, so a real-PJRT artifact set and a
+//! simulator artifact set are interchangeable from the engine's view.
+//!
+//! Entry points: `llm42 gen-artifacts --out DIR --preset test|tiny` from
+//! the CLI, or [`ensure`] which lazily generates the fast `test` preset
+//! (used by integration tests and benches to self-bootstrap).
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// Model preset (mirrors `python/compile/config.py::PRESETS`). The `test`
+/// preset here carries a larger `max_seq`/`max_fwd_tokens` than the python
+/// one so that the default verification geometry (G=8, T=32) and the
+/// property-test workloads fit a slot.
+#[derive(Debug, Clone)]
+pub struct Preset {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_hidden: usize,
+    pub max_seq: usize,
+    pub slots: usize,
+    pub max_fwd_tokens: usize,
+    pub logit_scale: f64,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+    pub seed: u64,
+    pub decode_buckets: &'static [usize],
+}
+
+impl Preset {
+    pub fn by_name(name: &str) -> Result<Preset> {
+        match name {
+            "test" => Ok(Preset {
+                name: "test",
+                // large enough for the byte-BPE tokenizer (>= 259 byte ids)
+                vocab: 512,
+                d_model: 64,
+                n_layers: 2,
+                n_heads: 4,
+                n_kv_heads: 2,
+                head_dim: 16,
+                ffn_hidden: 128,
+                max_seq: 160,
+                slots: 5,
+                max_fwd_tokens: 256,
+                logit_scale: 6.0,
+                rope_theta: 10000.0,
+                rms_eps: 1e-5,
+                seed: 42,
+                decode_buckets: &[1, 2, 4, 8],
+            }),
+            "tiny" => Ok(Preset {
+                name: "tiny",
+                vocab: 2048,
+                d_model: 256,
+                n_layers: 4,
+                n_heads: 8,
+                n_kv_heads: 4,
+                head_dim: 32,
+                ffn_hidden: 704,
+                max_seq: 640,
+                slots: 17,
+                max_fwd_tokens: 512,
+                logit_scale: 6.0,
+                rope_theta: 10000.0,
+                rms_eps: 1e-5,
+                seed: 42,
+                decode_buckets: &[1, 2, 4, 8, 16],
+            }),
+            other => Err(Error::Config(format!(
+                "unknown artifact preset '{other}' (test | tiny)"
+            ))),
+        }
+    }
+
+    fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    fn pool_floats(&self) -> usize {
+        2 * self.n_layers * self.slots * self.max_seq * self.kv_dim()
+    }
+}
+
+/// Fast-path reduction-strategy heuristics keyed by decode bucket; mirrors
+/// `config.py`. More split-K parallelism at low batch, none at high batch.
+fn ffn_splits(bucket: usize) -> usize {
+    match bucket {
+        1 | 2 => 8,
+        4 => 4,
+        8 => 2,
+        _ => 1,
+    }
+}
+
+fn attn_ksplits(bucket: usize) -> usize {
+    match bucket {
+        1 | 2 => 4,
+        4 | 8 => 2,
+        _ => 1,
+    }
+}
+
+fn norm_splits(bucket: usize) -> usize {
+    attn_ksplits(bucket)
+}
+
+/// Weight tensor order and shapes (mirrors `model.py::WEIGHT_SPEC`).
+fn weight_spec(p: &Preset) -> Vec<(&'static str, Vec<usize>)> {
+    vec![
+        ("embed", vec![p.vocab, p.d_model]),
+        ("wq", vec![p.n_layers, p.d_model, p.q_dim()]),
+        ("wk", vec![p.n_layers, p.d_model, p.kv_dim()]),
+        ("wv", vec![p.n_layers, p.d_model, p.kv_dim()]),
+        ("wo", vec![p.n_layers, p.q_dim(), p.d_model]),
+        ("attn_norm", vec![p.n_layers, p.d_model]),
+        ("ffn_norm", vec![p.n_layers, p.d_model]),
+        ("w_gate", vec![p.n_layers, p.d_model, p.ffn_hidden]),
+        ("w_up", vec![p.n_layers, p.d_model, p.ffn_hidden]),
+        ("w_down", vec![p.n_layers, p.ffn_hidden, p.d_model]),
+        ("final_norm", vec![p.d_model]),
+        ("lm_head", vec![p.d_model, p.vocab]),
+    ]
+}
+
+struct ArtifactDef {
+    name: String,
+    kind: &'static str,
+    g: usize,
+    t: usize,
+    strategy: &'static str,
+    /// descriptor body lines beyond the common header
+    extra: Vec<(String, String)>,
+}
+
+fn dims_lines(p: &Preset) -> Vec<(String, String)> {
+    vec![
+        ("vocab".into(), p.vocab.to_string()),
+        ("d_model".into(), p.d_model.to_string()),
+        ("n_layers".into(), p.n_layers.to_string()),
+        ("n_heads".into(), p.n_heads.to_string()),
+        ("n_kv_heads".into(), p.n_kv_heads.to_string()),
+        ("head_dim".into(), p.head_dim.to_string()),
+        ("ffn_hidden".into(), p.ffn_hidden.to_string()),
+        ("max_seq".into(), p.max_seq.to_string()),
+        ("slots".into(), p.slots.to_string()),
+        ("max_fwd_tokens".into(), p.max_fwd_tokens.to_string()),
+        ("logit_scale".into(), p.logit_scale.to_string()),
+        ("rope_theta".into(), p.rope_theta.to_string()),
+        ("rms_eps".into(), p.rms_eps.to_string()),
+    ]
+}
+
+fn forward_def(
+    p: &Preset,
+    name: String,
+    kind: &'static str,
+    g: usize,
+    t: usize,
+    strategy: &'static str,
+    bucket_for_splits: Option<usize>,
+) -> ArtifactDef {
+    let mut extra: Vec<(String, String)> = vec![
+        ("op".into(), "forward".into()),
+        ("g".into(), g.to_string()),
+        ("t".into(), t.to_string()),
+        ("strategy".into(), strategy.into()),
+        ("seq_chunks".into(), "8".into()),
+        ("partial".into(), "bf16".into()),
+    ];
+    if let Some(b) = bucket_for_splits {
+        extra.push(("ffn_splits".into(), ffn_splits(b).to_string()));
+        extra.push(("head_splits".into(), ffn_splits(b).to_string()));
+        extra.push(("attn_ksplits".into(), attn_ksplits(b).to_string()));
+        extra.push(("norm_splits".into(), norm_splits(b).to_string()));
+    }
+    extra.extend(dims_lines(p));
+    ArtifactDef { name, kind, g, t, strategy, extra }
+}
+
+fn artifact_defs(p: &Preset) -> Vec<ArtifactDef> {
+    let mut defs = Vec::new();
+
+    // decode graphs per bucket: shape-tuned fast schedule + the universal
+    // invariant schedule
+    for &b in p.decode_buckets {
+        defs.push(forward_def(
+            p,
+            format!("decode_fast_b{b}"),
+            "decode",
+            b,
+            1,
+            "fast",
+            Some(b),
+        ));
+        defs.push(forward_def(
+            p,
+            format!("decode_inv_b{b}"),
+            "decode",
+            b,
+            1,
+            "inv",
+            None,
+        ));
+    }
+
+    // window graphs (prefill chunks at g=1, grouped verification at g>1);
+    // always the invariant schedule
+    for &g in &[1usize, 2, 4, 8] {
+        for &t in &[8usize, 16, 32, 64] {
+            if g * t > p.max_fwd_tokens {
+                continue;
+            }
+            defs.push(forward_def(
+                p,
+                format!("window_inv_g{g}_t{t}"),
+                "window",
+                g,
+                t,
+                "inv",
+                None,
+            ));
+        }
+    }
+
+    // logits extraction tiers (powers of two up to the region size)
+    let mut r = 1usize;
+    while r <= p.max_fwd_tokens {
+        defs.push(ArtifactDef {
+            name: format!("extract_r{r}"),
+            kind: "extract",
+            g: r,
+            t: 1,
+            strategy: "inv",
+            extra: {
+                let mut e: Vec<(String, String)> = vec![
+                    ("op".into(), "extract".into()),
+                    ("rows".into(), r.to_string()),
+                ];
+                e.extend(dims_lines(p));
+                e
+            },
+        });
+        r *= 2;
+    }
+
+    // micro kernels for Fig. 4 / Table 2 (x is [m, ffn_hidden] against
+    // [ffn_hidden, d_model]; rmsnorm rows are [m, d_model])
+    for &m in &[1usize, 4, 16] {
+        let gemm_ns = ffn_splits(m);
+        defs.push(ArtifactDef {
+            name: format!("gemm_fast_m{m}"),
+            kind: "micro_gemm",
+            g: m,
+            t: 1,
+            strategy: "fast",
+            extra: vec![
+                ("op".into(), "micro_gemm".into()),
+                ("nsplits".into(), gemm_ns.to_string()),
+                ("strategy".into(), "fast".into()),
+                ("partial".into(), "bf16".into()),
+                ("rms_eps".into(), p.rms_eps.to_string()),
+            ],
+        });
+        defs.push(ArtifactDef {
+            name: format!("gemm_inv_m{m}"),
+            kind: "micro_gemm",
+            g: m,
+            t: 1,
+            strategy: "inv",
+            extra: vec![
+                ("op".into(), "micro_gemm".into()),
+                ("nsplits".into(), "1".into()),
+                ("strategy".into(), "inv".into()),
+                ("seq_chunks".into(), "8".into()),
+                ("rms_eps".into(), p.rms_eps.to_string()),
+            ],
+        });
+        defs.push(ArtifactDef {
+            name: format!("rmsnorm_fast_m{m}"),
+            kind: "micro_norm",
+            g: m,
+            t: 1,
+            strategy: "fast",
+            extra: vec![
+                ("op".into(), "micro_norm".into()),
+                ("nsplits".into(), norm_splits(m).to_string()),
+                ("strategy".into(), "fast".into()),
+                ("rms_eps".into(), p.rms_eps.to_string()),
+            ],
+        });
+        defs.push(ArtifactDef {
+            name: format!("rmsnorm_inv_m{m}"),
+            kind: "micro_norm",
+            g: m,
+            t: 1,
+            strategy: "inv",
+            extra: vec![
+                ("op".into(), "micro_norm".into()),
+                ("nsplits".into(), "1".into()),
+                ("strategy".into(), "inv".into()),
+                ("rms_eps".into(), p.rms_eps.to_string()),
+            ],
+        });
+    }
+
+    defs
+}
+
+/// Synthetic weights, fixed seed (`model.py::init_weights`): norm weights
+/// are ones; everything else is normal with std 1/sqrt(fan_in).
+fn generate_weights(p: &Preset) -> (Vec<u8>, Vec<Json>) {
+    let spec = weight_spec(p);
+    let mut rng = SplitMix64::new(p.seed);
+    let mut bytes: Vec<u8> = Vec::new();
+    let mut entries: Vec<Json> = Vec::new();
+    let mut offset = 0usize;
+    for (name, shape) in &spec {
+        let size: usize = shape.iter().product();
+        if name.contains("norm") {
+            for _ in 0..size {
+                bytes.extend_from_slice(&1.0f32.to_le_bytes());
+            }
+        } else {
+            let fan_in = if shape.len() >= 2 {
+                shape[shape.len() - 2]
+            } else {
+                shape[shape.len() - 1]
+            };
+            let std = 1.0 / (fan_in as f64).sqrt();
+            for _ in 0..size {
+                let v = (rng.normal() * std) as f32;
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        entries.push(Json::obj(vec![
+            ("name", Json::str(*name)),
+            (
+                "shape",
+                Json::Arr(shape.iter().map(|&s| Json::num(s as f64)).collect()),
+            ),
+            ("offset_floats", Json::num(offset as f64)),
+            ("size_floats", Json::num(size as f64)),
+        ]));
+        offset += size;
+    }
+    (bytes, entries)
+}
+
+/// Emit a full artifact set into `dir` (created if missing).
+pub fn generate(dir: impl AsRef<Path>, preset_name: &str) -> Result<()> {
+    let p = Preset::by_name(preset_name)?;
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+
+    let (weight_bytes, weight_entries) = generate_weights(&p);
+    std::fs::write(dir.join("weights.bin"), &weight_bytes)?;
+
+    let defs = artifact_defs(&p);
+    let mut artifact_entries: Vec<Json> = Vec::new();
+    for def in &defs {
+        let file = format!("{}.hlo", def.name);
+        let mut text = String::from("llm42-sim v1\n");
+        for (k, v) in &def.extra {
+            text.push_str(k);
+            text.push(' ');
+            text.push_str(v);
+            text.push('\n');
+        }
+        std::fs::write(dir.join(&file), text)?;
+        artifact_entries.push(Json::obj(vec![
+            ("name", Json::str(def.name.clone())),
+            ("file", Json::str(file)),
+            ("kind", Json::str(def.kind)),
+            ("g", Json::num(def.g as f64)),
+            ("t", Json::num(def.t as f64)),
+            ("strategy", Json::str(def.strategy)),
+            ("donates_state", Json::Bool(def.kind == "decode" || def.kind == "window")),
+        ]));
+    }
+
+    let pool = p.pool_floats();
+    let manifest = Json::obj(vec![
+        (
+            "model",
+            Json::obj(vec![
+                ("name", Json::str(p.name)),
+                ("vocab", Json::num(p.vocab as f64)),
+                ("d_model", Json::num(p.d_model as f64)),
+                ("n_layers", Json::num(p.n_layers as f64)),
+                ("n_heads", Json::num(p.n_heads as f64)),
+                ("n_kv_heads", Json::num(p.n_kv_heads as f64)),
+                ("head_dim", Json::num(p.head_dim as f64)),
+                ("ffn_hidden", Json::num(p.ffn_hidden as f64)),
+                ("max_seq", Json::num(p.max_seq as f64)),
+                ("slots", Json::num(p.slots as f64)),
+                ("max_fwd_tokens", Json::num(p.max_fwd_tokens as f64)),
+                ("logit_scale", Json::num(p.logit_scale)),
+            ]),
+        ),
+        (
+            "state",
+            Json::obj(vec![
+                (
+                    "total_floats",
+                    Json::num((pool + p.max_fwd_tokens * p.vocab) as f64),
+                ),
+                ("pool_floats", Json::num(pool as f64)),
+                ("logits_offset", Json::num(pool as f64)),
+                ("logits_rows", Json::num(p.max_fwd_tokens as f64)),
+                ("vocab", Json::num(p.vocab as f64)),
+            ]),
+        ),
+        ("weights", Json::Arr(weight_entries)),
+        ("artifacts", Json::Arr(artifact_entries)),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.dump())?;
+    Ok(())
+}
+
+static ENSURE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Generate the `test` preset into `dir` if no manifest is present. Safe
+/// to call concurrently from test threads; cross-process races are handled
+/// by generating into a temp dir and renaming it into place.
+pub fn ensure(dir: &str) -> Result<()> {
+    let _guard = ENSURE_LOCK.lock().map_err(|_| {
+        Error::Engine("artifact ensure lock poisoned".into())
+    })?;
+    let manifest = Path::new(dir).join("manifest.json");
+    if manifest.exists() {
+        return Ok(());
+    }
+    let tmp = format!("{dir}.tmp{}", std::process::id());
+    let _ = std::fs::remove_dir_all(&tmp);
+    generate(&tmp, "test")?;
+    match std::fs::rename(&tmp, dir) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_dir_all(&tmp);
+            if manifest.exists() {
+                // another process won the race with a complete set
+                Ok(())
+            } else if Path::new(dir).exists() {
+                // target dir exists but is incomplete: fill it in place
+                generate(dir, "test")
+            } else {
+                Err(Error::Io(e))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_preset_generates_a_loadable_manifest() {
+        let dir = std::env::temp_dir().join(format!("llm42-aot-test-{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        generate(&dir, "test").unwrap();
+        let man = crate::manifest::Manifest::load(&dir).unwrap();
+        assert_eq!(man.model.name, "test");
+        assert_eq!(man.decode_buckets(), vec![1, 2, 4, 8]);
+        assert_eq!(man.prefill_chunks(), vec![8, 16, 32, 64]);
+        assert!(man.extract_tiers().contains(&256));
+        assert!(man.artifact("window_inv_g8_t32").is_some());
+        assert!(man.artifact("gemm_fast_m1").is_some());
+        // weight table covers the model exactly (validated by load, but
+        // assert the file size too)
+        let total: usize = man.weights.iter().map(|w| w.size_floats).sum();
+        let bytes = std::fs::metadata(std::path::Path::new(&dir).join("weights.bin"))
+            .unwrap()
+            .len() as usize;
+        assert_eq!(bytes, total * 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_preset_rejected() {
+        assert!(Preset::by_name("huge").is_err());
+    }
+}

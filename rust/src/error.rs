@@ -1,35 +1,55 @@
 //! Error type shared across the llm42 library.
+//!
+//! Hand-rolled `Display`/`Error` impls: the offline vendor set has no
+//! proc-macro crates (thiserror), and the surface is small enough that the
+//! derive would save little.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla/pjrt error: {0}")]
     Xla(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("json parse error at byte {pos}: {msg}")]
+    Io(std::io::Error),
     Json { pos: usize, msg: String },
-
-    #[error("manifest error: {0}")]
     Manifest(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("engine error: {0}")]
     Engine(String),
-
-    #[error("capacity: {0}")]
     Capacity(String),
-
-    #[error("tokenizer error: {0}")]
     Tokenizer(String),
-
-    #[error("server error: {0}")]
     Server(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla/pjrt error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Engine(m) => write!(f, "engine error: {m}"),
+            Error::Capacity(m) => write!(f, "capacity: {m}"),
+            Error::Tokenizer(m) => write!(f, "tokenizer error: {m}"),
+            Error::Server(m) => write!(f, "server error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

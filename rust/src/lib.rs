@@ -26,6 +26,7 @@
 //! }
 //! ```
 
+pub mod aot;
 pub mod collective;
 pub mod config;
 pub mod engine;

@@ -18,6 +18,7 @@ USAGE:
   llm42 offline      [--profile sharegpt|arxiv] [--requests 64] [--det-ratio 0.1]
                      [--mode nondet|batch-invariant|llm42] [--qps Q] [--temp 1.0]
   llm42 experiments  <fig4|fig5|fig6|fig9|fig10|fig11|fig12|table2|all> [opts]
+  llm42 gen-artifacts [--out artifacts] [--preset test|tiny]
   llm42 info         [--artifacts artifacts]
 
 COMMON:
@@ -89,6 +90,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             Ok(())
         }
         "experiments" => experiments::dispatch(args, &artifacts),
+        "gen-artifacts" => {
+            let out = args.str_or("out", "artifacts");
+            let preset = args.str_or("preset", "tiny");
+            llm42::aot::generate(&out, &preset)?;
+            println!("wrote {preset} artifact set to {out}/");
+            Ok(())
+        }
         "info" => {
             let man = Manifest::load(&artifacts)?;
             println!(

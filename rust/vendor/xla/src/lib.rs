@@ -1,0 +1,956 @@
+//! Deterministic CPU PJRT simulator — the offline stand-in for the real
+//! `xla` crate (PJRT C API bindings).
+//!
+//! The build image for this repo carries no XLA/PJRT runtime and no JAX, so
+//! the AOT pipeline in `python/compile/` cannot be executed here. This crate
+//! keeps the engine's *runtime contract* intact by re-implementing the small
+//! API surface `llm42::runtime` uses (`HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → `execute_b`)
+//! against a pure-Rust interpreter of the same forward computation the
+//! python pipeline lowers to HLO (`python/compile/model.py`).
+//!
+//! "Artifacts" consumed by this simulator are compact key/value descriptor
+//! files emitted by `llm42 gen-artifacts` (see `llm42::aot`) instead of HLO
+//! text; they pin the model dimensions and the *reduction schedule* of each
+//! graph. The properties the paper's experiments rely on are preserved
+//! bit-for-bit by construction:
+//!
+//! * **Per-schedule determinism (O2):** every kernel here is a fixed
+//!   sequential f32 loop — re-running the same artifact on the same inputs
+//!   is bitwise identical.
+//! * **Schedule sensitivity (O1, Fig. 3):** fast-path GEMMs/norms use a
+//!   split-K reduction whose split count varies with the batch bucket, with
+//!   cross-split partials rounded to bf16 before a fixed pairwise combine
+//!   tree — mirroring `python/compile/kernels/splitk_matmul.py`. Different
+//!   buckets therefore produce bitwise-different (but numerically close)
+//!   logits for the same token.
+//! * **Lane/position invariance (O3):** lanes are computed independently and
+//!   interact only through disjoint KV slots, so a lane's result does not
+//!   depend on its position in the batch or on other lanes' contents.
+//! * **Batch invariance of the universal schedule:** `inv` artifacts use
+//!   split count 1 / fixed sequential K-chunks regardless of shape.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::rc::Rc;
+
+// ----------------------------------------------------------------- errors
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+// ------------------------------------------------------------- descriptor
+
+/// Model dimensions as pinned by the artifact descriptor (mirrors
+/// `python/compile/config.py::ModelConfig`).
+#[derive(Debug, Clone, Default)]
+struct Dims {
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+    ffn_hidden: usize,
+    max_seq: usize,
+    slots: usize,
+    max_fwd_tokens: usize,
+    logit_scale: f32,
+    rope_theta: f32,
+    rms_eps: f32,
+}
+
+impl Dims {
+    fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    fn pool_floats(&self) -> usize {
+        2 * self.n_layers * self.slots * self.max_seq * self.kv_dim()
+    }
+
+    fn logits_offset(&self) -> usize {
+        self.pool_floats()
+    }
+
+    /// Flat-state float offset of pool[which][layer][slot][pos][0].
+    fn kv_offset(&self, which: usize, layer: usize, slot: usize, pos: usize) -> usize {
+        let per_pool = self.n_layers * self.slots * self.max_seq * self.kv_dim();
+        let per_layer = self.slots * self.max_seq * self.kv_dim();
+        let per_slot = self.max_seq * self.kv_dim();
+        which * per_pool + layer * per_layer + slot * per_slot + pos * self.kv_dim()
+    }
+}
+
+/// The reduction schedule of one compiled graph (mirrors
+/// `python/compile/config.py::Strategy`).
+#[derive(Debug, Clone)]
+struct Schedule {
+    /// "fast" | "inv"
+    kind: String,
+    ffn_splits: usize,
+    head_splits: usize,
+    attn_ksplits: usize,
+    norm_splits: usize,
+    /// invariant mode: sequential K chunks in GEMMs
+    seq_chunks: usize,
+    /// round cross-split partials to bf16 (the drift source)
+    bf16_partials: bool,
+}
+
+impl Default for Schedule {
+    fn default() -> Self {
+        Schedule {
+            kind: "inv".into(),
+            ffn_splits: 1,
+            head_splits: 1,
+            attn_ksplits: 1,
+            norm_splits: 1,
+            seq_chunks: 8,
+            bf16_partials: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Op {
+    /// Transformer forward over g lanes x t tokens (decode/verify/prefill).
+    Forward { g: usize, t: usize },
+    /// Slice the first `rows` logits rows off the state.
+    Extract { rows: usize },
+    /// Standalone GEMM micro-kernel: x [m,k] @ w [k,n].
+    MicroGemm { nsplits: usize },
+    /// Standalone RMSNorm micro-kernel: x [m,d], w [d].
+    MicroNorm { nsplits: usize },
+}
+
+#[derive(Debug, Clone)]
+struct Descriptor {
+    op: Op,
+    sched: Schedule,
+    dims: Dims,
+}
+
+const MAGIC: &str = "llm42-sim v1";
+
+fn parse_descriptor(text: &str) -> Result<Descriptor> {
+    let mut lines = text.lines();
+    match lines.next() {
+        Some(l) if l.trim() == MAGIC => {}
+        other => {
+            return err(format!(
+                "not a {MAGIC} artifact (first line: {other:?}); \
+                 re-run `llm42 gen-artifacts`"
+            ))
+        }
+    }
+    let mut kv: HashMap<String, String> = HashMap::new();
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = match line.split_once(' ') {
+            Some(p) => p,
+            None => return err(format!("bad descriptor line: '{line}'")),
+        };
+        kv.insert(k.to_string(), v.trim().to_string());
+    }
+    let get_usize = |k: &str| -> Result<usize> {
+        kv.get(k)
+            .ok_or_else(|| Error(format!("descriptor missing '{k}'")))?
+            .parse()
+            .map_err(|_| Error(format!("descriptor field '{k}' not an integer")))
+    };
+    let get_f32 = |k: &str| -> Result<f32> {
+        kv.get(k)
+            .ok_or_else(|| Error(format!("descriptor missing '{k}'")))?
+            .parse()
+            .map_err(|_| Error(format!("descriptor field '{k}' not a number")))
+    };
+    let opt_usize = |k: &str, d: usize| -> Result<usize> {
+        match kv.get(k) {
+            None => Ok(d),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error(format!("descriptor field '{k}' not an integer"))),
+        }
+    };
+
+    let op_name = kv
+        .get("op")
+        .ok_or_else(|| Error("descriptor missing 'op'".into()))?
+        .clone();
+    let op = match op_name.as_str() {
+        "forward" => Op::Forward { g: get_usize("g")?, t: get_usize("t")? },
+        "extract" => Op::Extract { rows: get_usize("rows")? },
+        "micro_gemm" => Op::MicroGemm { nsplits: get_usize("nsplits")? },
+        "micro_norm" => Op::MicroNorm { nsplits: get_usize("nsplits")? },
+        other => return err(format!("unknown descriptor op '{other}'")),
+    };
+
+    let kind = kv.get("strategy").cloned().unwrap_or_else(|| "inv".into());
+    let sched = Schedule {
+        kind: kind.clone(),
+        ffn_splits: opt_usize("ffn_splits", 1)?,
+        head_splits: opt_usize("head_splits", 1)?,
+        attn_ksplits: opt_usize("attn_ksplits", 1)?,
+        norm_splits: opt_usize("norm_splits", 1)?,
+        seq_chunks: opt_usize("seq_chunks", 8)?,
+        bf16_partials: kv.get("partial").map(|p| p == "bf16").unwrap_or(true),
+    };
+
+    let dims = if matches!(op, Op::Forward { .. } | Op::Extract { .. }) {
+        Dims {
+            vocab: get_usize("vocab")?,
+            d_model: get_usize("d_model")?,
+            n_layers: get_usize("n_layers")?,
+            n_heads: get_usize("n_heads")?,
+            n_kv_heads: get_usize("n_kv_heads")?,
+            head_dim: get_usize("head_dim")?,
+            ffn_hidden: get_usize("ffn_hidden")?,
+            max_seq: get_usize("max_seq")?,
+            slots: get_usize("slots")?,
+            max_fwd_tokens: get_usize("max_fwd_tokens")?,
+            logit_scale: get_f32("logit_scale")?,
+            rope_theta: get_f32("rope_theta")?,
+            rms_eps: get_f32("rms_eps")?,
+        }
+    } else {
+        let mut d = Dims::default();
+        d.rms_eps = get_f32("rms_eps").unwrap_or(1e-5);
+        d
+    };
+
+    Ok(Descriptor { op, sched, dims })
+}
+
+// ------------------------------------------------------------ public API
+
+pub struct HloModuleProto {
+    desc: Descriptor,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("cannot read artifact {path}: {e}")))?;
+        Ok(HloModuleProto { desc: parse_descriptor(&text)? })
+    }
+}
+
+pub struct XlaComputation {
+    desc: Descriptor,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { desc: proto.desc.clone() }
+    }
+}
+
+/// Buffer payloads; the engine only moves f32 tensors and i32 index vectors.
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A "device" buffer. The simulator is host-only, so this is plain memory;
+/// `Rc` keeps clones cheap for the weight table the runtime re-passes on
+/// every execute.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    data: Rc<Data>,
+    dims: Vec<usize>,
+}
+
+impl PjRtBuffer {
+    fn f32s(&self) -> Result<&[f32]> {
+        match &*self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => err("expected f32 buffer, got i32"),
+        }
+    }
+
+    fn i32s(&self) -> Result<&[i32]> {
+        match &*self.data {
+            Data::I32(v) => Ok(v),
+            Data::F32(_) => err("expected i32 buffer, got f32"),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match &*self.data {
+            Data::F32(v) => Ok(Literal { data: v.clone() }),
+            Data::I32(v) => Ok(Literal { data: v.iter().map(|&x| x as f32).collect() }),
+        }
+    }
+}
+
+/// Host-side copy of a buffer (always materialized as f32).
+pub struct Literal {
+    data: Vec<f32>,
+}
+
+impl Literal {
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn copy_raw_to(&self, dst: &mut [f32]) -> Result<()> {
+        if dst.len() != self.data.len() {
+            return err(format!(
+                "copy_raw_to size mismatch: literal {} vs dst {}",
+                self.data.len(),
+                dst.len()
+            ));
+        }
+        dst.copy_from_slice(&self.data);
+        Ok(())
+    }
+}
+
+/// Sealed helper for the generic host->device upload entry point.
+pub trait NativeType: Copy {
+    fn wrap(data: &[Self]) -> Data;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: &[f32]) -> Data {
+        Data::F32(data.to_vec())
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: &[i32]) -> Data {
+        Data::I32(data.to_vec())
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { desc: comp.desc.clone() })
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return err(format!(
+                "buffer_from_host_buffer: dims {dims:?} cover {n} elements, \
+                 data has {}",
+                data.len()
+            ));
+        }
+        Ok(PjRtBuffer { data: Rc::new(T::wrap(data)), dims: dims.to_vec() })
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    desc: Descriptor,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute the graph; mirrors the real API's
+    /// `Vec<replica -> Vec<output buffer>>` return shape (single replica,
+    /// single non-tuple output).
+    pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let out = match &self.desc.op {
+            Op::Forward { g, t } => run_forward(&self.desc, *g, *t, args)?,
+            Op::Extract { rows } => run_extract(&self.desc, *rows, args)?,
+            Op::MicroGemm { nsplits } => run_micro_gemm(&self.desc, *nsplits, args)?,
+            Op::MicroNorm { nsplits } => run_micro_norm(&self.desc, *nsplits, args)?,
+        };
+        Ok(vec![vec![out]])
+    }
+}
+
+// --------------------------------------------------------------- kernels
+
+/// Round-to-nearest-even f32 -> bf16 -> f32, the cross-split partial
+/// storage format (`ModelConfig.partial_dtype`).
+#[inline]
+fn to_bf16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let round = ((bits >> 16) & 1).wrapping_add(0x7FFF);
+    f32::from_bits(bits.wrapping_add(round) & 0xFFFF_0000)
+}
+
+/// Fixed pairwise reduction tree over `parts` (length must be a power of
+/// two); mirrors `combine_tree` in splitk_matmul.py. Each part is a row of
+/// `width` f32 values; parts are combined in place.
+fn combine_tree(parts: &mut Vec<Vec<f32>>) -> Vec<f32> {
+    let mut n = parts.len();
+    assert!(n.is_power_of_two(), "combine_tree needs a power-of-2 count, got {n}");
+    while n > 1 {
+        let half = n / 2;
+        for i in 0..half {
+            let (lo, hi) = parts.split_at_mut(half);
+            let a = &mut lo[i];
+            let b = &hi[i];
+            for (x, y) in a.iter_mut().zip(b.iter()) {
+                *x += *y;
+            }
+        }
+        n = half;
+        parts.truncate(n);
+    }
+    parts.pop().unwrap()
+}
+
+/// One row of the fast split-K GEMM: dot(x_row, w[:, :]) with `nsplits`
+/// K-splits, bf16-rounded partials, fixed combine tree. `w` is row-major
+/// [k, n]. `nsplits == 1` is a plain single-pass product (no rounding).
+fn gemm_row_fast(
+    x_row: &[f32],
+    w: &[f32],
+    k: usize,
+    n: usize,
+    nsplits: usize,
+    bf16_partials: bool,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x_row.len(), k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), n);
+    if nsplits == 1 {
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for (ki, &xv) in x_row.iter().enumerate() {
+            let wrow = &w[ki * n..(ki + 1) * n];
+            for (o, &wv) in out.iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+        return;
+    }
+    assert!(k % nsplits == 0, "K={k} not divisible by nsplits={nsplits}");
+    let ck = k / nsplits;
+    let mut parts: Vec<Vec<f32>> = Vec::with_capacity(nsplits);
+    for s in 0..nsplits {
+        let mut p = vec![0.0f32; n];
+        for ki in s * ck..(s + 1) * ck {
+            let xv = x_row[ki];
+            let wrow = &w[ki * n..(ki + 1) * n];
+            for (o, &wv) in p.iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+        if bf16_partials {
+            for v in p.iter_mut() {
+                *v = to_bf16(*v);
+            }
+        }
+        parts.push(p);
+    }
+    let combined = combine_tree(&mut parts);
+    out.copy_from_slice(&combined);
+}
+
+/// One row of the batch-invariant GEMM: sequential fixed-chunk K
+/// accumulation (seqchunk_matmul.py) — the universal reduction schedule.
+fn gemm_row_inv(x_row: &[f32], w: &[f32], k: usize, n: usize, chunks: usize, out: &mut [f32]) {
+    assert!(k % chunks == 0, "K={k} not divisible by chunks={chunks}");
+    let ck = k / chunks;
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    let mut tmp = vec![0.0f32; n];
+    for c in 0..chunks {
+        for v in tmp.iter_mut() {
+            *v = 0.0;
+        }
+        for ki in c * ck..(c + 1) * ck {
+            let xv = x_row[ki];
+            let wrow = &w[ki * n..(ki + 1) * n];
+            for (o, &wv) in tmp.iter_mut().zip(wrow.iter()) {
+                *o += xv * wv;
+            }
+        }
+        for (o, &v) in out.iter_mut().zip(tmp.iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// Strategy-dispatched GEMM over all rows: x [m, k] @ w [k, n] -> [m, n].
+fn gemm(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, sched: &Schedule, nsplits: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for r in 0..m {
+        let x_row = &x[r * k..(r + 1) * k];
+        let o_row = &mut out[r * n..(r + 1) * n];
+        if sched.kind == "fast" {
+            gemm_row_fast(x_row, w, k, n, nsplits, sched.bf16_partials, o_row);
+        } else {
+            gemm_row_inv(x_row, w, k, n, sched.seq_chunks, o_row);
+        }
+    }
+    out
+}
+
+/// RMSNorm over rows: x [m, d], weight [d]; `nsplit`-way feature-dim
+/// reduction combined by the fixed pairwise tree (rmsnorm.py).
+fn rmsnorm(x: &[f32], w: &[f32], m: usize, d: usize, nsplit: usize, eps: f32) -> Vec<f32> {
+    assert!(d % nsplit == 0, "D={d} not divisible by nsplit={nsplit}");
+    let mut out = vec![0.0f32; m * d];
+    let cd = d / nsplit;
+    for r in 0..m {
+        let row = &x[r * d..(r + 1) * d];
+        let ss = if nsplit == 1 {
+            let mut s = 0.0f32;
+            for &v in row {
+                s += v * v;
+            }
+            s
+        } else {
+            let mut parts: Vec<Vec<f32>> = Vec::with_capacity(nsplit);
+            for c in 0..nsplit {
+                let mut s = 0.0f32;
+                for &v in &row[c * cd..(c + 1) * cd] {
+                    s += v * v;
+                }
+                parts.push(vec![s]);
+            }
+            combine_tree(&mut parts)[0]
+        };
+        let inv = 1.0 / (ss / d as f32 + eps).sqrt();
+        let o_row = &mut out[r * d..(r + 1) * d];
+        for i in 0..d {
+            o_row[i] = row[i] * inv * w[i];
+        }
+    }
+    out
+}
+
+/// RoPE over one lane: x [t, h, hd] in place, positions [t].
+fn rope(x: &mut [f32], t: usize, h: usize, hd: usize, positions: &[i32], theta: f32) {
+    let half = hd / 2;
+    let mut freqs = vec![0.0f32; half];
+    for i in 0..half {
+        freqs[i] = theta.powf(-(i as f32) / half as f32);
+    }
+    for j in 0..t {
+        let pos = positions[j] as f32;
+        for head in 0..h {
+            let base = (j * h + head) * hd;
+            for i in 0..half {
+                let ang = pos * freqs[i];
+                let (sin, cos) = (ang.sin(), ang.cos());
+                let x1 = x[base + i];
+                let x2 = x[base + half + i];
+                x[base + i] = x1 * cos - x2 * sin;
+                x[base + half + i] = x1 * sin + x2 * cos;
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- forward
+
+/// Weight tensor order — must match `python/compile/model.py::WEIGHT_SPEC`
+/// and the manifest's weight table (the runtime passes buffers in manifest
+/// order after state/tokens/slots/positions).
+const W_EMBED: usize = 0;
+const W_WQ: usize = 1;
+const W_WK: usize = 2;
+const W_WV: usize = 3;
+const W_WO: usize = 4;
+const W_ATTN_NORM: usize = 5;
+const W_FFN_NORM: usize = 6;
+const W_GATE: usize = 7;
+const W_UP: usize = 8;
+const W_DOWN: usize = 9;
+const W_FINAL_NORM: usize = 10;
+const W_LM_HEAD: usize = 11;
+const N_WEIGHTS: usize = 12;
+
+fn run_forward(desc: &Descriptor, g: usize, t: usize, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+    let d = &desc.dims;
+    let sched = &desc.sched;
+    if args.len() != 4 + N_WEIGHTS {
+        return err(format!(
+            "forward expects {} args (state, tokens, slots, positions, {} weights), got {}",
+            4 + N_WEIGHTS,
+            N_WEIGHTS,
+            args.len()
+        ));
+    }
+    let mut state = args[0].f32s()?.to_vec();
+    let tokens = args[1].i32s()?;
+    let slots = args[2].i32s()?;
+    let positions0 = args[3].i32s()?;
+    if tokens.len() != g * t || slots.len() != g || positions0.len() != g {
+        return err(format!(
+            "forward shape mismatch: tokens {} slots {} pos {} vs g={g} t={t}",
+            tokens.len(),
+            slots.len(),
+            positions0.len()
+        ));
+    }
+    let n = g * t;
+    if n > d.max_fwd_tokens {
+        return err(format!(
+            "forward writes {n} logits rows but the state region holds {}",
+            d.max_fwd_tokens
+        ));
+    }
+    let w: Vec<&[f32]> = {
+        let mut v = Vec::with_capacity(N_WEIGHTS);
+        for a in &args[4..] {
+            v.push(a.f32s()?);
+        }
+        v
+    };
+
+    let dm = d.d_model;
+    let qd = d.q_dim();
+    let kvd = d.kv_dim();
+    let hd = d.head_dim;
+    let nh = d.n_heads;
+    let nkv = d.n_kv_heads;
+    let rep = nh / nkv;
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    // absolute positions per lane/row
+    let mut positions = vec![0i32; n];
+    for lane in 0..g {
+        for j in 0..t {
+            positions[lane * t + j] = positions0[lane] + j as i32;
+        }
+    }
+    for (i, &p) in positions.iter().enumerate() {
+        if (p as usize) >= d.max_seq {
+            return err(format!("row {i} position {p} out of range (max_seq {})", d.max_seq));
+        }
+    }
+    for &s in slots {
+        if (s as usize) >= d.slots {
+            return err(format!("slot {s} out of range ({} slots)", d.slots));
+        }
+    }
+
+    // embedding lookup
+    let embed = w[W_EMBED];
+    let mut h = vec![0.0f32; n * dm];
+    for (i, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        if tok >= d.vocab {
+            return err(format!("token {tok} out of vocab {}", d.vocab));
+        }
+        h[i * dm..(i + 1) * dm].copy_from_slice(&embed[tok * dm..(tok + 1) * dm]);
+    }
+
+    for layer in 0..d.n_layers {
+        // ---- attention block
+        let x = rmsnorm(
+            &h,
+            &w[W_ATTN_NORM][layer * dm..(layer + 1) * dm],
+            n,
+            dm,
+            sched.norm_splits,
+            d.rms_eps,
+        );
+        let wq = &w[W_WQ][layer * dm * qd..(layer + 1) * dm * qd];
+        let wk = &w[W_WK][layer * dm * kvd..(layer + 1) * dm * kvd];
+        let wv = &w[W_WV][layer * dm * kvd..(layer + 1) * dm * kvd];
+        let mut q = gemm(&x, wq, n, dm, qd, sched, sched.ffn_splits);
+        let mut kproj = gemm(&x, wk, n, dm, kvd, sched, sched.ffn_splits);
+        let vproj = gemm(&x, wv, n, dm, kvd, sched, sched.ffn_splits);
+
+        // RoPE per lane (positions differ per lane)
+        for lane in 0..g {
+            let prow = &positions[lane * t..(lane + 1) * t];
+            rope(&mut q[lane * t * qd..(lane + 1) * t * qd], t, nh, hd, prow, d.rope_theta);
+            rope(&mut kproj[lane * t * kvd..(lane + 1) * t * kvd], t, nkv, hd, prow, d.rope_theta);
+        }
+
+        // write K/V windows into the pool (all lanes first, then attend —
+        // mirrors model.py's update-then-read order)
+        for lane in 0..g {
+            let slot = slots[lane] as usize;
+            let start = positions0[lane] as usize;
+            let koff = d.kv_offset(0, layer, slot, start);
+            let voff = d.kv_offset(1, layer, slot, start);
+            state[koff..koff + t * kvd].copy_from_slice(&kproj[lane * t * kvd..(lane + 1) * t * kvd]);
+            state[voff..voff + t * kvd].copy_from_slice(&vproj[lane * t * kvd..(lane + 1) * t * kvd]);
+        }
+
+        // chunked (FlashDecoding-style) attention per lane over its slot
+        let mut attn = vec![0.0f32; n * qd];
+        let ksplits = sched.attn_ksplits;
+        assert!(d.max_seq % ksplits == 0, "max_seq not divisible by attn_ksplits");
+        let cs = d.max_seq / ksplits;
+        for lane in 0..g {
+            let slot = slots[lane] as usize;
+            let koff = d.kv_offset(0, layer, slot, 0);
+            let voff = d.kv_offset(1, layer, slot, 0);
+            let k_pool = &state[koff..koff + d.max_seq * kvd];
+            let v_pool = &state[voff..voff + d.max_seq * kvd];
+            for j in 0..t {
+                let pos = positions[lane * t + j];
+                let q_row = &q[(lane * t + j) * qd..(lane * t + j + 1) * qd];
+                for head in 0..nh {
+                    let kvh = head / rep;
+                    let qh = &q_row[head * hd..(head + 1) * hd];
+                    // online-softmax partials combined in fixed chunk order
+                    let mut m_run = -1e30f32;
+                    let mut l_run = 0.0f32;
+                    let mut o_run = vec![0.0f32; hd];
+                    let mut s_vals = vec![0.0f32; cs];
+                    for c in 0..ksplits {
+                        let mut m_c = -1e30f32;
+                        for (si, s_abs) in (c * cs..(c + 1) * cs).enumerate() {
+                            let masked = (s_abs as i32) > pos;
+                            let sv = if masked {
+                                -1e9f32
+                            } else {
+                                let krow = &k_pool[s_abs * kvd + kvh * hd..s_abs * kvd + (kvh + 1) * hd];
+                                let mut dot = 0.0f32;
+                                for i in 0..hd {
+                                    dot += qh[i] * krow[i];
+                                }
+                                dot * scale
+                            };
+                            s_vals[si] = sv;
+                            if sv > m_c {
+                                m_c = sv;
+                            }
+                        }
+                        let mut l_c = 0.0f32;
+                        let mut o_c = vec![0.0f32; hd];
+                        for (si, s_abs) in (c * cs..(c + 1) * cs).enumerate() {
+                            let p = (s_vals[si] - m_c).exp();
+                            l_c += p;
+                            let vrow = &v_pool[s_abs * kvd + kvh * hd..s_abs * kvd + (kvh + 1) * hd];
+                            for i in 0..hd {
+                                o_c[i] += p * vrow[i];
+                            }
+                        }
+                        let m_new = if m_c > m_run { m_c } else { m_run };
+                        let a = (m_run - m_new).exp();
+                        let b = (m_c - m_new).exp();
+                        l_run = l_run * a + l_c * b;
+                        for i in 0..hd {
+                            o_run[i] = o_run[i] * a + o_c[i] * b;
+                        }
+                        m_run = m_new;
+                    }
+                    let out_row = &mut attn[(lane * t + j) * qd + head * hd..(lane * t + j) * qd + (head + 1) * hd];
+                    for i in 0..hd {
+                        out_row[i] = o_run[i] / l_run;
+                    }
+                }
+            }
+        }
+
+        let wo = &w[W_WO][layer * qd * dm..(layer + 1) * qd * dm];
+        let proj = gemm(&attn, wo, n, qd, dm, sched, sched.ffn_splits);
+        for i in 0..n * dm {
+            h[i] += proj[i];
+        }
+
+        // ---- FFN block (SwiGLU)
+        let x = rmsnorm(
+            &h,
+            &w[W_FFN_NORM][layer * dm..(layer + 1) * dm],
+            n,
+            dm,
+            sched.norm_splits,
+            d.rms_eps,
+        );
+        let fh = d.ffn_hidden;
+        let wg = &w[W_GATE][layer * dm * fh..(layer + 1) * dm * fh];
+        let wu = &w[W_UP][layer * dm * fh..(layer + 1) * dm * fh];
+        let wd = &w[W_DOWN][layer * fh * dm..(layer + 1) * fh * dm];
+        let gate = gemm(&x, wg, n, dm, fh, sched, sched.ffn_splits);
+        let up = gemm(&x, wu, n, dm, fh, sched, sched.ffn_splits);
+        let mut f = vec![0.0f32; n * fh];
+        for i in 0..n * fh {
+            let gv = gate[i];
+            // silu(x) = x * sigmoid(x)
+            f[i] = gv / (1.0 + (-gv).exp()) * up[i];
+        }
+        let down = gemm(&f, wd, n, fh, dm, sched, sched.ffn_splits);
+        for i in 0..n * dm {
+            h[i] += down[i];
+        }
+    }
+
+    // final norm + LM head
+    let x = rmsnorm(&h, w[W_FINAL_NORM], n, dm, sched.norm_splits, d.rms_eps);
+    let mut logits = gemm(&x, w[W_LM_HEAD], n, dm, d.vocab, sched, sched.head_splits);
+    for v in logits.iter_mut() {
+        *v *= d.logit_scale;
+    }
+
+    // publish rows into the logits region
+    let off = d.logits_offset();
+    state[off..off + n * d.vocab].copy_from_slice(&logits);
+
+    let len = state.len();
+    Ok(PjRtBuffer { data: Rc::new(Data::F32(state)), dims: vec![len] })
+}
+
+fn run_extract(desc: &Descriptor, rows: usize, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+    if args.len() != 1 {
+        return err(format!("extract expects 1 arg (state), got {}", args.len()));
+    }
+    let d = &desc.dims;
+    let state = args[0].f32s()?;
+    let off = d.logits_offset();
+    let n = rows * d.vocab;
+    if off + n > state.len() {
+        return err(format!(
+            "extract of {rows} rows overruns state ({} floats)",
+            state.len()
+        ));
+    }
+    Ok(PjRtBuffer {
+        data: Rc::new(Data::F32(state[off..off + n].to_vec())),
+        dims: vec![rows, d.vocab],
+    })
+}
+
+fn run_micro_gemm(desc: &Descriptor, nsplits: usize, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+    if args.len() != 2 {
+        return err(format!("micro_gemm expects 2 args (x, w), got {}", args.len()));
+    }
+    let x = args[0].f32s()?;
+    let w = args[1].f32s()?;
+    let xd = args[0].dims();
+    let wd = args[1].dims();
+    if xd.len() != 2 || wd.len() != 2 || xd[1] != wd[0] {
+        return err(format!("micro_gemm shape mismatch: x {xd:?} w {wd:?}"));
+    }
+    let (m, k, n) = (xd[0], xd[1], wd[1]);
+    let out = gemm(x, w, m, k, n, &desc.sched, nsplits);
+    Ok(PjRtBuffer { data: Rc::new(Data::F32(out)), dims: vec![m, n] })
+}
+
+fn run_micro_norm(desc: &Descriptor, nsplits: usize, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+    if args.len() != 2 {
+        return err(format!("micro_norm expects 2 args (x, w), got {}", args.len()));
+    }
+    let x = args[0].f32s()?;
+    let w = args[1].f32s()?;
+    let xd = args[0].dims();
+    if xd.len() != 2 || w.len() != xd[1] {
+        return err(format!("micro_norm shape mismatch: x {xd:?} w len {}", w.len()));
+    }
+    let (m, d) = (xd[0], xd[1]);
+    let out = rmsnorm(x, w, m, d, nsplits, desc.dims.rms_eps);
+    Ok(PjRtBuffer { data: Rc::new(Data::F32(out)), dims: vec![m, d] })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_rounding() {
+        assert_eq!(to_bf16(1.0), 1.0);
+        assert_eq!(to_bf16(0.0), 0.0);
+        // bf16 has 8 significand bits: 1 + 2^-9 rounds to 1.0
+        assert_eq!(to_bf16(1.0 + 1.0 / 512.0), 1.0);
+        // 1 + 2^-7 is representable
+        let x = 1.0 + 1.0 / 128.0;
+        assert_eq!(to_bf16(x), x);
+    }
+
+    #[test]
+    fn combine_tree_matches_pairwise() {
+        let mut parts = vec![vec![1.0f32], vec![2.0], vec![3.0], vec![4.0]];
+        // tree: (1+3) + (2+4)
+        assert_eq!(combine_tree(&mut parts), vec![10.0]);
+    }
+
+    #[test]
+    fn gemm_schedules_agree_numerically_but_not_bitwise() {
+        let k = 64;
+        let n = 8;
+        let x: Vec<f32> = (0..k).map(|i| ((i * 37 % 11) as f32 - 5.0) * 0.13).collect();
+        let w: Vec<f32> = (0..k * n).map(|i| ((i * 17 % 13) as f32 - 6.0) * 0.07).collect();
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        let mut c = vec![0.0f32; n];
+        gemm_row_fast(&x, &w, k, n, 8, true, &mut a);
+        gemm_row_fast(&x, &w, k, n, 2, true, &mut b);
+        gemm_row_inv(&x, &w, k, n, 8, &mut c);
+        // different schedules drift in the low bits but stay close
+        assert_ne!(a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   b.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        for i in 0..n {
+            assert!((a[i] - c[i]).abs() < 0.5, "{} vs {}", a[i], c[i]);
+            assert!((b[i] - c[i]).abs() < 0.5, "{} vs {}", b[i], c[i]);
+        }
+        // re-running a schedule is bitwise identical
+        let mut a2 = vec![0.0f32; n];
+        gemm_row_fast(&x, &w, k, n, 8, true, &mut a2);
+        assert_eq!(a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   a2.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rmsnorm_unit_norm_weight() {
+        let x = vec![3.0f32, 4.0];
+        let w = vec![1.0f32, 1.0];
+        let out = rmsnorm(&x, &w, 1, 2, 1, 0.0);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn descriptor_roundtrip() {
+        let text = "llm42-sim v1\nop forward\ng 2\nt 4\nstrategy fast\nffn_splits 8\n\
+                    head_splits 8\nattn_ksplits 4\nnorm_splits 4\nseq_chunks 8\npartial bf16\n\
+                    vocab 256\nd_model 64\nn_layers 2\nn_heads 4\nn_kv_heads 2\nhead_dim 16\n\
+                    ffn_hidden 128\nmax_seq 128\nslots 5\nmax_fwd_tokens 256\nlogit_scale 6.0\n\
+                    rope_theta 10000.0\nrms_eps 1e-5\n";
+        let d = parse_descriptor(text).unwrap();
+        match d.op {
+            Op::Forward { g, t } => {
+                assert_eq!((g, t), (2, 4));
+            }
+            _ => panic!("wrong op"),
+        }
+        assert_eq!(d.sched.ffn_splits, 8);
+        assert_eq!(d.dims.vocab, 256);
+        assert!(parse_descriptor("not an artifact").is_err());
+    }
+}
