@@ -10,6 +10,7 @@
 //! {
 //!   "artifacts": "artifacts",
 //!   "mode": "llm42",
+//!   "policy": "prefill-first",
 //!   "verify_group": 8,
 //!   "verify_window": 32,
 //!   "max_stall_steps": 8,
@@ -17,8 +18,12 @@
 //!   "server": { "addr": "127.0.0.1:4242" }
 //! }
 //! ```
+//!
+//! `policy` selects the scheduling policy (`prefill-first` — the seed
+//! behavior — `deadline`, or `fair-share`); the policy affects latency
+//! and fairness only, never committed tokens.
 
-use crate::engine::{EngineConfig, FaultPlan, Mode};
+use crate::engine::{EngineConfig, FaultPlan, Mode, PolicyKind};
 use crate::error::{Error, Result};
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -50,6 +55,9 @@ impl AppConfig {
         if let Some(m) = v.get("mode").and_then(|x| x.as_str()) {
             cfg.engine.mode = Mode::parse(m)?;
         }
+        if let Some(p) = v.get("policy").and_then(|x| x.as_str()) {
+            cfg.engine.policy = PolicyKind::parse(p)?;
+        }
         if let Some(g) = v.get("verify_group").and_then(|x| x.as_usize()) {
             cfg.engine.verify_group = g;
         }
@@ -75,11 +83,14 @@ impl AppConfig {
         Self::from_json(&std::fs::read_to_string(path)?)
     }
 
-    /// CLI flags override file values (`--mode`, `--group`, `--window`,
-    /// `--artifacts`, `--addr`, `--max-stall`, `--eos`).
+    /// CLI flags override file values (`--mode`, `--policy`, `--group`,
+    /// `--window`, `--artifacts`, `--addr`, `--max-stall`, `--eos`).
     pub fn apply_args(mut self, args: &Args) -> Result<AppConfig> {
         if let Some(m) = args.get("mode") {
             self.engine.mode = Mode::parse(m)?;
+        }
+        if let Some(p) = args.get("policy") {
+            self.engine.policy = PolicyKind::parse(p)?;
         }
         self.engine.verify_group = args.usize_or("group", self.engine.verify_group)?;
         self.engine.verify_window = args.usize_or("window", self.engine.verify_window)?;
@@ -127,6 +138,17 @@ mod tests {
         assert_eq!(c.engine.verify_group, 8);
         assert_eq!(c.engine.verify_window, 32);
         assert_eq!(c.engine.mode, Mode::Llm42);
+        assert_eq!(c.engine.policy, PolicyKind::PrefillFirst);
+    }
+
+    #[test]
+    fn policy_from_file_and_flag() {
+        let c = AppConfig::from_json(r#"{"policy": "fair-share"}"#).unwrap();
+        assert_eq!(c.engine.policy, PolicyKind::FairShare);
+        let c = c.apply_args(&args("--policy deadline")).unwrap();
+        assert_eq!(c.engine.policy, PolicyKind::DeadlineAware);
+        assert!(AppConfig::from_json(r#"{"policy": "wat"}"#).is_err());
+        assert!(AppConfig::resolve(&args("--policy nope")).is_err());
     }
 
     #[test]

@@ -1,15 +1,24 @@
-//! The serving engine: continuous batching + decode-verify-rollback.
+//! The serving engine, split into **executor** (this file) and **scheduler
+//! policy** ([`crate::engine::scheduler`]).
 //!
 //! One `Engine` owns a borrowed [`Runtime`] and drives it with a
 //! synchronous step loop (one forward per step — verification is a global
-//! pause, exactly the limitation the paper's prototype documents in §5.2):
+//! pause, exactly the limitation the paper's prototype documents in §5.2).
+//! Each `step()`:
 //!
-//!   1. admit queued requests into free KV slots
-//!   2. prefill (one fixed-shape chunk per step, one request at a time —
-//!      deterministic by construction, paper O3)
-//!   3. grouped verification when enough lanes are ready (or a lane
-//!      stalled too long, or nothing else can run)
-//!   4. fast-path decode over the active batch, padded to a bucket
+//!   1. snapshots engine state into a [`SchedView`],
+//!   2. asks the configured [`SchedulerPolicy`] to `plan()` an [`Action`],
+//!   3. applies it. Bookkeeping actions (`Admit`, `Preempt`) re-plan within
+//!      the same step; forward-pass actions (`Prefill`, `Decode`, `Verify`)
+//!      and `Idle` end the step with the matching [`StepKind`].
+//!
+//! The executor owns the *mechanics* — KV slots, chunked prefill, padded
+//! decode buckets, grouped verification, rollback application, metrics —
+//! and validates every action against engine invariants, so a buggy policy
+//! fails loudly instead of corrupting state. The policy owns the
+//! *decisions*: admission order, verify triggers, lane selection, and KV
+//! slot preemption (evicting a low-priority non-deterministic sequence
+//! back to the queue; its committed prefix re-prefills on re-admission).
 //!
 //! Modes (paper §5 baselines):
 //! * `NonDeterministic` — fast path only, everything commits (SGLang
@@ -19,6 +28,11 @@
 //!   analogue). No verification needed: determinism is paid by every token.
 //! * `Llm42`            — fast-path decode + DVR for requests with
 //!   `deterministic = true`; other traffic is untouched (O4).
+//!
+//! Determinism does not depend on the policy: committed tokens of
+//! deterministic requests come from fixed-schedule prefill/verification
+//! replay, which is a pure function of the request — every policy yields
+//! the same streams (`tests/determinism.rs` asserts this per policy).
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -26,6 +40,9 @@ use std::time::Instant;
 use crate::engine::kv::SlotAllocator;
 use crate::engine::metrics::EngineMetrics;
 use crate::engine::sampler::sample;
+use crate::engine::scheduler::{
+    Action, LaneView, PolicyKind, QueuedView, SchedView, SchedulerPolicy,
+};
 use crate::engine::sequence::{Phase, Request, RequestOutput, Sequence};
 use crate::engine::verify;
 use crate::error::{Error, Result};
@@ -71,6 +88,8 @@ pub struct EngineConfig {
     pub max_stall_steps: usize,
     pub eos_token: u32,
     pub fault: FaultPlan,
+    /// scheduling policy (prefill-first reproduces the seed behavior)
+    pub policy: PolicyKind,
 }
 
 impl Default for EngineConfig {
@@ -82,6 +101,7 @@ impl Default for EngineConfig {
             max_stall_steps: 8,
             eos_token: 1,
             fault: FaultPlan::None,
+            policy: PolicyKind::PrefillFirst,
         }
     }
 }
@@ -98,6 +118,7 @@ pub enum StepKind {
 pub struct Engine<'rt> {
     rt: &'rt mut Runtime,
     pub cfg: EngineConfig,
+    policy: Box<dyn SchedulerPolicy>,
     slots: SlotAllocator,
     seqs: Vec<Sequence>,
     queue: VecDeque<usize>,
@@ -125,9 +146,11 @@ impl<'rt> Engine<'rt> {
         }
         let invariant_bucket = *decode_buckets.last().unwrap();
         rt.reset_state()?;
+        let policy = cfg.policy.build();
         Ok(Engine {
             rt,
             cfg,
+            policy,
             slots: SlotAllocator::new(dims.slots, dims.max_seq),
             seqs: Vec::new(),
             queue: VecDeque::new(),
@@ -143,6 +166,19 @@ impl<'rt> Engine<'rt> {
 
     pub fn runtime(&self) -> &Runtime {
         self.rt
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Swap the scheduling policy at runtime. Safe at any point between
+    /// steps: policies only reorder work, never results, so in-flight
+    /// deterministic streams are unaffected (fresh policy state does reset
+    /// WRR counters / deadline bookkeeping).
+    pub fn set_policy(&mut self, kind: PolicyKind) {
+        self.cfg.policy = kind;
+        self.policy = kind.build();
     }
 
     /// Pre-compile every artifact this engine's mode can touch, so the
@@ -210,6 +246,7 @@ impl<'rt> Engine<'rt> {
         let seq = Sequence::new(id, req, now_secs());
         self.seqs.push(seq);
         self.queue.push_back(self.seqs.len() - 1);
+        self.metrics.note_queue_depth(self.queue.len());
         Ok(id)
     }
 
@@ -245,61 +282,271 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
+    /// Snapshot the scheduling-relevant engine state. Policies plan over
+    /// this; tests use it to check policy decisions against a live engine.
+    pub fn view(&self) -> SchedView {
+        let window = self.cfg.verify_window;
+        let dvr = self.dvr();
+        let lanes: Vec<LaneView> = self
+            .seqs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s.phase, Phase::Prefilling | Phase::Decoding))
+            .map(|(i, s)| LaneView {
+                idx: i,
+                id: s.id,
+                phase: s.phase,
+                deterministic: s.req.deterministic,
+                priority: s.req.priority,
+                deadline_ms: s.req.deadline_ms,
+                arrive_time: s.metrics.arrive_time,
+                prompt_len: s.prompt_len(),
+                prefill_pos: s.prefill_pos,
+                committed: s.committed.len(),
+                speculative: s.speculative.len(),
+                max_new_tokens: s.req.max_new_tokens,
+                stall_steps: s.stall_steps,
+                preemptions: s.metrics.preemptions,
+                can_decode: s.can_decode(window, dvr),
+                verify_ready: s.verify_ready(window),
+                decoding_done: s.decoding_done(),
+            })
+            .collect();
+        let queue: Vec<QueuedView> = self
+            .queue
+            .iter()
+            .map(|&i| {
+                let s = &self.seqs[i];
+                QueuedView {
+                    idx: i,
+                    id: s.id,
+                    priority: s.req.priority,
+                    deadline_ms: s.req.deadline_ms,
+                    arrive_time: s.metrics.arrive_time,
+                    deterministic: s.req.deterministic,
+                    prompt_len: s.prompt_len(),
+                }
+            })
+            .collect();
+        SchedView {
+            now: now_secs(),
+            dvr,
+            verify_group: self.cfg.verify_group,
+            verify_window: window,
+            max_stall_steps: self.cfg.max_stall_steps,
+            max_batch: self.max_batch(),
+            free_slots: self.slots.free_count(),
+            lanes,
+            queue,
+        }
+    }
+
     /// One scheduler iteration; executes at most one forward pass.
     pub fn step(&mut self) -> Result<StepKind> {
         self.metrics.steps += 1;
-        self.admit();
-
-        // 1. prefill-first: one chunk of the oldest prefilling sequence
-        if let Some(idx) = self
-            .seqs
-            .iter()
-            .position(|s| s.phase == Phase::Prefilling)
-        {
-            let t0 = Instant::now();
-            self.prefill_chunk(idx)?;
-            self.metrics.prefill_secs += t0.elapsed().as_secs_f64();
-            self.bump_stalls();
-            return Ok(StepKind::Prefill);
-        }
-
-        // 2. grouped verification when warranted
-        if self.dvr() {
-            let ready: Vec<usize> = self
-                .seqs
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| s.verify_ready(self.cfg.verify_window))
-                .map(|(i, _)| i)
-                .collect();
-            let decodable = self.decodable_lanes().len();
-            let stalled = ready
-                .iter()
-                .any(|&i| self.seqs[i].stall_steps >= self.cfg.max_stall_steps);
-            if !ready.is_empty()
-                && (ready.len() >= self.cfg.verify_group || stalled || decodable == 0)
-            {
-                let t0 = Instant::now();
-                let lanes: Vec<usize> =
-                    ready.into_iter().take(self.cfg.verify_group).collect();
-                self.verify_pass(&lanes)?;
-                self.metrics.verify_secs += t0.elapsed().as_secs_f64();
-                return Ok(StepKind::Verify);
+        // Bookkeeping actions loop back for a re-plan; the bound is a
+        // policy-bug backstop. A legitimate burst can preempt and admit
+        // once per user slot (2 rounds each), so the bound scales with
+        // the slot count rather than being a fixed constant.
+        let max_rounds = 4 * self.slots.user_slots() + 8;
+        // Victims evicted in this step are hidden from admissions later in
+        // the same step: the freed slot must go to the beneficiary that
+        // justified the eviction, not bounce straight back to the victim
+        // (which would re-prefill for nothing). They become admittable
+        // again on the next step.
+        let mut evicted_this_step: Vec<usize> = Vec::new();
+        for _round in 0..max_rounds {
+            let view = self.view();
+            let action = self.policy.plan(&view);
+            match action {
+                Action::Admit { n } => {
+                    self.apply_admit(n, &view, &evicted_this_step)?;
+                }
+                Action::Preempt { victim } => {
+                    self.apply_preempt(victim)?;
+                    evicted_this_step.push(victim);
+                }
+                Action::Prefill { seq } => {
+                    if self.seqs.get(seq).map(|s| s.phase) != Some(Phase::Prefilling) {
+                        return Err(Error::Engine(format!(
+                            "policy bug: Prefill on non-prefilling sequence {seq}"
+                        )));
+                    }
+                    let t0 = Instant::now();
+                    self.prefill_chunk(seq)?;
+                    self.metrics.prefill_secs += t0.elapsed().as_secs_f64();
+                    self.bump_stalls();
+                    return Ok(StepKind::Prefill);
+                }
+                Action::Verify { lanes } => {
+                    self.check_verify_lanes(&lanes)?;
+                    let t0 = Instant::now();
+                    self.verify_pass(&lanes)?;
+                    self.metrics.verify_secs += t0.elapsed().as_secs_f64();
+                    return Ok(StepKind::Verify);
+                }
+                Action::Decode { lanes } => {
+                    self.check_decode_lanes(&lanes)?;
+                    let t0 = Instant::now();
+                    self.decode_step(&lanes)?;
+                    self.metrics.decode_secs += t0.elapsed().as_secs_f64();
+                    self.bump_stalls();
+                    return Ok(StepKind::Decode);
+                }
+                Action::Idle => {
+                    self.bump_stalls();
+                    return Ok(StepKind::Idle);
+                }
             }
         }
+        Err(Error::Engine(format!(
+            "policy bug: no forward-progress action after {max_rounds} planning rounds"
+        )))
+    }
 
-        // 3. fast-path decode over the active batch
-        let lanes = self.decodable_lanes();
-        if !lanes.is_empty() {
-            let t0 = Instant::now();
-            self.decode_step(&lanes)?;
-            self.metrics.decode_secs += t0.elapsed().as_secs_f64();
-            self.bump_stalls();
-            return Ok(StepKind::Decode);
+    fn apply_admit(
+        &mut self,
+        n: usize,
+        view: &SchedView,
+        deferred: &[usize],
+    ) -> Result<()> {
+        if n == 0 || self.queue.is_empty() || self.slots.free_count() == 0 {
+            return Err(Error::Engine(
+                "policy bug: Admit with nothing admittable".into(),
+            ));
         }
+        // Victims evicted earlier in this step are hidden from the policy's
+        // admission view: they must not reclaim the slot their eviction
+        // just freed, and hiding them (rather than reordering afterwards)
+        // keeps stateful policies' service accounting aligned with what is
+        // actually admitted. If only victims are queued, fall back to the
+        // full view so admission still makes progress.
+        let order = if deferred.is_empty()
+            || view.queue.iter().all(|q| deferred.contains(&q.idx))
+        {
+            self.policy.admit_order(view)
+        } else {
+            let mut filtered = view.clone();
+            filtered.queue.retain(|q| !deferred.contains(&q.idx));
+            self.policy.admit_order(&filtered)
+        };
+        let mut admitted = 0usize;
+        for idx in order {
+            if admitted >= n || self.slots.free_count() == 0 {
+                break;
+            }
+            let pos = self.queue.iter().position(|&q| q == idx).ok_or_else(|| {
+                Error::Engine(format!(
+                    "policy bug: admit_order returned non-queued index {idx}"
+                ))
+            })?;
+            self.queue.remove(pos);
+            let slot = self.slots.alloc(self.seqs[idx].id)?;
+            let seq = &mut self.seqs[idx];
+            seq.slot = slot;
+            seq.phase = Phase::Prefilling;
+            seq.metrics.prefill_start = now_secs();
+            admitted += 1;
+        }
+        if admitted == 0 {
+            return Err(Error::Engine("policy bug: Admit made no progress".into()));
+        }
+        Ok(())
+    }
 
-        self.bump_stalls();
-        Ok(StepKind::Idle)
+    /// Evict an active non-deterministic sequence back to the queue. Its
+    /// KV slot frees immediately; the committed prefix re-prefills on
+    /// re-admission (decode-input position bookkeeping survives because
+    /// gen token j is input at position P + j regardless of how the KV for
+    /// earlier positions was produced).
+    fn apply_preempt(&mut self, victim: usize) -> Result<()> {
+        let seq = self.seqs.get(victim).ok_or_else(|| {
+            Error::Engine(format!("policy bug: Preempt on unknown sequence {victim}"))
+        })?;
+        if seq.req.deterministic {
+            return Err(Error::Engine(
+                "policy bug: deterministic sequences must not be preempted".into(),
+            ));
+        }
+        if !matches!(seq.phase, Phase::Prefilling | Phase::Decoding) {
+            return Err(Error::Engine(format!(
+                "policy bug: Preempt on inactive sequence {victim}"
+            )));
+        }
+        let slot = seq.slot;
+        self.slots.release(slot)?;
+        self.seqs[victim].preempt();
+        self.queue.push_back(victim);
+        self.metrics.preemptions += 1;
+        self.metrics.note_queue_depth(self.queue.len());
+        Ok(())
+    }
+
+    fn check_unique(lanes: &[usize]) -> Result<()> {
+        for (i, &a) in lanes.iter().enumerate() {
+            if lanes[..i].contains(&a) {
+                return Err(Error::Engine(format!(
+                    "policy bug: duplicate lane {a} in action"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_decode_lanes(&self, lanes: &[usize]) -> Result<()> {
+        if lanes.is_empty() || lanes.len() > self.max_batch() {
+            return Err(Error::Engine(format!(
+                "policy bug: Decode with {} lanes (max batch {})",
+                lanes.len(),
+                self.max_batch()
+            )));
+        }
+        Self::check_unique(lanes)?;
+        let window = self.cfg.verify_window;
+        let dvr = self.dvr();
+        for &idx in lanes {
+            let ok = self
+                .seqs
+                .get(idx)
+                .map(|s| s.can_decode(window, dvr))
+                .unwrap_or(false);
+            if !ok {
+                return Err(Error::Engine(format!(
+                    "policy bug: Decode lane {idx} is not decodable"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_verify_lanes(&self, lanes: &[usize]) -> Result<()> {
+        if !self.dvr() {
+            return Err(Error::Engine(
+                "policy bug: Verify outside Llm42 mode".into(),
+            ));
+        }
+        if lanes.is_empty() || lanes.len() > self.cfg.verify_group {
+            return Err(Error::Engine(format!(
+                "policy bug: Verify with {} lanes (group {})",
+                lanes.len(),
+                self.cfg.verify_group
+            )));
+        }
+        Self::check_unique(lanes)?;
+        let window = self.cfg.verify_window;
+        for &idx in lanes {
+            let ok = self
+                .seqs
+                .get(idx)
+                .map(|s| s.verify_ready(window))
+                .unwrap_or(false);
+            if !ok {
+                return Err(Error::Engine(format!(
+                    "policy bug: Verify lane {idx} is not verify-ready"
+                )));
+            }
+        }
+        Ok(())
     }
 
     fn bump_stalls(&mut self) {
@@ -311,47 +558,27 @@ impl<'rt> Engine<'rt> {
         }
     }
 
-    fn admit(&mut self) {
-        while let Some(&idx) = self.queue.front() {
-            if self.slots.free_count() == 0 {
-                break;
-            }
-            self.queue.pop_front();
-            let seq = &mut self.seqs[idx];
-            seq.slot = self.slots.alloc(seq.id).expect("checked free_count");
-            seq.phase = Phase::Prefilling;
-            seq.metrics.prefill_start = now_secs();
-        }
-    }
-
-    fn decodable_lanes(&self) -> Vec<usize> {
-        let window = self.cfg.verify_window;
-        let dvr = self.dvr();
-        self.seqs
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.can_decode(window, dvr))
-            .map(|(i, _)| i)
-            .take(self.max_batch())
-            .collect()
-    }
-
     // ---------------------------------------------------------- prefill
     fn prefill_chunk(&mut self, idx: usize) -> Result<()> {
-        let (slot, start, real, chunk, tokens) = {
+        let (slot, start, real, chunk, tokens, has_committed) = {
             let seq = &self.seqs[idx];
-            let p = seq.prompt_len();
-            let remaining = p - seq.prefill_pos;
+            let total = seq.prefill_total();
+            let remaining = total - seq.prefill_pos;
             let chunk = self.pick_chunk(remaining);
             let real = remaining.min(chunk);
-            let mut tokens: Vec<i32> = seq.req.prompt
-                [seq.prefill_pos..seq.prefill_pos + real]
-                .iter()
-                .map(|&t| t as i32)
+            let mut tokens: Vec<i32> = (seq.prefill_pos..seq.prefill_pos + real)
+                .map(|i| seq.prefill_token(i) as i32)
                 .collect();
             tokens.resize(chunk, 0); // pad tokens; their KV is overwritten
                                      // before any later step can attend to it
-            (seq.slot, seq.prefill_pos, real, chunk, tokens)
+            (
+                seq.slot,
+                seq.prefill_pos,
+                real,
+                chunk,
+                tokens,
+                !seq.committed.is_empty(),
+            )
         };
 
         let artifact = Runtime::window_artifact(1, chunk);
@@ -363,10 +590,26 @@ impl<'rt> Engine<'rt> {
         )?;
         self.metrics.prefill_chunks += 1;
         self.metrics.prefill_tokens += real as u64;
+        // redone work caused by preemption: drain the replay debt recorded
+        // at eviction time (only tokens whose KV had actually been built
+        // count — a mid-prefill victim owes just its progress so far)
+        let replay = real.min(self.seqs[idx].replay_debt);
+        if replay > 0 {
+            self.seqs[idx].replay_debt -= replay;
+            self.metrics.reprefilled_tokens += replay as u64;
+            self.seqs[idx].metrics.reprefilled_tokens += replay as u64;
+        }
 
         let seq = &mut self.seqs[idx];
         seq.prefill_pos += real;
-        if seq.prefill_pos < seq.prompt_len() {
+        if seq.prefill_pos < seq.prefill_total() {
+            return Ok(());
+        }
+
+        if has_committed {
+            // The committed prefix is restored; its last token is the next
+            // decode input, so no sampling happens here.
+            seq.phase = Phase::Decoding;
             return Ok(());
         }
 
@@ -569,7 +812,9 @@ impl<'rt> Engine<'rt> {
         let mut tomb = Sequence::new(id, Request::greedy(vec![0], 1, false), 0.0);
         tomb.phase = Phase::Finished;
         let done = std::mem::replace(&mut self.seqs[idx], tomb);
-        self.finished.push(done.into_output(now_secs()));
+        let out = done.into_output(now_secs());
+        self.metrics.record_finished(out.priority, out.metrics.e2e());
+        self.finished.push(out);
         Ok(())
     }
 }

@@ -1,4 +1,8 @@
-//! Request- and engine-level metrics (throughput, latency, DVR overhead).
+//! Request- and engine-level metrics (throughput, latency, DVR overhead,
+//! and per-policy scheduling counters: preemptions, re-prefill cost,
+//! queue pressure, per-priority-class latency).
+
+use std::collections::BTreeMap;
 
 /// Per-sequence timing and DVR counters, reported with each finished request.
 #[derive(Debug, Default, Clone)]
@@ -14,6 +18,10 @@ pub struct SeqMetrics {
     pub recomputed_tokens: u64,
     pub rollbacks: u64,
     pub verify_passes: u64,
+    /// times this sequence was evicted from its KV slot
+    pub preemptions: u64,
+    /// prompt/committed tokens re-prefilled after preemptions
+    pub reprefilled_tokens: u64,
 }
 
 impl SeqMetrics {
@@ -47,6 +55,32 @@ pub struct EngineMetrics {
     pub verify_secs: f64,
     /// real verify lanes processed (for per-token verify cost)
     pub verify_lanes: u64,
+    /// KV-slot evictions performed by the scheduling policy
+    pub preemptions: u64,
+    /// tokens re-prefilled when preempted sequences were re-admitted
+    pub reprefilled_tokens: u64,
+    /// highest queue depth observed (admission pressure)
+    pub queue_depth_hwm: u64,
+    /// per-priority-class end-to-end latency of finished requests
+    pub class_e2e: BTreeMap<u8, ClassStats>,
+}
+
+/// Aggregate latency of one priority class.
+#[derive(Debug, Default, Clone)]
+pub struct ClassStats {
+    pub finished: u64,
+    pub total_e2e_secs: f64,
+    pub max_e2e_secs: f64,
+}
+
+impl ClassStats {
+    pub fn mean_e2e_secs(&self) -> f64 {
+        if self.finished == 0 {
+            0.0
+        } else {
+            self.total_e2e_secs / self.finished as f64
+        }
+    }
 }
 
 impl EngineMetrics {
@@ -56,6 +90,22 @@ impl EngineMetrics {
             0.0
         } else {
             self.recomputed_tokens as f64 / self.decoded_tokens as f64
+        }
+    }
+
+    /// Record one finished request into the per-class aggregates.
+    pub fn record_finished(&mut self, priority: u8, e2e_secs: f64) {
+        let c = self.class_e2e.entry(priority).or_default();
+        c.finished += 1;
+        c.total_e2e_secs += e2e_secs;
+        if e2e_secs > c.max_e2e_secs {
+            c.max_e2e_secs = e2e_secs;
+        }
+    }
+
+    pub fn note_queue_depth(&mut self, depth: usize) {
+        if depth as u64 > self.queue_depth_hwm {
+            self.queue_depth_hwm = depth as u64;
         }
     }
 }
@@ -85,5 +135,27 @@ mod tests {
         };
         assert!((m.recompute_ratio() - 0.1).abs() < 1e-12);
         assert_eq!(EngineMetrics::default().recompute_ratio(), 0.0);
+    }
+
+    #[test]
+    fn class_stats_aggregate() {
+        let mut m = EngineMetrics::default();
+        m.record_finished(0, 1.0);
+        m.record_finished(0, 3.0);
+        m.record_finished(2, 0.5);
+        let c0 = &m.class_e2e[&0];
+        assert_eq!(c0.finished, 2);
+        assert!((c0.mean_e2e_secs() - 2.0).abs() < 1e-12);
+        assert!((c0.max_e2e_secs - 3.0).abs() < 1e-12);
+        assert_eq!(m.class_e2e[&2].finished, 1);
+        assert_eq!(ClassStats::default().mean_e2e_secs(), 0.0);
+    }
+
+    #[test]
+    fn queue_hwm_monotone() {
+        let mut m = EngineMetrics::default();
+        m.note_queue_depth(3);
+        m.note_queue_depth(1);
+        assert_eq!(m.queue_depth_hwm, 3);
     }
 }

@@ -1,14 +1,20 @@
 //! The LLM-42 serving engine (L3): continuous batching, the
-//! decode-verify-rollback protocol, grouped verification, and selective
-//! determinism.
+//! decode-verify-rollback protocol, grouped verification, selective
+//! determinism — split into a mechanics **executor** (`engine`) and
+//! pluggable, independently-testable **scheduler policies** (`scheduler`)
+//! with priority classes and KV slot preemption.
 
 pub mod engine;
 pub mod kv;
 pub mod metrics;
 pub mod sampler;
+pub mod scheduler;
 pub mod sequence;
 pub mod verify;
 
 pub use engine::{Engine, EngineConfig, FaultPlan, Mode, StepKind};
-pub use metrics::{EngineMetrics, SeqMetrics};
+pub use metrics::{ClassStats, EngineMetrics, SeqMetrics};
+pub use scheduler::{
+    Action, LaneView, PolicyKind, QueuedView, SchedView, SchedulerPolicy,
+};
 pub use sequence::{FinishReason, Request, RequestOutput};

@@ -1,0 +1,247 @@
+//! Deadline-aware scheduling: verification is triggered by per-request
+//! deadline *slack* instead of the seed's fixed `max_stall_steps` cadence.
+//!
+//! A deterministic request only surfaces tokens after verification, so its
+//! tail latency is dominated by how long speculative tokens sit unverified.
+//! The seed trigger (group full / fixed stall count) is workload-blind:
+//! under heavy background decode a nearly-due request can wait a full
+//! window behind cheap traffic. This policy orders by earliest absolute
+//! deadline (`arrive_time + deadline_ms`):
+//!
+//! * **verify trigger** — fire early when any ready lane's slack drops
+//!   below `urgent_slack_secs` (requests without a deadline keep the seed's
+//!   stall-step rule);
+//! * **verify selection** — most-urgent lanes first, not table order;
+//! * **prefill selection** — the most-urgent prefilling lane first (TTFT);
+//! * **admission** — earliest deadline first, then priority, then arrival;
+//! * **preemption** — the shared rule in [`super::preemption_victim`].
+
+use std::cmp::Ordering;
+
+use crate::engine::scheduler::{
+    preemption_victim, Action, SchedView, SchedulerPolicy,
+};
+use crate::engine::sequence::Phase;
+
+#[derive(Debug, Clone)]
+pub struct DeadlineAware {
+    /// verify a ready lane as soon as its deadline slack falls below this
+    pub urgent_slack_secs: f64,
+}
+
+impl Default for DeadlineAware {
+    fn default() -> Self {
+        // ~a handful of decode steps of headroom on the CPU testbed
+        DeadlineAware { urgent_slack_secs: 0.05 }
+    }
+}
+
+impl DeadlineAware {
+    /// Sort key: earliest absolute deadline first; deadline-less last,
+    /// ordered by priority (desc) then arrival.
+    fn urgency(d: Option<f64>, priority: u8, arrive: f64) -> (f64, i64, f64) {
+        (d.unwrap_or(f64::INFINITY), -(priority as i64), arrive)
+    }
+
+    fn cmp_urgency(a: (f64, i64, f64), b: (f64, i64, f64)) -> Ordering {
+        a.0.partial_cmp(&b.0)
+            .unwrap_or(Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+            .then(a.2.partial_cmp(&b.2).unwrap_or(Ordering::Equal))
+    }
+}
+
+impl SchedulerPolicy for DeadlineAware {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn plan(&mut self, v: &SchedView) -> Action {
+        if !v.queue.is_empty() && v.free_slots > 0 {
+            return Action::Admit { n: v.queue.len().min(v.free_slots) };
+        }
+        // the eviction beneficiary is whoever this policy admits next
+        // (head-only min, not a full admission sort)
+        if let Some(next) = v
+            .queue
+            .iter()
+            .min_by(|a, b| {
+                Self::cmp_urgency(
+                    Self::urgency(a.deadline_at(), a.priority, a.arrive_time),
+                    Self::urgency(b.deadline_at(), b.priority, b.arrive_time),
+                )
+                .then(a.idx.cmp(&b.idx))
+            })
+            .map(|q| q.priority)
+        {
+            if let Some(victim) = preemption_victim(v, next) {
+                return Action::Preempt { victim };
+            }
+        }
+
+        // most-urgent prefilling lane first (deadline-aware TTFT)
+        if let Some(l) = v
+            .lanes
+            .iter()
+            .filter(|l| l.phase == Phase::Prefilling)
+            .min_by(|a, b| {
+                Self::cmp_urgency(
+                    Self::urgency(a.deadline_at(), a.priority, a.arrive_time),
+                    Self::urgency(b.deadline_at(), b.priority, b.arrive_time),
+                )
+            })
+        {
+            return Action::Prefill { seq: l.idx };
+        }
+
+        if v.dvr {
+            let mut ready: Vec<usize> = v.verify_ready();
+            if !ready.is_empty() {
+                let decodable = v.decodable();
+                let urgent = ready.iter().any(|&i| {
+                    v.lane(i)
+                        .map(|l| {
+                            // the seed stall-step bound always applies — a
+                            // deadline tightens the trigger, never loosens
+                            // it (a loose deadline must not starve a lane
+                            // of verification, i.e. of all token output)
+                            l.stall_steps >= v.max_stall_steps
+                                || l
+                                    .deadline_at()
+                                    .map_or(false, |at| {
+                                        at - v.now <= self.urgent_slack_secs
+                                    })
+                        })
+                        .unwrap_or(false)
+                });
+                if ready.len() >= v.verify_group || urgent || decodable.is_empty() {
+                    // most-urgent lanes verify first
+                    ready.sort_by(|&a, &b| {
+                        let la = v.lane(a).expect("ready lane");
+                        let lb = v.lane(b).expect("ready lane");
+                        Self::cmp_urgency(
+                            Self::urgency(la.deadline_at(), la.priority, la.arrive_time),
+                            Self::urgency(lb.deadline_at(), lb.priority, lb.arrive_time),
+                        )
+                        .then(a.cmp(&b))
+                    });
+                    return Action::Verify {
+                        lanes: ready.into_iter().take(v.verify_group).collect(),
+                    };
+                }
+            }
+        }
+
+        let lanes = v.decodable();
+        if !lanes.is_empty() {
+            return Action::Decode { lanes };
+        }
+        Action::Idle
+    }
+
+    fn admit_order(&mut self, v: &SchedView) -> Vec<usize> {
+        // precompute sort keys once; a comparator scanning the queue per
+        // comparison would be quadratic in queue depth
+        let mut keyed: Vec<((f64, i64, f64), usize)> = v
+            .queue
+            .iter()
+            .map(|q| {
+                (Self::urgency(q.deadline_at(), q.priority, q.arrive_time), q.idx)
+            })
+            .collect();
+        keyed.sort_by(|a, b| Self::cmp_urgency(a.0, b.0).then(a.1.cmp(&b.1)));
+        keyed.into_iter().map(|(_, idx)| idx).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::scheduler::tests::{lane, queued, view};
+
+    fn ready_lane(idx: usize, deadline_ms: Option<f64>, arrive: f64) -> crate::engine::scheduler::LaneView {
+        let mut l = lane(idx, 0, true);
+        l.verify_ready = true;
+        l.speculative = 15;
+        l.can_decode = false;
+        l.deadline_ms = deadline_ms;
+        l.arrive_time = arrive;
+        l
+    }
+
+    #[test]
+    fn urgent_lane_triggers_early_verify() {
+        let mut p = DeadlineAware { urgent_slack_secs: 0.05 };
+        // helper view: now = 100.0, verify_group = 2
+        // one ready lane, deadline nearly due, plus a decodable lane
+        let urgent = ready_lane(0, Some(200.0), 99.9); // due at 100.1, slack 0.1 > 0.05
+        let dec = lane(1, 0, false);
+        let v = view(vec![urgent.clone(), dec.clone()], vec![], 1);
+        assert_eq!(p.plan(&v), Action::Decode { lanes: vec![1] }, "slack not yet urgent");
+
+        let urgent = ready_lane(0, Some(120.0), 99.9); // due at 100.02, slack 0.02
+        let v = view(vec![urgent, dec], vec![], 1);
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] }, "urgent slack fires");
+    }
+
+    #[test]
+    fn verify_selection_orders_by_deadline() {
+        let mut p = DeadlineAware::default();
+        // three ready lanes (group = 2): latest idx has the earliest deadline
+        let a = ready_lane(0, Some(900.0), 99.0);
+        let b = ready_lane(1, None, 98.0);
+        let c = ready_lane(2, Some(150.0), 99.5); // due 99.65 — most urgent
+        let v = view(vec![a, b, c], vec![], 1);
+        match p.plan(&v) {
+            Action::Verify { lanes } => assert_eq!(lanes, vec![2, 0]),
+            other => panic!("expected verify, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn loose_deadline_still_respects_stall_bound() {
+        // regression: a far-future deadline must not disable the seed's
+        // stall-step trigger — that would starve the lane of verification
+        let mut p = DeadlineAware::default();
+        let mut a = ready_lane(0, Some(30_000.0), 99.0); // due in ~30s
+        a.stall_steps = 4; // == max_stall_steps in the helper view
+        let dec = lane(1, 0, false);
+        let v = view(vec![a, dec], vec![], 1);
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] });
+    }
+
+    #[test]
+    fn no_deadline_lanes_keep_the_stall_rule() {
+        let mut p = DeadlineAware::default();
+        let mut a = ready_lane(0, None, 99.0);
+        a.stall_steps = 0;
+        let dec = lane(1, 0, false);
+        let v = view(vec![a.clone(), dec.clone()], vec![], 1);
+        assert_eq!(p.plan(&v), Action::Decode { lanes: vec![1] });
+        a.stall_steps = 4; // == max_stall_steps in the helper view
+        let v = view(vec![a, dec], vec![], 1);
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] });
+    }
+
+    #[test]
+    fn admission_is_edf_then_priority() {
+        let mut p = DeadlineAware::default();
+        let mut q0 = queued(0, 0);
+        q0.deadline_ms = None;
+        let mut q1 = queued(1, 2);
+        q1.deadline_ms = None;
+        let mut q2 = queued(2, 0);
+        q2.deadline_ms = Some(100.0);
+        q2.arrive_time = 99.0;
+        let v = view(vec![], vec![q0, q1, q2], 3);
+        assert_eq!(p.admit_order(&v), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn preempts_for_higher_priority_queued_request() {
+        let mut p = DeadlineAware::default();
+        let victim = lane(0, 0, false);
+        let v = view(vec![victim], vec![queued(5, 3)], 0);
+        assert_eq!(p.plan(&v), Action::Preempt { victim: 0 });
+    }
+}

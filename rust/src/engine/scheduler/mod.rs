@@ -1,0 +1,360 @@
+//! Pluggable scheduling policies: the *decision* half of the engine.
+//!
+//! The seed engine hard-coded one policy (FCFS admission, prefill-first,
+//! fixed group/stall verification triggers) inside `Engine::step` — exactly
+//! the coupling the paper's §5.2 prototype limitation describes. This
+//! module splits that decision logic out behind [`SchedulerPolicy`]:
+//!
+//! * the **executor** ([`crate::engine::Engine`]) snapshots its state into a
+//!   [`SchedView`] and mechanically applies whatever [`Action`] the policy
+//!   returns (admission, preemption, or one forward pass);
+//! * a **policy** is a pure-ish function over the snapshot (policies may
+//!   keep internal counters, e.g. weighted-round-robin credit, but never
+//!   touch the runtime), so every scheduling decision is unit-testable
+//!   without a `Runtime` or artifacts.
+//!
+//! Three built-in policies:
+//!
+//! * [`prefill_first::PrefillFirst`] — bit-for-bit the seed engine's
+//!   behavior (the replay property test in `tests/scheduler.rs` pins this).
+//! * [`deadline::DeadlineAware`] — verification is triggered by per-request
+//!   deadline slack instead of a fixed stall-step count; admission and
+//!   verify-lane selection order by earliest deadline.
+//! * [`fair_share::FairShare`] — weighted round-robin across priority
+//!   classes for admission and verify-lane selection.
+//!
+//! Determinism note: a policy reorders *work*, never *results*. Committed
+//! tokens of `deterministic = true` requests come from the verifier's
+//! fixed-schedule replay (or deterministic-by-construction prefill), which
+//! depends only on the request itself — so any policy, and any preemption
+//! of non-deterministic neighbors, preserves the paper's bitwise guarantee
+//! (asserted per-policy in `tests/determinism.rs`).
+
+pub mod deadline;
+pub mod fair_share;
+pub mod prefill_first;
+
+use crate::engine::sequence::Phase;
+use crate::error::{Error, Result};
+
+/// What the executor should do next. `Admit` and `Preempt` are bookkeeping
+/// actions: the executor applies them and asks the policy to plan again
+/// within the same `step()`; the other actions execute at most one forward
+/// pass and end the step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Move up to `n` queued requests into free KV slots, in the order
+    /// given by [`SchedulerPolicy::admit_order`].
+    Admit { n: usize },
+    /// Evict the active sequence at seqs-index `victim` back to the queue,
+    /// freeing its KV slot. The executor only permits non-deterministic
+    /// victims; the committed prefix re-prefills on re-admission.
+    Preempt { victim: usize },
+    /// Run one prefill chunk of the sequence at seqs-index `seq`.
+    Prefill { seq: usize },
+    /// Fast-path decode over these seqs-indices (≤ `max_batch`).
+    Decode { lanes: Vec<usize> },
+    /// Grouped verification over these seqs-indices (≤ `verify_group`).
+    Verify { lanes: Vec<usize> },
+    /// Nothing to do.
+    Idle,
+}
+
+/// Immutable snapshot of one active (prefilling or decoding) sequence.
+#[derive(Debug, Clone)]
+pub struct LaneView {
+    /// index into the engine's sequence table (the handle actions use)
+    pub idx: usize,
+    pub id: u64,
+    pub phase: Phase,
+    pub deterministic: bool,
+    pub priority: u8,
+    /// end-to-end deadline in ms from arrival, if the request set one
+    pub deadline_ms: Option<f64>,
+    pub arrive_time: f64,
+    pub prompt_len: usize,
+    pub prefill_pos: usize,
+    pub committed: usize,
+    pub speculative: usize,
+    pub max_new_tokens: usize,
+    pub stall_steps: usize,
+    /// times this sequence has been preempted (policies use this to bound
+    /// re-eviction and guarantee progress)
+    pub preemptions: u64,
+    pub can_decode: bool,
+    pub verify_ready: bool,
+    pub decoding_done: bool,
+}
+
+impl LaneView {
+    /// Absolute deadline in engine-clock seconds (None = no deadline).
+    pub fn deadline_at(&self) -> Option<f64> {
+        self.deadline_ms.map(|ms| self.arrive_time + ms / 1000.0)
+    }
+}
+
+/// Immutable snapshot of one queued (not yet admitted) request.
+#[derive(Debug, Clone)]
+pub struct QueuedView {
+    pub idx: usize,
+    pub id: u64,
+    pub priority: u8,
+    pub deadline_ms: Option<f64>,
+    pub arrive_time: f64,
+    pub deterministic: bool,
+    pub prompt_len: usize,
+}
+
+impl QueuedView {
+    pub fn deadline_at(&self) -> Option<f64> {
+        self.deadline_ms.map(|ms| self.arrive_time + ms / 1000.0)
+    }
+}
+
+/// Snapshot of everything a scheduling decision may depend on.
+#[derive(Debug, Clone)]
+pub struct SchedView {
+    /// engine clock (monotonic seconds, `util::now_secs`)
+    pub now: f64,
+    /// decode-verify-rollback active (mode == Llm42)
+    pub dvr: bool,
+    pub verify_group: usize,
+    pub verify_window: usize,
+    pub max_stall_steps: usize,
+    /// largest decode batch the artifacts support
+    pub max_batch: usize,
+    pub free_slots: usize,
+    /// active sequences, ascending seqs-index order
+    pub lanes: Vec<LaneView>,
+    /// queued requests, FIFO order
+    pub queue: Vec<QueuedView>,
+}
+
+impl SchedView {
+    pub fn lane(&self, idx: usize) -> Option<&LaneView> {
+        self.lanes.iter().find(|l| l.idx == idx)
+    }
+
+    /// Seqs-indices decodable right now, in table order, capped at
+    /// `max_batch` (the seed engine's `decodable_lanes`).
+    pub fn decodable(&self) -> Vec<usize> {
+        self.lanes
+            .iter()
+            .filter(|l| l.can_decode)
+            .map(|l| l.idx)
+            .take(self.max_batch)
+            .collect()
+    }
+
+    /// Seqs-indices with a verification-ready window, in table order.
+    pub fn verify_ready(&self) -> Vec<usize> {
+        self.lanes
+            .iter()
+            .filter(|l| l.verify_ready)
+            .map(|l| l.idx)
+            .collect()
+    }
+
+    /// Highest priority among queued requests (None if queue is empty).
+    pub fn max_queued_priority(&self) -> Option<u8> {
+        self.queue.iter().map(|q| q.priority).max()
+    }
+}
+
+/// A scheduling policy: plans one action per executor round. Policies may
+/// keep internal state (WRR credit, cursors) but must base decisions only
+/// on the `SchedView` — that is what makes them replayable and
+/// unit-testable in isolation.
+pub trait SchedulerPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Decide the next action for the current snapshot.
+    fn plan(&mut self, view: &SchedView) -> Action;
+
+    /// Order queued requests for admission (first = admitted first).
+    /// Default is FIFO — the seed engine's FCFS admission.
+    fn admit_order(&mut self, view: &SchedView) -> Vec<usize> {
+        view.queue.iter().map(|q| q.idx).collect()
+    }
+}
+
+/// Shared preemption rule: when the request the policy would admit *next*
+/// (`beneficiary_priority` — the head of the policy's own `admit_order`)
+/// has strictly higher priority than some active *non-deterministic* lane
+/// and no slot is free, evict the youngest (latest-arriving) such lane of
+/// minimal priority that has not been preempted before (the cap guarantees
+/// progress). Keying on the actual next admission — not the maximum queued
+/// priority — ensures the freed slot goes to the request that justified
+/// the eviction, rather than cascading evictions while a differently-
+/// ordered admission absorbs each freed slot. Deterministic lanes are
+/// never victims: their committed stream must not depend on scheduling,
+/// and eviction would discard verified KV state.
+pub fn preemption_victim(view: &SchedView, beneficiary_priority: u8) -> Option<usize> {
+    if view.free_slots > 0 || view.queue.is_empty() {
+        return None;
+    }
+    let want = beneficiary_priority;
+    view.lanes
+        .iter()
+        .filter(|l| {
+            !l.deterministic
+                && l.preemptions == 0
+                && l.priority < want
+                && matches!(l.phase, Phase::Prefilling | Phase::Decoding)
+        })
+        .min_by(|a, b| {
+            // lowest priority first; youngest (max arrive_time) among those
+            a.priority
+                .cmp(&b.priority)
+                .then(
+                    b.arrive_time
+                        .partial_cmp(&a.arrive_time)
+                        .unwrap_or(std::cmp::Ordering::Equal),
+                )
+                .then(b.idx.cmp(&a.idx))
+        })
+        .map(|l| l.idx)
+}
+
+/// Which policy to instantiate; selectable from `EngineConfig`, the CLI
+/// (`--policy`), a config file, and the server wire protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    PrefillFirst,
+    DeadlineAware,
+    FairShare,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        match s {
+            "prefill-first" | "prefill_first" | "fcfs" | "seed" => {
+                Ok(PolicyKind::PrefillFirst)
+            }
+            "deadline" | "deadline-aware" | "deadline_aware" | "edf" => {
+                Ok(PolicyKind::DeadlineAware)
+            }
+            "fair-share" | "fair_share" | "fairshare" | "wrr" => {
+                Ok(PolicyKind::FairShare)
+            }
+            other => Err(Error::Config(format!(
+                "unknown policy '{other}' (prefill-first | deadline | fair-share)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::PrefillFirst => "prefill-first",
+            PolicyKind::DeadlineAware => "deadline",
+            PolicyKind::FairShare => "fair-share",
+        }
+    }
+
+    pub fn build(self) -> Box<dyn SchedulerPolicy> {
+        match self {
+            PolicyKind::PrefillFirst => Box::new(prefill_first::PrefillFirst),
+            PolicyKind::DeadlineAware => {
+                Box::new(deadline::DeadlineAware::default())
+            }
+            PolicyKind::FairShare => Box::new(fair_share::FairShare::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn lane(idx: usize, priority: u8, det: bool) -> LaneView {
+        LaneView {
+            idx,
+            id: idx as u64 + 1,
+            phase: Phase::Decoding,
+            deterministic: det,
+            priority,
+            deadline_ms: None,
+            arrive_time: idx as f64,
+            prompt_len: 8,
+            prefill_pos: 8,
+            committed: 1,
+            speculative: 0,
+            max_new_tokens: 32,
+            stall_steps: 0,
+            preemptions: 0,
+            can_decode: true,
+            verify_ready: false,
+            decoding_done: false,
+        }
+    }
+
+    pub(crate) fn queued(idx: usize, priority: u8) -> QueuedView {
+        QueuedView {
+            idx,
+            id: idx as u64 + 1,
+            priority,
+            deadline_ms: None,
+            arrive_time: idx as f64,
+            deterministic: true,
+            prompt_len: 8,
+        }
+    }
+
+    pub(crate) fn view(lanes: Vec<LaneView>, queue: Vec<QueuedView>, free: usize) -> SchedView {
+        SchedView {
+            now: 100.0,
+            dvr: true,
+            verify_group: 2,
+            verify_window: 16,
+            max_stall_steps: 4,
+            max_batch: 8,
+            free_slots: free,
+            lanes,
+            queue,
+        }
+    }
+
+    #[test]
+    fn policy_kind_parses() {
+        assert_eq!(PolicyKind::parse("prefill-first").unwrap(), PolicyKind::PrefillFirst);
+        assert_eq!(PolicyKind::parse("deadline").unwrap(), PolicyKind::DeadlineAware);
+        assert_eq!(PolicyKind::parse("fair-share").unwrap(), PolicyKind::FairShare);
+        assert!(PolicyKind::parse("wat").is_err());
+        assert_eq!(PolicyKind::FairShare.name(), "fair-share");
+    }
+
+    #[test]
+    fn victim_is_youngest_lowest_priority_nondet() {
+        let lanes = vec![
+            lane(0, 0, false),
+            lane(1, 0, false), // same class, younger -> preferred victim
+            lane(2, 0, true),  // deterministic: never a victim
+            lane(3, 1, false),
+        ];
+        let v = view(lanes, vec![queued(9, 3)], 0);
+        assert_eq!(preemption_victim(&v, 3), Some(1));
+    }
+
+    #[test]
+    fn no_victim_when_slots_free_or_no_priority_gap() {
+        let v = view(vec![lane(0, 0, false)], vec![queued(9, 3)], 1);
+        assert_eq!(preemption_victim(&v, 3), None, "free slot: admit instead");
+        let v = view(vec![lane(0, 3, false)], vec![queued(9, 3)], 0);
+        assert_eq!(preemption_victim(&v, 3), None, "equal priority: no eviction");
+        let v = view(vec![lane(0, 0, true)], vec![queued(9, 3)], 0);
+        assert_eq!(preemption_victim(&v, 3), None, "deterministic lanes protected");
+        // the beneficiary is the *next admission*, not the max queued
+        // priority: a low-priority next admission must not evict anyone
+        let v = view(vec![lane(0, 1, false)], vec![queued(9, 3), queued(10, 0)], 0);
+        assert_eq!(preemption_victim(&v, 0), None, "next admission is class 0");
+        assert_eq!(preemption_victim(&v, 3), Some(0));
+    }
+
+    #[test]
+    fn preemption_cap_respected() {
+        let mut l = lane(0, 0, false);
+        l.preemptions = 1;
+        let v = view(vec![l], vec![queued(9, 3)], 0);
+        assert_eq!(preemption_victim(&v, 3), None);
+    }
+}

@@ -1,0 +1,126 @@
+//! The seed scheduling policy, transcribed verbatim from the pre-refactor
+//! `Engine::step`: FCFS admission, prefill-first, grouped verification when
+//! the group fills / a lane stalls past `max_stall_steps` / nothing else
+//! can run, then fast-path decode over the whole batch. Never preempts.
+//!
+//! `tests/scheduler.rs` pins the equivalence two ways: a pure property test
+//! (random `SchedView`s against an independent transcription of the seed
+//! decision rule) and a live replay test (the executor's `StepKind`
+//! sequence on a recorded workload).
+
+use crate::engine::scheduler::{Action, SchedView, SchedulerPolicy};
+use crate::engine::sequence::Phase;
+
+#[derive(Debug, Default)]
+pub struct PrefillFirst;
+
+impl SchedulerPolicy for PrefillFirst {
+    fn name(&self) -> &'static str {
+        "prefill-first"
+    }
+
+    fn plan(&mut self, v: &SchedView) -> Action {
+        // admission: fill every free slot, FIFO (seed `admit()`)
+        if !v.queue.is_empty() && v.free_slots > 0 {
+            return Action::Admit { n: v.queue.len().min(v.free_slots) };
+        }
+
+        // 1. prefill-first: one chunk of the oldest prefilling sequence
+        if let Some(l) = v.lanes.iter().find(|l| l.phase == Phase::Prefilling) {
+            return Action::Prefill { seq: l.idx };
+        }
+
+        // 2. grouped verification when warranted
+        if v.dvr {
+            let ready = v.verify_ready();
+            let decodable = v.decodable();
+            let stalled = ready.iter().any(|&i| {
+                v.lane(i).map(|l| l.stall_steps >= v.max_stall_steps).unwrap_or(false)
+            });
+            if !ready.is_empty()
+                && (ready.len() >= v.verify_group || stalled || decodable.is_empty())
+            {
+                return Action::Verify {
+                    lanes: ready.into_iter().take(v.verify_group).collect(),
+                };
+            }
+        }
+
+        // 3. fast-path decode over the active batch
+        let lanes = v.decodable();
+        if !lanes.is_empty() {
+            return Action::Decode { lanes };
+        }
+
+        Action::Idle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::scheduler::tests::{lane, queued, view};
+    use crate::engine::sequence::Phase;
+
+    #[test]
+    fn admission_comes_first_and_is_capped_by_free_slots() {
+        let mut p = PrefillFirst;
+        let v = view(vec![], vec![queued(0, 0), queued(1, 0), queued(2, 0)], 2);
+        assert_eq!(p.plan(&v), Action::Admit { n: 2 });
+        // FIFO admit order
+        assert_eq!(p.admit_order(&v), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn prefill_beats_decode_and_verify() {
+        let mut p = PrefillFirst;
+        let mut pre = lane(0, 0, true);
+        pre.phase = Phase::Prefilling;
+        pre.prefill_pos = 0;
+        pre.can_decode = false;
+        let mut rdy = lane(1, 0, true);
+        rdy.verify_ready = true;
+        rdy.speculative = 15;
+        rdy.can_decode = false;
+        let dec = lane(2, 0, false);
+        let v = view(vec![pre, rdy, dec], vec![], 1);
+        assert_eq!(p.plan(&v), Action::Prefill { seq: 0 });
+    }
+
+    #[test]
+    fn verify_triggers_on_group_stall_or_no_decodables() {
+        let mut p = PrefillFirst;
+
+        // group full (verify_group = 2 in the helper view)
+        let mut a = lane(0, 0, true);
+        a.verify_ready = true;
+        a.can_decode = false;
+        let mut b = lane(1, 0, true);
+        b.verify_ready = true;
+        b.can_decode = false;
+        let c = lane(2, 0, false);
+        let v = view(vec![a.clone(), b, c.clone()], vec![], 1);
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0, 1] });
+
+        // single ready lane, not stalled, decodables exist -> decode wins
+        let v = view(vec![a.clone(), c.clone()], vec![], 1);
+        assert_eq!(p.plan(&v), Action::Decode { lanes: vec![2] });
+
+        // stalled lane forces verification
+        let mut stalled = a.clone();
+        stalled.stall_steps = 4;
+        let v = view(vec![stalled, c], vec![], 1);
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] });
+
+        // nothing decodable -> verify rather than idle
+        let v = view(vec![a], vec![], 1);
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] });
+    }
+
+    #[test]
+    fn idle_when_nothing_to_do() {
+        let mut p = PrefillFirst;
+        let v = view(vec![], vec![], 3);
+        assert_eq!(p.plan(&v), Action::Idle);
+    }
+}

@@ -38,6 +38,27 @@ pub struct Request {
     /// sampling at this temperature.
     pub temperature: f32,
     pub seed: u64,
+    /// Priority class (higher = more urgent; 0 = background). Scheduling
+    /// policies use this for admission/verify ordering and to pick
+    /// preemption beneficiaries; it never affects committed tokens.
+    pub priority: u8,
+    /// Optional end-to-end latency target in milliseconds from arrival,
+    /// consumed by deadline-aware scheduling.
+    pub deadline_ms: Option<f64>,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Request {
+            prompt: Vec::new(),
+            max_new_tokens: 16,
+            deterministic: false,
+            temperature: 0.0,
+            seed: 0,
+            priority: 0,
+            deadline_ms: None,
+        }
+    }
 }
 
 impl Request {
@@ -46,8 +67,7 @@ impl Request {
             prompt,
             max_new_tokens,
             deterministic,
-            temperature: 0.0,
-            seed: 0,
+            ..Request::default()
         }
     }
 }
@@ -57,6 +77,7 @@ impl Request {
 pub struct RequestOutput {
     pub id: u64,
     pub deterministic: bool,
+    pub priority: u8,
     pub tokens: Vec<u32>,
     pub finish_reason: FinishReason,
     pub metrics: SeqMetrics,
@@ -81,6 +102,10 @@ pub struct Sequence {
     pub eos_sampled: bool,
     /// steps this sequence has been verify-ready but not verified
     pub stall_steps: usize,
+    /// prefill tokens whose KV work was discarded by preemption and must
+    /// be redone (drained as re-prefill chunks run; feeds the
+    /// `reprefilled_tokens` metrics)
+    pub replay_debt: usize,
     pub finish_reason: Option<FinishReason>,
     pub metrics: SeqMetrics,
     /// full fast-path token trace (committed or not), for Fig. 6 analysis
@@ -101,6 +126,7 @@ impl Sequence {
             speculative: Vec::new(),
             eos_sampled: false,
             stall_steps: 0,
+            replay_debt: 0,
             finish_reason: None,
             metrics,
             fast_trace: Vec::new(),
@@ -109,6 +135,48 @@ impl Sequence {
 
     pub fn prompt_len(&self) -> usize {
         self.req.prompt.len()
+    }
+
+    /// Total tokens the prefill phase must feed: the prompt plus, after a
+    /// preemption, every committed token except the last (gen token j is
+    /// *input* at position P + j, and the final committed token is the next
+    /// decode input rather than prefill material).
+    pub fn prefill_total(&self) -> usize {
+        self.prompt_len() + self.committed.len().saturating_sub(1)
+    }
+
+    /// The i-th prefill input token (prompt, then committed prefix).
+    pub fn prefill_token(&self, i: usize) -> u32 {
+        if i < self.prompt_len() {
+            self.req.prompt[i]
+        } else {
+            self.committed[i - self.prompt_len()]
+        }
+    }
+
+    /// Evict this sequence from its KV slot back to the queue (the caller
+    /// releases the slot itself). The committed prefix is kept and will
+    /// re-prefill on re-admission; speculative tokens are dropped (only
+    /// non-deterministic sequences are preempted and they never speculate).
+    pub fn preempt(&mut self) {
+        debug_assert!(
+            matches!(self.phase, Phase::Prefilling | Phase::Decoding),
+            "preempting inactive sequence"
+        );
+        // work actually discarded: a decoding victim loses its whole
+        // prefill span (prompt + committed-but-last); a mid-prefill victim
+        // loses only what it had prefilled so far
+        self.replay_debt += if self.phase == Phase::Decoding {
+            self.prefill_total()
+        } else {
+            self.prefill_pos
+        };
+        self.phase = Phase::Queued;
+        self.slot = usize::MAX;
+        self.prefill_pos = 0;
+        self.speculative.clear();
+        self.stall_steps = 0;
+        self.metrics.preemptions += 1;
     }
 
     /// Total generated tokens (committed + speculative).
@@ -205,6 +273,7 @@ impl Sequence {
         RequestOutput {
             id: self.id,
             deterministic: self.req.deterministic,
+            priority: self.req.priority,
             tokens: self.committed,
             finish_reason: self.finish_reason.unwrap_or(FinishReason::Length),
             metrics,
@@ -288,5 +357,54 @@ mod tests {
         s.push_fast_token(42, 999, true);
         assert_eq!(s.next_input_token(), 42);
         assert_eq!(s.next_input_position(), 4);
+    }
+
+    #[test]
+    fn preempt_resets_slot_state_but_keeps_committed() {
+        let mut s = seq(false);
+        s.slot = 2;
+        s.prefill_pos = 3;
+        s.push_fast_token(11, 999, false);
+        s.preempt();
+        assert_eq!(s.phase, Phase::Queued);
+        assert_eq!(s.slot, usize::MAX);
+        assert_eq!(s.prefill_pos, 0);
+        assert_eq!(s.committed, vec![10, 11]);
+        assert_eq!(s.metrics.preemptions, 1);
+        // a decoding victim owes its full prefill span as replay debt
+        assert_eq!(s.replay_debt, 4);
+        // re-prefill feeds prompt (3) + committed-but-last (1) = 4 tokens;
+        // the last committed token is the next decode input
+        assert_eq!(s.prefill_total(), 4);
+        assert_eq!(s.prefill_token(2), 3); // prompt[2]
+        assert_eq!(s.prefill_token(3), 10); // committed[0]
+        assert_eq!(s.next_input_token(), 11);
+        assert_eq!(s.next_input_position(), 4); // P=3, gen token 1 at P+1
+    }
+
+    #[test]
+    fn mid_prefill_preemption_owes_only_its_progress() {
+        let mut s = Sequence::new(1, Request::greedy(vec![1; 64], 8, false), 0.0);
+        s.phase = Phase::Prefilling;
+        s.slot = 1;
+        s.prefill_pos = 8; // one chunk done out of 64
+        s.preempt();
+        assert_eq!(s.replay_debt, 8, "never-prefilled tokens are not 'redone'");
+        assert_eq!(s.prefill_total(), 64);
+    }
+
+    #[test]
+    fn fresh_sequence_prefills_exactly_the_prompt() {
+        let s = Sequence::new(1, Request::greedy(vec![1, 2, 3], 8, false), 0.0);
+        assert_eq!(s.prefill_total(), 3);
+        assert_eq!(s.prefill_token(0), 1);
+    }
+
+    #[test]
+    fn request_defaults_are_background_class() {
+        let r = Request::greedy(vec![1], 4, true);
+        assert_eq!(r.priority, 0);
+        assert_eq!(r.deadline_ms, None);
+        assert_eq!(r.temperature, 0.0);
     }
 }

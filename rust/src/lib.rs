@@ -6,8 +6,10 @@
 //! determinism cheap, without batch-invariant kernels.
 //!
 //! Layers:
-//! * **L3** (this crate): request router, continuous-batching scheduler,
-//!   KV slot manager, DVR + grouped verification, sampler, metrics.
+//! * **L3** (this crate): request router, pluggable scheduling policies
+//!   (prefill-first / deadline-aware / fair-share, with priority classes
+//!   and KV slot preemption) over a continuous-batching executor, KV slot
+//!   manager, DVR + grouped verification, sampler, metrics.
 //! * **L2** (`python/compile/model.py`, build-time): the transformer
 //!   forward graph, AOT-lowered to HLO text per (bucket, window, strategy).
 //! * **L1** (`python/compile/kernels/`, build-time): pallas split-K matmul
@@ -40,8 +42,8 @@ pub mod util;
 
 pub mod prelude {
     pub use crate::engine::{
-        Engine, EngineConfig, FaultPlan, FinishReason, Mode, Request,
-        RequestOutput, StepKind,
+        Engine, EngineConfig, FaultPlan, FinishReason, Mode, PolicyKind,
+        Request, RequestOutput, StepKind,
     };
     pub use crate::error::{Error, Result};
     pub use crate::manifest::Manifest;

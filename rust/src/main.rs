@@ -15,8 +15,10 @@ llm42 — determinism in LLM inference via verified speculation
 
 USAGE:
   llm42 serve        [--addr 127.0.0.1:4242] [--mode llm42] [--group 8] [--window 32]
+                     [--policy prefill-first|deadline|fair-share]
   llm42 offline      [--profile sharegpt|arxiv] [--requests 64] [--det-ratio 0.1]
                      [--mode nondet|batch-invariant|llm42] [--qps Q] [--temp 1.0]
+                     [--policy prefill-first|deadline|fair-share]
   llm42 experiments  <fig4|fig5|fig6|fig9|fig10|fig11|fig12|table2|all> [opts]
   llm42 gen-artifacts [--out artifacts] [--preset test|tiny]
   llm42 info         [--artifacts artifacts]
@@ -25,6 +27,9 @@ COMMON:
   --artifacts DIR    artifact directory (default: artifacts)
   --group G          verification group size (default 8)
   --window T         verification window (default 32)
+  --policy P         scheduling policy: prefill-first (seed behavior),
+                     deadline (slack-triggered verification), fair-share
+                     (weighted round-robin across priority classes)
   --seed S           trace seed (default 42)
 ";
 

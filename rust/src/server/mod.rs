@@ -8,9 +8,36 @@
 //!
 //! Wire protocol (one JSON object per line):
 //!   -> {"text": "...", "max_new_tokens": 32, "deterministic": true,
-//!       "temperature": 1.0, "seed": 7}           (or "prompt": [ids])
+//!       "temperature": 1.0, "seed": 7,
+//!       "priority": 2, "deadline_ms": 500.0}     (or "prompt": [ids])
 //!   <- {"id": 3, "tokens": [...], "text": "...", "finish_reason": "eos",
-//!       "ttft_ms": 31.2, "e2e_ms": 410.0, "rollbacks": 0, "recomputed": 0}
+//!       "priority": 2, "ttft_ms": 31.2, "e2e_ms": 410.0,
+//!       "rollbacks": 0, "recomputed": 0, "preemptions": 0,
+//!       "reprefilled": 0}
+//!
+//! Request fields beyond the prompt:
+//!   * `priority` (0-255, default 0) — scheduling class; higher classes are
+//!     favored by the `deadline`/`fair-share` policies and may preempt
+//!     lower-priority non-deterministic traffic when KV slots are full.
+//!   * `deadline_ms` (> 0) — end-to-end latency target from arrival,
+//!     consumed by the `deadline` policy's verification trigger.
+//!   * `prompt` entries must be non-negative integer token ids. Malformed
+//!     fields — prompt entries, `priority`, `deadline_ms`,
+//!     `max_new_tokens`, `temperature`, `seed`, `deterministic` — are
+//!     rejected with an error, never coerced to defaults.
+//!
+//! Engine-level counters and the scheduling policy are exposed via
+//! command messages:
+//!   -> {"cmd": "stats"}
+//!   <- {"steps": ..., "preemptions": ..., "reprefilled_tokens": ...,
+//!       "queue_depth_hwm": ..., "class_e2e": {"0": {...}, ...}, ...}
+//!   -> {"cmd": "set_policy", "policy": "fair-share"}
+//!   <- {"ok": true, "policy": "fair-share"}
+//!
+//! The default policy comes from server start (`--policy` / config file);
+//! `set_policy` swaps it engine-wide at runtime. Policies reorder work,
+//! never results — committed tokens of deterministic requests are
+//! policy-independent, so switching is always safe.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -19,7 +46,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use crate::engine::{Engine, EngineConfig, FinishReason, Request, RequestOutput, StepKind};
+use crate::engine::{
+    Engine, EngineConfig, EngineMetrics, FinishReason, PolicyKind, Request,
+    RequestOutput, StepKind,
+};
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
 use crate::tokenizer::Tokenizer;
@@ -27,9 +57,29 @@ use crate::util::json::Json;
 
 /// Parse a request line. Needs the tokenizer for `"text"` prompts.
 pub fn parse_request(line: &str, tok: &Tokenizer) -> Result<Request> {
-    let v = Json::parse(line)?;
+    parse_request_value(&Json::parse(line)?, tok)
+}
+
+/// Parse an already-decoded request object. Malformed fields are rejected
+/// with an error, never silently coerced to defaults — a request served
+/// with the wrong prompt/budget is worse than a refused one.
+pub fn parse_request_value(v: &Json, tok: &Tokenizer) -> Result<Request> {
     let prompt: Vec<u32> = if let Some(arr) = v.get("prompt").and_then(|p| p.as_arr()) {
-        arr.iter().map(|x| x.as_usize().unwrap_or(0) as u32).collect()
+        // strict: every entry must be a non-negative integer token id —
+        // silently coercing garbage to token 0 would serve the wrong prompt
+        let mut p = Vec::with_capacity(arr.len());
+        for (i, x) in arr.iter().enumerate() {
+            let n = x.as_f64().ok_or_else(|| {
+                Error::Server(format!("prompt[{i}] is not a number"))
+            })?;
+            if n.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&n) {
+                return Err(Error::Server(format!(
+                    "prompt[{i}] is not a valid token id: {n}"
+                )));
+            }
+            p.push(n as u32);
+        }
+        p
     } else if let Some(text) = v.get("text").and_then(|t| t.as_str()) {
         tok.encode(text)
     } else {
@@ -38,12 +88,79 @@ pub fn parse_request(line: &str, tok: &Tokenizer) -> Result<Request> {
     if prompt.is_empty() {
         return Err(Error::Server("empty prompt".into()));
     }
+    let priority = match v.get("priority") {
+        None => 0,
+        Some(x) => {
+            let n = x
+                .as_f64()
+                .filter(|n| n.fract() == 0.0 && (0.0..=255.0).contains(n))
+                .ok_or_else(|| {
+                    Error::Server("priority must be an integer in 0..=255".into())
+                })?;
+            n as u8
+        }
+    };
+    let deadline_ms = match v.get("deadline_ms") {
+        None => None,
+        Some(x) => {
+            let n = x.as_f64().filter(|n| *n > 0.0 && n.is_finite()).ok_or_else(
+                || Error::Server("deadline_ms must be a positive number".into()),
+            )?;
+            Some(n)
+        }
+    };
+    let max_new_tokens = match v.get("max_new_tokens") {
+        None => 32,
+        Some(x) => {
+            let n = x
+                .as_f64()
+                .filter(|n| n.fract() == 0.0 && (1.0..=1e9).contains(n))
+                .ok_or_else(|| {
+                    Error::Server("max_new_tokens must be a positive integer".into())
+                })?;
+            n as usize
+        }
+    };
+    let deterministic = match v.get("deterministic") {
+        None => false,
+        Some(x) => x.as_bool().ok_or_else(|| {
+            Error::Server("deterministic must be a boolean".into())
+        })?,
+    };
+    let temperature = match v.get("temperature") {
+        None => 0.0,
+        Some(x) => {
+            let t = x
+                .as_f64()
+                .filter(|t| t.is_finite() && *t >= 0.0)
+                .ok_or_else(|| {
+                    Error::Server("temperature must be a non-negative number".into())
+                })?;
+            t as f32
+        }
+    };
+    let seed = match v.get("seed") {
+        None => 0,
+        Some(x) => {
+            // strict <: u64::MAX as f64 rounds up to 2^64, and accepting it
+            // would silently saturate the cast instead of rejecting
+            let n = x
+                .as_f64()
+                .filter(|n| n.fract() == 0.0 && *n >= 0.0 && *n < u64::MAX as f64)
+                .ok_or_else(|| {
+                    Error::Server("seed must be a non-negative integer".into())
+                })?;
+            n as u64
+        }
+    };
     Ok(Request {
         prompt,
-        max_new_tokens: v.get("max_new_tokens").and_then(|x| x.as_usize()).unwrap_or(32),
-        deterministic: v.get("deterministic").and_then(|x| x.as_bool()).unwrap_or(false),
-        temperature: v.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
-        seed: v.get("seed").and_then(|x| x.as_i64()).unwrap_or(0) as u64,
+        max_new_tokens,
+        deterministic,
+        temperature,
+        seed,
+        priority,
+        deadline_ms,
     })
 }
 
@@ -64,16 +181,57 @@ pub fn render_output(out: &RequestOutput, tok: &Tokenizer) -> String {
             }),
         ),
         ("deterministic", Json::Bool(out.deterministic)),
+        ("priority", Json::num(out.priority as f64)),
         ("ttft_ms", Json::num(out.metrics.ttft() * 1000.0)),
         ("e2e_ms", Json::num(out.metrics.e2e() * 1000.0)),
         ("rollbacks", Json::num(out.metrics.rollbacks as f64)),
         ("recomputed", Json::num(out.metrics.recomputed_tokens as f64)),
+        ("preemptions", Json::num(out.metrics.preemptions as f64)),
+        ("reprefilled", Json::num(out.metrics.reprefilled_tokens as f64)),
+    ])
+    .dump()
+}
+
+/// Serialize engine-wide counters for the `{"cmd": "stats"}` wire command.
+pub fn render_stats(m: &EngineMetrics) -> String {
+    let class_keys: Vec<String> =
+        m.class_e2e.keys().map(|c| c.to_string()).collect();
+    let class_e2e = Json::obj(
+        class_keys
+            .iter()
+            .zip(m.class_e2e.values())
+            .map(|(k, c)| {
+                (
+                    k.as_str(),
+                    Json::obj(vec![
+                        ("finished", Json::num(c.finished as f64)),
+                        ("mean_e2e_ms", Json::num(c.mean_e2e_secs() * 1000.0)),
+                        ("max_e2e_ms", Json::num(c.max_e2e_secs * 1000.0)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("steps", Json::num(m.steps as f64)),
+        ("decode_steps", Json::num(m.decode_steps as f64)),
+        ("prefill_chunks", Json::num(m.prefill_chunks as f64)),
+        ("verify_passes", Json::num(m.verify_passes as f64)),
+        ("committed_tokens", Json::num(m.committed_tokens as f64)),
+        ("rollbacks", Json::num(m.rollbacks as f64)),
+        ("recomputed_tokens", Json::num(m.recomputed_tokens as f64)),
+        ("preemptions", Json::num(m.preemptions as f64)),
+        ("reprefilled_tokens", Json::num(m.reprefilled_tokens as f64)),
+        ("queue_depth_hwm", Json::num(m.queue_depth_hwm as f64)),
+        ("class_e2e", class_e2e),
     ])
     .dump()
 }
 
 enum ToEngine {
     Submit(Request, mpsc::Sender<String>),
+    Stats(mpsc::Sender<String>),
+    SetPolicy(PolicyKind, mpsc::Sender<String>),
 }
 
 /// A running server; `shutdown()` stops the accept loop.
@@ -108,15 +266,31 @@ impl Server {
                 let mut eng = Engine::new(&mut rt, cfg)?;
                 let mut waiters: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
                 loop {
-                    // drain incoming submissions
-                    while let Ok(ToEngine::Submit(req, reply)) = rx.try_recv() {
-                        match eng.submit(req) {
-                            Ok(id) => {
-                                waiters.insert(id, reply);
+                    // drain incoming submissions and stats probes
+                    while let Ok(msg) = rx.try_recv() {
+                        match msg {
+                            ToEngine::Submit(req, reply) => match eng.submit(req) {
+                                Ok(id) => {
+                                    waiters.insert(id, reply);
+                                }
+                                Err(e) => {
+                                    let _ = reply.send(
+                                        Json::obj(vec![("error", Json::str(e.to_string()))])
+                                            .dump(),
+                                    );
+                                }
+                            },
+                            ToEngine::Stats(reply) => {
+                                let _ = reply.send(render_stats(&eng.metrics));
                             }
-                            Err(e) => {
+                            ToEngine::SetPolicy(kind, reply) => {
+                                eng.set_policy(kind);
                                 let _ = reply.send(
-                                    Json::obj(vec![("error", Json::str(e.to_string()))]).dump(),
+                                    Json::obj(vec![
+                                        ("ok", Json::Bool(true)),
+                                        ("policy", Json::str(kind.name())),
+                                    ])
+                                    .dump(),
                                 );
                             }
                         }
@@ -197,7 +371,62 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        match parse_request(&line, tok) {
+        let parsed = match Json::parse(&line) {
+            Ok(v) => v,
+            Err(e) => {
+                writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![("error", Json::str(e.to_string()))]).dump()
+                )?;
+                continue;
+            }
+        };
+        // non-request commands: {"cmd": "stats"} / {"cmd": "set_policy"}
+        if let Some(cmd) = parsed.get("cmd").and_then(|c| c.as_str()) {
+            let reply = match cmd {
+                "stats" => {
+                    let (rtx, rrx) = mpsc::channel();
+                    tx.send(ToEngine::Stats(rtx))
+                        .map_err(|_| Error::Server("engine gone".into()))?;
+                    rrx.recv()
+                        .map_err(|_| Error::Server("engine dropped reply".into()))?
+                }
+                "set_policy" => {
+                    let kind = parsed
+                        .get("policy")
+                        .and_then(|p| p.as_str())
+                        .ok_or(())
+                        .and_then(|s| PolicyKind::parse(s).map_err(|_| ()));
+                    match kind {
+                        Ok(kind) => {
+                            let (rtx, rrx) = mpsc::channel();
+                            tx.send(ToEngine::SetPolicy(kind, rtx))
+                                .map_err(|_| Error::Server("engine gone".into()))?;
+                            rrx.recv().map_err(|_| {
+                                Error::Server("engine dropped reply".into())
+                            })?
+                        }
+                        Err(()) => Json::obj(vec![(
+                            "error",
+                            Json::str(
+                                "set_policy needs 'policy': \
+                                 prefill-first | deadline | fair-share",
+                            ),
+                        )])
+                        .dump(),
+                    }
+                }
+                other => Json::obj(vec![(
+                    "error",
+                    Json::str(format!("unknown cmd '{other}'")),
+                )])
+                .dump(),
+            };
+            writeln!(writer, "{reply}")?;
+            continue;
+        }
+        match parse_request_value(&parsed, tok) {
             Ok(req) => {
                 let (rtx, rrx) = mpsc::channel();
                 tx.send(ToEngine::Submit(req, rtx))
@@ -262,6 +491,60 @@ mod tests {
         assert!(r.deterministic);
         assert_eq!(r.seed, 3);
         assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.priority, 0);
+        assert_eq!(r.deadline_ms, None);
+    }
+
+    #[test]
+    fn parse_priority_and_deadline() {
+        let r = parse_request(
+            r#"{"prompt":[4],"priority":3,"deadline_ms":250.5}"#,
+            &tok(),
+        )
+        .unwrap();
+        assert_eq!(r.priority, 3);
+        assert_eq!(r.deadline_ms, Some(250.5));
+        // out-of-range / malformed values are rejected, not clamped
+        assert!(parse_request(r#"{"prompt":[4],"priority":300}"#, &tok()).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"priority":1.5}"#, &tok()).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"priority":"hi"}"#, &tok()).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"deadline_ms":0}"#, &tok()).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"deadline_ms":-5}"#, &tok()).is_err());
+    }
+
+    #[test]
+    fn malformed_scalar_fields_rejected_not_coerced() {
+        let t = tok();
+        assert!(parse_request(r#"{"prompt":[4],"max_new_tokens":"100"}"#, &t).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"max_new_tokens":0}"#, &t).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"max_new_tokens":2.5}"#, &t).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"temperature":-1.0}"#, &t).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"temperature":"hot"}"#, &t).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"seed":-3}"#, &t).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"seed":1.5}"#, &t).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"deterministic":"yes"}"#, &t).is_err());
+        // valid values still parse
+        let r = parse_request(
+            r#"{"prompt":[4],"max_new_tokens":2,"temperature":0.5,"seed":9}"#,
+            &t,
+        )
+        .unwrap();
+        assert_eq!(r.max_new_tokens, 2);
+        assert_eq!(r.seed, 9);
+    }
+
+    #[test]
+    fn malformed_prompt_entries_rejected() {
+        // the seed silently coerced these to token 0 via unwrap_or(0)
+        assert!(parse_request(r#"{"prompt":[4,"x",6]}"#, &tok()).is_err());
+        assert!(parse_request(r#"{"prompt":[4.5]}"#, &tok()).is_err());
+        assert!(parse_request(r#"{"prompt":[-1]}"#, &tok()).is_err());
+        assert!(parse_request(r#"{"prompt":[null]}"#, &tok()).is_err());
+        assert!(parse_request(r#"{"prompt":[[5]]}"#, &tok()).is_err());
+        assert!(parse_request(r#"{"prompt":[4294967296]}"#, &tok()).is_err());
+        // boundary: u32::MAX itself is a well-formed id
+        let r = parse_request(r#"{"prompt":[4294967295]}"#, &tok()).unwrap();
+        assert_eq!(r.prompt, vec![u32::MAX]);
     }
 
     #[test]
@@ -285,6 +568,7 @@ mod tests {
         let out = RequestOutput {
             id: 9,
             deterministic: true,
+            priority: 2,
             tokens: vec![10, 11],
             finish_reason: FinishReason::Length,
             metrics: SeqMetrics {
@@ -293,6 +577,8 @@ mod tests {
                 finish_time: 2.0,
                 rollbacks: 2,
                 recomputed_tokens: 5,
+                preemptions: 1,
+                reprefilled_tokens: 7,
                 ..Default::default()
             },
             fast_trace: vec![],
@@ -301,6 +587,26 @@ mod tests {
         assert_eq!(v.u("id").unwrap(), 9);
         assert_eq!(v.s("finish_reason").unwrap(), "length");
         assert_eq!(v.u("rollbacks").unwrap(), 2);
+        assert_eq!(v.u("priority").unwrap(), 2);
+        assert_eq!(v.u("preemptions").unwrap(), 1);
+        assert_eq!(v.u("reprefilled").unwrap(), 7);
         assert!((v.f("ttft_ms").unwrap() - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn stats_render_includes_policy_counters() {
+        let mut m = EngineMetrics::default();
+        m.preemptions = 3;
+        m.reprefilled_tokens = 40;
+        m.note_queue_depth(9);
+        m.record_finished(0, 2.0);
+        m.record_finished(2, 0.25);
+        let v = Json::parse(&render_stats(&m)).unwrap();
+        assert_eq!(v.u("preemptions").unwrap(), 3);
+        assert_eq!(v.u("reprefilled_tokens").unwrap(), 40);
+        assert_eq!(v.u("queue_depth_hwm").unwrap(), 9);
+        let c2 = v.req("class_e2e").unwrap().req("2").unwrap();
+        assert_eq!(c2.u("finished").unwrap(), 1);
+        assert!((c2.f("mean_e2e_ms").unwrap() - 250.0).abs() < 1e-6);
     }
 }

@@ -163,6 +163,7 @@ impl TraceSpec {
                     deterministic,
                     temperature: self.temperature,
                     seed: self.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                    ..Default::default()
                 },
             });
         }
