@@ -1,17 +1,23 @@
 //! Engine-path benchmarks: decode step per bucket (fast vs invariant),
-//! verify pass, prefill chunk, logits extraction, and the pure-rust hot
-//! pieces (sampler, batch bookkeeping) that must never dominate L3.
+//! verify pass, prefill chunk, logits extraction, the pure-rust hot
+//! pieces (sampler, batch bookkeeping) that must never dominate L3, and a
+//! mixed-traffic scheduling-policy comparison (p99 deterministic e2e under
+//! a saturating low-priority background load).
 //!
 //!     cargo bench --bench engine
 
-use llm42::engine::sampler::sample;
+use llm42::engine::{
+    Engine, EngineConfig, Mode, PolicyKind, Request, StepKind,
+};
 use llm42::runtime::Runtime;
+use llm42::engine::sampler::sample;
 use llm42::util::rng::SplitMix64;
-use llm42::util::stats::Table;
+use llm42::util::stats::{Recorder, Table};
 
 fn main() {
     let artifacts =
         std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let _ = llm42::aot::ensure(&artifacts);
     let mut rt = match Runtime::load(&artifacts) {
         Ok(rt) => rt,
         Err(e) => {
@@ -89,4 +95,128 @@ fn main() {
          L3 is not the bottleneck (DESIGN.md §9 target)",
         16.0 * per / 1e6
     );
+
+    policy_comparison(&mut rt);
+}
+
+/// Mixed-traffic policy benchmark: a handful of high-priority deterministic
+/// requests arrive while a saturating low-priority non-deterministic
+/// background occupies every KV slot. Reports per-policy p50/p99
+/// deterministic e2e plus preemption/re-prefill cost — the scheduler split's
+/// acceptance measurement (DeadlineAware/FairShare should cut the
+/// deterministic tail vs the seed PrefillFirst policy).
+fn policy_comparison(rt: &mut Runtime) {
+    let user_slots = rt.dims().slots - 1;
+    let mut tab = Table::new(&[
+        "policy",
+        "det_p50_ms",
+        "det_p99_ms",
+        "bg_p99_ms",
+        "preemptions",
+        "reprefilled",
+        "wall_s",
+    ]);
+    for policy in [
+        PolicyKind::PrefillFirst,
+        PolicyKind::DeadlineAware,
+        PolicyKind::FairShare,
+    ] {
+        let cfg = EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 2,
+            verify_window: 16,
+            max_stall_steps: 4,
+            eos_token: u32::MAX, // run full length budgets: stable load
+            policy,
+            ..Default::default()
+        };
+        let mut eng = match Engine::new(rt, cfg) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("policy bench skipped: {e}");
+                return;
+            }
+        };
+        let _ = eng.warmup();
+
+        // saturating background: 4x as many low-priority requests as
+        // slots, long budgets — keeps every slot contended for the whole
+        // deterministic arrival window
+        let n_bg = user_slots * 4;
+        for i in 0..n_bg {
+            eng.submit(Request {
+                prompt: (10..26).map(|t| t + (i as u32 % 7)).collect(),
+                max_new_tokens: 96,
+                deterministic: false,
+                temperature: 1.0,
+                seed: 40_000 + i as u64,
+                priority: 0,
+                deadline_ms: None,
+            })
+            .unwrap();
+        }
+        // high-priority deterministic requests arrive once the background
+        // is decoding (trickled in as the run progresses); enough samples
+        // that the p99 column is a tail estimate, not a single max
+        let det_every = 15usize; // steps between deterministic arrivals
+        let n_det = 24usize;
+        let mut det_submitted = 0usize;
+        let mut steps = 0usize;
+        let t0 = llm42::util::now_secs();
+        loop {
+            if det_submitted < n_det && steps == det_every * (det_submitted + 1) {
+                eng.submit(Request {
+                    prompt: (30..42).collect(),
+                    max_new_tokens: 16,
+                    deterministic: true,
+                    temperature: 1.0,
+                    seed: 7 + det_submitted as u64,
+                    priority: 4,
+                    deadline_ms: Some(250.0),
+                })
+                .unwrap();
+                det_submitted += 1;
+            }
+            if det_submitted >= n_det && eng.idle() {
+                break;
+            }
+            match eng.step() {
+                Ok(StepKind::Idle) => {
+                    if det_submitted >= n_det {
+                        break;
+                    }
+                    // waiting for the next scripted arrival
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    eprintln!("policy bench aborted: {e}");
+                    return;
+                }
+            }
+            steps += 1;
+        }
+        let wall = llm42::util::now_secs() - t0;
+
+        let outs = eng.take_finished();
+        let mut det_e2e = Recorder::new();
+        let mut bg_e2e = Recorder::new();
+        for o in &outs {
+            if o.deterministic {
+                det_e2e.record(o.metrics.e2e() * 1e3);
+            } else {
+                bg_e2e.record(o.metrics.e2e() * 1e3);
+            }
+        }
+        tab.row(vec![
+            eng.policy_name().to_string(),
+            format!("{:.0}", det_e2e.percentile(50.0)),
+            format!("{:.0}", det_e2e.percentile(99.0)),
+            format!("{:.0}", bg_e2e.percentile(99.0)),
+            format!("{}", eng.metrics.preemptions),
+            format!("{}", eng.metrics.reprefilled_tokens),
+            format!("{wall:.1}"),
+        ]);
+    }
+    println!("== mixed traffic: policy comparison ==");
+    println!("{}", tab.render());
 }

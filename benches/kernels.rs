@@ -13,6 +13,7 @@ use llm42::util::stats::Table;
 fn main() {
     let artifacts =
         std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let _ = llm42::aot::ensure(&artifacts);
     let rt = match Runtime::load(&artifacts) {
         Ok(rt) => rt,
         Err(e) => {

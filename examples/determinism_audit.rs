@@ -13,17 +13,18 @@
 use llm42::prelude::*;
 use llm42::util::rng::SplitMix64;
 
-fn co_traffic(seed: u64, n: usize) -> Vec<Request> {
+fn co_traffic(seed: u64, n: usize, vocab: usize) -> Vec<Request> {
     let mut rng = SplitMix64::new(seed);
     (0..n)
         .map(|_| Request {
             prompt: (0..8 + rng.below(24) as usize)
-                .map(|_| 3 + rng.below(2000) as u32)
+                .map(|_| 3 + rng.below(vocab as u64 - 3) as u32)
                 .collect(),
             max_new_tokens: 8 + rng.below(56) as usize,
             deterministic: false,
             temperature: 1.0,
             seed: rng.next_u64(),
+            ..Default::default()
         })
         .collect()
 }
@@ -31,7 +32,9 @@ fn co_traffic(seed: u64, n: usize) -> Vec<Request> {
 fn main() -> Result<()> {
     let artifacts =
         std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&artifacts)?;
     let mut rt = Runtime::load(&artifacts)?;
+    let vocab = rt.dims().vocab;
 
     let audited = Request {
         prompt: (100..140).collect(),
@@ -39,11 +42,12 @@ fn main() -> Result<()> {
         deterministic: true,
         temperature: 1.0,
         seed: 4242,
+        ..Default::default()
     };
     let schedules: Vec<(&str, Vec<Request>)> = vec![
         ("solo", vec![]),
-        ("crowd of 4", co_traffic(1, 4)),
-        ("crowd of 11", co_traffic(2, 11)),
+        ("crowd of 4", co_traffic(1, 4, vocab)),
+        ("crowd of 11", co_traffic(2, 11, vocab)),
     ];
 
     let mut audited_streams = Vec::new();

@@ -1,16 +1,21 @@
 //! End-to-end serving driver (the EXPERIMENTS.md validation run).
 //!
 //!     cargo run --release --example mixed_traffic_serving -- \
-//!         [--requests 48] [--qps 4] [--det-ratio 0.1] [--mode llm42]
+//!         [--requests 48] [--qps 4] [--det-ratio 0.1] [--mode llm42] \
+//!         [--policy prefill-first|deadline|fair-share] [--det-priority 4] \
+//!         [--det-deadline-ms 400]
 //!
 //! Serves an online ShareGPT-shaped workload (Poisson arrivals) with a
 //! mixed deterministic ratio through the full three-layer stack — rust
 //! scheduler -> AOT HLO graphs -> pallas/jnp kernels — and reports
-//! throughput, latency, TTFT, and DVR overhead. Compares against the
-//! non-deterministic ceiling and the batch-invariant baseline when
-//! `--compare` is passed.
+//! throughput, latency, TTFT, DVR overhead, and the scheduling-policy
+//! counters (preemptions, re-prefilled tokens, queue pressure, per-class
+//! latency). Deterministic requests are tagged with `--det-priority` /
+//! `--det-deadline-ms` so the deadline / fair-share policies have classes
+//! to arbitrate. Compares against the non-deterministic ceiling and the
+//! batch-invariant baseline when `--compare` is passed.
 
-use llm42::engine::{EngineConfig, Mode, StepKind};
+use llm42::engine::{EngineConfig, Mode, PolicyKind, StepKind};
 use llm42::prelude::*;
 use llm42::trace::{LengthProfile, TraceSpec};
 use llm42::util::cli::Args;
@@ -21,6 +26,7 @@ fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
     let artifacts = args.str_or("artifacts", "artifacts");
+    llm42::aot::ensure(&artifacts)?;
     let mut rt = Runtime::load(&artifacts)?;
     let dims = rt.dims().clone();
 
@@ -41,22 +47,44 @@ fn main() -> Result<()> {
     } else {
         vec![Mode::parse(&args.str_or("mode", "llm42"))?]
     };
+    let policy = PolicyKind::parse(&args.str_or("policy", "prefill-first"))?;
+    let det_priority = args.usize_or("det-priority", 4)?.min(255) as u8;
+    let det_deadline_ms = args.f64_or("det-deadline-ms", 400.0)?;
 
     for mode in modes {
         let cfg = EngineConfig {
             mode,
             verify_group: args.usize_or("group", 8)?,
             verify_window: args.usize_or("window", 32)?,
+            policy,
             ..Default::default()
         };
-        serve(&mut rt, cfg, &spec)?;
+        serve(&mut rt, cfg, &spec, det_priority, det_deadline_ms)?;
     }
     Ok(())
 }
 
-fn serve(rt: &mut Runtime, cfg: EngineConfig, spec: &TraceSpec) -> Result<()> {
-    println!("== mode {:?}, det ratio {:.0}% ==", cfg.mode, spec.det_ratio * 100.0);
-    let trace = spec.generate();
+fn serve(
+    rt: &mut Runtime,
+    cfg: EngineConfig,
+    spec: &TraceSpec,
+    det_priority: u8,
+    det_deadline_ms: f64,
+) -> Result<()> {
+    println!(
+        "== mode {:?}, policy {}, det ratio {:.0}% ==",
+        cfg.mode,
+        cfg.policy.name(),
+        spec.det_ratio * 100.0
+    );
+    let mut trace = spec.generate();
+    // deterministic traffic is the latency-sensitive class
+    for tr in trace.iter_mut() {
+        if tr.req.deterministic {
+            tr.req.priority = det_priority;
+            tr.req.deadline_ms = Some(det_deadline_ms);
+        }
+    }
     let mut eng = Engine::new(rt, cfg)?;
     eng.warmup()?;
 
@@ -116,6 +144,18 @@ fn serve(rt: &mut Runtime, cfg: EngineConfig, spec: &TraceSpec) -> Result<()> {
         det_recomputed,
         m.recompute_ratio() * 100.0
     );
+    println!(
+        "  scheduling: {} preemptions, {} re-prefilled tokens, queue depth hwm {}",
+        m.preemptions, m.reprefilled_tokens, m.queue_depth_hwm
+    );
+    for (class, c) in &m.class_e2e {
+        println!(
+            "    class {class}: {} finished, e2e mean {:.2}s max {:.2}s",
+            c.finished,
+            c.mean_e2e_secs(),
+            c.max_e2e_secs
+        );
+    }
     println!(
         "  phase wall: decode {:.1}s, prefill {:.1}s, verify {:.1}s\n",
         m.decode_secs, m.prefill_secs, m.verify_secs

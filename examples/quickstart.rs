@@ -13,6 +13,7 @@ use llm42::tokenizer::Tokenizer;
 fn main() -> Result<()> {
     let artifacts =
         std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&artifacts)?;
     println!("loading runtime from {artifacts}/ ...");
     let mut rt = Runtime::load(&artifacts)?;
     println!(
@@ -43,6 +44,7 @@ fn main() -> Result<()> {
             deterministic: det,
             temperature: 1.0,
             seed: 42,
+            ..Default::default()
         };
         let id = eng.submit(req)?;
         println!("submitted #{id} (deterministic={det}): {text:?}");

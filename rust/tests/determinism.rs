@@ -5,11 +5,13 @@
 //! Requires `make artifacts` (the tiny-preset artifact set). Each test fn
 //! owns a PJRT client; assertions are grouped to amortize XLA compilation.
 
-use llm42::engine::{Engine, EngineConfig, FaultPlan, Mode, Request};
+use llm42::engine::{Engine, EngineConfig, FaultPlan, Mode, PolicyKind, Request};
 use llm42::prelude::*;
 
 fn artifacts_dir() -> String {
-    std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+    let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&dir).expect("artifact generation failed");
+    dir
 }
 
 fn cfg(mode: Mode) -> EngineConfig {
@@ -18,8 +20,7 @@ fn cfg(mode: Mode) -> EngineConfig {
         verify_group: 2,
         verify_window: 16,
         max_stall_steps: 4,
-        eos_token: 1,
-        fault: FaultPlan::None,
+        ..Default::default()
     }
 }
 
@@ -30,6 +31,7 @@ fn det_request(seed: u64) -> Request {
         deterministic: true,
         temperature: 1.0,
         seed,
+        ..Default::default()
     }
 }
 
@@ -40,6 +42,7 @@ fn co_request(seed: u64, len: usize) -> Request {
         deterministic: false,
         temperature: 1.0,
         seed,
+        ..Default::default()
     }
 }
 
@@ -214,6 +217,7 @@ fn eos_and_length_edges_respect_limits() {
             deterministic: true,
             temperature: 0.0,
             seed: 0,
+            ..Default::default()
         })
         .unwrap();
     // a deterministic request that stops mid-window
@@ -224,6 +228,7 @@ fn eos_and_length_edges_respect_limits() {
             deterministic: true,
             temperature: 1.0,
             seed: 9,
+            ..Default::default()
         })
         .unwrap();
     eng.run_to_completion().unwrap();
@@ -241,6 +246,7 @@ fn eos_and_length_edges_respect_limits() {
         deterministic: true,
         temperature: 0.0,
         seed: 0,
+        ..Default::default()
     };
     assert!(eng.submit(too_big).is_err());
     // out-of-vocab prompt rejected
@@ -250,8 +256,69 @@ fn eos_and_length_edges_respect_limits() {
         deterministic: false,
         temperature: 0.0,
         seed: 0,
+        ..Default::default()
     };
     assert!(eng.submit(bad).is_err());
+}
+
+#[test]
+fn every_policy_preserves_deterministic_streams_across_cotraffic() {
+    // Acceptance criterion for the scheduler/executor split: under every
+    // scheduling policy, Mode::Llm42 yields identical committed tokens for
+    // deterministic requests across runs with *different* background
+    // traffic — scheduling reorders work, never results. The backgrounds
+    // differ in count, length, priority, and deadlines, so the deadline /
+    // fair-share runs take genuinely different admission, verification,
+    // and preemption paths.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+
+    let bg = |seed: u64, len: usize, priority: u8, deadline: Option<f64>| Request {
+        prompt: (30..30 + 12).collect(),
+        max_new_tokens: len,
+        deterministic: false,
+        temperature: 1.0,
+        seed,
+        priority,
+        deadline_ms: deadline,
+    };
+    let backgrounds: Vec<Vec<Request>> = vec![
+        vec![],
+        vec![bg(500, 40, 0, None), bg(501, 24, 3, Some(400.0))],
+        vec![
+            bg(600, 16, 0, None),
+            bg(601, 48, 2, Some(150.0)),
+            bg(602, 32, 1, None),
+            bg(603, 20, 3, Some(50.0)),
+        ],
+    ];
+
+    for policy in [
+        PolicyKind::PrefillFirst,
+        PolicyKind::DeadlineAware,
+        PolicyKind::FairShare,
+    ] {
+        let mut streams: Vec<Vec<u32>> = Vec::new();
+        for pat in &backgrounds {
+            let mut c = cfg(Mode::Llm42);
+            c.policy = policy;
+            let mut eng = Engine::new(&mut rt, c).unwrap();
+            let mut det = det_request(7);
+            det.priority = 2;
+            det.deadline_ms = Some(800.0);
+            let det_id = eng.submit(det).unwrap();
+            for r in pat {
+                eng.submit(r.clone()).unwrap();
+            }
+            eng.run_to_completion().unwrap();
+            let outs = eng.take_finished();
+            assert_eq!(outs.len(), pat.len() + 1, "{policy:?}: all requests finish");
+            let out = outs.iter().find(|o| o.id == det_id).unwrap();
+            assert!(!out.tokens.is_empty());
+            streams.push(out.tokens.clone());
+        }
+        assert_eq!(streams[0], streams[1], "{policy:?}: bg pattern 1");
+        assert_eq!(streams[0], streams[2], "{policy:?}: bg pattern 2");
+    }
 }
 
 #[test]
@@ -264,6 +331,7 @@ fn greedy_zero_temperature_is_deterministic_even_without_dvr() {
         deterministic: false,
         temperature: 0.0,
         seed: 0,
+        ..Default::default()
     };
     let mut run = |rt: &mut Runtime| {
         let mut eng = Engine::new(rt, cfg(Mode::NonDeterministic)).unwrap();

@@ -8,7 +8,9 @@ use llm42::prelude::*;
 use llm42::util::rng::SplitMix64;
 
 fn artifacts_dir() -> String {
-    std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+    let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&dir).expect("artifact generation failed");
+    dir
 }
 
 fn random_request(rng: &mut SplitMix64, vocab: usize) -> Request {
@@ -19,6 +21,7 @@ fn random_request(rng: &mut SplitMix64, vocab: usize) -> Request {
         deterministic: rng.next_f64() < 0.5,
         temperature: if rng.next_f64() < 0.3 { 0.0 } else { 1.0 },
         seed: rng.next_u64(),
+        ..Default::default()
     }
 }
 
@@ -34,13 +37,13 @@ fn random_workloads_complete_with_invariants() {
             verify_group: [1, 2, 4][case as usize % 3],
             verify_window: 16,
             max_stall_steps: 3,
-            eos_token: 1,
             fault: if case == 2 {
                 // periodic forced mismatches stress the rollback path
                 FaultPlan::EveryNthLane { every: 3, at_index: 1 }
             } else {
                 FaultPlan::None
             },
+            ..Default::default()
         };
         let n = 8;
         let mut eng = Engine::new(&mut rt, cfg).unwrap();
@@ -132,8 +135,7 @@ fn eng_cfg_of(case: u64) -> EngineConfig {
         verify_group: [1, 2, 4][case as usize % 3],
         verify_window: 16,
         max_stall_steps: 3,
-        eos_token: 1,
-        fault: FaultPlan::None,
+        ..Default::default()
     }
 }
 
@@ -159,6 +161,7 @@ fn slot_churn_reuses_capacity() {
             deterministic: false,
             temperature: 0.0,
             seed: 0,
+            ..Default::default()
         })
         .unwrap();
     }
@@ -179,6 +182,7 @@ fn verify_group_packing_does_not_change_outputs() {
             deterministic: true,
             temperature: 1.0,
             seed: 77 + i as u64,
+            ..Default::default()
         })
         .collect();
 
@@ -188,8 +192,7 @@ fn verify_group_packing_does_not_change_outputs() {
             verify_group: group,
             verify_window: 16,
             max_stall_steps: 2,
-            eos_token: 1,
-            fault: FaultPlan::None,
+            ..Default::default()
         };
         let mut eng = Engine::new(rt, cfg).unwrap();
         for r in &reqs {

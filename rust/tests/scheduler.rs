@@ -1,0 +1,443 @@
+//! Scheduler/executor split tests: the PrefillFirst policy must replay the
+//! seed engine's decision rule exactly, preemption must free slots for
+//! high-priority traffic without corrupting anything, and FairShare must
+//! not starve low-priority classes.
+
+use llm42::engine::scheduler::prefill_first::PrefillFirst;
+use llm42::engine::sequence::Phase;
+use llm42::engine::{
+    Action, Engine, EngineConfig, Mode, PolicyKind, Request, SchedView,
+    SchedulerPolicy, StepKind,
+};
+use llm42::prelude::*;
+use llm42::util::rng::SplitMix64;
+
+fn artifacts_dir() -> String {
+    let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&dir).expect("artifact generation failed");
+    dir
+}
+
+/// Independent transcription of the seed engine's `step()` decision rule
+/// (pre-refactor `engine.rs`), predicting the `StepKind` of the next step
+/// from a state snapshot. Admission happened silently at the top of the
+/// seed's step, so it is folded into the prediction.
+fn seed_rule(v: &SchedView) -> StepKind {
+    let admitted = v.queue.len().min(v.free_slots);
+    let any_prefilling =
+        admitted > 0 || v.lanes.iter().any(|l| l.phase == Phase::Prefilling);
+    if any_prefilling {
+        return StepKind::Prefill;
+    }
+    if v.dvr {
+        let ready: Vec<&llm42::engine::LaneView> =
+            v.lanes.iter().filter(|l| l.verify_ready).collect();
+        let decodable = v.lanes.iter().filter(|l| l.can_decode).count();
+        let stalled = ready
+            .iter()
+            .any(|l| l.stall_steps >= v.max_stall_steps);
+        if !ready.is_empty()
+            && (ready.len() >= v.verify_group || stalled || decodable == 0)
+        {
+            return StepKind::Verify;
+        }
+    }
+    if v.lanes.iter().any(|l| l.can_decode) {
+        return StepKind::Decode;
+    }
+    StepKind::Idle
+}
+
+fn recorded_workload(seed: u64, vocab: usize, n: usize) -> Vec<Request> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|_| {
+            let plen = 1 + rng.below(32) as usize;
+            Request {
+                prompt: (0..plen)
+                    .map(|_| 3 + rng.below(vocab as u64 - 3) as u32)
+                    .collect(),
+                max_new_tokens: 1 + rng.below(40) as usize,
+                deterministic: rng.next_f64() < 0.5,
+                temperature: if rng.next_f64() < 0.3 { 0.0 } else { 1.0 },
+                seed: rng.next_u64(),
+                ..Default::default()
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prefill_first_replays_the_seed_step_sequence() {
+    // Property: on a recorded workload, before every step the seed decision
+    // rule (transcribed above, independent of the policy code) predicts the
+    // StepKind that the PrefillFirst executor then actually takes — i.e.
+    // the refactor preserved the seed schedule bit-for-bit. A second run
+    // must reproduce the exact same StepKind sequence.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let vocab = rt.dims().vocab;
+    let reqs = recorded_workload(2024, vocab, 10);
+
+    let mut run = |rt: &mut Runtime| -> Vec<StepKind> {
+        let cfg = EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 2,
+            verify_window: 16,
+            max_stall_steps: 3,
+            ..Default::default()
+        };
+        let mut eng = Engine::new(rt, cfg).unwrap();
+        for r in &reqs {
+            eng.submit(r.clone()).unwrap();
+        }
+        let mut kinds = Vec::new();
+        while !eng.idle() {
+            let predicted = seed_rule(&eng.view());
+            let kind = eng.step().unwrap();
+            assert_eq!(
+                kind, predicted,
+                "step {}: executor diverged from the seed rule",
+                kinds.len()
+            );
+            kinds.push(kind);
+        }
+        assert!(eng.take_finished().len() == reqs.len());
+        kinds
+    };
+
+    let a = run(&mut rt);
+    let b = run(&mut rt);
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "the step sequence itself must be reproducible");
+    assert!(a.iter().any(|&k| k == StepKind::Verify), "workload exercises DVR");
+}
+
+#[test]
+fn prefill_first_plan_matches_seed_rule_on_random_views() {
+    // Pure property test: PrefillFirst::plan on synthetic snapshots always
+    // picks the action class the seed rule dictates, with the seed's lane
+    // selection (table order, truncated to group/batch).
+    let mut rng = SplitMix64::new(77);
+    for case in 0..500 {
+        let mut lanes = Vec::new();
+        let n_lanes = rng.below(6) as usize;
+        for i in 0..n_lanes {
+            let det = rng.next_f64() < 0.5;
+            let prefilling = rng.next_f64() < 0.3;
+            let spec = if det { rng.below(16) as usize } else { 0 };
+            let ready = det && !prefilling && spec > 0 && rng.next_f64() < 0.5;
+            lanes.push(llm42::engine::LaneView {
+                idx: i,
+                id: i as u64 + 1,
+                phase: if prefilling { Phase::Prefilling } else { Phase::Decoding },
+                deterministic: det,
+                priority: rng.below(4) as u8,
+                deadline_ms: None,
+                arrive_time: i as f64,
+                prompt_len: 8,
+                prefill_pos: if prefilling { 0 } else { 8 },
+                committed: 1,
+                speculative: spec,
+                max_new_tokens: 64,
+                stall_steps: rng.below(6) as usize,
+                preemptions: 0,
+                can_decode: !prefilling && !ready && rng.next_f64() < 0.7,
+                verify_ready: ready,
+                decoding_done: false,
+            });
+        }
+        let n_queue = rng.below(4) as usize;
+        let queue: Vec<llm42::engine::QueuedView> = (0..n_queue)
+            .map(|i| llm42::engine::QueuedView {
+                idx: n_lanes + i,
+                id: (n_lanes + i) as u64 + 1,
+                priority: rng.below(4) as u8,
+                deadline_ms: None,
+                arrive_time: 50.0 + i as f64,
+                deterministic: rng.next_f64() < 0.5,
+                prompt_len: 8,
+            })
+            .collect();
+        let v = SchedView {
+            now: 100.0,
+            dvr: true,
+            verify_group: 1 + rng.below(3) as usize,
+            verify_window: 16,
+            max_stall_steps: 4,
+            max_batch: 8,
+            free_slots: rng.below(3) as usize,
+            lanes,
+            queue,
+        };
+
+        let mut p = PrefillFirst;
+        let action = p.plan(&v);
+
+        // expected, transcribed independently
+        let expected = if !v.queue.is_empty() && v.free_slots > 0 {
+            Action::Admit { n: v.queue.len().min(v.free_slots) }
+        } else if let Some(l) = v.lanes.iter().find(|l| l.phase == Phase::Prefilling) {
+            Action::Prefill { seq: l.idx }
+        } else {
+            let ready: Vec<usize> = v
+                .lanes
+                .iter()
+                .filter(|l| l.verify_ready)
+                .map(|l| l.idx)
+                .collect();
+            let decodable: Vec<usize> = v
+                .lanes
+                .iter()
+                .filter(|l| l.can_decode)
+                .map(|l| l.idx)
+                .take(v.max_batch)
+                .collect();
+            let stalled = v
+                .lanes
+                .iter()
+                .any(|l| l.verify_ready && l.stall_steps >= v.max_stall_steps);
+            if !ready.is_empty()
+                && (ready.len() >= v.verify_group || stalled || decodable.is_empty())
+            {
+                Action::Verify {
+                    lanes: ready.into_iter().take(v.verify_group).collect(),
+                }
+            } else if !decodable.is_empty() {
+                Action::Decode { lanes: decodable }
+            } else {
+                Action::Idle
+            }
+        };
+        assert_eq!(action, expected, "case {case}: view {v:?}");
+    }
+}
+
+#[test]
+fn preemption_frees_slots_for_high_priority_requests() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let user_slots = rt.dims().slots - 1;
+    let cfg = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 3,
+        policy: PolicyKind::FairShare,
+        // out-of-vocab EOS: every request runs its full length budget, so
+        // slots stay saturated and preemption is the only way in
+        eos_token: 9999,
+        ..Default::default()
+    };
+    let mut eng = Engine::new(&mut rt, cfg).unwrap();
+
+    // saturate every slot with long low-priority non-deterministic traffic
+    let mut bg_ids = Vec::new();
+    for i in 0..user_slots {
+        let id = eng
+            .submit(Request {
+                prompt: (10 + i as u32..20 + i as u32).collect(),
+                max_new_tokens: 40,
+                deterministic: false,
+                temperature: 1.0,
+                seed: 1000 + i as u64,
+                priority: 0,
+                deadline_ms: None,
+            })
+            .unwrap();
+        bg_ids.push(id);
+    }
+    // let them admit and start decoding
+    for _ in 0..user_slots * 4 {
+        eng.step().unwrap();
+    }
+    assert_eq!(eng.active_count(), user_slots);
+
+    // a high-priority deterministic request arrives behind full slots
+    let hi_id = eng
+        .submit(Request {
+            prompt: (40..52).collect(),
+            max_new_tokens: 12,
+            deterministic: true,
+            temperature: 1.0,
+            seed: 9,
+            priority: 5,
+            deadline_ms: Some(500.0),
+        })
+        .unwrap();
+
+    eng.run_to_completion().unwrap();
+    let outs = eng.take_finished();
+
+    assert!(eng.metrics.preemptions >= 1, "a victim must have been evicted");
+    assert!(
+        eng.metrics.reprefilled_tokens > 0,
+        "re-admitted victims re-prefill their committed prefix"
+    );
+    assert_eq!(outs.len(), user_slots + 1, "nobody is lost");
+
+    let hi = outs.iter().find(|o| o.id == hi_id).unwrap();
+    assert!(!hi.tokens.is_empty() && hi.tokens.len() <= 12);
+    assert_eq!(hi.metrics.preemptions, 0, "deterministic lanes are never evicted");
+
+    // victims resumed and respected their budgets
+    let preempted: Vec<_> = outs
+        .iter()
+        .filter(|o| o.metrics.preemptions > 0)
+        .collect();
+    assert!(!preempted.is_empty());
+    for o in &preempted {
+        assert!(bg_ids.contains(&o.id), "only background traffic is evicted");
+        assert!(!o.tokens.is_empty() && o.tokens.len() <= 40);
+        assert!(o.metrics.reprefilled_tokens > 0);
+    }
+
+    // per-class latency surfaced in engine metrics
+    assert!(eng.metrics.class_e2e.contains_key(&0));
+    assert!(eng.metrics.class_e2e.contains_key(&5));
+    assert_eq!(eng.metrics.class_e2e[&5].finished, 1);
+    assert!(eng.metrics.queue_depth_hwm >= user_slots as u64);
+}
+
+#[test]
+fn preempted_nondet_sequence_resumes_with_consistent_output() {
+    // Preemption mechanics in isolation: greedy non-deterministic requests
+    // resumed after eviction still produce in-vocab streams of the right
+    // length, and re-prefill accounting matches the committed prefix.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let user_slots = rt.dims().slots - 1;
+    let cfg = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 1,
+        verify_window: 8,
+        policy: PolicyKind::DeadlineAware,
+        eos_token: 9999, // structural determinism: no accidental EOS
+        ..Default::default()
+    };
+    let vocab = rt.dims().vocab;
+    let mut eng = Engine::new(&mut rt, cfg).unwrap();
+    for i in 0..user_slots {
+        eng.submit(Request {
+            prompt: vec![5 + i as u32; 6],
+            max_new_tokens: 30,
+            deterministic: false,
+            temperature: 0.0,
+            seed: 0,
+            priority: 0,
+            deadline_ms: None,
+        })
+        .unwrap();
+    }
+    for _ in 0..user_slots * 6 {
+        eng.step().unwrap();
+    }
+    eng.submit(Request {
+        prompt: vec![60; 8],
+        max_new_tokens: 8,
+        deterministic: false,
+        temperature: 0.0,
+        seed: 0,
+        priority: 7,
+        deadline_ms: Some(200.0),
+    })
+    .unwrap();
+    eng.run_to_completion().unwrap();
+    let outs = eng.take_finished();
+    assert_eq!(outs.len(), user_slots + 1);
+    assert!(eng.metrics.preemptions >= 1);
+    for o in &outs {
+        assert!(o.tokens.iter().all(|&t| (t as usize) < vocab));
+        assert!(!o.tokens.is_empty());
+    }
+}
+
+#[test]
+fn fair_share_does_not_starve_low_priority_classes() {
+    // Starvation-freedom: with a pile of high-priority requests and a few
+    // low-priority ones all queued at once, WRR admission interleaves the
+    // classes — some low-priority request must finish before the last
+    // high-priority one.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let cfg = EngineConfig {
+        mode: Mode::NonDeterministic,
+        verify_window: 16,
+        policy: PolicyKind::FairShare,
+        eos_token: 9999, // every request runs exactly max_new_tokens
+        ..Default::default()
+    };
+    let mut eng = Engine::new(&mut rt, cfg).unwrap();
+    let mut low_ids = Vec::new();
+    let mut high_ids = Vec::new();
+    for i in 0..8u32 {
+        let id = eng
+            .submit(Request {
+                prompt: vec![10 + i; 8],
+                max_new_tokens: 12,
+                deterministic: false,
+                temperature: 0.0,
+                seed: 0,
+                priority: 3,
+                deadline_ms: None,
+            })
+            .unwrap();
+        high_ids.push(id);
+    }
+    for i in 0..2u32 {
+        let id = eng
+            .submit(Request {
+                prompt: vec![40 + i; 8],
+                max_new_tokens: 12,
+                deterministic: false,
+                temperature: 0.0,
+                seed: 0,
+                priority: 0,
+                deadline_ms: None,
+            })
+            .unwrap();
+        low_ids.push(id);
+    }
+    eng.run_to_completion().unwrap();
+    let outs = eng.take_finished();
+    assert_eq!(outs.len(), 10);
+
+    let finish = |id: u64| {
+        outs.iter()
+            .find(|o| o.id == id)
+            .unwrap()
+            .metrics
+            .finish_time
+    };
+    let first_low = low_ids
+        .iter()
+        .map(|&id| finish(id))
+        .fold(f64::INFINITY, f64::min);
+    let last_high = high_ids
+        .iter()
+        .map(|&id| finish(id))
+        .fold(0.0f64, f64::max);
+    assert!(
+        first_low < last_high,
+        "a low-priority request must finish before the last high-priority one \
+         (first_low {first_low}, last_high {last_high})"
+    );
+
+    // class latency accounting covers both classes
+    assert_eq!(eng.metrics.class_e2e[&3].finished, 8);
+    assert_eq!(eng.metrics.class_e2e[&0].finished, 2);
+}
+
+#[test]
+fn engine_reports_its_policy() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    for (kind, name) in [
+        (PolicyKind::PrefillFirst, "prefill-first"),
+        (PolicyKind::DeadlineAware, "deadline"),
+        (PolicyKind::FairShare, "fair-share"),
+    ] {
+        let cfg = EngineConfig {
+            mode: Mode::NonDeterministic,
+            policy: kind,
+            ..Default::default()
+        };
+        let eng = Engine::new(&mut rt, cfg).unwrap();
+        assert_eq!(eng.policy_name(), name);
+    }
+}

@@ -7,7 +7,9 @@ use llm42::tokenizer::{Tokenizer, FIRST_MERGE};
 use llm42::util::json::Json;
 
 fn artifacts_dir() -> String {
-    std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+    let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&dir).expect("artifact generation failed");
+    dir
 }
 
 #[test]
@@ -67,6 +69,71 @@ fn serve_roundtrip_mixed_clients() {
         .request(&Json::parse(r#"{"max_new_tokens": 4}"#).unwrap())
         .unwrap();
     assert!(bad.get("error").is_some());
+    // malformed prompt-array entries are rejected (the seed silently
+    // coerced them to token 0 and served the wrong prompt)
+    let coerced = c1
+        .request(&Json::parse(r#"{"prompt": [10, "x", 12]}"#).unwrap())
+        .unwrap();
+    assert!(
+        coerced.get("error").is_some(),
+        "non-numeric prompt entry must be rejected: {coerced:?}"
+    );
+    let fractional = c1
+        .request(&Json::parse(r#"{"prompt": [10, 11.5]}"#).unwrap())
+        .unwrap();
+    assert!(fractional.get("error").is_some());
+    // invalid priority rejected
+    let bad_prio = c1
+        .request(&Json::parse(r#"{"prompt": [10], "priority": 999}"#).unwrap())
+        .unwrap();
+    assert!(bad_prio.get("error").is_some());
+
+    // the stats command reports engine counters
+    let stats = c1
+        .request(&Json::parse(r#"{"cmd": "stats"}"#).unwrap())
+        .unwrap();
+    assert!(stats.get("error").is_none(), "{stats:?}");
+    assert!(stats.u("steps").unwrap() > 0);
+    assert!(stats.get("preemptions").is_some());
+    assert!(stats.get("queue_depth_hwm").is_some());
+    assert!(stats.get("class_e2e").is_some());
+
+    // the policy can be switched over the wire; results stay identical
+    // (policies reorder work, never results)
+    let sw = c1
+        .request(&Json::parse(r#"{"cmd": "set_policy", "policy": "fair-share"}"#).unwrap())
+        .unwrap();
+    assert_eq!(sw.s("policy").unwrap(), "fair-share", "{sw:?}");
+    let resp4 = c1.request(&req).unwrap();
+    let tokens_c: Vec<usize> = resp4
+        .arr("tokens")
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap())
+        .collect();
+    assert_eq!(
+        tokens_a, tokens_c,
+        "deterministic stream must survive a policy switch"
+    );
+    let bad_policy = c1
+        .request(&Json::parse(r#"{"cmd": "set_policy", "policy": "wat"}"#).unwrap())
+        .unwrap();
+    assert!(bad_policy.get("error").is_some());
+    let unknown_cmd = c1
+        .request(&Json::parse(r#"{"cmd": "reboot"}"#).unwrap())
+        .unwrap();
+    assert!(unknown_cmd.get("error").is_some());
+
+    // priority/deadline round-trip: response echoes the class
+    let prio_req = Json::parse(
+        r#"{"prompt": [10,11,12], "max_new_tokens": 4, "priority": 3,
+            "deadline_ms": 400.0}"#,
+    )
+    .unwrap();
+    let prio_resp = c1.request(&prio_req).unwrap();
+    assert!(prio_resp.get("error").is_none(), "{prio_resp:?}");
+    assert_eq!(prio_resp.u("priority").unwrap(), 3);
+    assert!(prio_resp.get("preemptions").is_some());
     let oversized = c1
         .request(
             &Json::obj(vec![
