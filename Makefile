@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: artifacts artifacts-test build test fmt-check
+.PHONY: artifacts artifacts-test build test fmt-check lint bench-check
 
 artifacts:
 	cd rust && $(CARGO) run --release -- gen-artifacts --out artifacts --preset tiny
@@ -20,3 +20,9 @@ test:
 
 fmt-check:
 	cd rust && $(CARGO) fmt --check
+
+lint:
+	cd rust && $(CARGO) clippy --all-targets -- -D warnings
+
+bench-check:
+	cd rust && $(CARGO) bench --no-run

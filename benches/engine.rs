@@ -97,6 +97,106 @@ fn main() {
     );
 
     policy_comparison(&mut rt);
+    multiturn_cache_comparison(&mut rt);
+}
+
+/// Multi-turn chat, closed loop: every follow-up turn resubmits the
+/// committed history (shared system prompt + prior turns), the
+/// prefix-cache-heavy workload class. Reports prefill tokens computed vs
+/// served from cache and deterministic TTFT with the cache off vs on —
+/// the paged-KV acceptance measurement (>= 30% prefill-token reduction
+/// from cache hits on this shape).
+fn multiturn_cache_comparison(rt: &mut Runtime) {
+    let mut tab = Table::new(&[
+        "prefix_cache",
+        "prefill_tok",
+        "cache_hit_tok",
+        "prefill_saved_%",
+        "ttft_p50_ms",
+        "ttft_p99_ms",
+    ]);
+    let n_convs = 4usize;
+    let turns = 5usize;
+    let mut baseline_prefill = 0u64;
+    for cache in [false, true] {
+        let cfg = EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 4,
+            verify_window: 16,
+            max_stall_steps: 4,
+            eos_token: u32::MAX, // full budgets: identical turn shapes
+            prefix_cache: cache,
+            ..Default::default()
+        };
+        let mut eng = match Engine::new(rt, cfg) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("multiturn bench skipped: {e}");
+                return;
+            }
+        };
+        let _ = eng.warmup();
+
+        // identical shared system prompt across every conversation
+        let system: Vec<u32> = (40..64).collect();
+        let mut histories: Vec<Vec<u32>> = vec![system.clone(); n_convs];
+        let mut ttft = Recorder::new();
+        for turn in 0..turns {
+            let mut wave: Vec<(u64, usize)> = Vec::new();
+            for c in 0..n_convs {
+                let mut prompt = histories[c].clone();
+                for k in 0..6usize {
+                    prompt.push(70 + ((turn * 13 + c * 7 + k) as u32 % 300));
+                }
+                histories[c] = prompt.clone();
+                let id = eng
+                    .submit(Request {
+                        prompt,
+                        max_new_tokens: 8,
+                        deterministic: true,
+                        temperature: 1.0,
+                        seed: (turn * n_convs + c) as u64,
+                        priority: 0,
+                        deadline_ms: None,
+                    })
+                    .unwrap();
+                wave.push((id, c));
+            }
+            if let Err(e) = eng.run_to_completion() {
+                eprintln!("multiturn bench aborted: {e}");
+                return;
+            }
+            // closed loop: append each reply's committed tokens to its
+            // conversation before the next turn resubmits the history
+            let outs = eng.take_finished();
+            for (id, c) in wave {
+                let o = outs.iter().find(|o| o.id == id).expect("turn finished");
+                histories[c].extend(o.tokens.iter().copied());
+                ttft.record(o.metrics.ttft() * 1e3);
+            }
+        }
+        let prefill = eng.metrics.prefill_tokens;
+        let hits = eng.metrics.cache_hit_tokens;
+        if !cache {
+            baseline_prefill = prefill;
+        }
+        let saved = if cache && baseline_prefill > 0 {
+            100.0 * (baseline_prefill.saturating_sub(prefill)) as f64
+                / baseline_prefill as f64
+        } else {
+            0.0
+        };
+        tab.row(vec![
+            format!("{cache}"),
+            format!("{prefill}"),
+            format!("{hits}"),
+            format!("{saved:.0}"),
+            format!("{:.0}", ttft.percentile(50.0)),
+            format!("{:.0}", ttft.percentile(99.0)),
+        ]);
+    }
+    println!("== multiturn chat: prefix cache off vs on ==");
+    println!("{}", tab.render());
 }
 
 /// Mixed-traffic policy benchmark: a handful of high-priority deterministic

@@ -3,7 +3,8 @@
 //!     cargo run --release --example mixed_traffic_serving -- \
 //!         [--requests 48] [--qps 4] [--det-ratio 0.1] [--mode llm42] \
 //!         [--policy prefill-first|deadline|fair-share] [--det-priority 4] \
-//!         [--det-deadline-ms 400]
+//!         [--det-deadline-ms 400] [--workload sharegpt|arxiv|multiturn] \
+//!         [--prefix-cache true|false]
 //!
 //! Serves an online ShareGPT-shaped workload (Poisson arrivals) with a
 //! mixed deterministic ratio through the full three-layer stack — rust
@@ -30,8 +31,17 @@ fn main() -> Result<()> {
     let mut rt = Runtime::load(&artifacts)?;
     let dims = rt.dims().clone();
 
+    let profile = match args.str_or("workload", "sharegpt").as_str() {
+        "sharegpt" => LengthProfile::sharegpt(),
+        "arxiv" => LengthProfile::arxiv(),
+        "multiturn" => LengthProfile::multiturn(),
+        other => {
+            eprintln!("unknown --workload '{other}' (sharegpt | arxiv | multiturn)");
+            std::process::exit(2);
+        }
+    };
     let spec = TraceSpec {
-        profile: LengthProfile::sharegpt(),
+        profile,
         n_requests: args.usize_or("requests", 48)?,
         det_ratio: args.f64_or("det-ratio", 0.1)?,
         qps: Some(args.f64_or("qps", 4.0)?),
@@ -57,6 +67,7 @@ fn main() -> Result<()> {
             verify_group: args.usize_or("group", 8)?,
             verify_window: args.usize_or("window", 32)?,
             policy,
+            prefix_cache: args.bool_or("prefix-cache", false)?,
             ..Default::default()
         };
         serve(&mut rt, cfg, &spec, det_priority, det_deadline_ms)?;
@@ -72,10 +83,12 @@ fn serve(
     det_deadline_ms: f64,
 ) -> Result<()> {
     println!(
-        "== mode {:?}, policy {}, det ratio {:.0}% ==",
+        "== mode {:?}, policy {}, workload {}, det ratio {:.0}%, prefix cache {} ==",
         cfg.mode,
         cfg.policy.name(),
-        spec.det_ratio * 100.0
+        spec.profile.name(),
+        spec.det_ratio * 100.0,
+        if cfg.prefix_cache { "on" } else { "off" }
     );
     let mut trace = spec.generate();
     // deterministic traffic is the latency-sensitive class
@@ -147,6 +160,21 @@ fn serve(
     println!(
         "  scheduling: {} preemptions, {} re-prefilled tokens, queue depth hwm {}",
         m.preemptions, m.reprefilled_tokens, m.queue_depth_hwm
+    );
+    let kv = eng.kv_stats();
+    println!(
+        "  KV: {} pages x {} positions | free {} cached {} held {} | evicted {}",
+        kv.user_pages, kv.block_size, kv.free_pages, kv.cached_pages, kv.held_pages,
+        kv.evicted_pages
+    );
+    println!(
+        "  prefix cache: {} hits, {} tokens served from cache ({:.0}% hit rate), \
+         {} re-prefill tokens saved, {} COW copies",
+        m.cache_hits,
+        m.cache_hit_tokens,
+        m.cache_hit_rate() * 100.0,
+        m.reprefill_saved_tokens,
+        m.cow_copies
     );
     for (class, c) in &m.class_e2e {
         println!(

@@ -38,6 +38,9 @@ pub struct Preset {
     pub max_seq: usize,
     pub slots: usize,
     pub max_fwd_tokens: usize,
+    /// KV page size in positions for the paged addressing mode (must
+    /// divide `max_seq`); the pool is `slots * max_seq / block_size` pages.
+    pub block_size: usize,
     pub logit_scale: f64,
     pub rope_theta: f64,
     pub rms_eps: f64,
@@ -61,6 +64,7 @@ impl Preset {
                 max_seq: 160,
                 slots: 5,
                 max_fwd_tokens: 256,
+                block_size: 16,
                 logit_scale: 6.0,
                 rope_theta: 10000.0,
                 rms_eps: 1e-5,
@@ -79,6 +83,7 @@ impl Preset {
                 max_seq: 640,
                 slots: 17,
                 max_fwd_tokens: 512,
+                block_size: 16,
                 logit_scale: 6.0,
                 rope_theta: 10000.0,
                 rms_eps: 1e-5,
@@ -167,6 +172,7 @@ fn dims_lines(p: &Preset) -> Vec<(String, String)> {
         ("max_seq".into(), p.max_seq.to_string()),
         ("slots".into(), p.slots.to_string()),
         ("max_fwd_tokens".into(), p.max_fwd_tokens.to_string()),
+        ("block_size".into(), p.block_size.to_string()),
         ("logit_scale".into(), p.logit_scale.to_string()),
         ("rope_theta".into(), p.rope_theta.to_string()),
         ("rms_eps".into(), p.rms_eps.to_string()),
@@ -244,6 +250,21 @@ fn artifact_defs(p: &Preset) -> Vec<ArtifactDef> {
             ));
         }
     }
+
+    // KV page copy (the COW primitive for paged prefix sharing)
+    defs.push(ArtifactDef {
+        name: "copy_pages".into(),
+        kind: "copy",
+        g: 1,
+        t: 1,
+        strategy: "inv",
+        extra: {
+            let mut e: Vec<(String, String)> =
+                vec![("op".into(), "copy_pages".into())];
+            e.extend(dims_lines(p));
+            e
+        },
+    });
 
     // logits extraction tiers (powers of two up to the region size)
     let mut r = 1usize;
@@ -371,7 +392,28 @@ fn generate_weights(p: &Preset) -> (Vec<u8>, Vec<Json>) {
 
 /// Emit a full artifact set into `dir` (created if missing).
 pub fn generate(dir: impl AsRef<Path>, preset_name: &str) -> Result<()> {
-    let p = Preset::by_name(preset_name)?;
+    generate_opts(dir, preset_name, None)
+}
+
+/// Like [`generate`] but with an explicit KV page size override
+/// (`--block-size` on the CLI). The page size is baked into every forward
+/// descriptor because it is part of the KV addressing contract between the
+/// engine and the compiled graphs.
+pub fn generate_opts(
+    dir: impl AsRef<Path>,
+    preset_name: &str,
+    block_size: Option<usize>,
+) -> Result<()> {
+    let mut p = Preset::by_name(preset_name)?;
+    if let Some(bs) = block_size {
+        p.block_size = bs;
+    }
+    if p.block_size == 0 || p.max_seq % p.block_size != 0 {
+        return Err(Error::Config(format!(
+            "block_size {} must be nonzero and divide max_seq {}",
+            p.block_size, p.max_seq
+        )));
+    }
     let dir = dir.as_ref();
     std::fs::create_dir_all(dir)?;
 
@@ -417,6 +459,7 @@ pub fn generate(dir: impl AsRef<Path>, preset_name: &str) -> Result<()> {
                 ("max_seq", Json::num(p.max_seq as f64)),
                 ("slots", Json::num(p.slots as f64)),
                 ("max_fwd_tokens", Json::num(p.max_fwd_tokens as f64)),
+                ("block_size", Json::num(p.block_size as f64)),
                 ("logit_scale", Json::num(p.logit_scale)),
             ]),
         ),
@@ -442,15 +485,56 @@ pub fn generate(dir: impl AsRef<Path>, preset_name: &str) -> Result<()> {
 
 static ENSURE_LOCK: Mutex<()> = Mutex::new(());
 
-/// Generate the `test` preset into `dir` if no manifest is present. Safe
-/// to call concurrently from test threads; cross-process races are handled
+/// True when the manifest at `man` was emitted by a generator that knows
+/// about KV paging (block_size in the model dims + the copy_pages
+/// artifact). Pre-paging sets are regenerated rather than half-trusted.
+fn manifest_is_current(man: &Path) -> bool {
+    std::fs::read_to_string(man)
+        .map(|t| t.contains("\"block_size\"") && t.contains("copy_pages"))
+        .unwrap_or(false)
+}
+
+/// True when the manifest at `man` is one of our own self-bootstrapped
+/// `test`-preset sets (the only kind `ensure` may regenerate in place —
+/// a user-provided artifact dir must never be touched, stale or not).
+fn manifest_is_ensure_owned(man: &Path) -> bool {
+    let text = match std::fs::read_to_string(man) {
+        Ok(t) => t,
+        Err(_) => return false,
+    };
+    Json::parse(&text)
+        .ok()
+        .and_then(|v| {
+            v.req("model")
+                .ok()
+                .and_then(|m| m.s("name").ok().map(|n| n == "test"))
+        })
+        .unwrap_or(false)
+}
+
+/// Generate the `test` preset into `dir` if no current manifest is
+/// present. A stale pre-paging set is regenerated **in place** only when
+/// it is itself a self-bootstrapped `test` set; any other artifact dir is
+/// left untouched (the engine reports "re-run `make artifacts`" with a
+/// clear error rather than this helper destroying user data). Safe to
+/// call concurrently from test threads; cross-process races are handled
 /// by generating into a temp dir and renaming it into place.
 pub fn ensure(dir: &str) -> Result<()> {
     let _guard = ENSURE_LOCK.lock().map_err(|_| {
         Error::Engine("artifact ensure lock poisoned".into())
     })?;
     let manifest = Path::new(dir).join("manifest.json");
+    if manifest_is_current(&manifest) {
+        return Ok(());
+    }
     if manifest.exists() {
+        if manifest_is_ensure_owned(&manifest) {
+            // our own stale test set: refresh the contract files in place
+            // (no deletion — descriptors/weights/manifest are overwritten)
+            return generate(dir, "test");
+        }
+        // a user artifact set we must not touch; downstream loads produce
+        // the actionable "re-run `make artifacts`" error
         return Ok(());
     }
     let tmp = format!("{dir}.tmp{}", std::process::id());
@@ -460,7 +544,7 @@ pub fn ensure(dir: &str) -> Result<()> {
         Ok(()) => Ok(()),
         Err(e) => {
             let _ = std::fs::remove_dir_all(&tmp);
-            if manifest.exists() {
+            if manifest_is_current(&manifest) {
                 // another process won the race with a complete set
                 Ok(())
             } else if Path::new(dir).exists() {
@@ -490,6 +574,9 @@ mod tests {
         assert!(man.extract_tiers().contains(&256));
         assert!(man.artifact("window_inv_g8_t32").is_some());
         assert!(man.artifact("gemm_fast_m1").is_some());
+        assert!(man.artifact("copy_pages").is_some());
+        assert_eq!(man.model.block_size, 16);
+        assert_eq!(man.model.num_pages(), 5 * 160 / 16);
         // weight table covers the model exactly (validated by load, but
         // assert the file size too)
         let total: usize = man.weights.iter().map(|w| w.size_floats).sum();
@@ -503,5 +590,14 @@ mod tests {
     #[test]
     fn unknown_preset_rejected() {
         assert!(Preset::by_name("huge").is_err());
+    }
+
+    #[test]
+    fn bad_block_size_rejected() {
+        let dir = std::env::temp_dir().join(format!("llm42-aot-bs-{}", std::process::id()));
+        // 7 does not divide max_seq 160; 0 is meaningless
+        assert!(generate_opts(&dir, "test", Some(7)).is_err());
+        assert!(generate_opts(&dir, "test", Some(0)).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

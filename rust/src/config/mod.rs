@@ -15,13 +15,19 @@
 //!   "verify_window": 32,
 //!   "max_stall_steps": 8,
 //!   "eos_token": 1,
+//!   "prefix_cache": true,
+//!   "block_size": 0,
 //!   "server": { "addr": "127.0.0.1:4242" }
 //! }
 //! ```
 //!
 //! `policy` selects the scheduling policy (`prefill-first` — the seed
 //! behavior — `deadline`, or `fair-share`); the policy affects latency
-//! and fairness only, never committed tokens.
+//! and fairness only, never committed tokens. `prefix_cache` enables
+//! block-granular prefix sharing (cache hits skip prefill compute but
+//! still verify; committed tokens of deterministic requests are bitwise
+//! identical either way). `block_size` (0 = the artifact set's baked-in
+//! page size) must match the compiled KV addressing.
 
 use crate::engine::{EngineConfig, FaultPlan, Mode, PolicyKind};
 use crate::error::{Error, Result};
@@ -70,6 +76,12 @@ impl AppConfig {
         if let Some(e) = v.get("eos_token").and_then(|x| x.as_usize()) {
             cfg.engine.eos_token = e as u32;
         }
+        if let Some(b) = v.get("block_size").and_then(|x| x.as_usize()) {
+            cfg.engine.block_size = b;
+        }
+        if let Some(p) = v.get("prefix_cache").and_then(|x| x.as_bool()) {
+            cfg.engine.prefix_cache = p;
+        }
         if let Some(srv) = v.get("server") {
             if let Some(a) = srv.get("addr").and_then(|x| x.as_str()) {
                 cfg.server_addr = a.to_string();
@@ -84,7 +96,8 @@ impl AppConfig {
     }
 
     /// CLI flags override file values (`--mode`, `--policy`, `--group`,
-    /// `--window`, `--artifacts`, `--addr`, `--max-stall`, `--eos`).
+    /// `--window`, `--artifacts`, `--addr`, `--max-stall`, `--eos`,
+    /// `--block-size`, `--prefix-cache true|false`).
     pub fn apply_args(mut self, args: &Args) -> Result<AppConfig> {
         if let Some(m) = args.get("mode") {
             self.engine.mode = Mode::parse(m)?;
@@ -98,6 +111,10 @@ impl AppConfig {
             args.usize_or("max-stall", self.engine.max_stall_steps)?;
         self.engine.eos_token =
             args.usize_or("eos", self.engine.eos_token as usize)? as u32;
+        self.engine.block_size =
+            args.usize_or("block-size", self.engine.block_size)?;
+        self.engine.prefix_cache =
+            args.bool_or("prefix-cache", self.engine.prefix_cache)?;
         self.artifacts = args.str_or("artifacts", &self.artifacts);
         self.server_addr = args.str_or("addr", &self.server_addr);
         self.engine.fault = FaultPlan::None; // never configurable in prod
@@ -111,6 +128,8 @@ impl AppConfig {
                 "verify_group >= 1 and verify_window >= 2 required".into(),
             ));
         }
+        // a nonzero block_size is only a *request*; the engine checks it
+        // against the artifact set's baked-in page size at startup
         Ok(())
     }
 
@@ -164,6 +183,22 @@ mod tests {
         assert_eq!(c.engine.mode, Mode::Llm42);
         assert_eq!(c.engine.verify_group, 2);
         assert_eq!(c.engine.verify_window, 16); // file value survives
+    }
+
+    #[test]
+    fn prefix_cache_and_block_size_from_file_and_flags() {
+        let c = AppConfig::from_json(r#"{"prefix_cache": true, "block_size": 32}"#)
+            .unwrap();
+        assert!(c.engine.prefix_cache);
+        assert_eq!(c.engine.block_size, 32);
+        let c = c.apply_args(&args("--prefix-cache false --block-size 16")).unwrap();
+        assert!(!c.engine.prefix_cache);
+        assert_eq!(c.engine.block_size, 16);
+        // defaults: cache off (seed decision-compatible), manifest page size
+        let d = AppConfig::resolve(&args("")).unwrap();
+        assert!(!d.engine.prefix_cache);
+        assert_eq!(d.engine.block_size, 0);
+        assert!(AppConfig::resolve(&args("--prefix-cache wat")).is_err());
     }
 
     #[test]

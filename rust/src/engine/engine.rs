@@ -12,13 +12,25 @@
 //!      the same step; forward-pass actions (`Prefill`, `Decode`, `Verify`)
 //!      and `Idle` end the step with the matching [`StepKind`].
 //!
-//! The executor owns the *mechanics* — KV slots, chunked prefill, padded
-//! decode buckets, grouped verification, rollback application, metrics —
-//! and validates every action against engine invariants, so a buggy policy
-//! fails loudly instead of corrupting state. The policy owns the
-//! *decisions*: admission order, verify triggers, lane selection, and KV
-//! slot preemption (evicting a low-priority non-deterministic sequence
-//! back to the queue; its committed prefix re-prefills on re-admission).
+//! The executor owns the *mechanics* — the paged KV cache
+//! ([`crate::engine::kv`]): block tables, prefix-cache admission,
+//! copy-on-write, chunked prefill, padded decode buckets, grouped
+//! verification, rollback application, metrics — and validates every
+//! action against engine invariants, so a buggy policy fails loudly
+//! instead of corrupting state. The policy owns the *decisions*:
+//! admission order, verify triggers, lane selection, and KV preemption
+//! (evicting a low-priority non-deterministic sequence back to the queue;
+//! its committed prefix re-prefills on re-admission, minus whatever prefix
+//! blocks are still cached).
+//!
+//! KV memory model: every forward pass addresses the pool through
+//! per-lane block tables (`KvManager::lane_table`); padding lanes get
+//! all-trash tables (the paged twin of the seed's trash slot). With
+//! `prefix_cache` disabled the engine is decision-compatible with the
+//! slot-based seed: admission seats = `slots - 1` and worst-case block
+//! reservations provably never bind first (`tests/scheduler.rs` replay
+//! test pins this). With it enabled, the seat cap is lifted and admission
+//! reasons about free + reclaimable cached blocks.
 //!
 //! Modes (paper §5 baselines):
 //! * `NonDeterministic` — fast path only, everything commits (SGLang
@@ -37,7 +49,7 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
-use crate::engine::kv::SlotAllocator;
+use crate::engine::kv::{blocks_for, KvManager, KvStats};
 use crate::engine::metrics::EngineMetrics;
 use crate::engine::sampler::sample;
 use crate::engine::scheduler::{
@@ -90,6 +102,14 @@ pub struct EngineConfig {
     pub fault: FaultPlan,
     /// scheduling policy (prefill-first reproduces the seed behavior)
     pub policy: PolicyKind,
+    /// KV page size in positions. 0 = take the artifact set's baked-in
+    /// value (the page size is part of the kernel addressing contract, so
+    /// a nonzero value must match the manifest).
+    pub block_size: usize,
+    /// Block-granular prefix sharing: new requests adopt committed KV
+    /// blocks from finished/live sequences. Off by default — the off
+    /// state is decision-compatible with the slot-based seed engine.
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -102,6 +122,8 @@ impl Default for EngineConfig {
             eos_token: 1,
             fault: FaultPlan::None,
             policy: PolicyKind::PrefillFirst,
+            block_size: 0,
+            prefix_cache: false,
         }
     }
 }
@@ -119,7 +141,7 @@ pub struct Engine<'rt> {
     rt: &'rt mut Runtime,
     pub cfg: EngineConfig,
     policy: Box<dyn SchedulerPolicy>,
-    slots: SlotAllocator,
+    kv: KvManager,
     seqs: Vec<Sequence>,
     queue: VecDeque<usize>,
     finished: Vec<RequestOutput>,
@@ -129,6 +151,7 @@ pub struct Engine<'rt> {
     decode_buckets: Vec<usize>,
     prefill_chunks: Vec<usize>,
     invariant_bucket: usize,
+    max_seq: usize,
 }
 
 impl<'rt> Engine<'rt> {
@@ -144,6 +167,28 @@ impl<'rt> Engine<'rt> {
                 Runtime::window_artifact(cfg.verify_group, cfg.verify_window);
             rt.manifest.require(&name)?;
         }
+        if dims.block_size == 0 {
+            return Err(Error::Manifest(
+                "artifact set has no KV page size (pre-paging manifest); \
+                 re-run `make artifacts`"
+                    .into(),
+            ));
+        }
+        if cfg.block_size != 0 && cfg.block_size != dims.block_size {
+            return Err(Error::Config(format!(
+                "block_size {} does not match the artifact set's {} — the page \
+                 size is baked into the compiled KV addressing; regenerate \
+                 artifacts with `gen-artifacts --block-size {}`",
+                cfg.block_size, dims.block_size, cfg.block_size
+            )));
+        }
+        let kv = KvManager::new(
+            dims.num_pages(),
+            dims.block_size,
+            dims.max_seq,
+            dims.user_slots(),
+            cfg.prefix_cache,
+        )?;
         let invariant_bucket = *decode_buckets.last().unwrap();
         rt.reset_state()?;
         let policy = cfg.policy.build();
@@ -151,7 +196,7 @@ impl<'rt> Engine<'rt> {
             rt,
             cfg,
             policy,
-            slots: SlotAllocator::new(dims.slots, dims.max_seq),
+            kv,
             seqs: Vec::new(),
             queue: VecDeque::new(),
             finished: Vec::new(),
@@ -161,7 +206,13 @@ impl<'rt> Engine<'rt> {
             decode_buckets,
             prefill_chunks,
             invariant_bucket,
+            max_seq: dims.max_seq,
         })
+    }
+
+    /// Live KV pool occupancy (blocks free / cached / held, cache traffic).
+    pub fn kv_stats(&self) -> KvStats {
+        self.kv.stats()
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -208,6 +259,9 @@ impl<'rt> Engine<'rt> {
         for tier in self.rt.manifest.extract_tiers() {
             names.push(format!("extract_r{tier}"));
         }
+        if self.cfg.prefix_cache {
+            names.push("copy_pages".into());
+        }
         let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
         self.rt.warmup(&refs)
     }
@@ -225,16 +279,60 @@ impl<'rt> Engine<'rt> {
         *self.decode_buckets.last().unwrap()
     }
 
-    /// Submit a request; returns its id. Requests are queued until a KV
-    /// slot frees up (continuous batching admits at step granularity).
+    /// Validate that a request fits the KV pool for its whole lifetime,
+    /// including the verifier's padded window (DESIGN.md §5): the last
+    /// window position is P + max_new - 1 + (T - 1), which must stay
+    /// below max_seq or padded KV writes would spill past the block table.
+    fn fits(&self, prompt_len: usize, max_new: usize, window: usize) -> bool {
+        prompt_len >= 1
+            && max_new >= 1
+            && prompt_len + max_new + window <= self.max_seq
+    }
+
+    /// Worst-case KV positions a sequence can ever write in its current
+    /// admission epoch: its lifetime span (prompt + budget + window) or
+    /// the padded reach of its prefill chunking, whichever is larger,
+    /// capped at max_seq (the device bound either way).
+    fn worst_positions(&self, seq: &Sequence) -> usize {
+        let lifetime =
+            seq.prompt_len() + seq.req.max_new_tokens + self.cfg.verify_window;
+        let padded = padded_prefill_end(seq.prefill_total(), &self.prefill_chunks);
+        lifetime.max(padded).min(self.max_seq)
+    }
+
+    /// Extra page reservation for copy-on-write headroom. The publish
+    /// limit ends strictly below every write frontier, so on the live
+    /// paths COW never actually fires (`prepare_write` enforces rather
+    /// than expects this); one page of headroom per committed-publishing
+    /// sequence keeps a violated invariant a copied page instead of a
+    /// capacity error.
+    fn cow_budget(&self, deterministic: bool, _max_new: usize) -> usize {
+        if self.cfg.prefix_cache && (self.dvr() && deterministic || self.invariant_decode())
+        {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Submit a request; returns its id. Requests are queued until KV
+    /// blocks free up (continuous batching admits at step granularity).
     pub fn submit(&mut self, req: Request) -> Result<u64> {
         let window = self.cfg.verify_window;
-        if !self.slots.fits(req.prompt.len(), req.max_new_tokens, window) {
+        if !self.fits(req.prompt.len(), req.max_new_tokens, window) {
             return Err(Error::Capacity(format!(
-                "request does not fit a slot: prompt {} + max_new {} + window {window} > max_seq {}",
+                "request does not fit the KV pool: prompt {} + max_new {} + window {window} > max_seq {}",
                 req.prompt.len(),
                 req.max_new_tokens,
                 self.rt.dims().max_seq
+            )));
+        }
+        let cow = self.cow_budget(req.deterministic, req.max_new_tokens);
+        if !self.kv.fits_pool(self.max_seq, cow) {
+            return Err(Error::Capacity(format!(
+                "request can never fit the KV pool: {} worst-case blocks + {cow} \
+                 COW headroom exceed the user pages",
+                blocks_for(self.max_seq, self.kv.block_size()),
             )));
         }
         let vocab = self.rt.dims().vocab as u32;
@@ -260,6 +358,9 @@ impl<'rt> Engine<'rt> {
     }
 
     pub fn take_finished(&mut self) -> Vec<RequestOutput> {
+        // metrics mirror KV counters at step start; collecting results is
+        // the natural read point, so bring them current here too
+        self.sync_kv_metrics();
         std::mem::take(&mut self.finished)
     }
 
@@ -280,6 +381,38 @@ impl<'rt> Engine<'rt> {
             }
         }
         Ok(())
+    }
+
+    /// One admission probe for a queued sequence: `(new blocks it would
+    /// allocate, admittable right now?)` — a single radix lookup, shared
+    /// by the capacity count and the QueuedView so the hot planning loop
+    /// never walks the prefix tree twice per request.
+    fn queued_admission(&self, s: &Sequence) -> (usize, bool) {
+        let worst = self.worst_positions(s);
+        let cow = self.cow_budget(s.req.deterministic, s.req.max_new_tokens);
+        if !self.cfg.prefix_cache {
+            // no lookup, no token materialization: seats are the gate
+            let need = blocks_for(worst, self.kv.block_size()) + cow;
+            return (need, self.kv.seats_free() > 0);
+        }
+        self.kv.admission_check(
+            &s.content_tokens(s.prefill_total()),
+            worst,
+            cow,
+        )
+    }
+
+    /// Admission capacity for the policy layer. Cache off: the seed's
+    /// free-seat count (decision-compatible). Cache on: how many queued
+    /// requests individually fit the free + reclaimable blocks right now.
+    fn admission_capacity(&self) -> usize {
+        if !self.cfg.prefix_cache {
+            return self.kv.seats_free();
+        }
+        self.queue
+            .iter()
+            .filter(|&&i| self.queued_admission(&self.seqs[i]).1)
+            .count()
     }
 
     /// Snapshot the scheduling-relevant engine state. Policies plan over
@@ -307,16 +440,24 @@ impl<'rt> Engine<'rt> {
                 max_new_tokens: s.req.max_new_tokens,
                 stall_steps: s.stall_steps,
                 preemptions: s.metrics.preemptions,
+                kv_blocks: self.kv.held(s.id),
                 can_decode: s.can_decode(window, dvr),
                 verify_ready: s.verify_ready(window),
                 decoding_done: s.decoding_done(),
             })
             .collect();
+        // one admission probe per queued request feeds both the per-entry
+        // need_blocks and the capacity count
+        let mut admittable = 0usize;
         let queue: Vec<QueuedView> = self
             .queue
             .iter()
             .map(|&i| {
                 let s = &self.seqs[i];
+                let (need_blocks, ok) = self.queued_admission(s);
+                if ok {
+                    admittable += 1;
+                }
                 QueuedView {
                     idx: i,
                     id: s.id,
@@ -325,9 +466,16 @@ impl<'rt> Engine<'rt> {
                     arrive_time: s.metrics.arrive_time,
                     deterministic: s.req.deterministic,
                     prompt_len: s.prompt_len(),
+                    need_blocks,
                 }
             })
             .collect();
+        let free_slots = if self.cfg.prefix_cache {
+            admittable
+        } else {
+            self.kv.seats_free()
+        };
+        let kv = self.kv.stats();
         SchedView {
             now: now_secs(),
             dvr,
@@ -335,7 +483,10 @@ impl<'rt> Engine<'rt> {
             verify_window: window,
             max_stall_steps: self.cfg.max_stall_steps,
             max_batch: self.max_batch(),
-            free_slots: self.slots.free_count(),
+            free_slots,
+            free_blocks: kv.free_pages,
+            cached_blocks: kv.cached_pages,
+            prefix_cache: self.cfg.prefix_cache,
             lanes,
             queue,
         }
@@ -344,11 +495,12 @@ impl<'rt> Engine<'rt> {
     /// One scheduler iteration; executes at most one forward pass.
     pub fn step(&mut self) -> Result<StepKind> {
         self.metrics.steps += 1;
+        self.sync_kv_metrics();
         // Bookkeeping actions loop back for a re-plan; the bound is a
-        // policy-bug backstop. A legitimate burst can preempt and admit
-        // once per user slot (2 rounds each), so the bound scales with
-        // the slot count rather than being a fixed constant.
-        let max_rounds = 4 * self.slots.user_slots() + 8;
+        // policy-bug backstop. A legitimate burst can preempt once per
+        // active lane and admit once per queued request, so the bound
+        // scales with the live population rather than being a constant.
+        let max_rounds = 4 * (self.kv.active() + self.queue.len()).max(2) + 8;
         // Victims evicted in this step are hidden from admissions later in
         // the same step: the freed slot must go to the beneficiary that
         // justified the eviction, not bounce straight back to the victim
@@ -410,7 +562,7 @@ impl<'rt> Engine<'rt> {
         view: &SchedView,
         deferred: &[usize],
     ) -> Result<()> {
-        if n == 0 || self.queue.is_empty() || self.slots.free_count() == 0 {
+        if n == 0 || self.queue.is_empty() || self.admission_capacity() == 0 {
             return Err(Error::Engine(
                 "policy bug: Admit with nothing admittable".into(),
             ));
@@ -432,7 +584,7 @@ impl<'rt> Engine<'rt> {
         };
         let mut admitted = 0usize;
         for idx in order {
-            if admitted >= n || self.slots.free_count() == 0 {
+            if admitted >= n {
                 break;
             }
             let pos = self.queue.iter().position(|&q| q == idx).ok_or_else(|| {
@@ -440,13 +592,86 @@ impl<'rt> Engine<'rt> {
                     "policy bug: admit_order returned non-queued index {idx}"
                 ))
             })?;
+            // reserve blocks and adopt cached prefix pages; a request that
+            // does not fit right now is skipped, not admitted partially
+            let (id, toks, worst, cow) = {
+                let s = &self.seqs[idx];
+                (
+                    s.id,
+                    s.content_tokens(s.prefill_total()),
+                    self.worst_positions(s),
+                    self.cow_budget(s.req.deterministic, s.req.max_new_tokens),
+                )
+            };
+            let hit = match self.kv.try_admit(id, &toks, worst, cow) {
+                Some(hit) => hit,
+                None => continue,
+            };
             self.queue.remove(pos);
-            let slot = self.slots.alloc(self.seqs[idx].id)?;
             let seq = &mut self.seqs[idx];
-            seq.slot = slot;
+            debug_assert!(hit + 1 <= seq.prefill_total().max(1));
+            seq.prefill_pos = hit;
             seq.phase = Phase::Prefilling;
             seq.metrics.prefill_start = now_secs();
+            if hit > 0 {
+                // engine-wide hit counters mirror the KvManager's in
+                // sync_kv_metrics; only per-sequence accounting lives here
+                seq.metrics.cache_hit_tokens += hit as u64;
+                // replay debt repaid by the cache: re-prefill work a
+                // preempted victim would otherwise redo
+                let saved = seq.replay_debt.min(hit);
+                seq.replay_debt -= saved;
+                self.metrics.reprefill_saved_tokens += saved as u64;
+            }
             admitted += 1;
+        }
+        if admitted == 0 {
+            // Block-granular corner (cache on): an eviction may have freed
+            // only enough blocks for the victim itself — the filtered
+            // order then admits nobody even though capacity is nonzero.
+            // Fall back to the hidden victims rather than erroring out:
+            // progress beats the anti-bounce heuristic.
+            let fallback: Vec<usize> = self
+                .queue
+                .iter()
+                .copied()
+                .filter(|i| deferred.contains(i))
+                .collect();
+            for idx in fallback {
+                if admitted >= n {
+                    break;
+                }
+                let (id, toks, worst, cow) = {
+                    let s = &self.seqs[idx];
+                    (
+                        s.id,
+                        s.content_tokens(s.prefill_total()),
+                        self.worst_positions(s),
+                        self.cow_budget(s.req.deterministic, s.req.max_new_tokens),
+                    )
+                };
+                let hit = match self.kv.try_admit(id, &toks, worst, cow) {
+                    Some(hit) => hit,
+                    None => continue,
+                };
+                let pos = self
+                    .queue
+                    .iter()
+                    .position(|&q| q == idx)
+                    .expect("fallback index is queued");
+                self.queue.remove(pos);
+                let seq = &mut self.seqs[idx];
+                seq.prefill_pos = hit;
+                seq.phase = Phase::Prefilling;
+                seq.metrics.prefill_start = now_secs();
+                if hit > 0 {
+                    seq.metrics.cache_hit_tokens += hit as u64;
+                    let saved = seq.replay_debt.min(hit);
+                    seq.replay_debt -= saved;
+                    self.metrics.reprefill_saved_tokens += saved as u64;
+                }
+                admitted += 1;
+            }
         }
         if admitted == 0 {
             return Err(Error::Engine("policy bug: Admit made no progress".into()));
@@ -455,10 +680,11 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Evict an active non-deterministic sequence back to the queue. Its
-    /// KV slot frees immediately; the committed prefix re-prefills on
-    /// re-admission (decode-input position bookkeeping survives because
-    /// gen token j is input at position P + j regardless of how the KV for
-    /// earlier positions was produced).
+    /// KV pages free immediately (published prefix pages stay cached, so
+    /// its own re-admission may hit them); the committed prefix
+    /// re-prefills on re-admission (decode-input position bookkeeping
+    /// survives because gen token j is input at position P + j regardless
+    /// of how the KV for earlier positions was produced).
     fn apply_preempt(&mut self, victim: usize) -> Result<()> {
         let seq = self.seqs.get(victim).ok_or_else(|| {
             Error::Engine(format!("policy bug: Preempt on unknown sequence {victim}"))
@@ -473,13 +699,22 @@ impl<'rt> Engine<'rt> {
                 "policy bug: Preempt on inactive sequence {victim}"
             )));
         }
-        let slot = seq.slot;
-        self.slots.release(slot)?;
+        self.kv.release(seq.id)?;
         self.seqs[victim].preempt();
         self.queue.push_back(victim);
         self.metrics.preemptions += 1;
         self.metrics.note_queue_depth(self.queue.len());
         Ok(())
+    }
+
+    /// Mirror the KvManager's monotone counters into the engine metrics
+    /// (single writer: the manager owns the truth, metrics are a view;
+    /// eviction counts live only in `KvStats::evicted_pages`).
+    fn sync_kv_metrics(&mut self) {
+        let s = self.kv.stats();
+        self.metrics.cache_hits = s.cache_hits;
+        self.metrics.cache_hit_tokens = s.cache_hit_tokens;
+        self.metrics.cow_copies = s.cow_copies;
     }
 
     fn check_unique(lanes: &[usize]) -> Result<()> {
@@ -560,7 +795,7 @@ impl<'rt> Engine<'rt> {
 
     // ---------------------------------------------------------- prefill
     fn prefill_chunk(&mut self, idx: usize) -> Result<()> {
-        let (slot, start, real, chunk, tokens, has_committed) = {
+        let (id, start, real, chunk, tokens, has_committed) = {
             let seq = &self.seqs[idx];
             let total = seq.prefill_total();
             let remaining = total - seq.prefill_pos;
@@ -572,7 +807,7 @@ impl<'rt> Engine<'rt> {
             tokens.resize(chunk, 0); // pad tokens; their KV is overwritten
                                      // before any later step can attend to it
             (
-                seq.slot,
+                seq.id,
                 seq.prefill_pos,
                 real,
                 chunk,
@@ -581,11 +816,19 @@ impl<'rt> Engine<'rt> {
             )
         };
 
+        // allocate pages covering the padded chunk and COW anything shared
+        // (prefill resumes at a block boundary past any cache hit, so
+        // copies here mean a publisher invariant was violated — prepare
+        // anyway: the write must land in private memory)
+        let copies = self.kv.prepare_write(id, start, start + chunk)?;
+        self.run_cow_copies(&copies)?;
+        let table = self.kv.lane_table(id)?;
+
         let artifact = Runtime::window_artifact(1, chunk);
         self.rt.forward(
             &artifact,
             &tokens,
-            &[slot as i32],
+            &table,
             &[start as i32],
         )?;
         self.metrics.prefill_chunks += 1;
@@ -602,6 +845,12 @@ impl<'rt> Engine<'rt> {
 
         let seq = &mut self.seqs[idx];
         seq.prefill_pos += real;
+        // newly prefilled prompt/committed blocks are invariant-schedule
+        // KV: publishable up to the prefilled span
+        let written = seq.prefill_pos;
+        self.publish_seq(idx, written);
+
+        let seq = &mut self.seqs[idx];
         if seq.prefill_pos < seq.prefill_total() {
             return Ok(());
         }
@@ -638,19 +887,57 @@ impl<'rt> Engine<'rt> {
     /// final partial piece (padded). Chunk choice depends only on the
     /// request itself, so prefill is reproducible across runs.
     fn pick_chunk(&self, remaining: usize) -> usize {
-        let mut best = None;
-        for &c in &self.prefill_chunks {
-            if c <= remaining {
-                best = Some(c);
-            }
+        pick_chunk_in(&self.prefill_chunks, remaining)
+    }
+
+    /// Execute pending copy-on-write page copies device-side, before the
+    /// forward pass whose writes triggered them.
+    fn run_cow_copies(&mut self, copies: &[(i32, i32)]) -> Result<()> {
+        if copies.is_empty() {
+            return Ok(());
         }
-        best.unwrap_or_else(|| {
-            *self
-                .prefill_chunks
-                .iter()
-                .find(|&&c| c >= remaining)
-                .unwrap_or_else(|| self.prefill_chunks.last().unwrap())
-        })
+        let src: Vec<i32> = copies.iter().map(|&(s, _)| s).collect();
+        let dst: Vec<i32> = copies.iter().map(|&(_, d)| d).collect();
+        self.rt.copy_pages(&src, &dst)
+    }
+
+    /// Highest position (exclusive) whose KV is a pure function of this
+    /// sequence's token prefix — the publishable span. Positions hold
+    /// invariant-schedule KV up to there; at and beyond it lives fast-path
+    /// or stale rollback KV that must never enter the prefix index.
+    ///
+    /// * DVR-deterministic and batch-invariant traffic: `P + C - 1` — every
+    ///   committed position except the frontier input slot, which is
+    ///   rewritten by fast decode (DVR) or not yet written (the next
+    ///   token's input).
+    /// * everything else: whatever prefill built this admission epoch
+    ///   (prompt, plus the invariant re-prefilled committed prefix after a
+    ///   preemption); fast-path commits never extend it.
+    fn publish_limit(&self, seq: &Sequence) -> usize {
+        let committed_publisher = match self.cfg.mode {
+            Mode::Llm42 => seq.req.deterministic,
+            Mode::BatchInvariant => true,
+            Mode::NonDeterministic => false,
+        };
+        if committed_publisher {
+            (seq.prompt_len() + seq.committed.len()).saturating_sub(1)
+        } else {
+            seq.prefill_pos
+        }
+    }
+
+    /// Publish this sequence's full blocks below `min(publish_limit,
+    /// written)` into the prefix index (no-op with the cache disabled).
+    fn publish_seq(&mut self, idx: usize, written: usize) {
+        if !self.cfg.prefix_cache {
+            return;
+        }
+        let (id, toks) = {
+            let seq = &self.seqs[idx];
+            let limit = self.publish_limit(seq).min(written);
+            (seq.id, seq.content_tokens(limit))
+        };
+        self.kv.publish_up_to(id, &toks);
     }
 
     // ----------------------------------------------------------- decode
@@ -666,19 +953,32 @@ impl<'rt> Engine<'rt> {
                 .find(|&b| b >= count)
                 .ok_or_else(|| Error::Engine("batch exceeds max bucket".into()))?
         };
-        let trash = self.slots.trash_slot() as i32;
         let mut tokens = vec![0i32; bucket];
-        let mut slots = vec![trash; bucket];
         let mut positions = vec![0i32; bucket];
+        let mut all_copies: Vec<(i32, i32)> = Vec::new();
         for (lane, &idx) in lanes.iter().enumerate() {
-            let s = &self.seqs[idx];
-            tokens[lane] = s.next_input_token() as i32;
-            slots[lane] = s.slot as i32;
-            positions[lane] = s.next_input_position() as i32;
+            let (id, pos) = {
+                let s = &self.seqs[idx];
+                tokens[lane] = s.next_input_token() as i32;
+                positions[lane] = s.next_input_position() as i32;
+                (s.id, s.next_input_position())
+            };
+            all_copies.extend(self.kv.prepare_write(id, pos, pos + 1)?);
+        }
+        self.run_cow_copies(&all_copies)?;
+        // block tables after COW remaps; padding lanes are all-trash
+        let bpl = self.kv.blocks_per_lane();
+        let mut tables: Vec<i32> = Vec::with_capacity(bucket * bpl);
+        for lane in 0..bucket {
+            if lane < lanes.len() {
+                tables.extend(self.kv.lane_table(self.seqs[lanes[lane]].id)?);
+            } else {
+                tables.extend(self.kv.trash_table());
+            }
         }
 
         let artifact = Runtime::decode_artifact(bucket, self.invariant_decode());
-        self.rt.forward(&artifact, &tokens, &slots, &positions)?;
+        self.rt.forward(&artifact, &tokens, &tables, &positions)?;
         self.metrics.decode_steps += 1;
 
         let vocab = self.rt.dims().vocab;
@@ -697,6 +997,13 @@ impl<'rt> Engine<'rt> {
             if !spec_lane {
                 self.metrics.committed_tokens += 1;
             }
+            if self.invariant_decode() {
+                // batch-invariant commits are universal-schedule KV: the
+                // newly covered blocks become publishable immediately
+                let seq = &self.seqs[idx];
+                let written = seq.prompt_len() + seq.committed.len();
+                self.publish_seq(idx, written.saturating_sub(1));
+            }
             if finished {
                 to_retire.push(idx);
             }
@@ -712,27 +1019,41 @@ impl<'rt> Engine<'rt> {
         let g = self.cfg.verify_group;
         let t = self.cfg.verify_window;
         debug_assert!(lanes.len() <= g);
-        let trash = self.slots.trash_slot() as i32;
         let mut tokens = vec![0i32; g * t];
-        let mut slots = vec![trash; g];
         let mut positions = vec![0i32; g];
+        let mut all_copies: Vec<(i32, i32)> = Vec::new();
 
         for (lane, &idx) in lanes.iter().enumerate() {
-            let s = &self.seqs[idx];
-            debug_assert!(!s.committed.is_empty() && !s.speculative.is_empty());
-            // window inputs: last committed token, then the speculative run
-            let base = lane * t;
-            tokens[base] = *s.committed.last().unwrap() as i32;
-            for (j, &sp) in s.speculative.iter().take(t - 1).enumerate() {
-                tokens[base + 1 + j] = sp as i32;
+            let (id, start) = {
+                let s = &self.seqs[idx];
+                debug_assert!(!s.committed.is_empty() && !s.speculative.is_empty());
+                // window inputs: last committed token, then the speculative run
+                let base = lane * t;
+                tokens[base] = *s.committed.last().unwrap() as i32;
+                for (j, &sp) in s.speculative.iter().take(t - 1).enumerate() {
+                    tokens[base + 1 + j] = sp as i32;
+                }
+                let start = s.prompt_len() + s.committed.len() - 1;
+                positions[lane] = start as i32;
+                (s.id, start)
+            };
+            // the window rewrite may roll back shared state: COW anything
+            // in [start, start+t) that another table or the index holds
+            all_copies.extend(self.kv.prepare_write(id, start, start + t)?);
+        }
+        self.run_cow_copies(&all_copies)?;
+        let bpl = self.kv.blocks_per_lane();
+        let mut tables: Vec<i32> = Vec::with_capacity(g * bpl);
+        for lane in 0..g {
+            if lane < lanes.len() {
+                tables.extend(self.kv.lane_table(self.seqs[lanes[lane]].id)?);
+            } else {
+                tables.extend(self.kv.trash_table());
             }
-            slots[lane] = s.slot as i32;
-            positions[lane] =
-                (s.prompt_len() + s.committed.len() - 1) as i32;
         }
 
         let artifact = Runtime::window_artifact(g, t);
-        self.rt.forward(&artifact, &tokens, &slots, &positions)?;
+        self.rt.forward(&artifact, &tokens, &tables, &positions)?;
         self.metrics.verify_passes += 1;
         self.metrics.verify_lanes += lanes.len() as u64;
 
@@ -792,8 +1113,17 @@ impl<'rt> Engine<'rt> {
                 self.metrics.rollbacks += 1;
                 self.metrics.recomputed_tokens += d.discarded as u64;
             }
-            if let Some(reason) = d.finish {
-                seq.finish(reason);
+            let finish = d.finish;
+            // the verifier just rewrote the window with invariant-schedule
+            // KV: every committed position below the new frontier input is
+            // now publishable (pure function of the committed tokens)
+            let written = {
+                let s = &self.seqs[idx];
+                (s.prompt_len() + s.committed.len()).saturating_sub(1)
+            };
+            self.publish_seq(idx, written);
+            if let Some(reason) = finish {
+                self.seqs[idx].finish(reason);
                 to_retire.push(idx);
             }
         }
@@ -803,12 +1133,12 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
-    /// Free the slot and move the sequence to the finished list.
+    /// Release the block table (published pages stay cached) and move the
+    /// sequence to the finished list.
     fn retire(&mut self, idx: usize) -> Result<()> {
         debug_assert_eq!(self.seqs[idx].phase, Phase::Finished);
-        let slot = self.seqs[idx].slot;
-        self.slots.release(slot)?;
         let id = self.seqs[idx].id;
+        self.kv.release(id)?;
         let mut tomb = Sequence::new(id, Request::greedy(vec![0], 1, false), 0.0);
         tomb.phase = Phase::Finished;
         let done = std::mem::replace(&mut self.seqs[idx], tomb);
@@ -816,5 +1146,66 @@ impl<'rt> Engine<'rt> {
         self.metrics.record_finished(out.priority, out.metrics.e2e());
         self.finished.push(out);
         Ok(())
+    }
+}
+
+/// Largest chunk <= remaining, else the smallest chunk covering the final
+/// partial piece (the seed `pick_chunk` rule, shared with the reservation
+/// math).
+fn pick_chunk_in(chunks: &[usize], remaining: usize) -> usize {
+    let mut best = None;
+    for &c in chunks {
+        if c <= remaining {
+            best = Some(c);
+        }
+    }
+    best.unwrap_or_else(|| {
+        *chunks
+            .iter()
+            .find(|&&c| c >= remaining)
+            .unwrap_or_else(|| chunks.last().unwrap())
+    })
+}
+
+/// Highest position (exclusive) the chunked prefill of `total` tokens can
+/// write, padding included — the final partial chunk pads up to a full
+/// artifact shape, so the padded reach can exceed the request's lifetime
+/// span. Deterministic in `total`, so reservations can account for it.
+fn padded_prefill_end(total: usize, chunks: &[usize]) -> usize {
+    let mut pos = 0usize;
+    let mut end = total;
+    while pos < total {
+        let remaining = total - pos;
+        let chunk = pick_chunk_in(chunks, remaining);
+        end = end.max(pos + chunk);
+        pos += remaining.min(chunk);
+    }
+    end
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_prefill_end_covers_tail_padding() {
+        let chunks = [8usize, 16, 32, 64];
+        assert_eq!(padded_prefill_end(0, &chunks), 0);
+        assert_eq!(padded_prefill_end(8, &chunks), 8, "exact chunk: no pad");
+        assert_eq!(padded_prefill_end(5, &chunks), 8, "tail pads to 8");
+        // 40 = 32 + 8 exact; 41 = 32 + 8 + pad-to-8 (tail 1 -> chunk 8)
+        assert_eq!(padded_prefill_end(40, &chunks), 40);
+        assert_eq!(padded_prefill_end(41, &chunks), 48);
+        // 33 = 32 + tail 1 -> 32 + 8
+        assert_eq!(padded_prefill_end(33, &chunks), 40);
+    }
+
+    #[test]
+    fn pick_chunk_matches_seed_rule() {
+        let chunks = [8usize, 16, 32, 64];
+        assert_eq!(pick_chunk_in(&chunks, 70), 64);
+        assert_eq!(pick_chunk_in(&chunks, 32), 32);
+        assert_eq!(pick_chunk_in(&chunks, 7), 8);
+        assert_eq!(pick_chunk_in(&chunks, 1), 8);
     }
 }

@@ -1,0 +1,297 @@
+//! Block-granular KV memory: the device pool viewed as fixed-size pages.
+//!
+//! The device state still holds `slots * max_seq` KV positions (the paged
+//! artifacts address the *same* memory); this pool divides them into
+//! `num_pages` pages of `block_size` positions. The last page is the
+//! *trash* page — padding lanes point every block-table entry at it, the
+//! paged twin of the seed's trash slot.
+//!
+//! Page lifecycle:
+//!
+//! * **free** — on the free list, content meaningless.
+//! * **held** — referenced by ≥ 1 live sequence block table (`refs > 0`).
+//! * **published** — additionally keyed in the [`super::PrefixIndex`];
+//!   published pages are immutable (the executor copies-on-write before
+//!   any forward pass that would touch one).
+//! * **cached** — published with `refs == 0` (no live holder): reclaimable
+//!   via LRU eviction when the free list runs dry.
+//!
+//! Admission is *reservation-based*: a sequence reserves its worst-case
+//! page count up front (`reserve`), and every later allocation draws from
+//! that reservation, so an admitted sequence can never fail a mid-flight
+//! allocation — the paged analogue of the seed's "a slot covers max_seq"
+//! guarantee. `available() >= outstanding()` is the pool invariant.
+
+use crate::error::{Error, Result};
+
+#[derive(Debug)]
+pub struct BlockPool {
+    block_size: usize,
+    num_pages: usize,
+    /// live block-table references per page (excludes the index itself)
+    refs: Vec<u32>,
+    /// page content is keyed in the prefix index (immutable while set)
+    published: Vec<bool>,
+    /// LRU stamp (pool-wide monotone tick) for cached-page eviction
+    last_use: Vec<u64>,
+    /// pages with refs == 0 && !published, LIFO for locality
+    free: Vec<u32>,
+    /// count of published pages with refs == 0 (reclaimable)
+    cached: usize,
+    /// pages future in-reservation allocations may still claim
+    outstanding: usize,
+    tick: u64,
+    /// cached pages reclaimed by LRU eviction over the pool's lifetime
+    pub evicted_pages: u64,
+}
+
+impl BlockPool {
+    /// `num_pages` includes the trash page (the last page), which is never
+    /// handed out.
+    pub fn new(num_pages: usize, block_size: usize) -> Self {
+        assert!(num_pages >= 2, "need at least one user page plus trash");
+        assert!(block_size >= 1);
+        BlockPool {
+            block_size,
+            num_pages,
+            refs: vec![0; num_pages],
+            published: vec![false; num_pages],
+            last_use: vec![0; num_pages],
+            free: (0..num_pages as u32 - 1).rev().collect(),
+            cached: 0,
+            outstanding: 0,
+            tick: 0,
+            evicted_pages: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn trash_page(&self) -> u32 {
+        self.num_pages as u32 - 1
+    }
+
+    pub fn user_pages(&self) -> usize {
+        self.num_pages - 1
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Published pages with no live holder (LRU-evictable cache).
+    pub fn cached_count(&self) -> usize {
+        self.cached
+    }
+
+    /// Pages referenced by at least one live sequence.
+    pub fn held_count(&self) -> usize {
+        self.refs.iter().filter(|&&r| r > 0).count()
+    }
+
+    /// Pages an admission may still promise without overcommitting.
+    pub fn available(&self) -> usize {
+        self.free.len() + self.cached
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    pub fn can_reserve(&self, need: usize) -> bool {
+        self.available() >= self.outstanding + need
+    }
+
+    /// Promise `need` future allocations to a sequence. Fails loudly on
+    /// overcommit — callers must gate on `can_reserve`.
+    pub fn reserve(&mut self, need: usize) -> Result<()> {
+        if !self.can_reserve(need) {
+            return Err(Error::Capacity(format!(
+                "KV overcommit: reserve {need} with {} available, {} outstanding",
+                self.available(),
+                self.outstanding
+            )));
+        }
+        self.outstanding += need;
+        Ok(())
+    }
+
+    /// Return the unallocated remainder of a reservation (sequence left).
+    pub fn unreserve(&mut self, remaining: usize) {
+        debug_assert!(remaining <= self.outstanding);
+        self.outstanding = self.outstanding.saturating_sub(remaining);
+    }
+
+    pub fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    pub fn touch(&mut self, page: u32) {
+        self.tick += 1;
+        self.last_use[page as usize] = self.tick;
+    }
+
+    pub fn last_use(&self, page: u32) -> u64 {
+        self.last_use[page as usize]
+    }
+
+    pub fn refs(&self, page: u32) -> u32 {
+        self.refs[page as usize]
+    }
+
+    pub fn is_published(&self, page: u32) -> bool {
+        self.published[page as usize]
+    }
+
+    /// Published pages must not be rewritten in place; shared pages would
+    /// corrupt their other holders.
+    pub fn needs_cow(&self, page: u32) -> bool {
+        self.refs[page as usize] > 1 || self.published[page as usize]
+    }
+
+    pub fn is_reclaimable(&self, page: u32) -> bool {
+        self.refs[page as usize] == 0 && self.published[page as usize]
+    }
+
+    /// Pop a free page for a sequence table (refs = 1). `from_reservation`
+    /// draws down the caller's promised budget; callers without remaining
+    /// budget may still allocate best-effort from real availability.
+    pub fn alloc(&mut self, from_reservation: bool) -> Option<u32> {
+        let page = self.free.pop()?;
+        debug_assert_eq!(self.refs[page as usize], 0);
+        debug_assert!(!self.published[page as usize]);
+        self.refs[page as usize] = 1;
+        if from_reservation {
+            self.outstanding = self.outstanding.saturating_sub(1);
+        }
+        self.touch(page);
+        Some(page)
+    }
+
+    /// Add a live reference (prefix-cache hit adopting a page).
+    pub fn ref_page(&mut self, page: u32) {
+        if self.refs[page as usize] == 0 && self.published[page as usize] {
+            self.cached -= 1;
+        }
+        self.refs[page as usize] += 1;
+        self.touch(page);
+    }
+
+    /// Drop a live reference; unreferenced pages become cached (if
+    /// published) or free.
+    pub fn unref_page(&mut self, page: u32) {
+        let r = &mut self.refs[page as usize];
+        debug_assert!(*r > 0, "unref of unreferenced page {page}");
+        *r -= 1;
+        if *r == 0 {
+            if self.published[page as usize] {
+                self.cached += 1;
+            } else {
+                self.free.push(page);
+            }
+        }
+    }
+
+    /// Mark a page as keyed in the prefix index.
+    pub fn publish(&mut self, page: u32) {
+        debug_assert!(!self.published[page as usize]);
+        self.published[page as usize] = true;
+        if self.refs[page as usize] == 0 {
+            self.cached += 1;
+        }
+        self.touch(page);
+    }
+
+    /// Remove a page from published status (prefix-index eviction); an
+    /// unreferenced page goes straight back to the free list.
+    pub fn unpublish(&mut self, page: u32) {
+        debug_assert!(self.published[page as usize]);
+        self.published[page as usize] = false;
+        if self.refs[page as usize] == 0 {
+            self.cached -= 1;
+            self.free.push(page);
+            self.evicted_pages += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_unref_roundtrip() {
+        let mut p = BlockPool::new(5, 16);
+        assert_eq!(p.user_pages(), 4);
+        assert_eq!(p.trash_page(), 4);
+        assert_eq!(p.free_count(), 4);
+        let a = p.alloc(false).unwrap();
+        assert_ne!(a, p.trash_page());
+        assert_eq!(p.refs(a), 1);
+        assert_eq!(p.free_count(), 3);
+        p.unref_page(a);
+        assert_eq!(p.free_count(), 4, "unpublished page frees immediately");
+    }
+
+    #[test]
+    fn published_pages_cache_instead_of_freeing() {
+        let mut p = BlockPool::new(5, 16);
+        let a = p.alloc(false).unwrap();
+        p.publish(a);
+        assert!(p.needs_cow(a), "published pages are immutable");
+        p.unref_page(a);
+        assert_eq!(p.cached_count(), 1);
+        assert_eq!(p.free_count(), 3, "cached pages are not free");
+        assert!(p.is_reclaimable(a));
+        p.unpublish(a);
+        assert_eq!(p.cached_count(), 0);
+        assert_eq!(p.free_count(), 4);
+        assert_eq!(p.evicted_pages, 1);
+    }
+
+    #[test]
+    fn shared_pages_need_cow() {
+        let mut p = BlockPool::new(5, 16);
+        let a = p.alloc(false).unwrap();
+        assert!(!p.needs_cow(a));
+        p.ref_page(a);
+        assert_eq!(p.refs(a), 2);
+        assert!(p.needs_cow(a));
+        p.unref_page(a);
+        assert!(!p.needs_cow(a));
+    }
+
+    #[test]
+    fn reservation_accounting_blocks_overcommit() {
+        let mut p = BlockPool::new(6, 16); // 5 user pages
+        p.reserve(3).unwrap();
+        assert!(p.can_reserve(2));
+        assert!(!p.can_reserve(3));
+        assert!(p.reserve(3).is_err());
+        // in-reservation allocs drain outstanding
+        let _a = p.alloc(true).unwrap();
+        assert_eq!(p.outstanding(), 2);
+        assert!(p.can_reserve(2)); // 4 free + 0 cached vs 2 outstanding
+        p.unreserve(2);
+        assert_eq!(p.outstanding(), 0);
+    }
+
+    #[test]
+    fn cached_pages_count_as_available_for_reservation() {
+        let mut p = BlockPool::new(4, 16); // 3 user pages
+        let a = p.alloc(false).unwrap();
+        let b = p.alloc(false).unwrap();
+        let _c = p.alloc(false).unwrap();
+        assert_eq!(p.free_count(), 0);
+        p.publish(a);
+        p.unref_page(a);
+        p.publish(b);
+        p.unref_page(b);
+        // two cached pages back the promise even with an empty free list
+        assert!(p.can_reserve(2));
+        assert!(!p.can_reserve(3));
+    }
+}

@@ -1,0 +1,273 @@
+//! Radix tree over token-id blocks: the prefix cache's lookup structure.
+//!
+//! Each node keys one *full* block of `block_size` token ids under its
+//! parent and maps it to the KV page holding that block's K/V content.
+//! A path from the root therefore spells a block-aligned token prefix
+//! whose KV is entirely reusable. Only publishable content is ever
+//! inserted (see `engine/kv/mod.rs` for the publish rule), so a lookup hit
+//! can never observe unverified speculative state.
+//!
+//! Eviction is subtree-granular: evicting a node drops its entire subtree
+//! from the index (a child prefix is unreachable without its parent), and
+//! the pool frees every page that had no live holder. Live holders keep
+//! their (now unpublished) pages; they simply stop being shareable.
+
+use std::collections::HashMap;
+
+use super::pool::BlockPool;
+
+#[derive(Debug)]
+struct Node {
+    /// block tokens -> child node id
+    children: HashMap<Vec<u32>, usize>,
+    /// parent node id (usize::MAX = root)
+    parent: usize,
+    /// this node's key under its parent (needed for unlink on eviction)
+    key: Vec<u32>,
+    page: u32,
+}
+
+const ROOT: usize = usize::MAX;
+
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    /// slab of nodes; `None` entries are free slots
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<usize>,
+    /// first-level blocks
+    root: HashMap<Vec<u32>, usize>,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        PrefixIndex::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.root.is_empty()
+    }
+
+    fn children_of(&self, parent: usize) -> &HashMap<Vec<u32>, usize> {
+        if parent == ROOT {
+            &self.root
+        } else {
+            &self.nodes[parent].as_ref().expect("live parent").children
+        }
+    }
+
+    /// Longest block-aligned prefix of `tokens` present in the index,
+    /// capped at `max_blocks`; returns the matched pages in block order.
+    pub fn lookup(&self, tokens: &[u32], block_size: usize, max_blocks: usize) -> Vec<u32> {
+        let mut pages = Vec::new();
+        let mut cur = ROOT;
+        for block in tokens.chunks_exact(block_size) {
+            if pages.len() >= max_blocks {
+                break;
+            }
+            match self.children_of(cur).get(block) {
+                Some(&id) => {
+                    pages.push(self.nodes[id].as_ref().expect("live node").page);
+                    cur = id;
+                }
+                None => break,
+            }
+        }
+        pages
+    }
+
+    /// Insert one full block under the prefix spelled by `tokens[..depth*bs]`.
+    /// Walks from the root so evicted intermediate nodes are re-created by
+    /// their (still-live) publisher. Returns `Some(page)` when the block
+    /// was newly published with the caller's page, `None` when the key
+    /// already existed (first publisher wins; no adoption — the caller
+    /// keeps its private page and the index keeps the original).
+    pub fn publish_block(
+        &mut self,
+        tokens: &[u32],
+        block_size: usize,
+        depth: usize,
+        page: u32,
+    ) -> Option<u32> {
+        debug_assert!(tokens.len() >= (depth + 1) * block_size);
+        let mut cur = ROOT;
+        for d in 0..depth {
+            let block = &tokens[d * block_size..(d + 1) * block_size];
+            match self.children_of(cur).get(block) {
+                Some(&id) => cur = id,
+                None => {
+                    // parent path missing (evicted): the caller must
+                    // republish shallower blocks first
+                    return None;
+                }
+            }
+        }
+        let key = tokens[depth * block_size..(depth + 1) * block_size].to_vec();
+        if self.children_of(cur).contains_key(&key) {
+            return None;
+        }
+        let id = match self.free_slots.pop() {
+            Some(id) => id,
+            None => {
+                self.nodes.push(None);
+                self.nodes.len() - 1
+            }
+        };
+        self.nodes[id] = Some(Node {
+            children: HashMap::new(),
+            parent: cur,
+            key: key.clone(),
+            page,
+        });
+        if cur == ROOT {
+            self.root.insert(key, id);
+        } else {
+            self.nodes[cur]
+                .as_mut()
+                .expect("live parent")
+                .children
+                .insert(key, id);
+        }
+        Some(page)
+    }
+
+    /// Evict the least-recently-used reclaimable page's subtree. Every
+    /// page in the subtree is unpublished; the pool frees the ones with no
+    /// live holder. Returns the number of pages actually freed (0 when
+    /// nothing is reclaimable).
+    pub fn evict_lru(&mut self, pool: &mut BlockPool) -> usize {
+        let mut victim: Option<(usize, u64)> = None;
+        for (id, n) in self.nodes.iter().enumerate() {
+            if let Some(n) = n {
+                if pool.is_reclaimable(n.page) {
+                    let stamp = pool.last_use(n.page);
+                    if victim.map(|(_, s)| stamp < s).unwrap_or(true) {
+                        victim = Some((id, stamp));
+                    }
+                }
+            }
+        }
+        let vid = match victim {
+            Some((vid, _)) => vid,
+            None => return 0,
+        };
+        // unlink from parent, then drop the whole subtree
+        let (parent, key) = {
+            let n = self.nodes[vid].as_ref().expect("live victim");
+            (n.parent, n.key.clone())
+        };
+        if parent == ROOT {
+            self.root.remove(&key);
+        } else {
+            self.nodes[parent]
+                .as_mut()
+                .expect("live parent")
+                .children
+                .remove(&key);
+        }
+        let free_before = pool.free_count();
+        let mut stack = vec![vid];
+        while let Some(id) = stack.pop() {
+            let n = self.nodes[id].take().expect("live subtree node");
+            self.free_slots.push(id);
+            stack.extend(n.children.values().copied());
+            pool.unpublish(n.page);
+        }
+        pool.free_count() - free_before
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| seed + i).collect()
+    }
+
+    #[test]
+    fn lookup_matches_block_aligned_prefixes_only() {
+        let mut ix = PrefixIndex::new();
+        let t = toks(8, 100);
+        ix.publish_block(&t, 4, 0, 7);
+        ix.publish_block(&t, 4, 1, 9);
+        assert_eq!(ix.lookup(&t, 4, 10), vec![7, 9]);
+        assert_eq!(ix.lookup(&t, 4, 1), vec![7], "cap respected");
+        // a diverging second block stops the walk after one hit
+        let mut t2 = t.clone();
+        t2[5] = 999;
+        assert_eq!(ix.lookup(&t2, 4, 10), vec![7]);
+        // a diverging first block misses entirely
+        let t3 = toks(8, 500);
+        assert!(ix.lookup(&t3, 4, 10).is_empty());
+        // partial tail blocks never match
+        assert_eq!(ix.lookup(&t[..6], 4, 10), vec![7]);
+    }
+
+    #[test]
+    fn first_publisher_wins() {
+        let mut ix = PrefixIndex::new();
+        let t = toks(4, 0);
+        assert_eq!(ix.publish_block(&t, 4, 0, 3), Some(3));
+        assert_eq!(ix.publish_block(&t, 4, 0, 8), None, "key exists: no adoption");
+        assert_eq!(ix.lookup(&t, 4, 10), vec![3]);
+    }
+
+    #[test]
+    fn publish_without_parent_path_is_refused() {
+        let mut ix = PrefixIndex::new();
+        let t = toks(8, 0);
+        assert_eq!(ix.publish_block(&t, 4, 1, 5), None, "depth-1 needs depth-0");
+        ix.publish_block(&t, 4, 0, 4);
+        assert_eq!(ix.publish_block(&t, 4, 1, 5), Some(5));
+    }
+
+    #[test]
+    fn lru_eviction_drops_oldest_subtree_and_frees_pages() {
+        let mut pool = BlockPool::new(8, 4); // 7 user pages
+        let mut ix = PrefixIndex::new();
+        let a = toks(8, 0);
+        let b = toks(4, 100);
+
+        // chain a0 -> a1, plus a sibling b0; all published and unreferenced
+        let pa0 = pool.alloc(false).unwrap();
+        let pa1 = pool.alloc(false).unwrap();
+        let pb0 = pool.alloc(false).unwrap();
+        for p in [pa0, pa1, pb0] {
+            pool.publish(p);
+            pool.unref_page(p);
+        }
+        ix.publish_block(&a, 4, 0, pa0);
+        ix.publish_block(&a, 4, 1, pa1);
+        ix.publish_block(&b, 4, 0, pb0);
+        assert_eq!(pool.cached_count(), 3);
+
+        // freshen the b-chain so the a-chain is LRU
+        pool.touch(pb0);
+        let freed = ix.evict_lru(&mut pool);
+        assert_eq!(freed, 2, "evicting a0 drops its child a1 too");
+        assert!(ix.lookup(&a, 4, 10).is_empty());
+        assert_eq!(ix.lookup(&b, 4, 10), vec![pb0]);
+        assert_eq!(pool.cached_count(), 1);
+
+        let freed = ix.evict_lru(&mut pool);
+        assert_eq!(freed, 1);
+        assert_eq!(ix.evict_lru(&mut pool), 0, "nothing reclaimable left");
+    }
+
+    #[test]
+    fn eviction_skips_pages_with_live_holders() {
+        let mut pool = BlockPool::new(8, 4);
+        let mut ix = PrefixIndex::new();
+        let a = toks(4, 0);
+        let pa = pool.alloc(false).unwrap(); // refs = 1 (a live table)
+        pool.publish(pa);
+        ix.publish_block(&a, 4, 0, pa);
+        assert_eq!(ix.evict_lru(&mut pool), 0, "held pages are not reclaimable");
+        pool.unref_page(pa);
+        assert_eq!(ix.evict_lru(&mut pool), 1);
+    }
+}

@@ -18,10 +18,12 @@ pub struct SeqMetrics {
     pub recomputed_tokens: u64,
     pub rollbacks: u64,
     pub verify_passes: u64,
-    /// times this sequence was evicted from its KV slot
+    /// times this sequence was evicted from its KV pages
     pub preemptions: u64,
     /// prompt/committed tokens re-prefilled after preemptions
     pub reprefilled_tokens: u64,
+    /// prefill tokens served from the prefix cache instead of computed
+    pub cache_hit_tokens: u64,
 }
 
 impl SeqMetrics {
@@ -55,12 +57,22 @@ pub struct EngineMetrics {
     pub verify_secs: f64,
     /// real verify lanes processed (for per-token verify cost)
     pub verify_lanes: u64,
-    /// KV-slot evictions performed by the scheduling policy
+    /// KV evictions of whole sequences performed by the scheduling policy
     pub preemptions: u64,
     /// tokens re-prefilled when preempted sequences were re-admitted
     pub reprefilled_tokens: u64,
     /// highest queue depth observed (admission pressure)
     pub queue_depth_hwm: u64,
+    /// admissions that adopted at least one cached prefix block
+    pub cache_hits: u64,
+    /// prefill tokens skipped because their KV came from the prefix cache
+    pub cache_hit_tokens: u64,
+    /// subset of `cache_hit_tokens` that would otherwise have been
+    /// preemption re-prefill work (replay debt repaid by the cache)
+    pub reprefill_saved_tokens: u64,
+    /// copy-on-write page copies (shared/published page about to be
+    /// rewritten — rollback-under-sharing or frontier re-decode)
+    pub cow_copies: u64,
     /// per-priority-class end-to-end latency of finished requests
     pub class_e2e: BTreeMap<u8, ClassStats>,
 }
@@ -90,6 +102,17 @@ impl EngineMetrics {
             0.0
         } else {
             self.recomputed_tokens as f64 / self.decoded_tokens as f64
+        }
+    }
+
+    /// Fraction of prefill-path tokens served from the prefix cache
+    /// (cache hits / (hits + actually prefilled)).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hit_tokens + self.prefill_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hit_tokens as f64 / total as f64
         }
     }
 
@@ -149,6 +172,17 @@ mod tests {
         assert!((c0.max_e2e_secs - 3.0).abs() < 1e-12);
         assert_eq!(m.class_e2e[&2].finished, 1);
         assert_eq!(ClassStats::default().mean_e2e_secs(), 0.0);
+    }
+
+    #[test]
+    fn cache_hit_rate_derived() {
+        let m = EngineMetrics {
+            cache_hit_tokens: 30,
+            prefill_tokens: 70,
+            ..Default::default()
+        };
+        assert!((m.cache_hit_rate() - 0.3).abs() < 1e-12);
+        assert_eq!(EngineMetrics::default().cache_hit_rate(), 0.0);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! decode-verify-rollback protocol, grouped verification, selective
 //! determinism — split into a mechanics **executor** (`engine`) and
 //! pluggable, independently-testable **scheduler policies** (`scheduler`)
-//! with priority classes and KV slot preemption.
+//! with priority classes and KV preemption, over a paged KV cache with
+//! determinism-aware prefix sharing (`kv`).
 
 pub mod engine;
 pub mod kv;
@@ -13,6 +14,7 @@ pub mod sequence;
 pub mod verify;
 
 pub use engine::{Engine, EngineConfig, FaultPlan, Mode, StepKind};
+pub use kv::{KvManager, KvStats};
 pub use metrics::{ClassStats, EngineMetrics, SeqMetrics};
 pub use scheduler::{
     Action, LaneView, PolicyKind, QueuedView, SchedView, SchedulerPolicy,

@@ -81,6 +81,9 @@ pub struct LaneView {
     /// times this sequence has been preempted (policies use this to bound
     /// re-eviction and guarantee progress)
     pub preemptions: u64,
+    /// KV pages this lane's block table holds right now (what a
+    /// preemption would free; shared cached pages are counted too)
+    pub kv_blocks: usize,
     pub can_decode: bool,
     pub verify_ready: bool,
     pub decoding_done: bool,
@@ -103,6 +106,9 @@ pub struct QueuedView {
     pub arrive_time: f64,
     pub deterministic: bool,
     pub prompt_len: usize,
+    /// new KV pages this request would have to allocate if admitted now
+    /// (worst-case footprint minus its current prefix-cache hit)
+    pub need_blocks: usize,
 }
 
 impl QueuedView {
@@ -123,7 +129,18 @@ pub struct SchedView {
     pub max_stall_steps: usize,
     /// largest decode batch the artifacts support
     pub max_batch: usize,
+    /// admission capacity. With the prefix cache disabled this is the
+    /// seed's free KV-slot count (seats bind before blocks, so the seed
+    /// decision rule is reproduced exactly); with it enabled it is the
+    /// number of queued requests whose block reservation fits right now —
+    /// admission reasons about free + reclaimable-cached blocks.
     pub free_slots: usize,
+    /// KV pages on the free list
+    pub free_blocks: usize,
+    /// unreferenced cached pages (reclaimable by LRU eviction)
+    pub cached_blocks: usize,
+    /// block-granular prefix sharing active
+    pub prefix_cache: bool,
     /// active sequences, ascending seqs-index order
     pub lanes: Vec<LaneView>,
     /// queued requests, FIFO order
@@ -181,14 +198,18 @@ pub trait SchedulerPolicy: Send {
 /// Shared preemption rule: when the request the policy would admit *next*
 /// (`beneficiary_priority` — the head of the policy's own `admit_order`)
 /// has strictly higher priority than some active *non-deterministic* lane
-/// and no slot is free, evict the youngest (latest-arriving) such lane of
-/// minimal priority that has not been preempted before (the cap guarantees
-/// progress). Keying on the actual next admission — not the maximum queued
-/// priority — ensures the freed slot goes to the request that justified
-/// the eviction, rather than cascading evictions while a differently-
-/// ordered admission absorbs each freed slot. Deterministic lanes are
-/// never victims: their committed stream must not depend on scheduling,
-/// and eviction would discard verified KV state.
+/// and no admission capacity is free (with the prefix cache enabled,
+/// `free_slots == 0` means no queued reservation fits the free +
+/// reclaimable blocks — preemption is now block-pressure-triggered),
+/// evict such a lane of minimal priority that has not been preempted
+/// before (the cap guarantees progress), preferring the lane holding the
+/// most KV pages (frees the most memory per eviction), youngest last.
+/// Keying on the actual next admission — not the maximum queued priority —
+/// ensures the freed capacity goes to the request that justified the
+/// eviction, rather than cascading evictions while a differently-ordered
+/// admission absorbs each freed slot. Deterministic lanes are never
+/// victims: their committed stream must not depend on scheduling, and
+/// eviction would discard verified KV state.
 pub fn preemption_victim(view: &SchedView, beneficiary_priority: u8) -> Option<usize> {
     if view.free_slots > 0 || view.queue.is_empty() {
         return None;
@@ -203,9 +224,12 @@ pub fn preemption_victim(view: &SchedView, beneficiary_priority: u8) -> Option<u
                 && matches!(l.phase, Phase::Prefilling | Phase::Decoding)
         })
         .min_by(|a, b| {
-            // lowest priority first; youngest (max arrive_time) among those
+            // lowest priority first; most KV pages held among those (one
+            // eviction should relieve the most block pressure); youngest
+            // (max arrive_time) as the final tiebreak
             a.priority
                 .cmp(&b.priority)
+                .then(b.kv_blocks.cmp(&a.kv_blocks))
                 .then(
                     b.arrive_time
                         .partial_cmp(&a.arrive_time)
@@ -282,6 +306,7 @@ mod tests {
             max_new_tokens: 32,
             stall_steps: 0,
             preemptions: 0,
+            kv_blocks: 0,
             can_decode: true,
             verify_ready: false,
             decoding_done: false,
@@ -297,6 +322,7 @@ mod tests {
             arrive_time: idx as f64,
             deterministic: true,
             prompt_len: 8,
+            need_blocks: 1,
         }
     }
 
@@ -309,6 +335,9 @@ mod tests {
             max_stall_steps: 4,
             max_batch: 8,
             free_slots: free,
+            free_blocks: free,
+            cached_blocks: 0,
+            prefix_cache: false,
             lanes,
             queue,
         }
@@ -347,6 +376,18 @@ mod tests {
         // priority: a low-priority next admission must not evict anyone
         let v = view(vec![lane(0, 1, false)], vec![queued(9, 3), queued(10, 0)], 0);
         assert_eq!(preemption_victim(&v, 0), None, "next admission is class 0");
+        assert_eq!(preemption_victim(&v, 3), Some(0));
+    }
+
+    #[test]
+    fn victim_prefers_largest_kv_holder_within_a_class() {
+        // same priority class: the lane holding more pages is evicted
+        // first (one eviction relieves the most block pressure), beating
+        // the youngest-first tiebreak
+        let mut big = lane(0, 0, false);
+        big.kv_blocks = 9;
+        let small = lane(1, 0, false); // younger but tiny
+        let v = view(vec![big, small], vec![queued(9, 3)], 0);
         assert_eq!(preemption_victim(&v, 3), Some(0));
     }
 

@@ -91,7 +91,6 @@ pub struct Sequence {
     pub id: u64,
     pub req: Request,
     pub phase: Phase,
-    pub slot: usize,
     /// prompt tokens already prefilled (chunk progress)
     pub prefill_pos: usize,
     /// committed generated tokens (consistent state)
@@ -120,7 +119,6 @@ impl Sequence {
             id,
             req,
             phase: Phase::Queued,
-            slot: usize::MAX,
             prefill_pos: 0,
             committed: Vec::new(),
             speculative: Vec::new(),
@@ -154,10 +152,20 @@ impl Sequence {
         }
     }
 
-    /// Evict this sequence from its KV slot back to the queue (the caller
-    /// releases the slot itself). The committed prefix is kept and will
-    /// re-prefill on re-admission; speculative tokens are dropped (only
-    /// non-deterministic sequences are preempted and they never speculate).
+    /// Position-ordered content tokens `0..n` (prompt, then committed) —
+    /// the key material for prefix-cache publishing. Valid for
+    /// `n <= prompt_len + committed.len()`: the token *input* at position
+    /// `P + j` is committed token `j`.
+    pub fn content_tokens(&self, n: usize) -> Vec<u32> {
+        debug_assert!(n <= self.prompt_len() + self.committed.len());
+        (0..n).map(|i| self.prefill_token(i)).collect()
+    }
+
+    /// Evict this sequence from its KV pages back to the queue (the caller
+    /// releases the block table itself). The committed prefix is kept and
+    /// will re-prefill on re-admission — minus whatever prefix blocks are
+    /// still cached; speculative tokens are dropped (only non-deterministic
+    /// sequences are preempted and they never speculate).
     pub fn preempt(&mut self) {
         debug_assert!(
             matches!(self.phase, Phase::Prefilling | Phase::Decoding),
@@ -172,7 +180,6 @@ impl Sequence {
             self.prefill_pos
         };
         self.phase = Phase::Queued;
-        self.slot = usize::MAX;
         self.prefill_pos = 0;
         self.speculative.clear();
         self.stall_steps = 0;
@@ -360,14 +367,12 @@ mod tests {
     }
 
     #[test]
-    fn preempt_resets_slot_state_but_keeps_committed() {
+    fn preempt_resets_kv_state_but_keeps_committed() {
         let mut s = seq(false);
-        s.slot = 2;
         s.prefill_pos = 3;
         s.push_fast_token(11, 999, false);
         s.preempt();
         assert_eq!(s.phase, Phase::Queued);
-        assert_eq!(s.slot, usize::MAX);
         assert_eq!(s.prefill_pos, 0);
         assert_eq!(s.committed, vec![10, 11]);
         assert_eq!(s.metrics.preemptions, 1);
@@ -386,7 +391,6 @@ mod tests {
     fn mid_prefill_preemption_owes_only_its_progress() {
         let mut s = Sequence::new(1, Request::greedy(vec![1; 64], 8, false), 0.0);
         s.phase = Phase::Prefilling;
-        s.slot = 1;
         s.prefill_pos = 8; // one chunk done out of 64
         s.preempt();
         assert_eq!(s.replay_debt, 8, "never-prefilled tokens are not 'redone'");

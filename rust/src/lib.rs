@@ -8,12 +8,44 @@
 //! Layers:
 //! * **L3** (this crate): request router, pluggable scheduling policies
 //!   (prefill-first / deadline-aware / fair-share, with priority classes
-//!   and KV slot preemption) over a continuous-batching executor, KV slot
-//!   manager, DVR + grouped verification, sampler, metrics.
+//!   and KV preemption) over a continuous-batching executor, a paged KV
+//!   cache with determinism-aware prefix sharing, DVR + grouped
+//!   verification, sampler, metrics.
 //! * **L2** (`python/compile/model.py`, build-time): the transformer
 //!   forward graph, AOT-lowered to HLO text per (bucket, window, strategy).
 //! * **L1** (`python/compile/kernels/`, build-time): pallas split-K matmul
 //!   and RMSNorm kernels — the reduction-schedule mechanism itself.
+//!
+//! # KV paging & prefix cache
+//!
+//! The device KV pool holds `slots * max_seq` positions; the paged
+//! artifacts address it through per-lane **block tables** as `num_pages =
+//! slots * max_seq / block_size` pages of `block_size` positions, so a
+//! sequence occupies `ceil(len / block_size)` pages instead of a whole
+//! `max_seq` slot. Admission reserves a sequence's worst-case page count
+//! up front (prompt + budget + verify window, plus prefill padding
+//! reach), which keeps the seed's "no mid-flight allocation failure"
+//! guarantee; with `prefix_cache` off, seats (`slots - 1`) provably bind
+//! before blocks, so the engine is decision-compatible with the seed.
+//!
+//! With `prefix_cache` on, a radix tree keyed on token-id blocks maps
+//! block-aligned prefixes to their pages, and new requests adopt matching
+//! pages instead of re-running prefill. **Publish rule:** only KV that is
+//! a pure function of its token prefix enters the index — prompt blocks
+//! of any request (prefill always runs invariant-schedule graphs) and
+//! committed blocks of deterministic/batch-invariant sequences (the
+//! verifier's fixed-schedule replay rewrites the window before tokens
+//! commit), both capped strictly below the write frontier `P + C - 1`.
+//! Fast-path speculative KV never enters the index, so **a cache hit can
+//! never leak unverified state, and hits cannot bypass verification**: a
+//! hit skips prefill compute only; the sequence still decodes
+//! speculatively and enters the verifier window like any other committed
+//! prefix, which is why committed streams are bitwise identical with the
+//! cache on or off (`tests/determinism.rs`). Shared or published pages
+//! are immutable — the executor copies-on-write before any forward pass
+//! whose write range would touch one — and unreferenced cached pages are
+//! reclaimed LRU-first under admission pressure. See
+//! [`engine::kv`] for the mechanics.
 //!
 //! Quick start (after `make artifacts`):
 //! ```no_run

@@ -20,7 +20,7 @@ USAGE:
                      [--mode nondet|batch-invariant|llm42] [--qps Q] [--temp 1.0]
                      [--policy prefill-first|deadline|fair-share]
   llm42 experiments  <fig4|fig5|fig6|fig9|fig10|fig11|fig12|table2|all> [opts]
-  llm42 gen-artifacts [--out artifacts] [--preset test|tiny]
+  llm42 gen-artifacts [--out artifacts] [--preset test|tiny] [--block-size N]
   llm42 info         [--artifacts artifacts]
 
 COMMON:
@@ -30,6 +30,9 @@ COMMON:
   --policy P         scheduling policy: prefill-first (seed behavior),
                      deadline (slack-triggered verification), fair-share
                      (weighted round-robin across priority classes)
+  --prefix-cache B   true|false: paged-KV prefix sharing (default false;
+                     cache hits skip prefill compute, never verification)
+  --block-size N     KV page size; 0 = the artifact set's baked-in value
   --seed S           trace seed (default 42)
 ";
 
@@ -98,21 +101,28 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "gen-artifacts" => {
             let out = args.str_or("out", "artifacts");
             let preset = args.str_or("preset", "tiny");
-            llm42::aot::generate(&out, &preset)?;
+            let block_size = match args.usize_or("block-size", 0)? {
+                0 => None,
+                b => Some(b),
+            };
+            llm42::aot::generate_opts(&out, &preset, block_size)?;
             println!("wrote {preset} artifact set to {out}/");
             Ok(())
         }
         "info" => {
             let man = Manifest::load(&artifacts)?;
             println!(
-                "model {}: {} params, vocab {}, d_model {}, {} layers, max_seq {}, {} slots",
+                "model {}: {} params, vocab {}, d_model {}, {} layers, max_seq {}, {} slots, \
+                 {} KV pages x {} positions",
                 man.model.name,
                 man.model.n_params(),
                 man.model.vocab,
                 man.model.d_model,
                 man.model.n_layers,
                 man.model.max_seq,
-                man.model.slots
+                man.model.slots,
+                man.model.num_pages(),
+                man.model.block_size
             );
             println!("{} artifacts:", man.artifacts.len());
             for a in &man.artifacts {

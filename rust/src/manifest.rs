@@ -23,6 +23,9 @@ pub struct ModelDims {
     pub max_seq: usize,
     pub slots: usize,
     pub max_fwd_tokens: usize,
+    /// KV page size in positions (0 on pre-paging artifact sets; the
+    /// paged engine requires > 0 — re-run `make artifacts`).
+    pub block_size: usize,
     pub logit_scale: f64,
 }
 
@@ -38,6 +41,36 @@ impl ModelDims {
 
     pub fn trash_slot(&self) -> usize {
         self.slots - 1
+    }
+
+    /// Total KV pages under block-granular addressing (same device memory
+    /// as the slot view: `slots * max_seq` positions).
+    pub fn num_pages(&self) -> usize {
+        if self.block_size == 0 {
+            0
+        } else {
+            self.slots * self.max_seq / self.block_size
+        }
+    }
+
+    /// Block-table entries a lane needs to cover positions 0..max_seq.
+    pub fn blocks_per_lane(&self) -> usize {
+        if self.block_size == 0 {
+            0
+        } else {
+            self.max_seq / self.block_size
+        }
+    }
+
+    /// The reserved padding-lane page (mirrors the trash slot): the last
+    /// page, never handed to a sequence.
+    pub fn trash_page(&self) -> usize {
+        self.num_pages() - 1
+    }
+
+    /// Pages a sequence table may draw from (everything but trash).
+    pub fn user_pages(&self) -> usize {
+        self.num_pages() - 1
     }
 
     pub fn n_params(&self) -> usize {
@@ -72,6 +105,8 @@ pub enum ArtifactKind {
     Decode,
     Window,
     Extract,
+    /// KV page copy (the COW primitive for paged prefix sharing)
+    Copy,
     MicroGemm,
     MicroNorm,
 }
@@ -121,6 +156,8 @@ impl Manifest {
             max_seq: m.u("max_seq")?,
             slots: m.u("slots")?,
             max_fwd_tokens: m.u("max_fwd_tokens")?,
+            // absent on pre-paging manifests; 0 means "regenerate to page"
+            block_size: m.get("block_size").and_then(|x| x.as_usize()).unwrap_or(0),
             logit_scale: m.f("logit_scale")?,
         };
 
@@ -153,6 +190,7 @@ impl Manifest {
                 "decode" => ArtifactKind::Decode,
                 "window" => ArtifactKind::Window,
                 "extract" => ArtifactKind::Extract,
+                "copy" => ArtifactKind::Copy,
                 "micro_gemm" => ArtifactKind::MicroGemm,
                 "micro_norm" => ArtifactKind::MicroNorm,
                 other => return Err(Error::Manifest(format!("unknown kind {other}"))),
@@ -194,6 +232,20 @@ impl Manifest {
         }
         if self.artifact("extract_r1").is_none() {
             return Err(Error::Manifest("missing extract_r1 artifact".into()));
+        }
+        if m.block_size != 0 {
+            if m.max_seq % m.block_size != 0 {
+                return Err(Error::Manifest(format!(
+                    "block_size {} does not divide max_seq {}",
+                    m.block_size, m.max_seq
+                )));
+            }
+            if self.artifact("copy_pages").is_none() {
+                return Err(Error::Manifest(
+                    "paged manifest missing copy_pages artifact; re-run `make artifacts`"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -298,11 +350,16 @@ mod tests {
             max_seq: 96,
             slots: 5,
             max_fwd_tokens: 64,
+            block_size: 16,
             logit_scale: 6.0,
         };
         assert_eq!(m.kv_dim(), 32);
         assert_eq!(m.user_slots(), 4);
         assert_eq!(m.trash_slot(), 4);
+        assert_eq!(m.num_pages(), 30);
+        assert_eq!(m.blocks_per_lane(), 6);
+        assert_eq!(m.trash_page(), 29);
+        assert_eq!(m.user_pages(), 29);
         // params: per layer attn 64*64+2*64*32+64*64 = 12288; ffn 3*64*128=24576
         // + norms 128 -> 36992 per layer; x2 + embed/head 2*256*64 + 64
         assert_eq!(m.n_params(), 2 * 36992 + 2 * 256 * 64 + 64);

@@ -133,8 +133,10 @@ impl Runtime {
         Ok(())
     }
 
-    /// Run one forward graph: tokens are lane-major `[g*t]`, `slots` and
-    /// `start_pos` are `[g]`. The state buffer is donated and replaced.
+    /// Run one forward graph: tokens are lane-major `[g*t]`, `start_pos`
+    /// is `[g]`, and `slots` is either `[g]` slot indices (legacy slot
+    /// addressing) or a flat `[g * blocks_per_lane]` block table (paged KV
+    /// addressing). The state buffer is donated and replaced.
     pub fn forward(
         &mut self,
         artifact: &str,
@@ -143,13 +145,16 @@ impl Runtime {
         start_pos: &[i32],
     ) -> Result<()> {
         let entry = self.manifest.require(artifact)?;
+        let bpl = self.manifest.model.blocks_per_lane();
+        let slots_ok =
+            slots.len() == entry.g || (bpl > 0 && slots.len() == entry.g * bpl);
         if tokens.len() != entry.g * entry.t
-            || slots.len() != entry.g
+            || !slots_ok
             || start_pos.len() != entry.g
         {
             return Err(Error::Engine(format!(
                 "forward {artifact}: shape mismatch (tokens {}, slots {}, pos {}) \
-                 vs (g={}, t={})",
+                 vs (g={}, t={}, blocks/lane={bpl})",
                 tokens.len(),
                 slots.len(),
                 start_pos.len(),
@@ -202,6 +207,55 @@ impl Runtime {
             .next()
             .ok_or_else(|| Error::Engine("no output buffer".into()))?;
         // old `state` was donated; dropping the dead handle is safe
+        drop(state);
+        self.state = Some(new_state);
+        Ok(())
+    }
+
+    /// Copy whole KV pages device-side (`src[i] -> dst[i]`, both pools,
+    /// every layer) via the `copy_pages` artifact — the COW primitive for
+    /// prefix sharing. The state buffer is donated and replaced, exactly
+    /// like a forward pass.
+    pub fn copy_pages(&mut self, src: &[i32], dst: &[i32]) -> Result<()> {
+        if src.len() != dst.len() {
+            return Err(Error::Engine(format!(
+                "copy_pages src/dst length mismatch: {} vs {}",
+                src.len(),
+                dst.len()
+            )));
+        }
+        if src.is_empty() {
+            return Ok(());
+        }
+        let exe = self.get_exe("copy_pages")?;
+        let t0 = Instant::now();
+        let src_buf = self
+            .client
+            .buffer_from_host_buffer(src, &[src.len()], None)?;
+        let dst_buf = self
+            .client
+            .buffer_from_host_buffer(dst, &[dst.len()], None)?;
+        self.counters.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
+
+        let state = self
+            .state
+            .take()
+            .ok_or_else(|| Error::Engine("state buffer missing".into()))?;
+        let t0 = Instant::now();
+        let mut out = exe.execute_b(&[&state, &src_buf, &dst_buf])?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut c = self.counters.borrow_mut();
+            c.forward_calls += 1;
+            c.forward_secs += dt;
+        }
+        let replica = out
+            .pop()
+            .ok_or_else(|| Error::Engine("no replica output".into()))?;
+        let new_state = replica
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Engine("no output buffer".into()))?;
         drop(state);
         self.state = Some(new_state);
         Ok(())

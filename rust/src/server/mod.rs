@@ -30,7 +30,12 @@
 //! command messages:
 //!   -> {"cmd": "stats"}
 //!   <- {"steps": ..., "preemptions": ..., "reprefilled_tokens": ...,
-//!       "queue_depth_hwm": ..., "class_e2e": {"0": {...}, ...}, ...}
+//!       "queue_depth_hwm": ..., "class_e2e": {"0": {...}, ...},
+//!       "kv": {"block_size": ..., "user_pages": ..., "free_pages": ...,
+//!              "cached_pages": ..., "held_pages": ..., "cache_hits": ...,
+//!              "cache_hit_tokens": ..., "cache_hit_rate": ...,
+//!              "reprefill_saved_tokens": ..., "cow_copies": ...,
+//!              "evicted_pages": ...}, ...}
 //!   -> {"cmd": "set_policy", "policy": "fair-share"}
 //!   <- {"ok": true, "policy": "fair-share"}
 //!
@@ -47,8 +52,8 @@ use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::engine::{
-    Engine, EngineConfig, EngineMetrics, FinishReason, PolicyKind, Request,
-    RequestOutput, StepKind,
+    Engine, EngineConfig, EngineMetrics, FinishReason, KvStats, PolicyKind,
+    Request, RequestOutput, StepKind,
 };
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
@@ -188,12 +193,13 @@ pub fn render_output(out: &RequestOutput, tok: &Tokenizer) -> String {
         ("recomputed", Json::num(out.metrics.recomputed_tokens as f64)),
         ("preemptions", Json::num(out.metrics.preemptions as f64)),
         ("reprefilled", Json::num(out.metrics.reprefilled_tokens as f64)),
+        ("cached_prefix_tokens", Json::num(out.metrics.cache_hit_tokens as f64)),
     ])
     .dump()
 }
 
 /// Serialize engine-wide counters for the `{"cmd": "stats"}` wire command.
-pub fn render_stats(m: &EngineMetrics) -> String {
+pub fn render_stats(m: &EngineMetrics, kv: &KvStats) -> String {
     let class_keys: Vec<String> =
         m.class_e2e.keys().map(|c| c.to_string()).collect();
     let class_e2e = Json::obj(
@@ -223,6 +229,25 @@ pub fn render_stats(m: &EngineMetrics) -> String {
         ("preemptions", Json::num(m.preemptions as f64)),
         ("reprefilled_tokens", Json::num(m.reprefilled_tokens as f64)),
         ("queue_depth_hwm", Json::num(m.queue_depth_hwm as f64)),
+        (
+            "kv",
+            Json::obj(vec![
+                ("block_size", Json::num(kv.block_size as f64)),
+                ("user_pages", Json::num(kv.user_pages as f64)),
+                ("free_pages", Json::num(kv.free_pages as f64)),
+                ("cached_pages", Json::num(kv.cached_pages as f64)),
+                ("held_pages", Json::num(kv.held_pages as f64)),
+                ("cache_hits", Json::num(m.cache_hits as f64)),
+                ("cache_hit_tokens", Json::num(m.cache_hit_tokens as f64)),
+                ("cache_hit_rate", Json::num(m.cache_hit_rate())),
+                (
+                    "reprefill_saved_tokens",
+                    Json::num(m.reprefill_saved_tokens as f64),
+                ),
+                ("cow_copies", Json::num(m.cow_copies as f64)),
+                ("evicted_pages", Json::num(kv.evicted_pages as f64)),
+            ]),
+        ),
         ("class_e2e", class_e2e),
     ])
     .dump()
@@ -281,7 +306,10 @@ impl Server {
                                 }
                             },
                             ToEngine::Stats(reply) => {
-                                let _ = reply.send(render_stats(&eng.metrics));
+                                let _ = reply.send(render_stats(
+                                    &eng.metrics,
+                                    &eng.kv_stats(),
+                                ));
                             }
                             ToEngine::SetPolicy(kind, reply) => {
                                 eng.set_policy(kind);
@@ -601,10 +629,26 @@ mod tests {
         m.note_queue_depth(9);
         m.record_finished(0, 2.0);
         m.record_finished(2, 0.25);
-        let v = Json::parse(&render_stats(&m)).unwrap();
+        m.cache_hits = 2;
+        m.cache_hit_tokens = 48;
+        m.prefill_tokens = 48; // hit rate 0.5
+        let kv = KvStats {
+            block_size: 16,
+            user_pages: 49,
+            free_pages: 30,
+            cached_pages: 9,
+            held_pages: 10,
+            ..Default::default()
+        };
+        let v = Json::parse(&render_stats(&m, &kv)).unwrap();
         assert_eq!(v.u("preemptions").unwrap(), 3);
         assert_eq!(v.u("reprefilled_tokens").unwrap(), 40);
         assert_eq!(v.u("queue_depth_hwm").unwrap(), 9);
+        let k = v.req("kv").unwrap();
+        assert_eq!(k.u("block_size").unwrap(), 16);
+        assert_eq!(k.u("cached_pages").unwrap(), 9);
+        assert_eq!(k.u("cache_hit_tokens").unwrap(), 48);
+        assert!((k.f("cache_hit_rate").unwrap() - 0.5).abs() < 1e-9);
         let c2 = v.req("class_e2e").unwrap().req("2").unwrap();
         assert_eq!(c2.u("finished").unwrap(), 1);
         assert!((c2.f("mean_e2e_ms").unwrap() - 250.0).abs() < 1e-6);

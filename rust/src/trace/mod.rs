@@ -33,6 +33,25 @@ pub enum LengthProfile {
         input: usize,
         output: usize,
     },
+    /// Multi-turn chat: every conversation opens with the *same* shared
+    /// system prompt, and each follow-up turn resubmits the whole
+    /// conversation so far (system + prior turns) plus a fresh user
+    /// message — the prefix-cache-heavy workload class. The open-loop
+    /// trace stands in synthetic assistant tokens for the replies (a
+    /// closed-loop client would resubmit the engine's committed tokens;
+    /// `benches/engine.rs` does exactly that), which preserves the sharing
+    /// shape: turn k's prompt extends turn k-1's prompt block for block.
+    MultiTurn {
+        name: &'static str,
+        /// shared system prompt length (identical across conversations)
+        system_len: usize,
+        /// max turns per conversation (also capped by the KV budget)
+        turns: usize,
+        /// user message length per turn
+        user_len: usize,
+        /// assistant reply budget per turn (max_new_tokens)
+        assistant_len: usize,
+    },
 }
 
 impl LengthProfile {
@@ -82,10 +101,24 @@ impl LengthProfile {
         .collect()
     }
 
+    /// Multi-turn chat defaults scaled to the testbed: a 24-token shared
+    /// system prompt, up to 6 turns of 8-token user messages with 8-token
+    /// reply budgets.
+    pub fn multiturn() -> Self {
+        LengthProfile::MultiTurn {
+            name: "multiturn",
+            system_len: 24,
+            turns: 6,
+            user_len: 8,
+            assistant_len: 8,
+        }
+    }
+
     pub fn name(&self) -> &str {
         match self {
             LengthProfile::LogNormal { name, .. } => name,
             LengthProfile::Fixed { name, .. } => name,
+            LengthProfile::MultiTurn { name, .. } => name,
         }
     }
 
@@ -97,6 +130,13 @@ impl LengthProfile {
             LengthProfile::Fixed { input, output, .. } => {
                 let input = input.clamp(1, budget - 1);
                 let output = output.clamp(1, budget - input);
+                (input, output)
+            }
+            LengthProfile::MultiTurn { system_len, user_len, assistant_len, .. } => {
+                // first-turn shape; `TraceSpec::generate` builds the real
+                // growing-history turns
+                let input = (system_len + user_len).clamp(1, budget - 1);
+                let output = assistant_len.clamp(1, budget - input);
                 (input, output)
             }
             LengthProfile::LogNormal {
@@ -141,6 +181,16 @@ pub struct TraceSpec {
 
 impl TraceSpec {
     pub fn generate(&self) -> Vec<TracedRequest> {
+        if let LengthProfile::MultiTurn {
+            system_len,
+            turns,
+            user_len,
+            assistant_len,
+            ..
+        } = self.profile
+        {
+            return self.generate_multiturn(system_len, turns, user_len, assistant_len);
+        }
         let mut rng = SplitMix64::new(self.seed);
         let mut arrival = 0.0f64;
         let mut out = Vec::with_capacity(self.n_requests);
@@ -169,7 +219,89 @@ impl TraceSpec {
         }
         out
     }
+
+    /// Multi-turn conversations: a shared system prompt (identical tokens
+    /// across every conversation), then turns that resubmit the whole
+    /// history plus a new user message. Conversations interleave turn by
+    /// turn so the engine sees mixed traffic, and cap at the KV budget.
+    fn generate_multiturn(
+        &self,
+        system_len: usize,
+        turns: usize,
+        user_len: usize,
+        assistant_len: usize,
+    ) -> Vec<TracedRequest> {
+        let mut rng = SplitMix64::new(self.seed);
+        let budget = self.max_seq - self.window;
+        let tok = |rng: &mut SplitMix64| 3 + rng.below(self.vocab as u64 - 3) as u32;
+        // the shared system prompt: fixed by the trace seed, NOT the
+        // per-conversation rng, so every conversation starts identically
+        let mut sys_rng = SplitMix64::new(self.seed ^ 0x5157_u64);
+        let system: Vec<u32> = (0..system_len.max(1)).map(|_| tok(&mut sys_rng)).collect();
+
+        // conversations needed to cover n_requests turns
+        let per_conv = turns.max(1);
+        let n_convs = self.n_requests.div_ceil(per_conv);
+        struct Conv {
+            history: Vec<u32>,
+            deterministic: bool,
+            done: bool,
+        }
+        let mut convs: Vec<Conv> = (0..n_convs)
+            .map(|_| Conv {
+                history: system.clone(),
+                deterministic: rng.next_f64() < self.det_ratio,
+                done: false,
+            })
+            .collect();
+
+        let mut out = Vec::with_capacity(self.n_requests);
+        let mut arrival = 0.0f64;
+        let mut i = 0u64;
+        'outer: for _turn in 0..per_conv {
+            for conv in convs.iter_mut() {
+                if out.len() >= self.n_requests {
+                    break 'outer;
+                }
+                if conv.done {
+                    continue;
+                }
+                // next turn: history + fresh user message
+                let mut prompt = conv.history.clone();
+                for _ in 0..user_len.max(1) {
+                    prompt.push(tok(&mut rng));
+                }
+                if prompt.len() + assistant_len.max(1) + 1 > budget {
+                    conv.done = true;
+                    continue;
+                }
+                if let Some(qps) = self.qps {
+                    arrival += rng.exponential(qps);
+                }
+                out.push(TracedRequest {
+                    arrival_offset: if self.qps.is_some() { arrival } else { 0.0 },
+                    req: Request {
+                        prompt: prompt.clone(),
+                        max_new_tokens: assistant_len.max(1),
+                        deterministic: conv.deterministic,
+                        temperature: self.temperature,
+                        seed: self.seed ^ i.wrapping_mul(0x9E3779B97F4A7C15),
+                        ..Default::default()
+                    },
+                });
+                i += 1;
+                // synthetic assistant reply stands in for the committed
+                // tokens a closed-loop client would resubmit
+                conv.history = prompt;
+                for _ in 0..assistant_len.max(1) {
+                    conv.history.push(tok(&mut rng));
+                }
+            }
+        }
+        out
+    }
 }
+
 
 #[cfg(test)]
 mod tests {
@@ -263,6 +395,48 @@ mod tests {
     fn offline_all_arrive_at_zero() {
         for t in spec(LengthProfile::sharegpt()).generate() {
             assert_eq!(t.arrival_offset, 0.0);
+        }
+    }
+
+    #[test]
+    fn multiturn_shares_system_prompt_and_grows_history() {
+        let mut s = spec(LengthProfile::multiturn());
+        s.n_requests = 24;
+        let tr = s.generate();
+        assert_eq!(tr.len(), 24);
+        // every request opens with the same shared system prompt
+        let sys = &tr[0].req.prompt[..24];
+        for t in &tr {
+            assert_eq!(&t.req.prompt[..24], sys, "shared system prompt");
+            assert!(t.req.prompt.len() + t.req.max_new_tokens + 32 <= 640);
+            assert!(t.req.prompt.iter().all(|&x| (3..2048).contains(&x)));
+        }
+        // follow-up turns strictly extend the previous turn's prompt
+        // (conversations interleave: with 24 requests over 6-turn convs
+        // there are 4 conversations, stride 4)
+        let n_convs = 4;
+        let mut extended = 0;
+        for (i, t) in tr.iter().enumerate().skip(n_convs) {
+            let prev = &tr[i - n_convs];
+            if t.req.prompt.len() > prev.req.prompt.len()
+                && t.req.prompt[..prev.req.prompt.len()]
+                    .starts_with(&prev.req.prompt[..])
+            {
+                extended += 1;
+            }
+        }
+        assert_eq!(
+            extended,
+            24 - n_convs,
+            "every follow-up turn resubmits its conversation so far"
+        );
+        // reproducible
+        let again = spec(LengthProfile::multiturn());
+        let mut again = again;
+        again.n_requests = 24;
+        let b = again.generate();
+        for (x, y) in tr.iter().zip(&b) {
+            assert_eq!(x.req.prompt, y.req.prompt);
         }
     }
 }

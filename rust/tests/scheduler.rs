@@ -141,6 +141,7 @@ fn prefill_first_plan_matches_seed_rule_on_random_views() {
                 max_new_tokens: 64,
                 stall_steps: rng.below(6) as usize,
                 preemptions: 0,
+                kv_blocks: 1 + i,
                 can_decode: !prefilling && !ready && rng.next_f64() < 0.7,
                 verify_ready: ready,
                 decoding_done: false,
@@ -156,6 +157,7 @@ fn prefill_first_plan_matches_seed_rule_on_random_views() {
                 arrive_time: 50.0 + i as f64,
                 deterministic: rng.next_f64() < 0.5,
                 prompt_len: 8,
+                need_blocks: 1,
             })
             .collect();
         let v = SchedView {
@@ -166,6 +168,9 @@ fn prefill_first_plan_matches_seed_rule_on_random_views() {
             max_stall_steps: 4,
             max_batch: 8,
             free_slots: rng.below(3) as usize,
+            free_blocks: 8,
+            cached_blocks: 0,
+            prefix_cache: false,
             lanes,
             queue,
         };
@@ -422,6 +427,52 @@ fn fair_share_does_not_starve_low_priority_classes() {
     // class latency accounting covers both classes
     assert_eq!(eng.metrics.class_e2e[&3].finished, 8);
     assert_eq!(eng.metrics.class_e2e[&0].finished, 2);
+}
+
+#[test]
+fn prefix_cache_admits_beyond_the_seed_seat_cap() {
+    // The paged-KV payoff: with the cache on, admission is bounded by
+    // blocks, not by the seed's slots-1 seats — small requests pack far
+    // more concurrency into the same KV bytes.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let user_slots = rt.dims().slots - 1;
+    let cfg = EngineConfig {
+        mode: Mode::NonDeterministic,
+        eos_token: 9999,
+        prefix_cache: true,
+        ..Default::default()
+    };
+    let mut eng = Engine::new(&mut rt, cfg).unwrap();
+    let n = user_slots + 3;
+    for i in 0..n {
+        eng.submit(Request {
+            prompt: vec![7 + i as u32; 6],
+            max_new_tokens: 10,
+            deterministic: false,
+            temperature: 0.0,
+            seed: 0,
+            priority: 0,
+            deadline_ms: None,
+        })
+        .unwrap();
+    }
+    // a couple of steps: admission happens in the first planning rounds
+    for _ in 0..3 {
+        eng.step().unwrap();
+    }
+    assert!(
+        eng.active_count() > user_slots,
+        "block-granular admission must beat the {user_slots}-seat slot cap \
+         (got {})",
+        eng.active_count()
+    );
+    let kv = eng.kv_stats();
+    assert!(kv.held_pages > 0 && kv.held_pages <= kv.user_pages);
+    eng.run_to_completion().unwrap();
+    assert_eq!(eng.take_finished().len(), n);
+    // everything released at the end
+    let kv = eng.kv_stats();
+    assert_eq!(kv.held_pages, 0);
 }
 
 #[test]

@@ -69,6 +69,10 @@ struct Dims {
     max_seq: usize,
     slots: usize,
     max_fwd_tokens: usize,
+    /// KV page size in positions (0 = slot-mode-only artifact set). The
+    /// pool is the same memory either way: `slots * max_seq` positions,
+    /// viewed as `num_pages` pages of `block_size` positions each.
+    block_size: usize,
     logit_scale: f32,
     rope_theta: f32,
     rms_eps: f32,
@@ -91,12 +95,46 @@ impl Dims {
         self.pool_floats()
     }
 
+    /// Total KV pages when the pool is viewed block-granular.
+    fn num_pages(&self) -> usize {
+        if self.block_size == 0 {
+            0
+        } else {
+            self.slots * self.max_seq / self.block_size
+        }
+    }
+
+    /// Block-table entries per lane (positions 0..max_seq).
+    fn blocks_per_lane(&self) -> usize {
+        if self.block_size == 0 {
+            0
+        } else {
+            self.max_seq / self.block_size
+        }
+    }
+
     /// Flat-state float offset of pool[which][layer][slot][pos][0].
     fn kv_offset(&self, which: usize, layer: usize, slot: usize, pos: usize) -> usize {
         let per_pool = self.n_layers * self.slots * self.max_seq * self.kv_dim();
         let per_layer = self.slots * self.max_seq * self.kv_dim();
         let per_slot = self.max_seq * self.kv_dim();
         which * per_pool + layer * per_layer + slot * per_slot + pos * self.kv_dim()
+    }
+
+    /// Flat-state float offset of pool[which][layer][page][slot_off][0]
+    /// under the paged view (same memory, block-granular addressing).
+    fn kv_offset_paged(
+        &self,
+        which: usize,
+        layer: usize,
+        page: usize,
+        slot_off: usize,
+    ) -> usize {
+        let per_pool = self.n_layers * self.slots * self.max_seq * self.kv_dim();
+        let per_layer = self.slots * self.max_seq * self.kv_dim();
+        which * per_pool
+            + layer * per_layer
+            + (page * self.block_size + slot_off) * self.kv_dim()
     }
 }
 
@@ -136,6 +174,9 @@ enum Op {
     Forward { g: usize, t: usize },
     /// Slice the first `rows` logits rows off the state.
     Extract { rows: usize },
+    /// Copy whole KV pages (src[i] -> dst[i], all layers, K and V pools):
+    /// the copy-on-write primitive for block-granular prefix sharing.
+    CopyPages,
     /// Standalone GEMM micro-kernel: x [m,k] @ w [k,n].
     MicroGemm { nsplits: usize },
     /// Standalone RMSNorm micro-kernel: x [m,d], w [d].
@@ -202,6 +243,7 @@ fn parse_descriptor(text: &str) -> Result<Descriptor> {
     let op = match op_name.as_str() {
         "forward" => Op::Forward { g: get_usize("g")?, t: get_usize("t")? },
         "extract" => Op::Extract { rows: get_usize("rows")? },
+        "copy_pages" => Op::CopyPages,
         "micro_gemm" => Op::MicroGemm { nsplits: get_usize("nsplits")? },
         "micro_norm" => Op::MicroNorm { nsplits: get_usize("nsplits")? },
         other => return err(format!("unknown descriptor op '{other}'")),
@@ -218,7 +260,10 @@ fn parse_descriptor(text: &str) -> Result<Descriptor> {
         bf16_partials: kv.get("partial").map(|p| p == "bf16").unwrap_or(true),
     };
 
-    let dims = if matches!(op, Op::Forward { .. } | Op::Extract { .. }) {
+    let dims = if matches!(
+        op,
+        Op::Forward { .. } | Op::Extract { .. } | Op::CopyPages
+    ) {
         Dims {
             vocab: get_usize("vocab")?,
             d_model: get_usize("d_model")?,
@@ -230,6 +275,7 @@ fn parse_descriptor(text: &str) -> Result<Descriptor> {
             max_seq: get_usize("max_seq")?,
             slots: get_usize("slots")?,
             max_fwd_tokens: get_usize("max_fwd_tokens")?,
+            block_size: opt_usize("block_size", 0)?,
             logit_scale: get_f32("logit_scale")?,
             rope_theta: get_f32("rope_theta")?,
             rms_eps: get_f32("rms_eps")?,
@@ -391,6 +437,7 @@ impl PjRtLoadedExecutable {
         let out = match &self.desc.op {
             Op::Forward { g, t } => run_forward(&self.desc, *g, *t, args)?,
             Op::Extract { rows } => run_extract(&self.desc, *rows, args)?,
+            Op::CopyPages => run_copy_pages(&self.desc, args)?,
             Op::MicroGemm { nsplits } => run_micro_gemm(&self.desc, *nsplits, args)?,
             Op::MicroNorm { nsplits } => run_micro_norm(&self.desc, *nsplits, args)?,
         };
@@ -613,12 +660,25 @@ fn run_forward(desc: &Descriptor, g: usize, t: usize, args: &[&PjRtBuffer]) -> R
     let tokens = args[1].i32s()?;
     let slots = args[2].i32s()?;
     let positions0 = args[3].i32s()?;
-    if tokens.len() != g * t || slots.len() != g || positions0.len() != g {
+    // Dual addressing: a `[g]` slots arg selects legacy slot mode (one
+    // contiguous max_seq region per lane); a `[g * blocks_per_lane]` arg is
+    // a flat per-lane block table and selects paged mode. The values read
+    // and written per (lane, position) are identical either way, so the
+    // two modes are bitwise interchangeable — paging relocates KV, it
+    // never reorders arithmetic.
+    let bpl = d.blocks_per_lane();
+    let paged = bpl > 0 && slots.len() == g * bpl && bpl != 1;
+    if tokens.len() != g * t
+        || positions0.len() != g
+        || !(slots.len() == g || paged)
+    {
         return err(format!(
-            "forward shape mismatch: tokens {} slots {} pos {} vs g={g} t={t}",
+            "forward shape mismatch: tokens {} slots {} pos {} vs g={g} t={t} \
+             (block table wants {} entries)",
             tokens.len(),
             slots.len(),
-            positions0.len()
+            positions0.len(),
+            g * bpl
         ));
     }
     let n = g * t;
@@ -657,11 +717,29 @@ fn run_forward(desc: &Descriptor, g: usize, t: usize, args: &[&PjRtBuffer]) -> R
             return err(format!("row {i} position {p} out of range (max_seq {})", d.max_seq));
         }
     }
-    for &s in slots {
-        if (s as usize) >= d.slots {
-            return err(format!("slot {s} out of range ({} slots)", d.slots));
+    if paged {
+        let np = d.num_pages();
+        for &p in slots {
+            if (p as usize) >= np {
+                return err(format!("block-table page {p} out of range ({np} pages)"));
+            }
+        }
+    } else {
+        for &s in slots {
+            if (s as usize) >= d.slots {
+                return err(format!("slot {s} out of range ({} slots)", d.slots));
+            }
         }
     }
+    // resolve (lane, position) -> flat K/V offset under either addressing
+    let kv_addr = |which: usize, layer: usize, lane: usize, pos: usize| -> usize {
+        if paged {
+            let page = slots[lane * bpl + pos / d.block_size] as usize;
+            d.kv_offset_paged(which, layer, page, pos % d.block_size)
+        } else {
+            d.kv_offset(which, layer, slots[lane] as usize, pos)
+        }
+    };
 
     // embedding lookup
     let embed = w[W_EMBED];
@@ -699,27 +777,41 @@ fn run_forward(desc: &Descriptor, g: usize, t: usize, args: &[&PjRtBuffer]) -> R
         }
 
         // write K/V windows into the pool (all lanes first, then attend —
-        // mirrors model.py's update-then-read order)
+        // mirrors model.py's update-then-read order); per-position writes
+        // so each position routes through its own page in paged mode
         for lane in 0..g {
-            let slot = slots[lane] as usize;
             let start = positions0[lane] as usize;
-            let koff = d.kv_offset(0, layer, slot, start);
-            let voff = d.kv_offset(1, layer, slot, start);
-            state[koff..koff + t * kvd].copy_from_slice(&kproj[lane * t * kvd..(lane + 1) * t * kvd]);
-            state[voff..voff + t * kvd].copy_from_slice(&vproj[lane * t * kvd..(lane + 1) * t * kvd]);
+            for j in 0..t {
+                let koff = kv_addr(0, layer, lane, start + j);
+                let voff = kv_addr(1, layer, lane, start + j);
+                state[koff..koff + kvd]
+                    .copy_from_slice(&kproj[(lane * t + j) * kvd..(lane * t + j + 1) * kvd]);
+                state[voff..voff + kvd]
+                    .copy_from_slice(&vproj[(lane * t + j) * kvd..(lane * t + j + 1) * kvd]);
+            }
         }
 
-        // chunked (FlashDecoding-style) attention per lane over its slot
+        // chunked (FlashDecoding-style) attention per lane over its KV
+        // region, gathered position-major into lane-local scratch so the
+        // reduction loop (and therefore the arithmetic order) is identical
+        // in slot and paged mode
         let mut attn = vec![0.0f32; n * qd];
         let ksplits = sched.attn_ksplits;
         assert!(d.max_seq % ksplits == 0, "max_seq not divisible by attn_ksplits");
         let cs = d.max_seq / ksplits;
+        let mut k_gather = vec![0.0f32; d.max_seq * kvd];
+        let mut v_gather = vec![0.0f32; d.max_seq * kvd];
         for lane in 0..g {
-            let slot = slots[lane] as usize;
-            let koff = d.kv_offset(0, layer, slot, 0);
-            let voff = d.kv_offset(1, layer, slot, 0);
-            let k_pool = &state[koff..koff + d.max_seq * kvd];
-            let v_pool = &state[voff..voff + d.max_seq * kvd];
+            for s_abs in 0..d.max_seq {
+                let ko = kv_addr(0, layer, lane, s_abs);
+                let vo = kv_addr(1, layer, lane, s_abs);
+                k_gather[s_abs * kvd..(s_abs + 1) * kvd]
+                    .copy_from_slice(&state[ko..ko + kvd]);
+                v_gather[s_abs * kvd..(s_abs + 1) * kvd]
+                    .copy_from_slice(&state[vo..vo + kvd]);
+            }
+            let k_pool = &k_gather[..];
+            let v_pool = &v_gather[..];
             for j in 0..t {
                 let pos = positions[lane * t + j];
                 let q_row = &q[(lane * t + j) * qd..(lane * t + j + 1) * qd];
@@ -845,6 +937,53 @@ fn run_extract(desc: &Descriptor, rows: usize, args: &[&PjRtBuffer]) -> Result<P
     })
 }
 
+/// Device-side page copy: `src[i] -> dst[i]` across both pools and every
+/// layer. The COW primitive behind determinism-aware prefix sharing: the
+/// engine copies a shared page before rewriting it so published/hit pages
+/// are never mutated in place.
+fn run_copy_pages(desc: &Descriptor, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+    let d = &desc.dims;
+    if args.len() != 3 {
+        return err(format!(
+            "copy_pages expects 3 args (state, src, dst), got {}",
+            args.len()
+        ));
+    }
+    if d.block_size == 0 {
+        return err("copy_pages on an unpaged artifact set (block_size 0)");
+    }
+    let mut state = args[0].f32s()?.to_vec();
+    let src = args[1].i32s()?;
+    let dst = args[2].i32s()?;
+    if src.len() != dst.len() {
+        return err(format!(
+            "copy_pages src/dst length mismatch: {} vs {}",
+            src.len(),
+            dst.len()
+        ));
+    }
+    let np = d.num_pages();
+    let page_floats = d.block_size * d.kv_dim();
+    for (&s, &t) in src.iter().zip(dst.iter()) {
+        let (s, t) = (s as usize, t as usize);
+        if s >= np || t >= np {
+            return err(format!("copy_pages page out of range ({np} pages)"));
+        }
+        if s == t {
+            continue;
+        }
+        for which in 0..2 {
+            for layer in 0..d.n_layers {
+                let so = d.kv_offset_paged(which, layer, s, 0);
+                let to = d.kv_offset_paged(which, layer, t, 0);
+                state.copy_within(so..so + page_floats, to);
+            }
+        }
+    }
+    let len = state.len();
+    Ok(PjRtBuffer { data: Rc::new(Data::F32(state)), dims: vec![len] })
+}
+
 fn run_micro_gemm(desc: &Descriptor, nsplits: usize, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
     if args.len() != 2 {
         return err(format!("micro_gemm expects 2 args (x, w), got {}", args.len()));
@@ -940,8 +1079,8 @@ mod tests {
         let text = "llm42-sim v1\nop forward\ng 2\nt 4\nstrategy fast\nffn_splits 8\n\
                     head_splits 8\nattn_ksplits 4\nnorm_splits 4\nseq_chunks 8\npartial bf16\n\
                     vocab 256\nd_model 64\nn_layers 2\nn_heads 4\nn_kv_heads 2\nhead_dim 16\n\
-                    ffn_hidden 128\nmax_seq 128\nslots 5\nmax_fwd_tokens 256\nlogit_scale 6.0\n\
-                    rope_theta 10000.0\nrms_eps 1e-5\n";
+                    ffn_hidden 128\nmax_seq 128\nslots 5\nmax_fwd_tokens 256\nblock_size 16\n\
+                    logit_scale 6.0\nrope_theta 10000.0\nrms_eps 1e-5\n";
         let d = parse_descriptor(text).unwrap();
         match d.op {
             Op::Forward { g, t } => {
@@ -951,6 +1090,36 @@ mod tests {
         }
         assert_eq!(d.sched.ffn_splits, 8);
         assert_eq!(d.dims.vocab, 256);
+        assert_eq!(d.dims.block_size, 16);
+        assert_eq!(d.dims.num_pages(), 5 * 128 / 16);
+        assert_eq!(d.dims.blocks_per_lane(), 8);
         assert!(parse_descriptor("not an artifact").is_err());
+    }
+
+    #[test]
+    fn paged_addressing_matches_slot_addressing_on_identity_tables() {
+        // a block table mapping block b of slot s to page s*bpl + b is the
+        // identity relocation: both formulas must hit the same float
+        let mut d = Dims::default();
+        d.n_layers = 2;
+        d.n_kv_heads = 2;
+        d.head_dim = 16;
+        d.max_seq = 128;
+        d.slots = 5;
+        d.block_size = 16;
+        let bpl = d.blocks_per_lane();
+        for layer in 0..2 {
+            for which in 0..2 {
+                for slot in 0..d.slots {
+                    for pos in [0usize, 15, 16, 127] {
+                        let page = slot * bpl + pos / d.block_size;
+                        assert_eq!(
+                            d.kv_offset(which, layer, slot, pos),
+                            d.kv_offset_paged(which, layer, page, pos % d.block_size),
+                        );
+                    }
+                }
+            }
+        }
     }
 }
