@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: artifacts artifacts-test build test fmt-check lint bench-check
+.PHONY: artifacts artifacts-test build test fmt-check lint bench-check bench-json
 
 artifacts:
 	cd rust && $(CARGO) run --release -- gen-artifacts --out artifacts --preset tiny
@@ -26,3 +26,8 @@ lint:
 
 bench-check:
 	cd rust && $(CARGO) bench --no-run
+
+# Run the engine bench suite; writes the machine-readable perf trajectory
+# to BENCH_engine.json at the repo root (see benches/engine.rs).
+bench-json:
+	cd rust && $(CARGO) bench --bench engine

@@ -1,18 +1,53 @@
 //! Engine-path benchmarks: decode step per bucket (fast vs invariant),
 //! verify pass, prefill chunk, logits extraction, the pure-rust hot
-//! pieces (sampler, batch bookkeeping) that must never dominate L3, and a
+//! pieces (sampler, batch bookkeeping) that must never dominate L3, a
 //! mixed-traffic scheduling-policy comparison (p99 deterministic e2e under
-//! a saturating low-priority background load).
+//! a saturating low-priority background load), and a step-composer
+//! comparison (fusion off vs on at equal max_batch).
 //!
 //!     cargo bench --bench engine
+//!
+//! Besides the human-readable tables, the closed-loop benches write a
+//! machine-readable perf trajectory to `BENCH_engine.json` at the repo
+//! root (tok/s, TTFT p50/p99, det-traffic e2e p99, forwards per committed
+//! token) so future PRs can diff perf. Env knobs:
+//!   * `LLM42_BENCH_JSON=path` — override the output path
+//!   * `LLM42_BENCH_REDUCED=1` — shrink reps/workloads (the CI smoke job)
 
 use llm42::engine::{
     Engine, EngineConfig, Mode, PolicyKind, Request, StepKind,
 };
 use llm42::runtime::Runtime;
 use llm42::engine::sampler::sample;
+use llm42::util::json::Json;
 use llm42::util::rng::SplitMix64;
 use llm42::util::stats::{Recorder, Table};
+
+fn reduced() -> bool {
+    std::env::var("LLM42_BENCH_REDUCED").map_or(false, |v| v != "0" && !v.is_empty())
+}
+
+/// Write the collected sections to `BENCH_engine.json`. Cargo runs bench
+/// binaries with the package root (`rust/`) as cwd, so the repo root is
+/// one level up; `LLM42_BENCH_JSON` overrides.
+fn write_bench_json(sections: Vec<(&str, Json)>) {
+    let path = std::env::var("LLM42_BENCH_JSON").unwrap_or_else(|_| {
+        if std::path::Path::new("../Makefile").exists() {
+            "../BENCH_engine.json".into()
+        } else {
+            "BENCH_engine.json".into()
+        }
+    });
+    let mut all = vec![
+        ("schema", Json::num(1.0)),
+        ("reduced", Json::Bool(reduced())),
+    ];
+    all.extend(sections);
+    match std::fs::write(&path, Json::obj(all).dump()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
 
 fn main() {
     let artifacts =
@@ -27,7 +62,7 @@ fn main() {
     };
     let dims = rt.dims().clone();
     let trash = (dims.slots - 1) as i32;
-    let reps = 20;
+    let reps = if reduced() { 3 } else { 20 };
 
     // ---- forward passes ---------------------------------------------------
     let mut tab = Table::new(&["pass", "avg_ms", "per_token_us"]);
@@ -96,8 +131,114 @@ fn main() {
         16.0 * per / 1e6
     );
 
-    policy_comparison(&mut rt);
-    multiturn_cache_comparison(&mut rt);
+    let mut sections: Vec<(&str, Json)> = Vec::new();
+    if let Some(j) = policy_comparison(&mut rt) {
+        sections.push(("policy_comparison", j));
+    }
+    if let Some(j) = multiturn_cache_comparison(&mut rt) {
+        sections.push(("multiturn_cache", j));
+    }
+    if let Some(j) = fusion_comparison(&mut rt) {
+        sections.push(("fusion", j));
+    }
+    write_bench_json(sections);
+}
+
+/// Step-composer benchmark: the same prefill-heavy mixed workload (long
+/// prompts head-of-line-blocking a decode population, plus deterministic
+/// traffic in the middle) with fusion off vs on at equal `max_batch`.
+/// Headline column: forwards per committed token — the acceptance
+/// criterion is a >= 25% reduction with fusion on.
+fn fusion_comparison(rt: &mut Runtime) -> Option<Json> {
+    let n_reqs = if reduced() { 6 } else { 16 };
+    let mut tab = Table::new(&[
+        "max_step_tokens",
+        "fwd/tok",
+        "forwards",
+        "tok_s",
+        "ttft_p50_ms",
+        "ttft_p99_ms",
+        "det_e2e_p99_ms",
+        "fused_occ_%",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    for budget in [0usize, 128] {
+        let cfg = EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 2,
+            verify_window: 16,
+            max_stall_steps: 4,
+            eos_token: u32::MAX, // full budgets: identical committed volume
+            max_step_tokens: budget,
+            ..Default::default()
+        };
+        let mut eng = match Engine::new(rt, cfg) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("fusion bench skipped: {e}");
+                return None;
+            }
+        };
+        let _ = eng.warmup();
+        // arxiv-ish shape: long prompts, short outputs, 25% deterministic
+        for i in 0..n_reqs {
+            eng.submit(Request {
+                prompt: (0..100).map(|p| 3 + ((p + i as u32 * 13) % 400)).collect(),
+                max_new_tokens: 10,
+                deterministic: i % 4 == 0,
+                temperature: 1.0,
+                seed: 90_000 + i as u64,
+                priority: 0,
+                deadline_ms: None,
+            })
+            .unwrap();
+        }
+        let t0 = llm42::util::now_secs();
+        if let Err(e) = eng.run_to_completion() {
+            eprintln!("fusion bench aborted: {e}");
+            return None;
+        }
+        let wall = llm42::util::now_secs() - t0;
+        let outs = eng.take_finished();
+        let mut ttft = Recorder::new();
+        let mut det_e2e = Recorder::new();
+        for o in &outs {
+            ttft.record(o.metrics.ttft() * 1e3);
+            if o.deterministic {
+                det_e2e.record(o.metrics.e2e() * 1e3);
+            }
+        }
+        let m = &eng.metrics;
+        let fwd_per_tok = m.forwards_per_committed_token();
+        tab.row(vec![
+            format!("{budget}"),
+            format!("{fwd_per_tok:.3}"),
+            format!("{}", m.forward_passes),
+            format!("{:.1}", m.committed_tokens as f64 / wall.max(1e-9)),
+            format!("{:.0}", ttft.percentile(50.0)),
+            format!("{:.0}", ttft.percentile(99.0)),
+            format!("{:.0}", det_e2e.percentile(99.0)),
+            format!("{:.0}", m.fused_occupancy() * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("max_step_tokens", Json::num(budget as f64)),
+            ("forwards_per_committed_token", Json::num(fwd_per_tok)),
+            ("forward_passes", Json::num(m.forward_passes as f64)),
+            ("committed_tokens", Json::num(m.committed_tokens as f64)),
+            (
+                "tok_s",
+                Json::num(m.committed_tokens as f64 / wall.max(1e-9)),
+            ),
+            ("ttft_p50_ms", Json::num(ttft.percentile(50.0))),
+            ("ttft_p99_ms", Json::num(ttft.percentile(99.0))),
+            ("det_e2e_p99_ms", Json::num(det_e2e.percentile(99.0))),
+            ("fused_occupancy", Json::num(m.fused_occupancy())),
+            ("wall_s", Json::num(wall)),
+        ]));
+    }
+    println!("== step composer: fusion off vs on ==");
+    println!("{}", tab.render());
+    Some(Json::Arr(rows))
 }
 
 /// Multi-turn chat, closed loop: every follow-up turn resubmits the
@@ -106,7 +247,7 @@ fn main() {
 /// served from cache and deterministic TTFT with the cache off vs on —
 /// the paged-KV acceptance measurement (>= 30% prefill-token reduction
 /// from cache hits on this shape).
-fn multiturn_cache_comparison(rt: &mut Runtime) {
+fn multiturn_cache_comparison(rt: &mut Runtime) -> Option<Json> {
     let mut tab = Table::new(&[
         "prefix_cache",
         "prefill_tok",
@@ -115,8 +256,9 @@ fn multiturn_cache_comparison(rt: &mut Runtime) {
         "ttft_p50_ms",
         "ttft_p99_ms",
     ]);
+    let mut rows: Vec<Json> = Vec::new();
     let n_convs = 4usize;
-    let turns = 5usize;
+    let turns = if reduced() { 2 } else { 5 };
     let mut baseline_prefill = 0u64;
     for cache in [false, true] {
         let cfg = EngineConfig {
@@ -132,7 +274,7 @@ fn multiturn_cache_comparison(rt: &mut Runtime) {
             Ok(e) => e,
             Err(e) => {
                 eprintln!("multiturn bench skipped: {e}");
-                return;
+                return None;
             }
         };
         let _ = eng.warmup();
@@ -164,7 +306,7 @@ fn multiturn_cache_comparison(rt: &mut Runtime) {
             }
             if let Err(e) = eng.run_to_completion() {
                 eprintln!("multiturn bench aborted: {e}");
-                return;
+                return None;
             }
             // closed loop: append each reply's committed tokens to its
             // conversation before the next turn resubmits the history
@@ -194,9 +336,18 @@ fn multiturn_cache_comparison(rt: &mut Runtime) {
             format!("{:.0}", ttft.percentile(50.0)),
             format!("{:.0}", ttft.percentile(99.0)),
         ]);
+        rows.push(Json::obj(vec![
+            ("prefix_cache", Json::Bool(cache)),
+            ("prefill_tokens", Json::num(prefill as f64)),
+            ("cache_hit_tokens", Json::num(hits as f64)),
+            ("prefill_saved_pct", Json::num(saved)),
+            ("ttft_p50_ms", Json::num(ttft.percentile(50.0))),
+            ("ttft_p99_ms", Json::num(ttft.percentile(99.0))),
+        ]));
     }
     println!("== multiturn chat: prefix cache off vs on ==");
     println!("{}", tab.render());
+    Some(Json::Arr(rows))
 }
 
 /// Mixed-traffic policy benchmark: a handful of high-priority deterministic
@@ -205,7 +356,7 @@ fn multiturn_cache_comparison(rt: &mut Runtime) {
 /// deterministic e2e plus preemption/re-prefill cost — the scheduler split's
 /// acceptance measurement (DeadlineAware/FairShare should cut the
 /// deterministic tail vs the seed PrefillFirst policy).
-fn policy_comparison(rt: &mut Runtime) {
+fn policy_comparison(rt: &mut Runtime) -> Option<Json> {
     let user_slots = rt.dims().slots - 1;
     let mut tab = Table::new(&[
         "policy",
@@ -216,6 +367,7 @@ fn policy_comparison(rt: &mut Runtime) {
         "reprefilled",
         "wall_s",
     ]);
+    let mut rows: Vec<Json> = Vec::new();
     for policy in [
         PolicyKind::PrefillFirst,
         PolicyKind::DeadlineAware,
@@ -234,7 +386,7 @@ fn policy_comparison(rt: &mut Runtime) {
             Ok(e) => e,
             Err(e) => {
                 eprintln!("policy bench skipped: {e}");
-                return;
+                return None;
             }
         };
         let _ = eng.warmup();
@@ -242,7 +394,7 @@ fn policy_comparison(rt: &mut Runtime) {
         // saturating background: 4x as many low-priority requests as
         // slots, long budgets — keeps every slot contended for the whole
         // deterministic arrival window
-        let n_bg = user_slots * 4;
+        let n_bg = user_slots * if reduced() { 2 } else { 4 };
         for i in 0..n_bg {
             eng.submit(Request {
                 prompt: (10..26).map(|t| t + (i as u32 % 7)).collect(),
@@ -259,7 +411,7 @@ fn policy_comparison(rt: &mut Runtime) {
         // is decoding (trickled in as the run progresses); enough samples
         // that the p99 column is a tail estimate, not a single max
         let det_every = 15usize; // steps between deterministic arrivals
-        let n_det = 24usize;
+        let n_det = if reduced() { 6 } else { 24 };
         let mut det_submitted = 0usize;
         let mut steps = 0usize;
         let t0 = llm42::util::now_secs();
@@ -290,7 +442,7 @@ fn policy_comparison(rt: &mut Runtime) {
                 Ok(_) => {}
                 Err(e) => {
                     eprintln!("policy bench aborted: {e}");
-                    return;
+                    return None;
                 }
             }
             steps += 1;
@@ -316,7 +468,28 @@ fn policy_comparison(rt: &mut Runtime) {
             format!("{}", eng.metrics.reprefilled_tokens),
             format!("{wall:.1}"),
         ]);
+        rows.push(Json::obj(vec![
+            ("policy", Json::str(eng.policy_name())),
+            ("det_e2e_p50_ms", Json::num(det_e2e.percentile(50.0))),
+            ("det_e2e_p99_ms", Json::num(det_e2e.percentile(99.0))),
+            ("bg_e2e_p99_ms", Json::num(bg_e2e.percentile(99.0))),
+            ("preemptions", Json::num(eng.metrics.preemptions as f64)),
+            (
+                "reprefilled_tokens",
+                Json::num(eng.metrics.reprefilled_tokens as f64),
+            ),
+            (
+                "tok_s",
+                Json::num(eng.metrics.committed_tokens as f64 / wall.max(1e-9)),
+            ),
+            (
+                "forwards_per_committed_token",
+                Json::num(eng.metrics.forwards_per_committed_token()),
+            ),
+            ("wall_s", Json::num(wall)),
+        ]));
     }
     println!("== mixed traffic: policy comparison ==");
     println!("{}", tab.render());
+    Some(Json::Arr(rows))
 }

@@ -4,7 +4,7 @@
 //!         [--requests 48] [--qps 4] [--det-ratio 0.1] [--mode llm42] \
 //!         [--policy prefill-first|deadline|fair-share] [--det-priority 4] \
 //!         [--det-deadline-ms 400] [--workload sharegpt|arxiv|multiturn] \
-//!         [--prefix-cache true|false]
+//!         [--prefix-cache true|false] [--max-step-tokens N]
 //!
 //! Serves an online ShareGPT-shaped workload (Poisson arrivals) with a
 //! mixed deterministic ratio through the full three-layer stack — rust
@@ -68,6 +68,9 @@ fn main() -> Result<()> {
             verify_window: args.usize_or("window", 32)?,
             policy,
             prefix_cache: args.bool_or("prefix-cache", false)?,
+            // 0 = seed-exclusive steps; N fuses prefill chunks + the
+            // decode batch into one forward per step (verify overlapped)
+            max_step_tokens: args.usize_or("max-step-tokens", 0)?,
             ..Default::default()
         };
         serve(&mut rt, cfg, &spec, det_priority, det_deadline_ms)?;
@@ -160,6 +163,15 @@ fn serve(
     println!(
         "  scheduling: {} preemptions, {} re-prefilled tokens, queue depth hwm {}",
         m.preemptions, m.reprefilled_tokens, m.queue_depth_hwm
+    );
+    println!(
+        "  step composer: {} forwards ({:.2} per committed token), {} fused \
+         steps carrying {} tokens ({:.0}% budget occupancy)",
+        m.forward_passes,
+        m.forwards_per_committed_token(),
+        m.fused_steps,
+        m.fused_fwd_tokens,
+        m.fused_occupancy() * 100.0
     );
     let kv = eng.kv_stats();
     println!(

@@ -251,6 +251,29 @@ fn artifact_defs(p: &Preset) -> Vec<ArtifactDef> {
         }
     }
 
+    // ragged lane-major fused fast-path graph (the step composer): per-lane
+    // token counts + start positions over block-table addressing, compiled
+    // at token capacity max_fwd_tokens (encoded in `g`). Always the
+    // universal invariant schedule, so a lane's rows are bitwise identical
+    // to the exclusive window_inv_g1 pass — prefill-sourced commits stay
+    // deterministic-by-construction inside a fused step.
+    defs.push(ArtifactDef {
+        name: "mixed_inv".into(),
+        kind: "mixed",
+        g: p.max_fwd_tokens,
+        t: 1,
+        strategy: "inv",
+        extra: {
+            let mut e: Vec<(String, String)> = vec![
+                ("op".into(), "mixed".into()),
+                ("strategy".into(), "inv".into()),
+                ("seq_chunks".into(), "8".into()),
+            ];
+            e.extend(dims_lines(p));
+            e
+        },
+    });
+
     // KV page copy (the COW primitive for paged prefix sharing)
     defs.push(ArtifactDef {
         name: "copy_pages".into(),
@@ -439,7 +462,10 @@ pub fn generate_opts(
             ("g", Json::num(def.g as f64)),
             ("t", Json::num(def.t as f64)),
             ("strategy", Json::str(def.strategy)),
-            ("donates_state", Json::Bool(def.kind == "decode" || def.kind == "window")),
+            (
+                "donates_state",
+                Json::Bool(matches!(def.kind, "decode" | "window" | "mixed")),
+            ),
         ]));
     }
 
@@ -487,10 +513,15 @@ static ENSURE_LOCK: Mutex<()> = Mutex::new(());
 
 /// True when the manifest at `man` was emitted by a generator that knows
 /// about KV paging (block_size in the model dims + the copy_pages
-/// artifact). Pre-paging sets are regenerated rather than half-trusted.
+/// artifact) and the fused step composer (the mixed_inv graph). Stale
+/// sets are regenerated rather than half-trusted.
 fn manifest_is_current(man: &Path) -> bool {
     std::fs::read_to_string(man)
-        .map(|t| t.contains("\"block_size\"") && t.contains("copy_pages"))
+        .map(|t| {
+            t.contains("\"block_size\"")
+                && t.contains("copy_pages")
+                && t.contains("mixed_inv")
+        })
         .unwrap_or(false)
 }
 
@@ -575,6 +606,9 @@ mod tests {
         assert!(man.artifact("window_inv_g8_t32").is_some());
         assert!(man.artifact("gemm_fast_m1").is_some());
         assert!(man.artifact("copy_pages").is_some());
+        let mixed = man.artifact("mixed_inv").expect("fused fast-path graph");
+        assert_eq!(mixed.g, 256, "mixed capacity = max_fwd_tokens");
+        assert!(mixed.donates_state);
         assert_eq!(man.model.block_size, 16);
         assert_eq!(man.model.num_pages(), 5 * 160 / 16);
         // weight table covers the model exactly (validated by load, but

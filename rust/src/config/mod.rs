@@ -17,6 +17,7 @@
 //!   "eos_token": 1,
 //!   "prefix_cache": true,
 //!   "block_size": 0,
+//!   "max_step_tokens": 0,
 //!   "server": { "addr": "127.0.0.1:4242" }
 //! }
 //! ```
@@ -27,7 +28,11 @@
 //! block-granular prefix sharing (cache hits skip prefill compute but
 //! still verify; committed tokens of deterministic requests are bitwise
 //! identical either way). `block_size` (0 = the artifact set's baked-in
-//! page size) must match the compiled KV addressing.
+//! page size) must match the compiled KV addressing. `max_step_tokens`
+//! (0 = off) enables the step composer: up to that many fast-path tokens
+//! — ragged prefill chunks plus the decode batch — fuse into one forward
+//! per step, with verification overlapped on its own fixed-shape graph;
+//! deterministic streams are bitwise identical fused or not.
 
 use crate::engine::{EngineConfig, FaultPlan, Mode, PolicyKind};
 use crate::error::{Error, Result};
@@ -82,6 +87,9 @@ impl AppConfig {
         if let Some(p) = v.get("prefix_cache").and_then(|x| x.as_bool()) {
             cfg.engine.prefix_cache = p;
         }
+        if let Some(m) = v.get("max_step_tokens").and_then(|x| x.as_usize()) {
+            cfg.engine.max_step_tokens = m;
+        }
         if let Some(srv) = v.get("server") {
             if let Some(a) = srv.get("addr").and_then(|x| x.as_str()) {
                 cfg.server_addr = a.to_string();
@@ -97,7 +105,7 @@ impl AppConfig {
 
     /// CLI flags override file values (`--mode`, `--policy`, `--group`,
     /// `--window`, `--artifacts`, `--addr`, `--max-stall`, `--eos`,
-    /// `--block-size`, `--prefix-cache true|false`).
+    /// `--block-size`, `--prefix-cache true|false`, `--max-step-tokens`).
     pub fn apply_args(mut self, args: &Args) -> Result<AppConfig> {
         if let Some(m) = args.get("mode") {
             self.engine.mode = Mode::parse(m)?;
@@ -115,6 +123,8 @@ impl AppConfig {
             args.usize_or("block-size", self.engine.block_size)?;
         self.engine.prefix_cache =
             args.bool_or("prefix-cache", self.engine.prefix_cache)?;
+        self.engine.max_step_tokens =
+            args.usize_or("max-step-tokens", self.engine.max_step_tokens)?;
         self.artifacts = args.str_or("artifacts", &self.artifacts);
         self.server_addr = args.str_or("addr", &self.server_addr);
         self.engine.fault = FaultPlan::None; // never configurable in prod
@@ -199,6 +209,17 @@ mod tests {
         assert!(!d.engine.prefix_cache);
         assert_eq!(d.engine.block_size, 0);
         assert!(AppConfig::resolve(&args("--prefix-cache wat")).is_err());
+    }
+
+    #[test]
+    fn max_step_tokens_from_file_and_flags() {
+        let c = AppConfig::from_json(r#"{"max_step_tokens": 128}"#).unwrap();
+        assert_eq!(c.engine.max_step_tokens, 128);
+        let c = c.apply_args(&args("--max-step-tokens 64")).unwrap();
+        assert_eq!(c.engine.max_step_tokens, 64);
+        // default: step composer off (seed-exclusive steps)
+        let d = AppConfig::resolve(&args("")).unwrap();
+        assert_eq!(d.engine.max_step_tokens, 0);
     }
 
     #[test]

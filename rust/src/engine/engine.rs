@@ -2,15 +2,35 @@
 //! policy** ([`crate::engine::scheduler`]).
 //!
 //! One `Engine` owns a borrowed [`Runtime`] and drives it with a
-//! synchronous step loop (one forward per step — verification is a global
-//! pause, exactly the limitation the paper's prototype documents in §5.2).
-//! Each `step()`:
+//! synchronous step loop. Each `step()`:
 //!
-//!   1. snapshots engine state into a [`SchedView`],
+//!   1. snapshots engine state into a [`SchedView`] (rebuilt into
+//!      engine-owned scratch buffers — the re-plan loop allocates nothing),
 //!   2. asks the configured [`SchedulerPolicy`] to `plan()` an [`Action`],
 //!   3. applies it. Bookkeeping actions (`Admit`, `Preempt`) re-plan within
-//!      the same step; forward-pass actions (`Prefill`, `Decode`, `Verify`)
-//!      and `Idle` end the step with the matching [`StepKind`].
+//!      the same step; forward-pass actions (`Prefill`, `Decode`, `Verify`,
+//!      `Run`) and `Idle` end the step with the matching [`StepKind`].
+//!
+//! # Step composer (`max_step_tokens > 0`)
+//!
+//! With the token budget disabled (the default), the engine runs at most
+//! one forward of exactly one kind per step — the paper prototype's §5.2
+//! shape, and bit-for-bit the seed engine's schedule under `PrefillFirst`.
+//! With `max_step_tokens = N`, policies compose [`Action::Run`] steps
+//! carrying a [`BatchPlan`] instead:
+//! all fast-path work — multiple ragged prefill chunks *and* the decode
+//! batch, up to N tokens — executes as **one fused lane-major forward** on
+//! the `mixed_inv` graph, while the verify group still runs on its own,
+//! unchanged fixed-shape `window_inv_g{G}_t{T}` graph in the same step.
+//! The fused graph carries the universal invariant schedule and computes
+//! lanes independently, so a prefill lane's rows (and therefore gen
+//! token 0, the only fast-path token that commits without verification)
+//! are bitwise identical to the exclusive `window_inv_g1` pass — committed
+//! streams of deterministic requests are unchanged by fusion, which
+//! `tests/fused.rs` pins across all three policies with the prefix cache
+//! on and off. The payoff is strictly fewer forwards per committed token
+//! on mixed workloads: long prompts no longer head-of-line-block the
+//! decode lanes, and verification no longer steals whole steps.
 //!
 //! The executor owns the *mechanics* — the paged KV cache
 //! ([`crate::engine::kv`]): block tables, prefix-cache admission,
@@ -53,7 +73,8 @@ use crate::engine::kv::{blocks_for, KvManager, KvStats};
 use crate::engine::metrics::EngineMetrics;
 use crate::engine::sampler::sample;
 use crate::engine::scheduler::{
-    Action, LaneView, PolicyKind, QueuedView, SchedView, SchedulerPolicy,
+    Action, BatchPlan, LaneView, PolicyKind, QueuedView, SchedView,
+    SchedulerPolicy,
 };
 use crate::engine::sequence::{Phase, Request, RequestOutput, Sequence};
 use crate::engine::verify;
@@ -110,6 +131,19 @@ pub struct EngineConfig {
     /// blocks from finished/live sequences. Off by default — the off
     /// state is decision-compatible with the slot-based seed engine.
     pub prefix_cache: bool,
+    /// Fast-path token budget per step for the **step composer**. 0 (the
+    /// default) disables fusion: every step runs at most one exclusive
+    /// forward, exactly the seed schedule. N > 0 lets policies pack up to
+    /// N fast-path tokens — ragged prefill chunks plus one token per
+    /// decode lane — into one fused `mixed_inv` forward per step, with
+    /// grouped verification overlapped on its own fixed-shape graph.
+    /// Nonzero values are clamped to `[max_batch + 1, max_fwd_tokens]`:
+    /// the upper bound is the logits-region row capacity; the lower bound
+    /// guarantees the full decode batch plus at least one prefill token
+    /// fit every step (no starvation under tiny budgets). Trades TTFT
+    /// against throughput: larger budgets drain prompts faster per step
+    /// but make each step heavier.
+    pub max_step_tokens: usize,
 }
 
 impl Default for EngineConfig {
@@ -124,6 +158,7 @@ impl Default for EngineConfig {
             policy: PolicyKind::PrefillFirst,
             block_size: 0,
             prefix_cache: false,
+            max_step_tokens: 0,
         }
     }
 }
@@ -134,7 +169,34 @@ pub enum StepKind {
     Prefill,
     Decode,
     Verify,
+    /// A composite fused step (two or more phases in one step); wall time
+    /// is attributed to the per-phase metrics by token share.
+    Mixed,
     Idle,
+}
+
+/// Reusable planning-view buffers: `step()` rebuilds the [`SchedView`]
+/// every bookkeeping round (up to `max_rounds` times per step), so the
+/// lane/queue vectors — and the token buffer the cache-on admission probe
+/// keys on — are engine-owned and recycled instead of freshly allocated.
+#[derive(Default)]
+struct ViewScratch {
+    view: SchedView,
+    toks: Vec<u32>,
+}
+
+/// Reusable forward-pass buffers (tokens / positions / counts / block
+/// tables / COW pairs and the host logits copy), shared by the prefill,
+/// decode, verify, and fused paths so no per-pass buffer is allocated on
+/// the hot path.
+#[derive(Default)]
+struct StepScratch {
+    tokens: Vec<i32>,
+    positions: Vec<i32>,
+    counts: Vec<i32>,
+    tables: Vec<i32>,
+    copies: Vec<(i32, i32)>,
+    logits: Vec<f32>,
 }
 
 pub struct Engine<'rt> {
@@ -152,6 +214,11 @@ pub struct Engine<'rt> {
     prefill_chunks: Vec<usize>,
     invariant_bucket: usize,
     max_seq: usize,
+    /// fused fast-path token budget per step (0 = step composer disabled),
+    /// clamped to the artifact set's logits capacity
+    step_budget: usize,
+    view_scratch: ViewScratch,
+    scratch: StepScratch,
 }
 
 impl<'rt> Engine<'rt> {
@@ -166,6 +233,24 @@ impl<'rt> Engine<'rt> {
             let name =
                 Runtime::window_artifact(cfg.verify_group, cfg.verify_window);
             rt.manifest.require(&name)?;
+        }
+        // The step composer needs the ragged fused graph. The effective
+        // budget is clamped to [max_batch + 1, max_fwd_tokens]: the upper
+        // bound is how many logits rows one forward can publish; the lower
+        // bound guarantees the whole decode batch plus at least one
+        // prefill token always fit one step, so a tiny budget can never
+        // starve prefilling lanes (or later-table decode lanes) the way a
+        // fixed-order truncation otherwise would.
+        let max_batch = *decode_buckets.last().unwrap();
+        let step_budget = if cfg.max_step_tokens == 0 {
+            0
+        } else {
+            cfg.max_step_tokens
+                .max(max_batch + 1)
+                .min(dims.max_fwd_tokens)
+        };
+        if step_budget > 0 {
+            rt.manifest.require(Runtime::mixed_artifact())?;
         }
         if dims.block_size == 0 {
             return Err(Error::Manifest(
@@ -189,7 +274,7 @@ impl<'rt> Engine<'rt> {
             dims.user_slots(),
             cfg.prefix_cache,
         )?;
-        let invariant_bucket = *decode_buckets.last().unwrap();
+        let invariant_bucket = max_batch;
         rt.reset_state()?;
         let policy = cfg.policy.build();
         Ok(Engine {
@@ -207,6 +292,9 @@ impl<'rt> Engine<'rt> {
             prefill_chunks,
             invariant_bucket,
             max_seq: dims.max_seq,
+            step_budget,
+            view_scratch: ViewScratch::default(),
+            scratch: StepScratch::default(),
         })
     }
 
@@ -230,6 +318,13 @@ impl<'rt> Engine<'rt> {
     pub fn set_policy(&mut self, kind: PolicyKind) {
         self.cfg.policy = kind;
         self.policy = kind.build();
+    }
+
+    /// Install a custom policy implementation (embedders and tests; the
+    /// wire protocol swaps named kinds via [`Engine::set_policy`]). The
+    /// executor validates every action, so a buggy policy fails loudly.
+    pub fn set_policy_boxed(&mut self, policy: Box<dyn SchedulerPolicy>) {
+        self.policy = policy;
     }
 
     /// Pre-compile every artifact this engine's mode can touch, so the
@@ -261,6 +356,9 @@ impl<'rt> Engine<'rt> {
         }
         if self.cfg.prefix_cache {
             names.push("copy_pages".into());
+        }
+        if self.step_budget > 0 {
+            names.push(Runtime::mixed_artifact().into());
         }
         let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
         self.rt.warmup(&refs)
@@ -386,8 +484,9 @@ impl<'rt> Engine<'rt> {
     /// One admission probe for a queued sequence: `(new blocks it would
     /// allocate, admittable right now?)` — a single radix lookup, shared
     /// by the capacity count and the QueuedView so the hot planning loop
-    /// never walks the prefix tree twice per request.
-    fn queued_admission(&self, s: &Sequence) -> (usize, bool) {
+    /// never walks the prefix tree twice per request. `toks` is a reused
+    /// scratch buffer for the cache-on token materialization.
+    fn queued_admission(&self, s: &Sequence, toks: &mut Vec<u32>) -> (usize, bool) {
         let worst = self.worst_positions(s);
         let cow = self.cow_budget(s.req.deterministic, s.req.max_new_tokens);
         if !self.cfg.prefix_cache {
@@ -395,37 +494,33 @@ impl<'rt> Engine<'rt> {
             let need = blocks_for(worst, self.kv.block_size()) + cow;
             return (need, self.kv.seats_free() > 0);
         }
-        self.kv.admission_check(
-            &s.content_tokens(s.prefill_total()),
-            worst,
-            cow,
-        )
-    }
-
-    /// Admission capacity for the policy layer. Cache off: the seed's
-    /// free-seat count (decision-compatible). Cache on: how many queued
-    /// requests individually fit the free + reclaimable blocks right now.
-    fn admission_capacity(&self) -> usize {
-        if !self.cfg.prefix_cache {
-            return self.kv.seats_free();
-        }
-        self.queue
-            .iter()
-            .filter(|&&i| self.queued_admission(&self.seqs[i]).1)
-            .count()
+        toks.clear();
+        s.content_tokens_into(s.prefill_total(), toks);
+        self.kv.admission_check(toks, worst, cow)
     }
 
     /// Snapshot the scheduling-relevant engine state. Policies plan over
     /// this; tests use it to check policy decisions against a live engine.
+    /// The step loop goes through [`Engine::build_view`] instead, which
+    /// rebuilds into engine-owned scratch without allocating.
     pub fn view(&self) -> SchedView {
+        let mut vs = ViewScratch::default();
+        self.build_view(&mut vs);
+        vs.view
+    }
+
+    /// Rebuild the scheduling snapshot into reused buffers (the hot-path
+    /// twin of [`Engine::view`]; called once per planning round).
+    fn build_view(&self, vs: &mut ViewScratch) {
         let window = self.cfg.verify_window;
         let dvr = self.dvr();
-        let lanes: Vec<LaneView> = self
-            .seqs
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| matches!(s.phase, Phase::Prefilling | Phase::Decoding))
-            .map(|(i, s)| LaneView {
+        let view = &mut vs.view;
+        view.lanes.clear();
+        for (i, s) in self.seqs.iter().enumerate() {
+            if !matches!(s.phase, Phase::Prefilling | Phase::Decoding) {
+                continue;
+            }
+            view.lanes.push(LaneView {
                 idx: i,
                 id: s.id,
                 phase: s.phase,
@@ -444,58 +539,62 @@ impl<'rt> Engine<'rt> {
                 can_decode: s.can_decode(window, dvr),
                 verify_ready: s.verify_ready(window),
                 decoding_done: s.decoding_done(),
-            })
-            .collect();
+            });
+        }
         // one admission probe per queued request feeds both the per-entry
         // need_blocks and the capacity count
         let mut admittable = 0usize;
-        let queue: Vec<QueuedView> = self
-            .queue
-            .iter()
-            .map(|&i| {
-                let s = &self.seqs[i];
-                let (need_blocks, ok) = self.queued_admission(s);
-                if ok {
-                    admittable += 1;
-                }
-                QueuedView {
-                    idx: i,
-                    id: s.id,
-                    priority: s.req.priority,
-                    deadline_ms: s.req.deadline_ms,
-                    arrive_time: s.metrics.arrive_time,
-                    deterministic: s.req.deterministic,
-                    prompt_len: s.prompt_len(),
-                    need_blocks,
-                }
-            })
-            .collect();
-        let free_slots = if self.cfg.prefix_cache {
+        view.queue.clear();
+        for &i in &self.queue {
+            let s = &self.seqs[i];
+            let (need_blocks, ok) = self.queued_admission(s, &mut vs.toks);
+            if ok {
+                admittable += 1;
+            }
+            view.queue.push(QueuedView {
+                idx: i,
+                id: s.id,
+                priority: s.req.priority,
+                deadline_ms: s.req.deadline_ms,
+                arrive_time: s.metrics.arrive_time,
+                deterministic: s.req.deterministic,
+                prompt_len: s.prompt_len(),
+                need_blocks,
+            });
+        }
+        view.free_slots = if self.cfg.prefix_cache {
             admittable
         } else {
             self.kv.seats_free()
         };
         let kv = self.kv.stats();
-        SchedView {
-            now: now_secs(),
-            dvr,
-            verify_group: self.cfg.verify_group,
-            verify_window: window,
-            max_stall_steps: self.cfg.max_stall_steps,
-            max_batch: self.max_batch(),
-            free_slots,
-            free_blocks: kv.free_pages,
-            cached_blocks: kv.cached_pages,
-            prefix_cache: self.cfg.prefix_cache,
-            lanes,
-            queue,
-        }
+        view.now = now_secs();
+        view.dvr = dvr;
+        view.verify_group = self.cfg.verify_group;
+        view.verify_window = window;
+        view.max_stall_steps = self.cfg.max_stall_steps;
+        view.max_batch = self.max_batch();
+        view.max_step_tokens = self.step_budget;
+        view.free_blocks = kv.free_pages;
+        view.cached_blocks = kv.cached_pages;
+        view.prefix_cache = self.cfg.prefix_cache;
     }
 
-    /// One scheduler iteration; executes at most one forward pass.
+    /// One scheduler iteration; executes the step's forward work (one
+    /// exclusive pass, or — under the step composer — one fused fast-path
+    /// forward plus an overlapped verify pass).
     pub fn step(&mut self) -> Result<StepKind> {
         self.metrics.steps += 1;
         self.sync_kv_metrics();
+        // the planning view lives in engine-owned scratch; take it out for
+        // the duration of the round loop so `&mut self` stays available
+        let mut vs = std::mem::take(&mut self.view_scratch);
+        let out = self.step_rounds(&mut vs);
+        self.view_scratch = vs;
+        out
+    }
+
+    fn step_rounds(&mut self, vs: &mut ViewScratch) -> Result<StepKind> {
         // Bookkeeping actions loop back for a re-plan; the bound is a
         // policy-bug backstop. A legitimate burst can preempt once per
         // active lane and admit once per queued request, so the bound
@@ -508,11 +607,11 @@ impl<'rt> Engine<'rt> {
         // again on the next step.
         let mut evicted_this_step: Vec<usize> = Vec::new();
         for _round in 0..max_rounds {
-            let view = self.view();
-            let action = self.policy.plan(&view);
+            self.build_view(vs);
+            let action = self.policy.plan(&vs.view);
             match action {
                 Action::Admit { n } => {
-                    self.apply_admit(n, &view, &evicted_this_step)?;
+                    self.apply_admit(n, &vs.view, &evicted_this_step)?;
                 }
                 Action::Preempt { victim } => {
                     self.apply_preempt(victim)?;
@@ -545,6 +644,9 @@ impl<'rt> Engine<'rt> {
                     self.bump_stalls();
                     return Ok(StepKind::Decode);
                 }
+                Action::Run(plan) => {
+                    return self.apply_plan(plan);
+                }
                 Action::Idle => {
                     self.bump_stalls();
                     return Ok(StepKind::Idle);
@@ -556,13 +658,104 @@ impl<'rt> Engine<'rt> {
         )))
     }
 
+    /// Execute a composite token-budgeted plan: the fast-path group (all
+    /// prefill chunks + the decode batch) as one ragged fused forward, then
+    /// the verify group on its own unchanged fixed-shape graph. Degenerate
+    /// single-phase plans report the matching [`StepKind`]; genuinely mixed
+    /// steps report [`StepKind::Mixed`].
+    fn apply_plan(&mut self, plan: BatchPlan) -> Result<StepKind> {
+        self.check_plan(&plan)?;
+        if !plan.prefill.is_empty() {
+            self.fused_pass(&plan.prefill, &plan.decode)?;
+        } else if !plan.decode.is_empty() {
+            // decode-only plan: nothing to fuse, keep the shape-tuned
+            // bucket graphs on the fast path
+            let t0 = Instant::now();
+            self.decode_step(&plan.decode)?;
+            self.metrics.decode_secs += t0.elapsed().as_secs_f64();
+        }
+        if !plan.verify.is_empty() {
+            let t0 = Instant::now();
+            self.verify_pass(&plan.verify)?;
+            self.metrics.verify_secs += t0.elapsed().as_secs_f64();
+        }
+        // stall accounting mirrors the exclusive arms: fast-path steps bump
+        // waiting ready lanes, a pure verify step does not (lanes the pass
+        // served were reset inside verify_pass either way)
+        if !plan.prefill.is_empty() || !plan.decode.is_empty() {
+            self.bump_stalls();
+        }
+        Ok(match plan.phases() {
+            1 if !plan.prefill.is_empty() => StepKind::Prefill,
+            1 if !plan.decode.is_empty() => StepKind::Decode,
+            1 => StepKind::Verify,
+            _ => StepKind::Mixed,
+        })
+    }
+
+    /// Validate a composite plan against live engine state (the executor's
+    /// authoritative twin of [`BatchPlan::validate`], which property tests
+    /// exercise over pure snapshots).
+    fn check_plan(&self, plan: &BatchPlan) -> Result<()> {
+        if self.step_budget == 0 {
+            return Err(Error::Engine(
+                "policy bug: Action::Run with the step composer disabled \
+                 (max_step_tokens = 0)"
+                    .into(),
+            ));
+        }
+        if plan.is_empty() {
+            return Err(Error::Engine("policy bug: empty BatchPlan".into()));
+        }
+        let all: Vec<usize> = plan
+            .prefill
+            .iter()
+            .map(|&(i, _)| i)
+            .chain(plan.decode.iter().copied())
+            .chain(plan.verify.iter().copied())
+            .collect();
+        Self::check_unique(&all)?;
+        if plan.fast_tokens() > self.step_budget {
+            return Err(Error::Engine(format!(
+                "policy bug: plan feeds {} fast tokens, budget is {}",
+                plan.fast_tokens(),
+                self.step_budget
+            )));
+        }
+        for &(idx, chunk) in &plan.prefill {
+            let s = self
+                .seqs
+                .get(idx)
+                .filter(|s| s.phase == Phase::Prefilling)
+                .ok_or_else(|| {
+                    Error::Engine(format!(
+                        "policy bug: prefill of non-prefilling sequence {idx}"
+                    ))
+                })?;
+            let remaining = s.prefill_total() - s.prefill_pos;
+            if chunk == 0 || chunk > remaining {
+                return Err(Error::Engine(format!(
+                    "policy bug: prefill chunk {chunk} out of range for sequence \
+                     {idx} ({remaining} tokens remaining)"
+                )));
+            }
+        }
+        if !plan.decode.is_empty() {
+            self.check_decode_lanes(&plan.decode)?;
+        }
+        if !plan.verify.is_empty() {
+            self.check_verify_lanes(&plan.verify)?;
+        }
+        Ok(())
+    }
+
     fn apply_admit(
         &mut self,
         n: usize,
         view: &SchedView,
         deferred: &[usize],
     ) -> Result<()> {
-        if n == 0 || self.queue.is_empty() || self.admission_capacity() == 0 {
+        if n == 0 || self.queue.is_empty() {
             return Err(Error::Engine(
                 "policy bug: Admit with nothing admittable".into(),
             ));
@@ -795,25 +988,28 @@ impl<'rt> Engine<'rt> {
 
     // ---------------------------------------------------------- prefill
     fn prefill_chunk(&mut self, idx: usize) -> Result<()> {
-        let (id, start, real, chunk, tokens, has_committed) = {
+        let mut scr = std::mem::take(&mut self.scratch);
+        let res = self.prefill_chunk_inner(idx, &mut scr);
+        self.scratch = scr;
+        res
+    }
+
+    fn prefill_chunk_inner(&mut self, idx: usize, scr: &mut StepScratch) -> Result<()> {
+        scr.tokens.clear();
+        scr.tables.clear();
+        let (id, start, real, chunk, has_committed) = {
             let seq = &self.seqs[idx];
             let total = seq.prefill_total();
             let remaining = total - seq.prefill_pos;
             let chunk = self.pick_chunk(remaining);
             let real = remaining.min(chunk);
-            let mut tokens: Vec<i32> = (seq.prefill_pos..seq.prefill_pos + real)
-                .map(|i| seq.prefill_token(i) as i32)
-                .collect();
-            tokens.resize(chunk, 0); // pad tokens; their KV is overwritten
-                                     // before any later step can attend to it
-            (
-                seq.id,
-                seq.prefill_pos,
-                real,
-                chunk,
-                tokens,
-                !seq.committed.is_empty(),
-            )
+            scr.tokens.extend(
+                (seq.prefill_pos..seq.prefill_pos + real)
+                    .map(|i| seq.prefill_token(i) as i32),
+            );
+            scr.tokens.resize(chunk, 0); // pad tokens; their KV is overwritten
+                                         // before any later step can attend to it
+            (seq.id, seq.prefill_pos, real, chunk, !seq.committed.is_empty())
         };
 
         // allocate pages covering the padded chunk and COW anything shared
@@ -822,16 +1018,17 @@ impl<'rt> Engine<'rt> {
         // anyway: the write must land in private memory)
         let copies = self.kv.prepare_write(id, start, start + chunk)?;
         self.run_cow_copies(&copies)?;
-        let table = self.kv.lane_table(id)?;
+        self.kv.extend_lane_table(id, &mut scr.tables)?;
 
         let artifact = Runtime::window_artifact(1, chunk);
         self.rt.forward(
             &artifact,
-            &tokens,
-            &table,
+            &scr.tokens,
+            &scr.tables,
             &[start as i32],
         )?;
         self.metrics.prefill_chunks += 1;
+        self.metrics.forward_passes += 1;
         self.metrics.prefill_tokens += real as u64;
         // redone work caused by preemption: drain the replay debt recorded
         // at eviction time (only tokens whose KV had actually been built
@@ -942,6 +1139,13 @@ impl<'rt> Engine<'rt> {
 
     // ----------------------------------------------------------- decode
     fn decode_step(&mut self, lanes: &[usize]) -> Result<()> {
+        let mut scr = std::mem::take(&mut self.scratch);
+        let res = self.decode_step_inner(lanes, &mut scr);
+        self.scratch = scr;
+        res
+    }
+
+    fn decode_step_inner(&mut self, lanes: &[usize], scr: &mut StepScratch) -> Result<()> {
         let count = lanes.len();
         let bucket = if self.invariant_decode() {
             // the universal schedule: one fixed shape for every step
@@ -953,41 +1157,50 @@ impl<'rt> Engine<'rt> {
                 .find(|&b| b >= count)
                 .ok_or_else(|| Error::Engine("batch exceeds max bucket".into()))?
         };
-        let mut tokens = vec![0i32; bucket];
-        let mut positions = vec![0i32; bucket];
-        let mut all_copies: Vec<(i32, i32)> = Vec::new();
+        scr.tokens.clear();
+        scr.tokens.resize(bucket, 0);
+        scr.positions.clear();
+        scr.positions.resize(bucket, 0);
+        scr.copies.clear();
         for (lane, &idx) in lanes.iter().enumerate() {
             let (id, pos) = {
                 let s = &self.seqs[idx];
-                tokens[lane] = s.next_input_token() as i32;
-                positions[lane] = s.next_input_position() as i32;
+                scr.tokens[lane] = s.next_input_token() as i32;
+                scr.positions[lane] = s.next_input_position() as i32;
                 (s.id, s.next_input_position())
             };
-            all_copies.extend(self.kv.prepare_write(id, pos, pos + 1)?);
+            let copies = self.kv.prepare_write(id, pos, pos + 1)?;
+            scr.copies.extend(copies);
         }
-        self.run_cow_copies(&all_copies)?;
+        self.run_cow_copies(&scr.copies)?;
         // block tables after COW remaps; padding lanes are all-trash
-        let bpl = self.kv.blocks_per_lane();
-        let mut tables: Vec<i32> = Vec::with_capacity(bucket * bpl);
+        scr.tables.clear();
         for lane in 0..bucket {
             if lane < lanes.len() {
-                tables.extend(self.kv.lane_table(self.seqs[lanes[lane]].id)?);
+                self.kv
+                    .extend_lane_table(self.seqs[lanes[lane]].id, &mut scr.tables)?;
             } else {
-                tables.extend(self.kv.trash_table());
+                self.kv.extend_trash_table(&mut scr.tables);
             }
         }
 
         let artifact = Runtime::decode_artifact(bucket, self.invariant_decode());
-        self.rt.forward(&artifact, &tokens, &tables, &positions)?;
+        self.rt
+            .forward(&artifact, &scr.tokens, &scr.tables, &scr.positions)?;
         self.metrics.decode_steps += 1;
+        self.metrics.forward_passes += 1;
 
         let vocab = self.rt.dims().vocab;
-        let logits = self.rt.extract_logits(count)?.to_vec();
+        {
+            let logits = self.rt.extract_logits(count)?;
+            scr.logits.clear();
+            scr.logits.extend_from_slice(logits);
+        }
         let eos = self.cfg.eos_token;
         let speculative = self.dvr();
         let mut to_retire = Vec::new();
         for (lane, &idx) in lanes.iter().enumerate() {
-            let row = &logits[lane * vocab..(lane + 1) * vocab];
+            let row = &scr.logits[lane * vocab..(lane + 1) * vocab];
             let seq = &mut self.seqs[idx];
             let gen_index = seq.next_gen_index() as u64;
             let tok = sample(row, seq.req.temperature, seq.req.seed, gen_index);
@@ -1014,14 +1227,191 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
+    // ------------------------------------------------------------ fused
+    /// One ragged lane-major fused forward covering every prefill chunk
+    /// and decode lane of a composite plan (prefill lanes first, then
+    /// decode lanes; rows land at prefix-sum offsets in the logits
+    /// region). Chunks are real lengths — ragged fusion pads nothing.
+    /// Wall time is attributed to the prefill/decode phase metrics by
+    /// token share, so `{"cmd":"stats"}` stays meaningful under fusion.
+    fn fused_pass(&mut self, prefill: &[(usize, usize)], decode: &[usize]) -> Result<()> {
+        let t0 = Instant::now();
+        let mut scr = std::mem::take(&mut self.scratch);
+        let res = self.fused_pass_inner(prefill, decode, &mut scr);
+        self.scratch = scr;
+        // whole-pass wall time (COW copies, fused forward, logits
+        // extraction, sampling) attributed by token share — comparable
+        // with the exclusive arms, which also time their full pass
+        let dt = t0.elapsed().as_secs_f64();
+        let prefill_toks: usize = prefill.iter().map(|&(_, c)| c).sum();
+        let n = (prefill_toks + decode.len()).max(1);
+        self.metrics.prefill_secs += dt * prefill_toks as f64 / n as f64;
+        self.metrics.decode_secs += dt * decode.len() as f64 / n as f64;
+        res
+    }
+
+    fn fused_pass_inner(
+        &mut self,
+        prefill: &[(usize, usize)],
+        decode: &[usize],
+        scr: &mut StepScratch,
+    ) -> Result<()> {
+        scr.tokens.clear();
+        scr.counts.clear();
+        scr.positions.clear();
+        scr.tables.clear();
+        scr.copies.clear();
+        for &(idx, chunk) in prefill {
+            let (id, start) = {
+                let s = &self.seqs[idx];
+                let start = s.prefill_pos;
+                scr.tokens
+                    .extend((start..start + chunk).map(|i| s.prefill_token(i) as i32));
+                (s.id, start)
+            };
+            scr.counts.push(chunk as i32);
+            scr.positions.push(start as i32);
+            let copies = self.kv.prepare_write(id, start, start + chunk)?;
+            scr.copies.extend(copies);
+        }
+        for &idx in decode {
+            let (id, pos) = {
+                let s = &self.seqs[idx];
+                scr.tokens.push(s.next_input_token() as i32);
+                (s.id, s.next_input_position())
+            };
+            scr.counts.push(1);
+            scr.positions.push(pos as i32);
+            let copies = self.kv.prepare_write(id, pos, pos + 1)?;
+            scr.copies.extend(copies);
+        }
+        self.run_cow_copies(&scr.copies)?;
+        // block tables after COW remaps; ragged lanes need no trash padding
+        for &(idx, _) in prefill {
+            self.kv
+                .extend_lane_table(self.seqs[idx].id, &mut scr.tables)?;
+        }
+        for &idx in decode {
+            self.kv
+                .extend_lane_table(self.seqs[idx].id, &mut scr.tables)?;
+        }
+
+        let n = scr.tokens.len();
+        debug_assert!(n > 0 && n <= self.step_budget);
+        self.rt
+            .forward_mixed(&scr.tokens, &scr.counts, &scr.tables, &scr.positions)?;
+        self.metrics.forward_passes += 1;
+        self.metrics.fused_steps += 1;
+        self.metrics.fused_fwd_tokens += n as u64;
+        self.metrics.fused_capacity_tokens += self.step_budget as u64;
+        self.metrics.prefill_chunks += prefill.len() as u64;
+        if !decode.is_empty() {
+            self.metrics.decode_steps += 1;
+        }
+
+        let vocab = self.rt.dims().vocab;
+        {
+            let logits = self.rt.extract_logits(n)?;
+            scr.logits.clear();
+            scr.logits.extend_from_slice(logits);
+        }
+        let eos = self.cfg.eos_token;
+        let mut to_retire: Vec<usize> = Vec::new();
+        let mut row = 0usize;
+
+        for &(idx, chunk) in prefill {
+            self.metrics.prefill_tokens += chunk as u64;
+            // redone work caused by preemption (same rule as the serial path)
+            let replay = chunk.min(self.seqs[idx].replay_debt);
+            if replay > 0 {
+                self.seqs[idx].replay_debt -= replay;
+                self.metrics.reprefilled_tokens += replay as u64;
+                self.seqs[idx].metrics.reprefilled_tokens += replay as u64;
+            }
+            let (done, had_committed) = {
+                let seq = &mut self.seqs[idx];
+                seq.prefill_pos += chunk;
+                (seq.prefill_pos >= seq.prefill_total(), !seq.committed.is_empty())
+            };
+            let written = self.seqs[idx].prefill_pos;
+            self.publish_seq(idx, written);
+            if done {
+                if had_committed {
+                    // restored committed prefix: its last token is the next
+                    // decode input, so no sampling happens here
+                    self.seqs[idx].phase = Phase::Decoding;
+                } else {
+                    // prompt complete: gen token 0 from the last real row.
+                    // The fused graph computes this lane's rows with the
+                    // same invariant schedule as the exclusive window_inv
+                    // pass, so this token is bitwise the serial one —
+                    // deterministic by construction, commits immediately.
+                    let logits_row =
+                        &scr.logits[(row + chunk - 1) * vocab..(row + chunk) * vocab];
+                    let (temp, rseed) =
+                        (self.seqs[idx].req.temperature, self.seqs[idx].req.seed);
+                    let tok = sample(logits_row, temp, rseed, 0);
+                    let seq = &mut self.seqs[idx];
+                    seq.phase = Phase::Decoding;
+                    seq.metrics.first_token_time = now_secs();
+                    let finished = seq.push_fast_token(tok, eos, false);
+                    self.metrics.decoded_tokens += 1;
+                    self.metrics.committed_tokens += 1;
+                    if finished {
+                        to_retire.push(idx);
+                    }
+                }
+            }
+            row += chunk;
+        }
+
+        let speculative = self.dvr();
+        for &idx in decode {
+            let logits_row = &scr.logits[row * vocab..(row + 1) * vocab];
+            let seq = &mut self.seqs[idx];
+            let gen_index = seq.next_gen_index() as u64;
+            let tok = sample(logits_row, seq.req.temperature, seq.req.seed, gen_index);
+            let spec_lane = speculative && seq.req.deterministic;
+            let finished = seq.push_fast_token(tok, eos, spec_lane);
+            self.metrics.decoded_tokens += 1;
+            if !spec_lane {
+                self.metrics.committed_tokens += 1;
+            }
+            if self.invariant_decode() {
+                // batch-invariant commits are universal-schedule KV: the
+                // newly covered blocks become publishable immediately
+                let seq = &self.seqs[idx];
+                let written = seq.prompt_len() + seq.committed.len();
+                self.publish_seq(idx, written.saturating_sub(1));
+            }
+            if finished {
+                to_retire.push(idx);
+            }
+            row += 1;
+        }
+        for idx in to_retire {
+            self.retire(idx)?;
+        }
+        Ok(())
+    }
+
     // ----------------------------------------------------------- verify
     fn verify_pass(&mut self, lanes: &[usize]) -> Result<()> {
+        let mut scr = std::mem::take(&mut self.scratch);
+        let res = self.verify_pass_inner(lanes, &mut scr);
+        self.scratch = scr;
+        res
+    }
+
+    fn verify_pass_inner(&mut self, lanes: &[usize], scr: &mut StepScratch) -> Result<()> {
         let g = self.cfg.verify_group;
         let t = self.cfg.verify_window;
         debug_assert!(lanes.len() <= g);
-        let mut tokens = vec![0i32; g * t];
-        let mut positions = vec![0i32; g];
-        let mut all_copies: Vec<(i32, i32)> = Vec::new();
+        scr.tokens.clear();
+        scr.tokens.resize(g * t, 0);
+        scr.positions.clear();
+        scr.positions.resize(g, 0);
+        scr.copies.clear();
 
         for (lane, &idx) in lanes.iter().enumerate() {
             let (id, start) = {
@@ -1029,37 +1419,44 @@ impl<'rt> Engine<'rt> {
                 debug_assert!(!s.committed.is_empty() && !s.speculative.is_empty());
                 // window inputs: last committed token, then the speculative run
                 let base = lane * t;
-                tokens[base] = *s.committed.last().unwrap() as i32;
+                scr.tokens[base] = *s.committed.last().unwrap() as i32;
                 for (j, &sp) in s.speculative.iter().take(t - 1).enumerate() {
-                    tokens[base + 1 + j] = sp as i32;
+                    scr.tokens[base + 1 + j] = sp as i32;
                 }
                 let start = s.prompt_len() + s.committed.len() - 1;
-                positions[lane] = start as i32;
+                scr.positions[lane] = start as i32;
                 (s.id, start)
             };
             // the window rewrite may roll back shared state: COW anything
             // in [start, start+t) that another table or the index holds
-            all_copies.extend(self.kv.prepare_write(id, start, start + t)?);
+            let copies = self.kv.prepare_write(id, start, start + t)?;
+            scr.copies.extend(copies);
         }
-        self.run_cow_copies(&all_copies)?;
-        let bpl = self.kv.blocks_per_lane();
-        let mut tables: Vec<i32> = Vec::with_capacity(g * bpl);
+        self.run_cow_copies(&scr.copies)?;
+        scr.tables.clear();
         for lane in 0..g {
             if lane < lanes.len() {
-                tables.extend(self.kv.lane_table(self.seqs[lanes[lane]].id)?);
+                self.kv
+                    .extend_lane_table(self.seqs[lanes[lane]].id, &mut scr.tables)?;
             } else {
-                tables.extend(self.kv.trash_table());
+                self.kv.extend_trash_table(&mut scr.tables);
             }
         }
 
         let artifact = Runtime::window_artifact(g, t);
-        self.rt.forward(&artifact, &tokens, &tables, &positions)?;
+        self.rt
+            .forward(&artifact, &scr.tokens, &scr.tables, &scr.positions)?;
         self.metrics.verify_passes += 1;
+        self.metrics.forward_passes += 1;
         self.metrics.verify_lanes += lanes.len() as u64;
 
         let vocab = self.rt.dims().vocab;
         let rows = lanes.len() * t;
-        let logits = self.rt.extract_logits(rows)?.to_vec();
+        {
+            let l = self.rt.extract_logits(rows)?;
+            scr.logits.clear();
+            scr.logits.extend_from_slice(l);
+        }
         let eos = self.cfg.eos_token;
 
         let mut to_retire = Vec::new();
@@ -1080,7 +1477,7 @@ impl<'rt> Engine<'rt> {
             // sample the verifier's token for every window row
             let mut vtokens = Vec::with_capacity(t);
             for j in 0..t {
-                let row = &logits[(lane * t + j) * vocab..(lane * t + j + 1) * vocab];
+                let row = &scr.logits[(lane * t + j) * vocab..(lane * t + j + 1) * vocab];
                 vtokens.push(sample(
                     row,
                     seq.req.temperature,

@@ -409,20 +409,35 @@ impl KvManager {
     /// Flat block table for a lane, trash-filled beyond the allocated
     /// prefix (unallocated entries are only ever masked, never attended).
     pub fn lane_table(&self, id: u64) -> Result<Vec<i32>> {
+        let mut out = Vec::with_capacity(self.bpl);
+        self.extend_lane_table(id, &mut out)?;
+        Ok(out)
+    }
+
+    /// Append one lane's block table to `out` (the allocation-free twin of
+    /// [`KvManager::lane_table`] — the executor builds multi-lane tables
+    /// into one reused scratch buffer).
+    pub fn extend_lane_table(&self, id: u64, out: &mut Vec<i32>) -> Result<()> {
         let sk = self
             .seqs
             .get(&id)
             .ok_or_else(|| Error::Engine(format!("lane_table of unknown seq {id}")))?;
-        let mut out = vec![self.pool.trash_page() as i32; self.bpl];
-        for (b, &p) in sk.table.iter().enumerate() {
-            out[b] = p as i32;
-        }
-        Ok(out)
+        let start = out.len();
+        out.extend(sk.table.iter().map(|&p| p as i32));
+        out.resize(start + self.bpl, self.pool.trash_page() as i32);
+        Ok(())
     }
 
     /// Block table for a padding lane: every entry is the trash page.
     pub fn trash_table(&self) -> Vec<i32> {
-        vec![self.pool.trash_page() as i32; self.bpl]
+        let mut out = Vec::with_capacity(self.bpl);
+        self.extend_trash_table(&mut out);
+        out
+    }
+
+    /// Append an all-trash padding-lane table to `out`.
+    pub fn extend_trash_table(&self, out: &mut Vec<i32>) {
+        out.resize(out.len() + self.bpl, self.pool.trash_page() as i32);
     }
 
     /// Submit-time feasibility: could this footprint ever be admitted on

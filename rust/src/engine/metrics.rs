@@ -43,6 +43,17 @@ pub struct EngineMetrics {
     pub decode_steps: u64,
     pub prefill_chunks: u64,
     pub verify_passes: u64,
+    /// every model forward the engine issued (prefill chunks, decode
+    /// steps, verify passes, fused passes; `copy_pages` excluded) — the
+    /// denominator of the headline forwards-per-committed-token metric
+    pub forward_passes: u64,
+    /// fused (ragged mixed prefill+decode) passes executed
+    pub fused_steps: u64,
+    /// fast-path tokens that went through fused passes
+    pub fused_fwd_tokens: u64,
+    /// sum of the step token budget over fused passes (the occupancy
+    /// denominator: how full the composer kept its budget)
+    pub fused_capacity_tokens: u64,
     /// real (non-pad) fast-path tokens decoded
     pub decoded_tokens: u64,
     /// tokens committed (returned to users)
@@ -102,6 +113,37 @@ impl EngineMetrics {
             0.0
         } else {
             self.recomputed_tokens as f64 / self.decoded_tokens as f64
+        }
+    }
+
+    /// Model forwards per committed token — the mixed-workload headline
+    /// metric the step composer shrinks (fewer exclusive prefill/verify
+    /// steps per token that actually reaches a user).
+    pub fn forwards_per_committed_token(&self) -> f64 {
+        if self.committed_tokens == 0 {
+            0.0
+        } else {
+            self.forward_passes as f64 / self.committed_tokens as f64
+        }
+    }
+
+    /// Committed tokens per model forward (the reciprocal view surfaced
+    /// by `{"cmd":"stats"}`).
+    pub fn tokens_per_forward(&self) -> f64 {
+        if self.forward_passes == 0 {
+            0.0
+        } else {
+            self.committed_tokens as f64 / self.forward_passes as f64
+        }
+    }
+
+    /// How full fused passes kept the step token budget (1.0 = every
+    /// fused forward carried `max_step_tokens` fast-path tokens).
+    pub fn fused_occupancy(&self) -> f64 {
+        if self.fused_capacity_tokens == 0 {
+            0.0
+        } else {
+            self.fused_fwd_tokens as f64 / self.fused_capacity_tokens as f64
         }
     }
 
@@ -191,5 +233,24 @@ mod tests {
         m.note_queue_depth(3);
         m.note_queue_depth(1);
         assert_eq!(m.queue_depth_hwm, 3);
+    }
+
+    #[test]
+    fn fused_and_forward_ratios() {
+        let m = EngineMetrics {
+            forward_passes: 50,
+            committed_tokens: 200,
+            fused_steps: 10,
+            fused_fwd_tokens: 300,
+            fused_capacity_tokens: 400,
+            ..Default::default()
+        };
+        assert!((m.forwards_per_committed_token() - 0.25).abs() < 1e-12);
+        assert!((m.tokens_per_forward() - 4.0).abs() < 1e-12);
+        assert!((m.fused_occupancy() - 0.75).abs() < 1e-12);
+        let z = EngineMetrics::default();
+        assert_eq!(z.forwards_per_committed_token(), 0.0);
+        assert_eq!(z.tokens_per_forward(), 0.0);
+        assert_eq!(z.fused_occupancy(), 0.0);
     }
 }

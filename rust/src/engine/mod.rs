@@ -3,7 +3,10 @@
 //! determinism — split into a mechanics **executor** (`engine`) and
 //! pluggable, independently-testable **scheduler policies** (`scheduler`)
 //! with priority classes and KV preemption, over a paged KV cache with
-//! determinism-aware prefix sharing (`kv`).
+//! determinism-aware prefix sharing (`kv`). Under a `max_step_tokens`
+//! budget the executor becomes a **step composer**: policies plan fused
+//! mixed prefill+decode steps ([`BatchPlan`] / [`Action::Run`]) with
+//! verification overlapped on its own fixed-shape graph.
 
 pub mod engine;
 pub mod kv;
@@ -17,6 +20,7 @@ pub use engine::{Engine, EngineConfig, FaultPlan, Mode, StepKind};
 pub use kv::{KvManager, KvStats};
 pub use metrics::{ClassStats, EngineMetrics, SeqMetrics};
 pub use scheduler::{
-    Action, LaneView, PolicyKind, QueuedView, SchedView, SchedulerPolicy,
+    Action, BatchPlan, LaneView, PolicyKind, QueuedView, SchedView,
+    SchedulerPolicy,
 };
 pub use sequence::{FinishReason, Request, RequestOutput};

@@ -19,7 +19,8 @@
 use std::cmp::Ordering;
 
 use crate::engine::scheduler::{
-    preemption_victim, Action, SchedView, SchedulerPolicy,
+    compose_plan, preemption_victim, verify_trigger, Action, SchedView,
+    SchedulerPolicy,
 };
 use crate::engine::sequence::Phase;
 
@@ -48,6 +49,66 @@ impl DeadlineAware {
             .unwrap_or(Ordering::Equal)
             .then(a.1.cmp(&b.1))
             .then(a.2.partial_cmp(&b.2).unwrap_or(Ordering::Equal))
+    }
+
+    /// Sort lane indices most-urgent-first (ties broken by lowest index).
+    fn sort_by_urgency(v: &SchedView, idxs: &mut [usize]) {
+        idxs.sort_by(|&a, &b| {
+            let la = v.lane(a).expect("lane in view");
+            let lb = v.lane(b).expect("lane in view");
+            Self::cmp_urgency(
+                Self::urgency(la.deadline_at(), la.priority, la.arrive_time),
+                Self::urgency(lb.deadline_at(), lb.priority, lb.arrive_time),
+            )
+            .then(a.cmp(&b))
+        });
+    }
+
+    /// Stall-or-slack urgency over the ready set: the seed stall-step
+    /// bound always applies — a deadline tightens the trigger, never
+    /// loosens it (a loose deadline must not starve a lane of
+    /// verification, i.e. of all token output).
+    fn any_urgent(&self, v: &SchedView, ready: &[usize]) -> bool {
+        ready.iter().any(|&i| {
+            v.lane(i)
+                .map(|l| {
+                    l.stall_steps >= v.max_stall_steps
+                        || l.deadline_at()
+                            .map_or(false, |at| at - v.now <= self.urgent_slack_secs)
+                })
+                .unwrap_or(false)
+        })
+    }
+
+    /// Token-budgeted composite plan: the decode batch rides every step,
+    /// the budget remainder goes to prefill chunks most-urgent-first
+    /// (deadline-aware TTFT), and the verify group fires under the same
+    /// slack/stall trigger as the exclusive path — overlapped rather than
+    /// displacing a fast-path step.
+    fn plan_fused(&self, v: &SchedView) -> Action {
+        let decode = v.decodable();
+        let mut prefilling: Vec<usize> = v
+            .lanes
+            .iter()
+            .filter(|l| l.phase == Phase::Prefilling)
+            .map(|l| l.idx)
+            .collect();
+        Self::sort_by_urgency(v, &mut prefilling);
+        let mut verify = Vec::new();
+        if v.dvr {
+            let mut ready = v.verify_ready();
+            if verify_trigger(
+                v,
+                &ready,
+                self.any_urgent(v, &ready),
+                decode.is_empty() && prefilling.is_empty(),
+            ) {
+                Self::sort_by_urgency(v, &mut ready);
+                ready.truncate(v.verify_group);
+                verify = ready;
+            }
+        }
+        compose_plan(v, decode, verify, &prefilling)
     }
 }
 
@@ -79,6 +140,10 @@ impl SchedulerPolicy for DeadlineAware {
             }
         }
 
+        if v.max_step_tokens > 0 {
+            return self.plan_fused(v);
+        }
+
         // most-urgent prefilling lane first (deadline-aware TTFT)
         if let Some(l) = v
             .lanes
@@ -96,39 +161,14 @@ impl SchedulerPolicy for DeadlineAware {
 
         if v.dvr {
             let mut ready: Vec<usize> = v.verify_ready();
-            if !ready.is_empty() {
-                let decodable = v.decodable();
-                let urgent = ready.iter().any(|&i| {
-                    v.lane(i)
-                        .map(|l| {
-                            // the seed stall-step bound always applies — a
-                            // deadline tightens the trigger, never loosens
-                            // it (a loose deadline must not starve a lane
-                            // of verification, i.e. of all token output)
-                            l.stall_steps >= v.max_stall_steps
-                                || l
-                                    .deadline_at()
-                                    .map_or(false, |at| {
-                                        at - v.now <= self.urgent_slack_secs
-                                    })
-                        })
-                        .unwrap_or(false)
-                });
-                if ready.len() >= v.verify_group || urgent || decodable.is_empty() {
-                    // most-urgent lanes verify first
-                    ready.sort_by(|&a, &b| {
-                        let la = v.lane(a).expect("ready lane");
-                        let lb = v.lane(b).expect("ready lane");
-                        Self::cmp_urgency(
-                            Self::urgency(la.deadline_at(), la.priority, la.arrive_time),
-                            Self::urgency(lb.deadline_at(), lb.priority, lb.arrive_time),
-                        )
-                        .then(a.cmp(&b))
-                    });
-                    return Action::Verify {
-                        lanes: ready.into_iter().take(v.verify_group).collect(),
-                    };
-                }
+            let decodable = v.decodable();
+            if verify_trigger(v, &ready, self.any_urgent(v, &ready), decodable.is_empty())
+            {
+                // most-urgent lanes verify first
+                Self::sort_by_urgency(v, &mut ready);
+                return Action::Verify {
+                    lanes: ready.into_iter().take(v.verify_group).collect(),
+                };
             }
         }
 
@@ -243,5 +283,31 @@ mod tests {
         let victim = lane(0, 0, false);
         let v = view(vec![victim], vec![queued(5, 3)], 0);
         assert_eq!(p.plan(&v), Action::Preempt { victim: 0 });
+    }
+
+    #[test]
+    fn fused_mode_orders_prefill_by_urgency_and_overlaps_verify() {
+        use crate::engine::scheduler::tests::prefilling;
+        let mut p = DeadlineAware { urgent_slack_secs: 0.05 };
+        // two prefilling lanes: the younger one has the tighter deadline
+        let mut pre_a = prefilling(0, 40);
+        pre_a.deadline_ms = None;
+        let mut pre_b = prefilling(1, 40);
+        pre_b.deadline_ms = Some(200.0);
+        pre_b.arrive_time = 99.9; // due at 100.1 (view.now = 100.0)
+        let urgent = ready_lane(2, Some(120.0), 99.9); // slack 0.02 < 0.05
+        let dec = lane(3, 0, false);
+        let mut v = view(vec![pre_a, pre_b, urgent, dec], vec![], 0);
+        v.max_step_tokens = 30;
+        match p.plan(&v) {
+            Action::Run(plan) => {
+                assert_eq!(plan.decode, vec![3]);
+                assert_eq!(plan.verify, vec![2], "urgent slack fires alongside");
+                // budget 30 - 1 decode token: deadline lane drains first
+                assert_eq!(plan.prefill, vec![(1, 29)]);
+                assert!(plan.validate(&v).is_ok());
+            }
+            other => panic!("expected a fused Run, got {other:?}"),
+        }
     }
 }

@@ -18,7 +18,8 @@
 use std::collections::HashMap;
 
 use crate::engine::scheduler::{
-    preemption_victim, Action, SchedView, SchedulerPolicy,
+    any_stalled, compose_plan, preemption_victim, verify_trigger, Action,
+    SchedView, SchedulerPolicy,
 };
 use crate::engine::sequence::Phase;
 
@@ -85,6 +86,54 @@ impl FairShare {
         }
         out
     }
+
+    /// Token-budgeted composite plan: decode rides every step (no
+    /// arbitration, the batch covers every runnable lane), the budget
+    /// remainder goes to prefill chunks in WRR class order, the verify
+    /// group fires under the seed trigger in WRR order. Only lanes that
+    /// actually receive service are charged — prefill lanes are charged
+    /// after composition, once the budget decides who got a chunk.
+    fn plan_fused(&mut self, v: &SchedView) -> Action {
+        let decode = v.decodable();
+        let prefilling: Vec<(u8, usize)> = v
+            .lanes
+            .iter()
+            .filter(|l| l.phase == Phase::Prefilling)
+            .map(|l| (l.priority, l.idx))
+            .collect();
+        let prefill_order = if prefilling.is_empty() {
+            Vec::new()
+        } else {
+            // charge nothing here; served lanes are charged below
+            self.wrr_order(&prefilling, 0)
+        };
+        let mut verify = Vec::new();
+        if v.dvr {
+            let ready = v.verify_ready();
+            if verify_trigger(
+                v,
+                &ready,
+                any_stalled(v, &ready),
+                decode.is_empty() && prefill_order.is_empty(),
+            ) {
+                let items: Vec<(u8, usize)> = ready
+                    .iter()
+                    .map(|&i| (v.lane(i).expect("ready lane").priority, i))
+                    .collect();
+                let order = self.wrr_order(&items, v.verify_group);
+                verify = order.into_iter().take(v.verify_group).collect();
+            }
+        }
+        let action = compose_plan(v, decode, verify, &prefill_order);
+        if let Action::Run(plan) = &action {
+            for &(idx, _) in &plan.prefill {
+                if let Some(l) = v.lane(idx) {
+                    *self.service.entry(l.priority).or_insert(0) += 1;
+                }
+            }
+        }
+        action
+    }
 }
 
 impl SchedulerPolicy for FairShare {
@@ -106,6 +155,10 @@ impl SchedulerPolicy for FairShare {
             }
         }
 
+        if v.max_step_tokens > 0 {
+            return self.plan_fused(v);
+        }
+
         // prefill-first, class-arbitrated
         let prefilling: Vec<(u8, usize)> = v
             .lanes
@@ -121,23 +174,16 @@ impl SchedulerPolicy for FairShare {
 
         if v.dvr {
             let ready = v.verify_ready();
-            if !ready.is_empty() {
-                let decodable = v.decodable();
-                let stalled = ready.iter().any(|&i| {
-                    v.lane(i)
-                        .map(|l| l.stall_steps >= v.max_stall_steps)
-                        .unwrap_or(false)
-                });
-                if ready.len() >= v.verify_group || stalled || decodable.is_empty() {
-                    let items: Vec<(u8, usize)> = ready
-                        .iter()
-                        .map(|&i| (v.lane(i).expect("ready lane").priority, i))
-                        .collect();
-                    let order = self.wrr_order(&items, v.verify_group);
-                    return Action::Verify {
-                        lanes: order.into_iter().take(v.verify_group).collect(),
-                    };
-                }
+            let decodable = v.decodable();
+            if verify_trigger(v, &ready, any_stalled(v, &ready), decodable.is_empty()) {
+                let items: Vec<(u8, usize)> = ready
+                    .iter()
+                    .map(|&i| (v.lane(i).expect("ready lane").priority, i))
+                    .collect();
+                let order = self.wrr_order(&items, v.verify_group);
+                return Action::Verify {
+                    lanes: order.into_iter().take(v.verify_group).collect(),
+                };
             }
         }
 
@@ -243,5 +289,36 @@ mod tests {
         let victim = crate::engine::scheduler::tests::lane(0, 0, false);
         let v = view(vec![victim], vec![queued(7, 4)], 0);
         assert_eq!(p.plan(&v), Action::Preempt { victim: 0 });
+    }
+
+    #[test]
+    fn fused_mode_charges_only_served_prefill_lanes() {
+        use crate::engine::scheduler::tests::prefilling;
+        let mut p = FairShare::default();
+        // class 4 (weight 5) vs class 0 (weight 1): WRR leads with class 4
+        let mut hi = prefilling(0, 100);
+        hi.priority = 4;
+        let mut lo = prefilling(1, 100);
+        lo.priority = 0;
+        let mut v = view(vec![hi, lo], vec![], 0);
+        v.max_step_tokens = 16;
+        match p.plan(&v) {
+            crate::engine::scheduler::Action::Run(plan) => {
+                // the whole budget fits one chunk: only the WRR winner is
+                // served — and only that lane's class is charged
+                assert_eq!(plan.prefill, vec![(0, 16)]);
+                assert_eq!(*p.service.get(&4).unwrap_or(&0), 1);
+                assert_eq!(*p.service.get(&0).unwrap_or(&0), 0);
+            }
+            other => panic!("expected a fused Run, got {other:?}"),
+        }
+        // repeated rounds: the weight-1 class is eventually served too
+        let mut lo_served = false;
+        for _ in 0..12 {
+            if let crate::engine::scheduler::Action::Run(plan) = p.plan(&v) {
+                lo_served |= plan.prefill.first() == Some(&(1, 16));
+            }
+        }
+        assert!(lo_served, "WRR must not starve the low class under fusion");
     }
 }

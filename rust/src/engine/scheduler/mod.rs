@@ -37,10 +37,145 @@ pub mod prefill_first;
 use crate::engine::sequence::Phase;
 use crate::error::{Error, Result};
 
+/// A composite step: every phase of work one fused engine step executes.
+///
+/// The fast-path half (`prefill` + `decode`) runs as **one ragged
+/// lane-major fused forward** on the `mixed_inv` graph — per-lane token
+/// counts and start positions over the same block-table addressing as the
+/// exclusive passes. The `verify` half still executes on its own,
+/// untouched fixed-shape `window_inv_g{G}_t{T}` graph in the same step, so
+/// the per-schedule determinism argument for committed tokens is exactly
+/// the serial engine's. Total fast-path tokens (`fast_tokens`) are bounded
+/// by the engine's `max_step_tokens` budget.
+///
+/// The legacy [`Action::Prefill`] / [`Action::Decode`] / [`Action::Verify`]
+/// variants are degenerate plans (one phase, seed-exact execution paths);
+/// `Action::Run` is how fusion-aware policies compose mixed steps.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct BatchPlan {
+    /// `(seqs-index, chunk_len)` prefill chunks; chunks are ragged (any
+    /// length `1..=prefill_remaining`), not limited to artifact shapes.
+    pub prefill: Vec<(usize, usize)>,
+    /// Fast-path decode lanes (≤ `max_batch`), one token each.
+    pub decode: Vec<usize>,
+    /// Grouped-verification lanes (≤ `verify_group`); not counted against
+    /// the token budget — verification runs on its own fixed-shape graph.
+    pub verify: Vec<usize>,
+}
+
+impl BatchPlan {
+    /// Fast-path tokens this plan feeds the fused forward (prefill chunk
+    /// tokens plus one per decode lane). Verify lanes are not counted.
+    pub fn fast_tokens(&self) -> usize {
+        self.prefill.iter().map(|&(_, c)| c).sum::<usize>() + self.decode.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_empty() && self.decode.is_empty() && self.verify.is_empty()
+    }
+
+    /// How many phases (prefill / decode / verify) this plan touches.
+    pub fn phases(&self) -> usize {
+        usize::from(!self.prefill.is_empty())
+            + usize::from(!self.decode.is_empty())
+            + usize::from(!self.verify.is_empty())
+    }
+
+    /// Pure structural validation against a scheduling snapshot: no lane in
+    /// two phases, budget respected, prefill entries target prefilling
+    /// sequences with sane chunk lengths, decode/verify lanes are eligible
+    /// and within their shape caps. The executor re-checks against live
+    /// engine state; this form is what property tests and policy authors
+    /// exercise without an engine.
+    pub fn validate(&self, v: &SchedView) -> Result<()> {
+        if self.is_empty() {
+            return Err(Error::Engine("plan bug: empty BatchPlan".into()));
+        }
+        if v.max_step_tokens == 0 {
+            return Err(Error::Engine(
+                "plan bug: BatchPlan with fusion disabled (max_step_tokens = 0)".into(),
+            ));
+        }
+        let mut seen: Vec<usize> = Vec::with_capacity(
+            self.prefill.len() + self.decode.len() + self.verify.len(),
+        );
+        for idx in self
+            .prefill
+            .iter()
+            .map(|&(i, _)| i)
+            .chain(self.decode.iter().copied())
+            .chain(self.verify.iter().copied())
+        {
+            if seen.contains(&idx) {
+                return Err(Error::Engine(format!(
+                    "plan bug: lane {idx} appears in two phases of one plan"
+                )));
+            }
+            seen.push(idx);
+        }
+        if self.fast_tokens() > v.max_step_tokens {
+            return Err(Error::Engine(format!(
+                "plan bug: {} fast tokens exceed the step budget {}",
+                self.fast_tokens(),
+                v.max_step_tokens
+            )));
+        }
+        for &(idx, chunk) in &self.prefill {
+            let lane = v.lane(idx).ok_or_else(|| {
+                Error::Engine(format!("plan bug: prefill of unknown lane {idx}"))
+            })?;
+            if lane.phase != Phase::Prefilling {
+                return Err(Error::Engine(format!(
+                    "plan bug: prefill of non-prefilling lane {idx}"
+                )));
+            }
+            if chunk == 0 || chunk > lane.prefill_remaining() {
+                return Err(Error::Engine(format!(
+                    "plan bug: prefill chunk {chunk} out of range (lane {idx} has {} \
+                     tokens remaining)",
+                    lane.prefill_remaining()
+                )));
+            }
+        }
+        if self.decode.len() > v.max_batch {
+            return Err(Error::Engine(format!(
+                "plan bug: {} decode lanes exceed max_batch {}",
+                self.decode.len(),
+                v.max_batch
+            )));
+        }
+        for &idx in &self.decode {
+            if !v.lane(idx).map(|l| l.can_decode).unwrap_or(false) {
+                return Err(Error::Engine(format!(
+                    "plan bug: decode lane {idx} is not decodable"
+                )));
+            }
+        }
+        if !self.verify.is_empty() && !v.dvr {
+            return Err(Error::Engine("plan bug: verify outside DVR mode".into()));
+        }
+        if self.verify.len() > v.verify_group {
+            return Err(Error::Engine(format!(
+                "plan bug: {} verify lanes exceed the group size {}",
+                self.verify.len(),
+                v.verify_group
+            )));
+        }
+        for &idx in &self.verify {
+            if !v.lane(idx).map(|l| l.verify_ready).unwrap_or(false) {
+                return Err(Error::Engine(format!(
+                    "plan bug: verify lane {idx} is not verify-ready"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// What the executor should do next. `Admit` and `Preempt` are bookkeeping
 /// actions: the executor applies them and asks the policy to plan again
-/// within the same `step()`; the other actions execute at most one forward
-/// pass and end the step.
+/// within the same `step()`; the other actions execute the step's forward
+/// work and end the step.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Action {
     /// Move up to `n` queued requests into free KV slots, in the order
@@ -50,12 +185,19 @@ pub enum Action {
     /// freeing its KV slot. The executor only permits non-deterministic
     /// victims; the committed prefix re-prefills on re-admission.
     Preempt { victim: usize },
-    /// Run one prefill chunk of the sequence at seqs-index `seq`.
+    /// Run one prefill chunk of the sequence at seqs-index `seq`
+    /// (degenerate single-phase plan; seed-exact padded-chunk execution).
     Prefill { seq: usize },
-    /// Fast-path decode over these seqs-indices (≤ `max_batch`).
+    /// Fast-path decode over these seqs-indices (≤ `max_batch`;
+    /// degenerate single-phase plan on the shape-tuned bucket graphs).
     Decode { lanes: Vec<usize> },
-    /// Grouped verification over these seqs-indices (≤ `verify_group`).
+    /// Grouped verification over these seqs-indices (≤ `verify_group`;
+    /// degenerate single-phase plan on the fixed-shape verifier graph).
     Verify { lanes: Vec<usize> },
+    /// Execute a composite token-budgeted step: all fast-path work in one
+    /// ragged fused forward, plus the verify group on its own fixed-shape
+    /// graph. Only legal when the engine runs with `max_step_tokens > 0`.
+    Run(BatchPlan),
     /// Nothing to do.
     Idle,
 }
@@ -94,6 +236,14 @@ impl LaneView {
     pub fn deadline_at(&self) -> Option<f64> {
         self.deadline_ms.map(|ms| self.arrive_time + ms / 1000.0)
     }
+
+    /// Prefill tokens still to feed (prompt plus committed-but-last, minus
+    /// progress). Meaningful for `Phase::Prefilling` lanes only — a
+    /// decoding lane's committed tokens grow past its prefill cursor.
+    pub fn prefill_remaining(&self) -> usize {
+        (self.prompt_len + self.committed.saturating_sub(1))
+            .saturating_sub(self.prefill_pos)
+    }
 }
 
 /// Immutable snapshot of one queued (not yet admitted) request.
@@ -118,7 +268,7 @@ impl QueuedView {
 }
 
 /// Snapshot of everything a scheduling decision may depend on.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct SchedView {
     /// engine clock (monotonic seconds, `util::now_secs`)
     pub now: f64,
@@ -129,6 +279,11 @@ pub struct SchedView {
     pub max_stall_steps: usize,
     /// largest decode batch the artifacts support
     pub max_batch: usize,
+    /// fast-path token budget per fused step (prefill chunk tokens + one
+    /// per decode lane). 0 = fusion disabled: policies must plan exclusive
+    /// seed-style steps; > 0 = policies should compose [`Action::Run`]
+    /// plans up to this many fast tokens.
+    pub max_step_tokens: usize,
     /// admission capacity. With the prefix cache disabled this is the
     /// seed's free KV-slot count (seats bind before blocks, so the seed
     /// decision rule is reproduced exactly); with it enabled it is the
@@ -240,6 +395,77 @@ pub fn preemption_victim(view: &SchedView, beneficiary_priority: u8) -> Option<u
         .map(|l| l.idx)
 }
 
+/// Pack policy-ordered work into one token-budgeted composite plan (the
+/// step composer shared by every fusion-aware policy).
+///
+/// * `decode` — decodable lanes in the policy's order (already capped at
+///   `max_batch` by [`SchedView::decodable`]); truncated to the budget.
+/// * `verify` — the verify group the policy selected (may be empty; does
+///   not consume budget — it runs on its own fixed-shape graph).
+/// * `prefill_order` — prefilling lanes in the policy's order; each lane
+///   gets the largest chunk that still fits the remaining budget, until
+///   the budget is exhausted. Chunks are ragged, so no padding is wasted.
+///
+/// Returns [`Action::Idle`] when nothing fits or nothing is runnable.
+pub fn compose_plan(
+    v: &SchedView,
+    decode: Vec<usize>,
+    verify: Vec<usize>,
+    prefill_order: &[usize],
+) -> Action {
+    let budget = v.max_step_tokens;
+    debug_assert!(budget > 0, "compose_plan with fusion disabled");
+    let mut plan = BatchPlan { decode, verify, prefill: Vec::new() };
+    plan.decode.truncate(budget);
+    let mut left = budget - plan.decode.len();
+    for &idx in prefill_order {
+        if left == 0 {
+            break;
+        }
+        let remaining = match v.lane(idx) {
+            Some(l) if l.phase == Phase::Prefilling => l.prefill_remaining(),
+            _ => 0,
+        };
+        let chunk = remaining.min(left);
+        if chunk == 0 {
+            continue;
+        }
+        plan.prefill.push((idx, chunk));
+        left -= chunk;
+    }
+    if plan.is_empty() {
+        Action::Idle
+    } else {
+        Action::Run(plan)
+    }
+}
+
+/// Shared verification trigger: fire when the ready group is full, the
+/// policy's urgency condition (stall count, deadline slack) demands it,
+/// or nothing else could run this step. Every policy — exclusive and
+/// fused — routes through this one predicate, so the trigger semantics
+/// cannot drift between call sites.
+pub fn verify_trigger(
+    v: &SchedView,
+    ready: &[usize],
+    urgent: bool,
+    idle_otherwise: bool,
+) -> bool {
+    !ready.is_empty()
+        && (ready.len() >= v.verify_group || urgent || idle_otherwise)
+}
+
+/// The seed stall rule: some ready lane has waited past `max_stall_steps`
+/// (the baseline urgency every policy keeps; deadline-aware scheduling
+/// tightens it with slack, never loosens it).
+pub fn any_stalled(v: &SchedView, ready: &[usize]) -> bool {
+    ready.iter().any(|&i| {
+        v.lane(i)
+            .map(|l| l.stall_steps >= v.max_stall_steps)
+            .unwrap_or(false)
+    })
+}
+
 /// Which policy to instantiate; selectable from `EngineConfig`, the CLI
 /// (`--policy`), a config file, and the server wire protocol.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -334,6 +560,7 @@ mod tests {
             verify_window: 16,
             max_stall_steps: 4,
             max_batch: 8,
+            max_step_tokens: 0,
             free_slots: free,
             free_blocks: free,
             cached_blocks: 0,
@@ -397,5 +624,105 @@ mod tests {
         l.preemptions = 1;
         let v = view(vec![l], vec![queued(9, 3)], 0);
         assert_eq!(preemption_victim(&v, 3), None);
+    }
+
+    pub(crate) fn prefilling(idx: usize, remaining: usize) -> LaneView {
+        let mut l = lane(idx, 0, true);
+        l.phase = Phase::Prefilling;
+        l.prompt_len = remaining;
+        l.prefill_pos = 0;
+        l.committed = 0;
+        l.can_decode = false;
+        l
+    }
+
+    #[test]
+    fn compose_packs_decode_then_prefill_into_the_budget() {
+        let mut v = view(
+            vec![lane(0, 0, false), lane(1, 0, false), prefilling(2, 100)],
+            vec![],
+            0,
+        );
+        v.max_step_tokens = 10;
+        let action = compose_plan(&v, vec![0, 1], vec![], &[2]);
+        match action {
+            Action::Run(plan) => {
+                assert_eq!(plan.decode, vec![0, 1]);
+                // 10 - 2 decode tokens: an 8-token ragged chunk
+                assert_eq!(plan.prefill, vec![(2, 8)]);
+                assert_eq!(plan.fast_tokens(), 10);
+                assert!(plan.validate(&v).is_ok());
+            }
+            other => panic!("expected Run, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn compose_splits_budget_across_prefilling_lanes() {
+        let mut v = view(vec![prefilling(0, 5), prefilling(1, 90)], vec![], 0);
+        v.max_step_tokens = 32;
+        match compose_plan(&v, vec![], vec![], &[0, 1]) {
+            Action::Run(plan) => {
+                assert_eq!(plan.prefill, vec![(0, 5), (1, 27)]);
+                assert!(plan.validate(&v).is_ok());
+            }
+            other => panic!("expected Run, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn compose_idles_when_nothing_is_runnable() {
+        let mut v = view(vec![], vec![], 0);
+        v.max_step_tokens = 16;
+        assert_eq!(compose_plan(&v, vec![], vec![], &[]), Action::Idle);
+    }
+
+    #[test]
+    fn plan_validation_rejects_structural_bugs() {
+        let mut ready = lane(1, 0, true);
+        ready.verify_ready = true;
+        ready.can_decode = false;
+        let mut v = view(
+            vec![lane(0, 0, false), ready, prefilling(2, 40)],
+            vec![],
+            0,
+        );
+        v.max_step_tokens = 16;
+
+        let ok = BatchPlan {
+            prefill: vec![(2, 15)],
+            decode: vec![0],
+            verify: vec![1],
+        };
+        assert!(ok.validate(&v).is_ok());
+
+        // budget overrun
+        let over = BatchPlan { prefill: vec![(2, 16)], decode: vec![0], ..ok.clone() };
+        assert!(over.validate(&v).is_err());
+        // lane in two phases
+        let dup = BatchPlan { decode: vec![0], verify: vec![0], prefill: vec![] };
+        assert!(dup.validate(&v).is_err());
+        // prefill of a non-prefilling lane / oversized chunk / zero chunk
+        assert!(BatchPlan { prefill: vec![(0, 1)], ..Default::default() }
+            .validate(&v)
+            .is_err());
+        assert!(BatchPlan { prefill: vec![(2, 41)], ..Default::default() }
+            .validate(&v)
+            .is_err());
+        assert!(BatchPlan { prefill: vec![(2, 0)], ..Default::default() }
+            .validate(&v)
+            .is_err());
+        // non-decodable decode lane, non-ready verify lane
+        assert!(BatchPlan { decode: vec![1], ..Default::default() }
+            .validate(&v)
+            .is_err());
+        assert!(BatchPlan { verify: vec![0], ..Default::default() }
+            .validate(&v)
+            .is_err());
+        // empty plan and fusion-off plan
+        assert!(BatchPlan::default().validate(&v).is_err());
+        let mut off = v.clone();
+        off.max_step_tokens = 0;
+        assert!(ok.validate(&off).is_err());
     }
 }

@@ -6,13 +6,50 @@
 //! `tests/scheduler.rs` pins the equivalence two ways: a pure property test
 //! (random `SchedView`s against an independent transcription of the seed
 //! decision rule) and a live replay test (the executor's `StepKind`
-//! sequence on a recorded workload).
+//! sequence on a recorded workload). The seed equivalence holds with the
+//! step composer disabled (`max_step_tokens == 0`, the default); with a
+//! token budget set, the policy composes fused [`Action::Run`] plans —
+//! table-order prefill chunks ride along with the decode batch, and the
+//! verify trigger no longer has to displace a fast-path step.
 
-use crate::engine::scheduler::{Action, SchedView, SchedulerPolicy};
+use crate::engine::scheduler::{
+    any_stalled, compose_plan, verify_trigger, Action, SchedView, SchedulerPolicy,
+};
 use crate::engine::sequence::Phase;
 
 #[derive(Debug, Default)]
 pub struct PrefillFirst;
+
+impl PrefillFirst {
+    /// Token-budgeted composite plan: decode lanes first (they keep every
+    /// live lane hot), remaining budget to prefill chunks in table order,
+    /// verify group riding along under the seed trigger conditions.
+    fn plan_fused(&self, v: &SchedView) -> Action {
+        let decode = v.decodable();
+        let prefilling: Vec<usize> = v
+            .lanes
+            .iter()
+            .filter(|l| l.phase == Phase::Prefilling)
+            .map(|l| l.idx)
+            .collect();
+        let mut verify = Vec::new();
+        if v.dvr {
+            let ready = v.verify_ready();
+            // same trigger as the exclusive path, except "nothing else to
+            // run" now means no fast-path work at all — verification no
+            // longer steals a step from prefill or decode, it overlaps
+            if verify_trigger(
+                v,
+                &ready,
+                any_stalled(v, &ready),
+                decode.is_empty() && prefilling.is_empty(),
+            ) {
+                verify = ready.into_iter().take(v.verify_group).collect();
+            }
+        }
+        compose_plan(v, decode, verify, &prefilling)
+    }
+}
 
 impl SchedulerPolicy for PrefillFirst {
     fn name(&self) -> &'static str {
@@ -25,6 +62,10 @@ impl SchedulerPolicy for PrefillFirst {
             return Action::Admit { n: v.queue.len().min(v.free_slots) };
         }
 
+        if v.max_step_tokens > 0 {
+            return self.plan_fused(v);
+        }
+
         // 1. prefill-first: one chunk of the oldest prefilling sequence
         if let Some(l) = v.lanes.iter().find(|l| l.phase == Phase::Prefilling) {
             return Action::Prefill { seq: l.idx };
@@ -34,12 +75,7 @@ impl SchedulerPolicy for PrefillFirst {
         if v.dvr {
             let ready = v.verify_ready();
             let decodable = v.decodable();
-            let stalled = ready.iter().any(|&i| {
-                v.lane(i).map(|l| l.stall_steps >= v.max_stall_steps).unwrap_or(false)
-            });
-            if !ready.is_empty()
-                && (ready.len() >= v.verify_group || stalled || decodable.is_empty())
-            {
+            if verify_trigger(v, &ready, any_stalled(v, &ready), decodable.is_empty()) {
                 return Action::Verify {
                     lanes: ready.into_iter().take(v.verify_group).collect(),
                 };
@@ -122,5 +158,33 @@ mod tests {
         let mut p = PrefillFirst;
         let v = view(vec![], vec![], 3);
         assert_eq!(p.plan(&v), Action::Idle);
+    }
+
+    #[test]
+    fn fused_mode_composes_prefill_decode_and_verify_in_one_step() {
+        use crate::engine::scheduler::tests::prefilling;
+        let mut p = PrefillFirst;
+        let dec = lane(0, 0, false);
+        let mut rdy = lane(1, 0, true);
+        rdy.verify_ready = true;
+        rdy.speculative = 15;
+        rdy.can_decode = false;
+        rdy.stall_steps = 4; // >= max_stall_steps in the helper view
+        let pre = prefilling(2, 50);
+        let mut v = view(vec![dec, rdy, pre], vec![], 0);
+        v.max_step_tokens = 24;
+        match p.plan(&v) {
+            Action::Run(plan) => {
+                assert_eq!(plan.decode, vec![0]);
+                assert_eq!(plan.verify, vec![1]);
+                assert_eq!(plan.prefill, vec![(2, 23)], "budget minus one decode token");
+                assert!(plan.validate(&v).is_ok());
+            }
+            other => panic!("expected a fused Run, got {other:?}"),
+        }
+
+        // budget 0 keeps the seed-exclusive behavior (prefill wins)
+        v.max_step_tokens = 0;
+        assert_eq!(p.plan(&v), Action::Prefill { seq: 2 });
     }
 }

@@ -157,8 +157,16 @@ impl Sequence {
     /// `n <= prompt_len + committed.len()`: the token *input* at position
     /// `P + j` is committed token `j`.
     pub fn content_tokens(&self, n: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(n);
+        self.content_tokens_into(n, &mut out);
+        out
+    }
+
+    /// Append the content tokens `0..n` to `out` (the allocation-free twin
+    /// of [`Sequence::content_tokens`] for the hot admission-probe path).
+    pub fn content_tokens_into(&self, n: usize, out: &mut Vec<u32>) {
         debug_assert!(n <= self.prompt_len() + self.committed.len());
-        (0..n).map(|i| self.prefill_token(i)).collect()
+        out.extend((0..n).map(|i| self.prefill_token(i)));
     }
 
     /// Evict this sequence from its KV pages back to the queue (the caller

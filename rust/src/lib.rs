@@ -8,9 +8,11 @@
 //! Layers:
 //! * **L3** (this crate): request router, pluggable scheduling policies
 //!   (prefill-first / deadline-aware / fair-share, with priority classes
-//!   and KV preemption) over a continuous-batching executor, a paged KV
-//!   cache with determinism-aware prefix sharing, DVR + grouped
-//!   verification, sampler, metrics.
+//!   and KV preemption) over a continuous-batching executor with a
+//!   token-budgeted **step composer** (fused mixed prefill+decode steps
+//!   with overlapped fixed-shape verification), a paged KV cache with
+//!   determinism-aware prefix sharing, DVR + grouped verification,
+//!   sampler, metrics.
 //! * **L2** (`python/compile/model.py`, build-time): the transformer
 //!   forward graph, AOT-lowered to HLO text per (bucket, window, strategy).
 //! * **L1** (`python/compile/kernels/`, build-time): pallas split-K matmul
@@ -46,6 +48,22 @@
 //! whose write range would touch one — and unreferenced cached pages are
 //! reclaimed LRU-first under admission pressure. See
 //! [`engine::kv`] for the mechanics.
+//!
+//! # Step composer & token budget
+//!
+//! With `EngineConfig::max_step_tokens = N` (> 0), policies return
+//! composite [`engine::BatchPlan`]s ([`engine::Action::Run`]) and the
+//! engine packs all fast-path work — multiple ragged prefill chunks plus
+//! the decode batch, up to N tokens — into **one fused lane-major
+//! forward** per step, while grouped verification still runs on its own
+//! unchanged fixed-shape graph in the same step. The fused graph carries
+//! the universal invariant schedule with lane-independent rows, so
+//! committed streams of deterministic requests are bitwise identical
+//! fused-on vs fused-off (`tests/fused.rs` pins this per policy, prefix
+//! cache on and off); the payoff is strictly fewer forwards per committed
+//! token on mixed workloads. `N = 0` (default) reproduces the seed's
+//! one-exclusive-forward-per-step schedule exactly. See the README's
+//! "Step composer & token budget" section for the packing rules.
 //!
 //! Quick start (after `make artifacts`):
 //! ```no_run

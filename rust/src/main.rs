@@ -33,6 +33,10 @@ COMMON:
   --prefix-cache B   true|false: paged-KV prefix sharing (default false;
                      cache hits skip prefill compute, never verification)
   --block-size N     KV page size; 0 = the artifact set's baked-in value
+  --max-step-tokens N  step-composer token budget (default 0 = off): fuse
+                     up to N fast-path tokens — ragged prefill chunks +
+                     the decode batch — into one forward per step, with
+                     verification overlapped on its fixed-shape graph
   --seed S           trace seed (default 42)
 ";
 

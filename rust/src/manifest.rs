@@ -104,6 +104,9 @@ pub struct WeightEntry {
 pub enum ArtifactKind {
     Decode,
     Window,
+    /// Ragged lane-major fused fast-path forward (the step composer);
+    /// `g` encodes its token capacity (`max_fwd_tokens`).
+    Mixed,
     Extract,
     /// KV page copy (the COW primitive for paged prefix sharing)
     Copy,
@@ -189,6 +192,7 @@ impl Manifest {
             let kind = match a.s("kind")? {
                 "decode" => ArtifactKind::Decode,
                 "window" => ArtifactKind::Window,
+                "mixed" => ArtifactKind::Mixed,
                 "extract" => ArtifactKind::Extract,
                 "copy" => ArtifactKind::Copy,
                 "micro_gemm" => ArtifactKind::MicroGemm,

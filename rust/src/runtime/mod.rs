@@ -212,6 +212,93 @@ impl Runtime {
         Ok(())
     }
 
+    /// Run the ragged lane-major fused forward (the step composer's fast
+    /// path): `counts[l]` tokens per lane starting at `start_pos[l]`, all
+    /// lanes in one graph invocation over per-lane block tables
+    /// (`tables` is flat `[lanes * blocks_per_lane]`). Logits rows land
+    /// lane-major at prefix-sum row offsets; one `extract_logits` of
+    /// `sum(counts)` rows reads them all. The artifact's `g` encodes its
+    /// compiled token capacity. The state buffer is donated and replaced.
+    pub fn forward_mixed(
+        &mut self,
+        tokens: &[i32],
+        counts: &[i32],
+        tables: &[i32],
+        start_pos: &[i32],
+    ) -> Result<()> {
+        let name = Self::mixed_artifact();
+        let entry = self.manifest.require(name)?;
+        let bpl = self.manifest.model.blocks_per_lane();
+        let lanes = counts.len();
+        let total: usize = counts.iter().map(|&c| c.max(0) as usize).sum();
+        if lanes == 0
+            || start_pos.len() != lanes
+            || bpl == 0
+            || tables.len() != lanes * bpl
+            || total != tokens.len()
+            || total > entry.g
+        {
+            return Err(Error::Engine(format!(
+                "forward {name}: shape mismatch ({lanes} lanes, {} tokens, {} \
+                 table entries, {} positions) vs (capacity {}, blocks/lane {bpl})",
+                tokens.len(),
+                tables.len(),
+                start_pos.len(),
+                entry.g
+            )));
+        }
+        let exe = self.get_exe(name)?;
+
+        let t0 = Instant::now();
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(tokens, &[tokens.len()], None)?;
+        let cnt_buf = self
+            .client
+            .buffer_from_host_buffer(counts, &[counts.len()], None)?;
+        let tab_buf = self
+            .client
+            .buffer_from_host_buffer(tables, &[tables.len()], None)?;
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer(start_pos, &[start_pos.len()], None)?;
+        self.counters.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
+
+        let state = self
+            .state
+            .take()
+            .ok_or_else(|| Error::Engine("state buffer missing".into()))?;
+        let mut args: Vec<&PjRtBuffer> =
+            Vec::with_capacity(5 + self.weights.len());
+        args.push(&state);
+        args.push(&tok_buf);
+        args.push(&cnt_buf);
+        args.push(&tab_buf);
+        args.push(&pos_buf);
+        for w in &self.weights {
+            args.push(w);
+        }
+
+        let t0 = Instant::now();
+        let mut out = exe.execute_b(&args)?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut c = self.counters.borrow_mut();
+            c.forward_calls += 1;
+            c.forward_secs += dt;
+        }
+        let replica = out
+            .pop()
+            .ok_or_else(|| Error::Engine("no replica output".into()))?;
+        let new_state = replica
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Engine("no output buffer".into()))?;
+        drop(state);
+        self.state = Some(new_state);
+        Ok(())
+    }
+
     /// Copy whole KV pages device-side (`src[i] -> dst[i]`, both pools,
     /// every layer) via the `copy_pages` artifact — the COW primitive for
     /// prefix sharing. The state buffer is donated and replaced, exactly
@@ -349,5 +436,10 @@ impl Runtime {
 
     pub fn window_artifact(g: usize, t: usize) -> String {
         format!("window_inv_g{g}_t{t}")
+    }
+
+    /// Name of the ragged fused fast-path graph (the step composer).
+    pub fn mixed_artifact() -> &'static str {
+        "mixed_inv"
     }
 }

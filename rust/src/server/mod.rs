@@ -30,7 +30,11 @@
 //! command messages:
 //!   -> {"cmd": "stats"}
 //!   <- {"steps": ..., "preemptions": ..., "reprefilled_tokens": ...,
-//!       "queue_depth_hwm": ..., "class_e2e": {"0": {...}, ...},
+//!       "queue_depth_hwm": ...,
+//!       "forward_passes": ..., "tokens_per_forward": ...,
+//!       "forwards_per_committed_token": ..., "fused_steps": ...,
+//!       "fused_tokens": ..., "fused_occupancy": ...,
+//!       "class_e2e": {"0": {...}, ...},
 //!       "kv": {"block_size": ..., "user_pages": ..., "free_pages": ...,
 //!              "cached_pages": ..., "held_pages": ..., "cache_hits": ...,
 //!              "cache_hit_tokens": ..., "cache_hit_rate": ...,
@@ -229,6 +233,18 @@ pub fn render_stats(m: &EngineMetrics, kv: &KvStats) -> String {
         ("preemptions", Json::num(m.preemptions as f64)),
         ("reprefilled_tokens", Json::num(m.reprefilled_tokens as f64)),
         ("queue_depth_hwm", Json::num(m.queue_depth_hwm as f64)),
+        // step-composer counters: how many model forwards the engine
+        // issued per committed token, and how full fused steps kept the
+        // token budget
+        ("forward_passes", Json::num(m.forward_passes as f64)),
+        ("tokens_per_forward", Json::num(m.tokens_per_forward())),
+        (
+            "forwards_per_committed_token",
+            Json::num(m.forwards_per_committed_token()),
+        ),
+        ("fused_steps", Json::num(m.fused_steps as f64)),
+        ("fused_tokens", Json::num(m.fused_fwd_tokens as f64)),
+        ("fused_occupancy", Json::num(m.fused_occupancy())),
         (
             "kv",
             Json::obj(vec![
@@ -632,6 +648,11 @@ mod tests {
         m.cache_hits = 2;
         m.cache_hit_tokens = 48;
         m.prefill_tokens = 48; // hit rate 0.5
+        m.forward_passes = 40;
+        m.committed_tokens = 120;
+        m.fused_steps = 5;
+        m.fused_fwd_tokens = 60;
+        m.fused_capacity_tokens = 80;
         let kv = KvStats {
             block_size: 16,
             user_pages: 49,
@@ -644,6 +665,14 @@ mod tests {
         assert_eq!(v.u("preemptions").unwrap(), 3);
         assert_eq!(v.u("reprefilled_tokens").unwrap(), 40);
         assert_eq!(v.u("queue_depth_hwm").unwrap(), 9);
+        assert_eq!(v.u("forward_passes").unwrap(), 40);
+        assert!((v.f("tokens_per_forward").unwrap() - 3.0).abs() < 1e-9);
+        assert!(
+            (v.f("forwards_per_committed_token").unwrap() - 40.0 / 120.0).abs() < 1e-9
+        );
+        assert_eq!(v.u("fused_steps").unwrap(), 5);
+        assert_eq!(v.u("fused_tokens").unwrap(), 60);
+        assert!((v.f("fused_occupancy").unwrap() - 0.75).abs() < 1e-9);
         let k = v.req("kv").unwrap();
         assert_eq!(k.u("block_size").unwrap(), 16);
         assert_eq!(k.u("cached_pages").unwrap(), 9);

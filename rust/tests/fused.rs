@@ -1,0 +1,461 @@
+//! Step-composer tests: fused token-budgeted steps must change *when*
+//! work runs, never *what* deterministic requests commit.
+//!
+//! * committed streams of deterministic requests are bitwise identical
+//!   with fusion on vs off, across all three policies, prefix cache on
+//!   and off — including under forced-mismatch rollback inside fused
+//!   steps;
+//! * batch-invariant mode is bitwise fusion-invariant for *every* stream
+//!   (the fused graph carries the same universal schedule);
+//! * fusion strictly reduces forwards per committed token on a
+//!   prefill-heavy mixed workload (the headline perf criterion);
+//! * `BatchPlan` validation rejects overlapping lanes, budget overruns,
+//!   and prefill of non-prefilling sequences (pure property test plus
+//!   live-executor rejection via a malicious policy).
+
+use llm42::engine::scheduler::SchedulerPolicy;
+use llm42::engine::sequence::Phase;
+use llm42::engine::{
+    Action, BatchPlan, Engine, EngineConfig, FaultPlan, LaneView, Mode,
+    PolicyKind, Request, SchedView,
+};
+use llm42::prelude::*;
+use llm42::util::rng::SplitMix64;
+
+fn artifacts_dir() -> String {
+    let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&dir).expect("artifact generation failed");
+    dir
+}
+
+fn cfg(mode: Mode, budget: usize) -> EngineConfig {
+    EngineConfig {
+        mode,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 4,
+        max_step_tokens: budget,
+        ..Default::default()
+    }
+}
+
+/// Prefix-heavy mixed workload: deterministic and non-deterministic
+/// requests sharing a long common prompt prefix (cache-relevant), long
+/// enough prompts that fused steps genuinely mix prefill with decode.
+fn workload() -> Vec<Request> {
+    let shared: Vec<u32> = (100..148).collect(); // 48 tokens = 3 blocks
+    (0..5u64)
+        .map(|i| {
+            let mut prompt = shared.clone();
+            prompt.extend((200 + 3 * i as u32)..(200 + 3 * i as u32 + 4));
+            Request {
+                prompt,
+                max_new_tokens: 12 + i as usize,
+                deterministic: i < 3,
+                temperature: 1.0,
+                seed: 7 + i,
+                priority: (i % 3) as u8,
+                deadline_ms: if i == 1 { Some(400.0) } else { None },
+            }
+        })
+        .collect()
+}
+
+/// Run the workload; returns (det streams sorted by id, fused step count,
+/// forward passes, committed tokens).
+fn run_workload(
+    rt: &mut Runtime,
+    policy: PolicyKind,
+    cache: bool,
+    budget: usize,
+    fault: FaultPlan,
+) -> (Vec<(u64, Vec<u32>)>, u64, u64, u64) {
+    let mut c = cfg(Mode::Llm42, budget);
+    c.policy = policy;
+    c.prefix_cache = cache;
+    c.fault = fault;
+    let mut eng = Engine::new(rt, c).unwrap();
+    let all = workload();
+    // the first request lands alone and prefills the shared prefix
+    // (publishing its blocks when the cache is on); the rest arrive a
+    // fixed three steps later — the same arrival schedule in every run
+    eng.submit(all[0].clone()).unwrap();
+    for _ in 0..3 {
+        eng.step().unwrap();
+    }
+    for r in &all[1..] {
+        eng.submit(r.clone()).unwrap();
+    }
+    eng.run_to_completion().unwrap();
+    let outs = eng.take_finished();
+    assert_eq!(outs.len(), all.len(), "every request finishes");
+    let mut det: Vec<(u64, Vec<u32>)> = outs
+        .iter()
+        .filter(|o| o.deterministic)
+        .map(|o| (o.id, o.tokens.clone()))
+        .collect();
+    det.sort();
+    (
+        det,
+        eng.metrics.fused_steps,
+        eng.metrics.forward_passes,
+        eng.metrics.committed_tokens,
+    )
+}
+
+#[test]
+fn fused_steps_preserve_deterministic_streams_across_policies_and_cache() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    for policy in [
+        PolicyKind::PrefillFirst,
+        PolicyKind::DeadlineAware,
+        PolicyKind::FairShare,
+    ] {
+        for cache in [false, true] {
+            let (serial, fused_serial, _, _) =
+                run_workload(&mut rt, policy, cache, 0, FaultPlan::None);
+            let (fused, fused_steps, _, _) =
+                run_workload(&mut rt, policy, cache, 48, FaultPlan::None);
+            assert_eq!(fused_serial, 0, "{policy:?}: budget 0 must not fuse");
+            assert!(
+                fused_steps > 0,
+                "{policy:?} cache={cache}: the workload must exercise fused steps"
+            );
+            assert_eq!(
+                serial, fused,
+                "{policy:?} cache={cache}: deterministic streams must be \
+                 bitwise identical fused-on vs fused-off"
+            );
+        }
+    }
+}
+
+#[test]
+fn forced_mismatch_rollback_under_fused_steps_matches_serial() {
+    // maximum rollback pressure: every verify lane reports a mismatch at
+    // window position 0 — committed streams are the verifier's replay
+    // sequence in both runs, so fusion must not change a single bit, even
+    // when the rolled-back window overlaps shared/published prefix pages
+    // (the cache-on arm exercises the COW path inside fused steps)
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let fault = FaultPlan::EveryNthLane { every: 1, at_index: 0 };
+    for policy in [
+        PolicyKind::PrefillFirst,
+        PolicyKind::DeadlineAware,
+        PolicyKind::FairShare,
+    ] {
+        for cache in [false, true] {
+            let (serial, _, _, _) = run_workload(&mut rt, policy, cache, 0, fault);
+            let (fused, fused_steps, _, _) =
+                run_workload(&mut rt, policy, cache, 48, fault);
+            assert!(fused_steps > 0);
+            assert_eq!(
+                serial, fused,
+                "{policy:?} cache={cache}: rollback under a fused step must \
+                 replay identically"
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_invariant_mode_is_bitwise_fusion_invariant_for_every_stream() {
+    // In batch-invariant mode every committed token comes from the
+    // universal schedule — and the fused graph carries exactly that
+    // schedule with lane-independent rows, so fusion must be bitwise
+    // invisible for *all* traffic, not just deterministic requests.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut run = |rt: &mut Runtime, budget: usize| -> Vec<(u64, Vec<u32>)> {
+        let mut eng = Engine::new(rt, cfg(Mode::BatchInvariant, budget)).unwrap();
+        for r in workload() {
+            eng.submit(r).unwrap();
+        }
+        eng.run_to_completion().unwrap();
+        let mut outs: Vec<(u64, Vec<u32>)> = eng
+            .take_finished()
+            .into_iter()
+            .map(|o| (o.id, o.tokens))
+            .collect();
+        outs.sort();
+        outs
+    };
+    let serial = run(&mut rt, 0);
+    let fused = run(&mut rt, 64);
+    assert_eq!(serial, fused);
+}
+
+#[test]
+fn fusion_cuts_forwards_per_committed_token_on_prefill_heavy_traffic() {
+    // The headline perf criterion: >= 25% fewer forwards per committed
+    // token with fusion on vs off at equal max_batch. Long prompts +
+    // short outputs is the shape where exclusive prefill steps starve the
+    // decode lanes. eos is out of vocab so both runs commit exactly
+    // n * max_new tokens and the ratio comparison is exact.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let reqs: Vec<Request> = (0..10u64)
+        .map(|i| Request {
+            prompt: (0..100).map(|p| 3 + ((p + i as u32 * 17) % 300)).collect(),
+            max_new_tokens: 8,
+            deterministic: false,
+            temperature: 0.0,
+            seed: 0,
+            ..Default::default()
+        })
+        .collect();
+    let mut run = |rt: &mut Runtime, budget: usize| -> (u64, u64) {
+        let mut c = cfg(Mode::Llm42, budget);
+        c.eos_token = 9999;
+        let mut eng = Engine::new(rt, c).unwrap();
+        for r in &reqs {
+            eng.submit(r.clone()).unwrap();
+        }
+        eng.run_to_completion().unwrap();
+        assert_eq!(eng.take_finished().len(), reqs.len());
+        (eng.metrics.forward_passes, eng.metrics.committed_tokens)
+    };
+    let (serial_fwd, serial_tok) = run(&mut rt, 0);
+    let (fused_fwd, fused_tok) = run(&mut rt, 128);
+    assert_eq!(serial_tok, fused_tok, "identical committed volume");
+    assert_eq!(serial_tok, 10 * 8);
+    let serial_ratio = serial_fwd as f64 / serial_tok as f64;
+    let fused_ratio = fused_fwd as f64 / fused_tok as f64;
+    assert!(
+        fused_ratio <= 0.75 * serial_ratio,
+        "fusion must cut forwards/token by >= 25%: serial {serial_ratio:.3} \
+         ({serial_fwd} forwards), fused {fused_ratio:.3} ({fused_fwd} forwards)"
+    );
+}
+
+// ---------------------------------------------------------------- plans
+
+fn lane(idx: usize, phase: Phase, can_decode: bool, verify_ready: bool) -> LaneView {
+    LaneView {
+        idx,
+        id: idx as u64 + 1,
+        phase,
+        deterministic: true,
+        priority: 0,
+        deadline_ms: None,
+        arrive_time: idx as f64,
+        prompt_len: 24,
+        prefill_pos: if phase == Phase::Prefilling { 4 } else { 24 },
+        committed: if phase == Phase::Prefilling { 0 } else { 1 },
+        speculative: 0,
+        max_new_tokens: 32,
+        stall_steps: 0,
+        preemptions: 0,
+        kv_blocks: 1,
+        can_decode,
+        verify_ready,
+        decoding_done: false,
+    }
+}
+
+#[test]
+fn batch_plan_validation_property() {
+    // seeded sweep: a plan built from eligible lanes within the budget
+    // always validates; targeted corruptions — overlapping lanes, budget
+    // overruns, prefill of non-prefilling sequences, oversized or zero
+    // chunks — always fail
+    let mut rng = SplitMix64::new(4242);
+    for case in 0..200 {
+        let n_pre = 1 + rng.below(3) as usize;
+        let n_dec = rng.below(4) as usize;
+        let n_rdy = rng.below(3) as usize;
+        let mut lanes = Vec::new();
+        let mut idx = 0usize;
+        for _ in 0..n_pre {
+            lanes.push(lane(idx, Phase::Prefilling, false, false));
+            idx += 1;
+        }
+        for _ in 0..n_dec {
+            lanes.push(lane(idx, Phase::Decoding, true, false));
+            idx += 1;
+        }
+        for _ in 0..n_rdy {
+            let mut l = lane(idx, Phase::Decoding, false, true);
+            l.speculative = 15;
+            lanes.push(l);
+            idx += 1;
+        }
+        let budget = 4 + rng.below(40) as usize;
+        let v = SchedView {
+            now: 100.0,
+            dvr: true,
+            verify_group: 2,
+            verify_window: 16,
+            max_stall_steps: 4,
+            max_batch: 8,
+            max_step_tokens: budget,
+            free_slots: 0,
+            free_blocks: 8,
+            cached_blocks: 0,
+            prefix_cache: false,
+            lanes,
+            queue: vec![],
+        };
+
+        // a well-formed plan: decode lanes first, then prefill chunks
+        // packed into the remaining budget, verify riding along
+        let mut plan = BatchPlan::default();
+        for l in v.lanes.iter().filter(|l| l.can_decode) {
+            if plan.fast_tokens() < budget {
+                plan.decode.push(l.idx);
+            }
+        }
+        let mut left = budget - plan.fast_tokens();
+        for l in v.lanes.iter().filter(|l| l.phase == Phase::Prefilling) {
+            if left == 0 {
+                break;
+            }
+            let chunk = l.prefill_remaining().min(left);
+            assert!(chunk > 0, "prefilling lanes have work");
+            plan.prefill.push((l.idx, chunk));
+            left -= chunk;
+        }
+        plan.verify = v
+            .lanes
+            .iter()
+            .filter(|l| l.verify_ready)
+            .map(|l| l.idx)
+            .take(v.verify_group)
+            .collect();
+        assert!(plan.validate(&v).is_ok(), "case {case}: {plan:?}");
+
+        // corruption 1: one lane in two phases
+        if let Some(&d) = plan.decode.first() {
+            let mut bad = plan.clone();
+            bad.verify = vec![d];
+            assert!(bad.validate(&v).is_err(), "case {case}: overlap accepted");
+        }
+        // corruption 2: budget overrun via an oversized-but-real chunk
+        {
+            let mut bad = plan.clone();
+            let pre_idx = v
+                .lanes
+                .iter()
+                .find(|l| l.phase == Phase::Prefilling)
+                .unwrap()
+                .idx;
+            bad.prefill = vec![(pre_idx, budget + 1)];
+            bad.decode.clear();
+            // either the chunk exceeds the budget or the lane's remaining
+            // tokens — both must be rejected
+            assert!(bad.validate(&v).is_err(), "case {case}: overrun accepted");
+        }
+        // corruption 3: prefill of a non-prefilling lane
+        if let Some(l) = v.lanes.iter().find(|l| l.phase == Phase::Decoding) {
+            let mut bad = plan.clone();
+            bad.prefill = vec![(l.idx, 1)];
+            bad.decode.retain(|&i| i != l.idx);
+            bad.verify.retain(|&i| i != l.idx);
+            assert!(
+                bad.validate(&v).is_err(),
+                "case {case}: non-prefilling prefill accepted"
+            );
+        }
+        // corruption 4: zero-length chunk
+        {
+            let mut bad = plan.clone();
+            let pre_idx = bad.prefill.first().map(|&(i, _)| i).unwrap_or_else(|| {
+                v.lanes
+                    .iter()
+                    .find(|l| l.phase == Phase::Prefilling)
+                    .unwrap()
+                    .idx
+            });
+            bad.prefill = vec![(pre_idx, 0)];
+            assert!(bad.validate(&v).is_err(), "case {case}: zero chunk accepted");
+        }
+    }
+}
+
+/// A policy that admits, then emits one malformed plan (selected by
+/// `mode`) — the executor must reject it loudly instead of corrupting
+/// state.
+struct EvilPolicy {
+    mode: u8,
+}
+
+impl SchedulerPolicy for EvilPolicy {
+    fn name(&self) -> &'static str {
+        "evil"
+    }
+
+    fn plan(&mut self, v: &SchedView) -> Action {
+        if !v.queue.is_empty() && v.free_slots > 0 {
+            return Action::Admit { n: 1 };
+        }
+        let idx = v.lanes[0].idx;
+        match self.mode {
+            // oversized chunk (beyond both the budget and the remaining)
+            0 => Action::Run(BatchPlan {
+                prefill: vec![(idx, 10_000)],
+                ..Default::default()
+            }),
+            // duplicate lane within one phase
+            1 => Action::Run(BatchPlan {
+                prefill: vec![(idx, 1), (idx, 1)],
+                ..Default::default()
+            }),
+            // verify of a lane that is not verify-ready
+            2 => Action::Run(BatchPlan {
+                verify: vec![idx],
+                ..Default::default()
+            }),
+            // empty plan
+            _ => Action::Run(BatchPlan::default()),
+        }
+    }
+}
+
+#[test]
+fn executor_rejects_malformed_plans() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    for mode in 0..4u8 {
+        let mut eng = Engine::new(&mut rt, cfg(Mode::Llm42, 32)).unwrap();
+        eng.set_policy_boxed(Box::new(EvilPolicy { mode }));
+        eng.submit(Request::greedy((10..42).collect(), 4, true)).unwrap();
+        let mut rejected = false;
+        for _ in 0..4 {
+            if eng.step().is_err() {
+                rejected = true;
+                break;
+            }
+        }
+        assert!(rejected, "mode {mode}: malformed plan must be rejected");
+    }
+}
+
+#[test]
+fn run_action_rejected_when_fusion_disabled() {
+    // Action::Run is only legal under a token budget; with the composer
+    // off the executor refuses it even if the plan itself is well-formed
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    struct RunAnyway;
+    impl SchedulerPolicy for RunAnyway {
+        fn name(&self) -> &'static str {
+            "run-anyway"
+        }
+        fn plan(&mut self, v: &SchedView) -> Action {
+            if !v.queue.is_empty() && v.free_slots > 0 {
+                return Action::Admit { n: 1 };
+            }
+            Action::Run(BatchPlan {
+                prefill: vec![(v.lanes[0].idx, 1)],
+                ..Default::default()
+            })
+        }
+    }
+    let mut eng = Engine::new(&mut rt, cfg(Mode::Llm42, 0)).unwrap();
+    eng.set_policy_boxed(Box::new(RunAnyway));
+    eng.submit(Request::greedy((10..42).collect(), 4, true)).unwrap();
+    let mut rejected = false;
+    for _ in 0..4 {
+        if eng.step().is_err() {
+            rejected = true;
+            break;
+        }
+    }
+    assert!(rejected);
+}

@@ -167,6 +167,7 @@ fn prefill_first_plan_matches_seed_rule_on_random_views() {
             verify_window: 16,
             max_stall_steps: 4,
             max_batch: 8,
+            max_step_tokens: 0,
             free_slots: rng.below(3) as usize,
             free_blocks: 8,
             cached_blocks: 0,

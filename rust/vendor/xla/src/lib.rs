@@ -172,6 +172,13 @@ impl Default for Schedule {
 enum Op {
     /// Transformer forward over g lanes x t tokens (decode/verify/prefill).
     Forward { g: usize, t: usize },
+    /// Ragged lane-major transformer forward (the step composer's fused
+    /// fast path): per-lane token counts and start positions over
+    /// block-table addressing. Executed lane-by-lane through the exact
+    /// `Forward` code path with g=1, so every lane is bitwise identical to
+    /// the equivalent exclusive single-lane pass — ragged fusion relocates
+    /// work across steps, never reorders arithmetic.
+    Mixed,
     /// Slice the first `rows` logits rows off the state.
     Extract { rows: usize },
     /// Copy whole KV pages (src[i] -> dst[i], all layers, K and V pools):
@@ -242,6 +249,7 @@ fn parse_descriptor(text: &str) -> Result<Descriptor> {
         .clone();
     let op = match op_name.as_str() {
         "forward" => Op::Forward { g: get_usize("g")?, t: get_usize("t")? },
+        "mixed" => Op::Mixed,
         "extract" => Op::Extract { rows: get_usize("rows")? },
         "copy_pages" => Op::CopyPages,
         "micro_gemm" => Op::MicroGemm { nsplits: get_usize("nsplits")? },
@@ -262,7 +270,7 @@ fn parse_descriptor(text: &str) -> Result<Descriptor> {
 
     let dims = if matches!(
         op,
-        Op::Forward { .. } | Op::Extract { .. } | Op::CopyPages
+        Op::Forward { .. } | Op::Mixed | Op::Extract { .. } | Op::CopyPages
     ) {
         Dims {
             vocab: get_usize("vocab")?,
@@ -436,6 +444,7 @@ impl PjRtLoadedExecutable {
     pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
         let out = match &self.desc.op {
             Op::Forward { g, t } => run_forward(&self.desc, *g, *t, args)?,
+            Op::Mixed => run_mixed(&self.desc, args)?,
             Op::Extract { rows } => run_extract(&self.desc, *rows, args)?,
             Op::CopyPages => run_copy_pages(&self.desc, args)?,
             Op::MicroGemm { nsplits } => run_micro_gemm(&self.desc, *nsplits, args)?,
@@ -917,6 +926,101 @@ fn run_forward(desc: &Descriptor, g: usize, t: usize, args: &[&PjRtBuffer]) -> R
     Ok(PjRtBuffer { data: Rc::new(Data::F32(state)), dims: vec![len] })
 }
 
+/// Ragged lane-major fused forward. Args: state, tokens `[sum(counts)]`,
+/// counts `[L]`, block tables `[L * blocks_per_lane]`, start positions
+/// `[L]`, then the weight table.
+///
+/// Each lane executes through [`run_forward`] with `g = 1, t = counts[l]`,
+/// threading the state buffer lane to lane, so every lane's KV writes and
+/// logits are bitwise identical to the equivalent exclusive single-lane
+/// invariant pass — the property the engine's fused-vs-serial determinism
+/// tests pin. Logits rows are republished lane-major (prefix-sum row
+/// offsets) into the state's logits region so one extract reads them all.
+fn run_mixed(desc: &Descriptor, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+    let d = &desc.dims;
+    if args.len() != 5 + N_WEIGHTS {
+        return err(format!(
+            "mixed forward expects {} args (state, tokens, counts, tables, \
+             positions, {} weights), got {}",
+            5 + N_WEIGHTS,
+            N_WEIGHTS,
+            args.len()
+        ));
+    }
+    let bpl = d.blocks_per_lane();
+    if bpl == 0 {
+        return err("mixed forward requires a paged artifact set (block_size > 0)");
+    }
+    let tokens = args[1].i32s()?;
+    let counts = args[2].i32s()?;
+    let tables = args[3].i32s()?;
+    let positions = args[4].i32s()?;
+    let lanes = counts.len();
+    if lanes == 0 || positions.len() != lanes || tables.len() != lanes * bpl {
+        return err(format!(
+            "mixed forward shape mismatch: {lanes} counts, {} positions, {} \
+             table entries (want {} per lane)",
+            positions.len(),
+            tables.len(),
+            bpl
+        ));
+    }
+    let mut total = 0usize;
+    for &c in counts {
+        if c < 1 {
+            return err(format!("mixed forward lane count {c} < 1"));
+        }
+        total += c as usize;
+    }
+    if total != tokens.len() {
+        return err(format!(
+            "mixed forward counts cover {total} tokens, got {}",
+            tokens.len()
+        ));
+    }
+    if total > d.max_fwd_tokens {
+        return err(format!(
+            "mixed forward writes {total} logits rows but the state region \
+             holds {}",
+            d.max_fwd_tokens
+        ));
+    }
+
+    let client = PjRtClient;
+    let vocab = d.vocab;
+    let off = d.logits_offset();
+    let mut state_buf = args[0].clone();
+    let mut logits_acc: Vec<f32> = Vec::with_capacity(total * vocab);
+    let mut toff = 0usize;
+    for lane in 0..lanes {
+        let c = counts[lane] as usize;
+        let tok_buf =
+            client.buffer_from_host_buffer(&tokens[toff..toff + c], &[c], None)?;
+        let tab_buf = client.buffer_from_host_buffer(
+            &tables[lane * bpl..(lane + 1) * bpl],
+            &[bpl],
+            None,
+        )?;
+        let pos_buf =
+            client.buffer_from_host_buffer(&positions[lane..lane + 1], &[1], None)?;
+        let mut lane_args: Vec<&PjRtBuffer> = Vec::with_capacity(4 + N_WEIGHTS);
+        lane_args.push(&state_buf);
+        lane_args.push(&tok_buf);
+        lane_args.push(&tab_buf);
+        lane_args.push(&pos_buf);
+        lane_args.extend_from_slice(&args[5..]);
+        let out = run_forward(desc, 1, c, &lane_args)?;
+        logits_acc.extend_from_slice(&out.f32s()?[off..off + c * vocab]);
+        state_buf = out;
+        toff += c;
+    }
+
+    let mut state = state_buf.f32s()?.to_vec();
+    state[off..off + total * vocab].copy_from_slice(&logits_acc);
+    let len = state.len();
+    Ok(PjRtBuffer { data: Rc::new(Data::F32(state)), dims: vec![len] })
+}
+
 fn run_extract(desc: &Descriptor, rows: usize, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
     if args.len() != 1 {
         return err(format!("extract expects 1 arg (state), got {}", args.len()));
@@ -1094,6 +1198,24 @@ mod tests {
         assert_eq!(d.dims.num_pages(), 5 * 128 / 16);
         assert_eq!(d.dims.blocks_per_lane(), 8);
         assert!(parse_descriptor("not an artifact").is_err());
+    }
+
+    #[test]
+    fn mixed_descriptor_parses_with_invariant_schedule() {
+        let text = "llm42-sim v1\nop mixed\nstrategy inv\nseq_chunks 8\n\
+                    vocab 256\nd_model 64\nn_layers 2\nn_heads 4\nn_kv_heads 2\nhead_dim 16\n\
+                    ffn_hidden 128\nmax_seq 128\nslots 5\nmax_fwd_tokens 256\nblock_size 16\n\
+                    logit_scale 6.0\nrope_theta 10000.0\nrms_eps 1e-5\n";
+        let d = parse_descriptor(text).unwrap();
+        assert!(matches!(d.op, Op::Mixed));
+        // the ragged fused graph must carry the universal schedule: no
+        // split-K, sequential K chunks — same as the window_inv graphs
+        assert_eq!(d.sched.kind, "inv");
+        assert_eq!(d.sched.ffn_splits, 1);
+        assert_eq!(d.sched.attn_ksplits, 1);
+        assert_eq!(d.sched.norm_splits, 1);
+        assert_eq!(d.sched.seq_chunks, 8);
+        assert_eq!(d.dims.blocks_per_lane(), 8);
     }
 
     #[test]
