@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: artifacts artifacts-test build test fmt-check lint bench-check bench-json
+.PHONY: artifacts artifacts-test build test test-server fmt-check lint bench-check bench-json
 
 artifacts:
 	cd rust && $(CARGO) run --release -- gen-artifacts --out artifacts --preset tiny
@@ -17,6 +17,11 @@ build:
 
 test:
 	cd rust && $(CARGO) test -q
+
+# Serving-surface integration: stream + cancel + timeout over a real
+# socket, disconnect detection, poisoned-engine lifecycle, abort matrix.
+test-server:
+	cd rust && $(CARGO) test --test server --test abort --test streaming
 
 fmt-check:
 	cd rust && $(CARGO) fmt --check

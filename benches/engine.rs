@@ -141,7 +141,101 @@ fn main() {
     if let Some(j) = fusion_comparison(&mut rt) {
         sections.push(("fusion", j));
     }
+    if let Some(j) = streaming_ttft(&mut rt) {
+        sections.push(("streaming", j));
+    }
     write_bench_json(sections);
+}
+
+/// Streamed time-to-first-token: the latency until a request's first
+/// *committed* token is available as a stream delta — what a streaming
+/// client actually perceives as TTFT. Under LLM-42 only committed tokens
+/// may be surfaced (speculative ones can roll back), so this is the honest
+/// streaming latency; for DVR-deterministic traffic gen token 0 commits at
+/// prefill, so streamed TTFT tracks the engine's internal TTFT rather than
+/// trailing it by a verification window.
+fn streaming_ttft(rt: &mut Runtime) -> Option<Json> {
+    use std::collections::HashMap;
+    let n = if reduced() { 6 } else { 16 };
+    let cfg = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 4,
+        eos_token: u32::MAX, // full budgets: stable shape
+        ..Default::default()
+    };
+    let mut eng = match Engine::new(rt, cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("streaming bench skipped: {e}");
+            return None;
+        }
+    };
+    let _ = eng.warmup();
+    let mut submitted: HashMap<u64, f64> = HashMap::new();
+    for i in 0..n {
+        let id = eng
+            .submit(Request {
+                prompt: (0..48).map(|p| 3 + ((p + i as u32 * 11) % 400)).collect(),
+                max_new_tokens: 24,
+                deterministic: i % 2 == 0,
+                temperature: 1.0,
+                seed: 70_000 + i as u64,
+                stream: true,
+                ..Default::default()
+            })
+            .unwrap();
+        submitted.insert(id, llm42::util::now_secs());
+    }
+    let mut first_delta: HashMap<u64, f64> = HashMap::new();
+    let mut streamed_tokens: HashMap<u64, u64> = HashMap::new();
+    while !eng.idle() {
+        if let Err(e) = eng.step() {
+            eprintln!("streaming bench aborted: {e}");
+            return None;
+        }
+        let now = llm42::util::now_secs();
+        for d in eng.take_stream_deltas() {
+            first_delta.entry(d.id).or_insert(now - submitted[&d.id]);
+            *streamed_tokens.entry(d.id).or_insert(0) += d.tokens.len() as u64;
+        }
+    }
+    let outs = eng.take_finished();
+    let mut stream_ttft = Recorder::new();
+    let mut engine_ttft = Recorder::new();
+    for o in &outs {
+        stream_ttft.record(first_delta[&o.id] * 1e3);
+        engine_ttft.record(o.metrics.ttft() * 1e3);
+        assert_eq!(
+            streamed_tokens[&o.id],
+            o.tokens.len() as u64,
+            "stream deltas must cover the full output"
+        );
+    }
+    let mut tab = Table::new(&[
+        "requests",
+        "streamed_ttft_p50_ms",
+        "streamed_ttft_p99_ms",
+        "engine_ttft_p50_ms",
+        "engine_ttft_p99_ms",
+    ]);
+    tab.row(vec![
+        format!("{n}"),
+        format!("{:.1}", stream_ttft.percentile(50.0)),
+        format!("{:.1}", stream_ttft.percentile(99.0)),
+        format!("{:.1}", engine_ttft.percentile(50.0)),
+        format!("{:.1}", engine_ttft.percentile(99.0)),
+    ]);
+    println!("== commit-boundary streaming: time to first committed token ==");
+    println!("{}", tab.render());
+    Some(Json::obj(vec![
+        ("requests", Json::num(n as f64)),
+        ("streamed_ttft_p50_ms", Json::num(stream_ttft.percentile(50.0))),
+        ("streamed_ttft_p99_ms", Json::num(stream_ttft.percentile(99.0))),
+        ("engine_ttft_p50_ms", Json::num(engine_ttft.percentile(50.0))),
+        ("engine_ttft_p99_ms", Json::num(engine_ttft.percentile(99.0))),
+    ]))
 }
 
 /// Step-composer benchmark: the same prefill-heavy mixed workload (long
@@ -190,6 +284,7 @@ fn fusion_comparison(rt: &mut Runtime) -> Option<Json> {
                 seed: 90_000 + i as u64,
                 priority: 0,
                 deadline_ms: None,
+                ..Default::default()
             })
             .unwrap();
         }
@@ -300,6 +395,7 @@ fn multiturn_cache_comparison(rt: &mut Runtime) -> Option<Json> {
                         seed: (turn * n_convs + c) as u64,
                         priority: 0,
                         deadline_ms: None,
+                        ..Default::default()
                     })
                     .unwrap();
                 wave.push((id, c));
@@ -404,6 +500,7 @@ fn policy_comparison(rt: &mut Runtime) -> Option<Json> {
                 seed: 40_000 + i as u64,
                 priority: 0,
                 deadline_ms: None,
+                ..Default::default()
             })
             .unwrap();
         }
@@ -425,6 +522,7 @@ fn policy_comparison(rt: &mut Runtime) -> Option<Json> {
                     seed: 7 + det_submitted as u64,
                     priority: 4,
                     deadline_ms: Some(250.0),
+                    ..Default::default()
                 })
                 .unwrap();
                 det_submitted += 1;

@@ -18,6 +18,7 @@
 //!   "prefix_cache": true,
 //!   "block_size": 0,
 //!   "max_step_tokens": 0,
+//!   "request_timeout_ms": 0,
 //!   "server": { "addr": "127.0.0.1:4242" }
 //! }
 //! ```
@@ -33,6 +34,10 @@
 //! — ragged prefill chunks plus the decode batch — fuse into one forward
 //! per step, with verification overlapped on its own fixed-shape graph;
 //! deterministic streams are bitwise identical fused or not.
+//! `request_timeout_ms` (0 = off) is the deployment-wide default
+//! wall-clock budget applied to requests that do not set their own
+//! `timeout_ms`; expired requests are aborted with `finish_reason:
+//! "timeout"` and their KV reclaimed.
 
 use crate::engine::{EngineConfig, FaultPlan, Mode, PolicyKind};
 use crate::error::{Error, Result};
@@ -90,6 +95,9 @@ impl AppConfig {
         if let Some(m) = v.get("max_step_tokens").and_then(|x| x.as_usize()) {
             cfg.engine.max_step_tokens = m;
         }
+        if let Some(t) = v.get("request_timeout_ms").and_then(|x| x.as_f64()) {
+            cfg.engine.request_timeout_ms = t;
+        }
         if let Some(srv) = v.get("server") {
             if let Some(a) = srv.get("addr").and_then(|x| x.as_str()) {
                 cfg.server_addr = a.to_string();
@@ -125,6 +133,8 @@ impl AppConfig {
             args.bool_or("prefix-cache", self.engine.prefix_cache)?;
         self.engine.max_step_tokens =
             args.usize_or("max-step-tokens", self.engine.max_step_tokens)?;
+        self.engine.request_timeout_ms =
+            args.f64_or("request-timeout-ms", self.engine.request_timeout_ms)?;
         self.artifacts = args.str_or("artifacts", &self.artifacts);
         self.server_addr = args.str_or("addr", &self.server_addr);
         self.engine.fault = FaultPlan::None; // never configurable in prod
@@ -136,6 +146,13 @@ impl AppConfig {
         if self.engine.verify_group == 0 || self.engine.verify_window < 2 {
             return Err(Error::Config(
                 "verify_group >= 1 and verify_window >= 2 required".into(),
+            ));
+        }
+        if !self.engine.request_timeout_ms.is_finite()
+            || self.engine.request_timeout_ms < 0.0
+        {
+            return Err(Error::Config(
+                "request_timeout_ms must be a non-negative number (0 = off)".into(),
             ));
         }
         // a nonzero block_size is only a *request*; the engine checks it
@@ -220,6 +237,18 @@ mod tests {
         // default: step composer off (seed-exclusive steps)
         let d = AppConfig::resolve(&args("")).unwrap();
         assert_eq!(d.engine.max_step_tokens, 0);
+    }
+
+    #[test]
+    fn request_timeout_from_file_and_flags() {
+        let c = AppConfig::from_json(r#"{"request_timeout_ms": 2000}"#).unwrap();
+        assert_eq!(c.engine.request_timeout_ms, 2000.0);
+        let c = c.apply_args(&args("--request-timeout-ms 500")).unwrap();
+        assert_eq!(c.engine.request_timeout_ms, 500.0);
+        // default: no deployment-wide timeout
+        let d = AppConfig::resolve(&args("")).unwrap();
+        assert_eq!(d.engine.request_timeout_ms, 0.0);
+        assert!(AppConfig::from_json(r#"{"request_timeout_ms": -1}"#).is_err());
     }
 
     #[test]

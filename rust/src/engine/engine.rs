@@ -76,7 +76,7 @@ use crate::engine::scheduler::{
     Action, BatchPlan, LaneView, PolicyKind, QueuedView, SchedView,
     SchedulerPolicy,
 };
-use crate::engine::sequence::{Phase, Request, RequestOutput, Sequence};
+use crate::engine::sequence::{FinishReason, Phase, Request, RequestOutput, Sequence};
 use crate::engine::verify;
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
@@ -103,11 +103,15 @@ impl Mode {
 }
 
 /// Deterministic fault injection for failure testing: force the verifier
-/// to report a mismatch on every `every`-th verified lane.
+/// to report a mismatch on every `every`-th verified lane, or fail the
+/// engine outright at a given step (exercises the server's poisoned-engine
+/// lifecycle). Never configurable from config files or the CLI.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultPlan {
     None,
     EveryNthLane { every: u64, at_index: usize },
+    /// `step()` returns an error once the step counter reaches `at_step`.
+    FailStepAt { at_step: u64 },
 }
 
 #[derive(Debug, Clone)]
@@ -144,6 +148,13 @@ pub struct EngineConfig {
     /// against throughput: larger budgets drain prompts faster per step
     /// but make each step heavier.
     pub max_step_tokens: usize,
+    /// Default wall-clock budget in milliseconds for requests that do not
+    /// carry their own `timeout_ms`, enforced by the step-time reaper. It
+    /// deliberately never enters the request or the scheduler view:
+    /// deadline-aware urgency keys on `min(deadline, timeout)`, and a
+    /// uniform deployment default masquerading as a per-request deadline
+    /// would collapse EDF ordering into FIFO. 0 (the default) disables it.
+    pub request_timeout_ms: f64,
 }
 
 impl Default for EngineConfig {
@@ -159,8 +170,23 @@ impl Default for EngineConfig {
             block_size: 0,
             prefix_cache: false,
             max_step_tokens: 0,
+            request_timeout_ms: 0.0,
         }
     }
+}
+
+/// One commit-boundary streaming event: a run of newly *committed* tokens
+/// for a streaming (`Request::stream = true`) request. Only committed
+/// tokens are ever emitted — speculative fast-path tokens stay engine-
+/// internal until the verifier replays them — so a rollback can never
+/// retract a streamed token (`tests/streaming.rs` pins this under forced
+/// verifier mismatches). Deltas are drained with
+/// [`Engine::take_stream_deltas`]; a request's deltas concatenate to
+/// exactly its final `RequestOutput::tokens`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamDelta {
+    pub id: u64,
+    pub tokens: Vec<u32>,
 }
 
 /// What a single `step()` did (the harness uses this for phase accounting).
@@ -207,6 +233,8 @@ pub struct Engine<'rt> {
     seqs: Vec<Sequence>,
     queue: VecDeque<usize>,
     finished: Vec<RequestOutput>,
+    /// pending commit-boundary stream events (streaming requests only)
+    deltas: Vec<StreamDelta>,
     pub metrics: EngineMetrics,
     next_id: u64,
     verify_lane_counter: u64,
@@ -285,6 +313,7 @@ impl<'rt> Engine<'rt> {
             seqs: Vec::new(),
             queue: VecDeque::new(),
             finished: Vec::new(),
+            deltas: Vec::new(),
             metrics: EngineMetrics::default(),
             next_id: 1,
             verify_lane_counter: 0,
@@ -472,7 +501,9 @@ impl<'rt> Engine<'rt> {
     /// Drive everything currently submitted to completion.
     pub fn run_to_completion(&mut self) -> Result<()> {
         while !self.idle() {
-            if self.step()? == StepKind::Idle {
+            // a step may legitimately report Idle if the timeout reaper
+            // aborted the last unfinished sequences at its start
+            if self.step()? == StepKind::Idle && !self.idle() {
                 return Err(Error::Engine(
                     "engine idle-stepped with unfinished sequences (scheduler bug)".into(),
                 ));
@@ -527,6 +558,7 @@ impl<'rt> Engine<'rt> {
                 deterministic: s.req.deterministic,
                 priority: s.req.priority,
                 deadline_ms: s.req.deadline_ms,
+                timeout_ms: s.req.timeout_ms,
                 arrive_time: s.metrics.arrive_time,
                 prompt_len: s.prompt_len(),
                 prefill_pos: s.prefill_pos,
@@ -556,6 +588,7 @@ impl<'rt> Engine<'rt> {
                 id: s.id,
                 priority: s.req.priority,
                 deadline_ms: s.req.deadline_ms,
+                timeout_ms: s.req.timeout_ms,
                 arrive_time: s.metrics.arrive_time,
                 deterministic: s.req.deterministic,
                 prompt_len: s.prompt_len(),
@@ -582,16 +615,127 @@ impl<'rt> Engine<'rt> {
 
     /// One scheduler iteration; executes the step's forward work (one
     /// exclusive pass, or — under the step composer — one fused fast-path
-    /// forward plus an overlapped verify pass).
+    /// forward plus an overlapped verify pass). Expired requests are
+    /// reaped first, and newly committed tokens of streaming requests are
+    /// queued as [`StreamDelta`] events afterwards.
     pub fn step(&mut self) -> Result<StepKind> {
         self.metrics.steps += 1;
+        if let FaultPlan::FailStepAt { at_step } = self.cfg.fault {
+            if self.metrics.steps >= at_step {
+                return Err(Error::Engine(format!(
+                    "injected step fault (FaultPlan::FailStepAt {{ at_step: {at_step} }})"
+                )));
+            }
+        }
+        self.reap_timeouts()?;
         self.sync_kv_metrics();
         // the planning view lives in engine-owned scratch; take it out for
         // the duration of the round loop so `&mut self` stays available
         let mut vs = std::mem::take(&mut self.view_scratch);
         let out = self.step_rounds(&mut vs);
         self.view_scratch = vs;
+        if out.is_ok() {
+            self.sweep_stream_deltas();
+        }
         out
+    }
+
+    /// Abort every queued or live sequence whose timeout budget has
+    /// elapsed: the request's own `timeout_ms`, or the deployment-wide
+    /// `request_timeout_ms` default for requests that set none. The
+    /// default is enforced here rather than stamped onto the request at
+    /// submit, so it never enters the scheduler view — a lifecycle-hygiene
+    /// default must not masquerade as a deadline and collapse
+    /// deadline-aware ordering into FIFO. Allocation-free when nothing
+    /// carries a timeout.
+    fn reap_timeouts(&mut self) -> Result<()> {
+        let default = self.cfg.request_timeout_ms;
+        let mut expired: Vec<u64> = Vec::new();
+        let mut now = None;
+        for s in &self.seqs {
+            if s.phase == Phase::Finished {
+                continue;
+            }
+            let ms = match s.req.timeout_ms {
+                Some(ms) => ms,
+                None if default > 0.0 => default,
+                None => continue,
+            };
+            let now = *now.get_or_insert_with(now_secs);
+            if now - s.metrics.arrive_time >= ms / 1000.0 {
+                expired.push(s.id);
+            }
+        }
+        for id in expired {
+            self.abort(id, FinishReason::Timeout)?;
+        }
+        Ok(())
+    }
+
+    /// Queue a commit-boundary delta for every streaming sequence that
+    /// committed tokens since its last emission
+    /// ([`Sequence::take_unstreamed`] is the shared cursor rule). Retiring
+    /// sequences flush inside [`Engine::finish_output`] instead — the
+    /// tombstone has no request state left by the time this sweep runs.
+    fn sweep_stream_deltas(&mut self) {
+        for s in &mut self.seqs {
+            if let Some(tokens) = s.take_unstreamed() {
+                self.deltas.push(StreamDelta { id: s.id, tokens });
+            }
+        }
+    }
+
+    /// Drain pending commit-boundary stream events (streaming requests
+    /// only; ordered by commit time, per-request deltas concatenate to the
+    /// final `RequestOutput::tokens`).
+    pub fn take_stream_deltas(&mut self) -> Vec<StreamDelta> {
+        std::mem::take(&mut self.deltas)
+    }
+
+    /// Abort a queued or live request in any phase: it leaves the queue or
+    /// releases its KV block table (published prefix pages stay cached per
+    /// the publish rule — a cancelled multi-turn prompt still serves
+    /// future cache hits), its speculative tokens are dropped, and it
+    /// finishes immediately with `reason` (one of the abort reasons;
+    /// committed tokens produced so far are returned in the output).
+    /// Returns `Ok(false)` when the id is unknown or already finished —
+    /// cancellation is idempotent and race-free against natural completion.
+    pub fn abort(&mut self, id: u64, reason: FinishReason) -> Result<bool> {
+        if !reason.is_abort() {
+            return Err(Error::Engine(format!(
+                "abort with non-abort finish reason {reason:?}"
+            )));
+        }
+        let idx = match self
+            .seqs
+            .iter()
+            .position(|s| s.id == id && s.phase != Phase::Finished)
+        {
+            Some(idx) => idx,
+            None => return Ok(false),
+        };
+        match self.seqs[idx].phase {
+            Phase::Queued => {
+                let pos =
+                    self.queue.iter().position(|&q| q == idx).ok_or_else(|| {
+                        Error::Engine(format!(
+                            "abort: queued sequence {id} missing from the queue"
+                        ))
+                    })?;
+                self.queue.remove(pos);
+            }
+            Phase::Prefilling | Phase::Decoding => {
+                // the block table goes back to the pool; published prefix
+                // pages survive as reclaimable cache entries
+                self.kv.release(id)?;
+            }
+            Phase::Finished => unreachable!("filtered above"),
+        }
+        let seq = &mut self.seqs[idx];
+        seq.speculative.clear();
+        seq.finish(reason);
+        self.finish_output(idx);
+        Ok(true)
     }
 
     fn step_rounds(&mut self, vs: &mut ViewScratch) -> Result<StepKind> {
@@ -1463,7 +1607,7 @@ impl<'rt> Engine<'rt> {
         for (lane, &idx) in lanes.iter().enumerate() {
             self.verify_lane_counter += 1;
             let forced = match self.cfg.fault {
-                FaultPlan::None => None,
+                FaultPlan::None | FaultPlan::FailStepAt { .. } => None,
                 FaultPlan::EveryNthLane { every, at_index } => {
                     if self.verify_lane_counter % every == 0 {
                         Some(at_index.min(self.seqs[idx].speculative.len() - 1))
@@ -1536,13 +1680,35 @@ impl<'rt> Engine<'rt> {
         debug_assert_eq!(self.seqs[idx].phase, Phase::Finished);
         let id = self.seqs[idx].id;
         self.kv.release(id)?;
+        self.finish_output(idx);
+        Ok(())
+    }
+
+    /// Flush the final stream delta, tombstone the sequence, and record
+    /// the output (shared by [`Engine::retire`] and [`Engine::abort`];
+    /// the caller has already returned any KV the sequence held).
+    fn finish_output(&mut self, idx: usize) {
+        debug_assert_eq!(self.seqs[idx].phase, Phase::Finished);
+        // final commit-boundary delta: whatever the retiring step committed
+        // past the last sweep (the sweep never sees this sequence again —
+        // the tombstone does not stream)
+        if let Some(tokens) = self.seqs[idx].take_unstreamed() {
+            let id = self.seqs[idx].id;
+            self.deltas.push(StreamDelta { id, tokens });
+        }
+        let id = self.seqs[idx].id;
         let mut tomb = Sequence::new(id, Request::greedy(vec![0], 1, false), 0.0);
         tomb.phase = Phase::Finished;
         let done = std::mem::replace(&mut self.seqs[idx], tomb);
         let out = done.into_output(now_secs());
-        self.metrics.record_finished(out.priority, out.metrics.e2e());
+        // class_e2e measures the latency of *served* requests; a cancelled
+        // or timed-out request would inject its abort age as a latency
+        // sample and corrupt the per-class SLO numbers
+        if !out.finish_reason.is_abort() {
+            self.metrics.record_finished(out.priority, out.metrics.e2e());
+        }
+        self.metrics.record_finish_reason(out.finish_reason);
         self.finished.push(out);
-        Ok(())
     }
 }
 

@@ -83,6 +83,18 @@ pub struct KvStats {
     pub evicted_pages: u64,
 }
 
+impl KvStats {
+    /// Pages usable by new admissions: free plus reclaimable cached pages.
+    /// This — not `free_pages` alone — is the conserved quantity request
+    /// lifecycles must restore: releasing a sequence (retire, preemption,
+    /// or abort) keeps its published prefix pages *cached* per the publish
+    /// rule, so with the prefix cache on a drained engine returns to its
+    /// pre-request `available_pages`, not necessarily its `free_pages`.
+    pub fn available_pages(&self) -> usize {
+        self.free_pages + self.cached_pages
+    }
+}
+
 #[derive(Debug)]
 struct SeqKv {
     /// physical page per block, covering positions `0..table.len()*bs`
@@ -624,6 +636,22 @@ mod tests {
             assert!(kv.try_admit(id, &[1], 12, 0).is_some(), "id {id}");
         }
         assert!(kv.can_admit(&[1], 8, 0));
+    }
+
+    #[test]
+    fn release_restores_available_pages_even_with_published_blocks() {
+        // the abort-path conservation law: free + cached is restored by a
+        // release even when publishing kept pages out of the free list
+        let mut kv = mgr(9, true);
+        let base = kv.stats().available_pages();
+        let toks: Vec<u32> = (10..22).collect();
+        kv.try_admit(1, &toks, 16, 0).unwrap();
+        kv.prepare_write(1, 0, 12).unwrap();
+        kv.publish_up_to(1, &toks);
+        assert!(kv.stats().available_pages() < base, "held pages are not available");
+        kv.release(1).unwrap();
+        assert_eq!(kv.stats().available_pages(), base);
+        assert!(kv.stats().cached_pages > 0, "published pages survive as cache");
     }
 
     #[test]

@@ -4,6 +4,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::engine::sequence::FinishReason;
+
 /// Per-sequence timing and DVR counters, reported with each finished request.
 #[derive(Debug, Default, Clone)]
 pub struct SeqMetrics {
@@ -27,8 +29,14 @@ pub struct SeqMetrics {
 }
 
 impl SeqMetrics {
+    /// Time to first committed token; 0 when the request was aborted
+    /// before producing one (`first_token_time` never set).
     pub fn ttft(&self) -> f64 {
-        self.first_token_time - self.arrive_time
+        if self.first_token_time <= 0.0 {
+            0.0
+        } else {
+            self.first_token_time - self.arrive_time
+        }
     }
 
     pub fn e2e(&self) -> f64 {
@@ -84,8 +92,18 @@ pub struct EngineMetrics {
     /// copy-on-write page copies (shared/published page about to be
     /// rewritten — rollback-under-sharing or frontier re-decode)
     pub cow_copies: u64,
-    /// per-priority-class end-to-end latency of finished requests
+    /// per-priority-class end-to-end latency of *served* requests —
+    /// aborted ones (cancelled/timeout/error) are excluded so the numbers
+    /// keep meaning "latency of completed requests"
     pub class_e2e: BTreeMap<u8, ClassStats>,
+    /// finished requests by reason (request-lifecycle accounting; the
+    /// abort reasons — cancelled/timeout/error — never produce further
+    /// compute after they are recorded)
+    pub finished_stop: u64,
+    pub finished_length: u64,
+    pub finished_cancelled: u64,
+    pub finished_timeout: u64,
+    pub finished_error: u64,
 }
 
 /// Aggregate latency of one priority class.
@@ -168,6 +186,22 @@ impl EngineMetrics {
         }
     }
 
+    /// Count one finished request under its finish reason.
+    pub fn record_finish_reason(&mut self, reason: FinishReason) {
+        match reason {
+            FinishReason::Eos => self.finished_stop += 1,
+            FinishReason::Length => self.finished_length += 1,
+            FinishReason::Cancelled => self.finished_cancelled += 1,
+            FinishReason::Timeout => self.finished_timeout += 1,
+            FinishReason::Error => self.finished_error += 1,
+        }
+    }
+
+    /// Requests that finished without delivering a natural result.
+    pub fn aborted(&self) -> u64 {
+        self.finished_cancelled + self.finished_timeout + self.finished_error
+    }
+
     pub fn note_queue_depth(&mut self, depth: usize) {
         if depth as u64 > self.queue_depth_hwm {
             self.queue_depth_hwm = depth as u64;
@@ -225,6 +259,30 @@ mod tests {
         };
         assert!((m.cache_hit_rate() - 0.3).abs() < 1e-12);
         assert_eq!(EngineMetrics::default().cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn finish_reason_counters() {
+        let mut m = EngineMetrics::default();
+        m.record_finish_reason(FinishReason::Eos);
+        m.record_finish_reason(FinishReason::Eos);
+        m.record_finish_reason(FinishReason::Length);
+        m.record_finish_reason(FinishReason::Cancelled);
+        m.record_finish_reason(FinishReason::Timeout);
+        m.record_finish_reason(FinishReason::Error);
+        assert_eq!(m.finished_stop, 2);
+        assert_eq!(m.finished_length, 1);
+        assert_eq!(m.finished_cancelled, 1);
+        assert_eq!(m.finished_timeout, 1);
+        assert_eq!(m.finished_error, 1);
+        assert_eq!(m.aborted(), 3);
+    }
+
+    #[test]
+    fn ttft_zero_when_no_token_was_committed() {
+        let m = SeqMetrics { arrive_time: 5.0, finish_time: 6.0, ..Default::default() };
+        assert_eq!(m.ttft(), 0.0, "aborted before the first token");
+        assert!((m.e2e() - 1.0).abs() < 1e-12);
     }
 
     #[test]

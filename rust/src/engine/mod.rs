@@ -7,6 +7,14 @@
 //! budget the executor becomes a **step composer**: policies plan fused
 //! mixed prefill+decode steps ([`BatchPlan`] / [`Action::Run`]) with
 //! verification overlapped on its own fixed-shape graph.
+//!
+//! Request lifecycle: [`Engine::abort`] removes a queued or live sequence
+//! in any phase (cancel / timeout / error), reclaiming its KV while
+//! preserving publishable prefix pages; per-request `timeout_ms` budgets
+//! are reaped at step start; and streaming requests surface
+//! commit-boundary [`StreamDelta`] events ([`Engine::take_stream_deltas`])
+//! — only *committed* tokens are ever emitted, so rollbacks can never
+//! retract streamed output.
 
 pub mod engine;
 pub mod kv;
@@ -16,7 +24,7 @@ pub mod scheduler;
 pub mod sequence;
 pub mod verify;
 
-pub use engine::{Engine, EngineConfig, FaultPlan, Mode, StepKind};
+pub use engine::{Engine, EngineConfig, FaultPlan, Mode, StepKind, StreamDelta};
 pub use kv::{KvManager, KvStats};
 pub use metrics::{ClassStats, EngineMetrics, SeqMetrics};
 pub use scheduler::{

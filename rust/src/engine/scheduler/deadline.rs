@@ -11,6 +11,10 @@
 //! * **verify trigger** — fire early when any ready lane's slack drops
 //!   below `urgent_slack_secs` (requests without a deadline keep the seed's
 //!   stall-step rule);
+//! * **timeouts count as deadlines** — a request's `timeout_ms` expiry is
+//!   the hard deadline of last resort (the engine reaps it there), so
+//!   urgency keys on `min(deadline, timeout)` (`LaneView::urgency_at`):
+//!   tokens a client paid for should surface before the reaper fires;
 //! * **verify selection** — most-urgent lanes first, not table order;
 //! * **prefill selection** — the most-urgent prefilling lane first (TTFT);
 //! * **admission** — earliest deadline first, then priority, then arrival;
@@ -57,8 +61,8 @@ impl DeadlineAware {
             let la = v.lane(a).expect("lane in view");
             let lb = v.lane(b).expect("lane in view");
             Self::cmp_urgency(
-                Self::urgency(la.deadline_at(), la.priority, la.arrive_time),
-                Self::urgency(lb.deadline_at(), lb.priority, lb.arrive_time),
+                Self::urgency(la.urgency_at(), la.priority, la.arrive_time),
+                Self::urgency(lb.urgency_at(), lb.priority, lb.arrive_time),
             )
             .then(a.cmp(&b))
         });
@@ -73,7 +77,7 @@ impl DeadlineAware {
             v.lane(i)
                 .map(|l| {
                     l.stall_steps >= v.max_stall_steps
-                        || l.deadline_at()
+                        || l.urgency_at()
                             .map_or(false, |at| at - v.now <= self.urgent_slack_secs)
                 })
                 .unwrap_or(false)
@@ -128,8 +132,8 @@ impl SchedulerPolicy for DeadlineAware {
             .iter()
             .min_by(|a, b| {
                 Self::cmp_urgency(
-                    Self::urgency(a.deadline_at(), a.priority, a.arrive_time),
-                    Self::urgency(b.deadline_at(), b.priority, b.arrive_time),
+                    Self::urgency(a.urgency_at(), a.priority, a.arrive_time),
+                    Self::urgency(b.urgency_at(), b.priority, b.arrive_time),
                 )
                 .then(a.idx.cmp(&b.idx))
             })
@@ -151,8 +155,8 @@ impl SchedulerPolicy for DeadlineAware {
             .filter(|l| l.phase == Phase::Prefilling)
             .min_by(|a, b| {
                 Self::cmp_urgency(
-                    Self::urgency(a.deadline_at(), a.priority, a.arrive_time),
-                    Self::urgency(b.deadline_at(), b.priority, b.arrive_time),
+                    Self::urgency(a.urgency_at(), a.priority, a.arrive_time),
+                    Self::urgency(b.urgency_at(), b.priority, b.arrive_time),
                 )
             })
         {
@@ -186,7 +190,7 @@ impl SchedulerPolicy for DeadlineAware {
             .queue
             .iter()
             .map(|q| {
-                (Self::urgency(q.deadline_at(), q.priority, q.arrive_time), q.idx)
+                (Self::urgency(q.urgency_at(), q.priority, q.arrive_time), q.idx)
             })
             .collect();
         keyed.sort_by(|a, b| Self::cmp_urgency(a.0, b.0).then(a.1.cmp(&b.1)));
@@ -261,6 +265,24 @@ mod tests {
         a.stall_steps = 4; // == max_stall_steps in the helper view
         let v = view(vec![a, dec], vec![], 1);
         assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] });
+    }
+
+    #[test]
+    fn timeout_acts_as_a_deadline_of_last_resort() {
+        // a lane without a deadline but with a nearly-expired timeout must
+        // verify early — otherwise the engine's reaper aborts it and the
+        // tokens the client paid for never surface
+        let mut p = DeadlineAware { urgent_slack_secs: 0.05 };
+        let mut a = ready_lane(0, None, 99.95); // helper view: now = 100.0
+        a.timeout_ms = Some(60.0); // expires at 100.01, slack 0.01
+        let dec = lane(1, 0, false);
+        let v = view(vec![a.clone(), dec.clone()], vec![], 1);
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] });
+
+        // a roomy timeout does not trigger early verification
+        a.timeout_ms = Some(60_000.0);
+        let v = view(vec![a, dec], vec![], 1);
+        assert_eq!(p.plan(&v), Action::Decode { lanes: vec![1] });
     }
 
     #[test]

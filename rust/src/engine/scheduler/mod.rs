@@ -213,6 +213,10 @@ pub struct LaneView {
     pub priority: u8,
     /// end-to-end deadline in ms from arrival, if the request set one
     pub deadline_ms: Option<f64>,
+    /// hard expiry in ms from arrival (the engine reaps the lane past it),
+    /// if the request set one — deadline-aware scheduling treats it as a
+    /// deadline of last resort
+    pub timeout_ms: Option<f64>,
     pub arrive_time: f64,
     pub prompt_len: usize,
     pub prefill_pos: usize,
@@ -237,6 +241,23 @@ impl LaneView {
         self.deadline_ms.map(|ms| self.arrive_time + ms / 1000.0)
     }
 
+    /// Absolute timeout expiry in engine-clock seconds (None = no timeout).
+    pub fn timeout_at(&self) -> Option<f64> {
+        self.timeout_ms.map(|ms| self.arrive_time + ms / 1000.0)
+    }
+
+    /// The earliest moment this lane's result stops mattering: its
+    /// deadline or its timeout expiry, whichever comes first. Work
+    /// scheduled past this point is wasted — the engine's reaper aborts
+    /// the lane at the timeout — so urgency-ordered policies key on this
+    /// rather than the deadline alone.
+    pub fn urgency_at(&self) -> Option<f64> {
+        match (self.deadline_at(), self.timeout_at()) {
+            (Some(d), Some(t)) => Some(d.min(t)),
+            (d, t) => d.or(t),
+        }
+    }
+
     /// Prefill tokens still to feed (prompt plus committed-but-last, minus
     /// progress). Meaningful for `Phase::Prefilling` lanes only — a
     /// decoding lane's committed tokens grow past its prefill cursor.
@@ -253,6 +274,8 @@ pub struct QueuedView {
     pub id: u64,
     pub priority: u8,
     pub deadline_ms: Option<f64>,
+    /// hard expiry in ms from arrival (reaped past it), if set
+    pub timeout_ms: Option<f64>,
     pub arrive_time: f64,
     pub deterministic: bool,
     pub prompt_len: usize,
@@ -264,6 +287,18 @@ pub struct QueuedView {
 impl QueuedView {
     pub fn deadline_at(&self) -> Option<f64> {
         self.deadline_ms.map(|ms| self.arrive_time + ms / 1000.0)
+    }
+
+    pub fn timeout_at(&self) -> Option<f64> {
+        self.timeout_ms.map(|ms| self.arrive_time + ms / 1000.0)
+    }
+
+    /// Earliest of deadline and timeout expiry (see [`LaneView::urgency_at`]).
+    pub fn urgency_at(&self) -> Option<f64> {
+        match (self.deadline_at(), self.timeout_at()) {
+            (Some(d), Some(t)) => Some(d.min(t)),
+            (d, t) => d.or(t),
+        }
     }
 }
 
@@ -524,6 +559,7 @@ mod tests {
             deterministic: det,
             priority,
             deadline_ms: None,
+            timeout_ms: None,
             arrive_time: idx as f64,
             prompt_len: 8,
             prefill_pos: 8,
@@ -545,6 +581,7 @@ mod tests {
             id: idx as u64 + 1,
             priority,
             deadline_ms: None,
+            timeout_ms: None,
             arrive_time: idx as f64,
             deterministic: true,
             prompt_len: 8,
@@ -568,6 +605,21 @@ mod tests {
             lanes,
             queue,
         }
+    }
+
+    #[test]
+    fn urgency_is_the_earlier_of_deadline_and_timeout() {
+        let mut l = lane(0, 0, true);
+        assert_eq!(l.urgency_at(), None);
+        l.deadline_ms = Some(500.0);
+        assert_eq!(l.urgency_at(), l.deadline_at());
+        l.timeout_ms = Some(200.0); // tighter than the deadline
+        assert_eq!(l.urgency_at(), l.timeout_at());
+        l.deadline_ms = None;
+        assert_eq!(l.urgency_at(), l.timeout_at(), "timeout alone still counts");
+        let mut q = queued(0, 0);
+        q.timeout_ms = Some(100.0);
+        assert_eq!(q.urgency_at(), q.timeout_at());
     }
 
     #[test]

@@ -23,8 +23,40 @@ pub enum Phase {
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FinishReason {
+    /// the stop token was sampled (wire name: `"stop"`)
     Eos,
+    /// the `max_new_tokens` budget was reached
     Length,
+    /// aborted by an explicit cancellation (`Engine::abort`, the server's
+    /// `{"cmd":"cancel"}` command, or a detected client disconnect)
+    Cancelled,
+    /// aborted because the request's `timeout_ms` budget elapsed
+    Timeout,
+    /// aborted because the engine could no longer serve it
+    Error,
+}
+
+impl FinishReason {
+    /// Wire name, as reported in `RequestOutput` JSON and per-reason
+    /// counters: stop | length | cancelled | timeout | error.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Eos => "stop",
+            FinishReason::Length => "length",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Timeout => "timeout",
+            FinishReason::Error => "error",
+        }
+    }
+
+    /// True for the reasons an abort may carry (a natural finish — stop or
+    /// length — can only come from the decode/verify paths themselves).
+    pub fn is_abort(self) -> bool {
+        matches!(
+            self,
+            FinishReason::Cancelled | FinishReason::Timeout | FinishReason::Error
+        )
+    }
 }
 
 /// User-facing request.
@@ -45,6 +77,16 @@ pub struct Request {
     /// Optional end-to-end latency target in milliseconds from arrival,
     /// consumed by deadline-aware scheduling.
     pub deadline_ms: Option<f64>,
+    /// Hard wall-clock budget in milliseconds from arrival: the engine
+    /// aborts the request (`FinishReason::Timeout`) once it elapses,
+    /// whether the request is queued or live. `None` = no timeout (unless
+    /// `EngineConfig::request_timeout_ms` supplies a default).
+    pub timeout_ms: Option<f64>,
+    /// Commit-boundary streaming opt-in: the engine emits a
+    /// [`StreamDelta`](crate::engine::engine::StreamDelta) for every run of
+    /// newly *committed* tokens. Speculative fast-path tokens are never
+    /// streamed, so rollbacks can never retract streamed output.
+    pub stream: bool,
 }
 
 impl Default for Request {
@@ -57,6 +99,8 @@ impl Default for Request {
             seed: 0,
             priority: 0,
             deadline_ms: None,
+            timeout_ms: None,
+            stream: false,
         }
     }
 }
@@ -95,6 +139,10 @@ pub struct Sequence {
     pub prefill_pos: usize,
     /// committed generated tokens (consistent state)
     pub committed: Vec<u32>,
+    /// committed tokens already emitted as stream deltas (`<= committed`;
+    /// the committed list is append-only, so streamed output can never be
+    /// retracted by a rollback or preemption)
+    pub streamed: usize,
     /// speculative fast-path tokens awaiting verification (det only)
     pub speculative: Vec<u32>,
     /// set when EOS was sampled (may still sit in `speculative`)
@@ -121,6 +169,7 @@ impl Sequence {
             phase: Phase::Queued,
             prefill_pos: 0,
             committed: Vec::new(),
+            streamed: 0,
             speculative: Vec::new(),
             eos_sampled: false,
             stall_steps: 0,
@@ -282,6 +331,19 @@ impl Sequence {
         self.finish_reason = Some(reason);
     }
 
+    /// Committed tokens not yet emitted as a stream delta, advancing the
+    /// cursor — the single flush rule behind both the engine's per-step
+    /// sweep and the retire/abort final flush. `None` for non-streaming
+    /// requests or when nothing new has committed.
+    pub fn take_unstreamed(&mut self) -> Option<Vec<u32>> {
+        if !self.req.stream || self.committed.len() <= self.streamed {
+            return None;
+        }
+        let tokens = self.committed[self.streamed..].to_vec();
+        self.streamed = self.committed.len();
+        Some(tokens)
+    }
+
     pub fn into_output(self, finish_time: f64) -> RequestOutput {
         let mut metrics = self.metrics;
         metrics.finish_time = finish_time;
@@ -417,6 +479,37 @@ mod tests {
         let r = Request::greedy(vec![1], 4, true);
         assert_eq!(r.priority, 0);
         assert_eq!(r.deadline_ms, None);
+        assert_eq!(r.timeout_ms, None);
+        assert!(!r.stream);
         assert_eq!(r.temperature, 0.0);
+    }
+
+    #[test]
+    fn take_unstreamed_advances_the_cursor_for_streaming_requests() {
+        let mut s = seq(true);
+        assert_eq!(s.take_unstreamed(), None, "stream=false emits nothing");
+        s.req.stream = true;
+        assert_eq!(s.take_unstreamed(), Some(vec![10]), "prefill token 0");
+        assert_eq!(s.take_unstreamed(), None, "nothing new");
+        s.committed.extend([11, 12]);
+        assert_eq!(s.take_unstreamed(), Some(vec![11, 12]));
+        assert_eq!(s.streamed, 3);
+        // speculative tokens never stream
+        s.push_fast_token(99, 999, true);
+        assert_eq!(s.take_unstreamed(), None);
+    }
+
+    #[test]
+    fn finish_reason_wire_names_and_abort_classification() {
+        assert_eq!(FinishReason::Eos.as_str(), "stop");
+        assert_eq!(FinishReason::Length.as_str(), "length");
+        assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
+        assert_eq!(FinishReason::Timeout.as_str(), "timeout");
+        assert_eq!(FinishReason::Error.as_str(), "error");
+        assert!(!FinishReason::Eos.is_abort());
+        assert!(!FinishReason::Length.is_abort());
+        assert!(FinishReason::Cancelled.is_abort());
+        assert!(FinishReason::Timeout.is_abort());
+        assert!(FinishReason::Error.is_abort());
     }
 }

@@ -93,7 +93,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::engine::{
         Engine, EngineConfig, FaultPlan, FinishReason, Mode, PolicyKind,
-        Request, RequestOutput, StepKind,
+        Request, RequestOutput, StepKind, StreamDelta,
     };
     pub use crate::error::{Error, Result};
     pub use crate::manifest::Manifest;

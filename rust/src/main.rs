@@ -37,7 +37,17 @@ COMMON:
                      up to N fast-path tokens — ragged prefill chunks +
                      the decode batch — into one forward per step, with
                      verification overlapped on its fixed-shape graph
+  --request-timeout-ms N  default per-request wall-clock budget (0 = off);
+                     expired requests finish with reason 'timeout' and
+                     their KV is reclaimed (requests may override with
+                     their own timeout_ms)
   --seed S           trace seed (default 42)
+
+SERVER PROTOCOL (JSON lines; see rust/src/server):
+  requests take \"stream\": true for commit-boundary token streaming
+  (streamed text is never rolled back), \"timeout_ms\", \"priority\",
+  \"deadline_ms\"; {\"cmd\":\"cancel\",\"id\":N} aborts a request,
+  {\"cmd\":\"stats\"} reports per-reason finish counters and KV occupancy.
 ";
 
 fn main() {

@@ -8,12 +8,28 @@
 //!
 //! Wire protocol (one JSON object per line):
 //!   -> {"text": "...", "max_new_tokens": 32, "deterministic": true,
-//!       "temperature": 1.0, "seed": 7,
-//!       "priority": 2, "deadline_ms": 500.0}     (or "prompt": [ids])
-//!   <- {"id": 3, "tokens": [...], "text": "...", "finish_reason": "eos",
+//!       "temperature": 1.0, "seed": 7, "priority": 2,
+//!       "deadline_ms": 500.0, "timeout_ms": 2000.0,
+//!       "stream": false}                          (or "prompt": [ids])
+//!   <- {"id": 3, "tokens": [...], "text": "...", "finish_reason": "stop",
 //!       "priority": 2, "ttft_ms": 31.2, "e2e_ms": 410.0,
 //!       "rollbacks": 0, "recomputed": 0, "preemptions": 0,
 //!       "reprefilled": 0}
+//!
+//! `finish_reason` is one of `stop` (stop token), `length` (budget
+//! reached), `cancelled`, `timeout`, or `error`.
+//!
+//! With `"stream": true`, commit-boundary delta lines precede the final
+//! object:
+//!   <- {"id": 3, "delta": " text", "tokens": [57, 103]}
+//!   <- ...
+//!   <- {"id": 3, "tokens": [...], "text": "...", "finish_reason": "stop", ...}
+//!
+//! Deltas carry only *committed* tokens (LLM-42's verify-rollback loop
+//! makes this the safety line: speculative fast-path tokens may be rolled
+//! back, committed ones never are), so streamed text is never retracted
+//! and the concatenation of a request's deltas is bitwise identical to the
+//! final `text`/`tokens`.
 //!
 //! Request fields beyond the prompt:
 //!   * `priority` (0-255, default 0) — scheduling class; higher classes are
@@ -21,22 +37,45 @@
 //!     lower-priority non-deterministic traffic when KV slots are full.
 //!   * `deadline_ms` (> 0) — end-to-end latency target from arrival,
 //!     consumed by the `deadline` policy's verification trigger.
+//!   * `timeout_ms` (> 0) — hard wall-clock budget; the engine aborts the
+//!     request (`finish_reason: "timeout"`) when it elapses, queued or
+//!     live, and reclaims its KV pages.
+//!   * `stream` (bool, default false) — commit-boundary streaming.
 //!   * `prompt` entries must be non-negative integer token ids. Malformed
-//!     fields — prompt entries, `priority`, `deadline_ms`,
-//!     `max_new_tokens`, `temperature`, `seed`, `deterministic` — are
-//!     rejected with an error, never coerced to defaults.
+//!     fields — prompt entries, `priority`, `deadline_ms`, `timeout_ms`,
+//!     `stream`, `max_new_tokens`, `temperature`, `seed`, `deterministic`
+//!     — are rejected with an error, never coerced to defaults.
+//!
+//! Cancellation:
+//!   -> {"cmd": "cancel", "id": 3}
+//!   <- {"ok": true, "id": 3, "cancelled": true}
+//! aborts a queued or live request from any connection (`cancelled` is
+//! false when the id is unknown or already finished — cancel is
+//! idempotent). Its waiter receives a final object with `finish_reason:
+//! "cancelled"` carrying whatever tokens had committed. Connection
+//! handlers also cancel implicitly: a failed socket write (client gone
+//! mid-stream) sends the same abort, so a disconnected client's sequence
+//! stops decoding and its KV pages return to the pool instead of leaking.
+//! Write-failure detection needs bytes in flight, i.e. `"stream": true`;
+//! a buffered (non-streaming) request writes nothing until it finishes,
+//! so a silently vanished buffered client is bounded by `timeout_ms` /
+//! the server's `request_timeout_ms` default (or an explicit cancel), not
+//! by disconnect detection.
 //!
 //! Engine-level counters and the scheduling policy are exposed via
 //! command messages:
 //!   -> {"cmd": "stats"}
 //!   <- {"steps": ..., "preemptions": ..., "reprefilled_tokens": ...,
-//!       "queue_depth_hwm": ...,
+//!       "queue_depth_hwm": ..., "waiters": ...,
 //!       "forward_passes": ..., "tokens_per_forward": ...,
 //!       "forwards_per_committed_token": ..., "fused_steps": ...,
 //!       "fused_tokens": ..., "fused_occupancy": ...,
+//!       "finish_reasons": {"stop": ..., "length": ..., "cancelled": ...,
+//!                          "timeout": ..., "error": ...},
 //!       "class_e2e": {"0": {...}, ...},
 //!       "kv": {"block_size": ..., "user_pages": ..., "free_pages": ...,
-//!              "cached_pages": ..., "held_pages": ..., "cache_hits": ...,
+//!              "cached_pages": ..., "available_pages": ...,
+//!              "held_pages": ..., "cache_hits": ...,
 //!              "cache_hit_tokens": ..., "cache_hit_rate": ...,
 //!              "reprefill_saved_tokens": ..., "cow_copies": ...,
 //!              "evicted_pages": ...}, ...}
@@ -47,6 +86,13 @@
 //! `set_policy` swaps it engine-wide at runtime. Policies reorder work,
 //! never results — committed tokens of deterministic requests are
 //! policy-independent, so switching is always safe.
+//!
+//! Lifecycle: the engine thread parks on its channel when idle (no busy
+//! poll), `shutdown()`/`Drop` stop the accept loop, reject new
+//! submissions, drain in-flight requests, and join both threads. If
+//! `Engine::step` ever fails, every pending waiter receives an error
+//! object and the server flips a poisoned flag ([`Server::poisoned`]):
+//! subsequent submissions are rejected immediately instead of hanging.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -54,10 +100,11 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::engine::{
     Engine, EngineConfig, EngineMetrics, FinishReason, KvStats, PolicyKind,
-    Request, RequestOutput, StepKind,
+    Request, RequestOutput, StreamDelta,
 };
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
@@ -118,6 +165,21 @@ pub fn parse_request_value(v: &Json, tok: &Tokenizer) -> Result<Request> {
             Some(n)
         }
     };
+    let timeout_ms = match v.get("timeout_ms") {
+        None => None,
+        Some(x) => {
+            let n = x.as_f64().filter(|n| *n > 0.0 && n.is_finite()).ok_or_else(
+                || Error::Server("timeout_ms must be a positive number".into()),
+            )?;
+            Some(n)
+        }
+    };
+    let stream = match v.get("stream") {
+        None => false,
+        Some(x) => x
+            .as_bool()
+            .ok_or_else(|| Error::Server("stream must be a boolean".into()))?,
+    };
     let max_new_tokens = match v.get("max_new_tokens") {
         None => 32,
         Some(x) => {
@@ -170,6 +232,8 @@ pub fn parse_request_value(v: &Json, tok: &Tokenizer) -> Result<Request> {
         seed,
         priority,
         deadline_ms,
+        timeout_ms,
+        stream,
     })
 }
 
@@ -182,13 +246,7 @@ pub fn render_output(out: &RequestOutput, tok: &Tokenizer) -> String {
             Json::Arr(out.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
         ),
         ("text", Json::str(tok.decode(&out.tokens))),
-        (
-            "finish_reason",
-            Json::str(match out.finish_reason {
-                FinishReason::Eos => "eos",
-                FinishReason::Length => "length",
-            }),
-        ),
+        ("finish_reason", Json::str(out.finish_reason.as_str())),
         ("deterministic", Json::Bool(out.deterministic)),
         ("priority", Json::num(out.priority as f64)),
         ("ttft_ms", Json::num(out.metrics.ttft() * 1000.0)),
@@ -202,8 +260,65 @@ pub fn render_output(out: &RequestOutput, tok: &Tokenizer) -> String {
     .dump()
 }
 
+/// Serialize one commit-boundary delta line. The engine thread computes
+/// `text` from a per-request byte accumulator (see [`utf8_holdback`]) so
+/// that concatenating a request's `delta` strings reproduces the final
+/// `text` bitwise even when a token run ends mid-UTF-8-character — the
+/// `tokens` field always carries exactly the newly committed ids.
+pub fn render_delta_line(id: u64, tokens: &[u32], text: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("delta", Json::str(text)),
+        (
+            "tokens",
+            Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+        ),
+    ])
+    .dump()
+}
+
+/// Stateless delta rendering for embedders and tests; assumes the delta's
+/// token run decodes on its own (true whenever token boundaries align
+/// with UTF-8 characters — the server's engine loop uses the stateful
+/// byte-accumulator path instead, which needs no such assumption).
+pub fn render_delta(d: &StreamDelta, tok: &Tokenizer) -> String {
+    render_delta_line(d.id, &d.tokens, &tok.decode(&d.tokens))
+}
+
+/// How many trailing bytes of `buf` are a prefix of an incomplete UTF-8
+/// character (0..=3). Emitting those bytes now could change how they
+/// decode once the next committed tokens' bytes arrive, so the streaming
+/// path holds them back; everything before them decodes identically in
+/// isolation and as part of the full stream (lossy replacement of
+/// definitely-invalid bytes is position-local).
+pub fn utf8_holdback(buf: &[u8]) -> usize {
+    let n = buf.len();
+    for back in 1..=3.min(n) {
+        let b = buf[n - back];
+        if b & 0xC0 == 0xC0 {
+            // lead byte: how long would its character be?
+            let need = if b >= 0xF0 {
+                4
+            } else if b >= 0xE0 {
+                3
+            } else {
+                2
+            };
+            return if need > back { back } else { 0 };
+        }
+        if b & 0xC0 != 0x80 {
+            return 0; // ASCII (or stray byte): decodes on its own
+        }
+        // continuation byte: keep scanning for its lead
+    }
+    // >= 3 continuation bytes with no lead can never become valid
+    0
+}
+
 /// Serialize engine-wide counters for the `{"cmd": "stats"}` wire command.
-pub fn render_stats(m: &EngineMetrics, kv: &KvStats) -> String {
+/// `waiters` is the server's live reply-channel count — it must return to
+/// zero when the engine drains, or a waiter leaked.
+pub fn render_stats(m: &EngineMetrics, kv: &KvStats, waiters: usize) -> String {
     let class_keys: Vec<String> =
         m.class_e2e.keys().map(|c| c.to_string()).collect();
     let class_e2e = Json::obj(
@@ -245,6 +360,19 @@ pub fn render_stats(m: &EngineMetrics, kv: &KvStats) -> String {
         ("fused_steps", Json::num(m.fused_steps as f64)),
         ("fused_tokens", Json::num(m.fused_fwd_tokens as f64)),
         ("fused_occupancy", Json::num(m.fused_occupancy())),
+        // request-lifecycle accounting: how every finished request ended,
+        // and how many reply channels the server currently holds open
+        (
+            "finish_reasons",
+            Json::obj(vec![
+                ("stop", Json::num(m.finished_stop as f64)),
+                ("length", Json::num(m.finished_length as f64)),
+                ("cancelled", Json::num(m.finished_cancelled as f64)),
+                ("timeout", Json::num(m.finished_timeout as f64)),
+                ("error", Json::num(m.finished_error as f64)),
+            ]),
+        ),
+        ("waiters", Json::num(waiters as f64)),
         (
             "kv",
             Json::obj(vec![
@@ -252,6 +380,7 @@ pub fn render_stats(m: &EngineMetrics, kv: &KvStats) -> String {
                 ("user_pages", Json::num(kv.user_pages as f64)),
                 ("free_pages", Json::num(kv.free_pages as f64)),
                 ("cached_pages", Json::num(kv.cached_pages as f64)),
+                ("available_pages", Json::num(kv.available_pages() as f64)),
                 ("held_pages", Json::num(kv.held_pages as f64)),
                 ("cache_hits", Json::num(m.cache_hits as f64)),
                 ("cache_hit_tokens", Json::num(m.cache_hit_tokens as f64)),
@@ -270,15 +399,44 @@ pub fn render_stats(m: &EngineMetrics, kv: &KvStats) -> String {
 }
 
 enum ToEngine {
-    Submit(Request, mpsc::Sender<String>),
+    Submit(Request, mpsc::Sender<ConnEvent>),
+    /// Abort a queued/live request. `reply` is present for the explicit
+    /// `{"cmd":"cancel"}` command and absent for implicit disconnect
+    /// cancellation (nobody is left to read the acknowledgement).
+    Cancel { id: u64, reply: Option<mpsc::Sender<String>> },
     Stats(mpsc::Sender<String>),
     SetPolicy(PolicyKind, mpsc::Sender<String>),
 }
 
-/// A running server; `shutdown()` stops the accept loop.
+/// Per-request server state while the engine owns the request: the reply
+/// channel plus the streamed-byte accumulator (tokens whose bytes end
+/// mid-UTF-8-character are held back until the character completes, so
+/// delta text concatenates bitwise to the final text).
+struct Waiter {
+    tx: mpsc::Sender<ConnEvent>,
+    pending: Vec<u8>,
+}
+
+/// Engine-to-connection events for one submitted request, in order:
+/// `Accepted` once, then zero or more `Line`s (stream deltas), then one
+/// `Done` (the final output or an error object).
+enum ConnEvent {
+    /// The engine accepted the request under this id. Not written to the
+    /// wire — the handler records it so a failed socket write can cancel
+    /// the in-flight request.
+    Accepted(u64),
+    /// One wire line to forward now (commit-boundary stream delta).
+    Line(String),
+    /// The final wire line; the request is complete.
+    Done(String),
+}
+
+/// A running server; `shutdown()` (and `Drop`) stops the accept loop,
+/// drains in-flight requests, and joins both threads.
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    poisoned: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     engine_thread: Option<std::thread::JoinHandle<()>>,
 }
@@ -295,67 +453,16 @@ impl Server {
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let poisoned = Arc::new(AtomicBool::new(false));
         let (tx, rx) = mpsc::channel::<ToEngine>();
         let tok = Arc::new(tok);
 
         // engine thread: owns the PJRT client; submits + steps + routes
         let stop_e = stop.clone();
+        let poisoned_e = poisoned.clone();
         let tok_e = tok.clone();
         let engine_thread = std::thread::spawn(move || {
-            let run = || -> Result<()> {
-                let mut rt = Runtime::load(&artifacts_dir)?;
-                let mut eng = Engine::new(&mut rt, cfg)?;
-                let mut waiters: HashMap<u64, mpsc::Sender<String>> = HashMap::new();
-                loop {
-                    // drain incoming submissions and stats probes
-                    while let Ok(msg) = rx.try_recv() {
-                        match msg {
-                            ToEngine::Submit(req, reply) => match eng.submit(req) {
-                                Ok(id) => {
-                                    waiters.insert(id, reply);
-                                }
-                                Err(e) => {
-                                    let _ = reply.send(
-                                        Json::obj(vec![("error", Json::str(e.to_string()))])
-                                            .dump(),
-                                    );
-                                }
-                            },
-                            ToEngine::Stats(reply) => {
-                                let _ = reply.send(render_stats(
-                                    &eng.metrics,
-                                    &eng.kv_stats(),
-                                ));
-                            }
-                            ToEngine::SetPolicy(kind, reply) => {
-                                eng.set_policy(kind);
-                                let _ = reply.send(
-                                    Json::obj(vec![
-                                        ("ok", Json::Bool(true)),
-                                        ("policy", Json::str(kind.name())),
-                                    ])
-                                    .dump(),
-                                );
-                            }
-                        }
-                    }
-                    let kind = eng.step()?;
-                    for out in eng.take_finished() {
-                        if let Some(reply) = waiters.remove(&out.id) {
-                            let _ = reply.send(render_output(&out, &tok_e));
-                        }
-                    }
-                    if kind == StepKind::Idle {
-                        if stop_e.load(Ordering::Relaxed) {
-                            return Ok(());
-                        }
-                        std::thread::sleep(std::time::Duration::from_millis(2));
-                    }
-                }
-            };
-            if let Err(e) = run() {
-                eprintln!("engine thread error: {e}");
-            }
+            engine_thread_main(artifacts_dir, cfg, tok_e, rx, stop_e, poisoned_e);
         });
 
         // accept thread: one handler thread per connection
@@ -381,12 +488,27 @@ impl Server {
         Ok(Server {
             addr: local,
             stop,
+            poisoned,
             accept_thread: Some(accept_thread),
             engine_thread: Some(engine_thread),
         })
     }
 
+    /// True once the engine thread has failed: pending waiters were failed
+    /// with an error object and new submissions are rejected.
+    pub fn poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, reject new submissions, drain in-flight requests,
+    /// and join both threads. Idempotent with `Drop` (which calls the same
+    /// routine), so tests can never exit while the engine thread still
+    /// owns the runtime.
     pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
@@ -399,8 +521,217 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
+        self.shutdown_impl();
     }
+}
+
+/// The engine thread: owns the runtime, drains the command channel
+/// (parking on it when idle instead of busy-polling), steps the engine,
+/// and routes stream deltas and finished outputs back to their waiters.
+fn engine_thread_main(
+    artifacts_dir: String,
+    cfg: EngineConfig,
+    tok: Arc<Tokenizer>,
+    rx: mpsc::Receiver<ToEngine>,
+    stop: Arc<AtomicBool>,
+    poisoned: Arc<AtomicBool>,
+) {
+    let mut rt = match Runtime::load(&artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            return poisoned_drain(&rx, &stop, &poisoned, &format!("engine failed to start: {e}"))
+        }
+    };
+    let mut eng = match Engine::new(&mut rt, cfg) {
+        Ok(eng) => eng,
+        Err(e) => {
+            return poisoned_drain(&rx, &stop, &poisoned, &format!("engine failed to start: {e}"))
+        }
+    };
+    let mut waiters: HashMap<u64, Waiter> = HashMap::new();
+    loop {
+        let stopping = stop.load(Ordering::Relaxed);
+        // park on the channel while idle — no work to step, so the only
+        // thing that can change engine state is a message (or shutdown)
+        if eng.idle() && !stopping {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(msg) => handle_msg(msg, &mut eng, &mut waiters, false),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                // every sender is gone (accept loop died): nothing can
+                // ever arrive and nothing is in flight — exit
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        while let Ok(msg) = rx.try_recv() {
+            handle_msg(msg, &mut eng, &mut waiters, stopping);
+        }
+        if !eng.idle() {
+            if let Err(e) = eng.step() {
+                // fail loudly instead of leaving every client hung: flip
+                // the poisoned flag first (submissions racing the failure
+                // are rejected), then fail all pending waiters
+                poisoned.store(true, Ordering::Relaxed);
+                let msg = format!("engine failed: {e}");
+                let line = Json::obj(vec![
+                    ("error", Json::str(msg.clone())),
+                    ("finish_reason", Json::str("error")),
+                ])
+                .dump();
+                for (_, w) in waiters.drain() {
+                    let _ = w.tx.send(ConnEvent::Done(line.clone()));
+                }
+                return poisoned_drain(&rx, &stop, &poisoned, &msg);
+            }
+        }
+        // route commit-boundary deltas; a dead receiver here means the
+        // connection is gone — abort the sequence instead of decoding to
+        // completion into a closed channel
+        for d in eng.take_stream_deltas() {
+            let dead = match waiters.get_mut(&d.id) {
+                Some(w) => {
+                    // accumulate bytes and emit only what is final: a
+                    // token run ending mid-UTF-8-character is held back
+                    // so delta text concatenates bitwise to the final
+                    // text no matter where commits land
+                    tok.decode_bytes(&d.tokens, &mut w.pending);
+                    let emit = w.pending.len() - utf8_holdback(&w.pending);
+                    let text =
+                        String::from_utf8_lossy(&w.pending[..emit]).into_owned();
+                    w.pending.drain(..emit);
+                    w.tx.send(ConnEvent::Line(render_delta_line(
+                        d.id, &d.tokens, &text,
+                    )))
+                    .is_err()
+                }
+                None => false,
+            };
+            if dead {
+                waiters.remove(&d.id);
+                let _ = eng.abort(d.id, FinishReason::Cancelled);
+            }
+        }
+        for out in eng.take_finished() {
+            if let Some(w) = waiters.remove(&out.id) {
+                if !w.pending.is_empty() {
+                    // final flush: whatever bytes were held back decode
+                    // now exactly as the full text's tail does (nothing
+                    // can follow them anymore)
+                    let text = String::from_utf8_lossy(&w.pending).into_owned();
+                    let _ = w
+                        .tx
+                        .send(ConnEvent::Line(render_delta_line(out.id, &[], &text)));
+                }
+                let _ = w.tx.send(ConnEvent::Done(render_output(&out, &tok)));
+            }
+        }
+        // the shutdown exit sits *after* routing: work finished or
+        // cancelled during the drain (e.g. a cancel handled above) must
+        // still reach its waiter before the thread goes away
+        if stop.load(Ordering::Relaxed) && eng.idle() {
+            return;
+        }
+    }
+}
+
+fn handle_msg(
+    msg: ToEngine,
+    eng: &mut Engine<'_>,
+    waiters: &mut HashMap<u64, Waiter>,
+    stopping: bool,
+) {
+    match msg {
+        ToEngine::Submit(req, reply) => {
+            if stopping {
+                let _ = reply.send(ConnEvent::Done(error_line(
+                    "server is shutting down",
+                )));
+                return;
+            }
+            match eng.submit(req) {
+                Ok(id) => {
+                    if reply.send(ConnEvent::Accepted(id)).is_err() {
+                        // the connection died before the engine even
+                        // accepted: don't run a request nobody will read
+                        let _ = eng.abort(id, FinishReason::Cancelled);
+                    } else {
+                        waiters.insert(id, Waiter { tx: reply, pending: Vec::new() });
+                    }
+                }
+                Err(e) => {
+                    let _ = reply.send(ConnEvent::Done(error_line(&e.to_string())));
+                }
+            }
+        }
+        ToEngine::Cancel { id, reply } => {
+            let cancelled = match eng.abort(id, FinishReason::Cancelled) {
+                Ok(hit) => hit,
+                Err(e) => {
+                    eprintln!("cancel of request {id} failed: {e}");
+                    false
+                }
+            };
+            if let Some(r) = reply {
+                let _ = r.send(
+                    Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("id", Json::num(id as f64)),
+                        ("cancelled", Json::Bool(cancelled)),
+                    ])
+                    .dump(),
+                );
+            }
+        }
+        ToEngine::Stats(reply) => {
+            let _ = reply.send(render_stats(&eng.metrics, &eng.kv_stats(), waiters.len()));
+        }
+        ToEngine::SetPolicy(kind, reply) => {
+            eng.set_policy(kind);
+            let _ = reply.send(
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("policy", Json::str(kind.name())),
+                ])
+                .dump(),
+            );
+        }
+    }
+}
+
+/// Terminal state after an engine failure: keep answering the channel with
+/// errors (clients see a reason instead of a hang) until shutdown.
+fn poisoned_drain(
+    rx: &mpsc::Receiver<ToEngine>,
+    stop: &AtomicBool,
+    poisoned: &AtomicBool,
+    msg: &str,
+) {
+    poisoned.store(true, Ordering::Relaxed);
+    eprintln!("engine thread poisoned: {msg}");
+    let line = error_line(&format!("engine poisoned: {msg}"));
+    loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(ToEngine::Submit(_, reply)) => {
+                let _ = reply.send(ConnEvent::Done(line.clone()));
+            }
+            Ok(ToEngine::Cancel { reply: Some(r), .. }) => {
+                let _ = r.send(line.clone());
+            }
+            Ok(ToEngine::Cancel { reply: None, .. }) => {}
+            Ok(ToEngine::Stats(r)) | Ok(ToEngine::SetPolicy(_, r)) => {
+                let _ = r.send(line.clone());
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+fn error_line(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).dump()
 }
 
 fn handle_conn(
@@ -426,7 +757,7 @@ fn handle_conn(
                 continue;
             }
         };
-        // non-request commands: {"cmd": "stats"} / {"cmd": "set_policy"}
+        // non-request commands: stats / set_policy / cancel
         if let Some(cmd) = parsed.get("cmd").and_then(|c| c.as_str()) {
             let reply = match cmd {
                 "stats" => {
@@ -435,6 +766,27 @@ fn handle_conn(
                         .map_err(|_| Error::Server("engine gone".into()))?;
                     rrx.recv()
                         .map_err(|_| Error::Server("engine dropped reply".into()))?
+                }
+                "cancel" => {
+                    let id = parsed
+                        .get("id")
+                        .and_then(|i| i.as_f64())
+                        .filter(|n| n.fract() == 0.0 && (0.0..=u64::MAX as f64).contains(n));
+                    match id {
+                        Some(id) => {
+                            let (rtx, rrx) = mpsc::channel();
+                            tx.send(ToEngine::Cancel { id: id as u64, reply: Some(rtx) })
+                                .map_err(|_| Error::Server("engine gone".into()))?;
+                            rrx.recv().map_err(|_| {
+                                Error::Server("engine dropped reply".into())
+                            })?
+                        }
+                        None => Json::obj(vec![(
+                            "error",
+                            Json::str("cancel needs a non-negative integer 'id'"),
+                        )])
+                        .dump(),
+                    }
                 }
                 "set_policy" => {
                     let kind = parsed
@@ -475,10 +827,39 @@ fn handle_conn(
                 let (rtx, rrx) = mpsc::channel();
                 tx.send(ToEngine::Submit(req, rtx))
                     .map_err(|_| Error::Server("engine gone".into()))?;
-                let resp = rrx
-                    .recv()
-                    .map_err(|_| Error::Server("engine dropped reply".into()))?;
-                writeln!(writer, "{resp}")?;
+                // forward events until the request completes; a failed
+                // socket write means the client is gone — cancel the
+                // in-flight request so it stops consuming the engine
+                let mut cur_id: Option<u64> = None;
+                loop {
+                    match rrx.recv() {
+                        Ok(ConnEvent::Accepted(id)) => cur_id = Some(id),
+                        Ok(ConnEvent::Line(s)) => {
+                            if writeln!(writer, "{s}").is_err() {
+                                if let Some(id) = cur_id {
+                                    let _ = tx.send(ToEngine::Cancel { id, reply: None });
+                                }
+                                return Err(Error::Server(
+                                    "client disconnected mid-stream".into(),
+                                ));
+                            }
+                        }
+                        Ok(ConnEvent::Done(s)) => {
+                            if writeln!(writer, "{s}").is_err() {
+                                // already finished: nothing left to cancel
+                                return Err(Error::Server(
+                                    "client disconnected before the reply".into(),
+                                ));
+                            }
+                            break;
+                        }
+                        Err(_) => {
+                            // engine thread gone (shutdown mid-request)
+                            let _ = writeln!(writer, "{}", error_line("engine unavailable"));
+                            return Ok(());
+                        }
+                    }
+                }
             }
             Err(e) => {
                 writeln!(
@@ -496,22 +877,147 @@ fn handle_conn(
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
+    /// a [`StreamIter`] was dropped before its final line: unread delta
+    /// lines are still buffered on the wire, so further requests on this
+    /// connection would read stale replies — refuse instead of desyncing
+    desynced: bool,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { stream, reader })
+        Ok(Client { stream, reader, desynced: false })
     }
 
-    /// Send one request object; block for the response.
+    fn check_sync(&self) -> Result<()> {
+        if self.desynced {
+            return Err(Error::Server(
+                "client desynchronized: a streaming response was dropped \
+                 before completion — open a new connection"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Send one request object; block for the response. For streaming
+    /// requests use [`Client::stream`] — this method reads exactly one
+    /// reply line.
     pub fn request(&mut self, body: &Json) -> Result<Json> {
+        self.check_sync()?;
         writeln!(self.stream, "{}", body.dump())?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Json::parse(line.trim())
     }
+
+    /// Send a streaming request (`"stream": true` is added if absent) and
+    /// iterate its commit-boundary events: zero or more
+    /// [`StreamEvent::Delta`]s followed by one [`StreamEvent::Done`]
+    /// carrying the final response object. Deltas are never retracted —
+    /// their concatenation equals the final `tokens`/`text` bitwise.
+    /// Dropping the iterator before `Done` marks the connection
+    /// desynchronized (later requests on it error rather than reading the
+    /// abandoned stream's leftover lines); drop the whole `Client` to
+    /// disconnect — the server cancels the in-flight request when its next
+    /// delta write fails.
+    pub fn stream(&mut self, body: &Json) -> Result<StreamIter<'_>> {
+        self.check_sync()?;
+        let mut body = body.clone();
+        if let Json::Obj(m) = &mut body {
+            m.insert("stream".into(), Json::Bool(true));
+        }
+        writeln!(self.stream, "{}", body.dump())?;
+        Ok(StreamIter { client: self, done: false })
+    }
+}
+
+/// One event of a streamed response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamEvent {
+    /// Newly committed tokens (and their decoded text chunk).
+    Delta { id: u64, tokens: Vec<u32>, text: String },
+    /// The final response object (full `tokens`/`text`/`finish_reason`
+    /// and metrics — or an `error` object).
+    Done(Json),
+}
+
+/// Blocking iterator over one streamed request's events; ends after the
+/// final [`StreamEvent::Done`] (or the first transport/parse error).
+/// Dropping it early poisons the parent [`Client`] (see
+/// [`Client::stream`]).
+pub struct StreamIter<'a> {
+    client: &'a mut Client,
+    done: bool,
+}
+
+impl Drop for StreamIter<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            // the stream's remaining lines are still in flight; reading
+            // them here would block until the request finishes, so mark
+            // the connection unusable instead
+            self.client.desynced = true;
+        }
+    }
+}
+
+impl Iterator for StreamIter<'_> {
+    type Item = Result<StreamEvent>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        let mut line = String::new();
+        match self.client.reader.read_line(&mut line) {
+            Ok(0) => {
+                self.done = true;
+                return Some(Err(Error::Server(
+                    "connection closed mid-stream".into(),
+                )));
+            }
+            Ok(_) => {}
+            Err(e) => {
+                self.done = true;
+                return Some(Err(e.into()));
+            }
+        }
+        let v = match Json::parse(line.trim()) {
+            Ok(v) => v,
+            Err(e) => {
+                self.done = true;
+                return Some(Err(e));
+            }
+        };
+        if v.get("delta").is_some() {
+            let ev = parse_delta(&v);
+            if ev.is_err() {
+                self.done = true;
+            }
+            Some(ev)
+        } else {
+            self.done = true;
+            Some(Ok(StreamEvent::Done(v)))
+        }
+    }
+}
+
+fn parse_delta(v: &Json) -> Result<StreamEvent> {
+    Ok(StreamEvent::Delta {
+        id: v.u("id")? as u64,
+        tokens: v
+            .arr("tokens")?
+            .iter()
+            .map(|t| {
+                t.as_f64().map(|n| n as u32).ok_or_else(|| {
+                    Error::Server("delta token is not a number".into())
+                })
+            })
+            .collect::<Result<Vec<u32>>>()?,
+        text: v.s("delta")?.to_string(),
+    })
 }
 
 #[cfg(test)]
@@ -592,6 +1098,28 @@ mod tests {
     }
 
     #[test]
+    fn parse_timeout_and_stream() {
+        let t = tok();
+        let r = parse_request(
+            r#"{"prompt":[4],"timeout_ms":250.5,"stream":true}"#,
+            &t,
+        )
+        .unwrap();
+        assert_eq!(r.timeout_ms, Some(250.5));
+        assert!(r.stream);
+        // defaults: no timeout, buffered response
+        let r = parse_request(r#"{"prompt":[4]}"#, &t).unwrap();
+        assert_eq!(r.timeout_ms, None);
+        assert!(!r.stream);
+        // malformed values are rejected, never coerced
+        assert!(parse_request(r#"{"prompt":[4],"timeout_ms":0}"#, &t).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"timeout_ms":-5}"#, &t).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"timeout_ms":"soon"}"#, &t).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"stream":1}"#, &t).is_err());
+        assert!(parse_request(r#"{"prompt":[4],"stream":"yes"}"#, &t).is_err());
+    }
+
+    #[test]
     fn parse_text_prompt() {
         let t = tok();
         let r = parse_request(r#"{"text":"a b c"}"#, &t).unwrap();
@@ -635,6 +1163,65 @@ mod tests {
         assert_eq!(v.u("preemptions").unwrap(), 1);
         assert_eq!(v.u("reprefilled").unwrap(), 7);
         assert!((v.f("ttft_ms").unwrap() - 100.0).abs() < 1.0);
+        // abort reasons render under their wire names
+        let mut cancelled = out.clone();
+        cancelled.finish_reason = FinishReason::Cancelled;
+        let v = Json::parse(&render_output(&cancelled, &tok())).unwrap();
+        assert_eq!(v.s("finish_reason").unwrap(), "cancelled");
+        let mut stopped = out;
+        stopped.finish_reason = FinishReason::Eos;
+        let v = Json::parse(&render_output(&stopped, &tok())).unwrap();
+        assert_eq!(v.s("finish_reason").unwrap(), "stop");
+    }
+
+    #[test]
+    fn utf8_holdback_keeps_incomplete_chars_only() {
+        assert_eq!(utf8_holdback(b""), 0);
+        assert_eq!(utf8_holdback(b"abc"), 0);
+        assert_eq!(utf8_holdback(b"ab\xC3"), 1, "2-byte lead alone");
+        assert_eq!(utf8_holdback(b"\xC3\xA9"), 0, "complete 2-byte char");
+        assert_eq!(utf8_holdback(b"\xE2\x82"), 2, "3-byte lead + 1");
+        assert_eq!(utf8_holdback(b"\xF0\x9F\x92"), 3, "4-byte lead + 2");
+        assert_eq!(utf8_holdback(b"\xF0\x9F\x92\xA9"), 0, "complete 4-byte");
+        assert_eq!(utf8_holdback(b"a\x80"), 0, "stray continuation byte");
+        assert_eq!(utf8_holdback(&[0x80; 4]), 0, "continuation run can't complete");
+    }
+
+    #[test]
+    fn chunked_lossy_decode_with_holdback_matches_full_decode() {
+        // the engine loop's accumulator rule, over adversarial chunkings:
+        // multi-byte chars and invalid sequences split at every offset
+        let mut data: Vec<u8> = "aé💩€x".bytes().collect();
+        data.extend([0xF0, 0x28, 0x8C, 0x80, b'z', 0xE2, 0x82]); // invalid + dangling
+        let full = String::from_utf8_lossy(&data).into_owned();
+        for chunk_size in 1..=6 {
+            let mut pending: Vec<u8> = Vec::new();
+            let mut out = String::new();
+            for chunk in data.chunks(chunk_size) {
+                pending.extend_from_slice(chunk);
+                let emit = pending.len() - utf8_holdback(&pending);
+                out.push_str(&String::from_utf8_lossy(&pending[..emit]));
+                pending.drain(..emit);
+            }
+            out.push_str(&String::from_utf8_lossy(&pending)); // final flush
+            assert_eq!(out, full, "chunk size {chunk_size}");
+        }
+    }
+
+    #[test]
+    fn delta_lines_carry_id_text_and_tokens() {
+        let t = tok();
+        let d = StreamDelta { id: 7, tokens: t.encode("a b") };
+        let v = Json::parse(&render_delta(&d, &t)).unwrap();
+        assert_eq!(v.u("id").unwrap(), 7);
+        assert_eq!(v.s("delta").unwrap(), "a b");
+        let toks: Vec<u32> = v
+            .arr("tokens")
+            .unwrap()
+            .iter()
+            .map(|x| x.as_usize().unwrap() as u32)
+            .collect();
+        assert_eq!(toks, d.tokens);
     }
 
     #[test]
@@ -653,6 +1240,10 @@ mod tests {
         m.fused_steps = 5;
         m.fused_fwd_tokens = 60;
         m.fused_capacity_tokens = 80;
+        m.finished_stop = 4;
+        m.finished_length = 2;
+        m.finished_cancelled = 3;
+        m.finished_timeout = 1;
         let kv = KvStats {
             block_size: 16,
             user_pages: 49,
@@ -661,7 +1252,7 @@ mod tests {
             held_pages: 10,
             ..Default::default()
         };
-        let v = Json::parse(&render_stats(&m, &kv)).unwrap();
+        let v = Json::parse(&render_stats(&m, &kv, 5)).unwrap();
         assert_eq!(v.u("preemptions").unwrap(), 3);
         assert_eq!(v.u("reprefilled_tokens").unwrap(), 40);
         assert_eq!(v.u("queue_depth_hwm").unwrap(), 9);
@@ -673,9 +1264,17 @@ mod tests {
         assert_eq!(v.u("fused_steps").unwrap(), 5);
         assert_eq!(v.u("fused_tokens").unwrap(), 60);
         assert!((v.f("fused_occupancy").unwrap() - 0.75).abs() < 1e-9);
+        assert_eq!(v.u("waiters").unwrap(), 5);
+        let fr = v.req("finish_reasons").unwrap();
+        assert_eq!(fr.u("stop").unwrap(), 4);
+        assert_eq!(fr.u("length").unwrap(), 2);
+        assert_eq!(fr.u("cancelled").unwrap(), 3);
+        assert_eq!(fr.u("timeout").unwrap(), 1);
+        assert_eq!(fr.u("error").unwrap(), 0);
         let k = v.req("kv").unwrap();
         assert_eq!(k.u("block_size").unwrap(), 16);
         assert_eq!(k.u("cached_pages").unwrap(), 9);
+        assert_eq!(k.u("available_pages").unwrap(), 39);
         assert_eq!(k.u("cache_hit_tokens").unwrap(), 48);
         assert!((k.f("cache_hit_rate").unwrap() - 0.5).abs() < 1e-9);
         let c2 = v.req("class_e2e").unwrap().req("2").unwrap();

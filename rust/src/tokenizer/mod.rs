@@ -115,10 +115,19 @@ impl Tokenizer {
     /// Decode ids back to text (lossy on invalid utf-8; specials skipped).
     pub fn decode(&self, ids: &[u32]) -> String {
         let mut bytes = Vec::with_capacity(ids.len() * 2);
-        for &id in ids {
-            self.push_bytes(id, &mut bytes);
-        }
+        self.decode_bytes(ids, &mut bytes);
         String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Append the raw bytes of `ids` to `out` (specials skipped). Byte-BPE
+    /// token boundaries need not align with UTF-8 character boundaries, so
+    /// incremental consumers (the server's commit-boundary streaming)
+    /// accumulate bytes and pick their own safe decode points instead of
+    /// lossy-decoding each token run in isolation.
+    pub fn decode_bytes(&self, ids: &[u32], out: &mut Vec<u8>) {
+        for &id in ids {
+            self.push_bytes(id, out);
+        }
     }
 
     fn push_bytes(&self, id: u32, out: &mut Vec<u8>) {

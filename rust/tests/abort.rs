@@ -1,0 +1,278 @@
+//! Abort correctness: `Engine::abort` (cancel / timeout) must reclaim
+//! every resource a request held — in any phase, under every scheduling
+//! policy, prefix cache on and off — without perturbing the committed
+//! streams of other in-flight deterministic requests.
+
+use llm42::engine::{Engine, EngineConfig, FinishReason, Mode, PolicyKind, Request};
+use llm42::prelude::*;
+
+fn artifacts_dir() -> String {
+    let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&dir).expect("artifact generation failed");
+    dir
+}
+
+fn cfg(policy: PolicyKind, cache: bool) -> EngineConfig {
+    EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 4,
+        policy,
+        prefix_cache: cache,
+        ..Default::default()
+    }
+}
+
+fn det_req(seed: u64) -> Request {
+    Request {
+        prompt: (10..26).collect(),
+        max_new_tokens: 40,
+        deterministic: true,
+        temperature: 1.0,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn bg_req(seed: u64) -> Request {
+    Request {
+        prompt: (30..42).collect(),
+        max_new_tokens: 48,
+        deterministic: false,
+        temperature: 1.0,
+        seed,
+        ..Default::default()
+    }
+}
+
+const POLICIES: [PolicyKind; 3] = [
+    PolicyKind::PrefillFirst,
+    PolicyKind::DeadlineAware,
+    PolicyKind::FairShare,
+];
+
+#[test]
+fn abort_mid_decode_and_mid_verify_reclaims_kv_under_every_policy() {
+    // Cancel one deterministic lane while it holds unverified speculative
+    // tokens (mid-verify window) and one non-deterministic lane mid-decode,
+    // under each policy x prefix cache on/off. After drain the pool's
+    // available pages (free + reclaimable cache) must equal the
+    // pre-submission value and the per-reason counters must account for
+    // every finish.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    for policy in POLICIES {
+        for cache in [false, true] {
+            let mut eng = Engine::new(&mut rt, cfg(policy, cache)).unwrap();
+            let base = eng.kv_stats();
+            let det_victim = eng.submit(det_req(7)).unwrap();
+            let bg_victim = eng.submit(bg_req(8)).unwrap();
+            let survivor = eng.submit(det_req(9)).unwrap();
+
+            // step until the deterministic victim is mid-window (has
+            // speculative tokens awaiting verification) and the background
+            // victim has committed fast-path tokens (mid-decode)
+            let mut armed = false;
+            for _ in 0..300 {
+                eng.step().unwrap();
+                let v = eng.view();
+                let det_spec = v
+                    .lanes
+                    .iter()
+                    .find(|l| l.id == det_victim)
+                    .map(|l| l.speculative)
+                    .unwrap_or(0);
+                let bg_committed = v
+                    .lanes
+                    .iter()
+                    .find(|l| l.id == bg_victim)
+                    .map(|l| l.committed)
+                    .unwrap_or(0);
+                if det_spec > 0 && bg_committed > 0 {
+                    armed = true;
+                    break;
+                }
+            }
+            assert!(armed, "{policy:?}/cache={cache}: victims never got in flight");
+
+            assert!(eng.abort(det_victim, FinishReason::Cancelled).unwrap());
+            assert!(eng.abort(bg_victim, FinishReason::Cancelled).unwrap());
+            eng.run_to_completion().unwrap();
+            assert!(eng.idle());
+
+            let outs = eng.take_finished();
+            assert_eq!(outs.len(), 3, "{policy:?}/cache={cache}");
+            for id in [det_victim, bg_victim] {
+                let o = outs.iter().find(|o| o.id == id).unwrap();
+                assert_eq!(
+                    o.finish_reason,
+                    FinishReason::Cancelled,
+                    "{policy:?}/cache={cache}"
+                );
+            }
+            let surv = outs.iter().find(|o| o.id == survivor).unwrap();
+            assert!(!surv.tokens.is_empty());
+            assert!(!surv.finish_reason.is_abort());
+
+            assert_eq!(eng.metrics.finished_cancelled, 2);
+            assert_eq!(eng.metrics.aborted(), 2);
+
+            // resource conservation: every page the requests held is free
+            // or (with the cache on) reclaimable again
+            let end = eng.kv_stats();
+            assert_eq!(
+                end.available_pages(),
+                base.available_pages(),
+                "{policy:?}/cache={cache}: KV pages leaked"
+            );
+            if !cache {
+                // nothing is ever published with the cache off, so the
+                // stronger free-count equality holds too
+                assert_eq!(end.free_pages, base.free_pages);
+                assert_eq!(end.cached_pages, 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn abort_of_queued_requests_and_idempotence() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut eng = Engine::new(&mut rt, cfg(PolicyKind::PrefillFirst, false)).unwrap();
+    let base = eng.kv_stats();
+
+    // overload admission so some requests stay queued
+    let ids: Vec<u64> = (0..8).map(|i| eng.submit(bg_req(100 + i)).unwrap()).collect();
+    eng.step().unwrap();
+    let queued_id = {
+        let v = eng.view();
+        assert!(!v.queue.is_empty(), "workload must overflow admission");
+        v.queue[0].id
+    };
+    assert!(ids.contains(&queued_id));
+
+    // queued abort: leaves the queue without ever touching KV
+    assert!(eng.abort(queued_id, FinishReason::Cancelled).unwrap());
+    // unknown / already-finished ids are idempotent no-ops
+    assert!(!eng.abort(queued_id, FinishReason::Cancelled).unwrap());
+    assert!(!eng.abort(999_999, FinishReason::Cancelled).unwrap());
+    // natural finishes are not abort reasons
+    assert!(eng.abort(ids[0], FinishReason::Eos).is_err());
+    assert!(eng.abort(ids[0], FinishReason::Length).is_err());
+
+    eng.run_to_completion().unwrap();
+    let outs = eng.take_finished();
+    assert_eq!(outs.len(), ids.len());
+    let cancelled = outs.iter().find(|o| o.id == queued_id).unwrap();
+    assert_eq!(cancelled.finish_reason, FinishReason::Cancelled);
+    assert!(cancelled.tokens.is_empty(), "queued victims never decoded");
+    assert_eq!(eng.metrics.finished_cancelled, 1);
+    assert_eq!(eng.kv_stats().free_pages, base.free_pages);
+}
+
+#[test]
+fn cancellation_leaves_other_det_streams_bitwise_unchanged() {
+    // The determinism side of the lifecycle: cancelling co-traffic midway
+    // must not change a single bit of any other deterministic request's
+    // committed stream, under every policy x cache setting.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    for policy in POLICIES {
+        for cache in [false, true] {
+            let mut run = |rt: &mut Runtime, cancel_after: Option<usize>| {
+                let mut eng = Engine::new(rt, cfg(policy, cache)).unwrap();
+                let det_a = eng.submit(det_req(7)).unwrap();
+                let det_b = eng.submit(det_req(21)).unwrap();
+                let victim = eng.submit(bg_req(33)).unwrap();
+                let mut steps = 0usize;
+                while !eng.idle() {
+                    eng.step().unwrap();
+                    steps += 1;
+                    if cancel_after == Some(steps) {
+                        eng.abort(victim, FinishReason::Cancelled).unwrap();
+                    }
+                }
+                let outs = eng.take_finished();
+                let toks = |id: u64| {
+                    outs.iter().find(|o| o.id == id).unwrap().tokens.clone()
+                };
+                (toks(det_a), toks(det_b))
+            };
+            let reference = run(&mut rt, None);
+            let with_cancel = run(&mut rt, Some(12));
+            assert_eq!(
+                reference, with_cancel,
+                "{policy:?}/cache={cache}: cancellation leaked into det streams"
+            );
+        }
+    }
+}
+
+#[test]
+fn timeouts_reap_live_and_queued_requests() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut eng = Engine::new(&mut rt, cfg(PolicyKind::PrefillFirst, false)).unwrap();
+    let base = eng.kv_stats();
+
+    // a request with a loose-enough timeout to get decoding first, a
+    // short-timeout one that must queue behind a full house, and untimed
+    // survivors
+    let survivor = eng.submit(det_req(5)).unwrap();
+    let doomed_live = eng
+        .submit(Request { timeout_ms: Some(1500.0), ..bg_req(61) })
+        .unwrap();
+    let filler_a = eng.submit(bg_req(62)).unwrap();
+    let filler_b = eng.submit(bg_req(63)).unwrap();
+    // seats are full (test preset: 4 user slots): this one stays queued
+    let doomed_queued = eng
+        .submit(Request { timeout_ms: Some(1500.0), ..bg_req(64) })
+        .unwrap();
+
+    // arm: the live victim must actually be decoding before it expires
+    let mut armed = false;
+    for _ in 0..40 {
+        eng.step().unwrap();
+        let v = eng.view();
+        if v.lanes.iter().any(|l| l.id == doomed_live && l.committed > 0) {
+            armed = true;
+            break;
+        }
+    }
+    assert!(armed, "live victim never started decoding");
+    std::thread::sleep(std::time::Duration::from_millis(1600));
+    eng.run_to_completion().unwrap();
+    let outs = eng.take_finished();
+    assert_eq!(outs.len(), 5);
+    for id in [doomed_live, doomed_queued] {
+        let o = outs.iter().find(|o| o.id == id).unwrap();
+        assert_eq!(o.finish_reason, FinishReason::Timeout, "id {id}");
+    }
+    for id in [survivor, filler_a, filler_b] {
+        let o = outs.iter().find(|o| o.id == id).unwrap();
+        assert!(!o.finish_reason.is_abort(), "id {id} should finish naturally");
+    }
+    assert_eq!(eng.metrics.finished_timeout, 2);
+    assert_eq!(eng.kv_stats().free_pages, base.free_pages);
+}
+
+#[test]
+fn engine_default_timeout_applies_to_untimed_requests() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut c = cfg(PolicyKind::PrefillFirst, false);
+    c.request_timeout_ms = 5.0;
+    let mut eng = Engine::new(&mut rt, c).unwrap();
+    let id = eng.submit(bg_req(70)).unwrap();
+    // a per-request timeout overrides the deployment default
+    let roomy = eng
+        .submit(Request { timeout_ms: Some(120_000.0), ..det_req(71) })
+        .unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    eng.run_to_completion().unwrap();
+    let outs = eng.take_finished();
+    assert_eq!(
+        outs.iter().find(|o| o.id == id).unwrap().finish_reason,
+        FinishReason::Timeout
+    );
+    let r = outs.iter().find(|o| o.id == roomy).unwrap();
+    assert!(!r.finish_reason.is_abort());
+    assert!(!r.tokens.is_empty());
+}

@@ -280,6 +280,7 @@ fn every_policy_preserves_deterministic_streams_across_cotraffic() {
         seed,
         priority,
         deadline_ms: deadline,
+        ..Default::default()
     };
     let backgrounds: Vec<Vec<Request>> = vec![
         vec![],
@@ -346,6 +347,7 @@ fn prefix_cache_is_bitwise_invisible_across_all_policies() {
                     seed: base_seed + i,
                     priority: (i % 3) as u8,
                     deadline_ms: if i == 1 { Some(400.0) } else { None },
+                    ..Default::default()
                 }
             })
             .collect()

@@ -56,6 +56,7 @@ fn workload() -> Vec<Request> {
                 seed: 7 + i,
                 priority: (i % 3) as u8,
                 deadline_ms: if i == 1 { Some(400.0) } else { None },
+                ..Default::default()
             }
         })
         .collect()
@@ -236,6 +237,7 @@ fn lane(idx: usize, phase: Phase, can_decode: bool, verify_ready: bool) -> LaneV
         deterministic: true,
         priority: 0,
         deadline_ms: None,
+        timeout_ms: None,
         arrive_time: idx as f64,
         prompt_len: 24,
         prefill_pos: if phase == Phase::Prefilling { 4 } else { 24 },

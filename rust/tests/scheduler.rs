@@ -133,6 +133,7 @@ fn prefill_first_plan_matches_seed_rule_on_random_views() {
                 deterministic: det,
                 priority: rng.below(4) as u8,
                 deadline_ms: None,
+                timeout_ms: None,
                 arrive_time: i as f64,
                 prompt_len: 8,
                 prefill_pos: if prefilling { 0 } else { 8 },
@@ -154,6 +155,7 @@ fn prefill_first_plan_matches_seed_rule_on_random_views() {
                 id: (n_lanes + i) as u64 + 1,
                 priority: rng.below(4) as u8,
                 deadline_ms: None,
+                timeout_ms: None,
                 arrive_time: 50.0 + i as f64,
                 deterministic: rng.next_f64() < 0.5,
                 prompt_len: 8,
@@ -247,6 +249,7 @@ fn preemption_frees_slots_for_high_priority_requests() {
                 seed: 1000 + i as u64,
                 priority: 0,
                 deadline_ms: None,
+                ..Default::default()
             })
             .unwrap();
         bg_ids.push(id);
@@ -267,6 +270,7 @@ fn preemption_frees_slots_for_high_priority_requests() {
             seed: 9,
             priority: 5,
             deadline_ms: Some(500.0),
+            ..Default::default()
         })
         .unwrap();
 
@@ -329,6 +333,7 @@ fn preempted_nondet_sequence_resumes_with_consistent_output() {
             seed: 0,
             priority: 0,
             deadline_ms: None,
+            ..Default::default()
         })
         .unwrap();
     }
@@ -343,6 +348,7 @@ fn preempted_nondet_sequence_resumes_with_consistent_output() {
         seed: 0,
         priority: 7,
         deadline_ms: Some(200.0),
+        ..Default::default()
     })
     .unwrap();
     eng.run_to_completion().unwrap();
@@ -382,6 +388,7 @@ fn fair_share_does_not_starve_low_priority_classes() {
                 seed: 0,
                 priority: 3,
                 deadline_ms: None,
+                ..Default::default()
             })
             .unwrap();
         high_ids.push(id);
@@ -396,6 +403,7 @@ fn fair_share_does_not_starve_low_priority_classes() {
                 seed: 0,
                 priority: 0,
                 deadline_ms: None,
+                ..Default::default()
             })
             .unwrap();
         low_ids.push(id);
@@ -454,6 +462,7 @@ fn prefix_cache_admits_beyond_the_seed_seat_cap() {
             seed: 0,
             priority: 0,
             deadline_ms: None,
+            ..Default::default()
         })
         .unwrap();
     }

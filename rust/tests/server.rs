@@ -1,8 +1,10 @@
 //! Server integration: JSON-lines protocol over a real TCP socket, with
-//! the engine thread serving a live model.
+//! the engine thread serving a live model — request/reply, commit-boundary
+//! streaming, cancellation (explicit and disconnect-triggered), timeouts,
+//! and the poisoned-engine lifecycle.
 
-use llm42::engine::{EngineConfig, Mode};
-use llm42::server::{Client, Server};
+use llm42::engine::{EngineConfig, FaultPlan, Mode};
+use llm42::server::{Client, Server, StreamEvent};
 use llm42::tokenizer::{Tokenizer, FIRST_MERGE};
 use llm42::util::json::Json;
 
@@ -148,4 +150,271 @@ fn serve_roundtrip_mixed_clients() {
     assert!(oversized.get("error").is_some());
 
     server.shutdown();
+}
+
+fn stats_of(c: &mut Client) -> Json {
+    c.request(&Json::parse(r#"{"cmd": "stats"}"#).unwrap()).unwrap()
+}
+
+fn finish_count(stats: &Json, reason: &str) -> usize {
+    stats.req("finish_reasons").unwrap().u(reason).unwrap()
+}
+
+/// Drain a stream iterator into (concatenated tokens, concatenated text,
+/// final object), asserting deltas all carry the same id.
+fn drain_stream(
+    it: llm42::server::StreamIter<'_>,
+) -> (Vec<usize>, String, Json) {
+    let mut tokens = Vec::new();
+    let mut text = String::new();
+    let mut done = None;
+    for ev in it {
+        match ev.unwrap() {
+            StreamEvent::Delta { tokens: t, text: s, .. } => {
+                tokens.extend(t.iter().map(|&x| x as usize));
+                text.push_str(&s);
+            }
+            StreamEvent::Done(v) => {
+                done = Some(v);
+            }
+        }
+    }
+    (tokens, text, done.expect("stream ended without a final object"))
+}
+
+#[test]
+fn streaming_cancellation_timeouts_and_resource_reclaim() {
+    let tok = Tokenizer::default_trained(FIRST_MERGE as usize + 64).unwrap();
+    let cfg = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        // no natural EOS: the cancel/timeout victims below must not be able
+        // to win the race by sampling a stop token early
+        eos_token: 9999,
+        ..Default::default()
+    };
+    let server = Server::start(artifacts_dir(), cfg, tok, "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let mut c = Client::connect(&addr).unwrap();
+
+    // --- streamed deltas concatenate bitwise to the buffered response ---
+    let body = Json::parse(
+        r#"{"prompt": [10,11,12,13,14,15], "max_new_tokens": 12,
+            "deterministic": true, "temperature": 1.0, "seed": 5}"#,
+    )
+    .unwrap();
+    let buffered = c.request(&body).unwrap();
+    assert!(buffered.get("error").is_none(), "{buffered:?}");
+    let buf_tokens: Vec<usize> = buffered
+        .arr("tokens")
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap())
+        .collect();
+    let (stream_tokens, stream_text, fin) = drain_stream(c.stream(&body).unwrap());
+    assert!(fin.get("error").is_none(), "{fin:?}");
+    let fin_tokens: Vec<usize> = fin
+        .arr("tokens")
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap())
+        .collect();
+    // streamed deltas == final object == independent buffered run, bitwise
+    assert_eq!(stream_tokens, fin_tokens);
+    assert_eq!(stream_tokens, buf_tokens, "stream must not change results");
+    assert_eq!(stream_text, fin.s("text").unwrap());
+    assert_eq!(stream_text, buffered.s("text").unwrap());
+    assert!(matches!(fin.s("finish_reason").unwrap(), "stop" | "length"));
+
+    // engine idle: note the pool level every lifecycle must restore
+    let baseline = stats_of(&mut c);
+    let base_avail = baseline.req("kv").unwrap().u("available_pages").unwrap();
+    assert_eq!(baseline.u("waiters").unwrap(), 0);
+
+    // --- explicit cancel from a second connection, mid-stream ---
+    let mut side = Client::connect(&addr).unwrap();
+    // deterministic: tokens only surface through verify windows, so the
+    // 120-token budget takes many steps — the cancel can't lose the race
+    let long = Json::parse(
+        r#"{"prompt": [30,31,32,33,34,35,36,37], "max_new_tokens": 120,
+            "deterministic": true, "temperature": 1.0, "seed": 11,
+            "stream": true}"#,
+    )
+    .unwrap();
+    let mut it = c.stream(&long).unwrap();
+    let first = it.next().expect("stream must produce an event").unwrap();
+    let id = match first {
+        StreamEvent::Delta { id, .. } => id,
+        StreamEvent::Done(v) => panic!("finished before first delta: {v:?}"),
+    };
+    let ack = side
+        .request(&Json::parse(&format!(r#"{{"cmd":"cancel","id":{id}}}"#)).unwrap())
+        .unwrap();
+    assert_eq!(ack.u("id").unwrap() as u64, id);
+    assert!(ack.req("cancelled").unwrap().as_bool().unwrap(), "{ack:?}");
+    let (cancelled_tokens, _, fin) = drain_stream(it);
+    assert_eq!(fin.s("finish_reason").unwrap(), "cancelled");
+    let fin_tokens: Vec<usize> = fin
+        .arr("tokens")
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap())
+        .collect();
+    assert_eq!(
+        cancelled_tokens, fin_tokens,
+        "cancelled stream still matches its (partial) output"
+    );
+    assert!(fin_tokens.len() < 120, "cancel must cut generation short");
+
+    // cancel of an unknown / finished id is an acknowledged no-op
+    let ack = side
+        .request(&Json::parse(&format!(r#"{{"cmd":"cancel","id":{id}}}"#)).unwrap())
+        .unwrap();
+    assert!(!ack.req("cancelled").unwrap().as_bool().unwrap());
+    let bad = side
+        .request(&Json::parse(r#"{"cmd":"cancel"}"#).unwrap())
+        .unwrap();
+    assert!(bad.get("error").is_some(), "cancel without id: {bad:?}");
+
+    // --- per-request timeout aborts server-side ---
+    let timed = c
+        .request(
+            &Json::parse(
+                r#"{"prompt": [40,41,42,43], "max_new_tokens": 120,
+                    "deterministic": true, "temperature": 1.0, "seed": 13,
+                    "timeout_ms": 1}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+    assert_eq!(timed.s("finish_reason").unwrap(), "timeout", "{timed:?}");
+
+    // --- disconnect mid-stream cancels the sequence (write-failure path) ---
+    {
+        let mut gone = Client::connect(&addr).unwrap();
+        let mut it = gone.stream(&long).unwrap();
+        // read a couple of deltas to be sure the request is live, then
+        // drop the connection without reading the rest
+        for _ in 0..2 {
+            let ev = it.next().expect("delta").unwrap();
+            assert!(matches!(ev, StreamEvent::Delta { .. }));
+        }
+    } // gone (and its socket) dropped here
+
+    // dropping a stream iterator mid-flight poisons that client (the
+    // leftover delta lines would otherwise be read as later replies);
+    // dropping the client then closes the socket and cancels server-side
+    {
+        let mut d = Client::connect(&addr).unwrap();
+        let mut it = d.stream(&long).unwrap();
+        let _ = it.next().expect("first delta").unwrap();
+        drop(it);
+        assert!(
+            d.request(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).is_err(),
+            "desynced client must refuse further requests"
+        );
+    }
+
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    loop {
+        let s = stats_of(&mut side);
+        // the explicit cancel + the two disconnect-triggered ones land
+        // asynchronously; at least the first two must show up
+        if finish_count(&s, "cancelled") >= 2 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "disconnect never cancelled the sequence: {s:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+
+    // --- lifecycle accounting: counters, waiters, and the block pool ---
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    let stats = loop {
+        let s = stats_of(&mut side);
+        if s.u("waiters").unwrap() == 0
+            && s.req("kv").unwrap().u("available_pages").unwrap() == base_avail
+        {
+            break s;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "resources never returned to baseline: {s:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    };
+    assert!(finish_count(&stats, "cancelled") >= 2);
+    assert!(finish_count(&stats, "timeout") >= 1);
+    assert!(finish_count(&stats, "stop") + finish_count(&stats, "length") >= 2);
+
+    server.shutdown();
+}
+
+#[test]
+fn engine_failure_poisons_the_server_instead_of_hanging_clients() {
+    let tok = Tokenizer::default_trained(FIRST_MERGE as usize + 64).unwrap();
+    // deterministic fault injection: the engine fails on its 3rd step
+    let cfg = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        fault: FaultPlan::FailStepAt { at_step: 3 },
+        ..Default::default()
+    };
+    let server = Server::start(artifacts_dir(), cfg, tok, "127.0.0.1:0").unwrap();
+    let mut c = Client::connect(&server.addr.to_string()).unwrap();
+
+    // the in-flight request is failed with an error object, not a hang
+    let resp = c
+        .request(
+            &Json::parse(r#"{"prompt": [10,11,12], "max_new_tokens": 16}"#).unwrap(),
+        )
+        .unwrap();
+    assert!(
+        resp.s("error").unwrap().contains("engine failed"),
+        "waiter must be failed: {resp:?}"
+    );
+    assert!(server.poisoned());
+
+    // new submissions are rejected immediately with the poisoned reason
+    let resp = c
+        .request(&Json::parse(r#"{"prompt": [10], "max_new_tokens": 2}"#).unwrap())
+        .unwrap();
+    assert!(resp.s("error").unwrap().contains("poisoned"), "{resp:?}");
+    let stats = c.request(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    assert!(stats.get("error").is_some(), "commands error too: {stats:?}");
+
+    // shutdown still joins cleanly (Drop would too)
+    server.shutdown();
+}
+
+#[test]
+fn dropping_the_server_joins_its_threads() {
+    let tok = Tokenizer::default_trained(FIRST_MERGE as usize + 64).unwrap();
+    let cfg = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        ..Default::default()
+    };
+    let addr;
+    {
+        let server =
+            Server::start(artifacts_dir(), cfg, tok, "127.0.0.1:0").unwrap();
+        addr = server.addr.to_string();
+        // serve one request so the engine thread demonstrably owns the
+        // runtime when the server is dropped (not shut down)
+        let mut c = Client::connect(&addr).unwrap();
+        let resp = c
+            .request(
+                &Json::parse(r#"{"prompt": [10,11], "max_new_tokens": 4}"#).unwrap(),
+            )
+            .unwrap();
+        assert!(resp.get("error").is_none(), "{resp:?}");
+    } // drop: must join the accept + engine threads, releasing the port
+    std::net::TcpListener::bind(&addr)
+        .expect("port must be released after Drop joined the accept thread");
 }

@@ -1,0 +1,204 @@
+//! Commit-boundary streaming: the engine's `StreamDelta` events carry
+//! only *committed* tokens, so streamed output is never retracted — even
+//! under forced verifier mismatches — and a request's deltas concatenate
+//! bitwise to its final output.
+
+use llm42::engine::{
+    Engine, EngineConfig, FaultPlan, FinishReason, Mode, PolicyKind, Request,
+};
+use llm42::prelude::*;
+use std::collections::HashMap;
+
+fn artifacts_dir() -> String {
+    let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&dir).expect("artifact generation failed");
+    dir
+}
+
+fn cfg(policy: PolicyKind, fault: FaultPlan) -> EngineConfig {
+    EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 4,
+        policy,
+        fault,
+        ..Default::default()
+    }
+}
+
+/// Drive the engine to completion, collecting each request's streamed
+/// tokens and asserting the never-retract invariant as deltas arrive.
+fn run_streams(
+    eng: &mut Engine,
+) -> (HashMap<u64, Vec<u32>>, HashMap<u64, Vec<u32>>) {
+    let mut streamed: HashMap<u64, Vec<u32>> = HashMap::new();
+    while !eng.idle() {
+        eng.step().unwrap();
+        for d in eng.take_stream_deltas() {
+            assert!(!d.tokens.is_empty(), "empty deltas are never emitted");
+            streamed.entry(d.id).or_default().extend(d.tokens);
+        }
+    }
+    let finals: HashMap<u64, Vec<u32>> = eng
+        .take_finished()
+        .into_iter()
+        .map(|o| (o.id, o.tokens))
+        .collect();
+    (streamed, finals)
+}
+
+#[test]
+fn deltas_concat_to_final_tokens_even_under_forced_rollbacks() {
+    // The pinned acceptance criterion: concatenated stream deltas are
+    // bitwise the non-streaming output, including runs where every verify
+    // pass reports a mismatch (maximum rollback pressure) — rollbacks
+    // discard speculative tokens, never streamed (committed) ones.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    for policy in [
+        PolicyKind::PrefillFirst,
+        PolicyKind::DeadlineAware,
+        PolicyKind::FairShare,
+    ] {
+        for fault in [
+            FaultPlan::None,
+            FaultPlan::EveryNthLane { every: 1, at_index: 0 },
+        ] {
+            let mut eng = Engine::new(&mut rt, cfg(policy, fault)).unwrap();
+            let det = eng
+                .submit(Request {
+                    prompt: (10..26).collect(),
+                    max_new_tokens: 40,
+                    deterministic: true,
+                    temperature: 1.0,
+                    seed: 7,
+                    stream: true,
+                    ..Default::default()
+                })
+                .unwrap();
+            let bg = eng
+                .submit(Request {
+                    prompt: (30..42).collect(),
+                    max_new_tokens: 24,
+                    deterministic: false,
+                    temperature: 1.0,
+                    seed: 8,
+                    stream: true,
+                    ..Default::default()
+                })
+                .unwrap();
+            let (streamed, finals) = run_streams(&mut eng);
+            for id in [det, bg] {
+                assert_eq!(
+                    streamed.get(&id),
+                    finals.get(&id),
+                    "{policy:?}/{fault:?}: stream != final for request {id}"
+                );
+            }
+            if fault != FaultPlan::None {
+                assert!(eng.metrics.rollbacks > 0, "fault must force rollbacks");
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_prefix_is_stable_across_rollbacks() {
+    // Stronger than concat equality: after every single step, what has
+    // been streamed so far is a prefix of the final stream — no delta is
+    // ever reordered, replaced, or retracted.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    fn submit(eng: &mut Engine) -> u64 {
+        eng.submit(Request {
+            prompt: (10..26).collect(),
+            max_new_tokens: 40,
+            deterministic: true,
+            temperature: 1.0,
+            seed: 7,
+            stream: true,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    // reference: the final stream
+    let fault = FaultPlan::EveryNthLane { every: 1, at_index: 0 };
+    let mut eng = Engine::new(&mut rt, cfg(PolicyKind::PrefillFirst, fault)).unwrap();
+    let id = submit(&mut eng);
+    let (_, finals) = run_streams(&mut eng);
+    let full = finals[&id].clone();
+
+    // replay, checking the prefix property step by step
+    let mut eng = Engine::new(&mut rt, cfg(PolicyKind::PrefillFirst, fault)).unwrap();
+    let id = submit(&mut eng);
+    let mut so_far: Vec<u32> = Vec::new();
+    while !eng.idle() {
+        eng.step().unwrap();
+        for d in eng.take_stream_deltas() {
+            assert_eq!(d.id, id);
+            so_far.extend(d.tokens);
+            assert!(
+                full.starts_with(&so_far),
+                "streamed tokens diverged from the final stream"
+            );
+        }
+    }
+    assert_eq!(so_far, full, "stream must end exactly at the final output");
+}
+
+#[test]
+fn non_streaming_requests_emit_no_deltas() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut eng =
+        Engine::new(&mut rt, cfg(PolicyKind::PrefillFirst, FaultPlan::None)).unwrap();
+    eng.submit(Request {
+        prompt: (10..26).collect(),
+        max_new_tokens: 16,
+        deterministic: true,
+        temperature: 1.0,
+        seed: 3,
+        ..Default::default()
+    })
+    .unwrap();
+    let (streamed, finals) = run_streams(&mut eng);
+    assert!(streamed.is_empty(), "stream=false must not buffer deltas");
+    assert_eq!(finals.len(), 1);
+}
+
+#[test]
+fn aborted_streams_flush_exactly_the_committed_prefix() {
+    // Cancel a streaming request mid-flight: the deltas drained before and
+    // at the abort concatenate to exactly the cancelled output's tokens.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut eng =
+        Engine::new(&mut rt, cfg(PolicyKind::PrefillFirst, FaultPlan::None)).unwrap();
+    let id = eng
+        .submit(Request {
+            prompt: (30..42).collect(),
+            max_new_tokens: 100,
+            deterministic: false,
+            temperature: 1.0,
+            seed: 5,
+            stream: true,
+            ..Default::default()
+        })
+        .unwrap();
+    let mut streamed: Vec<u32> = Vec::new();
+    for _ in 0..25 {
+        eng.step().unwrap();
+        for d in eng.take_stream_deltas() {
+            streamed.extend(d.tokens);
+        }
+    }
+    assert!(!streamed.is_empty(), "victim must have streamed before abort");
+    assert!(eng.abort(id, FinishReason::Cancelled).unwrap());
+    // the final flush rides the abort, before the output is taken
+    for d in eng.take_stream_deltas() {
+        streamed.extend(d.tokens);
+    }
+    let outs = eng.take_finished();
+    let out = outs.iter().find(|o| o.id == id).unwrap();
+    assert_eq!(out.finish_reason, FinishReason::Cancelled);
+    assert_eq!(streamed, out.tokens, "cancelled stream must match its output");
+    assert!(eng.idle());
+}
