@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: artifacts artifacts-test build test test-server fmt-check lint bench-check bench-json
+.PHONY: artifacts artifacts-test build test test-server fmt-check lint doc bench-check bench-json
 
 artifacts:
 	cd rust && $(CARGO) run --release -- gen-artifacts --out artifacts --preset tiny
@@ -28,6 +28,10 @@ fmt-check:
 
 lint:
 	cd rust && $(CARGO) clippy --all-targets -- -D warnings
+
+# API docs; broken intra-doc links are errors (mirrors the CI docs job)
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 
 bench-check:
 	cd rust && $(CARGO) bench --no-run

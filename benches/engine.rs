@@ -2,8 +2,10 @@
 //! verify pass, prefill chunk, logits extraction, the pure-rust hot
 //! pieces (sampler, batch bookkeeping) that must never dominate L3, a
 //! mixed-traffic scheduling-policy comparison (p99 deterministic e2e under
-//! a saturating low-priority background load), and a step-composer
-//! comparison (fusion off vs on at equal max_batch).
+//! a saturating low-priority background load), a step-composer comparison
+//! (fusion off vs on at equal max_batch), and a churn soak (steady-state
+//! tok/s early vs late in a 10k-request closed loop — flat numbers prove
+//! per-step cost is O(live), not O(requests served)).
 //!
 //!     cargo bench --bench engine
 //!
@@ -144,7 +146,104 @@ fn main() {
     if let Some(j) = streaming_ttft(&mut rt) {
         sections.push(("streaming", j));
     }
+    if let Some(j) = churn(&mut rt) {
+        sections.push(("churn", j));
+    }
     write_bench_json(sections);
+}
+
+/// Request-churn soak: a closed loop of short requests, an order of
+/// magnitude more than the engine ever holds live. Reports steady-state
+/// throughput over the early window (first 10% of requests) vs the late
+/// window (the rest) plus the sequence-store occupancy gauges. The
+/// pre-store engine scanned a tombstone per finished request every step,
+/// so its late-window tok/s degraded with cumulative traffic; with the
+/// slab store the two columns must stay flat and `store_capacity` must
+/// track the live high-water mark, not the request count.
+fn churn(rt: &mut Runtime) -> Option<Json> {
+    let total = if reduced() { 1_000usize } else { 10_000 };
+    let early_at = total / 10; // "at request 1k" in the full run
+    let wave = 8usize;
+    let cfg = EngineConfig {
+        mode: Mode::NonDeterministic,
+        eos_token: u32::MAX, // full budgets: identical request shapes
+        ..Default::default()
+    };
+    let mut eng = match Engine::new(rt, cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("churn bench skipped: {e}");
+            return None;
+        }
+    };
+    let _ = eng.warmup();
+    let t0 = llm42::util::now_secs();
+    let mut submitted = 0usize;
+    let mut done = 0usize;
+    let mut early: Option<(f64, u64)> = None; // (wall_s, committed) at early_at
+    while done < total {
+        let n = wave.min(total - submitted);
+        for i in 0..n {
+            let t = 3 + ((submitted + i) as u32 % 300);
+            let ok = eng.submit(Request {
+                prompt: vec![t; 8],
+                max_new_tokens: 2,
+                deterministic: false,
+                temperature: 0.0,
+                seed: 0,
+                ..Default::default()
+            });
+            if let Err(e) = ok {
+                eprintln!("churn bench aborted: {e}");
+                return None;
+            }
+        }
+        submitted += n;
+        if let Err(e) = eng.run_to_completion() {
+            eprintln!("churn bench aborted: {e}");
+            return None;
+        }
+        done += eng.take_finished().len();
+        if early.is_none() && done >= early_at {
+            early = Some((
+                llm42::util::now_secs() - t0,
+                eng.metrics.committed_tokens,
+            ));
+        }
+    }
+    let wall = llm42::util::now_secs() - t0;
+    let (early_wall, early_tok) = early.unwrap_or((wall, eng.metrics.committed_tokens));
+    let late_tok = eng.metrics.committed_tokens - early_tok;
+    let tok_s_early = early_tok as f64 / early_wall.max(1e-9);
+    let tok_s_late = late_tok as f64 / (wall - early_wall).max(1e-9);
+    let mut tab = Table::new(&[
+        "requests",
+        "tok_s_early",
+        "tok_s_late",
+        "store_capacity",
+        "live_hwm",
+        "steps",
+    ]);
+    tab.row(vec![
+        format!("{total}"),
+        format!("{tok_s_early:.0}"),
+        format!("{tok_s_late:.0}"),
+        format!("{}", eng.metrics.store_capacity),
+        format!("{}", eng.metrics.live_seqs_hwm),
+        format!("{}", eng.metrics.steps),
+    ]);
+    println!("== request churn: steady-state throughput early vs late ==");
+    println!("{}", tab.render());
+    Some(Json::obj(vec![
+        ("requests", Json::num(total as f64)),
+        ("early_at_requests", Json::num(early_at as f64)),
+        ("tok_s_early", Json::num(tok_s_early)),
+        ("tok_s_late", Json::num(tok_s_late)),
+        ("store_capacity", Json::num(eng.metrics.store_capacity as f64)),
+        ("live_seqs_hwm", Json::num(eng.metrics.live_seqs_hwm as f64)),
+        ("steps", Json::num(eng.metrics.steps as f64)),
+        ("wall_s", Json::num(wall)),
+    ]))
 }
 
 /// Streamed time-to-first-token: the latency until a request's first

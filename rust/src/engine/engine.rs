@@ -11,6 +11,15 @@
 //!      the same step; forward-pass actions (`Prefill`, `Decode`, `Verify`,
 //!      `Run`) and `Idle` end the step with the matching [`StepKind`].
 //!
+//! Sequences live in a slab-backed [`SequenceStore`]
+//! ([`crate::engine::store`]): stable generational [`SeqId`] handles
+//! address them (a stale handle from a buggy policy fails loudly instead
+//! of hitting a recycled slot), finished requests leave the store
+//! entirely, and every per-step scan — view building, stall bumping,
+//! timeout reaping, the stream sweep — iterates phase-indexed live lanes.
+//! Per-step cost and store memory are therefore O(live sequences), never
+//! O(total requests served) (`tests/soak.rs` pins this under churn).
+//!
 //! # Step composer (`max_step_tokens > 0`)
 //!
 //! With the token budget disabled (the default), the engine runs at most
@@ -66,7 +75,6 @@
 //! replay, which is a pure function of the request — every policy yields
 //! the same streams (`tests/determinism.rs` asserts this per policy).
 
-use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::engine::kv::{blocks_for, KvManager, KvStats};
@@ -77,6 +85,7 @@ use crate::engine::scheduler::{
     SchedulerPolicy,
 };
 use crate::engine::sequence::{FinishReason, Phase, Request, RequestOutput, Sequence};
+use crate::engine::store::{SeqId, SequenceStore};
 use crate::engine::verify;
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
@@ -230,8 +239,9 @@ pub struct Engine<'rt> {
     pub cfg: EngineConfig,
     policy: Box<dyn SchedulerPolicy>,
     kv: KvManager,
-    seqs: Vec<Sequence>,
-    queue: VecDeque<usize>,
+    /// slab-backed sequence table: generational handles, phase-indexed
+    /// live lanes, O(live) scans (finished requests leave it entirely)
+    store: SequenceStore,
     finished: Vec<RequestOutput>,
     /// pending commit-boundary stream events (streaming requests only)
     deltas: Vec<StreamDelta>,
@@ -310,8 +320,7 @@ impl<'rt> Engine<'rt> {
             cfg,
             policy,
             kv,
-            seqs: Vec::new(),
-            queue: VecDeque::new(),
+            store: SequenceStore::new(),
             finished: Vec::new(),
             deltas: Vec::new(),
             metrics: EngineMetrics::default(),
@@ -469,33 +478,27 @@ impl<'rt> Engine<'rt> {
         let id = self.next_id;
         self.next_id += 1;
         let seq = Sequence::new(id, req, now_secs());
-        self.seqs.push(seq);
-        self.queue.push_back(self.seqs.len() - 1);
-        self.metrics.note_queue_depth(self.queue.len());
+        self.store.insert(seq);
+        self.metrics.note_queue_depth(self.store.queued_len());
+        self.sync_store_metrics();
         Ok(id)
     }
 
     /// True when nothing is queued, active, or pending verification.
     pub fn idle(&self) -> bool {
-        self.queue.is_empty()
-            && self
-                .seqs
-                .iter()
-                .all(|s| s.phase == Phase::Finished)
+        self.store.live() == 0
     }
 
     pub fn take_finished(&mut self) -> Vec<RequestOutput> {
         // metrics mirror KV counters at step start; collecting results is
         // the natural read point, so bring them current here too
         self.sync_kv_metrics();
+        self.sync_store_metrics();
         std::mem::take(&mut self.finished)
     }
 
     pub fn active_count(&self) -> usize {
-        self.seqs
-            .iter()
-            .filter(|s| matches!(s.phase, Phase::Prefilling | Phase::Decoding))
-            .count()
+        self.store.active_count()
     }
 
     /// Drive everything currently submitted to completion.
@@ -532,7 +535,7 @@ impl<'rt> Engine<'rt> {
 
     /// Snapshot the scheduling-relevant engine state. Policies plan over
     /// this; tests use it to check policy decisions against a live engine.
-    /// The step loop goes through [`Engine::build_view`] instead, which
+    /// The step loop goes through the private `build_view` instead, which
     /// rebuilds into engine-owned scratch without allocating.
     pub fn view(&self) -> SchedView {
         let mut vs = ViewScratch::default();
@@ -541,18 +544,17 @@ impl<'rt> Engine<'rt> {
     }
 
     /// Rebuild the scheduling snapshot into reused buffers (the hot-path
-    /// twin of [`Engine::view`]; called once per planning round).
+    /// twin of [`Engine::view`]; called once per planning round). Active
+    /// lanes are listed in ascending request-id order — submission order,
+    /// the ordering every policy's tiebreaks key on.
     fn build_view(&self, vs: &mut ViewScratch) {
         let window = self.cfg.verify_window;
         let dvr = self.dvr();
         let view = &mut vs.view;
         view.lanes.clear();
-        for (i, s) in self.seqs.iter().enumerate() {
-            if !matches!(s.phase, Phase::Prefilling | Phase::Decoding) {
-                continue;
-            }
+        for (sid, s) in self.store.iter_active() {
             view.lanes.push(LaneView {
-                idx: i,
+                sid,
                 id: s.id,
                 phase: s.phase,
                 deterministic: s.req.deterministic,
@@ -577,14 +579,13 @@ impl<'rt> Engine<'rt> {
         // need_blocks and the capacity count
         let mut admittable = 0usize;
         view.queue.clear();
-        for &i in &self.queue {
-            let s = &self.seqs[i];
+        for (sid, s) in self.store.iter_queued() {
             let (need_blocks, ok) = self.queued_admission(s, &mut vs.toks);
             if ok {
                 admittable += 1;
             }
             view.queue.push(QueuedView {
-                idx: i,
+                sid,
                 id: s.id,
                 priority: s.req.priority,
                 deadline_ms: s.req.deadline_ms,
@@ -629,6 +630,7 @@ impl<'rt> Engine<'rt> {
         }
         self.reap_timeouts()?;
         self.sync_kv_metrics();
+        self.sync_store_metrics();
         // the planning view lives in engine-owned scratch; take it out for
         // the duration of the round loop so `&mut self` stays available
         let mut vs = std::mem::take(&mut self.view_scratch);
@@ -647,15 +649,12 @@ impl<'rt> Engine<'rt> {
     /// submit, so it never enters the scheduler view — a lifecycle-hygiene
     /// default must not masquerade as a deadline and collapse
     /// deadline-aware ordering into FIFO. Allocation-free when nothing
-    /// carries a timeout.
+    /// carries a timeout; scans live lanes only.
     fn reap_timeouts(&mut self) -> Result<()> {
         let default = self.cfg.request_timeout_ms;
         let mut expired: Vec<u64> = Vec::new();
         let mut now = None;
-        for s in &self.seqs {
-            if s.phase == Phase::Finished {
-                continue;
-            }
+        for (_, s) in self.store.iter_live() {
             let ms = match s.req.timeout_ms {
                 Some(ms) => ms,
                 None if default > 0.0 => default,
@@ -666,6 +665,10 @@ impl<'rt> Engine<'rt> {
                 expired.push(s.id);
             }
         }
+        // live lanes iterate per-lane, not in one global order; reap in
+        // submission order so abort side effects (deltas, outputs) land
+        // exactly as the pre-store engine's table scan produced them
+        expired.sort_unstable();
         for id in expired {
             self.abort(id, FinishReason::Timeout)?;
         }
@@ -674,15 +677,17 @@ impl<'rt> Engine<'rt> {
 
     /// Queue a commit-boundary delta for every streaming sequence that
     /// committed tokens since its last emission
-    /// ([`Sequence::take_unstreamed`] is the shared cursor rule). Retiring
-    /// sequences flush inside [`Engine::finish_output`] instead — the
-    /// tombstone has no request state left by the time this sweep runs.
+    /// ([`Sequence::take_unstreamed`] is the shared cursor rule); scans
+    /// the store's streaming lane only. Retiring sequences flush inside
+    /// [`Engine::finish_output`] instead — they have left the store by
+    /// the time this sweep runs.
     fn sweep_stream_deltas(&mut self) {
-        for s in &mut self.seqs {
+        let deltas = &mut self.deltas;
+        self.store.for_each_streaming_mut(|s| {
             if let Some(tokens) = s.take_unstreamed() {
-                self.deltas.push(StreamDelta { id: s.id, tokens });
+                deltas.push(StreamDelta { id: s.id, tokens });
             }
-        }
+        });
     }
 
     /// Drain pending commit-boundary stream events (streaming requests
@@ -699,42 +704,35 @@ impl<'rt> Engine<'rt> {
     /// finishes immediately with `reason` (one of the abort reasons;
     /// committed tokens produced so far are returned in the output).
     /// Returns `Ok(false)` when the id is unknown or already finished —
-    /// cancellation is idempotent and race-free against natural completion.
+    /// cancellation is idempotent and race-free against natural completion
+    /// (request ids are never reused, and the store's id index only holds
+    /// live sequences). O(1) lookup: no table scan.
     pub fn abort(&mut self, id: u64, reason: FinishReason) -> Result<bool> {
         if !reason.is_abort() {
             return Err(Error::Engine(format!(
                 "abort with non-abort finish reason {reason:?}"
             )));
         }
-        let idx = match self
-            .seqs
-            .iter()
-            .position(|s| s.id == id && s.phase != Phase::Finished)
-        {
-            Some(idx) => idx,
+        let sid = match self.store.find(id) {
+            Some(sid) => sid,
             None => return Ok(false),
         };
-        match self.seqs[idx].phase {
-            Phase::Queued => {
-                let pos =
-                    self.queue.iter().position(|&q| q == idx).ok_or_else(|| {
-                        Error::Engine(format!(
-                            "abort: queued sequence {id} missing from the queue"
-                        ))
-                    })?;
-                self.queue.remove(pos);
-            }
+        match self.store[sid].phase {
+            // the store's remove() takes the queued entry out of the FIFO
+            Phase::Queued => {}
             Phase::Prefilling | Phase::Decoding => {
                 // the block table goes back to the pool; published prefix
                 // pages survive as reclaimable cache entries
                 self.kv.release(id)?;
             }
-            Phase::Finished => unreachable!("filtered above"),
+            // finishing sequences leave the store within the same step, so
+            // a live handle can never point at one; fail soft regardless
+            Phase::Finished => return Ok(false),
         }
-        let seq = &mut self.seqs[idx];
+        let seq = &mut self.store[sid];
         seq.speculative.clear();
         seq.finish(reason);
-        self.finish_output(idx);
+        self.finish_output(sid);
         Ok(true)
     }
 
@@ -743,13 +741,14 @@ impl<'rt> Engine<'rt> {
         // policy-bug backstop. A legitimate burst can preempt once per
         // active lane and admit once per queued request, so the bound
         // scales with the live population rather than being a constant.
-        let max_rounds = 4 * (self.kv.active() + self.queue.len()).max(2) + 8;
+        let max_rounds =
+            4 * (self.kv.active() + self.store.queued_len()).max(2) + 8;
         // Victims evicted in this step are hidden from admissions later in
         // the same step: the freed slot must go to the beneficiary that
         // justified the eviction, not bounce straight back to the victim
         // (which would re-prefill for nothing). They become admittable
         // again on the next step.
-        let mut evicted_this_step: Vec<usize> = Vec::new();
+        let mut evicted_this_step: Vec<SeqId> = Vec::new();
         for _round in 0..max_rounds {
             self.build_view(vs);
             let action = self.policy.plan(&vs.view);
@@ -762,9 +761,9 @@ impl<'rt> Engine<'rt> {
                     evicted_this_step.push(victim);
                 }
                 Action::Prefill { seq } => {
-                    if self.seqs.get(seq).map(|s| s.phase) != Some(Phase::Prefilling) {
+                    if self.store.get(seq).map(|s| s.phase) != Some(Phase::Prefilling) {
                         return Err(Error::Engine(format!(
-                            "policy bug: Prefill on non-prefilling sequence {seq}"
+                            "policy bug: Prefill on stale or non-prefilling sequence {seq}"
                         )));
                     }
                     let t0 = Instant::now();
@@ -839,7 +838,9 @@ impl<'rt> Engine<'rt> {
 
     /// Validate a composite plan against live engine state (the executor's
     /// authoritative twin of [`BatchPlan::validate`], which property tests
-    /// exercise over pure snapshots).
+    /// exercise over pure snapshots). Stale generational handles — a plan
+    /// built against a previous round's view, or a policy resurrecting a
+    /// finished lane — fail the same lookups as outright-unknown ones.
     fn check_plan(&self, plan: &BatchPlan) -> Result<()> {
         if self.step_budget == 0 {
             return Err(Error::Engine(
@@ -851,10 +852,10 @@ impl<'rt> Engine<'rt> {
         if plan.is_empty() {
             return Err(Error::Engine("policy bug: empty BatchPlan".into()));
         }
-        let all: Vec<usize> = plan
+        let all: Vec<SeqId> = plan
             .prefill
             .iter()
-            .map(|&(i, _)| i)
+            .map(|&(s, _)| s)
             .chain(plan.decode.iter().copied())
             .chain(plan.verify.iter().copied())
             .collect();
@@ -866,21 +867,21 @@ impl<'rt> Engine<'rt> {
                 self.step_budget
             )));
         }
-        for &(idx, chunk) in &plan.prefill {
+        for &(sid, chunk) in &plan.prefill {
             let s = self
-                .seqs
-                .get(idx)
+                .store
+                .get(sid)
                 .filter(|s| s.phase == Phase::Prefilling)
                 .ok_or_else(|| {
                     Error::Engine(format!(
-                        "policy bug: prefill of non-prefilling sequence {idx}"
+                        "policy bug: prefill of stale or non-prefilling sequence {sid}"
                     ))
                 })?;
             let remaining = s.prefill_total() - s.prefill_pos;
             if chunk == 0 || chunk > remaining {
                 return Err(Error::Engine(format!(
                     "policy bug: prefill chunk {chunk} out of range for sequence \
-                     {idx} ({remaining} tokens remaining)"
+                     {sid} ({remaining} tokens remaining)"
                 )));
             }
         }
@@ -893,13 +894,53 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
+    /// Try to admit one queued sequence: prefix-cache lookup, worst-case
+    /// block reservation, cached-page adoption, and the queued->prefilling
+    /// transition. `Ok(false)` when the reservation does not fit right now
+    /// (the caller tries the next request).
+    fn try_admit_one(&mut self, sid: SeqId) -> Result<bool> {
+        let (id, toks, worst, cow) = {
+            let s = &self.store[sid];
+            (
+                s.id,
+                s.content_tokens(s.prefill_total()),
+                self.worst_positions(s),
+                self.cow_budget(s.req.deterministic, s.req.max_new_tokens),
+            )
+        };
+        let hit = match self.kv.try_admit(id, &toks, worst, cow) {
+            Some(hit) => hit,
+            None => return Ok(false),
+        };
+        if !self.store.begin_prefill(sid) {
+            return Err(Error::Engine(format!(
+                "admit of non-queued sequence {sid}"
+            )));
+        }
+        let seq = &mut self.store[sid];
+        debug_assert!(hit + 1 <= seq.prefill_total().max(1));
+        seq.prefill_pos = hit;
+        seq.metrics.prefill_start = now_secs();
+        if hit > 0 {
+            // engine-wide hit counters mirror the KvManager's in
+            // sync_kv_metrics; only per-sequence accounting lives here
+            seq.metrics.cache_hit_tokens += hit as u64;
+            // replay debt repaid by the cache: re-prefill work a
+            // preempted victim would otherwise redo
+            let saved = seq.replay_debt.min(hit);
+            seq.replay_debt -= saved;
+            self.metrics.reprefill_saved_tokens += saved as u64;
+        }
+        Ok(true)
+    }
+
     fn apply_admit(
         &mut self,
         n: usize,
         view: &SchedView,
-        deferred: &[usize],
+        deferred: &[SeqId],
     ) -> Result<()> {
-        if n == 0 || self.queue.is_empty() {
+        if n == 0 || self.store.queued_len() == 0 {
             return Err(Error::Engine(
                 "policy bug: Admit with nothing admittable".into(),
             ));
@@ -911,56 +952,29 @@ impl<'rt> Engine<'rt> {
         // actually admitted. If only victims are queued, fall back to the
         // full view so admission still makes progress.
         let order = if deferred.is_empty()
-            || view.queue.iter().all(|q| deferred.contains(&q.idx))
+            || view.queue.iter().all(|q| deferred.contains(&q.sid))
         {
             self.policy.admit_order(view)
         } else {
             let mut filtered = view.clone();
-            filtered.queue.retain(|q| !deferred.contains(&q.idx));
+            filtered.queue.retain(|q| !deferred.contains(&q.sid));
             self.policy.admit_order(&filtered)
         };
         let mut admitted = 0usize;
-        for idx in order {
+        for sid in order {
             if admitted >= n {
                 break;
             }
-            let pos = self.queue.iter().position(|&q| q == idx).ok_or_else(|| {
-                Error::Engine(format!(
-                    "policy bug: admit_order returned non-queued index {idx}"
-                ))
-            })?;
+            if !self.store.is_queued(sid) {
+                return Err(Error::Engine(format!(
+                    "policy bug: admit_order returned stale or non-queued handle {sid}"
+                )));
+            }
             // reserve blocks and adopt cached prefix pages; a request that
             // does not fit right now is skipped, not admitted partially
-            let (id, toks, worst, cow) = {
-                let s = &self.seqs[idx];
-                (
-                    s.id,
-                    s.content_tokens(s.prefill_total()),
-                    self.worst_positions(s),
-                    self.cow_budget(s.req.deterministic, s.req.max_new_tokens),
-                )
-            };
-            let hit = match self.kv.try_admit(id, &toks, worst, cow) {
-                Some(hit) => hit,
-                None => continue,
-            };
-            self.queue.remove(pos);
-            let seq = &mut self.seqs[idx];
-            debug_assert!(hit + 1 <= seq.prefill_total().max(1));
-            seq.prefill_pos = hit;
-            seq.phase = Phase::Prefilling;
-            seq.metrics.prefill_start = now_secs();
-            if hit > 0 {
-                // engine-wide hit counters mirror the KvManager's in
-                // sync_kv_metrics; only per-sequence accounting lives here
-                seq.metrics.cache_hit_tokens += hit as u64;
-                // replay debt repaid by the cache: re-prefill work a
-                // preempted victim would otherwise redo
-                let saved = seq.replay_debt.min(hit);
-                seq.replay_debt -= saved;
-                self.metrics.reprefill_saved_tokens += saved as u64;
+            if self.try_admit_one(sid)? {
+                admitted += 1;
             }
-            admitted += 1;
         }
         if admitted == 0 {
             // Block-granular corner (cache on): an eviction may have freed
@@ -968,46 +982,18 @@ impl<'rt> Engine<'rt> {
             // order then admits nobody even though capacity is nonzero.
             // Fall back to the hidden victims rather than erroring out:
             // progress beats the anti-bounce heuristic.
-            let fallback: Vec<usize> = self
-                .queue
-                .iter()
-                .copied()
-                .filter(|i| deferred.contains(i))
+            let fallback: Vec<SeqId> = self
+                .store
+                .queued_ids()
+                .filter(|sid| deferred.contains(sid))
                 .collect();
-            for idx in fallback {
+            for sid in fallback {
                 if admitted >= n {
                     break;
                 }
-                let (id, toks, worst, cow) = {
-                    let s = &self.seqs[idx];
-                    (
-                        s.id,
-                        s.content_tokens(s.prefill_total()),
-                        self.worst_positions(s),
-                        self.cow_budget(s.req.deterministic, s.req.max_new_tokens),
-                    )
-                };
-                let hit = match self.kv.try_admit(id, &toks, worst, cow) {
-                    Some(hit) => hit,
-                    None => continue,
-                };
-                let pos = self
-                    .queue
-                    .iter()
-                    .position(|&q| q == idx)
-                    .expect("fallback index is queued");
-                self.queue.remove(pos);
-                let seq = &mut self.seqs[idx];
-                seq.prefill_pos = hit;
-                seq.phase = Phase::Prefilling;
-                seq.metrics.prefill_start = now_secs();
-                if hit > 0 {
-                    seq.metrics.cache_hit_tokens += hit as u64;
-                    let saved = seq.replay_debt.min(hit);
-                    seq.replay_debt -= saved;
-                    self.metrics.reprefill_saved_tokens += saved as u64;
+                if self.try_admit_one(sid)? {
+                    admitted += 1;
                 }
-                admitted += 1;
             }
         }
         if admitted == 0 {
@@ -1022,9 +1008,11 @@ impl<'rt> Engine<'rt> {
     /// re-prefills on re-admission (decode-input position bookkeeping
     /// survives because gen token j is input at position P + j regardless
     /// of how the KV for earlier positions was produced).
-    fn apply_preempt(&mut self, victim: usize) -> Result<()> {
-        let seq = self.seqs.get(victim).ok_or_else(|| {
-            Error::Engine(format!("policy bug: Preempt on unknown sequence {victim}"))
+    fn apply_preempt(&mut self, victim: SeqId) -> Result<()> {
+        let seq = self.store.get(victim).ok_or_else(|| {
+            Error::Engine(format!(
+                "policy bug: Preempt on unknown or stale sequence {victim}"
+            ))
         })?;
         if seq.req.deterministic {
             return Err(Error::Engine(
@@ -1036,11 +1024,12 @@ impl<'rt> Engine<'rt> {
                 "policy bug: Preempt on inactive sequence {victim}"
             )));
         }
-        self.kv.release(seq.id)?;
-        self.seqs[victim].preempt();
-        self.queue.push_back(victim);
+        let id = seq.id;
+        self.kv.release(id)?;
+        self.store[victim].preempt();
+        self.store.requeue(victim);
         self.metrics.preemptions += 1;
-        self.metrics.note_queue_depth(self.queue.len());
+        self.metrics.note_queue_depth(self.store.queued_len());
         Ok(())
     }
 
@@ -1054,7 +1043,19 @@ impl<'rt> Engine<'rt> {
         self.metrics.cow_copies = s.cow_copies;
     }
 
-    fn check_unique(lanes: &[usize]) -> Result<()> {
+    /// Mirror the sequence store's occupancy gauges (live count, live
+    /// high-water mark, slab capacity) into the engine metrics — the
+    /// numbers `{"cmd":"stats"}` surfaces to prove steady-state cost
+    /// tracks live traffic, not cumulative request count.
+    fn sync_store_metrics(&mut self) {
+        self.metrics.note_store(
+            self.store.live(),
+            self.store.live_hwm(),
+            self.store.capacity(),
+        );
+    }
+
+    fn check_unique(lanes: &[SeqId]) -> Result<()> {
         for (i, &a) in lanes.iter().enumerate() {
             if lanes[..i].contains(&a) {
                 return Err(Error::Engine(format!(
@@ -1065,7 +1066,7 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
-    fn check_decode_lanes(&self, lanes: &[usize]) -> Result<()> {
+    fn check_decode_lanes(&self, lanes: &[SeqId]) -> Result<()> {
         if lanes.is_empty() || lanes.len() > self.max_batch() {
             return Err(Error::Engine(format!(
                 "policy bug: Decode with {} lanes (max batch {})",
@@ -1076,22 +1077,22 @@ impl<'rt> Engine<'rt> {
         Self::check_unique(lanes)?;
         let window = self.cfg.verify_window;
         let dvr = self.dvr();
-        for &idx in lanes {
+        for &sid in lanes {
             let ok = self
-                .seqs
-                .get(idx)
+                .store
+                .get(sid)
                 .map(|s| s.can_decode(window, dvr))
                 .unwrap_or(false);
             if !ok {
                 return Err(Error::Engine(format!(
-                    "policy bug: Decode lane {idx} is not decodable"
+                    "policy bug: Decode lane {sid} is stale or not decodable"
                 )));
             }
         }
         Ok(())
     }
 
-    fn check_verify_lanes(&self, lanes: &[usize]) -> Result<()> {
+    fn check_verify_lanes(&self, lanes: &[SeqId]) -> Result<()> {
         if !self.dvr() {
             return Err(Error::Engine(
                 "policy bug: Verify outside Llm42 mode".into(),
@@ -1106,43 +1107,46 @@ impl<'rt> Engine<'rt> {
         }
         Self::check_unique(lanes)?;
         let window = self.cfg.verify_window;
-        for &idx in lanes {
+        for &sid in lanes {
             let ok = self
-                .seqs
-                .get(idx)
+                .store
+                .get(sid)
                 .map(|s| s.verify_ready(window))
                 .unwrap_or(false);
             if !ok {
                 return Err(Error::Engine(format!(
-                    "policy bug: Verify lane {idx} is not verify-ready"
+                    "policy bug: Verify lane {sid} is stale or not verify-ready"
                 )));
             }
         }
         Ok(())
     }
 
+    /// Bump the stall counter of every verify-ready lane. Only decoding
+    /// lanes can be verify-ready, so this scans the store's decoding lane
+    /// — O(live decode lanes), not O(total requests).
     fn bump_stalls(&mut self) {
         let window = self.cfg.verify_window;
-        for s in &mut self.seqs {
+        self.store.for_each_decoding_mut(|s| {
             if s.verify_ready(window) {
                 s.stall_steps += 1;
             }
-        }
+        });
     }
 
     // ---------------------------------------------------------- prefill
-    fn prefill_chunk(&mut self, idx: usize) -> Result<()> {
+    fn prefill_chunk(&mut self, sid: SeqId) -> Result<()> {
         let mut scr = std::mem::take(&mut self.scratch);
-        let res = self.prefill_chunk_inner(idx, &mut scr);
+        let res = self.prefill_chunk_inner(sid, &mut scr);
         self.scratch = scr;
         res
     }
 
-    fn prefill_chunk_inner(&mut self, idx: usize, scr: &mut StepScratch) -> Result<()> {
+    fn prefill_chunk_inner(&mut self, sid: SeqId, scr: &mut StepScratch) -> Result<()> {
         scr.tokens.clear();
         scr.tables.clear();
         let (id, start, real, chunk, has_committed) = {
-            let seq = &self.seqs[idx];
+            let seq = &self.store[sid];
             let total = seq.prefill_total();
             let remaining = total - seq.prefill_pos;
             let chunk = self.pick_chunk(remaining);
@@ -1177,29 +1181,31 @@ impl<'rt> Engine<'rt> {
         // redone work caused by preemption: drain the replay debt recorded
         // at eviction time (only tokens whose KV had actually been built
         // count — a mid-prefill victim owes just its progress so far)
-        let replay = real.min(self.seqs[idx].replay_debt);
+        let replay = real.min(self.store[sid].replay_debt);
         if replay > 0 {
-            self.seqs[idx].replay_debt -= replay;
+            self.store[sid].replay_debt -= replay;
             self.metrics.reprefilled_tokens += replay as u64;
-            self.seqs[idx].metrics.reprefilled_tokens += replay as u64;
+            self.store[sid].metrics.reprefilled_tokens += replay as u64;
         }
 
-        let seq = &mut self.seqs[idx];
+        let seq = &mut self.store[sid];
         seq.prefill_pos += real;
         // newly prefilled prompt/committed blocks are invariant-schedule
         // KV: publishable up to the prefilled span
         let written = seq.prefill_pos;
-        self.publish_seq(idx, written);
+        self.publish_seq(sid, written);
 
-        let seq = &mut self.seqs[idx];
-        if seq.prefill_pos < seq.prefill_total() {
-            return Ok(());
+        {
+            let seq = &self.store[sid];
+            if seq.prefill_pos < seq.prefill_total() {
+                return Ok(());
+            }
         }
 
         if has_committed {
             // The committed prefix is restored; its last token is the next
             // decode input, so no sampling happens here.
-            seq.phase = Phase::Decoding;
+            self.store.begin_decode(sid);
             return Ok(());
         }
 
@@ -1210,16 +1216,16 @@ impl<'rt> Engine<'rt> {
         let vocab = self.rt.dims().vocab;
         let logits = self.rt.extract_logits(rows)?;
         let row = &logits[(rows - 1) * vocab..rows * vocab];
-        let (temp, rseed) = (self.seqs[idx].req.temperature, self.seqs[idx].req.seed);
+        let (temp, rseed) = (self.store[sid].req.temperature, self.store[sid].req.seed);
         let tok = sample(row, temp, rseed, 0);
-        let seq = &mut self.seqs[idx];
-        seq.phase = Phase::Decoding;
+        self.store.begin_decode(sid);
+        let seq = &mut self.store[sid];
         seq.metrics.first_token_time = now_secs();
         let finished = seq.push_fast_token(tok, self.cfg.eos_token, false);
         self.metrics.decoded_tokens += 1;
         self.metrics.committed_tokens += 1;
         if finished {
-            self.retire(idx)?;
+            self.retire(sid)?;
         }
         Ok(())
     }
@@ -1269,12 +1275,12 @@ impl<'rt> Engine<'rt> {
 
     /// Publish this sequence's full blocks below `min(publish_limit,
     /// written)` into the prefix index (no-op with the cache disabled).
-    fn publish_seq(&mut self, idx: usize, written: usize) {
+    fn publish_seq(&mut self, sid: SeqId, written: usize) {
         if !self.cfg.prefix_cache {
             return;
         }
         let (id, toks) = {
-            let seq = &self.seqs[idx];
+            let seq = &self.store[sid];
             let limit = self.publish_limit(seq).min(written);
             (seq.id, seq.content_tokens(limit))
         };
@@ -1282,14 +1288,14 @@ impl<'rt> Engine<'rt> {
     }
 
     // ----------------------------------------------------------- decode
-    fn decode_step(&mut self, lanes: &[usize]) -> Result<()> {
+    fn decode_step(&mut self, lanes: &[SeqId]) -> Result<()> {
         let mut scr = std::mem::take(&mut self.scratch);
         let res = self.decode_step_inner(lanes, &mut scr);
         self.scratch = scr;
         res
     }
 
-    fn decode_step_inner(&mut self, lanes: &[usize], scr: &mut StepScratch) -> Result<()> {
+    fn decode_step_inner(&mut self, lanes: &[SeqId], scr: &mut StepScratch) -> Result<()> {
         let count = lanes.len();
         let bucket = if self.invariant_decode() {
             // the universal schedule: one fixed shape for every step
@@ -1306,9 +1312,9 @@ impl<'rt> Engine<'rt> {
         scr.positions.clear();
         scr.positions.resize(bucket, 0);
         scr.copies.clear();
-        for (lane, &idx) in lanes.iter().enumerate() {
+        for (lane, &sid) in lanes.iter().enumerate() {
             let (id, pos) = {
-                let s = &self.seqs[idx];
+                let s = &self.store[sid];
                 scr.tokens[lane] = s.next_input_token() as i32;
                 scr.positions[lane] = s.next_input_position() as i32;
                 (s.id, s.next_input_position())
@@ -1322,7 +1328,7 @@ impl<'rt> Engine<'rt> {
         for lane in 0..bucket {
             if lane < lanes.len() {
                 self.kv
-                    .extend_lane_table(self.seqs[lanes[lane]].id, &mut scr.tables)?;
+                    .extend_lane_table(self.store[lanes[lane]].id, &mut scr.tables)?;
             } else {
                 self.kv.extend_trash_table(&mut scr.tables);
             }
@@ -1343,9 +1349,9 @@ impl<'rt> Engine<'rt> {
         let eos = self.cfg.eos_token;
         let speculative = self.dvr();
         let mut to_retire = Vec::new();
-        for (lane, &idx) in lanes.iter().enumerate() {
+        for (lane, &sid) in lanes.iter().enumerate() {
             let row = &scr.logits[lane * vocab..(lane + 1) * vocab];
-            let seq = &mut self.seqs[idx];
+            let seq = &mut self.store[sid];
             let gen_index = seq.next_gen_index() as u64;
             let tok = sample(row, seq.req.temperature, seq.req.seed, gen_index);
             let spec_lane = speculative && seq.req.deterministic;
@@ -1357,16 +1363,16 @@ impl<'rt> Engine<'rt> {
             if self.invariant_decode() {
                 // batch-invariant commits are universal-schedule KV: the
                 // newly covered blocks become publishable immediately
-                let seq = &self.seqs[idx];
+                let seq = &self.store[sid];
                 let written = seq.prompt_len() + seq.committed.len();
-                self.publish_seq(idx, written.saturating_sub(1));
+                self.publish_seq(sid, written.saturating_sub(1));
             }
             if finished {
-                to_retire.push(idx);
+                to_retire.push(sid);
             }
         }
-        for idx in to_retire {
-            self.retire(idx)?;
+        for sid in to_retire {
+            self.retire(sid)?;
         }
         Ok(())
     }
@@ -1378,7 +1384,7 @@ impl<'rt> Engine<'rt> {
     /// region). Chunks are real lengths — ragged fusion pads nothing.
     /// Wall time is attributed to the prefill/decode phase metrics by
     /// token share, so `{"cmd":"stats"}` stays meaningful under fusion.
-    fn fused_pass(&mut self, prefill: &[(usize, usize)], decode: &[usize]) -> Result<()> {
+    fn fused_pass(&mut self, prefill: &[(SeqId, usize)], decode: &[SeqId]) -> Result<()> {
         let t0 = Instant::now();
         let mut scr = std::mem::take(&mut self.scratch);
         let res = self.fused_pass_inner(prefill, decode, &mut scr);
@@ -1396,8 +1402,8 @@ impl<'rt> Engine<'rt> {
 
     fn fused_pass_inner(
         &mut self,
-        prefill: &[(usize, usize)],
-        decode: &[usize],
+        prefill: &[(SeqId, usize)],
+        decode: &[SeqId],
         scr: &mut StepScratch,
     ) -> Result<()> {
         scr.tokens.clear();
@@ -1405,9 +1411,9 @@ impl<'rt> Engine<'rt> {
         scr.positions.clear();
         scr.tables.clear();
         scr.copies.clear();
-        for &(idx, chunk) in prefill {
+        for &(sid, chunk) in prefill {
             let (id, start) = {
-                let s = &self.seqs[idx];
+                let s = &self.store[sid];
                 let start = s.prefill_pos;
                 scr.tokens
                     .extend((start..start + chunk).map(|i| s.prefill_token(i) as i32));
@@ -1418,9 +1424,9 @@ impl<'rt> Engine<'rt> {
             let copies = self.kv.prepare_write(id, start, start + chunk)?;
             scr.copies.extend(copies);
         }
-        for &idx in decode {
+        for &sid in decode {
             let (id, pos) = {
-                let s = &self.seqs[idx];
+                let s = &self.store[sid];
                 scr.tokens.push(s.next_input_token() as i32);
                 (s.id, s.next_input_position())
             };
@@ -1431,13 +1437,13 @@ impl<'rt> Engine<'rt> {
         }
         self.run_cow_copies(&scr.copies)?;
         // block tables after COW remaps; ragged lanes need no trash padding
-        for &(idx, _) in prefill {
+        for &(sid, _) in prefill {
             self.kv
-                .extend_lane_table(self.seqs[idx].id, &mut scr.tables)?;
+                .extend_lane_table(self.store[sid].id, &mut scr.tables)?;
         }
-        for &idx in decode {
+        for &sid in decode {
             self.kv
-                .extend_lane_table(self.seqs[idx].id, &mut scr.tables)?;
+                .extend_lane_table(self.store[sid].id, &mut scr.tables)?;
         }
 
         let n = scr.tokens.len();
@@ -1460,30 +1466,30 @@ impl<'rt> Engine<'rt> {
             scr.logits.extend_from_slice(logits);
         }
         let eos = self.cfg.eos_token;
-        let mut to_retire: Vec<usize> = Vec::new();
+        let mut to_retire: Vec<SeqId> = Vec::new();
         let mut row = 0usize;
 
-        for &(idx, chunk) in prefill {
+        for &(sid, chunk) in prefill {
             self.metrics.prefill_tokens += chunk as u64;
             // redone work caused by preemption (same rule as the serial path)
-            let replay = chunk.min(self.seqs[idx].replay_debt);
+            let replay = chunk.min(self.store[sid].replay_debt);
             if replay > 0 {
-                self.seqs[idx].replay_debt -= replay;
+                self.store[sid].replay_debt -= replay;
                 self.metrics.reprefilled_tokens += replay as u64;
-                self.seqs[idx].metrics.reprefilled_tokens += replay as u64;
+                self.store[sid].metrics.reprefilled_tokens += replay as u64;
             }
             let (done, had_committed) = {
-                let seq = &mut self.seqs[idx];
+                let seq = &mut self.store[sid];
                 seq.prefill_pos += chunk;
                 (seq.prefill_pos >= seq.prefill_total(), !seq.committed.is_empty())
             };
-            let written = self.seqs[idx].prefill_pos;
-            self.publish_seq(idx, written);
+            let written = self.store[sid].prefill_pos;
+            self.publish_seq(sid, written);
             if done {
                 if had_committed {
                     // restored committed prefix: its last token is the next
                     // decode input, so no sampling happens here
-                    self.seqs[idx].phase = Phase::Decoding;
+                    self.store.begin_decode(sid);
                 } else {
                     // prompt complete: gen token 0 from the last real row.
                     // The fused graph computes this lane's rows with the
@@ -1493,16 +1499,16 @@ impl<'rt> Engine<'rt> {
                     let logits_row =
                         &scr.logits[(row + chunk - 1) * vocab..(row + chunk) * vocab];
                     let (temp, rseed) =
-                        (self.seqs[idx].req.temperature, self.seqs[idx].req.seed);
+                        (self.store[sid].req.temperature, self.store[sid].req.seed);
                     let tok = sample(logits_row, temp, rseed, 0);
-                    let seq = &mut self.seqs[idx];
-                    seq.phase = Phase::Decoding;
+                    self.store.begin_decode(sid);
+                    let seq = &mut self.store[sid];
                     seq.metrics.first_token_time = now_secs();
                     let finished = seq.push_fast_token(tok, eos, false);
                     self.metrics.decoded_tokens += 1;
                     self.metrics.committed_tokens += 1;
                     if finished {
-                        to_retire.push(idx);
+                        to_retire.push(sid);
                     }
                 }
             }
@@ -1510,9 +1516,9 @@ impl<'rt> Engine<'rt> {
         }
 
         let speculative = self.dvr();
-        for &idx in decode {
+        for &sid in decode {
             let logits_row = &scr.logits[row * vocab..(row + 1) * vocab];
-            let seq = &mut self.seqs[idx];
+            let seq = &mut self.store[sid];
             let gen_index = seq.next_gen_index() as u64;
             let tok = sample(logits_row, seq.req.temperature, seq.req.seed, gen_index);
             let spec_lane = speculative && seq.req.deterministic;
@@ -1524,30 +1530,30 @@ impl<'rt> Engine<'rt> {
             if self.invariant_decode() {
                 // batch-invariant commits are universal-schedule KV: the
                 // newly covered blocks become publishable immediately
-                let seq = &self.seqs[idx];
+                let seq = &self.store[sid];
                 let written = seq.prompt_len() + seq.committed.len();
-                self.publish_seq(idx, written.saturating_sub(1));
+                self.publish_seq(sid, written.saturating_sub(1));
             }
             if finished {
-                to_retire.push(idx);
+                to_retire.push(sid);
             }
             row += 1;
         }
-        for idx in to_retire {
-            self.retire(idx)?;
+        for sid in to_retire {
+            self.retire(sid)?;
         }
         Ok(())
     }
 
     // ----------------------------------------------------------- verify
-    fn verify_pass(&mut self, lanes: &[usize]) -> Result<()> {
+    fn verify_pass(&mut self, lanes: &[SeqId]) -> Result<()> {
         let mut scr = std::mem::take(&mut self.scratch);
         let res = self.verify_pass_inner(lanes, &mut scr);
         self.scratch = scr;
         res
     }
 
-    fn verify_pass_inner(&mut self, lanes: &[usize], scr: &mut StepScratch) -> Result<()> {
+    fn verify_pass_inner(&mut self, lanes: &[SeqId], scr: &mut StepScratch) -> Result<()> {
         let g = self.cfg.verify_group;
         let t = self.cfg.verify_window;
         debug_assert!(lanes.len() <= g);
@@ -1557,9 +1563,9 @@ impl<'rt> Engine<'rt> {
         scr.positions.resize(g, 0);
         scr.copies.clear();
 
-        for (lane, &idx) in lanes.iter().enumerate() {
+        for (lane, &sid) in lanes.iter().enumerate() {
             let (id, start) = {
-                let s = &self.seqs[idx];
+                let s = &self.store[sid];
                 debug_assert!(!s.committed.is_empty() && !s.speculative.is_empty());
                 // window inputs: last committed token, then the speculative run
                 let base = lane * t;
@@ -1581,7 +1587,7 @@ impl<'rt> Engine<'rt> {
         for lane in 0..g {
             if lane < lanes.len() {
                 self.kv
-                    .extend_lane_table(self.seqs[lanes[lane]].id, &mut scr.tables)?;
+                    .extend_lane_table(self.store[lanes[lane]].id, &mut scr.tables)?;
             } else {
                 self.kv.extend_trash_table(&mut scr.tables);
             }
@@ -1604,19 +1610,19 @@ impl<'rt> Engine<'rt> {
         let eos = self.cfg.eos_token;
 
         let mut to_retire = Vec::new();
-        for (lane, &idx) in lanes.iter().enumerate() {
+        for (lane, &sid) in lanes.iter().enumerate() {
             self.verify_lane_counter += 1;
             let forced = match self.cfg.fault {
                 FaultPlan::None | FaultPlan::FailStepAt { .. } => None,
                 FaultPlan::EveryNthLane { every, at_index } => {
                     if self.verify_lane_counter % every == 0 {
-                        Some(at_index.min(self.seqs[idx].speculative.len() - 1))
+                        Some(at_index.min(self.store[sid].speculative.len() - 1))
                     } else {
                         None
                     }
                 }
             };
-            let seq = &mut self.seqs[idx];
+            let seq = &mut self.store[sid];
             let c = seq.committed.len();
             // sample the verifier's token for every window row
             let mut vtokens = Vec::with_capacity(t);
@@ -1659,47 +1665,49 @@ impl<'rt> Engine<'rt> {
             // KV: every committed position below the new frontier input is
             // now publishable (pure function of the committed tokens)
             let written = {
-                let s = &self.seqs[idx];
+                let s = &self.store[sid];
                 (s.prompt_len() + s.committed.len()).saturating_sub(1)
             };
-            self.publish_seq(idx, written);
+            self.publish_seq(sid, written);
             if let Some(reason) = finish {
-                self.seqs[idx].finish(reason);
-                to_retire.push(idx);
+                self.store[sid].finish(reason);
+                to_retire.push(sid);
             }
         }
-        for idx in to_retire {
-            self.retire(idx)?;
+        for sid in to_retire {
+            self.retire(sid)?;
         }
         Ok(())
     }
 
     /// Release the block table (published pages stay cached) and move the
-    /// sequence to the finished list.
-    fn retire(&mut self, idx: usize) -> Result<()> {
-        debug_assert_eq!(self.seqs[idx].phase, Phase::Finished);
-        let id = self.seqs[idx].id;
+    /// sequence out of the store into the finished list.
+    fn retire(&mut self, sid: SeqId) -> Result<()> {
+        debug_assert_eq!(self.store[sid].phase, Phase::Finished);
+        let id = self.store[sid].id;
         self.kv.release(id)?;
-        self.finish_output(idx);
+        self.finish_output(sid);
         Ok(())
     }
 
-    /// Flush the final stream delta, tombstone the sequence, and record
-    /// the output (shared by [`Engine::retire`] and [`Engine::abort`];
-    /// the caller has already returned any KV the sequence held).
-    fn finish_output(&mut self, idx: usize) {
-        debug_assert_eq!(self.seqs[idx].phase, Phase::Finished);
+    /// Flush the final stream delta, remove the sequence from the store
+    /// (its slot recycles; every outstanding handle to it goes stale), and
+    /// record the output (shared by [`Engine::retire`] and
+    /// [`Engine::abort`]; the caller has already returned any KV the
+    /// sequence held).
+    fn finish_output(&mut self, sid: SeqId) {
+        debug_assert_eq!(self.store[sid].phase, Phase::Finished);
         // final commit-boundary delta: whatever the retiring step committed
         // past the last sweep (the sweep never sees this sequence again —
-        // the tombstone does not stream)
-        if let Some(tokens) = self.seqs[idx].take_unstreamed() {
-            let id = self.seqs[idx].id;
+        // it leaves the streaming lane with the store entry)
+        if let Some(tokens) = self.store[sid].take_unstreamed() {
+            let id = self.store[sid].id;
             self.deltas.push(StreamDelta { id, tokens });
         }
-        let id = self.seqs[idx].id;
-        let mut tomb = Sequence::new(id, Request::greedy(vec![0], 1, false), 0.0);
-        tomb.phase = Phase::Finished;
-        let done = std::mem::replace(&mut self.seqs[idx], tomb);
+        let done = self
+            .store
+            .remove(sid)
+            .expect("finishing sequence is live in the store");
         let out = done.into_output(now_secs());
         // class_e2e measures the latency of *served* requests; a cancelled
         // or timed-out request would inject its abort age as a latency
@@ -1708,6 +1716,7 @@ impl<'rt> Engine<'rt> {
             self.metrics.record_finished(out.priority, out.metrics.e2e());
         }
         self.metrics.record_finish_reason(out.finish_reason);
+        self.sync_store_metrics();
         self.finished.push(out);
     }
 }

@@ -82,6 +82,15 @@ pub struct EngineMetrics {
     pub reprefilled_tokens: u64,
     /// highest queue depth observed (admission pressure)
     pub queue_depth_hwm: u64,
+    /// live sequences (queued + active) right now — a gauge, refreshed at
+    /// step/submit/finish boundaries
+    pub live_seqs: u64,
+    /// highest number of concurrently live sequences ever observed
+    pub live_seqs_hwm: u64,
+    /// sequence-store slab capacity (slots allocated). Bounded by the
+    /// live high-water mark, never by cumulative requests served — the
+    /// O(live) guarantee `tests/soak.rs` pins
+    pub store_capacity: u64,
     /// admissions that adopted at least one cached prefix block
     pub cache_hits: u64,
     /// prefill tokens skipped because their KV came from the prefix cache
@@ -207,6 +216,14 @@ impl EngineMetrics {
             self.queue_depth_hwm = depth as u64;
         }
     }
+
+    /// Refresh the sequence-store occupancy gauges (live count, live
+    /// high-water mark, slab capacity).
+    pub fn note_store(&mut self, live: usize, live_hwm: usize, capacity: usize) {
+        self.live_seqs = live as u64;
+        self.live_seqs_hwm = live_hwm as u64;
+        self.store_capacity = capacity as u64;
+    }
 }
 
 #[cfg(test)]
@@ -291,6 +308,18 @@ mod tests {
         m.note_queue_depth(3);
         m.note_queue_depth(1);
         assert_eq!(m.queue_depth_hwm, 3);
+    }
+
+    #[test]
+    fn store_gauges_mirror_the_store() {
+        let mut m = EngineMetrics::default();
+        m.note_store(3, 7, 8);
+        assert_eq!(m.live_seqs, 3);
+        assert_eq!(m.live_seqs_hwm, 7);
+        assert_eq!(m.store_capacity, 8);
+        // gauges, not counters: they move down too
+        m.note_store(0, 7, 8);
+        assert_eq!(m.live_seqs, 0);
     }
 
     #[test]

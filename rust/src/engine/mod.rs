@@ -15,6 +15,12 @@
 //! commit-boundary [`StreamDelta`] events ([`Engine::take_stream_deltas`])
 //! — only *committed* tokens are ever emitted, so rollbacks can never
 //! retract streamed output.
+//!
+//! Sequences live in a slab-backed [`store::SequenceStore`] addressed by
+//! stable generational [`SeqId`] handles: finished requests leave the
+//! store (no tombstones), per-step scans iterate phase-indexed live
+//! lanes, and steady-state cost/memory are O(live sequences) rather than
+//! O(total requests served).
 
 pub mod engine;
 pub mod kv;
@@ -22,6 +28,7 @@ pub mod metrics;
 pub mod sampler;
 pub mod scheduler;
 pub mod sequence;
+pub mod store;
 pub mod verify;
 
 pub use engine::{Engine, EngineConfig, FaultPlan, Mode, StepKind, StreamDelta};
@@ -32,3 +39,4 @@ pub use scheduler::{
     SchedulerPolicy,
 };
 pub use sequence::{FinishReason, Request, RequestOutput};
+pub use store::{SeqId, SequenceStore};

@@ -19,6 +19,9 @@
 //! * **prefill selection** — the most-urgent prefilling lane first (TTFT);
 //! * **admission** — earliest deadline first, then priority, then arrival;
 //! * **preemption** — the shared rule in [`super::preemption_victim`].
+//!
+//! Ties everywhere break on the monotone request `id` (submission order) —
+//! [`SeqId`] handles are deliberately unordered.
 
 use std::cmp::Ordering;
 
@@ -27,6 +30,7 @@ use crate::engine::scheduler::{
     SchedulerPolicy,
 };
 use crate::engine::sequence::Phase;
+use crate::engine::store::SeqId;
 
 #[derive(Debug, Clone)]
 pub struct DeadlineAware {
@@ -55,26 +59,32 @@ impl DeadlineAware {
             .then(a.2.partial_cmp(&b.2).unwrap_or(Ordering::Equal))
     }
 
-    /// Sort lane indices most-urgent-first (ties broken by lowest index).
-    fn sort_by_urgency(v: &SchedView, idxs: &mut [usize]) {
-        idxs.sort_by(|&a, &b| {
-            let la = v.lane(a).expect("lane in view");
-            let lb = v.lane(b).expect("lane in view");
-            Self::cmp_urgency(
-                Self::urgency(la.urgency_at(), la.priority, la.arrive_time),
-                Self::urgency(lb.urgency_at(), lb.priority, lb.arrive_time),
-            )
-            .then(a.cmp(&b))
-        });
+    /// Sort lane handles most-urgent-first (ties broken by lowest
+    /// request id, i.e. submission order).
+    fn sort_by_urgency(v: &SchedView, sids: &mut Vec<SeqId>) {
+        let mut keyed: Vec<((f64, i64, f64), u64, SeqId)> = sids
+            .iter()
+            .map(|&sid| {
+                let l = v.lane(sid).expect("lane in view");
+                (
+                    Self::urgency(l.urgency_at(), l.priority, l.arrive_time),
+                    l.id,
+                    sid,
+                )
+            })
+            .collect();
+        keyed.sort_by(|a, b| Self::cmp_urgency(a.0, b.0).then(a.1.cmp(&b.1)));
+        sids.clear();
+        sids.extend(keyed.into_iter().map(|(_, _, sid)| sid));
     }
 
     /// Stall-or-slack urgency over the ready set: the seed stall-step
     /// bound always applies — a deadline tightens the trigger, never
     /// loosens it (a loose deadline must not starve a lane of
     /// verification, i.e. of all token output).
-    fn any_urgent(&self, v: &SchedView, ready: &[usize]) -> bool {
-        ready.iter().any(|&i| {
-            v.lane(i)
+    fn any_urgent(&self, v: &SchedView, ready: &[SeqId]) -> bool {
+        ready.iter().any(|&sid| {
+            v.lane(sid)
                 .map(|l| {
                     l.stall_steps >= v.max_stall_steps
                         || l.urgency_at()
@@ -91,11 +101,11 @@ impl DeadlineAware {
     /// displacing a fast-path step.
     fn plan_fused(&self, v: &SchedView) -> Action {
         let decode = v.decodable();
-        let mut prefilling: Vec<usize> = v
+        let mut prefilling: Vec<SeqId> = v
             .lanes
             .iter()
             .filter(|l| l.phase == Phase::Prefilling)
-            .map(|l| l.idx)
+            .map(|l| l.sid)
             .collect();
         Self::sort_by_urgency(v, &mut prefilling);
         let mut verify = Vec::new();
@@ -135,7 +145,7 @@ impl SchedulerPolicy for DeadlineAware {
                     Self::urgency(a.urgency_at(), a.priority, a.arrive_time),
                     Self::urgency(b.urgency_at(), b.priority, b.arrive_time),
                 )
-                .then(a.idx.cmp(&b.idx))
+                .then(a.id.cmp(&b.id))
             })
             .map(|q| q.priority)
         {
@@ -160,11 +170,11 @@ impl SchedulerPolicy for DeadlineAware {
                 )
             })
         {
-            return Action::Prefill { seq: l.idx };
+            return Action::Prefill { seq: l.sid };
         }
 
         if v.dvr {
-            let mut ready: Vec<usize> = v.verify_ready();
+            let mut ready: Vec<SeqId> = v.verify_ready();
             let decodable = v.decodable();
             if verify_trigger(v, &ready, self.any_urgent(v, &ready), decodable.is_empty())
             {
@@ -183,25 +193,29 @@ impl SchedulerPolicy for DeadlineAware {
         Action::Idle
     }
 
-    fn admit_order(&mut self, v: &SchedView) -> Vec<usize> {
+    fn admit_order(&mut self, v: &SchedView) -> Vec<SeqId> {
         // precompute sort keys once; a comparator scanning the queue per
         // comparison would be quadratic in queue depth
-        let mut keyed: Vec<((f64, i64, f64), usize)> = v
+        let mut keyed: Vec<((f64, i64, f64), u64, SeqId)> = v
             .queue
             .iter()
             .map(|q| {
-                (Self::urgency(q.urgency_at(), q.priority, q.arrive_time), q.idx)
+                (
+                    Self::urgency(q.urgency_at(), q.priority, q.arrive_time),
+                    q.id,
+                    q.sid,
+                )
             })
             .collect();
         keyed.sort_by(|a, b| Self::cmp_urgency(a.0, b.0).then(a.1.cmp(&b.1)));
-        keyed.into_iter().map(|(_, idx)| idx).collect()
+        keyed.into_iter().map(|(_, _, sid)| sid).collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::scheduler::tests::{lane, queued, view};
+    use crate::engine::scheduler::tests::{lane, queued, sid, view};
 
     fn ready_lane(idx: usize, deadline_ms: Option<f64>, arrive: f64) -> crate::engine::scheduler::LaneView {
         let mut l = lane(idx, 0, true);
@@ -221,11 +235,11 @@ mod tests {
         let urgent = ready_lane(0, Some(200.0), 99.9); // due at 100.1, slack 0.1 > 0.05
         let dec = lane(1, 0, false);
         let v = view(vec![urgent.clone(), dec.clone()], vec![], 1);
-        assert_eq!(p.plan(&v), Action::Decode { lanes: vec![1] }, "slack not yet urgent");
+        assert_eq!(p.plan(&v), Action::Decode { lanes: vec![sid(1)] }, "slack not yet urgent");
 
         let urgent = ready_lane(0, Some(120.0), 99.9); // due at 100.02, slack 0.02
         let v = view(vec![urgent, dec], vec![], 1);
-        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] }, "urgent slack fires");
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![sid(0)] }, "urgent slack fires");
     }
 
     #[test]
@@ -237,7 +251,7 @@ mod tests {
         let c = ready_lane(2, Some(150.0), 99.5); // due 99.65 — most urgent
         let v = view(vec![a, b, c], vec![], 1);
         match p.plan(&v) {
-            Action::Verify { lanes } => assert_eq!(lanes, vec![2, 0]),
+            Action::Verify { lanes } => assert_eq!(lanes, vec![sid(2), sid(0)]),
             other => panic!("expected verify, got {other:?}"),
         }
     }
@@ -251,7 +265,7 @@ mod tests {
         a.stall_steps = 4; // == max_stall_steps in the helper view
         let dec = lane(1, 0, false);
         let v = view(vec![a, dec], vec![], 1);
-        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] });
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![sid(0)] });
     }
 
     #[test]
@@ -261,10 +275,10 @@ mod tests {
         a.stall_steps = 0;
         let dec = lane(1, 0, false);
         let v = view(vec![a.clone(), dec.clone()], vec![], 1);
-        assert_eq!(p.plan(&v), Action::Decode { lanes: vec![1] });
+        assert_eq!(p.plan(&v), Action::Decode { lanes: vec![sid(1)] });
         a.stall_steps = 4; // == max_stall_steps in the helper view
         let v = view(vec![a, dec], vec![], 1);
-        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] });
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![sid(0)] });
     }
 
     #[test]
@@ -277,12 +291,12 @@ mod tests {
         a.timeout_ms = Some(60.0); // expires at 100.01, slack 0.01
         let dec = lane(1, 0, false);
         let v = view(vec![a.clone(), dec.clone()], vec![], 1);
-        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] });
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![sid(0)] });
 
         // a roomy timeout does not trigger early verification
         a.timeout_ms = Some(60_000.0);
         let v = view(vec![a, dec], vec![], 1);
-        assert_eq!(p.plan(&v), Action::Decode { lanes: vec![1] });
+        assert_eq!(p.plan(&v), Action::Decode { lanes: vec![sid(1)] });
     }
 
     #[test]
@@ -296,7 +310,7 @@ mod tests {
         q2.deadline_ms = Some(100.0);
         q2.arrive_time = 99.0;
         let v = view(vec![], vec![q0, q1, q2], 3);
-        assert_eq!(p.admit_order(&v), vec![2, 1, 0]);
+        assert_eq!(p.admit_order(&v), vec![sid(2), sid(1), sid(0)]);
     }
 
     #[test]
@@ -304,7 +318,7 @@ mod tests {
         let mut p = DeadlineAware::default();
         let victim = lane(0, 0, false);
         let v = view(vec![victim], vec![queued(5, 3)], 0);
-        assert_eq!(p.plan(&v), Action::Preempt { victim: 0 });
+        assert_eq!(p.plan(&v), Action::Preempt { victim: sid(0) });
     }
 
     #[test]
@@ -323,10 +337,10 @@ mod tests {
         v.max_step_tokens = 30;
         match p.plan(&v) {
             Action::Run(plan) => {
-                assert_eq!(plan.decode, vec![3]);
-                assert_eq!(plan.verify, vec![2], "urgent slack fires alongside");
+                assert_eq!(plan.decode, vec![sid(3)]);
+                assert_eq!(plan.verify, vec![sid(2)], "urgent slack fires alongside");
                 // budget 30 - 1 decode token: deadline lane drains first
-                assert_eq!(plan.prefill, vec![(1, 29)]);
+                assert_eq!(plan.prefill, vec![(sid(1), 29)]);
                 assert!(plan.validate(&v).is_ok());
             }
             other => panic!("expected a fused Run, got {other:?}"),

@@ -22,6 +22,7 @@ use crate::engine::scheduler::{
     SchedView, SchedulerPolicy,
 };
 use crate::engine::sequence::Phase;
+use crate::engine::store::SeqId;
 
 #[derive(Debug, Default)]
 pub struct FairShare {
@@ -59,16 +60,17 @@ impl FairShare {
         best.map(|(c, _, _)| c)
     }
 
-    /// Order items (class, key) by repeated WRR class picks; within a
+    /// Order items (class, payload) by repeated WRR class picks; within a
     /// class, stable by the given order. Only the first `charge_count`
     /// picks — the ones the caller will actually serve this round — are
     /// charged to the persistent service counters; the tail of the
     /// ordering uses scratch state, so unserved items do not distort
     /// future rounds (over-charging would collapse WRR into strict
-    /// priority and starve low classes).
-    fn wrr_order(&mut self, items: &[(u8, usize)], charge_count: usize) -> Vec<usize> {
+    /// priority and starve low classes). Generic over the payload so the
+    /// same arbiter orders lane handles and synthetic test ids alike.
+    fn wrr_order<T: Copy>(&mut self, items: &[(u8, T)], charge_count: usize) -> Vec<T> {
         let mut scratch = self.service.clone();
-        let mut remaining: Vec<(u8, usize)> = items.to_vec();
+        let mut remaining: Vec<(u8, T)> = items.to_vec();
         let mut out = Vec::with_capacity(items.len());
         while !remaining.is_empty() {
             let class =
@@ -95,11 +97,11 @@ impl FairShare {
     /// after composition, once the budget decides who got a chunk.
     fn plan_fused(&mut self, v: &SchedView) -> Action {
         let decode = v.decodable();
-        let prefilling: Vec<(u8, usize)> = v
+        let prefilling: Vec<(u8, SeqId)> = v
             .lanes
             .iter()
             .filter(|l| l.phase == Phase::Prefilling)
-            .map(|l| (l.priority, l.idx))
+            .map(|l| (l.priority, l.sid))
             .collect();
         let prefill_order = if prefilling.is_empty() {
             Vec::new()
@@ -116,9 +118,9 @@ impl FairShare {
                 any_stalled(v, &ready),
                 decode.is_empty() && prefill_order.is_empty(),
             ) {
-                let items: Vec<(u8, usize)> = ready
+                let items: Vec<(u8, SeqId)> = ready
                     .iter()
-                    .map(|&i| (v.lane(i).expect("ready lane").priority, i))
+                    .map(|&sid| (v.lane(sid).expect("ready lane").priority, sid))
                     .collect();
                 let order = self.wrr_order(&items, v.verify_group);
                 verify = order.into_iter().take(v.verify_group).collect();
@@ -126,8 +128,8 @@ impl FairShare {
         }
         let action = compose_plan(v, decode, verify, &prefill_order);
         if let Action::Run(plan) = &action {
-            for &(idx, _) in &plan.prefill {
-                if let Some(l) = v.lane(idx) {
+            for &(sid, _) in &plan.prefill {
+                if let Some(l) = v.lane(sid) {
                     *self.service.entry(l.priority).or_insert(0) += 1;
                 }
             }
@@ -160,11 +162,11 @@ impl SchedulerPolicy for FairShare {
         }
 
         // prefill-first, class-arbitrated
-        let prefilling: Vec<(u8, usize)> = v
+        let prefilling: Vec<(u8, SeqId)> = v
             .lanes
             .iter()
             .filter(|l| l.phase == Phase::Prefilling)
-            .map(|l| (l.priority, l.idx))
+            .map(|l| (l.priority, l.sid))
             .collect();
         if !prefilling.is_empty() {
             // only one lane is served, so only one pick is charged
@@ -176,9 +178,9 @@ impl SchedulerPolicy for FairShare {
             let ready = v.verify_ready();
             let decodable = v.decodable();
             if verify_trigger(v, &ready, any_stalled(v, &ready), decodable.is_empty()) {
-                let items: Vec<(u8, usize)> = ready
+                let items: Vec<(u8, SeqId)> = ready
                     .iter()
-                    .map(|&i| (v.lane(i).expect("ready lane").priority, i))
+                    .map(|&sid| (v.lane(sid).expect("ready lane").priority, sid))
                     .collect();
                 let order = self.wrr_order(&items, v.verify_group);
                 return Action::Verify {
@@ -194,9 +196,9 @@ impl SchedulerPolicy for FairShare {
         Action::Idle
     }
 
-    fn admit_order(&mut self, v: &SchedView) -> Vec<usize> {
-        let items: Vec<(u8, usize)> =
-            v.queue.iter().map(|q| (q.priority, q.idx)).collect();
+    fn admit_order(&mut self, v: &SchedView) -> Vec<SeqId> {
+        let items: Vec<(u8, SeqId)> =
+            v.queue.iter().map(|q| (q.priority, q.sid)).collect();
         // the executor admits at most free_slots of these this round
         let served = v.queue.len().min(v.free_slots);
         self.wrr_order(&items, served)
@@ -206,7 +208,7 @@ impl SchedulerPolicy for FairShare {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::scheduler::tests::{queued, view};
+    use crate::engine::scheduler::tests::{queued, sid, view};
 
     #[test]
     fn wrr_shares_match_weights() {
@@ -276,9 +278,9 @@ mod tests {
         let order = p.admit_order(&v);
         // weight-3 class leads but weight-1 is interleaved, not appended
         assert_eq!(order.len(), 4);
-        assert_eq!(order[0], 2, "higher-weight class served first");
+        assert_eq!(order[0], sid(2), "higher-weight class served first");
         assert!(
-            order.iter().position(|&i| i == 0).unwrap() < 3,
+            order.iter().position(|&s| s == sid(0)).unwrap() < 3,
             "low class not starved to the end: {order:?}"
         );
     }
@@ -288,7 +290,7 @@ mod tests {
         let mut p = FairShare::default();
         let victim = crate::engine::scheduler::tests::lane(0, 0, false);
         let v = view(vec![victim], vec![queued(7, 4)], 0);
-        assert_eq!(p.plan(&v), Action::Preempt { victim: 0 });
+        assert_eq!(p.plan(&v), Action::Preempt { victim: sid(0) });
     }
 
     #[test]
@@ -306,7 +308,7 @@ mod tests {
             crate::engine::scheduler::Action::Run(plan) => {
                 // the whole budget fits one chunk: only the WRR winner is
                 // served — and only that lane's class is charged
-                assert_eq!(plan.prefill, vec![(0, 16)]);
+                assert_eq!(plan.prefill, vec![(sid(0), 16)]);
                 assert_eq!(*p.service.get(&4).unwrap_or(&0), 1);
                 assert_eq!(*p.service.get(&0).unwrap_or(&0), 0);
             }
@@ -316,7 +318,7 @@ mod tests {
         let mut lo_served = false;
         for _ in 0..12 {
             if let crate::engine::scheduler::Action::Run(plan) = p.plan(&v) {
-                lo_served |= plan.prefill.first() == Some(&(1, 16));
+                lo_served |= plan.prefill.first() == Some(&(sid(1), 16));
             }
         }
         assert!(lo_served, "WRR must not starve the low class under fusion");

@@ -13,6 +13,15 @@
 //!   touch the runtime), so every scheduling decision is unit-testable
 //!   without a `Runtime` or artifacts.
 //!
+//! Sequences are addressed by stable generational
+//! [`SeqId`](crate::engine::store::SeqId) handles, not raw table indices:
+//! the engine's sequence store recycles slots when requests finish, and a
+//! handle from a previous planning round — or a policy bug holding on to a
+//! finished lane — fails validation loudly instead of silently driving a
+//! recycled slot's new occupant. Policies that need a deterministic order
+//! key on the monotone request `id` carried by every view entry;
+//! handles themselves are deliberately unordered.
+//!
 //! Three built-in policies:
 //!
 //! * [`prefill_first::PrefillFirst`] — bit-for-bit the seed engine's
@@ -35,6 +44,7 @@ pub mod fair_share;
 pub mod prefill_first;
 
 use crate::engine::sequence::Phase;
+use crate::engine::store::SeqId;
 use crate::error::{Error, Result};
 
 /// A composite step: every phase of work one fused engine step executes.
@@ -53,14 +63,14 @@ use crate::error::{Error, Result};
 /// `Action::Run` is how fusion-aware policies compose mixed steps.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct BatchPlan {
-    /// `(seqs-index, chunk_len)` prefill chunks; chunks are ragged (any
+    /// `(handle, chunk_len)` prefill chunks; chunks are ragged (any
     /// length `1..=prefill_remaining`), not limited to artifact shapes.
-    pub prefill: Vec<(usize, usize)>,
+    pub prefill: Vec<(SeqId, usize)>,
     /// Fast-path decode lanes (≤ `max_batch`), one token each.
-    pub decode: Vec<usize>,
+    pub decode: Vec<SeqId>,
     /// Grouped-verification lanes (≤ `verify_group`); not counted against
     /// the token budget — verification runs on its own fixed-shape graph.
-    pub verify: Vec<usize>,
+    pub verify: Vec<SeqId>,
 }
 
 impl BatchPlan {
@@ -84,9 +94,10 @@ impl BatchPlan {
     /// Pure structural validation against a scheduling snapshot: no lane in
     /// two phases, budget respected, prefill entries target prefilling
     /// sequences with sane chunk lengths, decode/verify lanes are eligible
-    /// and within their shape caps. The executor re-checks against live
-    /// engine state; this form is what property tests and policy authors
-    /// exercise without an engine.
+    /// and within their shape caps. Handles that resolve to no lane in the
+    /// view — including stale generational handles — are rejected. The
+    /// executor re-checks against live engine state; this form is what
+    /// property tests and policy authors exercise without an engine.
     pub fn validate(&self, v: &SchedView) -> Result<()> {
         if self.is_empty() {
             return Err(Error::Engine("plan bug: empty BatchPlan".into()));
@@ -96,22 +107,22 @@ impl BatchPlan {
                 "plan bug: BatchPlan with fusion disabled (max_step_tokens = 0)".into(),
             ));
         }
-        let mut seen: Vec<usize> = Vec::with_capacity(
+        let mut seen: Vec<SeqId> = Vec::with_capacity(
             self.prefill.len() + self.decode.len() + self.verify.len(),
         );
-        for idx in self
+        for sid in self
             .prefill
             .iter()
-            .map(|&(i, _)| i)
+            .map(|&(s, _)| s)
             .chain(self.decode.iter().copied())
             .chain(self.verify.iter().copied())
         {
-            if seen.contains(&idx) {
+            if seen.contains(&sid) {
                 return Err(Error::Engine(format!(
-                    "plan bug: lane {idx} appears in two phases of one plan"
+                    "plan bug: lane {sid} appears in two phases of one plan"
                 )));
             }
-            seen.push(idx);
+            seen.push(sid);
         }
         if self.fast_tokens() > v.max_step_tokens {
             return Err(Error::Engine(format!(
@@ -120,18 +131,18 @@ impl BatchPlan {
                 v.max_step_tokens
             )));
         }
-        for &(idx, chunk) in &self.prefill {
-            let lane = v.lane(idx).ok_or_else(|| {
-                Error::Engine(format!("plan bug: prefill of unknown lane {idx}"))
+        for &(sid, chunk) in &self.prefill {
+            let lane = v.lane(sid).ok_or_else(|| {
+                Error::Engine(format!("plan bug: prefill of unknown or stale lane {sid}"))
             })?;
             if lane.phase != Phase::Prefilling {
                 return Err(Error::Engine(format!(
-                    "plan bug: prefill of non-prefilling lane {idx}"
+                    "plan bug: prefill of non-prefilling lane {sid}"
                 )));
             }
             if chunk == 0 || chunk > lane.prefill_remaining() {
                 return Err(Error::Engine(format!(
-                    "plan bug: prefill chunk {chunk} out of range (lane {idx} has {} \
+                    "plan bug: prefill chunk {chunk} out of range (lane {sid} has {} \
                      tokens remaining)",
                     lane.prefill_remaining()
                 )));
@@ -144,10 +155,10 @@ impl BatchPlan {
                 v.max_batch
             )));
         }
-        for &idx in &self.decode {
-            if !v.lane(idx).map(|l| l.can_decode).unwrap_or(false) {
+        for &sid in &self.decode {
+            if !v.lane(sid).map(|l| l.can_decode).unwrap_or(false) {
                 return Err(Error::Engine(format!(
-                    "plan bug: decode lane {idx} is not decodable"
+                    "plan bug: decode lane {sid} is not decodable"
                 )));
             }
         }
@@ -161,10 +172,10 @@ impl BatchPlan {
                 v.verify_group
             )));
         }
-        for &idx in &self.verify {
-            if !v.lane(idx).map(|l| l.verify_ready).unwrap_or(false) {
+        for &sid in &self.verify {
+            if !v.lane(sid).map(|l| l.verify_ready).unwrap_or(false) {
                 return Err(Error::Engine(format!(
-                    "plan bug: verify lane {idx} is not verify-ready"
+                    "plan bug: verify lane {sid} is not verify-ready"
                 )));
             }
         }
@@ -181,19 +192,19 @@ pub enum Action {
     /// Move up to `n` queued requests into free KV slots, in the order
     /// given by [`SchedulerPolicy::admit_order`].
     Admit { n: usize },
-    /// Evict the active sequence at seqs-index `victim` back to the queue,
-    /// freeing its KV slot. The executor only permits non-deterministic
-    /// victims; the committed prefix re-prefills on re-admission.
-    Preempt { victim: usize },
-    /// Run one prefill chunk of the sequence at seqs-index `seq`
-    /// (degenerate single-phase plan; seed-exact padded-chunk execution).
-    Prefill { seq: usize },
-    /// Fast-path decode over these seqs-indices (≤ `max_batch`;
-    /// degenerate single-phase plan on the shape-tuned bucket graphs).
-    Decode { lanes: Vec<usize> },
-    /// Grouped verification over these seqs-indices (≤ `verify_group`;
+    /// Evict the active sequence `victim` back to the queue, freeing its
+    /// KV slot. The executor only permits non-deterministic victims; the
+    /// committed prefix re-prefills on re-admission.
+    Preempt { victim: SeqId },
+    /// Run one prefill chunk of the sequence `seq` (degenerate
+    /// single-phase plan; seed-exact padded-chunk execution).
+    Prefill { seq: SeqId },
+    /// Fast-path decode over these lanes (≤ `max_batch`; degenerate
+    /// single-phase plan on the shape-tuned bucket graphs).
+    Decode { lanes: Vec<SeqId> },
+    /// Grouped verification over these lanes (≤ `verify_group`;
     /// degenerate single-phase plan on the fixed-shape verifier graph).
-    Verify { lanes: Vec<usize> },
+    Verify { lanes: Vec<SeqId> },
     /// Execute a composite token-budgeted step: all fast-path work in one
     /// ragged fused forward, plus the verify group on its own fixed-shape
     /// graph. Only legal when the engine runs with `max_step_tokens > 0`.
@@ -205,8 +216,11 @@ pub enum Action {
 /// Immutable snapshot of one active (prefilling or decoding) sequence.
 #[derive(Debug, Clone)]
 pub struct LaneView {
-    /// index into the engine's sequence table (the handle actions use)
-    pub idx: usize,
+    /// stable generational handle into the engine's sequence store (the
+    /// address actions use; stale handles are rejected by the executor)
+    pub sid: SeqId,
+    /// monotone request id — the deterministic ordering key (handles are
+    /// unordered; slot numbers recycle)
     pub id: u64,
     pub phase: Phase,
     pub deterministic: bool,
@@ -270,7 +284,9 @@ impl LaneView {
 /// Immutable snapshot of one queued (not yet admitted) request.
 #[derive(Debug, Clone)]
 pub struct QueuedView {
-    pub idx: usize,
+    /// stable generational handle (see [`LaneView::sid`])
+    pub sid: SeqId,
+    /// monotone request id — the deterministic ordering key
     pub id: u64,
     pub priority: u8,
     pub deadline_ms: Option<f64>,
@@ -331,34 +347,34 @@ pub struct SchedView {
     pub cached_blocks: usize,
     /// block-granular prefix sharing active
     pub prefix_cache: bool,
-    /// active sequences, ascending seqs-index order
+    /// active sequences, ascending request-id (= submission) order
     pub lanes: Vec<LaneView>,
     /// queued requests, FIFO order
     pub queue: Vec<QueuedView>,
 }
 
 impl SchedView {
-    pub fn lane(&self, idx: usize) -> Option<&LaneView> {
-        self.lanes.iter().find(|l| l.idx == idx)
+    pub fn lane(&self, sid: SeqId) -> Option<&LaneView> {
+        self.lanes.iter().find(|l| l.sid == sid)
     }
 
-    /// Seqs-indices decodable right now, in table order, capped at
+    /// Lanes decodable right now, in submission order, capped at
     /// `max_batch` (the seed engine's `decodable_lanes`).
-    pub fn decodable(&self) -> Vec<usize> {
+    pub fn decodable(&self) -> Vec<SeqId> {
         self.lanes
             .iter()
             .filter(|l| l.can_decode)
-            .map(|l| l.idx)
+            .map(|l| l.sid)
             .take(self.max_batch)
             .collect()
     }
 
-    /// Seqs-indices with a verification-ready window, in table order.
-    pub fn verify_ready(&self) -> Vec<usize> {
+    /// Lanes with a verification-ready window, in submission order.
+    pub fn verify_ready(&self) -> Vec<SeqId> {
         self.lanes
             .iter()
             .filter(|l| l.verify_ready)
-            .map(|l| l.idx)
+            .map(|l| l.sid)
             .collect()
     }
 
@@ -380,8 +396,8 @@ pub trait SchedulerPolicy: Send {
 
     /// Order queued requests for admission (first = admitted first).
     /// Default is FIFO — the seed engine's FCFS admission.
-    fn admit_order(&mut self, view: &SchedView) -> Vec<usize> {
-        view.queue.iter().map(|q| q.idx).collect()
+    fn admit_order(&mut self, view: &SchedView) -> Vec<SeqId> {
+        view.queue.iter().map(|q| q.sid).collect()
     }
 }
 
@@ -400,7 +416,7 @@ pub trait SchedulerPolicy: Send {
 /// admission absorbs each freed slot. Deterministic lanes are never
 /// victims: their committed stream must not depend on scheduling, and
 /// eviction would discard verified KV state.
-pub fn preemption_victim(view: &SchedView, beneficiary_priority: u8) -> Option<usize> {
+pub fn preemption_victim(view: &SchedView, beneficiary_priority: u8) -> Option<SeqId> {
     if view.free_slots > 0 || view.queue.is_empty() {
         return None;
     }
@@ -416,7 +432,7 @@ pub fn preemption_victim(view: &SchedView, beneficiary_priority: u8) -> Option<u
         .min_by(|a, b| {
             // lowest priority first; most KV pages held among those (one
             // eviction should relieve the most block pressure); youngest
-            // (max arrive_time) as the final tiebreak
+            // (max arrive_time, then max request id) as the final tiebreak
             a.priority
                 .cmp(&b.priority)
                 .then(b.kv_blocks.cmp(&a.kv_blocks))
@@ -425,9 +441,9 @@ pub fn preemption_victim(view: &SchedView, beneficiary_priority: u8) -> Option<u
                         .partial_cmp(&a.arrive_time)
                         .unwrap_or(std::cmp::Ordering::Equal),
                 )
-                .then(b.idx.cmp(&a.idx))
+                .then(b.id.cmp(&a.id))
         })
-        .map(|l| l.idx)
+        .map(|l| l.sid)
 }
 
 /// Pack policy-ordered work into one token-budgeted composite plan (the
@@ -444,20 +460,20 @@ pub fn preemption_victim(view: &SchedView, beneficiary_priority: u8) -> Option<u
 /// Returns [`Action::Idle`] when nothing fits or nothing is runnable.
 pub fn compose_plan(
     v: &SchedView,
-    decode: Vec<usize>,
-    verify: Vec<usize>,
-    prefill_order: &[usize],
+    decode: Vec<SeqId>,
+    verify: Vec<SeqId>,
+    prefill_order: &[SeqId],
 ) -> Action {
     let budget = v.max_step_tokens;
     debug_assert!(budget > 0, "compose_plan with fusion disabled");
     let mut plan = BatchPlan { decode, verify, prefill: Vec::new() };
     plan.decode.truncate(budget);
     let mut left = budget - plan.decode.len();
-    for &idx in prefill_order {
+    for &sid in prefill_order {
         if left == 0 {
             break;
         }
-        let remaining = match v.lane(idx) {
+        let remaining = match v.lane(sid) {
             Some(l) if l.phase == Phase::Prefilling => l.prefill_remaining(),
             _ => 0,
         };
@@ -465,7 +481,7 @@ pub fn compose_plan(
         if chunk == 0 {
             continue;
         }
-        plan.prefill.push((idx, chunk));
+        plan.prefill.push((sid, chunk));
         left -= chunk;
     }
     if plan.is_empty() {
@@ -482,7 +498,7 @@ pub fn compose_plan(
 /// cannot drift between call sites.
 pub fn verify_trigger(
     v: &SchedView,
-    ready: &[usize],
+    ready: &[SeqId],
     urgent: bool,
     idle_otherwise: bool,
 ) -> bool {
@@ -493,9 +509,9 @@ pub fn verify_trigger(
 /// The seed stall rule: some ready lane has waited past `max_stall_steps`
 /// (the baseline urgency every policy keeps; deadline-aware scheduling
 /// tightens it with slack, never loosens it).
-pub fn any_stalled(v: &SchedView, ready: &[usize]) -> bool {
-    ready.iter().any(|&i| {
-        v.lane(i)
+pub fn any_stalled(v: &SchedView, ready: &[SeqId]) -> bool {
+    ready.iter().any(|&sid| {
+        v.lane(sid)
             .map(|l| l.stall_steps >= v.max_stall_steps)
             .unwrap_or(false)
     })
@@ -551,9 +567,14 @@ impl PolicyKind {
 mod tests {
     use super::*;
 
+    /// Test handle for synthetic views: slot = idx, generation 0.
+    pub(crate) fn sid(idx: usize) -> SeqId {
+        SeqId::from_parts(idx as u32, 0)
+    }
+
     pub(crate) fn lane(idx: usize, priority: u8, det: bool) -> LaneView {
         LaneView {
-            idx,
+            sid: sid(idx),
             id: idx as u64 + 1,
             phase: Phase::Decoding,
             deterministic: det,
@@ -577,7 +598,7 @@ mod tests {
 
     pub(crate) fn queued(idx: usize, priority: u8) -> QueuedView {
         QueuedView {
-            idx,
+            sid: sid(idx),
             id: idx as u64 + 1,
             priority,
             deadline_ms: None,
@@ -640,7 +661,7 @@ mod tests {
             lane(3, 1, false),
         ];
         let v = view(lanes, vec![queued(9, 3)], 0);
-        assert_eq!(preemption_victim(&v, 3), Some(1));
+        assert_eq!(preemption_victim(&v, 3), Some(sid(1)));
     }
 
     #[test]
@@ -655,7 +676,7 @@ mod tests {
         // priority: a low-priority next admission must not evict anyone
         let v = view(vec![lane(0, 1, false)], vec![queued(9, 3), queued(10, 0)], 0);
         assert_eq!(preemption_victim(&v, 0), None, "next admission is class 0");
-        assert_eq!(preemption_victim(&v, 3), Some(0));
+        assert_eq!(preemption_victim(&v, 3), Some(sid(0)));
     }
 
     #[test]
@@ -667,7 +688,7 @@ mod tests {
         big.kv_blocks = 9;
         let small = lane(1, 0, false); // younger but tiny
         let v = view(vec![big, small], vec![queued(9, 3)], 0);
-        assert_eq!(preemption_victim(&v, 3), Some(0));
+        assert_eq!(preemption_victim(&v, 3), Some(sid(0)));
     }
 
     #[test]
@@ -696,12 +717,12 @@ mod tests {
             0,
         );
         v.max_step_tokens = 10;
-        let action = compose_plan(&v, vec![0, 1], vec![], &[2]);
+        let action = compose_plan(&v, vec![sid(0), sid(1)], vec![], &[sid(2)]);
         match action {
             Action::Run(plan) => {
-                assert_eq!(plan.decode, vec![0, 1]);
+                assert_eq!(plan.decode, vec![sid(0), sid(1)]);
                 // 10 - 2 decode tokens: an 8-token ragged chunk
-                assert_eq!(plan.prefill, vec![(2, 8)]);
+                assert_eq!(plan.prefill, vec![(sid(2), 8)]);
                 assert_eq!(plan.fast_tokens(), 10);
                 assert!(plan.validate(&v).is_ok());
             }
@@ -713,9 +734,9 @@ mod tests {
     fn compose_splits_budget_across_prefilling_lanes() {
         let mut v = view(vec![prefilling(0, 5), prefilling(1, 90)], vec![], 0);
         v.max_step_tokens = 32;
-        match compose_plan(&v, vec![], vec![], &[0, 1]) {
+        match compose_plan(&v, vec![], vec![], &[sid(0), sid(1)]) {
             Action::Run(plan) => {
-                assert_eq!(plan.prefill, vec![(0, 5), (1, 27)]);
+                assert_eq!(plan.prefill, vec![(sid(0), 5), (sid(1), 27)]);
                 assert!(plan.validate(&v).is_ok());
             }
             other => panic!("expected Run, got {other:?}"),
@@ -742,33 +763,41 @@ mod tests {
         v.max_step_tokens = 16;
 
         let ok = BatchPlan {
-            prefill: vec![(2, 15)],
-            decode: vec![0],
-            verify: vec![1],
+            prefill: vec![(sid(2), 15)],
+            decode: vec![sid(0)],
+            verify: vec![sid(1)],
         };
         assert!(ok.validate(&v).is_ok());
 
         // budget overrun
-        let over = BatchPlan { prefill: vec![(2, 16)], decode: vec![0], ..ok.clone() };
+        let over = BatchPlan { prefill: vec![(sid(2), 16)], decode: vec![sid(0)], ..ok.clone() };
         assert!(over.validate(&v).is_err());
         // lane in two phases
-        let dup = BatchPlan { decode: vec![0], verify: vec![0], prefill: vec![] };
+        let dup = BatchPlan { decode: vec![sid(0)], verify: vec![sid(0)], prefill: vec![] };
         assert!(dup.validate(&v).is_err());
         // prefill of a non-prefilling lane / oversized chunk / zero chunk
-        assert!(BatchPlan { prefill: vec![(0, 1)], ..Default::default() }
+        assert!(BatchPlan { prefill: vec![(sid(0), 1)], ..Default::default() }
             .validate(&v)
             .is_err());
-        assert!(BatchPlan { prefill: vec![(2, 41)], ..Default::default() }
+        assert!(BatchPlan { prefill: vec![(sid(2), 41)], ..Default::default() }
             .validate(&v)
             .is_err());
-        assert!(BatchPlan { prefill: vec![(2, 0)], ..Default::default() }
+        assert!(BatchPlan { prefill: vec![(sid(2), 0)], ..Default::default() }
             .validate(&v)
             .is_err());
         // non-decodable decode lane, non-ready verify lane
-        assert!(BatchPlan { decode: vec![1], ..Default::default() }
+        assert!(BatchPlan { decode: vec![sid(1)], ..Default::default() }
             .validate(&v)
             .is_err());
-        assert!(BatchPlan { verify: vec![0], ..Default::default() }
+        assert!(BatchPlan { verify: vec![sid(0)], ..Default::default() }
+            .validate(&v)
+            .is_err());
+        // a handle that matches no lane in the view (stale generation)
+        let stale = SeqId::from_parts(0, 999);
+        assert!(BatchPlan { decode: vec![stale], ..Default::default() }
+            .validate(&v)
+            .is_err());
+        assert!(BatchPlan { prefill: vec![(stale, 1)], ..Default::default() }
             .validate(&v)
             .is_err());
         // empty plan and fusion-off plan

@@ -16,6 +16,7 @@ use crate::engine::scheduler::{
     any_stalled, compose_plan, verify_trigger, Action, SchedView, SchedulerPolicy,
 };
 use crate::engine::sequence::Phase;
+use crate::engine::store::SeqId;
 
 #[derive(Debug, Default)]
 pub struct PrefillFirst;
@@ -26,11 +27,11 @@ impl PrefillFirst {
     /// verify group riding along under the seed trigger conditions.
     fn plan_fused(&self, v: &SchedView) -> Action {
         let decode = v.decodable();
-        let prefilling: Vec<usize> = v
+        let prefilling: Vec<SeqId> = v
             .lanes
             .iter()
             .filter(|l| l.phase == Phase::Prefilling)
-            .map(|l| l.idx)
+            .map(|l| l.sid)
             .collect();
         let mut verify = Vec::new();
         if v.dvr {
@@ -68,7 +69,7 @@ impl SchedulerPolicy for PrefillFirst {
 
         // 1. prefill-first: one chunk of the oldest prefilling sequence
         if let Some(l) = v.lanes.iter().find(|l| l.phase == Phase::Prefilling) {
-            return Action::Prefill { seq: l.idx };
+            return Action::Prefill { seq: l.sid };
         }
 
         // 2. grouped verification when warranted
@@ -95,7 +96,7 @@ impl SchedulerPolicy for PrefillFirst {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::scheduler::tests::{lane, queued, view};
+    use crate::engine::scheduler::tests::{lane, queued, sid, view};
     use crate::engine::sequence::Phase;
 
     #[test]
@@ -104,7 +105,7 @@ mod tests {
         let v = view(vec![], vec![queued(0, 0), queued(1, 0), queued(2, 0)], 2);
         assert_eq!(p.plan(&v), Action::Admit { n: 2 });
         // FIFO admit order
-        assert_eq!(p.admit_order(&v), vec![0, 1, 2]);
+        assert_eq!(p.admit_order(&v), vec![sid(0), sid(1), sid(2)]);
     }
 
     #[test]
@@ -120,7 +121,7 @@ mod tests {
         rdy.can_decode = false;
         let dec = lane(2, 0, false);
         let v = view(vec![pre, rdy, dec], vec![], 1);
-        assert_eq!(p.plan(&v), Action::Prefill { seq: 0 });
+        assert_eq!(p.plan(&v), Action::Prefill { seq: sid(0) });
     }
 
     #[test]
@@ -136,21 +137,21 @@ mod tests {
         b.can_decode = false;
         let c = lane(2, 0, false);
         let v = view(vec![a.clone(), b, c.clone()], vec![], 1);
-        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0, 1] });
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![sid(0), sid(1)] });
 
         // single ready lane, not stalled, decodables exist -> decode wins
         let v = view(vec![a.clone(), c.clone()], vec![], 1);
-        assert_eq!(p.plan(&v), Action::Decode { lanes: vec![2] });
+        assert_eq!(p.plan(&v), Action::Decode { lanes: vec![sid(2)] });
 
         // stalled lane forces verification
         let mut stalled = a.clone();
         stalled.stall_steps = 4;
         let v = view(vec![stalled, c], vec![], 1);
-        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] });
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![sid(0)] });
 
         // nothing decodable -> verify rather than idle
         let v = view(vec![a], vec![], 1);
-        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![0] });
+        assert_eq!(p.plan(&v), Action::Verify { lanes: vec![sid(0)] });
     }
 
     #[test]
@@ -175,9 +176,9 @@ mod tests {
         v.max_step_tokens = 24;
         match p.plan(&v) {
             Action::Run(plan) => {
-                assert_eq!(plan.decode, vec![0]);
-                assert_eq!(plan.verify, vec![1]);
-                assert_eq!(plan.prefill, vec![(2, 23)], "budget minus one decode token");
+                assert_eq!(plan.decode, vec![sid(0)]);
+                assert_eq!(plan.verify, vec![sid(1)]);
+                assert_eq!(plan.prefill, vec![(sid(2), 23)], "budget minus one decode token");
                 assert!(plan.validate(&v).is_ok());
             }
             other => panic!("expected a fused Run, got {other:?}"),
@@ -185,6 +186,6 @@ mod tests {
 
         // budget 0 keeps the seed-exclusive behavior (prefill wins)
         v.max_step_tokens = 0;
-        assert_eq!(p.plan(&v), Action::Prefill { seq: 2 });
+        assert_eq!(p.plan(&v), Action::Prefill { seq: sid(2) });
     }
 }

@@ -1,0 +1,614 @@
+//! Slab-backed sequence store: stable generational handles and
+//! O(live) per-step scans.
+//!
+//! The pre-store engine kept every request ever served in a
+//! `Vec<Sequence>`, tombstoning finished entries and addressing live ones
+//! by raw index. That made per-step scan cost — view building, stall
+//! bumping, timeout reaping, the stream sweep — and memory grow with the
+//! *total* number of requests served, which is fine for a benchmark and
+//! wrong for a weeks-long server. This module replaces it with:
+//!
+//! * **A slab of slots with a free list.** Retiring or aborting a
+//!   sequence returns its slot for reuse, so the slab's capacity is
+//!   bounded by the *live* high-water mark, never by cumulative traffic
+//!   (`tests/soak.rs` pins this with a churn workload).
+//! * **Generational [`SeqId`] handles.** Every slot carries a generation
+//!   counter, bumped on removal; a handle is `(slot, generation)` and
+//!   resolves only while its generation matches. A reused slot can
+//!   therefore never alias a cancelled or finished request — a stale
+//!   handle held by a buggy scheduling policy fails lookup loudly instead
+//!   of silently driving someone else's sequence (the executor's
+//!   `check_plan` turns that failed lookup into a policy-bug error).
+//! * **Phase-indexed live sets.** Queued, prefilling, decoding, and
+//!   streaming sequences are tracked in their own lanes, so every
+//!   per-step scan iterates exactly the sequences it can affect: the view
+//!   builder and stall bump walk the active lanes, the timeout reaper
+//!   walks all live lanes, and the stream sweep walks only streaming
+//!   ones. Nothing ever iterates finished requests, because finished
+//!   requests leave the store entirely.
+//!
+//! # Ordering contract
+//!
+//! Request ids are assigned monotonically at submission, and the
+//! pre-store engine's scans ran in table order — which *was* submission
+//! order. To keep every scheduling decision bit-for-bit identical (the
+//! seed-replay test in `tests/scheduler.rs` depends on it), the active
+//! lanes are kept sorted by request id and [`SequenceStore::iter_active`]
+//! merges them in ascending-id order; the queued lane is a FIFO of
+//! enqueue events (submission order, with preempted victims re-enqueued
+//! at the back), exactly like the old `VecDeque<usize>`.
+//!
+//! Phase transitions go through the store ([`SequenceStore::begin_prefill`],
+//! [`SequenceStore::begin_decode`], [`SequenceStore::requeue`],
+//! [`SequenceStore::remove`]) so the lane indexes can never drift from the
+//! sequences they index. A sequence may mark itself `Phase::Finished`
+//! mid-step (EOS, length); the store tracks lane membership independently,
+//! so the subsequent `remove` still finds it in whichever lane it occupied.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::engine::sequence::{Phase, Sequence};
+
+/// Stable generational handle to a sequence in a [`SequenceStore`].
+///
+/// The handle is `(slot, generation)`: slots are reused after removal,
+/// generations are not — lookups with a stale handle return `None`.
+/// `SeqId` deliberately implements neither `Ord` nor arithmetic: slot
+/// numbers carry no submission-order meaning once slots recycle, so
+/// anything that needs a deterministic order (policy tiebreaks, view
+/// ordering) must key on the request's monotone `id` instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SeqId {
+    slot: u32,
+    gen: u32,
+}
+
+impl SeqId {
+    /// Slot index (diagnostics and tests; not an ordering key).
+    pub fn slot(self) -> usize {
+        self.slot as usize
+    }
+
+    /// Generation the handle was issued under.
+    pub fn generation(self) -> u32 {
+        self.gen
+    }
+
+    /// Construct a handle from raw parts. Intended for tests and
+    /// synthetic scheduling views; a fabricated handle that matches no
+    /// live slot simply fails lookup.
+    pub fn from_parts(slot: u32, gen: u32) -> SeqId {
+        SeqId { slot, gen }
+    }
+}
+
+impl std::fmt::Display for SeqId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}v{}", self.slot, self.gen)
+    }
+}
+
+/// Which live lane a stored sequence currently occupies. Tracked by the
+/// store itself (not derived from `Sequence::phase`): a sequence may flip
+/// its phase to `Finished` mid-step, but it stays indexed under its last
+/// lane until [`SequenceStore::remove`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Lane {
+    Queued,
+    Prefilling,
+    Decoding,
+}
+
+#[derive(Debug)]
+struct Slot {
+    gen: u32,
+    seq: Option<(Lane, Sequence)>,
+}
+
+/// Id-sorted lane index: `(request id, handle)` pairs kept ascending by
+/// id, so merged iteration reproduces submission order.
+type SortedLane = Vec<(u64, SeqId)>;
+
+fn sorted_insert(lane: &mut SortedLane, id: u64, sid: SeqId) {
+    let pos = lane.partition_point(|&(x, _)| x < id);
+    lane.insert(pos, (id, sid));
+}
+
+fn sorted_remove(lane: &mut SortedLane, id: u64) -> bool {
+    match lane.binary_search_by_key(&id, |&(x, _)| x) {
+        Ok(pos) => {
+            lane.remove(pos);
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+/// The engine's sequence table: a generational slab plus phase-indexed
+/// live lanes (see the module docs for the design rationale).
+#[derive(Debug, Default)]
+pub struct SequenceStore {
+    slots: Vec<Slot>,
+    /// vacant slot indices (LIFO reuse keeps the slab dense)
+    free: Vec<u32>,
+    /// live request id -> handle (the cancel path's O(1) lookup)
+    by_id: HashMap<u64, SeqId>,
+    /// queued lane, FIFO by enqueue event (submission order; preempted
+    /// victims re-enqueue at the back)
+    queued: VecDeque<SeqId>,
+    prefilling: SortedLane,
+    decoding: SortedLane,
+    /// live sequences with `Request::stream = true`, any lane
+    streaming: SortedLane,
+    live_hwm: usize,
+}
+
+impl SequenceStore {
+    pub fn new() -> SequenceStore {
+        SequenceStore::default()
+    }
+
+    /// Insert a freshly submitted sequence (must be `Phase::Queued`) and
+    /// return its handle. Reuses a free slot when one exists; the slab
+    /// only grows when every slot is live.
+    pub fn insert(&mut self, seq: Sequence) -> SeqId {
+        debug_assert_eq!(seq.phase, Phase::Queued, "insert expects a queued sequence");
+        let id = seq.id;
+        let stream = seq.req.stream;
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(Slot { gen: 0, seq: None });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let sid = SeqId { slot, gen: self.slots[slot as usize].gen };
+        self.slots[slot as usize].seq = Some((Lane::Queued, seq));
+        self.by_id.insert(id, sid);
+        self.queued.push_back(sid);
+        if stream {
+            sorted_insert(&mut self.streaming, id, sid);
+        }
+        if self.live() > self.live_hwm {
+            self.live_hwm = self.live();
+        }
+        sid
+    }
+
+    /// Resolve a handle; `None` when it is stale (slot reused or removed).
+    pub fn get(&self, sid: SeqId) -> Option<&Sequence> {
+        self.slots
+            .get(sid.slot as usize)
+            .filter(|s| s.gen == sid.gen)
+            .and_then(|s| s.seq.as_ref())
+            .map(|(_, seq)| seq)
+    }
+
+    pub fn get_mut(&mut self, sid: SeqId) -> Option<&mut Sequence> {
+        self.slots
+            .get_mut(sid.slot as usize)
+            .filter(|s| s.gen == sid.gen)
+            .and_then(|s| s.seq.as_mut())
+            .map(|(_, seq)| seq)
+    }
+
+    /// Handle of the live sequence with this request id, if any. Finished
+    /// or removed requests resolve to `None` — ids are never reused, so
+    /// this is the cancel path's race-free lookup.
+    pub fn find(&self, id: u64) -> Option<SeqId> {
+        self.by_id.get(&id).copied()
+    }
+
+    fn lane_of(&self, sid: SeqId) -> Option<Lane> {
+        self.slots
+            .get(sid.slot as usize)
+            .filter(|s| s.gen == sid.gen)
+            .and_then(|s| s.seq.as_ref())
+            .map(|&(lane, _)| lane)
+    }
+
+    pub fn is_queued(&self, sid: SeqId) -> bool {
+        self.lane_of(sid) == Some(Lane::Queued)
+    }
+
+    /// Queued -> Prefilling (admission). Sets the sequence's phase and
+    /// moves it between lanes; `false` when the handle is stale or the
+    /// sequence is not queued.
+    pub fn begin_prefill(&mut self, sid: SeqId) -> bool {
+        if self.lane_of(sid) != Some(Lane::Queued) {
+            return false;
+        }
+        let pos = match self.queued.iter().position(|&q| q == sid) {
+            Some(p) => p,
+            None => return false,
+        };
+        self.queued.remove(pos);
+        let (lane, seq) = self.slots[sid.slot as usize]
+            .seq
+            .as_mut()
+            .expect("lane_of checked liveness");
+        *lane = Lane::Prefilling;
+        seq.phase = Phase::Prefilling;
+        let id = seq.id;
+        sorted_insert(&mut self.prefilling, id, sid);
+        true
+    }
+
+    /// Prefilling -> Decoding (prefill complete). `false` when the handle
+    /// is stale or the sequence is not prefilling.
+    pub fn begin_decode(&mut self, sid: SeqId) -> bool {
+        if self.lane_of(sid) != Some(Lane::Prefilling) {
+            return false;
+        }
+        let (lane, seq) = self.slots[sid.slot as usize]
+            .seq
+            .as_mut()
+            .expect("lane_of checked liveness");
+        *lane = Lane::Decoding;
+        seq.phase = Phase::Decoding;
+        let id = seq.id;
+        sorted_remove(&mut self.prefilling, id);
+        sorted_insert(&mut self.decoding, id, sid);
+        true
+    }
+
+    /// Active -> Queued (preemption). The caller runs
+    /// [`Sequence::preempt`] first — it owns the replay-debt accounting
+    /// and sets the phase — and the store then re-files the lane
+    /// membership, enqueueing the victim at the back of the FIFO.
+    pub fn requeue(&mut self, sid: SeqId) -> bool {
+        let old = match self.lane_of(sid) {
+            Some(l @ (Lane::Prefilling | Lane::Decoding)) => l,
+            _ => return false,
+        };
+        let (lane, seq) = self.slots[sid.slot as usize]
+            .seq
+            .as_mut()
+            .expect("lane_of checked liveness");
+        debug_assert_eq!(seq.phase, Phase::Queued, "call Sequence::preempt first");
+        *lane = Lane::Queued;
+        let id = seq.id;
+        match old {
+            Lane::Prefilling => sorted_remove(&mut self.prefilling, id),
+            Lane::Decoding => sorted_remove(&mut self.decoding, id),
+            Lane::Queued => unreachable!("matched above"),
+        };
+        self.queued.push_back(sid);
+        true
+    }
+
+    /// Remove a sequence from the store (retire or abort, any lane) and
+    /// return it. Bumps the slot's generation — every outstanding handle
+    /// to this sequence is stale from here on — and recycles the slot.
+    pub fn remove(&mut self, sid: SeqId) -> Option<Sequence> {
+        let slot = self.slots.get_mut(sid.slot as usize)?;
+        if slot.gen != sid.gen {
+            return None;
+        }
+        let (lane, seq) = slot.seq.take()?;
+        slot.gen = slot.gen.wrapping_add(1);
+        self.free.push(sid.slot);
+        self.by_id.remove(&seq.id);
+        match lane {
+            Lane::Queued => {
+                let pos = self.queued.iter().position(|&q| q == sid);
+                debug_assert!(
+                    pos.is_some(),
+                    "queued-lane sequence {sid} missing from the FIFO"
+                );
+                if let Some(pos) = pos {
+                    self.queued.remove(pos);
+                }
+            }
+            Lane::Prefilling => {
+                sorted_remove(&mut self.prefilling, seq.id);
+            }
+            Lane::Decoding => {
+                sorted_remove(&mut self.decoding, seq.id);
+            }
+        }
+        if seq.req.stream {
+            sorted_remove(&mut self.streaming, seq.id);
+        }
+        Some(seq)
+    }
+
+    /// Live sequences (queued + active).
+    pub fn live(&self) -> usize {
+        self.by_id.len()
+    }
+
+    /// Highest number of concurrently live sequences ever observed — the
+    /// quantity that bounds [`SequenceStore::capacity`].
+    pub fn live_hwm(&self) -> usize {
+        self.live_hwm
+    }
+
+    /// Slab slots allocated (live + free). Grows to the live high-water
+    /// mark and never with cumulative request count.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn queued_len(&self) -> usize {
+        self.queued.len()
+    }
+
+    /// Prefilling + decoding sequences.
+    pub fn active_count(&self) -> usize {
+        self.prefilling.len() + self.decoding.len()
+    }
+
+    /// Queued sequences in FIFO order.
+    pub fn iter_queued(&self) -> impl Iterator<Item = (SeqId, &Sequence)> + '_ {
+        self.queued
+            .iter()
+            .map(move |&sid| (sid, self.get(sid).expect("queued entry is live")))
+    }
+
+    /// Queued handles in FIFO order (the admission fallback's filter).
+    pub fn queued_ids(&self) -> impl Iterator<Item = SeqId> + '_ {
+        self.queued.iter().copied()
+    }
+
+    /// Active (prefilling or decoding) sequences in ascending request-id
+    /// order — submission order, the pre-store engine's table order.
+    pub fn iter_active(&self) -> ActiveIter<'_> {
+        ActiveIter { store: self, i: 0, j: 0 }
+    }
+
+    /// Every live sequence: queued (FIFO), then prefilling, then decoding.
+    /// Callers that need a deterministic global order sort the results by
+    /// request id (the timeout reaper does).
+    pub fn iter_live(&self) -> impl Iterator<Item = (SeqId, &Sequence)> + '_ {
+        self.iter_queued().chain(
+            self.prefilling
+                .iter()
+                .chain(self.decoding.iter())
+                .map(move |&(_, sid)| (sid, self.get(sid).expect("lane entry is live"))),
+        )
+    }
+
+    /// Shared body of the mutable lane walks, so the release-mode
+    /// generational guard lives in exactly one place. Index loop, not
+    /// iterator: iterating the lane vector would hold an immutable borrow
+    /// of `self` across the mutable slot accesses.
+    #[allow(clippy::needless_range_loop)]
+    fn for_each_lane_entry_mut<F: FnMut(&mut Sequence)>(&mut self, streaming: bool, mut f: F) {
+        let len = if streaming { self.streaming.len() } else { self.decoding.len() };
+        for k in 0..len {
+            let sid = if streaming { self.streaming[k].1 } else { self.decoding[k].1 };
+            let slot = &mut self.slots[sid.slot as usize];
+            // generational check in release too: a lane entry that drifted
+            // from the slab must never mutate the slot's new occupant
+            // (e.g. stream another request's tokens under a dead id)
+            debug_assert_eq!(slot.gen, sid.gen, "lane entry went stale");
+            if slot.gen != sid.gen {
+                continue;
+            }
+            if let Some((_, seq)) = slot.seq.as_mut() {
+                f(seq);
+            }
+        }
+    }
+
+    /// Mutate every decoding sequence, ascending request-id order (the
+    /// stall bump's scan: only decoding lanes can be verify-ready).
+    pub fn for_each_decoding_mut<F: FnMut(&mut Sequence)>(&mut self, f: F) {
+        self.for_each_lane_entry_mut(false, f)
+    }
+
+    /// Mutate every live streaming sequence, ascending request-id order
+    /// (the commit-boundary delta sweep's scan).
+    pub fn for_each_streaming_mut<F: FnMut(&mut Sequence)>(&mut self, f: F) {
+        self.for_each_lane_entry_mut(true, f)
+    }
+}
+
+/// Panicking lookup for engine-internal paths whose handles were already
+/// validated (the moral equivalent of the old `self.seqs[idx]` indexing).
+impl std::ops::Index<SeqId> for SequenceStore {
+    type Output = Sequence;
+    fn index(&self, sid: SeqId) -> &Sequence {
+        self.get(sid).expect("stale SeqId")
+    }
+}
+
+impl std::ops::IndexMut<SeqId> for SequenceStore {
+    fn index_mut(&mut self, sid: SeqId) -> &mut Sequence {
+        self.get_mut(sid).expect("stale SeqId")
+    }
+}
+
+/// Merged ascending-id iterator over the prefilling and decoding lanes
+/// (both are id-sorted, so this is a two-finger merge).
+pub struct ActiveIter<'a> {
+    store: &'a SequenceStore,
+    i: usize,
+    j: usize,
+}
+
+impl<'a> Iterator for ActiveIter<'a> {
+    type Item = (SeqId, &'a Sequence);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let p = self.store.prefilling.get(self.i);
+        let d = self.store.decoding.get(self.j);
+        let sid = match (p, d) {
+            (Some(&(pid, ps)), Some(&(did, ds))) => {
+                if pid < did {
+                    self.i += 1;
+                    ps
+                } else {
+                    self.j += 1;
+                    ds
+                }
+            }
+            (Some(&(_, ps)), None) => {
+                self.i += 1;
+                ps
+            }
+            (None, Some(&(_, ds))) => {
+                self.j += 1;
+                ds
+            }
+            (None, None) => return None,
+        };
+        Some((sid, self.store.get(sid).expect("lane entry is live")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::sequence::Request;
+
+    fn seq(id: u64) -> Sequence {
+        Sequence::new(id, Request::greedy(vec![1, 2, 3], 8, false), id as f64)
+    }
+
+    fn streaming_seq(id: u64) -> Sequence {
+        let mut r = Request::greedy(vec![1, 2, 3], 8, false);
+        r.stream = true;
+        Sequence::new(id, r, id as f64)
+    }
+
+    #[test]
+    fn insert_find_remove_roundtrip() {
+        let mut st = SequenceStore::new();
+        let a = st.insert(seq(1));
+        let b = st.insert(seq(2));
+        assert_eq!(st.live(), 2);
+        assert_eq!(st.find(1), Some(a));
+        assert_eq!(st.find(2), Some(b));
+        assert_eq!(st[a].id, 1);
+        let gone = st.remove(a).unwrap();
+        assert_eq!(gone.id, 1);
+        assert_eq!(st.find(1), None);
+        assert_eq!(st.get(a), None, "removed handle is stale");
+        assert_eq!(st.remove(a), None, "double remove is a no-op");
+        assert_eq!(st.live(), 1);
+    }
+
+    #[test]
+    fn generational_reuse_cannot_resurrect_a_removed_sequence() {
+        // the cancel-then-recycle race: a handle to a cancelled request
+        // must not resolve to whoever reuses its slot
+        let mut st = SequenceStore::new();
+        let a = st.insert(seq(1));
+        st.remove(a).unwrap();
+        let b = st.insert(seq(2));
+        assert_eq!(b.slot(), a.slot(), "slot is recycled");
+        assert_ne!(b.generation(), a.generation(), "generation advanced");
+        assert_eq!(st.get(a), None, "stale handle fails lookup");
+        assert!(!st.begin_prefill(a), "stale handle cannot transition");
+        assert_eq!(st.remove(a), None, "stale handle cannot remove the reuser");
+        assert_eq!(st[b].id, 2, "the reuser is untouched");
+    }
+
+    #[test]
+    fn capacity_is_bounded_by_the_live_high_water_mark() {
+        let mut st = SequenceStore::new();
+        // 100 requests through a store that never holds more than 3 live
+        let mut live: Vec<SeqId> = Vec::new();
+        for id in 1..=100u64 {
+            let sid = st.insert(seq(id));
+            live.push(sid);
+            if live.len() > 3 {
+                let victim = live.remove(0);
+                st.remove(victim).unwrap();
+            }
+        }
+        assert!(st.capacity() <= 4, "capacity {} tracks live, not total", st.capacity());
+        assert_eq!(st.live_hwm(), 4);
+        assert_eq!(st.live(), live.len());
+    }
+
+    #[test]
+    fn lanes_track_transitions_and_merge_in_id_order() {
+        let mut st = SequenceStore::new();
+        let a = st.insert(seq(1));
+        let b = st.insert(seq(2));
+        let c = st.insert(seq(3));
+        assert_eq!(st.queued_len(), 3);
+        assert_eq!(st.active_count(), 0);
+
+        // admit out of order: lanes still merge ascending by id
+        assert!(st.begin_prefill(c));
+        assert!(st.begin_prefill(a));
+        assert!(st.begin_decode(a));
+        assert_eq!(st.queued_len(), 1);
+        assert_eq!(st.active_count(), 2);
+        let order: Vec<u64> = st.iter_active().map(|(_, s)| s.id).collect();
+        assert_eq!(order, vec![1, 3], "submission order regardless of lane");
+        let queued: Vec<u64> = st.iter_queued().map(|(_, s)| s.id).collect();
+        assert_eq!(queued, vec![2]);
+
+        // illegal transitions are refused
+        assert!(!st.begin_prefill(a), "decoding lane is not queued");
+        assert!(!st.begin_decode(b), "queued lane is not prefilling");
+
+        // preemption re-enqueues at the back of the FIFO
+        st[a].preempt();
+        assert!(st.requeue(a));
+        let queued: Vec<u64> = st.iter_queued().map(|(_, s)| s.id).collect();
+        assert_eq!(queued, vec![2, 1], "victim goes to the back");
+        assert_eq!(st.active_count(), 1);
+    }
+
+    #[test]
+    fn streaming_lane_follows_inserts_and_removes() {
+        let mut st = SequenceStore::new();
+        let a = st.insert(streaming_seq(1));
+        let _b = st.insert(seq(2));
+        let c = st.insert(streaming_seq(3));
+        let mut ids = Vec::new();
+        st.for_each_streaming_mut(|s| ids.push(s.id));
+        assert_eq!(ids, vec![1, 3], "only streaming sequences, id order");
+        st.remove(a).unwrap();
+        let mut ids = Vec::new();
+        st.for_each_streaming_mut(|s| ids.push(s.id));
+        assert_eq!(ids, vec![3]);
+        st.begin_prefill(c);
+        st.begin_decode(c);
+        let mut ids = Vec::new();
+        st.for_each_streaming_mut(|s| ids.push(s.id));
+        assert_eq!(ids, vec![3], "streaming membership is lane-independent");
+    }
+
+    #[test]
+    fn decoding_scan_only_sees_decoding_lanes() {
+        let mut st = SequenceStore::new();
+        let a = st.insert(seq(1));
+        let b = st.insert(seq(2));
+        st.insert(seq(3)); // stays queued
+        st.begin_prefill(a);
+        st.begin_decode(a);
+        st.begin_prefill(b); // prefilling, not decoding
+        let mut ids = Vec::new();
+        st.for_each_decoding_mut(|s| ids.push(s.id));
+        assert_eq!(ids, vec![1]);
+    }
+
+    #[test]
+    fn iter_live_covers_every_lane() {
+        let mut st = SequenceStore::new();
+        let a = st.insert(seq(1));
+        let b = st.insert(seq(2));
+        st.insert(seq(3));
+        st.begin_prefill(a);
+        st.begin_decode(a);
+        st.begin_prefill(b);
+        let mut ids: Vec<u64> = st.iter_live().map(|(_, s)| s.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn display_and_accessors() {
+        let sid = SeqId::from_parts(4, 7);
+        assert_eq!(sid.slot(), 4);
+        assert_eq!(sid.generation(), 7);
+        assert_eq!(format!("{sid}"), "4v7");
+    }
+}

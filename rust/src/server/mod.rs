@@ -72,6 +72,7 @@
 //!       "fused_tokens": ..., "fused_occupancy": ...,
 //!       "finish_reasons": {"stop": ..., "length": ..., "cancelled": ...,
 //!                          "timeout": ..., "error": ...},
+//!       "store": {"live_seqs": ..., "live_seqs_hwm": ..., "capacity": ...},
 //!       "class_e2e": {"0": {...}, ...},
 //!       "kv": {"block_size": ..., "user_pages": ..., "free_pages": ...,
 //!              "cached_pages": ..., "available_pages": ...,
@@ -373,6 +374,18 @@ pub fn render_stats(m: &EngineMetrics, kv: &KvStats, waiters: usize) -> String {
             ]),
         ),
         ("waiters", Json::num(waiters as f64)),
+        // sequence-store occupancy: live gauge, live high-water mark, and
+        // slab capacity. Capacity tracks the live HWM, never cumulative
+        // request count — the O(live) scaling contract for long-lived
+        // servers (see ARCHITECTURE.md)
+        (
+            "store",
+            Json::obj(vec![
+                ("live_seqs", Json::num(m.live_seqs as f64)),
+                ("live_seqs_hwm", Json::num(m.live_seqs_hwm as f64)),
+                ("capacity", Json::num(m.store_capacity as f64)),
+            ]),
+        ),
         (
             "kv",
             Json::obj(vec![
@@ -1244,6 +1257,7 @@ mod tests {
         m.finished_length = 2;
         m.finished_cancelled = 3;
         m.finished_timeout = 1;
+        m.note_store(6, 11, 12);
         let kv = KvStats {
             block_size: 16,
             user_pages: 49,
@@ -1271,6 +1285,10 @@ mod tests {
         assert_eq!(fr.u("cancelled").unwrap(), 3);
         assert_eq!(fr.u("timeout").unwrap(), 1);
         assert_eq!(fr.u("error").unwrap(), 0);
+        let st = v.req("store").unwrap();
+        assert_eq!(st.u("live_seqs").unwrap(), 6);
+        assert_eq!(st.u("live_seqs_hwm").unwrap(), 11);
+        assert_eq!(st.u("capacity").unwrap(), 12);
         let k = v.req("kv").unwrap();
         assert_eq!(k.u("block_size").unwrap(), 16);
         assert_eq!(k.u("cached_pages").unwrap(), 9);

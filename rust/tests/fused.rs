@@ -17,10 +17,15 @@ use llm42::engine::scheduler::SchedulerPolicy;
 use llm42::engine::sequence::Phase;
 use llm42::engine::{
     Action, BatchPlan, Engine, EngineConfig, FaultPlan, LaneView, Mode,
-    PolicyKind, Request, SchedView,
+    PolicyKind, Request, SchedView, SeqId,
 };
 use llm42::prelude::*;
 use llm42::util::rng::SplitMix64;
+
+/// Synthetic-view handle: slot = i, generation 0.
+fn sid(i: usize) -> SeqId {
+    SeqId::from_parts(i as u32, 0)
+}
 
 fn artifacts_dir() -> String {
     let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -231,7 +236,7 @@ fn fusion_cuts_forwards_per_committed_token_on_prefill_heavy_traffic() {
 
 fn lane(idx: usize, phase: Phase, can_decode: bool, verify_ready: bool) -> LaneView {
     LaneView {
-        idx,
+        sid: sid(idx),
         id: idx as u64 + 1,
         phase,
         deterministic: true,
@@ -302,7 +307,7 @@ fn batch_plan_validation_property() {
         let mut plan = BatchPlan::default();
         for l in v.lanes.iter().filter(|l| l.can_decode) {
             if plan.fast_tokens() < budget {
-                plan.decode.push(l.idx);
+                plan.decode.push(l.sid);
             }
         }
         let mut left = budget - plan.fast_tokens();
@@ -312,14 +317,14 @@ fn batch_plan_validation_property() {
             }
             let chunk = l.prefill_remaining().min(left);
             assert!(chunk > 0, "prefilling lanes have work");
-            plan.prefill.push((l.idx, chunk));
+            plan.prefill.push((l.sid, chunk));
             left -= chunk;
         }
         plan.verify = v
             .lanes
             .iter()
             .filter(|l| l.verify_ready)
-            .map(|l| l.idx)
+            .map(|l| l.sid)
             .take(v.verify_group)
             .collect();
         assert!(plan.validate(&v).is_ok(), "case {case}: {plan:?}");
@@ -333,13 +338,13 @@ fn batch_plan_validation_property() {
         // corruption 2: budget overrun via an oversized-but-real chunk
         {
             let mut bad = plan.clone();
-            let pre_idx = v
+            let pre_sid = v
                 .lanes
                 .iter()
                 .find(|l| l.phase == Phase::Prefilling)
                 .unwrap()
-                .idx;
-            bad.prefill = vec![(pre_idx, budget + 1)];
+                .sid;
+            bad.prefill = vec![(pre_sid, budget + 1)];
             bad.decode.clear();
             // either the chunk exceeds the budget or the lane's remaining
             // tokens — both must be rejected
@@ -348,9 +353,9 @@ fn batch_plan_validation_property() {
         // corruption 3: prefill of a non-prefilling lane
         if let Some(l) = v.lanes.iter().find(|l| l.phase == Phase::Decoding) {
             let mut bad = plan.clone();
-            bad.prefill = vec![(l.idx, 1)];
-            bad.decode.retain(|&i| i != l.idx);
-            bad.verify.retain(|&i| i != l.idx);
+            bad.prefill = vec![(l.sid, 1)];
+            bad.decode.retain(|&s| s != l.sid);
+            bad.verify.retain(|&s| s != l.sid);
             assert!(
                 bad.validate(&v).is_err(),
                 "case {case}: non-prefilling prefill accepted"
@@ -359,15 +364,21 @@ fn batch_plan_validation_property() {
         // corruption 4: zero-length chunk
         {
             let mut bad = plan.clone();
-            let pre_idx = bad.prefill.first().map(|&(i, _)| i).unwrap_or_else(|| {
+            let pre_sid = bad.prefill.first().map(|&(s, _)| s).unwrap_or_else(|| {
                 v.lanes
                     .iter()
                     .find(|l| l.phase == Phase::Prefilling)
                     .unwrap()
-                    .idx
+                    .sid
             });
-            bad.prefill = vec![(pre_idx, 0)];
+            bad.prefill = vec![(pre_sid, 0)];
             assert!(bad.validate(&v).is_err(), "case {case}: zero chunk accepted");
+        }
+        // corruption 5: a stale generational handle (matches no lane)
+        {
+            let mut bad = plan.clone();
+            bad.decode = vec![SeqId::from_parts(0, u32::MAX)];
+            assert!(bad.validate(&v).is_err(), "case {case}: stale handle accepted");
         }
     }
 }
@@ -388,21 +399,28 @@ impl SchedulerPolicy for EvilPolicy {
         if !v.queue.is_empty() && v.free_slots > 0 {
             return Action::Admit { n: 1 };
         }
-        let idx = v.lanes[0].idx;
+        let sid = v.lanes[0].sid;
         match self.mode {
             // oversized chunk (beyond both the budget and the remaining)
             0 => Action::Run(BatchPlan {
-                prefill: vec![(idx, 10_000)],
+                prefill: vec![(sid, 10_000)],
                 ..Default::default()
             }),
             // duplicate lane within one phase
             1 => Action::Run(BatchPlan {
-                prefill: vec![(idx, 1), (idx, 1)],
+                prefill: vec![(sid, 1), (sid, 1)],
                 ..Default::default()
             }),
             // verify of a lane that is not verify-ready
             2 => Action::Run(BatchPlan {
-                verify: vec![idx],
+                verify: vec![sid],
+                ..Default::default()
+            }),
+            // a stale generational handle: the lane's slot with a
+            // generation that was never issued — the executor must treat
+            // it exactly like an unknown lane
+            3 => Action::Run(BatchPlan {
+                decode: vec![SeqId::from_parts(sid.slot() as u32, sid.generation().wrapping_add(40))],
                 ..Default::default()
             }),
             // empty plan
@@ -414,7 +432,7 @@ impl SchedulerPolicy for EvilPolicy {
 #[test]
 fn executor_rejects_malformed_plans() {
     let mut rt = Runtime::load(artifacts_dir()).unwrap();
-    for mode in 0..4u8 {
+    for mode in 0..5u8 {
         let mut eng = Engine::new(&mut rt, cfg(Mode::Llm42, 32)).unwrap();
         eng.set_policy_boxed(Box::new(EvilPolicy { mode }));
         eng.submit(Request::greedy((10..42).collect(), 4, true)).unwrap();
@@ -444,7 +462,7 @@ fn run_action_rejected_when_fusion_disabled() {
                 return Action::Admit { n: 1 };
             }
             Action::Run(BatchPlan {
-                prefill: vec![(v.lanes[0].idx, 1)],
+                prefill: vec![(v.lanes[0].sid, 1)],
                 ..Default::default()
             })
         }

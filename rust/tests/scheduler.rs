@@ -7,10 +7,15 @@ use llm42::engine::scheduler::prefill_first::PrefillFirst;
 use llm42::engine::sequence::Phase;
 use llm42::engine::{
     Action, Engine, EngineConfig, Mode, PolicyKind, Request, SchedView,
-    SchedulerPolicy, StepKind,
+    SchedulerPolicy, SeqId, StepKind,
 };
 use llm42::prelude::*;
 use llm42::util::rng::SplitMix64;
+
+/// Synthetic-view handle: slot = i, generation 0.
+fn sid(i: usize) -> SeqId {
+    SeqId::from_parts(i as u32, 0)
+}
 
 fn artifacts_dir() -> String {
     let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -127,7 +132,7 @@ fn prefill_first_plan_matches_seed_rule_on_random_views() {
             let spec = if det { rng.below(16) as usize } else { 0 };
             let ready = det && !prefilling && spec > 0 && rng.next_f64() < 0.5;
             lanes.push(llm42::engine::LaneView {
-                idx: i,
+                sid: sid(i),
                 id: i as u64 + 1,
                 phase: if prefilling { Phase::Prefilling } else { Phase::Decoding },
                 deterministic: det,
@@ -151,7 +156,7 @@ fn prefill_first_plan_matches_seed_rule_on_random_views() {
         let n_queue = rng.below(4) as usize;
         let queue: Vec<llm42::engine::QueuedView> = (0..n_queue)
             .map(|i| llm42::engine::QueuedView {
-                idx: n_lanes + i,
+                sid: sid(n_lanes + i),
                 id: (n_lanes + i) as u64 + 1,
                 priority: rng.below(4) as u8,
                 deadline_ms: None,
@@ -185,19 +190,19 @@ fn prefill_first_plan_matches_seed_rule_on_random_views() {
         let expected = if !v.queue.is_empty() && v.free_slots > 0 {
             Action::Admit { n: v.queue.len().min(v.free_slots) }
         } else if let Some(l) = v.lanes.iter().find(|l| l.phase == Phase::Prefilling) {
-            Action::Prefill { seq: l.idx }
+            Action::Prefill { seq: l.sid }
         } else {
-            let ready: Vec<usize> = v
+            let ready: Vec<SeqId> = v
                 .lanes
                 .iter()
                 .filter(|l| l.verify_ready)
-                .map(|l| l.idx)
+                .map(|l| l.sid)
                 .collect();
-            let decodable: Vec<usize> = v
+            let decodable: Vec<SeqId> = v
                 .lanes
                 .iter()
                 .filter(|l| l.can_decode)
-                .map(|l| l.idx)
+                .map(|l| l.sid)
                 .take(v.max_batch)
                 .collect();
             let stalled = v

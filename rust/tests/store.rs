@@ -1,0 +1,150 @@
+//! Id-stability tests for the slab-backed sequence store, at the engine
+//! level: slot reuse must never let anything — scheduling policies or the
+//! cancel path — reach a finished request's successor through a stale
+//! address.
+//!
+//! * the cancel-then-recycle race: after a request is aborted and its
+//!   store slot is reused, the old generational handle fails every
+//!   lookup, and the old *request id* stays a cancel no-op (ids are never
+//!   reused);
+//! * scheduler plans referencing stale handles are rejected by the
+//!   executor's validation (`check_plan` and the per-action checks), for
+//!   every action kind that addresses a lane.
+//!
+//! The store's own unit tests (`engine/store.rs`) pin the same properties
+//! at the data-structure level; these run them through a live engine.
+
+use llm42::engine::scheduler::SchedulerPolicy;
+use llm42::engine::{
+    Action, Engine, EngineConfig, Mode, Request, SchedView, SeqId,
+};
+use llm42::prelude::*;
+
+fn artifacts_dir() -> String {
+    let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&dir).expect("artifact generation failed");
+    dir
+}
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        mode: Mode::NonDeterministic,
+        eos_token: 9999, // out of vocab: requests run their full budget
+        ..Default::default()
+    }
+}
+
+/// A policy that replays a captured (now stale) handle in the action kind
+/// selected by `mode`. The executor must reject every one of them.
+struct StaleReplay {
+    stale: SeqId,
+    mode: u8,
+}
+
+impl SchedulerPolicy for StaleReplay {
+    fn name(&self) -> &'static str {
+        "stale-replay"
+    }
+
+    fn plan(&mut self, _v: &SchedView) -> Action {
+        match self.mode {
+            0 => Action::Decode { lanes: vec![self.stale] },
+            1 => Action::Prefill { seq: self.stale },
+            2 => Action::Verify { lanes: vec![self.stale] },
+            _ => Action::Preempt { victim: self.stale },
+        }
+    }
+}
+
+#[test]
+fn recycled_slot_cannot_resurrect_a_cancelled_request() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut eng = Engine::new(&mut rt, cfg()).unwrap();
+
+    // A gets admitted and starts decoding; capture its handle
+    let a = eng.submit(Request::greedy(vec![5; 6], 30, false)).unwrap();
+    eng.step().unwrap();
+    let a_sid = eng
+        .view()
+        .lanes
+        .iter()
+        .find(|l| l.id == a)
+        .map(|l| l.sid)
+        .expect("A is active after one step");
+
+    // cancel A: its slot goes back to the free list
+    assert!(eng.abort(a, FinishReason::Cancelled).unwrap());
+
+    // B reuses A's slot — under a new generation
+    let b = eng.submit(Request::greedy(vec![6; 6], 30, false)).unwrap();
+    eng.step().unwrap();
+    let b_sid = eng
+        .view()
+        .lanes
+        .iter()
+        .find(|l| l.id == b)
+        .map(|l| l.sid)
+        .expect("B is active after one step");
+    assert_eq!(b_sid.slot(), a_sid.slot(), "the free slot is recycled");
+    assert_ne!(
+        b_sid.generation(),
+        a_sid.generation(),
+        "a recycled slot carries a fresh generation"
+    );
+
+    // the cancel-then-recycle race: cancelling A's id again is a no-op —
+    // it must not touch B, which now occupies A's old slot
+    assert!(!eng.abort(a, FinishReason::Cancelled).unwrap());
+    assert!(
+        eng.view().lanes.iter().any(|l| l.id == b),
+        "B survives a replayed cancel of its slot's previous occupant"
+    );
+}
+
+#[test]
+fn plans_with_stale_handles_are_rejected_for_every_action_kind() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    for mode in 0..4u8 {
+        let mut eng = Engine::new(&mut rt, cfg()).unwrap();
+        let a = eng.submit(Request::greedy(vec![5; 6], 30, false)).unwrap();
+        eng.step().unwrap();
+        let a_sid = eng
+            .view()
+            .lanes
+            .iter()
+            .find(|l| l.id == a)
+            .map(|l| l.sid)
+            .expect("A is active");
+        assert!(eng.abort(a, FinishReason::Cancelled).unwrap());
+        // B occupies the recycled slot; the stale policy replays A's handle
+        let b = eng.submit(Request::greedy(vec![6; 6], 30, false)).unwrap();
+        eng.step().unwrap();
+        eng.set_policy_boxed(Box::new(StaleReplay { stale: a_sid, mode }));
+        assert!(
+            eng.step().is_err(),
+            "mode {mode}: a stale handle must fail validation, not drive \
+             the slot's new occupant"
+        );
+        // the failed step mutated nothing: B is still live and intact
+        assert!(eng.view().lanes.iter().any(|l| l.id == b));
+    }
+}
+
+#[test]
+fn store_gauges_reach_the_stats_surface() {
+    // live_seqs / live_seqs_hwm / store_capacity flow store -> metrics
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut eng = Engine::new(&mut rt, cfg()).unwrap();
+    let ids: Vec<u64> = (0..3)
+        .map(|i| eng.submit(Request::greedy(vec![5 + i; 4], 4, false)).unwrap())
+        .collect();
+    assert_eq!(eng.metrics.live_seqs, 3);
+    eng.run_to_completion().unwrap();
+    assert_eq!(eng.take_finished().len(), ids.len());
+    assert_eq!(eng.metrics.live_seqs, 0, "drained engine holds nothing live");
+    assert_eq!(eng.metrics.live_seqs_hwm, 3);
+    assert!(
+        eng.metrics.store_capacity <= eng.metrics.live_seqs_hwm,
+        "slab capacity is bounded by the live high-water mark"
+    );
+}
