@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: artifacts artifacts-test build test test-server fmt-check lint doc bench-check bench-json
+.PHONY: artifacts artifacts-test build test test-threads test-server fmt-check lint doc bench-check bench-json
 
 artifacts:
 	cd rust && $(CARGO) run --release -- gen-artifacts --out artifacts --preset tiny
@@ -17,6 +17,12 @@ build:
 
 test:
 	cd rust && $(CARGO) test -q
+
+# The CI matrix locally: the whole suite under the sequential backend and
+# again at 4 simulator worker threads — results must be identical.
+test-threads:
+	cd rust && LLM42_THREADS=1 $(CARGO) test -q
+	cd rust && LLM42_THREADS=4 $(CARGO) test -q
 
 # Serving-surface integration: stream + cancel + timeout over a real
 # socket, disconnect detection, poisoned-engine lifecycle, abort matrix.

@@ -134,6 +134,9 @@ fn main() {
     );
 
     let mut sections: Vec<(&str, Json)> = Vec::new();
+    // the machine's default simulator worker count (LLM42_THREADS env or
+    // available parallelism) — the setting every non-sweep section ran at
+    sections.push(("threads", Json::num(rt.sim_threads() as f64)));
     if let Some(j) = policy_comparison(&mut rt) {
         sections.push(("policy_comparison", j));
     }
@@ -149,7 +152,157 @@ fn main() {
     if let Some(j) = churn(&mut rt) {
         sections.push(("churn", j));
     }
+    if let Some(j) = parallel_scaling(&mut rt) {
+        sections.push(("parallel", j));
+    }
     write_bench_json(sections);
+}
+
+/// Thread-scaling sweep: the identical workloads at 1/2/4/8 simulator
+/// worker threads. Committed streams are bitwise identical at every row
+/// (`tests/parallel.rs` pins that), so this table records only what the
+/// knob buys: steady-state tok/s on a fused prefill-heavy mixed workload,
+/// churn tok/s on the short-request closed-loop shape, scaling vs the
+/// 1-thread row (with per-thread efficiency), and the engine's measured
+/// worker-busy fraction.
+fn parallel_scaling(rt: &mut Runtime) -> Option<Json> {
+    let n_reqs = if reduced() { 4 } else { 12 };
+    let churn_total = if reduced() { 120usize } else { 1_000 };
+
+    // steady state: long prompts + decode population, step composer on
+    let steady = |rt: &mut Runtime, threads: usize| -> Option<(f64, f64)> {
+        let cfg = EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 2,
+            verify_window: 16,
+            max_stall_steps: 4,
+            eos_token: u32::MAX, // full budgets: identical committed volume
+            max_step_tokens: 128,
+            threads,
+            ..Default::default()
+        };
+        let mut eng = match Engine::new(rt, cfg) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("parallel bench skipped: {e}");
+                return None;
+            }
+        };
+        let _ = eng.warmup();
+        for i in 0..n_reqs {
+            eng.submit(Request {
+                prompt: (0..100).map(|p| 3 + ((p + i as u32 * 13) % 400)).collect(),
+                max_new_tokens: 16,
+                deterministic: i % 4 == 0,
+                temperature: 1.0,
+                seed: 50_000 + i as u64,
+                ..Default::default()
+            })
+            .unwrap();
+        }
+        let t0 = llm42::util::now_secs();
+        if let Err(e) = eng.run_to_completion() {
+            eprintln!("parallel bench aborted: {e}");
+            return None;
+        }
+        let wall = llm42::util::now_secs() - t0;
+        eng.take_finished();
+        Some((
+            eng.metrics.committed_tokens as f64 / wall.max(1e-9),
+            eng.metrics.parallel_efficiency(),
+        ))
+    };
+
+    // churn: the short-request closed loop from the churn section
+    let churn_rate = |rt: &mut Runtime, threads: usize| -> Option<f64> {
+        let cfg = EngineConfig {
+            mode: Mode::NonDeterministic,
+            eos_token: u32::MAX,
+            threads,
+            ..Default::default()
+        };
+        let mut eng = match Engine::new(rt, cfg) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("parallel bench skipped: {e}");
+                return None;
+            }
+        };
+        let _ = eng.warmup();
+        let wave = 8usize;
+        let mut submitted = 0usize;
+        let t0 = llm42::util::now_secs();
+        while submitted < churn_total {
+            let n = wave.min(churn_total - submitted);
+            for i in 0..n {
+                let t = 3 + ((submitted + i) as u32 % 300);
+                let ok = eng.submit(Request {
+                    prompt: vec![t; 8],
+                    max_new_tokens: 2,
+                    deterministic: false,
+                    temperature: 0.0,
+                    seed: 0,
+                    ..Default::default()
+                });
+                if let Err(e) = ok {
+                    eprintln!("parallel bench aborted: {e}");
+                    return None;
+                }
+            }
+            submitted += n;
+            if let Err(e) = eng.run_to_completion() {
+                eprintln!("parallel bench aborted: {e}");
+                return None;
+            }
+            eng.take_finished();
+        }
+        let wall = llm42::util::now_secs() - t0;
+        Some(eng.metrics.committed_tokens as f64 / wall.max(1e-9))
+    };
+
+    let mut tab = Table::new(&[
+        "threads",
+        "steady_tok_s",
+        "churn_tok_s",
+        "scaling_x",
+        "efficiency_%",
+        "busy_frac_%",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base_steady = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let (Some((steady_tok_s, busy_frac)), Some(churn_tok_s)) =
+            (steady(rt, threads), churn_rate(rt, threads))
+        else {
+            rt.set_sim_threads(0);
+            return None;
+        };
+        if threads == 1 {
+            base_steady = steady_tok_s;
+        }
+        let scaling = steady_tok_s / base_steady.max(1e-9);
+        let efficiency = scaling / threads as f64;
+        tab.row(vec![
+            format!("{threads}"),
+            format!("{steady_tok_s:.1}"),
+            format!("{churn_tok_s:.1}"),
+            format!("{scaling:.2}"),
+            format!("{:.0}", efficiency * 100.0),
+            format!("{:.0}", busy_frac * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("threads", Json::num(threads as f64)),
+            ("steady_tok_s", Json::num(steady_tok_s)),
+            ("churn_tok_s", Json::num(churn_tok_s)),
+            ("scaling_x", Json::num(scaling)),
+            ("scaling_efficiency", Json::num(efficiency)),
+            ("parallel_efficiency", Json::num(busy_frac)),
+        ]));
+    }
+    rt.set_sim_threads(0);
+    println!("== thread scaling: 1/2/4/8 simulator workers ==");
+    println!("{}", tab.render());
+    Some(Json::Arr(rows))
 }
 
 /// Request-churn soak: a closed loop of short requests, an order of

@@ -19,6 +19,7 @@
 //!   "block_size": 0,
 //!   "max_step_tokens": 0,
 //!   "request_timeout_ms": 0,
+//!   "threads": 0,
 //!   "server": { "addr": "127.0.0.1:4242" }
 //! }
 //! ```
@@ -37,7 +38,10 @@
 //! `request_timeout_ms` (0 = off) is the deployment-wide default
 //! wall-clock budget applied to requests that do not set their own
 //! `timeout_ms`; expired requests are aborted with `finish_reason:
-//! "timeout"` and their KV reclaimed.
+//! "timeout"` and their KV reclaimed. `threads` (0 = auto: the
+//! `LLM42_THREADS` env, else available parallelism) sets the simulator
+//! worker-thread count; it changes wall-clock only — committed streams
+//! are bitwise identical at any thread count.
 
 use crate::engine::{EngineConfig, FaultPlan, Mode, PolicyKind};
 use crate::error::{Error, Result};
@@ -98,6 +102,9 @@ impl AppConfig {
         if let Some(t) = v.get("request_timeout_ms").and_then(|x| x.as_f64()) {
             cfg.engine.request_timeout_ms = t;
         }
+        if let Some(t) = v.get("threads").and_then(|x| x.as_usize()) {
+            cfg.engine.threads = t;
+        }
         if let Some(srv) = v.get("server") {
             if let Some(a) = srv.get("addr").and_then(|x| x.as_str()) {
                 cfg.server_addr = a.to_string();
@@ -113,7 +120,8 @@ impl AppConfig {
 
     /// CLI flags override file values (`--mode`, `--policy`, `--group`,
     /// `--window`, `--artifacts`, `--addr`, `--max-stall`, `--eos`,
-    /// `--block-size`, `--prefix-cache true|false`, `--max-step-tokens`).
+    /// `--block-size`, `--prefix-cache true|false`, `--max-step-tokens`,
+    /// `--threads`).
     pub fn apply_args(mut self, args: &Args) -> Result<AppConfig> {
         if let Some(m) = args.get("mode") {
             self.engine.mode = Mode::parse(m)?;
@@ -135,6 +143,7 @@ impl AppConfig {
             args.usize_or("max-step-tokens", self.engine.max_step_tokens)?;
         self.engine.request_timeout_ms =
             args.f64_or("request-timeout-ms", self.engine.request_timeout_ms)?;
+        self.engine.threads = args.usize_or("threads", self.engine.threads)?;
         self.artifacts = args.str_or("artifacts", &self.artifacts);
         self.server_addr = args.str_or("addr", &self.server_addr);
         self.engine.fault = FaultPlan::None; // never configurable in prod
@@ -249,6 +258,17 @@ mod tests {
         let d = AppConfig::resolve(&args("")).unwrap();
         assert_eq!(d.engine.request_timeout_ms, 0.0);
         assert!(AppConfig::from_json(r#"{"request_timeout_ms": -1}"#).is_err());
+    }
+
+    #[test]
+    fn threads_from_file_and_flags() {
+        let c = AppConfig::from_json(r#"{"threads": 4}"#).unwrap();
+        assert_eq!(c.engine.threads, 4);
+        let c = c.apply_args(&args("--threads 2")).unwrap();
+        assert_eq!(c.engine.threads, 2);
+        // default: auto (LLM42_THREADS env, else available parallelism)
+        let d = AppConfig::resolve(&args("")).unwrap();
+        assert_eq!(d.engine.threads, 0);
     }
 
     #[test]

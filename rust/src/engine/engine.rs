@@ -164,6 +164,12 @@ pub struct EngineConfig {
     /// uniform deployment default masquerading as a per-request deadline
     /// would collapse EDF ordering into FIFO. 0 (the default) disables it.
     pub request_timeout_ms: f64,
+    /// Simulator worker-thread count. 0 (the default) = auto: the
+    /// `LLM42_THREADS` env if set, else the machine's available
+    /// parallelism. Thread count affects wall-clock only — committed
+    /// streams are bitwise identical at any setting (`tests/parallel.rs`
+    /// pins this across {1, 2, 4, 8}).
+    pub threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -180,6 +186,7 @@ impl Default for EngineConfig {
             prefix_cache: false,
             max_step_tokens: 0,
             request_timeout_ms: 0.0,
+            threads: 0,
         }
     }
 }
@@ -314,6 +321,14 @@ impl<'rt> Engine<'rt> {
         )?;
         let invariant_bucket = max_batch;
         rt.reset_state()?;
+        // apply the worker-thread knob (0 = auto) before the first forward;
+        // any setting yields bitwise-identical streams, so this is purely a
+        // wall-clock decision
+        rt.set_sim_threads(cfg.threads);
+        let metrics = EngineMetrics {
+            sim_threads: rt.sim_threads() as u64,
+            ..Default::default()
+        };
         let policy = cfg.policy.build();
         Ok(Engine {
             rt,
@@ -323,7 +338,7 @@ impl<'rt> Engine<'rt> {
             store: SequenceStore::new(),
             finished: Vec::new(),
             deltas: Vec::new(),
-            metrics: EngineMetrics::default(),
+            metrics,
             next_id: 1,
             verify_lane_counter: 0,
             decode_buckets,
@@ -634,7 +649,16 @@ impl<'rt> Engine<'rt> {
         // the planning view lives in engine-owned scratch; take it out for
         // the duration of the round loop so `&mut self` stays available
         let mut vs = std::mem::take(&mut self.view_scratch);
+        // parallel-efficiency sampling: busy-ns delta across the step's
+        // forwards over wall x threads (the knob can change between steps,
+        // so the gauge is refreshed too)
+        let busy0 = self.rt.sim_busy_ns();
+        let t0 = Instant::now();
         let out = self.step_rounds(&mut vs);
+        self.metrics.sim_wall_secs += t0.elapsed().as_secs_f64();
+        self.metrics.sim_busy_secs +=
+            self.rt.sim_busy_ns().wrapping_sub(busy0) as f64 * 1e-9;
+        self.metrics.sim_threads = self.rt.sim_threads() as u64;
         self.view_scratch = vs;
         if out.is_ok() {
             self.sweep_stream_deltas();

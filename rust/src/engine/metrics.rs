@@ -105,6 +105,15 @@ pub struct EngineMetrics {
     /// aborted ones (cancelled/timeout/error) are excluded so the numbers
     /// keep meaning "latency of completed requests"
     pub class_e2e: BTreeMap<u8, ClassStats>,
+    /// simulator worker-thread count (gauge, set at engine construction
+    /// and whenever the knob changes; 1 = sequential backend)
+    pub sim_threads: u64,
+    /// cumulative simulator worker-busy seconds inside `step()` (summed
+    /// over all workers, including the submitting thread's share)
+    pub sim_busy_secs: f64,
+    /// cumulative wall-clock seconds inside `step()` (the denominator of
+    /// the parallel-efficiency fraction)
+    pub sim_wall_secs: f64,
     /// finished requests by reason (request-lifecycle accounting; the
     /// abort reasons — cancelled/timeout/error — never produce further
     /// compute after they are recorded)
@@ -182,6 +191,20 @@ impl EngineMetrics {
             0.0
         } else {
             self.cache_hit_tokens as f64 / total as f64
+        }
+    }
+
+    /// Worker-busy fraction of the simulator's parallel capacity: busy
+    /// seconds / (wall seconds x thread count), clamped to [0, 1]. 1.0
+    /// means every worker was computing the whole time the engine was
+    /// stepping; low values mean steps are too small to feed the
+    /// configured thread count (or the engine was idle-stepping).
+    pub fn parallel_efficiency(&self) -> f64 {
+        let denom = self.sim_wall_secs * self.sim_threads.max(1) as f64;
+        if denom <= 0.0 {
+            0.0
+        } else {
+            (self.sim_busy_secs / denom).min(1.0)
         }
     }
 
@@ -320,6 +343,26 @@ mod tests {
         // gauges, not counters: they move down too
         m.note_store(0, 7, 8);
         assert_eq!(m.live_seqs, 0);
+    }
+
+    #[test]
+    fn parallel_efficiency_derived() {
+        let m = EngineMetrics {
+            sim_threads: 4,
+            sim_busy_secs: 3.0,
+            sim_wall_secs: 1.0,
+            ..Default::default()
+        };
+        assert!((m.parallel_efficiency() - 0.75).abs() < 1e-12);
+        // clamped: busy can slightly exceed wall*threads from timer skew
+        let m = EngineMetrics {
+            sim_threads: 1,
+            sim_busy_secs: 1.1,
+            sim_wall_secs: 1.0,
+            ..Default::default()
+        };
+        assert_eq!(m.parallel_efficiency(), 1.0);
+        assert_eq!(EngineMetrics::default().parallel_efficiency(), 0.0);
     }
 
     #[test]

@@ -41,6 +41,10 @@ COMMON:
                      expired requests finish with reason 'timeout' and
                      their KV is reclaimed (requests may override with
                      their own timeout_ms)
+  --threads N        simulator worker threads (default 0 = auto: the
+                     LLM42_THREADS env, else available parallelism);
+                     affects wall-clock only — committed streams are
+                     bitwise identical at any thread count
   --seed S           trace seed (default 42)
 
 SERVER PROTOCOL (JSON lines; see rust/src/server):

@@ -442,4 +442,25 @@ impl Runtime {
     pub fn mixed_artifact() -> &'static str {
         "mixed_inv"
     }
+
+    /// Set the simulator worker-thread count. `0` resets to the default
+    /// (`LLM42_THREADS` env, else available parallelism). Thread count
+    /// affects wall-clock only — results are bitwise identical at any
+    /// setting (see the `xla` crate's module docs).
+    pub fn set_sim_threads(&self, n: usize) {
+        xla::pool::set_threads(n);
+    }
+
+    /// Currently configured simulator worker count (including the
+    /// submitting thread).
+    pub fn sim_threads(&self) -> usize {
+        xla::pool::threads()
+    }
+
+    /// Cumulative simulator worker-busy nanoseconds since process start.
+    /// Monotonic; sample deltas around a step and divide by
+    /// `wall * sim_threads()` for a parallel-efficiency fraction.
+    pub fn sim_busy_ns(&self) -> u64 {
+        xla::pool::busy_ns()
+    }
 }

@@ -67,6 +67,7 @@
 //!   -> {"cmd": "stats"}
 //!   <- {"steps": ..., "preemptions": ..., "reprefilled_tokens": ...,
 //!       "queue_depth_hwm": ..., "waiters": ...,
+//!       "sim_threads": ..., "parallel_efficiency": ...,
 //!       "forward_passes": ..., "tokens_per_forward": ...,
 //!       "forwards_per_committed_token": ..., "fused_steps": ...,
 //!       "fused_tokens": ..., "fused_occupancy": ...,
@@ -349,6 +350,11 @@ pub fn render_stats(m: &EngineMetrics, kv: &KvStats, waiters: usize) -> String {
         ("preemptions", Json::num(m.preemptions as f64)),
         ("reprefilled_tokens", Json::num(m.reprefilled_tokens as f64)),
         ("queue_depth_hwm", Json::num(m.queue_depth_hwm as f64)),
+        // simulator parallelism: configured worker count and the
+        // worker-busy fraction of wall x threads inside step() (thread
+        // count never changes committed tokens, only these numbers)
+        ("sim_threads", Json::num(m.sim_threads as f64)),
+        ("parallel_efficiency", Json::num(m.parallel_efficiency())),
         // step-composer counters: how many model forwards the engine
         // issued per committed token, and how full fused steps kept the
         // token budget
@@ -409,6 +415,24 @@ pub fn render_stats(m: &EngineMetrics, kv: &KvStats, waiters: usize) -> String {
         ("class_e2e", class_e2e),
     ])
     .dump()
+}
+
+/// Accept-loop idle backoff bounds: start fast, never poll slower than
+/// the cap.
+const ACCEPT_BACKOFF_MIN: Duration = Duration::from_millis(1);
+const ACCEPT_BACKOFF_MAX: Duration = Duration::from_millis(20);
+
+/// Sleep for up to `total`, in slices short enough that a concurrent
+/// `shutdown()` (stop flag) is observed within about a millisecond
+/// rather than after the whole backoff interval.
+fn sleep_observing_stop(stop: &AtomicBool, total: Duration) {
+    const SLICE: Duration = Duration::from_millis(1);
+    let mut left = total;
+    while !stop.load(Ordering::Relaxed) && left > Duration::ZERO {
+        let d = left.min(SLICE);
+        std::thread::sleep(d);
+        left -= d;
+    }
 }
 
 enum ToEngine {
@@ -478,12 +502,18 @@ impl Server {
             engine_thread_main(artifacts_dir, cfg, tok_e, rx, stop_e, poisoned_e);
         });
 
-        // accept thread: one handler thread per connection
+        // accept thread: one handler thread per connection. Idle polls
+        // (WouldBlock) back off exponentially — 1 ms doubling to the
+        // 20 ms cap — instead of a fixed sleep, so an idle listener
+        // burns fewer wakeups while a busy one stays at 1 ms latency;
+        // every sleep observes the stop flag within ~1 ms.
         let stop_a = stop.clone();
         let accept_thread = std::thread::spawn(move || {
+            let mut backoff = ACCEPT_BACKOFF_MIN;
             while !stop_a.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        backoff = ACCEPT_BACKOFF_MIN;
                         let tx = tx.clone();
                         let tok = tok.clone();
                         std::thread::spawn(move || {
@@ -491,7 +521,8 @@ impl Server {
                         });
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
+                        sleep_observing_stop(&stop_a, backoff);
+                        backoff = (backoff * 2).min(ACCEPT_BACKOFF_MAX);
                     }
                     Err(_) => break,
                 }
@@ -1238,6 +1269,24 @@ mod tests {
     }
 
     #[test]
+    fn backoff_sleep_observes_the_stop_flag() {
+        // already-stopped: returns without sleeping the full interval
+        let stop = AtomicBool::new(true);
+        let t0 = std::time::Instant::now();
+        sleep_observing_stop(&stop, Duration::from_millis(250));
+        assert!(
+            t0.elapsed() < Duration::from_millis(100),
+            "stop flag ignored for {:?}",
+            t0.elapsed()
+        );
+        // not stopped: sleeps at least the requested interval
+        let stop = AtomicBool::new(false);
+        let t0 = std::time::Instant::now();
+        sleep_observing_stop(&stop, Duration::from_millis(10));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
     fn stats_render_includes_policy_counters() {
         let mut m = EngineMetrics::default();
         m.preemptions = 3;
@@ -1257,6 +1306,9 @@ mod tests {
         m.finished_length = 2;
         m.finished_cancelled = 3;
         m.finished_timeout = 1;
+        m.sim_threads = 4;
+        m.sim_busy_secs = 3.0;
+        m.sim_wall_secs = 1.0;
         m.note_store(6, 11, 12);
         let kv = KvStats {
             block_size: 16,
@@ -1279,6 +1331,8 @@ mod tests {
         assert_eq!(v.u("fused_tokens").unwrap(), 60);
         assert!((v.f("fused_occupancy").unwrap() - 0.75).abs() < 1e-9);
         assert_eq!(v.u("waiters").unwrap(), 5);
+        assert_eq!(v.u("sim_threads").unwrap(), 4);
+        assert!((v.f("parallel_efficiency").unwrap() - 0.75).abs() < 1e-9);
         let fr = v.req("finish_reasons").unwrap();
         assert_eq!(fr.u("stop").unwrap(), 4);
         assert_eq!(fr.u("length").unwrap(), 2);

@@ -29,7 +29,22 @@
 //!   depend on its position in the batch or on other lanes' contents.
 //! * **Batch invariance of the universal schedule:** `inv` artifacts use
 //!   split count 1 / fixed sequential K-chunks regardless of shape.
+//!
+//! # Parallel execution
+//!
+//! Kernels fan independent work units (GEMM rows, split-K partials,
+//! attention lanes, fused-forward lanes) out to the worker pool in
+//! [`pool`]. Every unit writes a pre-assigned disjoint output range and its
+//! arithmetic is a pure function of the unit index — partials are
+//! bf16-rounded *before* the order-fixed pairwise combine tree — so the
+//! thread count and completion order cannot change a single bit. "Fixed
+//! sequential loop" above therefore means *fixed reduction order*, not
+//! single-threaded execution; `pool::set_threads(1)` degenerates to the
+//! literal sequential backend.
 
+pub mod pool;
+
+use std::cell::{RefCell, UnsafeCell};
 use std::collections::HashMap;
 use std::fmt;
 use std::rc::Rc;
@@ -454,6 +469,120 @@ impl PjRtLoadedExecutable {
     }
 }
 
+// ------------------------------------------------- scratch & shared views
+
+thread_local! {
+    /// Per-worker reusable kernel scratch. Replaces the seed's per-row
+    /// `Vec<Vec<f32>>` partials and per-call gather/softmax allocations;
+    /// each pool worker (and the submitting thread) grows its own set once
+    /// and reuses it for every subsequent row/lane it claims.
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+#[derive(Default)]
+struct Scratch {
+    /// Flat split-K partials for one fast GEMM call: `[m * nsplits * n]`.
+    parts: Vec<f32>,
+    /// Per-row K-chunk accumulator for the invariant GEMM.
+    tmp: Vec<f32>,
+    /// Per-row RMSNorm split partials.
+    norm_parts: Vec<f32>,
+    /// RoPE rotation frequencies.
+    freqs: Vec<f32>,
+    /// Attention: position-major K/V gathered from the (possibly paged)
+    /// pool, plus online-softmax accumulators.
+    k_gather: Vec<f32>,
+    v_gather: Vec<f32>,
+    o_run: Vec<f32>,
+    o_c: Vec<f32>,
+    s_vals: Vec<f32>,
+}
+
+/// Borrow `buf` at exactly `n` floats, growing it if needed. Contents are
+/// unspecified; callers that need zeros fill explicitly.
+fn grab(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..n]
+}
+
+/// Raw view of a mutable f32 buffer for handing *disjoint* chunks to pool
+/// workers (`split_at_mut` cannot express "chunk i goes to whichever
+/// worker claims item i").
+#[derive(Clone, Copy)]
+struct RawSlice {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: every parallel region below hands chunk `i` to exactly the
+// worker that claimed item `i`, so no two threads ever touch the same
+// range.
+unsafe impl Send for RawSlice {}
+unsafe impl Sync for RawSlice {}
+
+impl RawSlice {
+    fn new(s: &mut [f32]) -> RawSlice {
+        RawSlice { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// Chunk `i` of `chunk` floats.
+    ///
+    /// Safety: concurrent callers must use distinct `i`, and the chunk must
+    /// lie inside the buffer; the underlying buffer must outlive the use
+    /// (guaranteed by `parallel_for` blocking until all items finish).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn chunk(&self, i: usize, chunk: usize) -> &mut [f32] {
+        debug_assert!((i + 1) * chunk <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(i * chunk), chunk)
+    }
+}
+
+/// Shared mutable view of the flat model state (KV pool + logits region)
+/// for the lane-parallel paths.
+///
+/// Soundness contract: concurrent users touch disjoint float ranges. The
+/// sequential paths satisfy it trivially; `run_mixed` proves page
+/// disjointness with [`mixed_lanes_disjoint`] before fanning lanes out
+/// (falling back to the sequential lane loop otherwise), and lanes' logits
+/// rows are disjoint by construction (prefix-sum offsets).
+struct StateView<'a> {
+    cells: &'a [UnsafeCell<f32>],
+}
+
+// SAFETY: see the soundness contract above — all concurrent access is to
+// disjoint ranges, verified before the view crosses threads.
+unsafe impl Sync for StateView<'_> {}
+
+impl<'a> StateView<'a> {
+    fn new(state: &'a mut [f32]) -> StateView<'a> {
+        // in-place reinterpretation; UnsafeCell<f32> has f32's layout
+        let ptr = state.as_mut_ptr() as *const UnsafeCell<f32>;
+        StateView { cells: unsafe { std::slice::from_raw_parts(ptr, state.len()) } }
+    }
+
+    /// `state[off..off + src.len()] = src`
+    fn write(&self, off: usize, src: &[f32]) {
+        assert!(off + src.len() <= self.cells.len(), "StateView write out of range");
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), self.cells[off].get(), src.len());
+        }
+    }
+
+    /// `dst = state[off..off + dst.len()]`
+    fn read(&self, off: usize, dst: &mut [f32]) {
+        assert!(off + dst.len() <= self.cells.len(), "StateView read out of range");
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.cells[off].get() as *const f32,
+                dst.as_mut_ptr(),
+                dst.len(),
+            );
+        }
+    }
+}
+
 // --------------------------------------------------------------- kernels
 
 /// Round-to-nearest-even f32 -> bf16 -> f32, the cross-split partial
@@ -465,31 +594,61 @@ fn to_bf16(x: f32) -> f32 {
     f32::from_bits(bits.wrapping_add(round) & 0xFFFF_0000)
 }
 
-/// Fixed pairwise reduction tree over `parts` (length must be a power of
-/// two); mirrors `combine_tree` in splitk_matmul.py. Each part is a row of
-/// `width` f32 values; parts are combined in place.
-fn combine_tree(parts: &mut Vec<Vec<f32>>) -> Vec<f32> {
-    let mut n = parts.len();
-    assert!(n.is_power_of_two(), "combine_tree needs a power-of-2 count, got {n}");
+/// Fixed pairwise reduction tree over `nparts` parts of `width` f32 values
+/// stored flat in `parts[..nparts * width]`; mirrors `combine_tree` in
+/// splitk_matmul.py. The combine order — at each level, part `i` absorbs
+/// part `half + i` — is a pure function of the part *index*, never of
+/// which worker produced a part or when, which is what makes split-K
+/// parallelism bitwise invisible. The result lands in `parts[..width]`.
+fn combine_tree_flat(parts: &mut [f32], nparts: usize, width: usize) {
+    assert!(
+        nparts.is_power_of_two(),
+        "combine_tree needs a power-of-2 count, got {nparts}"
+    );
+    let mut n = nparts;
     while n > 1 {
         let half = n / 2;
-        for i in 0..half {
-            let (lo, hi) = parts.split_at_mut(half);
-            let a = &mut lo[i];
-            let b = &hi[i];
-            for (x, y) in a.iter_mut().zip(b.iter()) {
-                *x += *y;
-            }
+        let (lo, hi) = parts[..n * width].split_at_mut(half * width);
+        for (a, b) in lo.iter_mut().zip(hi.iter()) {
+            *a += *b;
         }
         n = half;
-        parts.truncate(n);
     }
-    parts.pop().unwrap()
+}
+
+/// Accumulate split `s` of one row's K range into `p` (plain f32), then
+/// round to bf16 if the schedule stores bf16 partials. The partial is a
+/// pure function of `(x_row, w, s)` — shared by the sequential reference
+/// path and the parallel per-(row, split) path.
+fn splitk_partial(
+    x_row: &[f32],
+    w: &[f32],
+    n: usize,
+    ck: usize,
+    s: usize,
+    bf16_partials: bool,
+    p: &mut [f32],
+) {
+    p.fill(0.0);
+    for ki in s * ck..(s + 1) * ck {
+        let xv = x_row[ki];
+        let wrow = &w[ki * n..(ki + 1) * n];
+        for (o, &wv) in p.iter_mut().zip(wrow.iter()) {
+            *o += xv * wv;
+        }
+    }
+    if bf16_partials {
+        for v in p.iter_mut() {
+            *v = to_bf16(*v);
+        }
+    }
 }
 
 /// One row of the fast split-K GEMM: dot(x_row, w[:, :]) with `nsplits`
 /// K-splits, bf16-rounded partials, fixed combine tree. `w` is row-major
 /// [k, n]. `nsplits == 1` is a plain single-pass product (no rounding).
+/// Sequential per-row reference; [`gemm`] runs the same arithmetic with
+/// (row, split) items fanned out to the pool.
 fn gemm_row_fast(
     x_row: &[f32],
     w: &[f32],
@@ -516,36 +675,34 @@ fn gemm_row_fast(
     }
     assert!(k % nsplits == 0, "K={k} not divisible by nsplits={nsplits}");
     let ck = k / nsplits;
-    let mut parts: Vec<Vec<f32>> = Vec::with_capacity(nsplits);
-    for s in 0..nsplits {
-        let mut p = vec![0.0f32; n];
-        for ki in s * ck..(s + 1) * ck {
-            let xv = x_row[ki];
-            let wrow = &w[ki * n..(ki + 1) * n];
-            for (o, &wv) in p.iter_mut().zip(wrow.iter()) {
-                *o += xv * wv;
-            }
+    SCRATCH.with(|cell| {
+        let scr = &mut *cell.borrow_mut();
+        let parts = grab(&mut scr.tmp, nsplits * n);
+        for s in 0..nsplits {
+            splitk_partial(x_row, w, n, ck, s, bf16_partials, &mut parts[s * n..(s + 1) * n]);
         }
-        if bf16_partials {
-            for v in p.iter_mut() {
-                *v = to_bf16(*v);
-            }
-        }
-        parts.push(p);
-    }
-    let combined = combine_tree(&mut parts);
-    out.copy_from_slice(&combined);
+        combine_tree_flat(parts, nsplits, n);
+        out.copy_from_slice(&parts[..n]);
+    });
 }
 
 /// One row of the batch-invariant GEMM: sequential fixed-chunk K
 /// accumulation (seqchunk_matmul.py) — the universal reduction schedule.
-fn gemm_row_inv(x_row: &[f32], w: &[f32], k: usize, n: usize, chunks: usize, out: &mut [f32]) {
+/// `tmp` is caller scratch of `n` floats (any contents).
+fn gemm_row_inv(
+    x_row: &[f32],
+    w: &[f32],
+    k: usize,
+    n: usize,
+    chunks: usize,
+    tmp: &mut [f32],
+    out: &mut [f32],
+) {
     assert!(k % chunks == 0, "K={k} not divisible by chunks={chunks}");
     let ck = k / chunks;
     for o in out.iter_mut() {
         *o = 0.0;
     }
-    let mut tmp = vec![0.0f32; n];
     for c in 0..chunks {
         for v in tmp.iter_mut() {
             *v = 0.0;
@@ -563,28 +720,85 @@ fn gemm_row_inv(x_row: &[f32], w: &[f32], k: usize, n: usize, chunks: usize, out
     }
 }
 
+/// Fast split-K GEMM over all rows, parallel over (row, split) items:
+/// each item accumulates its partial into a pre-assigned chunk of one flat
+/// scratch buffer and bf16-rounds it in place, then each row's partials go
+/// through the fixed combine tree. Both the partial and the combine order
+/// are identical to [`gemm_row_fast`], so worker count and completion
+/// order cannot change bits.
+#[allow(clippy::too_many_arguments)]
+fn gemm_fast_splitk(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    nsplits: usize,
+    bf16_partials: bool,
+    out: &mut [f32],
+) {
+    assert!(k % nsplits == 0, "K={k} not divisible by nsplits={nsplits}");
+    let ck = k / nsplits;
+    SCRATCH.with(|s| {
+        let scr = &mut *s.borrow_mut();
+        let parts = grab(&mut scr.parts, m * nsplits * n);
+        let pview = RawSlice::new(parts);
+        pool::parallel_for(m * nsplits, |item| {
+            let (r, split) = (item / nsplits, item % nsplits);
+            // SAFETY: item indices are unique per worker; chunks disjoint.
+            let p = unsafe { pview.chunk(item, n) };
+            splitk_partial(&x[r * k..(r + 1) * k], w, n, ck, split, bf16_partials, p);
+        });
+        let oview = RawSlice::new(out);
+        pool::parallel_for(m, |r| {
+            // SAFETY: row indices are unique per worker; chunks disjoint.
+            let row_parts = unsafe { pview.chunk(r, nsplits * n) };
+            combine_tree_flat(row_parts, nsplits, n);
+            let o_row = unsafe { oview.chunk(r, n) };
+            o_row.copy_from_slice(&row_parts[..n]);
+        });
+    });
+}
+
 /// Strategy-dispatched GEMM over all rows: x [m, k] @ w [k, n] -> [m, n].
+/// Rows (and, on the fast path, K-splits) are independent pool items
+/// writing disjoint output rows.
 fn gemm(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, sched: &Schedule, nsplits: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
-    for r in 0..m {
-        let x_row = &x[r * k..(r + 1) * k];
-        let o_row = &mut out[r * n..(r + 1) * n];
-        if sched.kind == "fast" {
-            gemm_row_fast(x_row, w, k, n, nsplits, sched.bf16_partials, o_row);
-        } else {
-            gemm_row_inv(x_row, w, k, n, sched.seq_chunks, o_row);
-        }
+    if sched.kind == "fast" && nsplits > 1 {
+        gemm_fast_splitk(x, w, m, k, n, nsplits, sched.bf16_partials, &mut out);
+        return out;
+    }
+    let oview = RawSlice::new(&mut out);
+    if sched.kind == "fast" {
+        pool::parallel_for(m, |r| {
+            // SAFETY: row indices are unique per worker; chunks disjoint.
+            let o_row = unsafe { oview.chunk(r, n) };
+            gemm_row_fast(&x[r * k..(r + 1) * k], w, k, n, 1, sched.bf16_partials, o_row);
+        });
+    } else {
+        pool::parallel_for(m, |r| {
+            // SAFETY: row indices are unique per worker; chunks disjoint.
+            let o_row = unsafe { oview.chunk(r, n) };
+            SCRATCH.with(|s| {
+                let scr = &mut *s.borrow_mut();
+                let tmp = grab(&mut scr.tmp, n);
+                gemm_row_inv(&x[r * k..(r + 1) * k], w, k, n, sched.seq_chunks, tmp, o_row);
+            });
+        });
     }
     out
 }
 
 /// RMSNorm over rows: x [m, d], weight [d]; `nsplit`-way feature-dim
-/// reduction combined by the fixed pairwise tree (rmsnorm.py).
+/// reduction combined by the fixed pairwise tree (rmsnorm.py). Rows are
+/// independent pool items.
 fn rmsnorm(x: &[f32], w: &[f32], m: usize, d: usize, nsplit: usize, eps: f32) -> Vec<f32> {
     assert!(d % nsplit == 0, "D={d} not divisible by nsplit={nsplit}");
     let mut out = vec![0.0f32; m * d];
     let cd = d / nsplit;
-    for r in 0..m {
+    let oview = RawSlice::new(&mut out);
+    pool::parallel_for(m, |r| {
         let row = &x[r * d..(r + 1) * d];
         let ss = if nsplit == 1 {
             let mut s = 0.0f32;
@@ -593,46 +807,54 @@ fn rmsnorm(x: &[f32], w: &[f32], m: usize, d: usize, nsplit: usize, eps: f32) ->
             }
             s
         } else {
-            let mut parts: Vec<Vec<f32>> = Vec::with_capacity(nsplit);
-            for c in 0..nsplit {
-                let mut s = 0.0f32;
-                for &v in &row[c * cd..(c + 1) * cd] {
-                    s += v * v;
+            SCRATCH.with(|s| {
+                let scr = &mut *s.borrow_mut();
+                let parts = grab(&mut scr.norm_parts, nsplit);
+                for (c, p) in parts.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for &v in &row[c * cd..(c + 1) * cd] {
+                        acc += v * v;
+                    }
+                    *p = acc;
                 }
-                parts.push(vec![s]);
-            }
-            combine_tree(&mut parts)[0]
+                combine_tree_flat(parts, nsplit, 1);
+                parts[0]
+            })
         };
         let inv = 1.0 / (ss / d as f32 + eps).sqrt();
-        let o_row = &mut out[r * d..(r + 1) * d];
+        // SAFETY: row indices are unique per worker; chunks disjoint.
+        let o_row = unsafe { oview.chunk(r, d) };
         for i in 0..d {
             o_row[i] = row[i] * inv * w[i];
         }
-    }
+    });
     out
 }
 
 /// RoPE over one lane: x [t, h, hd] in place, positions [t].
 fn rope(x: &mut [f32], t: usize, h: usize, hd: usize, positions: &[i32], theta: f32) {
     let half = hd / 2;
-    let mut freqs = vec![0.0f32; half];
-    for i in 0..half {
-        freqs[i] = theta.powf(-(i as f32) / half as f32);
-    }
-    for j in 0..t {
-        let pos = positions[j] as f32;
-        for head in 0..h {
-            let base = (j * h + head) * hd;
-            for i in 0..half {
-                let ang = pos * freqs[i];
-                let (sin, cos) = (ang.sin(), ang.cos());
-                let x1 = x[base + i];
-                let x2 = x[base + half + i];
-                x[base + i] = x1 * cos - x2 * sin;
-                x[base + half + i] = x1 * sin + x2 * cos;
+    SCRATCH.with(|s| {
+        let scr = &mut *s.borrow_mut();
+        let freqs = grab(&mut scr.freqs, half);
+        for (i, f) in freqs.iter_mut().enumerate() {
+            *f = theta.powf(-(i as f32) / half as f32);
+        }
+        for j in 0..t {
+            let pos = positions[j] as f32;
+            for head in 0..h {
+                let base = (j * h + head) * hd;
+                for i in 0..half {
+                    let ang = pos * freqs[i];
+                    let (sin, cos) = (ang.sin(), ang.cos());
+                    let x1 = x[base + i];
+                    let x2 = x[base + half + i];
+                    x[base + i] = x1 * cos - x2 * sin;
+                    x[base + half + i] = x1 * sin + x2 * cos;
+                }
             }
         }
-    }
+    });
 }
 
 // --------------------------------------------------------------- forward
@@ -655,8 +877,6 @@ const W_LM_HEAD: usize = 11;
 const N_WEIGHTS: usize = 12;
 
 fn run_forward(desc: &Descriptor, g: usize, t: usize, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
-    let d = &desc.dims;
-    let sched = &desc.sched;
     if args.len() != 4 + N_WEIGHTS {
         return err(format!(
             "forward expects {} args (state, tokens, slots, positions, {} weights), got {}",
@@ -669,6 +889,43 @@ fn run_forward(desc: &Descriptor, g: usize, t: usize, args: &[&PjRtBuffer]) -> R
     let tokens = args[1].i32s()?;
     let slots = args[2].i32s()?;
     let positions0 = args[3].i32s()?;
+    let w: Vec<&[f32]> = {
+        let mut v = Vec::with_capacity(N_WEIGHTS);
+        for a in &args[4..] {
+            v.push(a.f32s()?);
+        }
+        v
+    };
+    forward_core(desc, g, t, &StateView::new(&mut state), tokens, slots, positions0, 0, &w)?;
+    let len = state.len();
+    Ok(PjRtBuffer { data: Rc::new(Data::F32(state)), dims: vec![len] })
+}
+
+/// The transformer forward proper, operating *in place* on `state` (KV
+/// writes land in the pool, logits rows at row offset `logits_row0` of the
+/// logits region). Factored out of [`run_forward`] so [`run_mixed`] can
+/// thread one state through its lanes — sequentially or, when lanes are
+/// page-disjoint, concurrently — without the seed's full-state copy per
+/// lane.
+///
+/// Work fans out to [`pool`] at every independent-unit boundary (rows,
+/// lanes, K-splits). The KV write phase stays sequential: it is pure
+/// memcpy, and keeping the seed's write order preserves last-write-wins
+/// semantics when several padding lanes share a trash page.
+#[allow(clippy::too_many_arguments)]
+fn forward_core(
+    desc: &Descriptor,
+    g: usize,
+    t: usize,
+    state: &StateView<'_>,
+    tokens: &[i32],
+    slots: &[i32],
+    positions0: &[i32],
+    logits_row0: usize,
+    w: &[&[f32]],
+) -> Result<()> {
+    let d = &desc.dims;
+    let sched = &desc.sched;
     // Dual addressing: a `[g]` slots arg selects legacy slot mode (one
     // contiguous max_seq region per lane); a `[g * blocks_per_lane]` arg is
     // a flat per-lane block table and selects paged mode. The values read
@@ -691,19 +948,13 @@ fn run_forward(desc: &Descriptor, g: usize, t: usize, args: &[&PjRtBuffer]) -> R
         ));
     }
     let n = g * t;
-    if n > d.max_fwd_tokens {
+    if logits_row0 + n > d.max_fwd_tokens {
         return err(format!(
-            "forward writes {n} logits rows but the state region holds {}",
+            "forward writes logits rows {logits_row0}..{} but the state region holds {}",
+            logits_row0 + n,
             d.max_fwd_tokens
         ));
     }
-    let w: Vec<&[f32]> = {
-        let mut v = Vec::with_capacity(N_WEIGHTS);
-        for a in &args[4..] {
-            v.push(a.f32s()?);
-        }
-        v
-    };
 
     let dm = d.d_model;
     let qd = d.q_dim();
@@ -778,104 +1029,127 @@ fn run_forward(desc: &Descriptor, g: usize, t: usize, args: &[&PjRtBuffer]) -> R
         let mut kproj = gemm(&x, wk, n, dm, kvd, sched, sched.ffn_splits);
         let vproj = gemm(&x, wv, n, dm, kvd, sched, sched.ffn_splits);
 
-        // RoPE per lane (positions differ per lane)
-        for lane in 0..g {
-            let prow = &positions[lane * t..(lane + 1) * t];
-            rope(&mut q[lane * t * qd..(lane + 1) * t * qd], t, nh, hd, prow, d.rope_theta);
-            rope(&mut kproj[lane * t * kvd..(lane + 1) * t * kvd], t, nkv, hd, prow, d.rope_theta);
+        // RoPE per lane (positions differ per lane); lanes are disjoint
+        // slices of q/kproj
+        {
+            let qview = RawSlice::new(&mut q);
+            let kview = RawSlice::new(&mut kproj);
+            let positions = &positions[..];
+            pool::parallel_for(g, |lane| {
+                let prow = &positions[lane * t..(lane + 1) * t];
+                // SAFETY: lane indices are unique per worker; chunks disjoint.
+                let q_lane = unsafe { qview.chunk(lane, t * qd) };
+                let k_lane = unsafe { kview.chunk(lane, t * kvd) };
+                rope(q_lane, t, nh, hd, prow, d.rope_theta);
+                rope(k_lane, t, nkv, hd, prow, d.rope_theta);
+            });
         }
 
         // write K/V windows into the pool (all lanes first, then attend —
         // mirrors model.py's update-then-read order); per-position writes
-        // so each position routes through its own page in paged mode
+        // so each position routes through its own page in paged mode.
+        // Kept sequential: pure memcpy, and the seed's write order makes
+        // last-write-wins well-defined when padding lanes share a trash
+        // page.
         for lane in 0..g {
             let start = positions0[lane] as usize;
             for j in 0..t {
                 let koff = kv_addr(0, layer, lane, start + j);
                 let voff = kv_addr(1, layer, lane, start + j);
-                state[koff..koff + kvd]
-                    .copy_from_slice(&kproj[(lane * t + j) * kvd..(lane * t + j + 1) * kvd]);
-                state[voff..voff + kvd]
-                    .copy_from_slice(&vproj[(lane * t + j) * kvd..(lane * t + j + 1) * kvd]);
+                state.write(koff, &kproj[(lane * t + j) * kvd..(lane * t + j + 1) * kvd]);
+                state.write(voff, &vproj[(lane * t + j) * kvd..(lane * t + j + 1) * kvd]);
             }
         }
 
         // chunked (FlashDecoding-style) attention per lane over its KV
-        // region, gathered position-major into lane-local scratch so the
+        // region, gathered position-major into per-worker scratch so the
         // reduction loop (and therefore the arithmetic order) is identical
-        // in slot and paged mode
+        // in slot and paged mode. Lanes are independent pool items: the
+        // KV pool is read-only during this phase and each lane writes its
+        // own rows of `attn`.
         let mut attn = vec![0.0f32; n * qd];
         let ksplits = sched.attn_ksplits;
         assert!(d.max_seq % ksplits == 0, "max_seq not divisible by attn_ksplits");
         let cs = d.max_seq / ksplits;
-        let mut k_gather = vec![0.0f32; d.max_seq * kvd];
-        let mut v_gather = vec![0.0f32; d.max_seq * kvd];
-        for lane in 0..g {
-            for s_abs in 0..d.max_seq {
-                let ko = kv_addr(0, layer, lane, s_abs);
-                let vo = kv_addr(1, layer, lane, s_abs);
-                k_gather[s_abs * kvd..(s_abs + 1) * kvd]
-                    .copy_from_slice(&state[ko..ko + kvd]);
-                v_gather[s_abs * kvd..(s_abs + 1) * kvd]
-                    .copy_from_slice(&state[vo..vo + kvd]);
-            }
-            let k_pool = &k_gather[..];
-            let v_pool = &v_gather[..];
-            for j in 0..t {
-                let pos = positions[lane * t + j];
-                let q_row = &q[(lane * t + j) * qd..(lane * t + j + 1) * qd];
-                for head in 0..nh {
-                    let kvh = head / rep;
-                    let qh = &q_row[head * hd..(head + 1) * hd];
-                    // online-softmax partials combined in fixed chunk order
-                    let mut m_run = -1e30f32;
-                    let mut l_run = 0.0f32;
-                    let mut o_run = vec![0.0f32; hd];
-                    let mut s_vals = vec![0.0f32; cs];
-                    for c in 0..ksplits {
-                        let mut m_c = -1e30f32;
-                        for (si, s_abs) in (c * cs..(c + 1) * cs).enumerate() {
-                            let masked = (s_abs as i32) > pos;
-                            let sv = if masked {
-                                -1e9f32
-                            } else {
-                                let krow = &k_pool[s_abs * kvd + kvh * hd..s_abs * kvd + (kvh + 1) * hd];
-                                let mut dot = 0.0f32;
-                                for i in 0..hd {
-                                    dot += qh[i] * krow[i];
+        {
+            let aview = RawSlice::new(&mut attn);
+            let q = &q[..];
+            let positions = &positions[..];
+            let kv_addr = &kv_addr;
+            pool::parallel_for(g, |lane| {
+                SCRATCH.with(|cell| {
+                    let scr = &mut *cell.borrow_mut();
+                    let k_gather = grab(&mut scr.k_gather, d.max_seq * kvd);
+                    let v_gather = grab(&mut scr.v_gather, d.max_seq * kvd);
+                    let o_run = grab(&mut scr.o_run, hd);
+                    let o_c = grab(&mut scr.o_c, hd);
+                    let s_vals = grab(&mut scr.s_vals, cs);
+                    for s_abs in 0..d.max_seq {
+                        let ko = kv_addr(0, layer, lane, s_abs);
+                        let vo = kv_addr(1, layer, lane, s_abs);
+                        state.read(ko, &mut k_gather[s_abs * kvd..(s_abs + 1) * kvd]);
+                        state.read(vo, &mut v_gather[s_abs * kvd..(s_abs + 1) * kvd]);
+                    }
+                    let k_pool = &k_gather[..];
+                    let v_pool = &v_gather[..];
+                    // SAFETY: lane indices are unique per worker; disjoint.
+                    let attn_lane = unsafe { aview.chunk(lane, t * qd) };
+                    for j in 0..t {
+                        let pos = positions[lane * t + j];
+                        let q_row = &q[(lane * t + j) * qd..(lane * t + j + 1) * qd];
+                        for head in 0..nh {
+                            let kvh = head / rep;
+                            let qh = &q_row[head * hd..(head + 1) * hd];
+                            // online-softmax partials combined in fixed chunk order
+                            let mut m_run = -1e30f32;
+                            let mut l_run = 0.0f32;
+                            o_run.fill(0.0);
+                            for c in 0..ksplits {
+                                let mut m_c = -1e30f32;
+                                for (si, s_abs) in (c * cs..(c + 1) * cs).enumerate() {
+                                    let masked = (s_abs as i32) > pos;
+                                    let sv = if masked {
+                                        -1e9f32
+                                    } else {
+                                        let krow = &k_pool[s_abs * kvd + kvh * hd..s_abs * kvd + (kvh + 1) * hd];
+                                        let mut dot = 0.0f32;
+                                        for i in 0..hd {
+                                            dot += qh[i] * krow[i];
+                                        }
+                                        dot * scale
+                                    };
+                                    s_vals[si] = sv;
+                                    if sv > m_c {
+                                        m_c = sv;
+                                    }
                                 }
-                                dot * scale
-                            };
-                            s_vals[si] = sv;
-                            if sv > m_c {
-                                m_c = sv;
+                                let mut l_c = 0.0f32;
+                                o_c.fill(0.0);
+                                for (si, s_abs) in (c * cs..(c + 1) * cs).enumerate() {
+                                    let p = (s_vals[si] - m_c).exp();
+                                    l_c += p;
+                                    let vrow = &v_pool[s_abs * kvd + kvh * hd..s_abs * kvd + (kvh + 1) * hd];
+                                    for i in 0..hd {
+                                        o_c[i] += p * vrow[i];
+                                    }
+                                }
+                                let m_new = if m_c > m_run { m_c } else { m_run };
+                                let a = (m_run - m_new).exp();
+                                let b = (m_c - m_new).exp();
+                                l_run = l_run * a + l_c * b;
+                                for i in 0..hd {
+                                    o_run[i] = o_run[i] * a + o_c[i] * b;
+                                }
+                                m_run = m_new;
                             }
-                        }
-                        let mut l_c = 0.0f32;
-                        let mut o_c = vec![0.0f32; hd];
-                        for (si, s_abs) in (c * cs..(c + 1) * cs).enumerate() {
-                            let p = (s_vals[si] - m_c).exp();
-                            l_c += p;
-                            let vrow = &v_pool[s_abs * kvd + kvh * hd..s_abs * kvd + (kvh + 1) * hd];
+                            let out_row = &mut attn_lane[j * qd + head * hd..j * qd + (head + 1) * hd];
                             for i in 0..hd {
-                                o_c[i] += p * vrow[i];
+                                out_row[i] = o_run[i] / l_run;
                             }
                         }
-                        let m_new = if m_c > m_run { m_c } else { m_run };
-                        let a = (m_run - m_new).exp();
-                        let b = (m_c - m_new).exp();
-                        l_run = l_run * a + l_c * b;
-                        for i in 0..hd {
-                            o_run[i] = o_run[i] * a + o_c[i] * b;
-                        }
-                        m_run = m_new;
                     }
-                    let out_row = &mut attn[(lane * t + j) * qd + head * hd..(lane * t + j) * qd + (head + 1) * hd];
-                    for i in 0..hd {
-                        out_row[i] = o_run[i] / l_run;
-                    }
-                }
-            }
+                });
+            });
         }
 
         let wo = &w[W_WO][layer * qd * dm..(layer + 1) * qd * dm];
@@ -899,13 +1173,25 @@ fn run_forward(desc: &Descriptor, g: usize, t: usize, args: &[&PjRtBuffer]) -> R
         let wd = &w[W_DOWN][layer * fh * dm..(layer + 1) * fh * dm];
         let gate = gemm(&x, wg, n, dm, fh, sched, sched.ffn_splits);
         let up = gemm(&x, wu, n, dm, fh, sched, sched.ffn_splits);
-        let mut f = vec![0.0f32; n * fh];
-        for i in 0..n * fh {
-            let gv = gate[i];
-            // silu(x) = x * sigmoid(x)
-            f[i] = gv / (1.0 + (-gv).exp()) * up[i];
+        let mut act = vec![0.0f32; n * fh];
+        {
+            // elementwise SwiGLU, row-parallel (disjoint output rows)
+            let fview = RawSlice::new(&mut act);
+            let gate = &gate[..];
+            let up = &up[..];
+            pool::parallel_for(n, |r| {
+                // SAFETY: row indices are unique per worker; disjoint.
+                let f_row = unsafe { fview.chunk(r, fh) };
+                let g_row = &gate[r * fh..(r + 1) * fh];
+                let u_row = &up[r * fh..(r + 1) * fh];
+                for i in 0..fh {
+                    let gv = g_row[i];
+                    // silu(x) = x * sigmoid(x)
+                    f_row[i] = gv / (1.0 + (-gv).exp()) * u_row[i];
+                }
+            });
         }
-        let down = gemm(&f, wd, n, fh, dm, sched, sched.ffn_splits);
+        let down = gemm(&act, wd, n, fh, dm, sched, sched.ffn_splits);
         for i in 0..n * dm {
             h[i] += down[i];
         }
@@ -918,24 +1204,62 @@ fn run_forward(desc: &Descriptor, g: usize, t: usize, args: &[&PjRtBuffer]) -> R
         *v *= d.logit_scale;
     }
 
-    // publish rows into the logits region
+    // publish rows into the logits region at this call's row offset
     let off = d.logits_offset();
-    state[off..off + n * d.vocab].copy_from_slice(&logits);
+    state.write(off + logits_row0 * d.vocab, &logits);
+    Ok(())
+}
 
-    let len = state.len();
-    Ok(PjRtBuffer { data: Rc::new(Data::F32(state)), dims: vec![len] })
+/// True iff every KV page any lane *writes* (the blocks covering positions
+/// `pos0..pos0 + count`) is owned by that lane alone: written by no other
+/// lane and absent from every other lane's table. The read side matters
+/// because lanes gather their entire table during attention (masked
+/// positions included), so a foreign read of a concurrently written page
+/// would be order-sensitive. Pages no lane writes (shared prefixes, trash
+/// pages) may appear in any number of tables — concurrent reads race
+/// nothing.
+fn mixed_lanes_disjoint(d: &Dims, counts: &[i32], tables: &[i32], positions: &[i32]) -> bool {
+    let bpl = d.blocks_per_lane();
+    let mut owner = vec![-1i32; d.num_pages()];
+    for (lane, &c) in counts.iter().enumerate() {
+        let p0 = positions[lane] as usize;
+        let b0 = p0 / d.block_size;
+        let b1 = (p0 + c as usize - 1) / d.block_size;
+        for b in b0..=b1 {
+            let page = tables[lane * bpl + b] as usize;
+            if owner[page] != -1 {
+                return false; // two write ranges hit one page
+            }
+            owner[page] = lane as i32;
+        }
+    }
+    for lane in 0..counts.len() {
+        for b in 0..bpl {
+            let page = tables[lane * bpl + b] as usize;
+            if owner[page] >= 0 && owner[page] != lane as i32 {
+                return false; // a lane reads a page another lane writes
+            }
+        }
+    }
+    true
 }
 
 /// Ragged lane-major fused forward. Args: state, tokens `[sum(counts)]`,
 /// counts `[L]`, block tables `[L * blocks_per_lane]`, start positions
 /// `[L]`, then the weight table.
 ///
-/// Each lane executes through [`run_forward`] with `g = 1, t = counts[l]`,
-/// threading the state buffer lane to lane, so every lane's KV writes and
-/// logits are bitwise identical to the equivalent exclusive single-lane
-/// invariant pass — the property the engine's fused-vs-serial determinism
-/// tests pin. Logits rows are republished lane-major (prefix-sum row
-/// offsets) into the state's logits region so one extract reads them all.
+/// Each lane executes the exact [`forward_core`] path with `g = 1,
+/// t = counts[l]` over one shared in-place state, so every lane's KV
+/// writes and logits are bitwise identical to the equivalent exclusive
+/// single-lane invariant pass — the property the engine's fused-vs-serial
+/// determinism tests pin. Logits rows land lane-major (prefix-sum row
+/// offsets) in the state's logits region so one extract reads them all.
+///
+/// When more than one worker is configured and [`mixed_lanes_disjoint`]
+/// proves that no lane can observe another's writes, lanes run
+/// concurrently; otherwise (or with `threads == 1`) they run in the seed's
+/// sequential lane order. Both paths produce bitwise-identical state: each
+/// lane touches only its own pages and logits rows either way.
 fn run_mixed(desc: &Descriptor, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
     let d = &desc.dims;
     if args.len() != 5 + N_WEIGHTS {
@@ -985,38 +1309,75 @@ fn run_mixed(desc: &Descriptor, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
             d.max_fwd_tokens
         ));
     }
+    let np = d.num_pages();
+    for &p in tables {
+        if (p as usize) >= np {
+            return err(format!("block-table page {p} out of range ({np} pages)"));
+        }
+    }
+    let w: Vec<&[f32]> = {
+        let mut v = Vec::with_capacity(N_WEIGHTS);
+        for a in &args[5..] {
+            v.push(a.f32s()?);
+        }
+        v
+    };
 
-    let client = PjRtClient;
-    let vocab = d.vocab;
-    let off = d.logits_offset();
-    let mut state_buf = args[0].clone();
-    let mut logits_acc: Vec<f32> = Vec::with_capacity(total * vocab);
+    let mut state = args[0].f32s()?.to_vec();
+    // lane-major logits row offsets (prefix sums)
+    let mut row0 = vec![0usize; lanes];
     let mut toff = 0usize;
     for lane in 0..lanes {
-        let c = counts[lane] as usize;
-        let tok_buf =
-            client.buffer_from_host_buffer(&tokens[toff..toff + c], &[c], None)?;
-        let tab_buf = client.buffer_from_host_buffer(
-            &tables[lane * bpl..(lane + 1) * bpl],
-            &[bpl],
-            None,
-        )?;
-        let pos_buf =
-            client.buffer_from_host_buffer(&positions[lane..lane + 1], &[1], None)?;
-        let mut lane_args: Vec<&PjRtBuffer> = Vec::with_capacity(4 + N_WEIGHTS);
-        lane_args.push(&state_buf);
-        lane_args.push(&tok_buf);
-        lane_args.push(&tab_buf);
-        lane_args.push(&pos_buf);
-        lane_args.extend_from_slice(&args[5..]);
-        let out = run_forward(desc, 1, c, &lane_args)?;
-        logits_acc.extend_from_slice(&out.f32s()?[off..off + c * vocab]);
-        state_buf = out;
-        toff += c;
+        row0[lane] = toff;
+        toff += counts[lane] as usize;
     }
 
-    let mut state = state_buf.f32s()?.to_vec();
-    state[off..off + total * vocab].copy_from_slice(&logits_acc);
+    let view = StateView::new(&mut state);
+    let parallel = pool::threads() > 1
+        && lanes > 1
+        && mixed_lanes_disjoint(d, counts, tables, positions);
+    if parallel {
+        let first_err: std::sync::Mutex<Option<Error>> = std::sync::Mutex::new(None);
+        pool::parallel_for(lanes, |lane| {
+            let c = counts[lane] as usize;
+            let r = forward_core(
+                desc,
+                1,
+                c,
+                &view,
+                &tokens[row0[lane]..row0[lane] + c],
+                &tables[lane * bpl..(lane + 1) * bpl],
+                &positions[lane..lane + 1],
+                row0[lane],
+                &w,
+            );
+            if let Err(e) = r {
+                let mut slot = first_err.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(e);
+                }
+            }
+        });
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+    } else {
+        for lane in 0..lanes {
+            let c = counts[lane] as usize;
+            forward_core(
+                desc,
+                1,
+                c,
+                &view,
+                &tokens[row0[lane]..row0[lane] + c],
+                &tables[lane * bpl..(lane + 1) * bpl],
+                &positions[lane..lane + 1],
+                row0[lane],
+                &w,
+            )?;
+        }
+    }
+
     let len = state.len();
     Ok(PjRtBuffer { data: Rc::new(Data::F32(state)), dims: vec![len] })
 }
@@ -1136,9 +1497,14 @@ mod tests {
 
     #[test]
     fn combine_tree_matches_pairwise() {
-        let mut parts = vec![vec![1.0f32], vec![2.0], vec![3.0], vec![4.0]];
+        let mut parts = vec![1.0f32, 2.0, 3.0, 4.0];
         // tree: (1+3) + (2+4)
-        assert_eq!(combine_tree(&mut parts), vec![10.0]);
+        combine_tree_flat(&mut parts, 4, 1);
+        assert_eq!(parts[0], 10.0);
+        // width 2: [1,10] [2,20] [3,30] [4,40] -> [(1+3)+(2+4), (10+30)+(20+40)]
+        let mut parts = vec![1.0f32, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        combine_tree_flat(&mut parts, 4, 2);
+        assert_eq!(&parts[..2], &[10.0, 100.0]);
     }
 
     #[test]
@@ -1150,9 +1516,10 @@ mod tests {
         let mut a = vec![0.0f32; n];
         let mut b = vec![0.0f32; n];
         let mut c = vec![0.0f32; n];
+        let mut tmp = vec![0.0f32; n];
         gemm_row_fast(&x, &w, k, n, 8, true, &mut a);
         gemm_row_fast(&x, &w, k, n, 2, true, &mut b);
-        gemm_row_inv(&x, &w, k, n, 8, &mut c);
+        gemm_row_inv(&x, &w, k, n, 8, &mut tmp, &mut c);
         // different schedules drift in the low bits but stay close
         assert_ne!(a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                    b.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
@@ -1165,6 +1532,73 @@ mod tests {
         gemm_row_fast(&x, &w, k, n, 8, true, &mut a2);
         assert_eq!(a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                    a2.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+    }
+
+    /// The parallel drivers must be bitwise identical to the sequential
+    /// per-row reference at any worker count. Baselines come from the
+    /// always-sequential row kernels, so this holds even if another test
+    /// concurrently flips the global thread knob.
+    #[test]
+    fn parallel_gemm_and_rmsnorm_match_sequential_reference_bitwise() {
+        let (m, k, n) = (6, 64, 16);
+        let x: Vec<f32> = (0..m * k).map(|i| ((i * 29 % 17) as f32 - 8.0) * 0.11).collect();
+        let w: Vec<f32> = (0..k * n).map(|i| ((i * 13 % 19) as f32 - 9.0) * 0.05).collect();
+        let mut reference = vec![0.0f32; m * n];
+        for r in 0..m {
+            let o = &mut reference[r * n..(r + 1) * n];
+            gemm_row_fast(&x[r * k..(r + 1) * k], &w, k, n, 4, true, o);
+        }
+        let mut ref_inv = vec![0.0f32; m * n];
+        let mut tmp = vec![0.0f32; n];
+        for r in 0..m {
+            let o = &mut ref_inv[r * n..(r + 1) * n];
+            gemm_row_inv(&x[r * k..(r + 1) * k], &w, k, n, 8, &mut tmp, o);
+        }
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for threads in [1usize, 2, 4, 8] {
+            pool::set_threads(threads);
+            let fast_sched = Schedule { kind: "fast".into(), ..Default::default() };
+            let got = gemm(&x, &w, m, k, n, &fast_sched, 4);
+            assert_eq!(bits(&reference), bits(&got), "fast split-K @ {threads} threads");
+            let inv_sched = Schedule::default();
+            let got = gemm(&x, &w, m, k, n, &inv_sched, 1);
+            assert_eq!(bits(&ref_inv), bits(&got), "invariant @ {threads} threads");
+        }
+        // rmsnorm: compare across thread counts (row arithmetic is
+        // identical code either way; this pins the fan-out plumbing)
+        let wn: Vec<f32> = (0..k).map(|i| 1.0 + (i % 3) as f32 * 0.25).collect();
+        pool::set_threads(1);
+        let seq = rmsnorm(&x, &wn, m, k, 4, 1e-5);
+        pool::set_threads(8);
+        let par = rmsnorm(&x, &wn, m, k, 4, 1e-5);
+        assert_eq!(bits(&seq), bits(&par));
+        pool::set_threads(0);
+    }
+
+    #[test]
+    fn mixed_lane_disjointness_check() {
+        let mut d = Dims::default();
+        d.n_layers = 1;
+        d.n_kv_heads = 1;
+        d.head_dim = 4;
+        d.max_seq = 64;
+        d.slots = 4;
+        d.block_size = 16;
+        assert_eq!(d.blocks_per_lane(), 4);
+        // two lanes, exclusive tables: disjoint
+        let tables: Vec<i32> = vec![0, 1, 2, 3, 4, 5, 6, 7];
+        assert!(mixed_lanes_disjoint(&d, &[2, 2], &tables, &[0, 0]));
+        // write-write collision: both write ranges land on page 0
+        let tables: Vec<i32> = vec![0, 1, 2, 3, 0, 5, 6, 7];
+        assert!(!mixed_lanes_disjoint(&d, &[2, 2], &tables, &[0, 0]));
+        // read-write overlap: lane 1 writes block 1 (page 5) but its table
+        // still lists lane 0's write page 0, which attention gathers
+        let tables: Vec<i32> = vec![0, 1, 2, 3, 0, 5, 6, 7];
+        assert!(!mixed_lanes_disjoint(&d, &[2, 2], &tables, &[0, 16]));
+        // both lanes share a read-only prefix page (block 0), writes land
+        // in their own later blocks: disjoint
+        let tables: Vec<i32> = vec![0, 1, 2, 3, 0, 5, 6, 7];
+        assert!(mixed_lanes_disjoint(&d, &[2, 2], &tables, &[16, 16]));
     }
 
     #[test]

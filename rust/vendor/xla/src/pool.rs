@@ -1,0 +1,339 @@
+//! Persistent worker pool for the simulator's parallel regions.
+//!
+//! Determinism is never delegated to this module: every parallel region in
+//! `lib.rs` assigns each item a fixed, disjoint output range and performs
+//! arithmetic that is a pure function of the item index, so *which* worker
+//! runs an item — and in what order items complete — cannot change a single
+//! bit of the result. The pool only decides how many hands do the work.
+//!
+//! Design constraints:
+//!
+//! * No external crates (the build image has no registry access), so this
+//!   is a hand-rolled `std` pool: detached threads parked on a condvar,
+//!   one region active at a time, work claimed by atomic index.
+//! * Regions may nest (a lane-parallel forward calls row-parallel GEMMs).
+//!   A region entered from inside another region runs inline on the
+//!   calling worker — nesting changes granularity, never results.
+//! * The thread count is a runtime knob (`set_threads`), so benchmarks can
+//!   sweep 1/2/4/8 threads in one process. Workers beyond the current
+//!   count skip new regions; they are parked, not killed.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Hard ceiling on the worker count; guards against absurd env values.
+const MAX_THREADS: usize = 64;
+
+/// Lifetime-erased pointer to a parallel region body. Sound because the
+/// submitting thread blocks inside `parallel_for` until every item has
+/// finished, so the closure outlives all dereferences.
+#[derive(Clone, Copy)]
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls are safe) and is only
+// dereferenced while the owning stack frame is pinned in `parallel_for`.
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+/// One parallel region. Heap-allocated per region so a worker that wakes
+/// late (or straggles past the end) touches only this region's atomics,
+/// never a successor's.
+struct Job {
+    task: TaskRef,
+    items: usize,
+    /// Next unclaimed item index (work stealing by `fetch_add`).
+    next: AtomicUsize,
+    /// Items fully executed; the region is over when this reaches `items`.
+    done: AtomicUsize,
+    /// Helpers that joined; participation is capped at `cap`.
+    joined: AtomicUsize,
+    /// Max helper threads for this region (`threads - 1` at submit time).
+    cap: usize,
+    /// An item body panicked; re-raised on the submitting thread.
+    panicked: AtomicBool,
+    epoch: u64,
+}
+
+struct State {
+    job: Option<Arc<Job>>,
+    epoch: u64,
+    /// Configured worker count (including the submitting thread).
+    threads: usize,
+    /// Helper threads actually spawned so far.
+    spawned: usize,
+}
+
+struct Pool {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Cumulative busy nanoseconds across all participants (including the
+    /// submitting thread's share). Sample deltas for efficiency metrics.
+    busy_ns: AtomicU64,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(State {
+            job: None,
+            epoch: 0,
+            threads: default_threads(),
+            spawned: 0,
+        }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+        busy_ns: AtomicU64::new(0),
+    })
+}
+
+/// Default worker count: `LLM42_THREADS` env if set and >= 1, else the
+/// machine's available parallelism.
+fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("LLM42_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n.min(MAX_THREADS);
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_THREADS)
+}
+
+/// Set the worker count. `0` resets to the default (`LLM42_THREADS` env or
+/// available parallelism). Takes effect on the next parallel region;
+/// results are bitwise identical at any setting.
+pub fn set_threads(n: usize) {
+    let n = if n == 0 { default_threads() } else { n.min(MAX_THREADS) };
+    pool().state.lock().unwrap().threads = n;
+}
+
+/// The currently configured worker count (including the calling thread).
+pub fn threads() -> usize {
+    pool().state.lock().unwrap().threads
+}
+
+/// Cumulative worker-busy nanoseconds since process start. Monotonic;
+/// callers sample deltas and divide by `wall * threads()` for a busy
+/// fraction.
+pub fn busy_ns() -> u64 {
+    pool().busy_ns.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    /// True while this thread is executing items of some region; nested
+    /// `parallel_for` calls then run inline.
+    static IN_REGION: Cell<bool> = Cell::new(false);
+}
+
+/// Marks the current thread as inside a region for the guard's lifetime
+/// (drop-safe against panicking item bodies).
+struct RegionGuard;
+
+impl RegionGuard {
+    fn enter() -> RegionGuard {
+        IN_REGION.with(|c| c.set(true));
+        RegionGuard
+    }
+}
+
+impl Drop for RegionGuard {
+    fn drop(&mut self) {
+        IN_REGION.with(|c| c.set(false));
+    }
+}
+
+fn worker_main() {
+    let p = pool();
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = p.state.lock().unwrap();
+            loop {
+                match &st.job {
+                    Some(j) if j.epoch != seen => break j.clone(),
+                    _ => st = p.work_cv.wait(st).unwrap(),
+                }
+            }
+        };
+        seen = job.epoch;
+        if job.joined.fetch_add(1, Ordering::Relaxed) >= job.cap {
+            // over the participation cap (thread count was lowered)
+            continue;
+        }
+        run_items(p, &job);
+    }
+}
+
+/// Claim and execute items until the region is drained; the participant
+/// that finishes the last item wakes the submitter.
+fn run_items(p: &Pool, job: &Job) {
+    let start = Instant::now();
+    let _guard = RegionGuard::enter();
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.items {
+            break;
+        }
+        // SAFETY: the submitter is blocked until `done == items`, so the
+        // closure behind the pointer is alive for every executed item.
+        let f = unsafe { &*job.task.0 };
+        if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+            job.panicked.store(true, Ordering::SeqCst);
+        }
+        // AcqRel publishes this item's writes to the submitter, which
+        // acquires `done` before reading results.
+        if job.done.fetch_add(1, Ordering::AcqRel) + 1 == job.items {
+            let _g = p.state.lock().unwrap();
+            p.done_cv.notify_all();
+        }
+    }
+    p.busy_ns
+        .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+}
+
+/// Run `f(0..items)` across the pool, returning once every item finished.
+/// Item execution order is unspecified; callers must make items disjoint
+/// and order-free (every call site in this crate is — see the module doc).
+///
+/// Inline fast paths: nested regions, a single item, and `threads() == 1`
+/// all run sequentially on the calling thread.
+pub fn parallel_for<F: Fn(usize) + Sync>(items: usize, f: F) {
+    if items == 0 {
+        return;
+    }
+    if IN_REGION.with(|c| c.get()) {
+        // nested region: run inline (the enclosing region's busy timer
+        // already covers this work)
+        for i in 0..items {
+            f(i);
+        }
+        return;
+    }
+    if items == 1 {
+        // single item: no flag, so a nested multi-item region below this
+        // frame can still use the pool (e.g. split-K under one GEMM row)
+        f(0);
+        return;
+    }
+    let p = pool();
+    let nthreads = p.state.lock().unwrap().threads;
+    if nthreads <= 1 {
+        let start = Instant::now();
+        {
+            let _guard = RegionGuard::enter();
+            for i in 0..items {
+                f(i);
+            }
+        }
+        p.busy_ns
+            .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        return;
+    }
+
+    let task: &(dyn Fn(usize) + Sync) = &f;
+    let job = {
+        let mut st = p.state.lock().unwrap();
+        st.epoch += 1;
+        let want = st.threads.saturating_sub(1);
+        while st.spawned < want {
+            let name = format!("llm42-sim-{}", st.spawned);
+            if std::thread::Builder::new()
+                .name(name)
+                .spawn(worker_main)
+                .is_err()
+            {
+                break; // degrade gracefully; retry on the next region
+            }
+            st.spawned += 1;
+        }
+        let job = Arc::new(Job {
+            task: TaskRef(task as *const _),
+            items,
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            joined: AtomicUsize::new(0),
+            cap: want,
+            panicked: AtomicBool::new(false),
+            epoch: st.epoch,
+        });
+        st.job = Some(job.clone());
+        p.work_cv.notify_all();
+        job
+    };
+
+    // the submitting thread is a full participant
+    run_items(p, &job);
+
+    let mut st = p.state.lock().unwrap();
+    while job.done.load(Ordering::Acquire) < job.items {
+        st = p.done_cv.wait(st).unwrap();
+    }
+    st.job = None;
+    drop(st);
+
+    if job.panicked.load(Ordering::SeqCst) {
+        panic!("parallel region worker panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        set_threads(4);
+        let hits: Vec<AtomicU32> = (0..257).map(|_| AtomicU32::new(0)).collect();
+        parallel_for(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        set_threads(0);
+    }
+
+    #[test]
+    fn nested_regions_run_inline_and_complete() {
+        set_threads(4);
+        let total = AtomicUsize::new(0);
+        parallel_for(8, |_| {
+            parallel_for(8, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+        set_threads(0);
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        set_threads(1);
+        let total = AtomicUsize::new(0);
+        parallel_for(16, |_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+        set_threads(0);
+    }
+
+    #[test]
+    fn worker_panics_propagate_to_the_submitter() {
+        set_threads(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            parallel_for(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        set_threads(0);
+    }
+}
