@@ -155,7 +155,92 @@ fn main() {
     if let Some(j) = parallel_scaling(&mut rt) {
         sections.push(("parallel", j));
     }
+    if let Some(j) = observability_overhead(&mut rt) {
+        sections.push(("observability", j));
+    }
     write_bench_json(sections);
+}
+
+/// Observability overhead: the identical deterministic steady workload at
+/// obs `off` vs `events` (journal, per-row verify margins, histograms all
+/// live). Acceptance: `events` costs < 3% tok/s vs `off`; the engine
+/// digest column must be identical in both rows — recording never changes
+/// committed streams.
+fn observability_overhead(rt: &mut Runtime) -> Option<Json> {
+    use llm42::obs::{digest_hex, ObsConfig, ObsLevel};
+    let n_reqs = if reduced() { 6 } else { 16 };
+    let run = |rt: &mut Runtime, level: ObsLevel| -> Option<(f64, u64, String)> {
+        let cfg = EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 2,
+            verify_window: 16,
+            max_stall_steps: 4,
+            eos_token: u32::MAX, // full budgets: identical committed volume
+            max_step_tokens: 128,
+            obs: ObsConfig { level, ..Default::default() },
+            ..Default::default()
+        };
+        let mut eng = match Engine::new(rt, cfg) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("observability bench skipped: {e}");
+                return None;
+            }
+        };
+        let _ = eng.warmup();
+        for i in 0..n_reqs {
+            eng.submit(Request {
+                prompt: (0..100).map(|p| 3 + ((p + i as u32 * 13) % 400)).collect(),
+                max_new_tokens: 16,
+                deterministic: true,
+                temperature: 1.0,
+                seed: 60_000 + i as u64,
+                ..Default::default()
+            })
+            .unwrap();
+        }
+        let t0 = llm42::util::now_secs();
+        if let Err(e) = eng.run_to_completion() {
+            eprintln!("observability bench aborted: {e}");
+            return None;
+        }
+        let wall = llm42::util::now_secs() - t0;
+        eng.take_finished();
+        Some((
+            eng.metrics.committed_tokens as f64 / wall.max(1e-9),
+            eng.obs.last_seq(),
+            digest_hex(eng.obs.engine_digest()),
+        ))
+    };
+    let mut tab =
+        Table::new(&["obs", "tok_s", "overhead_%", "events", "engine_digest"]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base = 0.0f64;
+    for level in [ObsLevel::Off, ObsLevel::Events] {
+        let (tok_s, events, digest) = run(rt, level)?;
+        if level == ObsLevel::Off {
+            base = tok_s;
+        }
+        let overhead_pct =
+            if base > 0.0 { (1.0 - tok_s / base) * 100.0 } else { 0.0 };
+        tab.row(vec![
+            level.as_str().to_string(),
+            format!("{tok_s:.1}"),
+            format!("{overhead_pct:.1}"),
+            format!("{events}"),
+            digest.clone(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("obs", Json::str(level.as_str())),
+            ("tok_s", Json::num(tok_s)),
+            ("overhead_pct", Json::num(overhead_pct)),
+            ("events", Json::num(events as f64)),
+            ("engine_digest", Json::str(digest)),
+        ]));
+    }
+    println!("== observability: recording overhead off vs events ==");
+    println!("{}", tab.render());
+    Some(Json::Arr(rows))
 }
 
 /// Thread-scaling sweep: the identical workloads at 1/2/4/8 simulator
@@ -458,7 +543,9 @@ fn streaming_ttft(rt: &mut Runtime) -> Option<Json> {
     let mut engine_ttft = Recorder::new();
     for o in &outs {
         stream_ttft.record(first_delta[&o.id] * 1e3);
-        engine_ttft.record(o.metrics.ttft() * 1e3);
+        if let Some(t) = o.metrics.ttft() {
+            engine_ttft.record(t * 1e3);
+        }
         assert_eq!(
             streamed_tokens[&o.id],
             o.tokens.len() as u64,
@@ -550,7 +637,9 @@ fn fusion_comparison(rt: &mut Runtime) -> Option<Json> {
         let mut ttft = Recorder::new();
         let mut det_e2e = Recorder::new();
         for o in &outs {
-            ttft.record(o.metrics.ttft() * 1e3);
+            if let Some(t) = o.metrics.ttft() {
+                ttft.record(t * 1e3);
+            }
             if o.deterministic {
                 det_e2e.record(o.metrics.e2e() * 1e3);
             }
@@ -662,7 +751,9 @@ fn multiturn_cache_comparison(rt: &mut Runtime) -> Option<Json> {
             for (id, c) in wave {
                 let o = outs.iter().find(|o| o.id == id).expect("turn finished");
                 histories[c].extend(o.tokens.iter().copied());
-                ttft.record(o.metrics.ttft() * 1e3);
+                if let Some(t) = o.metrics.ttft() {
+                    ttft.record(t * 1e3);
+                }
             }
         }
         let prefill = eng.metrics.prefill_tokens;

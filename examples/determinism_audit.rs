@@ -9,7 +9,15 @@
 //! schedules. This is the regression-test / safety-audit use case the
 //! paper motivates (O4): pin `is_deterministic=true` on audited traffic
 //! only, and leave the rest at full speed.
+//!
+//! The comparison runs on committed-stream digests (`stream_digest` —
+//! the FNV-1a chain the engine maintains per sequence at every obs
+//! level), not on buffered token vectors: comparing one integer per run
+//! is how a replica set or a CI job would audit determinism. Each
+//! schedule also prints `engine_digest=0x...` — the engine-wide fold
+//! over all retired requests — which CI diffs across thread counts.
 
+use llm42::obs::{digest_hex, digest_stream};
 use llm42::prelude::*;
 use llm42::util::rng::SplitMix64;
 
@@ -50,8 +58,8 @@ fn main() -> Result<()> {
         ("crowd of 11", co_traffic(2, 11, vocab)),
     ];
 
-    let mut audited_streams = Vec::new();
-    let mut control_streams = Vec::new();
+    let mut audited_digests = Vec::new();
+    let mut control_digests = Vec::new();
     for (name, co) in &schedules {
         let mut eng = Engine::new(
             &mut rt,
@@ -70,24 +78,36 @@ fn main() -> Result<()> {
         let outs = eng.take_finished();
         let audit = outs.iter().find(|o| o.id == audit_id).unwrap();
         let ctrl = outs.iter().find(|o| o.id == control_id).unwrap();
+        // the running chain must equal a from-scratch digest of the
+        // committed tokens — the provenance layer's core invariant
+        assert_eq!(
+            audit.stream_digest,
+            digest_stream(&audit.tokens),
+            "stream digest chain diverged from the committed stream"
+        );
         println!(
-            "schedule {name:>12}: audited {} tokens ({} rollbacks, {} recomputed) | control {} tokens",
+            "schedule {name:>12}: audited {} tokens, digest {} ({} rollbacks, \
+             {} recomputed) | control {} tokens",
             audit.tokens.len(),
+            digest_hex(audit.stream_digest),
             audit.metrics.rollbacks,
             audit.metrics.recomputed_tokens,
             ctrl.tokens.len(),
         );
-        audited_streams.push(audit.tokens.clone());
-        control_streams.push(ctrl.tokens.clone());
+        // engine-wide fold over every retired request in this schedule;
+        // CI greps these lines and diffs them across thread counts
+        println!("engine_digest={}", digest_hex(eng.obs.engine_digest()));
+        audited_digests.push(audit.stream_digest);
+        control_digests.push(ctrl.stream_digest);
     }
 
     println!();
-    let all_equal = audited_streams.windows(2).all(|w| w[0] == w[1]);
+    let all_equal = audited_digests.windows(2).all(|w| w[0] == w[1]);
     println!(
-        "audited request bitwise identical across schedules: {}",
+        "audited digest identical across schedules: {}",
         if all_equal { "YES ✓" } else { "NO ✗ (bug!)" }
     );
-    let ctrl_equal = control_streams.windows(2).all(|w| w[0] == w[1]);
+    let ctrl_equal = control_digests.windows(2).all(|w| w[0] == w[1]);
     println!(
         "unverified control identical across schedules:      {}",
         if ctrl_equal {

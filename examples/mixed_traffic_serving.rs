@@ -126,7 +126,10 @@ fn serve(
     let (mut det_n, mut det_rollbacks, mut det_recomputed) = (0u64, 0u64, 0u64);
     for o in &outs {
         e2e.record(o.metrics.e2e());
-        ttft.record(o.metrics.ttft() * 1e3);
+        // aborted-before-first-token requests have no TTFT sample
+        if let Some(t) = o.metrics.ttft() {
+            ttft.record(t * 1e3);
+        }
         if o.deterministic {
             det_n += 1;
             det_rollbacks += o.metrics.rollbacks;

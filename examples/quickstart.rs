@@ -61,7 +61,7 @@ fn main() -> Result<()> {
             o.id,
             if o.deterministic { "det" } else { "fst" },
             o.tokens.len(),
-            o.metrics.ttft() * 1e3,
+            o.metrics.ttft().unwrap_or(f64::NAN) * 1e3,
             o.metrics.rollbacks,
             tok.decode(&o.tokens)
         );

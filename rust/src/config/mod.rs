@@ -20,6 +20,8 @@
 //!   "max_step_tokens": 0,
 //!   "request_timeout_ms": 0,
 //!   "threads": 0,
+//!   "obs": "counters",
+//!   "trace_out": "",
 //!   "server": { "addr": "127.0.0.1:4242" }
 //! }
 //! ```
@@ -41,10 +43,17 @@
 //! "timeout"` and their KV reclaimed. `threads` (0 = auto: the
 //! `LLM42_THREADS` env, else available parallelism) sets the simulator
 //! worker-thread count; it changes wall-clock only — committed streams
-//! are bitwise identical at any thread count.
+//! are bitwise identical at any thread count. `obs` (`off` | `counters`
+//! | `events`, default `off`) sets the observability level: `counters`
+//! adds latency histograms and rollback forensics, `events` adds the
+//! bounded step-event journal served by `{"cmd": "events"}`. A non-empty
+//! `trace_out` path tees every journal event to that file as JSON lines
+//! (and implies `events`). Recording never changes committed streams —
+//! stream digests are maintained at every level, including `off`.
 
 use crate::engine::{EngineConfig, FaultPlan, Mode, PolicyKind};
 use crate::error::{Error, Result};
+use crate::obs::ObsLevel;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -105,6 +114,14 @@ impl AppConfig {
         if let Some(t) = v.get("threads").and_then(|x| x.as_usize()) {
             cfg.engine.threads = t;
         }
+        if let Some(o) = v.get("obs").and_then(|x| x.as_str()) {
+            cfg.engine.obs.level = ObsLevel::parse(o)?;
+        }
+        if let Some(p) = v.get("trace_out").and_then(|x| x.as_str()) {
+            if !p.is_empty() {
+                cfg.engine.obs.trace_out = Some(p.to_string());
+            }
+        }
         if let Some(srv) = v.get("server") {
             if let Some(a) = srv.get("addr").and_then(|x| x.as_str()) {
                 cfg.server_addr = a.to_string();
@@ -121,7 +138,7 @@ impl AppConfig {
     /// CLI flags override file values (`--mode`, `--policy`, `--group`,
     /// `--window`, `--artifacts`, `--addr`, `--max-stall`, `--eos`,
     /// `--block-size`, `--prefix-cache true|false`, `--max-step-tokens`,
-    /// `--threads`).
+    /// `--threads`, `--obs off|counters|events`, `--trace-out PATH`).
     pub fn apply_args(mut self, args: &Args) -> Result<AppConfig> {
         if let Some(m) = args.get("mode") {
             self.engine.mode = Mode::parse(m)?;
@@ -144,6 +161,13 @@ impl AppConfig {
         self.engine.request_timeout_ms =
             args.f64_or("request-timeout-ms", self.engine.request_timeout_ms)?;
         self.engine.threads = args.usize_or("threads", self.engine.threads)?;
+        if let Some(o) = args.get("obs") {
+            self.engine.obs.level = ObsLevel::parse(o)?;
+        }
+        if let Some(p) = args.get("trace-out") {
+            self.engine.obs.trace_out =
+                if p.is_empty() { None } else { Some(p.to_string()) };
+        }
         self.artifacts = args.str_or("artifacts", &self.artifacts);
         self.server_addr = args.str_or("addr", &self.server_addr);
         self.engine.fault = FaultPlan::None; // never configurable in prod
@@ -269,6 +293,25 @@ mod tests {
         // default: auto (LLM42_THREADS env, else available parallelism)
         let d = AppConfig::resolve(&args("")).unwrap();
         assert_eq!(d.engine.threads, 0);
+    }
+
+    #[test]
+    fn obs_level_and_trace_out_from_file_and_flags() {
+        let c = AppConfig::from_json(r#"{"obs": "counters"}"#).unwrap();
+        assert_eq!(c.engine.obs.level, ObsLevel::Counters);
+        let c = c.apply_args(&args("--obs events")).unwrap();
+        assert_eq!(c.engine.obs.level, ObsLevel::Events);
+        let c = AppConfig::from_json(r#"{"trace_out": "/tmp/trace.jsonl"}"#).unwrap();
+        assert_eq!(c.engine.obs.trace_out.as_deref(), Some("/tmp/trace.jsonl"));
+        // empty path in the file means "not set"
+        let c = AppConfig::from_json(r#"{"trace_out": ""}"#).unwrap();
+        assert_eq!(c.engine.obs.trace_out, None);
+        // default: off, no trace file
+        let d = AppConfig::resolve(&args("")).unwrap();
+        assert_eq!(d.engine.obs.level, ObsLevel::Off);
+        assert_eq!(d.engine.obs.trace_out, None);
+        assert!(AppConfig::from_json(r#"{"obs": "wat"}"#).is_err());
+        assert!(AppConfig::resolve(&args("--obs loud")).is_err());
     }
 
     #[test]

@@ -88,6 +88,7 @@ use crate::engine::sequence::{FinishReason, Phase, Request, RequestOutput, Seque
 use crate::engine::store::{SeqId, SequenceStore};
 use crate::engine::verify;
 use crate::error::{Error, Result};
+use crate::obs::{self, MarginDepth, Obs, ObsConfig, VerifyObs};
 use crate::runtime::Runtime;
 use crate::util::now_secs;
 
@@ -170,6 +171,11 @@ pub struct EngineConfig {
     /// streams are bitwise identical at any setting (`tests/parallel.rs`
     /// pins this across {1, 2, 4, 8}).
     pub threads: usize,
+    /// Observability: event/forensics/histogram recording level and the
+    /// optional `--trace-out` JSONL sink (see [`crate::obs`]). Recording
+    /// never changes committed streams (`tests/obs.rs` pins this); `off`
+    /// costs one branch per record site on the hot path.
+    pub obs: ObsConfig,
 }
 
 impl Default for EngineConfig {
@@ -187,6 +193,7 @@ impl Default for EngineConfig {
             max_step_tokens: 0,
             request_timeout_ms: 0.0,
             threads: 0,
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -215,6 +222,19 @@ pub enum StepKind {
     /// is attributed to the per-phase metrics by token share.
     Mixed,
     Idle,
+}
+
+impl StepKind {
+    /// Wire label (step events, `--trace-out` JSONL).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StepKind::Prefill => "prefill",
+            StepKind::Decode => "decode",
+            StepKind::Verify => "verify",
+            StepKind::Mixed => "mixed",
+            StepKind::Idle => "idle",
+        }
+    }
 }
 
 /// Reusable planning-view buffers: `step()` rebuilds the [`SchedView`]
@@ -253,6 +273,9 @@ pub struct Engine<'rt> {
     /// pending commit-boundary stream events (streaming requests only)
     deltas: Vec<StreamDelta>,
     pub metrics: EngineMetrics,
+    /// determinism provenance & event journal (digests are always
+    /// maintained; histograms/events per `cfg.obs.level`)
+    pub obs: Obs,
     next_id: u64,
     verify_lane_counter: u64,
     decode_buckets: Vec<usize>,
@@ -330,6 +353,7 @@ impl<'rt> Engine<'rt> {
             ..Default::default()
         };
         let policy = cfg.policy.build();
+        let obs = Obs::new(cfg.obs.clone())?;
         Ok(Engine {
             rt,
             cfg,
@@ -339,6 +363,7 @@ impl<'rt> Engine<'rt> {
             finished: Vec::new(),
             deltas: Vec::new(),
             metrics,
+            obs,
             next_id: 1,
             verify_lane_counter: 0,
             decode_buckets,
@@ -655,12 +680,14 @@ impl<'rt> Engine<'rt> {
         let busy0 = self.rt.sim_busy_ns();
         let t0 = Instant::now();
         let out = self.step_rounds(&mut vs);
-        self.metrics.sim_wall_secs += t0.elapsed().as_secs_f64();
+        let wall = t0.elapsed().as_secs_f64();
+        self.metrics.sim_wall_secs += wall;
         self.metrics.sim_busy_secs +=
             self.rt.sim_busy_ns().wrapping_sub(busy0) as f64 * 1e-9;
         self.metrics.sim_threads = self.rt.sim_threads() as u64;
         self.view_scratch = vs;
-        if out.is_ok() {
+        if let Ok(kind) = &out {
+            self.obs.on_step_end(self.metrics.steps, kind.as_str(), wall);
             self.sweep_stream_deltas();
         }
         out
@@ -800,7 +827,9 @@ impl<'rt> Engine<'rt> {
                     self.check_verify_lanes(&lanes)?;
                     let t0 = Instant::now();
                     self.verify_pass(&lanes)?;
-                    self.metrics.verify_secs += t0.elapsed().as_secs_f64();
+                    let dt = t0.elapsed().as_secs_f64();
+                    self.metrics.verify_secs += dt;
+                    self.obs.note_verify_wall(dt);
                     return Ok(StepKind::Verify);
                 }
                 Action::Decode { lanes } => {
@@ -844,7 +873,9 @@ impl<'rt> Engine<'rt> {
         if !plan.verify.is_empty() {
             let t0 = Instant::now();
             self.verify_pass(&plan.verify)?;
-            self.metrics.verify_secs += t0.elapsed().as_secs_f64();
+            let dt = t0.elapsed().as_secs_f64();
+            self.metrics.verify_secs += dt;
+            self.obs.note_verify_wall(dt);
         }
         // stall accounting mirrors the exclusive arms: fast-path steps bump
         // waiting ready lanes, a pure verify step does not (lanes the pass
@@ -1053,6 +1084,7 @@ impl<'rt> Engine<'rt> {
         self.store[victim].preempt();
         self.store.requeue(victim);
         self.metrics.preemptions += 1;
+        self.obs.on_preempt(self.metrics.steps, id);
         self.metrics.note_queue_depth(self.store.queued_len());
         Ok(())
     }
@@ -1202,6 +1234,7 @@ impl<'rt> Engine<'rt> {
         self.metrics.prefill_chunks += 1;
         self.metrics.forward_passes += 1;
         self.metrics.prefill_tokens += real as u64;
+        self.obs.note_prefill(1, real as u32);
         // redone work caused by preemption: drain the replay debt recorded
         // at eviction time (only tokens whose KV had actually been built
         // count — a mid-prefill victim owes just its progress so far)
@@ -1248,6 +1281,7 @@ impl<'rt> Engine<'rt> {
         let finished = seq.push_fast_token(tok, self.cfg.eos_token, false);
         self.metrics.decoded_tokens += 1;
         self.metrics.committed_tokens += 1;
+        self.obs.note_commit(1);
         if finished {
             self.retire(sid)?;
         }
@@ -1372,6 +1406,8 @@ impl<'rt> Engine<'rt> {
         }
         let eos = self.cfg.eos_token;
         let speculative = self.dvr();
+        self.obs.note_decode(count as u32);
+        let mut committed_now = 0u32;
         let mut to_retire = Vec::new();
         for (lane, &sid) in lanes.iter().enumerate() {
             let row = &scr.logits[lane * vocab..(lane + 1) * vocab];
@@ -1383,6 +1419,7 @@ impl<'rt> Engine<'rt> {
             self.metrics.decoded_tokens += 1;
             if !spec_lane {
                 self.metrics.committed_tokens += 1;
+                committed_now += 1;
             }
             if self.invariant_decode() {
                 // batch-invariant commits are universal-schedule KV: the
@@ -1395,6 +1432,7 @@ impl<'rt> Engine<'rt> {
                 to_retire.push(sid);
             }
         }
+        self.obs.note_commit(committed_now);
         for sid in to_retire {
             self.retire(sid)?;
         }
@@ -1482,6 +1520,10 @@ impl<'rt> Engine<'rt> {
         if !decode.is_empty() {
             self.metrics.decode_steps += 1;
         }
+        let fused_prefill_toks: usize = prefill.iter().map(|&(_, c)| c).sum();
+        self.obs
+            .note_prefill(prefill.len() as u32, fused_prefill_toks as u32);
+        self.obs.note_decode(decode.len() as u32);
 
         let vocab = self.rt.dims().vocab;
         {
@@ -1531,6 +1573,7 @@ impl<'rt> Engine<'rt> {
                     let finished = seq.push_fast_token(tok, eos, false);
                     self.metrics.decoded_tokens += 1;
                     self.metrics.committed_tokens += 1;
+                    self.obs.note_commit(1);
                     if finished {
                         to_retire.push(sid);
                     }
@@ -1540,6 +1583,7 @@ impl<'rt> Engine<'rt> {
         }
 
         let speculative = self.dvr();
+        let mut committed_now = 0u32;
         for &sid in decode {
             let logits_row = &scr.logits[row * vocab..(row + 1) * vocab];
             let seq = &mut self.store[sid];
@@ -1550,6 +1594,7 @@ impl<'rt> Engine<'rt> {
             self.metrics.decoded_tokens += 1;
             if !spec_lane {
                 self.metrics.committed_tokens += 1;
+                committed_now += 1;
             }
             if self.invariant_decode() {
                 // batch-invariant commits are universal-schedule KV: the
@@ -1563,6 +1608,7 @@ impl<'rt> Engine<'rt> {
             }
             row += 1;
         }
+        self.obs.note_commit(committed_now);
         for sid in to_retire {
             self.retire(sid)?;
         }
@@ -1667,12 +1713,45 @@ impl<'rt> Engine<'rt> {
                 seq.req.max_new_tokens,
                 forced,
             );
+            // Forensics capture, before the speculative run is consumed:
+            // the token pair at the divergence point, and the verifier's
+            // top-1/top-2 logit margins at the depth the obs level asks
+            // for (the O(vocab) scans are skipped entirely at `off`).
+            // Read-only with respect to scheduling and sampling state —
+            // recording can never change committed streams.
+            let id = seq.id;
+            let divergence = if d.rolled_back() {
+                Some((seq.speculative[d.matched], vtokens[d.matched]))
+            } else {
+                None
+            };
+            let margins: Vec<f32> = {
+                let row_margin = |j: usize| {
+                    obs::top2_margin(
+                        &scr.logits[(lane * t + j) * vocab..(lane * t + j + 1) * vocab],
+                    )
+                };
+                match self.obs.margin_depth() {
+                    MarginDepth::None => Vec::new(),
+                    MarginDepth::DivergenceOnly => match divergence {
+                        Some(_) => vec![row_margin(d.matched)],
+                        None => Vec::new(),
+                    },
+                    // every committed row plus the divergence/fresh row
+                    MarginDepth::All => (0..=d.matched).map(row_margin).collect(),
+                }
+            };
             // apply
             let matched: Vec<u32> = seq.speculative[..d.matched].to_vec();
             seq.committed.extend(matched);
             if let Some(f) = d.fresh {
                 seq.committed.push(f);
             }
+            // fold this pass's commits into the stream's digest chain
+            for i in c..seq.committed.len() {
+                seq.digest = obs::digest_push(seq.digest, seq.committed[i]);
+            }
+            let seq_digest = seq.digest;
             seq.speculative.clear();
             seq.eos_sampled = seq.committed.last() == Some(&eos);
             seq.stall_steps = 0;
@@ -1693,6 +1772,19 @@ impl<'rt> Engine<'rt> {
                 (s.prompt_len() + s.committed.len()).saturating_sub(1)
             };
             self.publish_seq(sid, written);
+            self.obs.on_verify(
+                self.metrics.steps,
+                VerifyObs {
+                    id,
+                    frontier: c,
+                    matched: d.matched,
+                    discarded: d.discarded,
+                    divergence,
+                    fresh_committed: d.fresh.is_some(),
+                    digest: seq_digest,
+                    margins,
+                },
+            );
             if let Some(reason) = finish {
                 self.store[sid].finish(reason);
                 to_retire.push(sid);
@@ -1740,6 +1832,20 @@ impl<'rt> Engine<'rt> {
             self.metrics.record_finished(out.priority, out.metrics.e2e());
         }
         self.metrics.record_finish_reason(out.finish_reason);
+        // digest fold + latency histograms + retire event; aborted
+        // requests never enter the engine-wide digest (their streams are
+        // truncated by wall-clock timing, not by the decode rule)
+        self.obs.on_retire(
+            self.metrics.steps,
+            out.id,
+            out.finish_reason.as_str(),
+            out.finish_reason.is_abort(),
+            out.tokens.len(),
+            out.stream_digest,
+            out.metrics.ttft(),
+            out.metrics.e2e(),
+            out.metrics.queue_wait(),
+        );
         self.sync_store_metrics();
         self.finished.push(out);
     }

@@ -29,18 +29,28 @@ pub struct SeqMetrics {
 }
 
 impl SeqMetrics {
-    /// Time to first committed token; 0 when the request was aborted
-    /// before producing one (`first_token_time` never set).
-    pub fn ttft(&self) -> f64 {
-        if self.first_token_time <= 0.0 {
-            0.0
-        } else {
-            self.first_token_time - self.arrive_time
-        }
+    /// True once the first token committed (`first_token_time` set).
+    pub fn has_first_token(&self) -> bool {
+        self.first_token_time > 0.0
+    }
+
+    /// Time to first committed token; `None` when the request was
+    /// aborted before producing one (`first_token_time` never set), so a
+    /// burst of aborts cannot drag TTFT percentiles toward zero.
+    pub fn ttft(&self) -> Option<f64> {
+        self.has_first_token()
+            .then(|| self.first_token_time - self.arrive_time)
     }
 
     pub fn e2e(&self) -> f64 {
         self.finish_time - self.arrive_time
+    }
+
+    /// Time spent queued before prefill first ran; `None` when the
+    /// request was aborted while still queued (`prefill_start` never
+    /// set).
+    pub fn queue_wait(&self) -> Option<f64> {
+        (self.prefill_start > 0.0).then(|| self.prefill_start - self.arrive_time)
     }
 }
 
@@ -257,12 +267,15 @@ mod tests {
     fn derived_metrics() {
         let m = SeqMetrics {
             arrive_time: 1.0,
+            prefill_start: 1.2,
             first_token_time: 1.5,
             finish_time: 3.0,
             ..Default::default()
         };
-        assert!((m.ttft() - 0.5).abs() < 1e-12);
+        assert!(m.has_first_token());
+        assert!((m.ttft().unwrap() - 0.5).abs() < 1e-12);
         assert!((m.e2e() - 2.0).abs() < 1e-12);
+        assert!((m.queue_wait().unwrap() - 0.2).abs() < 1e-12);
     }
 
     #[test]
@@ -319,9 +332,11 @@ mod tests {
     }
 
     #[test]
-    fn ttft_zero_when_no_token_was_committed() {
+    fn ttft_is_none_when_no_token_was_committed() {
         let m = SeqMetrics { arrive_time: 5.0, finish_time: 6.0, ..Default::default() };
-        assert_eq!(m.ttft(), 0.0, "aborted before the first token");
+        assert!(!m.has_first_token());
+        assert_eq!(m.ttft(), None, "aborted before the first token");
+        assert_eq!(m.queue_wait(), None, "aborted while still queued");
         assert!((m.e2e() - 1.0).abs() < 1e-12);
     }
 

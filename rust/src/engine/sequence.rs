@@ -12,6 +12,7 @@
 //!     (prefill is deterministic by construction, paper §4.1/O3)
 
 use crate::engine::metrics::SeqMetrics;
+use crate::obs;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
@@ -128,6 +129,10 @@ pub struct RequestOutput {
     /// every fast-path token produced (incl. later-discarded speculative
     /// ones), for the Fig. 6 consistent-span analysis
     pub fast_trace: Vec<u32>,
+    /// FNV-1a 64 digest chain over the committed token ids (equals
+    /// [`crate::obs::digest_stream`] of `tokens`): two runs or replicas
+    /// compare determinism with one integer instead of full streams
+    pub stream_digest: u64,
 }
 
 #[derive(Debug)]
@@ -157,6 +162,11 @@ pub struct Sequence {
     pub metrics: SeqMetrics,
     /// full fast-path token trace (committed or not), for Fig. 6 analysis
     pub fast_trace: Vec<u32>,
+    /// running FNV-1a 64 chain over committed token ids. Commits are
+    /// append-only (rollbacks discard only *speculative* tokens), so the
+    /// chain never rewinds; fast-path commits fold in here, verify-pass
+    /// commits fold in at the apply site in the executor.
+    pub digest: u64,
 }
 
 impl Sequence {
@@ -177,6 +187,7 @@ impl Sequence {
             finish_reason: None,
             metrics,
             fast_trace: Vec::new(),
+            digest: obs::DIGEST_EMPTY,
         }
     }
 
@@ -313,6 +324,7 @@ impl Sequence {
             false
         } else {
             self.committed.push(tok);
+            self.digest = obs::digest_push(self.digest, tok);
             if tok == eos {
                 self.eos_sampled = true;
                 self.finish(FinishReason::Eos);
@@ -347,6 +359,11 @@ impl Sequence {
     pub fn into_output(self, finish_time: f64) -> RequestOutput {
         let mut metrics = self.metrics;
         metrics.finish_time = finish_time;
+        debug_assert_eq!(
+            self.digest,
+            obs::digest_stream(&self.committed),
+            "stream digest chain diverged from the committed stream"
+        );
         RequestOutput {
             id: self.id,
             deterministic: self.req.deterministic,
@@ -355,6 +372,7 @@ impl Sequence {
             finish_reason: self.finish_reason.unwrap_or(FinishReason::Length),
             metrics,
             fast_trace: self.fast_trace,
+            stream_digest: self.digest,
         }
     }
 }
@@ -497,6 +515,23 @@ mod tests {
         // speculative tokens never stream
         s.push_fast_token(99, 999, true);
         assert_eq!(s.take_unstreamed(), None);
+    }
+
+    #[test]
+    fn fast_commits_maintain_the_stream_digest_chain() {
+        let mut s = Sequence::new(1, Request::greedy(vec![1, 2, 3], 8, false), 0.0);
+        s.phase = Phase::Decoding;
+        assert_eq!(s.digest, obs::DIGEST_EMPTY);
+        for t in [10u32, 11, 12] {
+            s.push_fast_token(t, 999, false);
+        }
+        assert_eq!(s.digest, obs::digest_stream(&[10, 11, 12]));
+        // speculative tokens never enter the chain
+        s.push_fast_token(99, 999, true);
+        assert_eq!(s.digest, obs::digest_stream(&[10, 11, 12]));
+        s.speculative.clear();
+        let out = s.into_output(1.0);
+        assert_eq!(out.stream_digest, obs::digest_stream(&out.tokens));
     }
 
     #[test]

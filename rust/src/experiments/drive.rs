@@ -142,7 +142,10 @@ pub fn run_trace(
     let mut ttft = Recorder::new();
     for o in &outputs {
         e2e.record(o.metrics.e2e());
-        ttft.record(o.metrics.ttft());
+        // aborted-before-first-token requests have no TTFT sample
+        if let Some(t) = o.metrics.ttft() {
+            ttft.record(t);
+        }
     }
     let m = eng.metrics.clone();
     Ok(TraceReport {

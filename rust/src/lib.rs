@@ -84,6 +84,7 @@ pub mod config;
 pub mod engine;
 pub mod error;
 pub mod manifest;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod tokenizer;
@@ -97,5 +98,6 @@ pub mod prelude {
     };
     pub use crate::error::{Error, Result};
     pub use crate::manifest::Manifest;
+    pub use crate::obs::{ObsConfig, ObsLevel};
     pub use crate::runtime::Runtime;
 }

@@ -45,13 +45,22 @@ COMMON:
                      LLM42_THREADS env, else available parallelism);
                      affects wall-clock only — committed streams are
                      bitwise identical at any thread count
+  --obs L            observability level: off (default), counters
+                     (latency histograms + rollback forensics), events
+                     (+ bounded step-event journal); recording never
+                     changes committed streams
+  --trace-out PATH   tee every journal event to PATH as JSON lines
+                     (implies --obs events)
   --seed S           trace seed (default 42)
 
 SERVER PROTOCOL (JSON lines; see rust/src/server):
   requests take \"stream\": true for commit-boundary token streaming
   (streamed text is never rolled back), \"timeout_ms\", \"priority\",
   \"deadline_ms\"; {\"cmd\":\"cancel\",\"id\":N} aborts a request,
-  {\"cmd\":\"stats\"} reports per-reason finish counters and KV occupancy.
+  {\"cmd\":\"stats\"} reports per-reason finish counters, KV occupancy,
+  latency quantiles, and the engine-wide determinism digest,
+  {\"cmd\":\"events\",\"since\":N} drains the step-event journal past
+  cursor N, {\"cmd\":\"metrics\"} returns Prometheus text exposition.
 ";
 
 fn main() {

@@ -1,0 +1,984 @@
+//! Determinism provenance & step-event observability.
+//!
+//! This module is the *instrumentation* layer: it records what the engine
+//! did (step events, verify outcomes, rollback forensics, latency
+//! histograms) and maintains the committed-stream digests that let two
+//! runs — or two replicas — prove their streams matched by comparing one
+//! integer. It is distinct from [`crate::trace`], which *generates*
+//! workloads; `obs` observes execution, `trace` drives it.
+//!
+//! Three observability levels ([`ObsLevel`]), strictly ordered:
+//!
+//! * `off` — no recording. The hot-path contract is one branch per
+//!   record site and zero allocation; the committed-stream digests are
+//!   the only thing still maintained (a handful of integer ops per
+//!   committed token — they are part of the determinism contract
+//!   surface, not optional telemetry).
+//! * `counters` — adds the latency [`Histogram`]s (TTFT, e2e, queue
+//!   wait, step wall, verify wall) and the bounded rollback-forensics
+//!   ring with the top-1/top-2 logit margin at each divergence point.
+//! * `events` — adds the bounded [`Event`] journal (step composition,
+//!   per-lane verify outcomes with committed-token margins, preemptions,
+//!   retirements) served by `{"cmd":"events"}` cursor drains and the
+//!   `--trace-out` JSONL writer.
+//!
+//! Recording never feeds back into scheduling or sampling: changing the
+//! level changes what is *recorded*, never what is *committed* (pinned
+//! by `tests/obs.rs`).
+
+use std::collections::VecDeque;
+use std::io::Write;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Committed-stream digests
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit offset basis — the digest of an empty stream.
+pub const DIGEST_EMPTY: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one committed token id into a running FNV-1a 64 chain
+/// (little-endian byte order, so the chain is platform-independent).
+#[inline]
+pub fn digest_push(h: u64, tok: u32) -> u64 {
+    let mut h = h;
+    for b in tok.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Digest of a whole committed stream: `digest_push` folded from
+/// [`DIGEST_EMPTY`]. A sequence's running digest always equals
+/// `digest_stream(&committed)` — commits are append-only (rollbacks only
+/// discard *speculative* tokens), so the chain never needs rewinding.
+pub fn digest_stream(tokens: &[u32]) -> u64 {
+    tokens.iter().fold(DIGEST_EMPTY, |h, &t| digest_push(h, t))
+}
+
+/// SplitMix64 finalizer — used to mix `(request id, stream digest)` pairs
+/// before the commutative engine-wide fold.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Render a digest the way the wire shows it: JSON numbers are f64, which
+/// silently truncates above 2^53, so digests travel as hex strings.
+pub fn digest_hex(d: u64) -> String {
+    format!("{d:#018x}")
+}
+
+// ---------------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------------
+
+/// Observability level; strictly ordered (`Off < Counters < Events`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ObsLevel {
+    Off,
+    Counters,
+    Events,
+}
+
+impl ObsLevel {
+    pub fn parse(s: &str) -> Result<ObsLevel> {
+        match s {
+            "off" => Ok(ObsLevel::Off),
+            "counters" => Ok(ObsLevel::Counters),
+            "events" => Ok(ObsLevel::Events),
+            other => Err(Error::Config(format!(
+                "unknown obs level '{other}' (off | counters | events)"
+            ))),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ObsLevel::Off => "off",
+            ObsLevel::Counters => "counters",
+            ObsLevel::Events => "events",
+        }
+    }
+}
+
+/// Observability configuration, carried by `EngineConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    pub level: ObsLevel,
+    /// Event-journal ring capacity (events level). Cursor drains are
+    /// non-destructive; a reader that lags more than this many events
+    /// behind the writer observes a reported `dropped` count.
+    pub journal_capacity: usize,
+    /// Rollback-forensics ring capacity (counters level and up).
+    pub forensics_capacity: usize,
+    /// JSONL event sink: every journal event is also appended to this
+    /// file as one JSON object per line. Implies `events` level.
+    pub trace_out: Option<String>,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            level: ObsLevel::Off,
+            journal_capacity: 8192,
+            forensics_capacity: 1024,
+            trace_out: None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Log-bucketed histogram
+// ---------------------------------------------------------------------------
+
+/// Sub-buckets per octave: 8 → worst-case quantile error ~12.5% of the
+/// bucket's low bound, fixed 496-slot footprint covering the full u64
+/// microsecond range.
+const HIST_SUB: usize = 8;
+const HIST_BUCKETS: usize = (64 - HIST_SUB.trailing_zeros() as usize) * HIST_SUB + HIST_SUB;
+
+/// Fixed-size log-bucketed latency histogram over non-negative seconds.
+///
+/// Values are bucketed as integer microseconds: linear buckets below 8µs,
+/// then 8 sub-buckets per power-of-two octave. All storage is allocated
+/// once at construction — `record` never allocates.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+fn bucket_of(us: u64) -> usize {
+    if (us as usize) < HIST_SUB {
+        return us as usize;
+    }
+    let exp = 63 - us.leading_zeros() as usize; // 2^exp <= us, exp >= 3
+    let sub = (us >> (exp - 3)) as usize & (HIST_SUB - 1);
+    (exp - 2) * HIST_SUB + sub
+}
+
+/// Inverse of `bucket_of`: the `[lo, hi)` microsecond range of a bucket.
+fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < HIST_SUB {
+        return (i as u64, i as u64 + 1);
+    }
+    let exp = i / HIST_SUB + 2;
+    let sub = (i % HIST_SUB) as u64;
+    let width = 1u64 << (exp - 3);
+    let lo = (1u64 << exp) + sub * width;
+    // the very top bucket's upper bound saturates instead of wrapping
+    (lo, lo.saturating_add(width))
+}
+
+impl Histogram {
+    pub fn record_secs(&mut self, secs: f64) {
+        let s = if secs.is_finite() && secs > 0.0 { secs } else { 0.0 };
+        let us = (s * 1e6).round().min(u64::MAX as f64) as u64;
+        self.counts[bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum += s;
+        self.min = self.min.min(s);
+        self.max = self.max.max(s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_secs(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum / self.count as f64)
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.min)
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.max)
+    }
+
+    /// Estimate the q-quantile (q in [0, 1]) in seconds, linearly
+    /// interpolated inside the containing bucket and clamped to the
+    /// observed min/max. `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // the rank-th sample (1-based) in cumulative bucket order
+        let rank = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                let (lo, hi) = bucket_bounds(i);
+                let frac = (rank - seen) as f64 / c as f64;
+                let us = lo as f64 + (hi - lo) as f64 * frac;
+                return Some((us / 1e6).clamp(self.min, self.max));
+            }
+            seen += c;
+        }
+        Some(self.max)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Events & forensics
+// ---------------------------------------------------------------------------
+
+/// Why a verifier lane rolled back: the divergence point, the token pair
+/// that disagreed, and the top-1/top-2 logit margin of the verifier's
+/// distribution at that point (the MarginGate calibration raw material —
+/// small margins mean numerically fragile positions).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RollbackForensics {
+    /// Request id of the rolled-back lane.
+    pub id: u64,
+    /// Engine step the verify pass ran in.
+    pub step: u64,
+    /// Committed length before the pass (the commit frontier the window
+    /// replayed from).
+    pub frontier: usize,
+    /// Index into the speculative window where replay diverged.
+    pub divergence: usize,
+    /// What the fast path had speculated at that index.
+    pub expected: u32,
+    /// What the verifier sampled there. When `fresh_committed`, this is
+    /// the token actually committed at `frontier + divergence`.
+    pub observed: u32,
+    /// Whether `observed` was committed as the corrective fresh token
+    /// (false only when the budget ended exactly at the frontier).
+    pub fresh_committed: bool,
+    /// Speculative tokens discarded by the rollback.
+    pub discarded: usize,
+    /// top-1 minus top-2 verifier logit at the divergence row.
+    pub margin: f32,
+}
+
+impl RollbackForensics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("step", Json::num(self.step as f64)),
+            ("frontier", Json::num(self.frontier as f64)),
+            ("divergence", Json::num(self.divergence as f64)),
+            ("expected", Json::num(self.expected as f64)),
+            ("observed", Json::num(self.observed as f64)),
+            ("fresh_committed", Json::Bool(self.fresh_committed)),
+            ("discarded", Json::num(self.discarded as f64)),
+            ("margin", Json::num(self.margin as f64)),
+        ])
+    }
+}
+
+/// One journal entry. `seq` is a monotone cursor (starts at 1, never
+/// reused) so `{"cmd":"events","since":s}` drains are lossless-ordered.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub seq: u64,
+    pub step: u64,
+    pub body: EventBody,
+}
+
+/// What happened. Step composition, per-lane verify outcomes, KV
+/// preemptions, and retirements cover the executor's observable actions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventBody {
+    /// One engine step: its kind and plan composition per phase.
+    Step {
+        kind: &'static str,
+        prefill_chunks: u32,
+        prefill_tokens: u32,
+        decode_lanes: u32,
+        verify_lanes: u32,
+        committed: u32,
+        rollbacks: u32,
+    },
+    /// One verifier lane's outcome. `margins` holds the top-1/top-2
+    /// logit margin for every window row up to and including the commit
+    /// frontier's advance (committed rows, plus the divergence row on a
+    /// rollback).
+    Verify {
+        id: u64,
+        frontier: usize,
+        matched: usize,
+        discarded: usize,
+        fresh_committed: bool,
+        digest: u64,
+        margins: Vec<f32>,
+    },
+    /// The policy evicted a sequence's KV to make room.
+    Preempt { id: u64 },
+    /// A sequence finished and left the store.
+    Retire {
+        id: u64,
+        reason: &'static str,
+        tokens: usize,
+        digest: u64,
+        aborted: bool,
+    },
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("step", Json::num(self.step as f64)),
+        ];
+        match &self.body {
+            EventBody::Step {
+                kind,
+                prefill_chunks,
+                prefill_tokens,
+                decode_lanes,
+                verify_lanes,
+                committed,
+                rollbacks,
+            } => {
+                pairs.push(("event", Json::str("step")));
+                pairs.push(("kind", Json::str(*kind)));
+                pairs.push(("prefill_chunks", Json::num(*prefill_chunks as f64)));
+                pairs.push(("prefill_tokens", Json::num(*prefill_tokens as f64)));
+                pairs.push(("decode_lanes", Json::num(*decode_lanes as f64)));
+                pairs.push(("verify_lanes", Json::num(*verify_lanes as f64)));
+                pairs.push(("committed", Json::num(*committed as f64)));
+                pairs.push(("rollbacks", Json::num(*rollbacks as f64)));
+            }
+            EventBody::Verify {
+                id,
+                frontier,
+                matched,
+                discarded,
+                fresh_committed,
+                digest,
+                margins,
+            } => {
+                pairs.push(("event", Json::str("verify")));
+                pairs.push(("id", Json::num(*id as f64)));
+                pairs.push(("frontier", Json::num(*frontier as f64)));
+                pairs.push(("matched", Json::num(*matched as f64)));
+                pairs.push(("discarded", Json::num(*discarded as f64)));
+                pairs.push(("fresh_committed", Json::Bool(*fresh_committed)));
+                pairs.push(("digest", Json::str(digest_hex(*digest))));
+                pairs.push((
+                    "margins",
+                    Json::Arr(margins.iter().map(|&m| Json::num(m as f64)).collect()),
+                ));
+            }
+            EventBody::Preempt { id } => {
+                pairs.push(("event", Json::str("preempt")));
+                pairs.push(("id", Json::num(*id as f64)));
+            }
+            EventBody::Retire {
+                id,
+                reason,
+                tokens,
+                digest,
+                aborted,
+            } => {
+                pairs.push(("event", Json::str("retire")));
+                pairs.push(("id", Json::num(*id as f64)));
+                pairs.push(("reason", Json::str(*reason)));
+                pairs.push(("tokens", Json::num(*tokens as f64)));
+                pairs.push(("digest", Json::str(digest_hex(*digest))));
+                pairs.push(("aborted", Json::Bool(*aborted)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// How much per-row margin data the verify pass should compute before
+/// calling [`Obs::on_verify`]. The O(vocab) top-2 scans are skipped
+/// entirely at `off`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MarginDepth {
+    /// No margins (obs off).
+    None,
+    /// Only the divergence row, and only when the lane rolled back.
+    DivergenceOnly,
+    /// Every committed row plus the divergence row (events level).
+    All,
+}
+
+/// Per-lane verify outcome handed to [`Obs::on_verify`].
+#[derive(Debug, Clone)]
+pub struct VerifyObs {
+    pub id: u64,
+    pub frontier: usize,
+    pub matched: usize,
+    pub discarded: usize,
+    /// `(expected, observed)` at the divergence point when rolled back.
+    pub divergence: Option<(u32, u32)>,
+    pub fresh_committed: bool,
+    /// Running stream digest after this pass's commits.
+    pub digest: u64,
+    /// top-1/top-2 margins per window row (depth per [`MarginDepth`]).
+    pub margins: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
+// The observability sink
+// ---------------------------------------------------------------------------
+
+/// Per-step plan composition, accumulated by the executor's action arms
+/// and flushed into one `Step` event by [`Obs::on_step_end`].
+#[derive(Debug, Clone, Copy, Default)]
+struct StepComp {
+    prefill_chunks: u32,
+    prefill_tokens: u32,
+    decode_lanes: u32,
+    verify_lanes: u32,
+    committed: u32,
+    rollbacks: u32,
+}
+
+/// The engine's observability state: histograms, the event journal, the
+/// forensics ring, and the engine-wide digest fold. One instance per
+/// engine, owned by it, written only from the engine thread.
+#[derive(Debug)]
+pub struct Obs {
+    cfg: ObsConfig,
+    next_seq: u64,
+    journal: VecDeque<Event>,
+    forensics: VecDeque<RollbackForensics>,
+    comp: StepComp,
+    writer: Option<std::io::BufWriter<std::fs::File>>,
+    engine_digest: u64,
+    digest_seqs: u64,
+    pub ttft: Histogram,
+    pub e2e: Histogram,
+    pub queue_wait: Histogram,
+    pub step_wall: Histogram,
+    pub verify_wall: Histogram,
+}
+
+impl Obs {
+    pub fn new(mut cfg: ObsConfig) -> Result<Obs> {
+        let writer = match &cfg.trace_out {
+            Some(path) => {
+                // a JSONL sink implies the events level
+                cfg.level = cfg.level.max(ObsLevel::Events);
+                let f = std::fs::File::create(path).map_err(|e| {
+                    Error::Config(format!("trace-out '{path}': {e}"))
+                })?;
+                Some(std::io::BufWriter::new(f))
+            }
+            None => None,
+        };
+        Ok(Obs {
+            cfg,
+            next_seq: 1,
+            journal: VecDeque::new(),
+            forensics: VecDeque::new(),
+            comp: StepComp::default(),
+            writer,
+            engine_digest: 0,
+            digest_seqs: 0,
+            ttft: Histogram::default(),
+            e2e: Histogram::default(),
+            queue_wait: Histogram::default(),
+            step_wall: Histogram::default(),
+            verify_wall: Histogram::default(),
+        })
+    }
+
+    #[inline]
+    pub fn level(&self) -> ObsLevel {
+        self.cfg.level
+    }
+
+    /// The single hot-path branch: false at `off`.
+    #[inline]
+    pub fn counters_on(&self) -> bool {
+        self.cfg.level >= ObsLevel::Counters
+    }
+
+    #[inline]
+    pub fn events_on(&self) -> bool {
+        self.cfg.level >= ObsLevel::Events
+    }
+
+    /// How much margin data verify passes should compute.
+    #[inline]
+    pub fn margin_depth(&self) -> MarginDepth {
+        match self.cfg.level {
+            ObsLevel::Off => MarginDepth::None,
+            ObsLevel::Counters => MarginDepth::DivergenceOnly,
+            ObsLevel::Events => MarginDepth::All,
+        }
+    }
+
+    fn emit(&mut self, step: u64, body: EventBody) {
+        let ev = Event { seq: self.next_seq, step, body };
+        self.next_seq += 1;
+        if let Some(w) = &mut self.writer {
+            let _ = writeln!(w, "{}", ev.to_json().dump());
+        }
+        if self.journal.len() == self.cfg.journal_capacity {
+            self.journal.pop_front();
+        }
+        self.journal.push_back(ev);
+    }
+
+    // -- executor hooks -----------------------------------------------------
+
+    pub fn note_prefill(&mut self, chunks: u32, tokens: u32) {
+        if self.events_on() {
+            self.comp.prefill_chunks += chunks;
+            self.comp.prefill_tokens += tokens;
+        }
+    }
+
+    pub fn note_decode(&mut self, lanes: u32) {
+        if self.events_on() {
+            self.comp.decode_lanes += lanes;
+        }
+    }
+
+    pub fn note_commit(&mut self, tokens: u32) {
+        if self.events_on() {
+            self.comp.committed += tokens;
+        }
+    }
+
+    pub fn note_verify_wall(&mut self, secs: f64) {
+        if self.counters_on() {
+            self.verify_wall.record_secs(secs);
+        }
+    }
+
+    pub fn on_preempt(&mut self, step: u64, id: u64) {
+        if self.events_on() {
+            self.emit(step, EventBody::Preempt { id });
+        }
+    }
+
+    /// One verifier lane's outcome: forensics ring at `counters`, a
+    /// `Verify` journal event at `events`.
+    pub fn on_verify(&mut self, step: u64, v: VerifyObs) {
+        if !self.counters_on() {
+            return;
+        }
+        if let Some((expected, observed)) = v.divergence {
+            if self.forensics.len() == self.cfg.forensics_capacity {
+                self.forensics.pop_front();
+            }
+            self.forensics.push_back(RollbackForensics {
+                id: v.id,
+                step,
+                frontier: v.frontier,
+                divergence: v.matched,
+                expected,
+                observed,
+                fresh_committed: v.fresh_committed,
+                discarded: v.discarded,
+                margin: v.margins.last().copied().unwrap_or(0.0),
+            });
+        }
+        if self.events_on() {
+            self.comp.verify_lanes += 1;
+            self.comp.committed +=
+                (v.matched + usize::from(v.fresh_committed)) as u32;
+            if v.discarded > 0 {
+                self.comp.rollbacks += 1;
+            }
+            self.emit(
+                step,
+                EventBody::Verify {
+                    id: v.id,
+                    frontier: v.frontier,
+                    matched: v.matched,
+                    discarded: v.discarded,
+                    fresh_committed: v.fresh_committed,
+                    digest: v.digest,
+                    margins: v.margins,
+                },
+            );
+        }
+    }
+
+    /// A sequence left the store. Folds the engine-wide digest
+    /// (unconditionally — digests are part of the determinism surface,
+    /// not telemetry), records the latency histograms, emits a `Retire`
+    /// event, and flushes the JSONL sink.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_retire(
+        &mut self,
+        step: u64,
+        id: u64,
+        reason: &'static str,
+        aborted: bool,
+        tokens: usize,
+        digest: u64,
+        ttft: Option<f64>,
+        e2e: f64,
+        queue_wait: Option<f64>,
+    ) {
+        if !aborted {
+            // Commutative fold: XOR of mixed (id, digest) pairs, so the
+            // engine-wide digest is invariant to retirement order —
+            // policy and timing reorder retirements, never streams.
+            self.engine_digest ^= mix64(id ^ mix64(digest));
+            self.digest_seqs += 1;
+        }
+        if self.counters_on() {
+            if let Some(t) = ttft {
+                self.ttft.record_secs(t);
+            }
+            if let Some(w) = queue_wait {
+                self.queue_wait.record_secs(w);
+            }
+            self.e2e.record_secs(e2e);
+        }
+        if self.events_on() {
+            self.emit(step, EventBody::Retire { id, reason, tokens, digest, aborted });
+            if let Some(w) = &mut self.writer {
+                let _ = w.flush();
+            }
+        }
+    }
+
+    /// End of one engine step: records the step-wall histogram and turns
+    /// the accumulated plan composition into a `Step` event.
+    pub fn on_step_end(&mut self, step: u64, kind: &'static str, wall_secs: f64) {
+        if !self.counters_on() {
+            return;
+        }
+        self.step_wall.record_secs(wall_secs);
+        if self.events_on() {
+            let c = std::mem::take(&mut self.comp);
+            self.emit(
+                step,
+                EventBody::Step {
+                    kind,
+                    prefill_chunks: c.prefill_chunks,
+                    prefill_tokens: c.prefill_tokens,
+                    decode_lanes: c.decode_lanes,
+                    verify_lanes: c.verify_lanes,
+                    committed: c.committed,
+                    rollbacks: c.rollbacks,
+                },
+            );
+        }
+    }
+
+    // -- read surface -------------------------------------------------------
+
+    /// Engine-wide digest: the commutative fold of every non-aborted
+    /// retired sequence's `(id, stream digest)`. 0 before any retirement.
+    pub fn engine_digest(&self) -> u64 {
+        self.engine_digest
+    }
+
+    /// Sequences folded into [`Obs::engine_digest`].
+    pub fn digest_seqs(&self) -> u64 {
+        self.digest_seqs
+    }
+
+    /// The journal cursor's high-water mark: the last `seq` emitted
+    /// (0 when nothing has been emitted yet).
+    pub fn last_seq(&self) -> u64 {
+        self.next_seq - 1
+    }
+
+    /// Non-destructive cursor drain: every retained event with
+    /// `seq > since`, in seq order, plus how many requested events had
+    /// already been evicted from the ring (0 = lossless).
+    pub fn events_since(&self, since: u64) -> (Vec<&Event>, u64) {
+        let evs: Vec<&Event> =
+            self.journal.iter().filter(|e| e.seq > since).collect();
+        let newest_missed = match evs.first() {
+            Some(first) => first.seq - 1,
+            None => self.last_seq(),
+        };
+        let dropped = newest_missed.saturating_sub(since);
+        (evs, dropped)
+    }
+
+    pub fn forensics(&self) -> impl Iterator<Item = &RollbackForensics> {
+        self.forensics.iter()
+    }
+
+    /// The five latency histograms with their wire names.
+    pub fn histograms(&self) -> [(&'static str, &Histogram); 5] {
+        [
+            ("ttft", &self.ttft),
+            ("e2e", &self.e2e),
+            ("queue_wait", &self.queue_wait),
+            ("step_wall", &self.step_wall),
+            ("verify_wall", &self.verify_wall),
+        ]
+    }
+}
+
+/// top-1 minus top-2 of one logit row (0.0 for rows shorter than 2).
+pub fn top2_margin(row: &[f32]) -> f32 {
+    let mut top1 = f32::NEG_INFINITY;
+    let mut top2 = f32::NEG_INFINITY;
+    for &v in row {
+        if v > top1 {
+            top2 = top1;
+            top1 = v;
+        } else if v > top2 {
+            top2 = v;
+        }
+    }
+    if top2 == f32::NEG_INFINITY {
+        0.0
+    } else {
+        top1 - top2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_chain_matches_whole_stream_digest() {
+        let toks = [0u32, 1, 57, 103, u32::MAX];
+        let mut h = DIGEST_EMPTY;
+        for &t in &toks {
+            h = digest_push(h, t);
+        }
+        assert_eq!(h, digest_stream(&toks));
+        assert_eq!(digest_stream(&[]), DIGEST_EMPTY);
+        // order matters within a stream
+        assert_ne!(digest_stream(&[1, 2]), digest_stream(&[2, 1]));
+    }
+
+    #[test]
+    fn digest_hex_is_full_width() {
+        assert_eq!(digest_hex(0), "0x0000000000000000");
+        assert_eq!(digest_hex(u64::MAX), "0xffffffffffffffff");
+    }
+
+    #[test]
+    fn bucket_bounds_invert_bucket_of() {
+        for us in (0u64..4096).chain([1 << 20, (1 << 40) + 12345, u64::MAX / 3]) {
+            let b = bucket_of(us);
+            let (lo, hi) = bucket_bounds(b);
+            assert!(lo <= us && us < hi, "us={us} bucket={b} [{lo},{hi})");
+        }
+        assert!(bucket_of(u64::MAX) < HIST_BUCKETS);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_sane_on_known_inputs() {
+        let mut h = Histogram::default();
+        assert!(h.quantile(0.5).is_none());
+        // 1..=1000 ms, uniformly
+        for ms in 1..=1000u64 {
+            h.record_secs(ms as f64 / 1e3);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean().unwrap() - 0.5005).abs() < 1e-9);
+        assert_eq!(h.min().unwrap(), 0.001);
+        assert_eq!(h.max().unwrap(), 1.0);
+        let p50 = h.quantile(0.5).unwrap();
+        assert!((0.4..=0.6).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99).unwrap();
+        assert!((0.9..=1.0).contains(&p99), "p99={p99}");
+        assert_eq!(h.quantile(0.0).unwrap(), 0.001, "q0 clamps to min");
+        assert_eq!(h.quantile(1.0).unwrap(), 1.0, "q1 clamps to max");
+    }
+
+    #[test]
+    fn histogram_single_value_quantiles_collapse() {
+        let mut h = Histogram::default();
+        h.record_secs(0.25);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q).unwrap(), 0.25);
+        }
+    }
+
+    #[test]
+    fn journal_cursor_drain_is_lossless_and_ordered() {
+        let mut obs = Obs::new(ObsConfig {
+            level: ObsLevel::Events,
+            ..ObsConfig::default()
+        })
+        .unwrap();
+        for step in 0..100u64 {
+            obs.on_preempt(step, step);
+        }
+        // incremental drains starting from arbitrary cursors
+        let (all, dropped) = obs.events_since(0);
+        assert_eq!(dropped, 0);
+        assert_eq!(all.len(), 100);
+        let seqs: Vec<u64> = all.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (1..=100).collect::<Vec<_>>());
+        let (tail, dropped) = obs.events_since(90);
+        assert_eq!(dropped, 0);
+        assert_eq!(tail.len(), 10);
+        assert_eq!(tail[0].seq, 91);
+        let (none, dropped) = obs.events_since(100);
+        assert!(none.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn journal_reports_dropped_events_when_ring_wraps() {
+        let mut obs = Obs::new(ObsConfig {
+            level: ObsLevel::Events,
+            journal_capacity: 10,
+            ..ObsConfig::default()
+        })
+        .unwrap();
+        for step in 0..25u64 {
+            obs.on_preempt(step, step);
+        }
+        let (evs, dropped) = obs.events_since(0);
+        assert_eq!(evs.len(), 10);
+        assert_eq!(evs[0].seq, 16);
+        assert_eq!(dropped, 15);
+        let (evs, dropped) = obs.events_since(20);
+        assert_eq!(evs.len(), 5);
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn off_level_records_nothing_but_folds_digests() {
+        let mut obs = Obs::new(ObsConfig::default()).unwrap();
+        obs.note_prefill(1, 32);
+        obs.note_decode(4);
+        obs.on_step_end(1, "decode", 0.01);
+        obs.on_verify(
+            1,
+            VerifyObs {
+                id: 7,
+                frontier: 3,
+                matched: 1,
+                discarded: 2,
+                divergence: Some((5, 9)),
+                fresh_committed: true,
+                digest: 42,
+                margins: vec![],
+            },
+        );
+        obs.on_retire(2, 7, "stop", false, 4, 42, Some(0.01), 0.05, Some(0.002));
+        assert_eq!(obs.events_since(0).0.len(), 0);
+        assert_eq!(obs.forensics().count(), 0);
+        assert_eq!(obs.step_wall.count(), 0);
+        assert_eq!(obs.ttft.count(), 0);
+        assert_eq!(obs.digest_seqs(), 1);
+        assert_ne!(obs.engine_digest(), 0);
+    }
+
+    #[test]
+    fn engine_digest_fold_is_order_independent_and_skips_aborts() {
+        let retire = |obs: &mut Obs, id: u64, digest: u64, aborted: bool| {
+            obs.on_retire(0, id, "stop", aborted, 3, digest, None, 0.1, None);
+        };
+        let mut a = Obs::new(ObsConfig::default()).unwrap();
+        retire(&mut a, 1, 100, false);
+        retire(&mut a, 2, 200, false);
+        retire(&mut a, 3, 999, true); // aborted: not folded
+        let mut b = Obs::new(ObsConfig::default()).unwrap();
+        retire(&mut b, 2, 200, false);
+        retire(&mut b, 1, 100, false);
+        assert_eq!(a.engine_digest(), b.engine_digest());
+        assert_eq!(a.digest_seqs(), 2);
+        // same digests under different ids must differ
+        let mut c = Obs::new(ObsConfig::default()).unwrap();
+        retire(&mut c, 1, 200, false);
+        retire(&mut c, 2, 100, false);
+        assert_ne!(a.engine_digest(), c.engine_digest());
+    }
+
+    #[test]
+    fn forensics_ring_is_bounded_and_keeps_newest() {
+        let mut obs = Obs::new(ObsConfig {
+            level: ObsLevel::Counters,
+            forensics_capacity: 3,
+            ..ObsConfig::default()
+        })
+        .unwrap();
+        for i in 0..10u64 {
+            obs.on_verify(
+                i,
+                VerifyObs {
+                    id: i,
+                    frontier: 0,
+                    matched: 0,
+                    discarded: 1,
+                    divergence: Some((1, 2)),
+                    fresh_committed: true,
+                    digest: 0,
+                    margins: vec![0.5],
+                },
+            );
+        }
+        let kept: Vec<u64> = obs.forensics().map(|f| f.id).collect();
+        assert_eq!(kept, vec![7, 8, 9]);
+        assert!(obs.forensics().all(|f| f.margin == 0.5));
+        // counters level records forensics but no journal events
+        assert_eq!(obs.events_since(0).0.len(), 0);
+    }
+
+    #[test]
+    fn top2_margin_basics() {
+        assert_eq!(top2_margin(&[1.0, 3.0, 2.0]), 1.0);
+        assert_eq!(top2_margin(&[5.0, 5.0]), 0.0);
+        assert_eq!(top2_margin(&[1.0]), 0.0);
+        assert_eq!(top2_margin(&[]), 0.0);
+    }
+
+    #[test]
+    fn obs_level_parse_round_trips() {
+        for l in [ObsLevel::Off, ObsLevel::Counters, ObsLevel::Events] {
+            assert_eq!(ObsLevel::parse(l.as_str()).unwrap(), l);
+        }
+        assert!(ObsLevel::parse("verbose").is_err());
+        assert!(ObsLevel::Off < ObsLevel::Counters);
+        assert!(ObsLevel::Counters < ObsLevel::Events);
+    }
+
+    #[test]
+    fn event_json_shapes() {
+        let ev = Event {
+            seq: 3,
+            step: 9,
+            body: EventBody::Retire {
+                id: 4,
+                reason: "stop",
+                tokens: 12,
+                digest: 0xabc,
+                aborted: false,
+            },
+        };
+        let j = Json::parse(&ev.to_json().dump()).unwrap();
+        assert_eq!(j.u("seq").unwrap(), 3);
+        assert_eq!(j.s("event").unwrap(), "retire");
+        assert_eq!(j.s("digest").unwrap(), "0x0000000000000abc");
+        assert_eq!(j.req("aborted").unwrap().as_bool(), Some(false));
+    }
+}

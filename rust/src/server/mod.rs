@@ -14,7 +14,12 @@
 //!   <- {"id": 3, "tokens": [...], "text": "...", "finish_reason": "stop",
 //!       "priority": 2, "ttft_ms": 31.2, "e2e_ms": 410.0,
 //!       "rollbacks": 0, "recomputed": 0, "preemptions": 0,
-//!       "reprefilled": 0}
+//!       "reprefilled": 0, "stream_digest": "0x..."}
+//!
+//! `stream_digest` is the FNV-1a chain over the committed token ids (see
+//! [`crate::obs`]): two runs of a deterministic request agree on it iff
+//! their committed streams are bitwise identical. `ttft_ms` is `null`
+//! when the request was aborted before its first committed token.
 //!
 //! `finish_reason` is one of `stop` (stop token), `length` (budget
 //! reached), `cancelled`, `timeout`, or `error`.
@@ -80,9 +85,36 @@
 //!              "held_pages": ..., "cache_hits": ...,
 //!              "cache_hit_tokens": ..., "cache_hit_rate": ...,
 //!              "reprefill_saved_tokens": ..., "cow_copies": ...,
-//!              "evicted_pages": ...}, ...}
+//!              "evicted_pages": ...},
+//!       "obs_level": "counters",
+//!       "digest": {"engine": "0x...", "sequences": ...},
+//!       "latency": {"ttft": {...}, "e2e": {...}, "queue_wait": {...},
+//!                   "step_wall": {...}, "verify_wall": {...}}, ...}
 //!   -> {"cmd": "set_policy", "policy": "fair-share"}
 //!   <- {"ok": true, "policy": "fair-share"}
+//!
+//! `digest.engine` is the engine-wide determinism digest: an
+//! order-independent fold of every retired (non-aborted) request's
+//! stream digest. Two runs of the same deterministic workload agree on
+//! it regardless of policy, thread count, or prefix-cache setting.
+//! `latency` histogram quantiles populate at obs level `counters` and
+//! above (`--obs`); each entry carries `count` plus `mean_ms` / `p50_ms`
+//! / `p90_ms` / `p99_ms` / `max_ms` (`null` until a sample lands).
+//!
+//! Observability commands (see [`crate::obs`] for the event schema):
+//!   -> {"cmd": "events", "since": 0}
+//!   <- {"ok": true, "events": [...], "next": 42, "dropped": 0}
+//! drains the bounded step-event journal past cursor `since`
+//! (non-destructive — multiple readers can cursor independently; pass
+//! the returned `next` as the following `since`). `dropped` counts
+//! events that aged out of the ring before this cursor reached them.
+//! Requires obs level `events`; at lower levels the journal is empty.
+//!   -> {"cmd": "metrics"}
+//!   <- {"ok": true, "content_type": "text/plain; version=0.0.4",
+//!       "metrics": "..."}
+//! returns the Prometheus text exposition as a JSON string (the wire
+//! stays one JSON object per line; an HTTP scraper shim just unwraps
+//! `metrics`).
 //!
 //! The default policy comes from server start (`--policy` / config file);
 //! `set_policy` swaps it engine-wide at runtime. Policies reorder work,
@@ -109,6 +141,7 @@ use crate::engine::{
     Request, RequestOutput, StreamDelta,
 };
 use crate::error::{Error, Result};
+use crate::obs::{self, Histogram, Obs};
 use crate::runtime::Runtime;
 use crate::tokenizer::Tokenizer;
 use crate::util::json::Json;
@@ -251,13 +284,19 @@ pub fn render_output(out: &RequestOutput, tok: &Tokenizer) -> String {
         ("finish_reason", Json::str(out.finish_reason.as_str())),
         ("deterministic", Json::Bool(out.deterministic)),
         ("priority", Json::num(out.priority as f64)),
-        ("ttft_ms", Json::num(out.metrics.ttft() * 1000.0)),
+        (
+            "ttft_ms",
+            // null, not 0: an aborted request never produced a token
+            out.metrics.ttft().map_or(Json::Null, |t| Json::num(t * 1000.0)),
+        ),
         ("e2e_ms", Json::num(out.metrics.e2e() * 1000.0)),
         ("rollbacks", Json::num(out.metrics.rollbacks as f64)),
         ("recomputed", Json::num(out.metrics.recomputed_tokens as f64)),
         ("preemptions", Json::num(out.metrics.preemptions as f64)),
         ("reprefilled", Json::num(out.metrics.reprefilled_tokens as f64)),
         ("cached_prefix_tokens", Json::num(out.metrics.cache_hit_tokens as f64)),
+        // hex string: JSON numbers are f64 and would corrupt 64-bit digests
+        ("stream_digest", Json::str(obs::digest_hex(out.stream_digest))),
     ])
     .dump()
 }
@@ -317,10 +356,31 @@ pub fn utf8_holdback(buf: &[u8]) -> usize {
     0
 }
 
+/// One histogram as quantile summaries; `null` entries until a sample
+/// lands (the histograms populate at obs level `counters` and above).
+fn hist_json(h: &Histogram) -> Json {
+    let ms = |v: Option<f64>| v.map_or(Json::Null, |x| Json::num(x * 1000.0));
+    Json::obj(vec![
+        ("count", Json::num(h.count() as f64)),
+        ("mean_ms", ms(h.mean())),
+        ("p50_ms", ms(h.quantile(0.5))),
+        ("p90_ms", ms(h.quantile(0.9))),
+        ("p99_ms", ms(h.quantile(0.99))),
+        ("max_ms", ms(h.max())),
+    ])
+}
+
 /// Serialize engine-wide counters for the `{"cmd": "stats"}` wire command.
 /// `waiters` is the server's live reply-channel count — it must return to
-/// zero when the engine drains, or a waiter leaked.
-pub fn render_stats(m: &EngineMetrics, kv: &KvStats, waiters: usize) -> String {
+/// zero when the engine drains, or a waiter leaked. `obs` supplies the
+/// determinism digest (maintained at every obs level) and the latency
+/// histograms.
+pub fn render_stats(
+    m: &EngineMetrics,
+    kv: &KvStats,
+    waiters: usize,
+    obs: &Obs,
+) -> String {
     let class_keys: Vec<String> =
         m.class_e2e.keys().map(|c| c.to_string()).collect();
     let class_e2e = Json::obj(
@@ -344,12 +404,24 @@ pub fn render_stats(m: &EngineMetrics, kv: &KvStats, waiters: usize) -> String {
         ("decode_steps", Json::num(m.decode_steps as f64)),
         ("prefill_chunks", Json::num(m.prefill_chunks as f64)),
         ("verify_passes", Json::num(m.verify_passes as f64)),
+        ("verify_lanes", Json::num(m.verify_lanes as f64)),
         ("committed_tokens", Json::num(m.committed_tokens as f64)),
+        ("decoded_tokens", Json::num(m.decoded_tokens as f64)),
+        ("prefill_tokens", Json::num(m.prefill_tokens as f64)),
         ("rollbacks", Json::num(m.rollbacks as f64)),
         ("recomputed_tokens", Json::num(m.recomputed_tokens as f64)),
         ("preemptions", Json::num(m.preemptions as f64)),
         ("reprefilled_tokens", Json::num(m.reprefilled_tokens as f64)),
         ("queue_depth_hwm", Json::num(m.queue_depth_hwm as f64)),
+        // wall-clock accounting per executor phase
+        (
+            "phase_secs",
+            Json::obj(vec![
+                ("decode", Json::num(m.decode_secs)),
+                ("prefill", Json::num(m.prefill_secs)),
+                ("verify", Json::num(m.verify_secs)),
+            ]),
+        ),
         // simulator parallelism: configured worker count and the
         // worker-busy fraction of wall x threads inside step() (thread
         // count never changes committed tokens, only these numbers)
@@ -413,6 +485,152 @@ pub fn render_stats(m: &EngineMetrics, kv: &KvStats, waiters: usize) -> String {
             ]),
         ),
         ("class_e2e", class_e2e),
+        // determinism provenance: the engine digest folds every retired
+        // (non-aborted) request's stream digest order-independently, so
+        // two runs of the same deterministic workload agree on it at any
+        // policy / thread count / cache setting. Maintained at every obs
+        // level, including `off`.
+        ("obs_level", Json::str(obs.level().as_str())),
+        (
+            "digest",
+            Json::obj(vec![
+                ("engine", Json::str(obs::digest_hex(obs.engine_digest()))),
+                ("sequences", Json::num(obs.digest_seqs() as f64)),
+            ]),
+        ),
+        (
+            "latency",
+            Json::obj(
+                obs.histograms().iter().map(|(n, h)| (*n, hist_json(h))).collect(),
+            ),
+        ),
+    ])
+    .dump()
+}
+
+/// Render engine counters, gauges, and latency summaries in the
+/// Prometheus text exposition format. Served by `{"cmd": "metrics"}` as
+/// a JSON string field so the wire stays one JSON object per line.
+pub fn render_metrics_prom(
+    m: &EngineMetrics,
+    kv: &KvStats,
+    waiters: usize,
+    obs: &Obs,
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let counters: &[(&str, &str, f64)] = &[
+        ("steps_total", "engine steps executed", m.steps as f64),
+        ("forward_passes_total", "model forward passes", m.forward_passes as f64),
+        (
+            "committed_tokens_total",
+            "tokens committed across all requests",
+            m.committed_tokens as f64,
+        ),
+        (
+            "prefill_tokens_total",
+            "prompt tokens prefilled",
+            m.prefill_tokens as f64,
+        ),
+        (
+            "verify_passes_total",
+            "grouped verification passes",
+            m.verify_passes as f64,
+        ),
+        ("rollbacks_total", "verification rollbacks", m.rollbacks as f64),
+        (
+            "recomputed_tokens_total",
+            "speculative tokens discarded by rollback",
+            m.recomputed_tokens as f64,
+        ),
+        ("preemptions_total", "KV preemptions", m.preemptions as f64),
+        (
+            "cache_hit_tokens_total",
+            "prompt tokens served from the prefix cache",
+            m.cache_hit_tokens as f64,
+        ),
+        (
+            "finished_requests_total",
+            "requests finished for any reason",
+            (m.finished_stop
+                + m.finished_length
+                + m.finished_cancelled
+                + m.finished_timeout
+                + m.finished_error) as f64,
+        ),
+    ];
+    let gauges: &[(&str, &str, f64)] = &[
+        (
+            "live_seqs",
+            "sequences currently live in the store",
+            m.live_seqs as f64,
+        ),
+        (
+            "waiters",
+            "reply channels the server holds open",
+            waiters as f64,
+        ),
+        ("kv_free_pages", "free KV pages", kv.free_pages as f64),
+        (
+            "kv_cached_pages",
+            "KV pages held only by the prefix cache",
+            kv.cached_pages as f64,
+        ),
+        (
+            "digest_sequences",
+            "retired sequences folded into the engine digest",
+            obs.digest_seqs() as f64,
+        ),
+    ];
+    for (name, help, v) in counters {
+        let _ = writeln!(s, "# HELP llm42_{name} {help}");
+        let _ = writeln!(s, "# TYPE llm42_{name} counter");
+        let _ = writeln!(s, "llm42_{name} {v}");
+    }
+    for (name, help, v) in gauges {
+        let _ = writeln!(s, "# HELP llm42_{name} {help}");
+        let _ = writeln!(s, "# TYPE llm42_{name} gauge");
+        let _ = writeln!(s, "llm42_{name} {v}");
+    }
+    // histograms as summaries (quantiles computed server-side) rather
+    // than native histograms: 5 series instead of 496 buckets each
+    for (name, h) in obs.histograms() {
+        let _ = writeln!(s, "# HELP llm42_{name}_seconds {name} latency");
+        let _ = writeln!(s, "# TYPE llm42_{name}_seconds summary");
+        for q in [0.5, 0.9, 0.99] {
+            if let Some(v) = h.quantile(q) {
+                let _ =
+                    writeln!(s, "llm42_{name}_seconds{{quantile=\"{q}\"}} {v}");
+            }
+        }
+        let _ = writeln!(s, "llm42_{name}_seconds_sum {}", h.sum_secs());
+        let _ = writeln!(s, "llm42_{name}_seconds_count {}", h.count());
+    }
+    // the digest is 64-bit and hex; a float sample would corrupt it, so
+    // it rides in a label with a constant sample value (info pattern)
+    let _ = writeln!(
+        s,
+        "# HELP llm42_engine_digest_info engine-wide determinism digest"
+    );
+    let _ = writeln!(s, "# TYPE llm42_engine_digest_info gauge");
+    let _ = writeln!(
+        s,
+        "llm42_engine_digest_info{{digest=\"{}\"}} 1",
+        obs::digest_hex(obs.engine_digest())
+    );
+    s
+}
+
+/// Serialize a journal drain for the `{"cmd": "events"}` wire command.
+/// Non-destructive: the cursor (`since` → returned `next`) lives with
+/// the caller, so multiple readers can drain independently.
+pub fn render_events(obs: &Obs, since: u64) -> String {
+    let (events, dropped) = obs.events_since(since);
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("events", Json::Arr(events.iter().map(|e| e.to_json()).collect())),
+        ("next", Json::num(obs.last_seq() as f64)),
+        ("dropped", Json::num(dropped as f64)),
     ])
     .dump()
 }
@@ -443,6 +661,10 @@ enum ToEngine {
     Cancel { id: u64, reply: Option<mpsc::Sender<String>> },
     Stats(mpsc::Sender<String>),
     SetPolicy(PolicyKind, mpsc::Sender<String>),
+    /// Drain the step-event journal past cursor `since`.
+    Events { since: u64, reply: mpsc::Sender<String> },
+    /// Prometheus text exposition (wrapped in a JSON object line).
+    Metrics(mpsc::Sender<String>),
 }
 
 /// Per-request server state while the engine owns the request: the reply
@@ -726,7 +948,31 @@ fn handle_msg(
             }
         }
         ToEngine::Stats(reply) => {
-            let _ = reply.send(render_stats(&eng.metrics, &eng.kv_stats(), waiters.len()));
+            let _ = reply.send(render_stats(
+                &eng.metrics,
+                &eng.kv_stats(),
+                waiters.len(),
+                &eng.obs,
+            ));
+        }
+        ToEngine::Events { since, reply } => {
+            let _ = reply.send(render_events(&eng.obs, since));
+        }
+        ToEngine::Metrics(reply) => {
+            let body = render_metrics_prom(
+                &eng.metrics,
+                &eng.kv_stats(),
+                waiters.len(),
+                &eng.obs,
+            );
+            let _ = reply.send(
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("content_type", Json::str("text/plain; version=0.0.4")),
+                    ("metrics", Json::str(body)),
+                ])
+                .dump(),
+            );
         }
         ToEngine::SetPolicy(kind, reply) => {
             eng.set_policy(kind);
@@ -761,7 +1007,10 @@ fn poisoned_drain(
                 let _ = r.send(line.clone());
             }
             Ok(ToEngine::Cancel { reply: None, .. }) => {}
-            Ok(ToEngine::Stats(r)) | Ok(ToEngine::SetPolicy(_, r)) => {
+            Ok(ToEngine::Stats(r))
+            | Ok(ToEngine::SetPolicy(_, r))
+            | Ok(ToEngine::Events { reply: r, .. })
+            | Ok(ToEngine::Metrics(r)) => {
                 let _ = r.send(line.clone());
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -810,6 +1059,43 @@ fn handle_conn(
                         .map_err(|_| Error::Server("engine gone".into()))?;
                     rrx.recv()
                         .map_err(|_| Error::Server("engine dropped reply".into()))?
+                }
+                "metrics" => {
+                    let (rtx, rrx) = mpsc::channel();
+                    tx.send(ToEngine::Metrics(rtx))
+                        .map_err(|_| Error::Server("engine gone".into()))?;
+                    rrx.recv()
+                        .map_err(|_| Error::Server("engine dropped reply".into()))?
+                }
+                "events" => {
+                    // "since" defaults to 0 (everything still retained)
+                    let since = match parsed.get("since") {
+                        None => Some(0u64),
+                        Some(x) => x
+                            .as_f64()
+                            .filter(|n| {
+                                n.fract() == 0.0
+                                    && (0.0..=u64::MAX as f64).contains(n)
+                            })
+                            .map(|n| n as u64),
+                    };
+                    match since {
+                        Some(since) => {
+                            let (rtx, rrx) = mpsc::channel();
+                            tx.send(ToEngine::Events { since, reply: rtx })
+                                .map_err(|_| Error::Server("engine gone".into()))?;
+                            rrx.recv().map_err(|_| {
+                                Error::Server("engine dropped reply".into())
+                            })?
+                        }
+                        None => Json::obj(vec![(
+                            "error",
+                            Json::str(
+                                "events needs a non-negative integer 'since'",
+                            ),
+                        )])
+                        .dump(),
+                    }
                 }
                 "cancel" => {
                     let id = parsed
@@ -1067,6 +1353,7 @@ fn parse_delta(v: &Json) -> Result<StreamEvent> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::{ObsConfig, ObsLevel};
     use crate::tokenizer::FIRST_MERGE;
 
     fn tok() -> Tokenizer {
@@ -1198,6 +1485,7 @@ mod tests {
                 ..Default::default()
             },
             fast_trace: vec![],
+            stream_digest: obs::digest_stream(&[10, 11]),
         };
         let v = Json::parse(&render_output(&out, &tok())).unwrap();
         assert_eq!(v.u("id").unwrap(), 9);
@@ -1207,6 +1495,17 @@ mod tests {
         assert_eq!(v.u("preemptions").unwrap(), 1);
         assert_eq!(v.u("reprefilled").unwrap(), 7);
         assert!((v.f("ttft_ms").unwrap() - 100.0).abs() < 1.0);
+        // the digest rides as a hex string: JSON numbers are f64 and
+        // would truncate 64-bit values
+        assert_eq!(
+            v.s("stream_digest").unwrap(),
+            obs::digest_hex(obs::digest_stream(&[10, 11]))
+        );
+        // aborted before the first token: ttft is null, never 0
+        let mut unstarted = out.clone();
+        unstarted.metrics.first_token_time = 0.0;
+        let v = Json::parse(&render_output(&unstarted, &tok())).unwrap();
+        assert!(matches!(v.get("ttft_ms"), Some(Json::Null)));
         // abort reasons render under their wire names
         let mut cancelled = out.clone();
         cancelled.finish_reason = FinishReason::Cancelled;
@@ -1318,7 +1617,8 @@ mod tests {
             held_pages: 10,
             ..Default::default()
         };
-        let v = Json::parse(&render_stats(&m, &kv, 5)).unwrap();
+        let obs = Obs::new(ObsConfig::default()).unwrap();
+        let v = Json::parse(&render_stats(&m, &kv, 5, &obs)).unwrap();
         assert_eq!(v.u("preemptions").unwrap(), 3);
         assert_eq!(v.u("reprefilled_tokens").unwrap(), 40);
         assert_eq!(v.u("queue_depth_hwm").unwrap(), 9);
@@ -1352,5 +1652,202 @@ mod tests {
         let c2 = v.req("class_e2e").unwrap().req("2").unwrap();
         assert_eq!(c2.u("finished").unwrap(), 1);
         assert!((c2.f("mean_e2e_ms").unwrap() - 250.0).abs() < 1e-6);
+        // observability block: digest present at every level, latency
+        // quantiles null until samples land
+        assert_eq!(v.s("obs_level").unwrap(), "off");
+        let d = v.req("digest").unwrap();
+        assert_eq!(d.s("engine").unwrap(), obs::digest_hex(0));
+        assert_eq!(d.u("sequences").unwrap(), 0);
+        let ttft = v.req("latency").unwrap().req("ttft").unwrap();
+        assert_eq!(ttft.u("count").unwrap(), 0);
+        assert!(matches!(ttft.get("p50_ms"), Some(Json::Null)));
+    }
+
+    /// Every `EngineMetrics` field must reach the stats wire surface.
+    /// The exhaustive destructure makes this a compile error when a field
+    /// is added, until both `render_stats` and this test cover it.
+    #[test]
+    fn stats_render_covers_every_engine_metric() {
+        let mut m = EngineMetrics::default();
+        m.steps = 101;
+        m.decode_steps = 102;
+        m.prefill_chunks = 103;
+        m.verify_passes = 104;
+        m.forward_passes = 105;
+        m.fused_steps = 106;
+        m.fused_fwd_tokens = 60;
+        m.fused_capacity_tokens = 80;
+        m.decoded_tokens = 109;
+        m.committed_tokens = 110;
+        m.prefill_tokens = 111;
+        m.rollbacks = 112;
+        m.recomputed_tokens = 113;
+        m.decode_secs = 1.5;
+        m.prefill_secs = 2.5;
+        m.verify_secs = 3.5;
+        m.verify_lanes = 117;
+        m.preemptions = 118;
+        m.reprefilled_tokens = 119;
+        m.queue_depth_hwm = 120;
+        m.live_seqs = 5;
+        m.live_seqs_hwm = 7;
+        m.store_capacity = 8;
+        m.cache_hits = 9;
+        m.cache_hit_tokens = 10;
+        m.reprefill_saved_tokens = 11;
+        m.cow_copies = 12;
+        m.record_finished(3, 0.5);
+        m.sim_threads = 2;
+        m.sim_busy_secs = 1.0;
+        m.sim_wall_secs = 1.0;
+        m.finished_stop = 13;
+        m.finished_length = 14;
+        m.finished_cancelled = 15;
+        m.finished_timeout = 16;
+        m.finished_error = 17;
+        let obs = Obs::new(ObsConfig::default()).unwrap();
+        let v = Json::parse(&render_stats(&m, &KvStats::default(), 0, &obs))
+            .unwrap();
+        let EngineMetrics {
+            steps,
+            decode_steps,
+            prefill_chunks,
+            verify_passes,
+            forward_passes,
+            fused_steps,
+            fused_fwd_tokens,
+            fused_capacity_tokens,
+            decoded_tokens,
+            committed_tokens,
+            prefill_tokens,
+            rollbacks,
+            recomputed_tokens,
+            decode_secs,
+            prefill_secs,
+            verify_secs,
+            verify_lanes,
+            preemptions,
+            reprefilled_tokens,
+            queue_depth_hwm,
+            live_seqs,
+            live_seqs_hwm,
+            store_capacity,
+            cache_hits,
+            cache_hit_tokens,
+            reprefill_saved_tokens,
+            cow_copies,
+            class_e2e,
+            sim_threads,
+            sim_busy_secs,
+            sim_wall_secs,
+            finished_stop,
+            finished_length,
+            finished_cancelled,
+            finished_timeout,
+            finished_error,
+        } = &m;
+        assert_eq!(v.u("steps").unwrap(), *steps as usize);
+        assert_eq!(v.u("decode_steps").unwrap(), *decode_steps as usize);
+        assert_eq!(v.u("prefill_chunks").unwrap(), *prefill_chunks as usize);
+        assert_eq!(v.u("verify_passes").unwrap(), *verify_passes as usize);
+        assert_eq!(v.u("forward_passes").unwrap(), *forward_passes as usize);
+        assert_eq!(v.u("fused_steps").unwrap(), *fused_steps as usize);
+        assert_eq!(v.u("fused_tokens").unwrap(), *fused_fwd_tokens as usize);
+        assert!(
+            (v.f("fused_occupancy").unwrap()
+                - *fused_fwd_tokens as f64 / *fused_capacity_tokens as f64)
+                .abs()
+                < 1e-9
+        );
+        assert_eq!(v.u("decoded_tokens").unwrap(), *decoded_tokens as usize);
+        assert_eq!(v.u("committed_tokens").unwrap(), *committed_tokens as usize);
+        assert_eq!(v.u("prefill_tokens").unwrap(), *prefill_tokens as usize);
+        assert_eq!(v.u("rollbacks").unwrap(), *rollbacks as usize);
+        assert_eq!(
+            v.u("recomputed_tokens").unwrap(),
+            *recomputed_tokens as usize
+        );
+        let ph = v.req("phase_secs").unwrap();
+        assert!((ph.f("decode").unwrap() - decode_secs).abs() < 1e-12);
+        assert!((ph.f("prefill").unwrap() - prefill_secs).abs() < 1e-12);
+        assert!((ph.f("verify").unwrap() - verify_secs).abs() < 1e-12);
+        assert_eq!(v.u("verify_lanes").unwrap(), *verify_lanes as usize);
+        assert_eq!(v.u("preemptions").unwrap(), *preemptions as usize);
+        assert_eq!(
+            v.u("reprefilled_tokens").unwrap(),
+            *reprefilled_tokens as usize
+        );
+        assert_eq!(v.u("queue_depth_hwm").unwrap(), *queue_depth_hwm as usize);
+        let st = v.req("store").unwrap();
+        assert_eq!(st.u("live_seqs").unwrap(), *live_seqs as usize);
+        assert_eq!(st.u("live_seqs_hwm").unwrap(), *live_seqs_hwm as usize);
+        assert_eq!(st.u("capacity").unwrap(), *store_capacity as usize);
+        let k = v.req("kv").unwrap();
+        assert_eq!(k.u("cache_hits").unwrap(), *cache_hits as usize);
+        assert_eq!(k.u("cache_hit_tokens").unwrap(), *cache_hit_tokens as usize);
+        assert_eq!(
+            k.u("reprefill_saved_tokens").unwrap(),
+            *reprefill_saved_tokens as usize
+        );
+        assert_eq!(k.u("cow_copies").unwrap(), *cow_copies as usize);
+        let c3 = v.req("class_e2e").unwrap().req("3").unwrap();
+        assert_eq!(c3.u("finished").unwrap(), class_e2e[&3].finished as usize);
+        assert_eq!(v.u("sim_threads").unwrap(), *sim_threads as usize);
+        assert!(
+            (v.f("parallel_efficiency").unwrap()
+                - sim_busy_secs / (sim_wall_secs * *sim_threads as f64))
+                .abs()
+                < 1e-9
+        );
+        let fr = v.req("finish_reasons").unwrap();
+        assert_eq!(fr.u("stop").unwrap(), *finished_stop as usize);
+        assert_eq!(fr.u("length").unwrap(), *finished_length as usize);
+        assert_eq!(fr.u("cancelled").unwrap(), *finished_cancelled as usize);
+        assert_eq!(fr.u("timeout").unwrap(), *finished_timeout as usize);
+        assert_eq!(fr.u("error").unwrap(), *finished_error as usize);
+    }
+
+    #[test]
+    fn events_and_metrics_render() {
+        let mut obs = Obs::new(ObsConfig {
+            level: ObsLevel::Events,
+            ..Default::default()
+        })
+        .unwrap();
+        obs.on_preempt(3, 7);
+        obs.on_retire(
+            4,
+            7,
+            "stop",
+            false,
+            2,
+            obs::digest_stream(&[1, 2]),
+            Some(0.01),
+            0.02,
+            Some(0.001),
+        );
+        let v = Json::parse(&render_events(&obs, 0)).unwrap();
+        assert_eq!(v.arr("events").unwrap().len(), 2);
+        assert_eq!(v.u("next").unwrap(), 2);
+        assert_eq!(v.u("dropped").unwrap(), 0);
+        // cursoring from the returned `next` drains nothing new
+        let v2 =
+            Json::parse(&render_events(&obs, v.u("next").unwrap() as u64))
+                .unwrap();
+        assert!(v2.arr("events").unwrap().is_empty());
+
+        let text = render_metrics_prom(
+            &EngineMetrics::default(),
+            &KvStats::default(),
+            0,
+            &obs,
+        );
+        assert!(text.contains("# TYPE llm42_steps_total counter"));
+        assert!(text.contains("llm42_e2e_seconds_count 1"));
+        assert!(text.contains("llm42_engine_digest_info{digest=\"0x"));
+        // the exposition survives the JSON-string wrapping used on the wire
+        let wrapped =
+            Json::obj(vec![("metrics", Json::str(text.clone()))]).dump();
+        assert_eq!(Json::parse(&wrapped).unwrap().s("metrics").unwrap(), text);
     }
 }

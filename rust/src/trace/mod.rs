@@ -82,19 +82,21 @@ impl LengthProfile {
     }
 
     /// The paper's six fixed configs, scaled 1/8 (e.g. in=2048,out=512 ->
-    /// in=256,out=64).
+    /// in=256,out=64). Names are static literals: the previous
+    /// `Box::leak(format!(...))` leaked six strings per call, which adds
+    /// up in harnesses that rebuild the config set per experiment run.
     pub fn fixed_paper_configs() -> Vec<Self> {
         [
-            (512, 256),
-            (1024, 256),
-            (1024, 512),
-            (2048, 256),
-            (2048, 512),
-            (4096, 512),
+            (512, 256, "in=512,out=256"),
+            (1024, 256, "in=1024,out=256"),
+            (1024, 512, "in=1024,out=512"),
+            (2048, 256, "in=2048,out=256"),
+            (2048, 512, "in=2048,out=512"),
+            (4096, 512, "in=4096,out=512"),
         ]
         .iter()
-        .map(|&(i, o)| LengthProfile::Fixed {
-            name: Box::leak(format!("in={i},out={o}").into_boxed_str()),
+        .map(|&(i, o, name)| LengthProfile::Fixed {
+            name,
             input: i / 8,
             output: o / 8,
         })

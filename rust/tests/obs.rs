@@ -1,0 +1,315 @@
+//! Determinism-provenance integration tests: the stream-digest chains, the
+//! engine-wide digest fold, rollback forensics, and the event journal —
+//! and the layer's core promise that recording never changes committed
+//! streams. The digest matrix sweeps thread count x policy x prefix cache
+//! x obs level and pins one engine digest for all of it.
+//!
+//! Requires `make artifacts` (the tiny-preset artifact set).
+
+use std::sync::Mutex;
+
+use llm42::engine::{Engine, EngineConfig, FaultPlan, Mode, PolicyKind, Request};
+use llm42::obs::{
+    digest_stream, Event, EventBody, ObsConfig, ObsLevel, RollbackForensics,
+};
+use llm42::prelude::*;
+use llm42::util::json::Json;
+
+/// The worker-thread knob is process-global; the matrix test sweeps it and
+/// holds this gate so its runs don't interleave with each other.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn artifacts_dir() -> String {
+    let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&dir).expect("artifact generation failed");
+    dir
+}
+
+/// All-deterministic workload with a shared 32-token prefix (two full KV
+/// blocks, so the prefix cache genuinely adopts pages when enabled): the
+/// committed streams — and therefore every digest — are policy-, cache-,
+/// thread-, and obs-level-invariant by the determinism contract.
+fn audited_workload() -> Vec<Request> {
+    let shared: Vec<u32> = (100..132).collect();
+    let mk = |extra: u32, n: usize, seed: u64| {
+        let mut prompt = shared.clone();
+        prompt.extend(extra..extra + 4);
+        Request {
+            prompt,
+            max_new_tokens: n,
+            deterministic: true,
+            temperature: 1.0,
+            seed,
+            ..Default::default()
+        }
+    };
+    vec![
+        mk(200, 20, 11),
+        mk(210, 16, 12),
+        mk(220, 12, 13),
+        Request {
+            prompt: (10..22).collect(),
+            max_new_tokens: 18,
+            deterministic: true,
+            temperature: 0.0,
+            seed: 0,
+            ..Default::default()
+        },
+    ]
+}
+
+/// Run the audited workload under one configuration; return every stream
+/// with its digest (sorted by id), the engine-wide digest, and how many
+/// streams folded into it.
+fn run_audited(
+    rt: &mut Runtime,
+    threads: usize,
+    policy: PolicyKind,
+    cache: bool,
+    level: ObsLevel,
+) -> (Vec<(u64, Vec<u32>, u64)>, u64, u64) {
+    let cfg = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 4,
+        policy,
+        prefix_cache: cache,
+        threads,
+        obs: ObsConfig { level, ..Default::default() },
+        ..Default::default()
+    };
+    let mut eng = Engine::new(rt, cfg).unwrap();
+    for r in audited_workload() {
+        eng.submit(r).unwrap();
+    }
+    eng.run_to_completion().unwrap();
+    let engine_digest = eng.obs.engine_digest();
+    let folded = eng.obs.digest_seqs();
+    let mut outs: Vec<(u64, Vec<u32>, u64)> = eng
+        .take_finished()
+        .into_iter()
+        .map(|o| (o.id, o.tokens, o.stream_digest))
+        .collect();
+    outs.sort();
+    (outs, engine_digest, folded)
+}
+
+#[test]
+fn digests_pin_the_determinism_matrix() {
+    // Threads {1, 4} x all three policies x prefix cache on/off x obs
+    // {off, events}: one set of streams, one set of stream digests, one
+    // engine digest. Each run also checks the provenance invariant that
+    // the running chain equals a from-scratch digest of the stream.
+    let _g = gate();
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut baseline: Option<(Vec<(u64, Vec<u32>, u64)>, u64)> = None;
+    for policy in [
+        PolicyKind::PrefillFirst,
+        PolicyKind::DeadlineAware,
+        PolicyKind::FairShare,
+    ] {
+        for cache in [false, true] {
+            for level in [ObsLevel::Off, ObsLevel::Events] {
+                for threads in [1usize, 4] {
+                    let (outs, digest, folded) =
+                        run_audited(&mut rt, threads, policy, cache, level);
+                    let tag = format!(
+                        "{policy:?} cache={cache} obs={} threads={threads}",
+                        level.as_str()
+                    );
+                    assert_eq!(outs.len(), 4, "{tag}: all requests finish");
+                    assert_eq!(folded, 4, "{tag}: every served stream folds in");
+                    assert_ne!(digest, 0, "{tag}: fold is non-trivial");
+                    for (id, tokens, d) in &outs {
+                        assert!(!tokens.is_empty(), "{tag}: request {id} committed");
+                        assert_eq!(
+                            *d,
+                            digest_stream(tokens),
+                            "{tag}: request {id}: running digest chain diverged \
+                             from the committed stream"
+                        );
+                    }
+                    match &baseline {
+                        None => baseline = Some((outs, digest)),
+                        Some((b_outs, b_digest)) => {
+                            assert_eq!(
+                                b_outs, &outs,
+                                "{tag}: streams/digests diverged from baseline"
+                            );
+                            assert_eq!(
+                                *b_digest, digest,
+                                "{tag}: engine digest diverged from baseline"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    rt.set_sim_threads(0);
+}
+
+/// Run with fault injection forcing a rollback at window row 0 on every
+/// verify lane; return the streams, the rollback count, and the captured
+/// forensics ring.
+fn run_faulted(
+    rt: &mut Runtime,
+    level: ObsLevel,
+) -> (Vec<(u64, Vec<u32>)>, u64, Vec<RollbackForensics>) {
+    let cfg = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 4,
+        fault: FaultPlan::EveryNthLane { every: 1, at_index: 0 },
+        obs: ObsConfig { level, ..Default::default() },
+        ..Default::default()
+    };
+    let mut eng = Engine::new(rt, cfg).unwrap();
+    for r in audited_workload() {
+        eng.submit(r).unwrap();
+    }
+    eng.run_to_completion().unwrap();
+    let rollbacks = eng.metrics.rollbacks;
+    let forensics: Vec<RollbackForensics> = eng.obs.forensics().cloned().collect();
+    let mut outs: Vec<(u64, Vec<u32>)> =
+        eng.take_finished().into_iter().map(|o| (o.id, o.tokens)).collect();
+    outs.sort();
+    (outs, rollbacks, forensics)
+}
+
+#[test]
+fn forensics_name_the_divergence_and_recording_never_steers() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let (outs_off, rb_off, forensics_off) = run_faulted(&mut rt, ObsLevel::Off);
+    assert!(rb_off > 0, "fault injection must force rollbacks");
+    assert!(forensics_off.is_empty(), "off level records no forensics");
+
+    // counters level captures the forensics ring — and changes nothing
+    // about the engine's behavior, even under maximum rollback pressure
+    let (outs, rb, forensics) = run_faulted(&mut rt, ObsLevel::Counters);
+    assert_eq!(outs_off, outs, "recording changed committed streams");
+    assert_eq!(rb_off, rb, "recording changed rollback behavior");
+    assert_eq!(forensics.len() as u64, rb, "one forensics entry per rollback");
+    for f in &forensics {
+        assert_eq!(f.divergence, 0, "at_index 0 faults diverge at window row 0");
+        assert_ne!(f.expected, f.observed, "a divergence is a token disagreement");
+        assert!(f.discarded >= 1, "the diverged speculation was discarded");
+        assert!(f.margin.is_finite(), "divergence-row margin is captured");
+        let (_, tokens) = outs.iter().find(|(id, _)| *id == f.id).unwrap();
+        if f.fresh_committed {
+            assert_eq!(
+                tokens[f.frontier + f.divergence],
+                f.observed,
+                "request {}: the corrective token must be what the stream \
+                 committed at the divergence position",
+                f.id
+            );
+        }
+    }
+}
+
+#[test]
+fn events_cursor_drain_is_lossless_and_ordered() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let cfg = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 4,
+        obs: ObsConfig { level: ObsLevel::Events, ..Default::default() },
+        ..Default::default()
+    };
+    let mut eng = Engine::new(&mut rt, cfg).unwrap();
+    for r in audited_workload() {
+        eng.submit(r).unwrap();
+    }
+    // drain incrementally from a client-held cursor while stepping, the
+    // way a `{"cmd":"events","since":N}` poller would
+    let mut cursor = 0u64;
+    let mut collected: Vec<Event> = Vec::new();
+    while !eng.idle() {
+        eng.step().unwrap();
+        let (evs, dropped) = eng.obs.events_since(cursor);
+        assert_eq!(dropped, 0, "nothing ages out of an 8192-event ring here");
+        let evs: Vec<Event> = evs.into_iter().cloned().collect();
+        if let Some(last) = evs.last() {
+            assert!(last.seq > cursor, "drains only move the cursor forward");
+            cursor = last.seq;
+        }
+        collected.extend(evs);
+    }
+    assert!(!collected.is_empty());
+    for (i, e) in collected.iter().enumerate() {
+        assert_eq!(
+            e.seq,
+            i as u64 + 1,
+            "incremental drains concatenate gap-free, in order"
+        );
+    }
+    assert_eq!(eng.obs.last_seq(), collected.len() as u64);
+    // one full drain from 0 sees exactly what the incremental cursor saw
+    let (full, dropped) = eng.obs.events_since(0);
+    assert_eq!(dropped, 0);
+    assert_eq!(full.into_iter().cloned().collect::<Vec<_>>(), collected);
+    // a past-the-end cursor drains empty without claiming drops
+    let (tail, dropped) = eng.obs.events_since(cursor);
+    assert!(tail.is_empty());
+    assert_eq!(dropped, 0);
+    // the journal tells the whole lifecycle story
+    assert!(collected.iter().any(|e| matches!(e.body, EventBody::Step { .. })));
+    assert!(collected.iter().any(|e| matches!(e.body, EventBody::Verify { .. })));
+    assert_eq!(
+        collected
+            .iter()
+            .filter(|e| matches!(e.body, EventBody::Retire { .. }))
+            .count(),
+        4,
+        "one retire event per request"
+    );
+}
+
+#[test]
+fn trace_out_writes_the_journal_as_jsonl() {
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("llm42_obs_trace_{}.jsonl", std::process::id()));
+    let cfg = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 4,
+        obs: ObsConfig {
+            // a JSONL sink must bump this to events on its own
+            level: ObsLevel::Off,
+            trace_out: Some(path.to_string_lossy().into_owned()),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut eng = Engine::new(&mut rt, cfg).unwrap();
+    assert_eq!(eng.obs.level(), ObsLevel::Events, "trace sink implies events");
+    for r in audited_workload() {
+        eng.submit(r).unwrap();
+    }
+    eng.run_to_completion().unwrap();
+    let emitted = eng.obs.last_seq();
+    assert!(emitted > 0);
+    drop(eng); // flushes the sink's buffered tail
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len() as u64, emitted, "one JSONL line per journal event");
+    for (i, line) in lines.iter().enumerate() {
+        let v = Json::parse(line)
+            .unwrap_or_else(|e| panic!("line {}: not JSON: {e:?}", i + 1));
+        assert_eq!(v.u("seq").unwrap(), i + 1, "file order is seq order");
+        assert!(v.get("event").is_some(), "line {}: typed event", i + 1);
+    }
+    let _ = std::fs::remove_file(&path);
+}
