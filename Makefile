@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: artifacts artifacts-test build test test-threads test-server fmt-check lint doc bench-check bench-json
+.PHONY: artifacts artifacts-test build test test-threads test-server test-gate fmt-check lint doc bench-check bench-json
 
 artifacts:
 	cd rust && $(CARGO) run --release -- gen-artifacts --out artifacts --preset tiny
@@ -23,6 +23,21 @@ test:
 test-threads:
 	cd rust && LLM42_THREADS=1 $(CARGO) test -q
 	cd rust && LLM42_THREADS=4 $(CARGO) test -q
+
+# The margin-gate matrix locally (mirrors the CI determinism-audit job):
+# the verify-policy suite at 1 and 4 simulator threads, then the audit
+# example gate off vs on — the deterministic digest lines (audit_digest=,
+# det_engine_digest=) must be bit-identical across triggers.
+test-gate:
+	cd rust && LLM42_THREADS=1 $(CARGO) test -q --test verify_policy
+	cd rust && LLM42_THREADS=4 $(CARGO) test -q --test verify_policy
+	cd rust && $(CARGO) run --release --example determinism_audit \
+		| grep -E '^(audit_digest|det_engine_digest)=' > /tmp/llm42_gate_off
+	cd rust && $(CARGO) run --release --example determinism_audit -- \
+		--verify-policy margin-gate \
+		| grep -E '^(audit_digest|det_engine_digest)=' > /tmp/llm42_gate_on
+	diff -u /tmp/llm42_gate_off /tmp/llm42_gate_on
+	@echo "gate on/off deterministic digests identical"
 
 # Serving-surface integration: stream + cancel + timeout over a real
 # socket, disconnect detection, poisoned-engine lifecycle, abort matrix.

@@ -146,6 +146,9 @@ fn main() {
     if let Some(j) = fusion_comparison(&mut rt) {
         sections.push(("fusion", j));
     }
+    if let Some(j) = verify_policy_comparison(&mut rt) {
+        sections.push(("verify_policy", j));
+    }
     if let Some(j) = streaming_ttft(&mut rt) {
         sections.push(("streaming", j));
     }
@@ -673,6 +676,154 @@ fn fusion_comparison(rt: &mut Runtime) -> Option<Json> {
         ]));
     }
     println!("== step composer: fusion off vs on ==");
+    println!("{}", tab.render());
+    Some(Json::Arr(rows))
+}
+
+/// Margin-gate benchmark: the same fused all-deterministic workload with
+/// the verify trigger at `stall` (gate off, the fused baseline) vs
+/// `margin-gate` (gate on), on two traffic shapes. `wide_margin` is greedy
+/// traffic against the calibrated per-artifact bound — most tokens carry a
+/// certificate and skip the verify window, so the acceptance criterion is
+/// forwards per committed token strictly below the fused baseline with
+/// tok/s improving. `adversarial` models traffic where no margin clears
+/// the bound (`margin_bound_override = +inf`: nothing ever certifies) —
+/// the gate must cost nothing there, matching the baseline's forward
+/// count. Both shapes are deterministic-only, so the engine digest column
+/// must be identical gate off vs on (asserted): certificates change how
+/// much verification work runs, never what commits.
+fn verify_policy_comparison(rt: &mut Runtime) -> Option<Json> {
+    use llm42::engine::{VerifyPolicy, VerifyPolicyKind};
+    use llm42::obs::digest_hex;
+
+    struct GateRun {
+        name: &'static str,
+        fwd_per_tok: f64,
+        forward_passes: u64,
+        verify_passes: u64,
+        tok_s: f64,
+        certified: u64,
+        verified: u64,
+        repair: u64,
+        digest: u64,
+        wall: f64,
+    }
+    impl GateRun {
+        fn json(&self) -> Json {
+            Json::obj(vec![
+                ("gate", Json::str(self.name)),
+                ("forwards_per_committed_token", Json::num(self.fwd_per_tok)),
+                ("forward_passes", Json::num(self.forward_passes as f64)),
+                ("verify_passes", Json::num(self.verify_passes as f64)),
+                ("tok_s", Json::num(self.tok_s)),
+                ("certified_tokens", Json::num(self.certified as f64)),
+                ("verified_tokens", Json::num(self.verified as f64)),
+                ("gate_repair_tokens", Json::num(self.repair as f64)),
+                ("engine_digest", Json::str(digest_hex(self.digest))),
+                ("wall_s", Json::num(self.wall)),
+            ])
+        }
+    }
+
+    let n_reqs = if reduced() { 6 } else { 16 };
+    let run = |rt: &mut Runtime,
+               kind: VerifyPolicyKind,
+               bound_override: Option<f32>,
+               temperature: f32|
+     -> Option<GateRun> {
+        let cfg = EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 2,
+            verify_window: 16,
+            max_stall_steps: 4,
+            eos_token: u32::MAX, // full budgets: identical committed volume
+            max_step_tokens: 128,
+            verify_policy: VerifyPolicy::new(kind),
+            margin_bound_override: bound_override,
+            ..Default::default()
+        };
+        let mut eng = match Engine::new(rt, cfg) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("verify_policy bench skipped: {e}");
+                return None;
+            }
+        };
+        let _ = eng.warmup();
+        for i in 0..n_reqs {
+            eng.submit(Request {
+                prompt: (0..100).map(|p| 3 + ((p + i as u32 * 13) % 400)).collect(),
+                max_new_tokens: 24,
+                deterministic: true,
+                temperature,
+                seed: 80_000 + i as u64,
+                ..Default::default()
+            })
+            .unwrap();
+        }
+        let t0 = llm42::util::now_secs();
+        if let Err(e) = eng.run_to_completion() {
+            eprintln!("verify_policy bench aborted: {e}");
+            return None;
+        }
+        let wall = llm42::util::now_secs() - t0;
+        eng.take_finished();
+        let m = &eng.metrics;
+        Some(GateRun {
+            name: VerifyPolicy::new(kind).kind.name(),
+            fwd_per_tok: m.forwards_per_committed_token(),
+            forward_passes: m.forward_passes,
+            verify_passes: m.verify_passes,
+            tok_s: m.committed_tokens as f64 / wall.max(1e-9),
+            certified: m.certified_tokens,
+            verified: m.verified_tokens,
+            repair: m.gate_repair_tokens,
+            digest: eng.obs.engine_digest(),
+            wall,
+        })
+    };
+
+    let mut tab = Table::new(&[
+        "traffic",
+        "gate",
+        "fwd/tok",
+        "tok_s",
+        "certified",
+        "verified",
+        "repair",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    // (traffic, bound override, temperature): wide-margin greedy traffic
+    // uses the calibrated manifest bound; adversarial pins +inf so no
+    // margin ever clears it
+    for (traffic, bound, temp) in [
+        ("wide_margin", None, 0.0f32),
+        ("adversarial", Some(f32::INFINITY), 1.0),
+    ] {
+        let off = run(rt, VerifyPolicyKind::Stall, bound, temp)?;
+        let on = run(rt, VerifyPolicyKind::MarginGate, bound, temp)?;
+        assert_eq!(
+            off.digest, on.digest,
+            "margin gate changed a committed stream on {traffic} traffic"
+        );
+        for r in [&off, &on] {
+            tab.row(vec![
+                traffic.to_string(),
+                r.name.to_string(),
+                format!("{:.3}", r.fwd_per_tok),
+                format!("{:.1}", r.tok_s),
+                format!("{}", r.certified),
+                format!("{}", r.verified),
+                format!("{}", r.repair),
+            ]);
+        }
+        rows.push(Json::obj(vec![
+            ("traffic", Json::str(traffic)),
+            ("gate_off", off.json()),
+            ("gate_on", on.json()),
+        ]));
+    }
+    println!("== verify policy: margin gate off vs on ==");
     println!("{}", tab.render());
     Some(Json::Arr(rows))
 }

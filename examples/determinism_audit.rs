@@ -1,6 +1,7 @@
 //! Determinism audit: the paper's headline guarantee, demonstrated.
 //!
-//!     cargo run --release --example determinism_audit
+//!     cargo run --release --example determinism_audit -- \
+//!         [--verify-policy stall|slack|margin-gate]
 //!
 //! Runs one audited (deterministic) request under three adversarial
 //! co-traffic schedules — solo, a small crowd, and a large bursty crowd —
@@ -15,10 +16,21 @@
 //! level), not on buffered token vectors: comparing one integer per run
 //! is how a replica set or a CI job would audit determinism. Each
 //! schedule also prints `engine_digest=0x...` — the engine-wide fold
-//! over all retired requests — which CI diffs across thread counts.
+//! over all retired requests — which CI diffs across thread counts —
+//! and `audit_digest=0x...`, the audited stream alone, which CI
+//! additionally diffs across verification triggers (the engine-wide fold
+//! covers nondeterministic co-traffic, whose streams legitimately shift
+//! when the trigger reschedules work; the audited stream must not).
+//!
+//! A final deterministic-only schedule prints `det_engine_digest=0x...`:
+//! with every request deterministic, even the engine-wide fold must be
+//! bitwise identical under `--verify-policy stall` vs `margin-gate` —
+//! the certificate path may change how many verification forwards run,
+//! never what commits.
 
 use llm42::obs::{digest_hex, digest_stream};
 use llm42::prelude::*;
+use llm42::util::cli::Args;
 use llm42::util::rng::SplitMix64;
 
 fn co_traffic(seed: u64, n: usize, vocab: usize) -> Vec<Request> {
@@ -38,11 +50,17 @@ fn co_traffic(seed: u64, n: usize, vocab: usize) -> Vec<Request> {
 }
 
 fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let verify_policy = VerifyPolicy::new(VerifyPolicyKind::parse(
+        &args.str_or("verify-policy", "stall"),
+    )?);
     let artifacts =
         std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     llm42::aot::ensure(&artifacts)?;
     let mut rt = Runtime::load(&artifacts)?;
     let vocab = rt.dims().vocab;
+    println!("verify policy: {}", verify_policy.kind.name());
 
     let audited = Request {
         prompt: (100..140).collect(),
@@ -63,7 +81,11 @@ fn main() -> Result<()> {
     for (name, co) in &schedules {
         let mut eng = Engine::new(
             &mut rt,
-            EngineConfig { mode: Mode::Llm42, ..Default::default() },
+            EngineConfig {
+                mode: Mode::Llm42,
+                verify_policy,
+                ..Default::default()
+            },
         )?;
         eng.warmup()?;
         let audit_id = eng.submit(audited.clone())?;
@@ -97,8 +119,48 @@ fn main() -> Result<()> {
         // engine-wide fold over every retired request in this schedule;
         // CI greps these lines and diffs them across thread counts
         println!("engine_digest={}", digest_hex(eng.obs.engine_digest()));
+        // the audited stream alone: trigger-invariant even with nondet
+        // co-traffic, so CI also diffs these across --verify-policy
+        println!("audit_digest={}", digest_hex(audit.stream_digest));
         audited_digests.push(audit.stream_digest);
         control_digests.push(ctrl.stream_digest);
+    }
+
+    // deterministic-only schedule: every retired stream is deterministic,
+    // so the engine-wide fold itself must be verification-trigger- and
+    // thread-count-invariant. CI diffs this line across both.
+    {
+        let mut eng = Engine::new(
+            &mut rt,
+            EngineConfig {
+                mode: Mode::Llm42,
+                verify_policy,
+                ..Default::default()
+            },
+        )?;
+        eng.warmup()?;
+        eng.submit(audited.clone())?;
+        for i in 0..3u32 {
+            eng.submit(Request {
+                prompt: (200 + 20 * i..216 + 20 * i).collect(),
+                max_new_tokens: 24 + 4 * i as usize,
+                deterministic: true,
+                temperature: if i == 0 { 0.0 } else { 1.0 },
+                seed: 9000 + i as u64,
+                ..Default::default()
+            })?;
+        }
+        eng.run_to_completion()?;
+        eng.take_finished();
+        println!(
+            "schedule     det-only: {} certified, {} verified, {} repair \
+             tokens, {} verify passes",
+            eng.metrics.certified_tokens,
+            eng.metrics.verified_tokens,
+            eng.metrics.gate_repair_tokens,
+            eng.metrics.verify_passes,
+        );
+        println!("det_engine_digest={}", digest_hex(eng.obs.engine_digest()));
     }
 
     println!();

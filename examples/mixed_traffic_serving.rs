@@ -4,7 +4,8 @@
 //!         [--requests 48] [--qps 4] [--det-ratio 0.1] [--mode llm42] \
 //!         [--policy prefill-first|deadline|fair-share] [--det-priority 4] \
 //!         [--det-deadline-ms 400] [--workload sharegpt|arxiv|multiturn] \
-//!         [--prefix-cache true|false] [--max-step-tokens N]
+//!         [--prefix-cache true|false] [--max-step-tokens N] \
+//!         [--verify-policy stall|slack|margin-gate]
 //!
 //! Serves an online ShareGPT-shaped workload (Poisson arrivals) with a
 //! mixed deterministic ratio through the full three-layer stack — rust
@@ -16,7 +17,7 @@
 //! to arbitrate. Compares against the non-deterministic ceiling and the
 //! batch-invariant baseline when `--compare` is passed.
 
-use llm42::engine::{EngineConfig, Mode, PolicyKind, StepKind};
+use llm42::engine::{EngineConfig, Mode, PolicyKind, StepKind, VerifyPolicy, VerifyPolicyKind};
 use llm42::prelude::*;
 use llm42::trace::{LengthProfile, TraceSpec};
 use llm42::util::cli::Args;
@@ -58,6 +59,9 @@ fn main() -> Result<()> {
         vec![Mode::parse(&args.str_or("mode", "llm42"))?]
     };
     let policy = PolicyKind::parse(&args.str_or("policy", "prefill-first"))?;
+    let verify_policy = VerifyPolicy::new(VerifyPolicyKind::parse(
+        &args.str_or("verify-policy", "stall"),
+    )?);
     let det_priority = args.usize_or("det-priority", 4)?.min(255) as u8;
     let det_deadline_ms = args.f64_or("det-deadline-ms", 400.0)?;
 
@@ -67,6 +71,7 @@ fn main() -> Result<()> {
             verify_group: args.usize_or("group", 8)?,
             verify_window: args.usize_or("window", 32)?,
             policy,
+            verify_policy,
             prefix_cache: args.bool_or("prefix-cache", false)?,
             // 0 = seed-exclusive steps; N fuses prefill chunks + the
             // decode batch into one forward per step (verify overlapped)
@@ -86,9 +91,11 @@ fn serve(
     det_deadline_ms: f64,
 ) -> Result<()> {
     println!(
-        "== mode {:?}, policy {}, workload {}, det ratio {:.0}%, prefix cache {} ==",
+        "== mode {:?}, policy {}, verify {}, workload {}, det ratio {:.0}%, \
+         prefix cache {} ==",
         cfg.mode,
         cfg.policy.name(),
+        cfg.verify_policy.kind.name(),
         spec.profile.name(),
         spec.det_ratio * 100.0,
         if cfg.prefix_cache { "on" } else { "off" }
@@ -162,6 +169,10 @@ fn serve(
         det_rollbacks,
         det_recomputed,
         m.recompute_ratio() * 100.0
+    );
+    println!(
+        "  margin gate: {} certified, {} verified, {} repair tokens",
+        m.certified_tokens, m.verified_tokens, m.gate_repair_tokens
     );
     println!(
         "  scheduling: {} preemptions, {} re-prefilled tokens, queue depth hwm {}",

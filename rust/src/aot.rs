@@ -469,26 +469,50 @@ pub fn generate_opts(
         ]));
     }
 
+    // Two-phase manifest write: the calibration replay below loads the
+    // just-written artifact set through the ordinary `Runtime` path, which
+    // requires a loadable manifest — so write it first without a bound,
+    // measure, then rewrite with `margin_bound` included.
+    let manifest_path = dir.join("manifest.json");
+    std::fs::write(
+        &manifest_path,
+        manifest_json(&p, &weight_entries, &artifact_entries, None).dump(),
+    )?;
+    let bound = calibrate_margin_bound(dir)?;
+    std::fs::write(
+        &manifest_path,
+        manifest_json(&p, &weight_entries, &artifact_entries, Some(bound)).dump(),
+    )?;
+    Ok(())
+}
+
+fn manifest_json(
+    p: &Preset,
+    weight_entries: &[Json],
+    artifact_entries: &[Json],
+    margin_bound: Option<f64>,
+) -> Json {
     let pool = p.pool_floats();
-    let manifest = Json::obj(vec![
-        (
-            "model",
-            Json::obj(vec![
-                ("name", Json::str(p.name)),
-                ("vocab", Json::num(p.vocab as f64)),
-                ("d_model", Json::num(p.d_model as f64)),
-                ("n_layers", Json::num(p.n_layers as f64)),
-                ("n_heads", Json::num(p.n_heads as f64)),
-                ("n_kv_heads", Json::num(p.n_kv_heads as f64)),
-                ("head_dim", Json::num(p.head_dim as f64)),
-                ("ffn_hidden", Json::num(p.ffn_hidden as f64)),
-                ("max_seq", Json::num(p.max_seq as f64)),
-                ("slots", Json::num(p.slots as f64)),
-                ("max_fwd_tokens", Json::num(p.max_fwd_tokens as f64)),
-                ("block_size", Json::num(p.block_size as f64)),
-                ("logit_scale", Json::num(p.logit_scale)),
-            ]),
-        ),
+    let mut model = vec![
+        ("name", Json::str(p.name)),
+        ("vocab", Json::num(p.vocab as f64)),
+        ("d_model", Json::num(p.d_model as f64)),
+        ("n_layers", Json::num(p.n_layers as f64)),
+        ("n_heads", Json::num(p.n_heads as f64)),
+        ("n_kv_heads", Json::num(p.n_kv_heads as f64)),
+        ("head_dim", Json::num(p.head_dim as f64)),
+        ("ffn_hidden", Json::num(p.ffn_hidden as f64)),
+        ("max_seq", Json::num(p.max_seq as f64)),
+        ("slots", Json::num(p.slots as f64)),
+        ("max_fwd_tokens", Json::num(p.max_fwd_tokens as f64)),
+        ("block_size", Json::num(p.block_size as f64)),
+        ("logit_scale", Json::num(p.logit_scale)),
+    ];
+    if let Some(b) = margin_bound {
+        model.push(("margin_bound", Json::num(b)));
+    }
+    Json::obj(vec![
+        ("model", Json::obj(model)),
         (
             "state",
             Json::obj(vec![
@@ -502,25 +526,142 @@ pub fn generate_opts(
                 ("vocab", Json::num(p.vocab as f64)),
             ]),
         ),
-        ("weights", Json::Arr(weight_entries)),
-        ("artifacts", Json::Arr(artifact_entries)),
-    ]);
-    std::fs::write(dir.join("manifest.json"), manifest.dump())?;
-    Ok(())
+        ("weights", Json::Arr(weight_entries.to_vec())),
+        ("artifacts", Json::Arr(artifact_entries.to_vec())),
+    ])
+}
+
+/// Prompt / decode-step geometry of the calibration replay. Small enough
+/// to keep gen-artifacts fast, large enough that the observed max delta
+/// samples every fast bucket's schedule over a compounding KV prefix.
+const CALIB_PROMPT: usize = 16;
+const CALIB_STEPS: usize = 24;
+/// Safety headroom applied on top of the 2x argmax-flip factor: the
+/// calibration observes a finite sample of schedule perturbations, and a
+/// gate-on run mixes fast- and invariant-schedule KV prefixes in ways the
+/// all-fast replay only approximates.
+const CALIB_SAFETY: f64 = 2.0;
+
+/// First-max argmax over one logits row (ties to the lowest index —
+/// consistency within the calibration is all that matters here).
+fn calib_argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Teacher-forced decode replay of `stream` through `artifact` (a decode
+/// graph of bucket `g`): lane 0 holds the real sequence in slot 0, pad
+/// lanes scribble into the trash slot. Returns the per-step logits row of
+/// lane 0. The prefill is always the invariant `window_inv_g1` graph, so
+/// any cross-variant delta comes from the decode schedule alone (and from
+/// the KV drift it compounds across steps).
+fn calib_replay(
+    rt: &mut crate::runtime::Runtime,
+    artifact: &str,
+    g: usize,
+    prompt: &[i32],
+    stream: &[i32],
+) -> Result<Vec<Vec<f32>>> {
+    let dims = rt.dims().clone();
+    rt.reset_state()?;
+    let win = crate::runtime::Runtime::window_artifact(1, prompt.len());
+    rt.forward(&win, prompt, &[0], &[0])?;
+    let trash = dims.trash_slot() as i32;
+    let mut rows = Vec::with_capacity(stream.len());
+    let mut prev = *prompt.last().expect("calibration prompt is non-empty");
+    for (i, &next) in stream.iter().enumerate() {
+        let pos = (prompt.len() - 1 + i) as i32;
+        let mut tokens = vec![0i32; g];
+        tokens[0] = prev;
+        let mut slots = vec![trash; g];
+        slots[0] = 0;
+        rt.forward(artifact, &tokens, &slots, &vec![pos; g])?;
+        let l = rt.extract_logits(1)?;
+        rows.push(l[..dims.vocab].to_vec());
+        prev = next;
+    }
+    Ok(rows)
+}
+
+/// Measure the schedule-perturbation bound for the artifact set in `dir`:
+/// greedily decode a reference stream on the universal invariant schedule,
+/// teacher-force the same stream through every fast decode bucket, and
+/// record the max element-wise logit delta. A fast-path token whose
+/// top-1/top-2 gap exceeds `2 * delta` cannot have its argmax flipped by
+/// swapping any of these schedules in anywhere along the prefix; the
+/// written bound is `2 * CALIB_SAFETY * delta` (floored at 1e-6 so an
+/// accidentally drift-free set still yields a usable positive bound).
+fn calibrate_margin_bound(dir: &Path) -> Result<f64> {
+    let man = crate::manifest::Manifest::load(dir)?;
+    let buckets = man.decode_buckets();
+    let mut rt = crate::runtime::Runtime::load(dir)?;
+    let dims = rt.dims().clone();
+
+    let mut rng = SplitMix64::new(0x6d61_7267_696e); // "margin"
+    let prompt: Vec<i32> = (0..CALIB_PROMPT)
+        .map(|_| rng.below(dims.vocab as u64) as i32)
+        .collect();
+
+    // reference pass: invariant schedule, greedy; row-invariance makes the
+    // bucket choice immaterial, so use the smallest
+    let inv_bucket = *buckets.first().ok_or_else(|| {
+        Error::Manifest("artifact set has no decode buckets".into())
+    })?;
+    let inv = crate::runtime::Runtime::decode_artifact(inv_bucket, true);
+    rt.reset_state()?;
+    let win = crate::runtime::Runtime::window_artifact(1, prompt.len());
+    rt.forward(&win, &prompt, &[0], &[0])?;
+    let mut stream = Vec::with_capacity(CALIB_STEPS);
+    let mut ref_rows = Vec::with_capacity(CALIB_STEPS);
+    let mut prev = *prompt.last().expect("calibration prompt is non-empty");
+    for i in 0..CALIB_STEPS {
+        let pos = (prompt.len() - 1 + i) as i32;
+        let mut tokens = vec![0i32; inv_bucket];
+        tokens[0] = prev;
+        let mut slots = vec![dims.trash_slot() as i32; inv_bucket];
+        slots[0] = 0;
+        rt.forward(&inv, &tokens, &slots, &vec![pos; inv_bucket])?;
+        let row = rt.extract_logits(1)?[..dims.vocab].to_vec();
+        prev = calib_argmax(&row);
+        stream.push(prev);
+        ref_rows.push(row);
+    }
+
+    let mut delta = 0.0f64;
+    for &b in &buckets {
+        let fast = crate::runtime::Runtime::decode_artifact(b, false);
+        let rows = calib_replay(&mut rt, &fast, b, &prompt, &stream)?;
+        for (fast_row, ref_row) in rows.iter().zip(ref_rows.iter()) {
+            for (&f, &r) in fast_row.iter().zip(ref_row.iter()) {
+                let d = (f - r).abs() as f64;
+                if d > delta {
+                    delta = d;
+                }
+            }
+        }
+    }
+    Ok((2.0 * CALIB_SAFETY * delta).max(1e-6))
 }
 
 static ENSURE_LOCK: Mutex<()> = Mutex::new(());
 
 /// True when the manifest at `man` was emitted by a generator that knows
 /// about KV paging (block_size in the model dims + the copy_pages
-/// artifact) and the fused step composer (the mixed_inv graph). Stale
-/// sets are regenerated rather than half-trusted.
+/// artifact), the fused step composer (the mixed_inv graph), and margin
+/// calibration (the margin_bound field). Stale sets are regenerated
+/// rather than half-trusted.
 fn manifest_is_current(man: &Path) -> bool {
     std::fs::read_to_string(man)
         .map(|t| {
             t.contains("\"block_size\"")
                 && t.contains("copy_pages")
                 && t.contains("mixed_inv")
+                && t.contains("\"margin_bound\"")
         })
         .unwrap_or(false)
 }
@@ -609,6 +750,11 @@ mod tests {
         let mixed = man.artifact("mixed_inv").expect("fused fast-path graph");
         assert_eq!(mixed.g, 256, "mixed capacity = max_fwd_tokens");
         assert!(mixed.donates_state);
+        assert!(
+            man.model.margin_bound.is_finite() && man.model.margin_bound > 0.0,
+            "calibration must write a positive margin_bound, got {}",
+            man.model.margin_bound
+        );
         assert_eq!(man.model.block_size, 16);
         assert_eq!(man.model.num_pages(), 5 * 160 / 16);
         // weight table covers the model exactly (validated by load, but

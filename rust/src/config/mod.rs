@@ -11,6 +11,7 @@
 //!   "artifacts": "artifacts",
 //!   "mode": "llm42",
 //!   "policy": "prefill-first",
+//!   "verify_policy": "stall",
 //!   "verify_group": 8,
 //!   "verify_window": 32,
 //!   "max_stall_steps": 8,
@@ -28,7 +29,13 @@
 //!
 //! `policy` selects the scheduling policy (`prefill-first` — the seed
 //! behavior — `deadline`, or `fair-share`); the policy affects latency
-//! and fairness only, never committed tokens. `prefix_cache` enables
+//! and fairness only, never committed tokens. `verify_policy` selects
+//! the verification trigger (`stall` — the seed rule — `slack`, or
+//! `margin-gate` for margin-certified sparse verification); like the
+//! scheduling policy it changes how much replay work runs, never the
+//! committed streams. `margin-gate` requires an artifact set whose
+//! manifest carries a calibrated `margin_bound` (re-run
+//! `gen-artifacts`). `prefix_cache` enables
 //! block-granular prefix sharing (cache hits skip prefill compute but
 //! still verify; committed tokens of deterministic requests are bitwise
 //! identical either way). `block_size` (0 = the artifact set's baked-in
@@ -51,7 +58,7 @@
 //! (and implies `events`). Recording never changes committed streams —
 //! stream digests are maintained at every level, including `off`.
 
-use crate::engine::{EngineConfig, FaultPlan, Mode, PolicyKind};
+use crate::engine::{EngineConfig, FaultPlan, Mode, PolicyKind, VerifyPolicyKind};
 use crate::error::{Error, Result};
 use crate::obs::ObsLevel;
 use crate::util::cli::Args;
@@ -86,6 +93,9 @@ impl AppConfig {
         }
         if let Some(p) = v.get("policy").and_then(|x| x.as_str()) {
             cfg.engine.policy = PolicyKind::parse(p)?;
+        }
+        if let Some(p) = v.get("verify_policy").and_then(|x| x.as_str()) {
+            cfg.engine.verify_policy.kind = VerifyPolicyKind::parse(p)?;
         }
         if let Some(g) = v.get("verify_group").and_then(|x| x.as_usize()) {
             cfg.engine.verify_group = g;
@@ -135,8 +145,9 @@ impl AppConfig {
         Self::from_json(&std::fs::read_to_string(path)?)
     }
 
-    /// CLI flags override file values (`--mode`, `--policy`, `--group`,
-    /// `--window`, `--artifacts`, `--addr`, `--max-stall`, `--eos`,
+    /// CLI flags override file values (`--mode`, `--policy`,
+    /// `--verify-policy`, `--group`, `--window`, `--artifacts`,
+    /// `--addr`, `--max-stall`, `--eos`,
     /// `--block-size`, `--prefix-cache true|false`, `--max-step-tokens`,
     /// `--threads`, `--obs off|counters|events`, `--trace-out PATH`).
     pub fn apply_args(mut self, args: &Args) -> Result<AppConfig> {
@@ -145,6 +156,9 @@ impl AppConfig {
         }
         if let Some(p) = args.get("policy") {
             self.engine.policy = PolicyKind::parse(p)?;
+        }
+        if let Some(p) = args.get("verify-policy") {
+            self.engine.verify_policy.kind = VerifyPolicyKind::parse(p)?;
         }
         self.engine.verify_group = args.usize_or("group", self.engine.verify_group)?;
         self.engine.verify_window = args.usize_or("window", self.engine.verify_window)?;
@@ -171,6 +185,7 @@ impl AppConfig {
         self.artifacts = args.str_or("artifacts", &self.artifacts);
         self.server_addr = args.str_or("addr", &self.server_addr);
         self.engine.fault = FaultPlan::None; // never configurable in prod
+        self.engine.margin_bound_override = None; // test-only, like fault
         self.validate()?;
         Ok(self)
     }
@@ -228,6 +243,27 @@ mod tests {
         assert_eq!(c.engine.policy, PolicyKind::DeadlineAware);
         assert!(AppConfig::from_json(r#"{"policy": "wat"}"#).is_err());
         assert!(AppConfig::resolve(&args("--policy nope")).is_err());
+    }
+
+    #[test]
+    fn verify_policy_from_file_and_flag() {
+        let c = AppConfig::from_json(r#"{"verify_policy": "slack"}"#).unwrap();
+        assert_eq!(c.engine.verify_policy.kind, VerifyPolicyKind::Slack);
+        let c = c.apply_args(&args("--verify-policy margin-gate")).unwrap();
+        assert_eq!(c.engine.verify_policy.kind, VerifyPolicyKind::MarginGate);
+        assert!(c.engine.verify_policy.gate());
+        // default: the seed stall trigger, gate off
+        let d = AppConfig::resolve(&args("")).unwrap();
+        assert_eq!(d.engine.verify_policy.kind, VerifyPolicyKind::Stall);
+        assert!(!d.engine.verify_policy.gate());
+        assert!(AppConfig::from_json(r#"{"verify_policy": "wat"}"#).is_err());
+        assert!(AppConfig::resolve(&args("--verify-policy nope")).is_err());
+    }
+
+    #[test]
+    fn margin_bound_override_never_from_config() {
+        let c = AppConfig::resolve(&args("")).unwrap();
+        assert_eq!(c.engine.margin_bound_override, None);
     }
 
     #[test]

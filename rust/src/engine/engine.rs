@@ -79,7 +79,7 @@ use std::time::Instant;
 
 use crate::engine::kv::{blocks_for, KvManager, KvStats};
 use crate::engine::metrics::EngineMetrics;
-use crate::engine::sampler::sample;
+use crate::engine::sampler::{margin_certifies, sample};
 use crate::engine::scheduler::{
     Action, BatchPlan, LaneView, PolicyKind, QueuedView, SchedView,
     SchedulerPolicy,
@@ -87,6 +87,7 @@ use crate::engine::scheduler::{
 use crate::engine::sequence::{FinishReason, Phase, Request, RequestOutput, Sequence};
 use crate::engine::store::{SeqId, SequenceStore};
 use crate::engine::verify;
+use crate::engine::verify_policy::VerifyPolicy;
 use crate::error::{Error, Result};
 use crate::obs::{self, MarginDepth, Obs, ObsConfig, VerifyObs};
 use crate::runtime::Runtime;
@@ -176,6 +177,19 @@ pub struct EngineConfig {
     /// never changes committed streams (`tests/obs.rs` pins this); `off`
     /// costs one branch per record site on the hot path.
     pub obs: ObsConfig,
+    /// When to trigger verification, and whether the margin gate certifies
+    /// fast-path tokens past it (see [`crate::engine::verify_policy`]).
+    /// The default reproduces the seed stall trigger bit-for-bit; the
+    /// committed streams are identical under every policy either way —
+    /// `margin-gate` only changes *how many* forwards it takes to commit
+    /// them (`tests/verify_policy.rs` pins the equality matrix).
+    pub verify_policy: VerifyPolicy,
+    /// Test-only override of the manifest's calibrated
+    /// `margin_bound` (like [`FaultPlan`], never configurable from config
+    /// files or the CLI): `Some(tiny)` forces over-certification to
+    /// exercise the debug replay assertion, `Some(f32::INFINITY)` makes
+    /// the gate certify nothing (the adversarial low-margin benchmark).
+    pub margin_bound_override: Option<f32>,
 }
 
 impl Default for EngineConfig {
@@ -194,6 +208,8 @@ impl Default for EngineConfig {
             request_timeout_ms: 0.0,
             threads: 0,
             obs: ObsConfig::default(),
+            verify_policy: VerifyPolicy::default(),
+            margin_bound_override: None,
         }
     }
 }
@@ -285,6 +301,10 @@ pub struct Engine<'rt> {
     /// fused fast-path token budget per step (0 = step composer disabled),
     /// clamped to the artifact set's logits capacity
     step_budget: usize,
+    /// effective schedule-perturbation bound the margin gate certifies
+    /// against: the manifest's calibrated `margin_bound`, or the test-only
+    /// override (validated positive and non-NaN when the gate is on)
+    margin_bound: f32,
     view_scratch: ViewScratch,
     scratch: StepScratch,
 }
@@ -301,6 +321,18 @@ impl<'rt> Engine<'rt> {
             let name =
                 Runtime::window_artifact(cfg.verify_group, cfg.verify_window);
             rt.manifest.require(&name)?;
+        }
+        let margin_bound = cfg
+            .margin_bound_override
+            .unwrap_or(dims.margin_bound as f32);
+        if cfg.mode == Mode::Llm42
+            && cfg.verify_policy.gate()
+            && (margin_bound.is_nan() || margin_bound <= 0.0)
+        {
+            return Err(Error::Manifest(format!(
+                "margin gate needs a calibrated margin_bound, got {margin_bound} \
+                 (pre-calibration artifact set?); re-run `make artifacts`"
+            )));
         }
         // The step composer needs the ragged fused graph. The effective
         // budget is clamped to [max_batch + 1, max_fwd_tokens]: the upper
@@ -371,6 +403,7 @@ impl<'rt> Engine<'rt> {
             invariant_bucket,
             max_seq: dims.max_seq,
             step_budget,
+            margin_bound,
             view_scratch: ViewScratch::default(),
             scratch: StepScratch::default(),
         })
@@ -652,6 +685,7 @@ impl<'rt> Engine<'rt> {
         view.free_blocks = kv.free_pages;
         view.cached_blocks = kv.cached_pages;
         view.prefix_cache = self.cfg.prefix_cache;
+        view.verify_policy = self.cfg.verify_policy;
     }
 
     /// One scheduler iteration; executes the step's forward work (one
@@ -1311,10 +1345,13 @@ impl<'rt> Engine<'rt> {
     /// invariant-schedule KV up to there; at and beyond it lives fast-path
     /// or stale rollback KV that must never enter the prefix index.
     ///
-    /// * DVR-deterministic and batch-invariant traffic: `P + C - 1` — every
-    ///   committed position except the frontier input slot, which is
-    ///   rewritten by fast decode (DVR) or not yet written (the next
-    ///   token's input).
+    /// * DVR-deterministic and batch-invariant traffic: `P + kv_pure - 1`
+    ///   — every *pure* committed position except the frontier input slot,
+    ///   which is rewritten by fast decode (DVR) or not yet written (the
+    ///   next token's input). Without the margin gate `kv_pure` equals the
+    ///   committed count, so this is the familiar `P + C - 1`; certified
+    ///   commits freeze it because their KV came from a fast-schedule
+    ///   forward and must never enter the prefix index.
     /// * everything else: whatever prefill built this admission epoch
     ///   (prompt, plus the invariant re-prefilled committed prefix after a
     ///   preemption); fast-path commits never extend it.
@@ -1325,7 +1362,7 @@ impl<'rt> Engine<'rt> {
             Mode::NonDeterministic => false,
         };
         if committed_publisher {
-            (seq.prompt_len() + seq.committed.len()).saturating_sub(1)
+            (seq.prompt_len() + seq.kv_pure).saturating_sub(1)
         } else {
             seq.prefill_pos
         }
@@ -1404,38 +1441,154 @@ impl<'rt> Engine<'rt> {
             scr.logits.clear();
             scr.logits.extend_from_slice(logits);
         }
-        let eos = self.cfg.eos_token;
-        let speculative = self.dvr();
         self.obs.note_decode(count as u32);
         let mut committed_now = 0u32;
         let mut to_retire = Vec::new();
+        let mut replays = Vec::new();
         for (lane, &sid) in lanes.iter().enumerate() {
             let row = &scr.logits[lane * vocab..(lane + 1) * vocab];
-            let seq = &mut self.store[sid];
-            let gen_index = seq.next_gen_index() as u64;
-            let tok = sample(row, seq.req.temperature, seq.req.seed, gen_index);
-            let spec_lane = speculative && seq.req.deterministic;
-            let finished = seq.push_fast_token(tok, eos, spec_lane);
-            self.metrics.decoded_tokens += 1;
-            if !spec_lane {
-                self.metrics.committed_tokens += 1;
-                committed_now += 1;
-            }
-            if self.invariant_decode() {
-                // batch-invariant commits are universal-schedule KV: the
-                // newly covered blocks become publishable immediately
-                let seq = &self.store[sid];
-                let written = seq.prompt_len() + seq.committed.len();
-                self.publish_seq(sid, written.saturating_sub(1));
-            }
-            if finished {
-                to_retire.push(sid);
-            }
+            self.fast_decode_commit(
+                sid,
+                row,
+                &mut committed_now,
+                &mut to_retire,
+                &mut replays,
+            );
         }
         self.obs.note_commit(committed_now);
+        self.debug_check_certified(&replays)?;
         for sid in to_retire {
             self.retire(sid)?;
         }
+        Ok(())
+    }
+
+    /// Sample and record one fast-path decode token for `sid` from its
+    /// logits row — the per-lane commit rule shared by the exclusive and
+    /// fused decode paths. Under the margin gate, a deterministic lane
+    /// with no queued speculative tokens whose row clears the calibrated
+    /// perturbation bound **certified-commits**: the token extends the
+    /// committed stream (and its digest chain) immediately, skipping the
+    /// verify window entirely. Its KV stays fast-schedule, so the
+    /// sequence's pure-KV frontier is frozen rather than advanced — a
+    /// certified position is never published into the prefix cache until
+    /// the next verify pass repairs the span through the invariant graph
+    /// ([`Engine::repair_impure_spans`]). Tokens that do not certify
+    /// follow the unchanged speculative / direct-commit arms.
+    fn fast_decode_commit(
+        &mut self,
+        sid: SeqId,
+        row: &[f32],
+        committed_now: &mut u32,
+        to_retire: &mut Vec<SeqId>,
+        replays: &mut Vec<SeqId>,
+    ) {
+        let eos = self.cfg.eos_token;
+        let speculative = self.dvr();
+        let gate = speculative && self.cfg.verify_policy.gate();
+        let bound = self.margin_bound;
+        let seq = &mut self.store[sid];
+        let gen_index = seq.next_gen_index() as u64;
+        let tok = sample(row, seq.req.temperature, seq.req.seed, gen_index);
+        let spec_lane = speculative && seq.req.deterministic;
+        // certification is only sound when the token directly extends the
+        // committed stream: with speculative tokens queued ahead of it, a
+        // rollback of *those* would retract it
+        let certified = spec_lane
+            && gate
+            && seq.speculative.is_empty()
+            && margin_certifies(
+                row,
+                seq.req.temperature,
+                seq.req.seed,
+                gen_index,
+                bound,
+            );
+        let pure_before = seq.kv_pure;
+        let finished = seq.push_fast_token(tok, eos, spec_lane && !certified);
+        if certified {
+            // fast-schedule KV behind this commit: freeze the pure-KV
+            // frontier the commit arm just advanced
+            seq.kv_pure = pure_before;
+        }
+        self.metrics.decoded_tokens += 1;
+        if certified {
+            self.metrics.certified_tokens += 1;
+            self.metrics.committed_tokens += 1;
+            *committed_now += 1;
+            replays.push(sid);
+        } else if !spec_lane {
+            self.metrics.committed_tokens += 1;
+            *committed_now += 1;
+        }
+        if self.invariant_decode() {
+            // batch-invariant commits are universal-schedule KV: the
+            // newly covered blocks become publishable immediately
+            let seq = &self.store[sid];
+            let written = seq.prompt_len() + seq.committed.len();
+            self.publish_seq(sid, written.saturating_sub(1));
+        }
+        if finished {
+            to_retire.push(sid);
+        }
+    }
+
+    /// Debug-build backstop behind every certified commit: replay the
+    /// token on the invariant single-lane window graph (the exact pass a
+    /// verify window would have run) and assert the replayed sample
+    /// matches. The pass runs while the lane still holds its KV — after
+    /// the commit loop, before retires — and writes invariant-schedule KV
+    /// over the replayed position plus causally-masked padding beyond the
+    /// frontier (within the admission reservation: `fits()` guarantees
+    /// `P + max_new + window <= max_seq` and the smallest prefill chunk
+    /// never exceeds the window headroom). Release builds skip this
+    /// entirely — the certificate is the proof; this assertion is what a
+    /// corrupted (too-loose) `margin_bound` trips.
+    #[cfg(debug_assertions)]
+    fn debug_check_certified(&mut self, replays: &[SeqId]) -> Result<()> {
+        if replays.is_empty() {
+            return Ok(());
+        }
+        let chunk = self.prefill_chunks[0];
+        let vocab = self.rt.dims().vocab;
+        for &sid in replays {
+            let (id, prev, pos, temp, seed, gen_index, tok) = {
+                let s = &self.store[sid];
+                let cn = s.committed.len();
+                debug_assert!(cn >= 2, "certified token always follows gen token 0");
+                (
+                    s.id,
+                    s.committed[cn - 2] as i32,
+                    s.prompt_len() + cn - 2,
+                    s.req.temperature,
+                    s.req.seed,
+                    (cn - 1) as u64,
+                    *s.committed.last().unwrap(),
+                )
+            };
+            let mut tokens = vec![0i32; chunk];
+            tokens[0] = prev;
+            let copies = self.kv.prepare_write(id, pos, pos + chunk)?;
+            self.run_cow_copies(&copies)?;
+            let mut tables = Vec::new();
+            self.kv.extend_lane_table(id, &mut tables)?;
+            let artifact = Runtime::window_artifact(1, chunk);
+            self.rt.forward(&artifact, &tokens, &tables, &[pos as i32])?;
+            let logits = self.rt.extract_logits(1)?;
+            let replayed = sample(&logits[..vocab], temp, seed, gen_index);
+            assert_eq!(
+                replayed, tok,
+                "margin certificate violated for request {id} gen index \
+                 {gen_index}: certified fast-path token {tok} but the \
+                 invariant replay sampled {replayed} — the artifact set's \
+                 margin_bound is too loose for its schedule perturbation"
+            );
+        }
+        Ok(())
+    }
+
+    #[cfg(not(debug_assertions))]
+    fn debug_check_certified(&mut self, _replays: &[SeqId]) -> Result<()> {
         Ok(())
     }
 
@@ -1582,33 +1735,21 @@ impl<'rt> Engine<'rt> {
             row += chunk;
         }
 
-        let speculative = self.dvr();
         let mut committed_now = 0u32;
+        let mut replays = Vec::new();
         for &sid in decode {
             let logits_row = &scr.logits[row * vocab..(row + 1) * vocab];
-            let seq = &mut self.store[sid];
-            let gen_index = seq.next_gen_index() as u64;
-            let tok = sample(logits_row, seq.req.temperature, seq.req.seed, gen_index);
-            let spec_lane = speculative && seq.req.deterministic;
-            let finished = seq.push_fast_token(tok, eos, spec_lane);
-            self.metrics.decoded_tokens += 1;
-            if !spec_lane {
-                self.metrics.committed_tokens += 1;
-                committed_now += 1;
-            }
-            if self.invariant_decode() {
-                // batch-invariant commits are universal-schedule KV: the
-                // newly covered blocks become publishable immediately
-                let seq = &self.store[sid];
-                let written = seq.prompt_len() + seq.committed.len();
-                self.publish_seq(sid, written.saturating_sub(1));
-            }
-            if finished {
-                to_retire.push(sid);
-            }
+            self.fast_decode_commit(
+                sid,
+                logits_row,
+                &mut committed_now,
+                &mut to_retire,
+                &mut replays,
+            );
             row += 1;
         }
         self.obs.note_commit(committed_now);
+        self.debug_check_certified(&replays)?;
         for sid in to_retire {
             self.retire(sid)?;
         }
@@ -1623,10 +1764,67 @@ impl<'rt> Engine<'rt> {
         res
     }
 
+    /// Margin-gate repair: replay a certified span's fast-schedule KV
+    /// through the invariant single-lane graph before a verify window
+    /// reads past it. Certified commits leave their input positions
+    /// holding fast-path KV below the (frozen) pure frontier; a verify
+    /// window starting at the committed frontier would attend over that
+    /// KV, and its logits — hence the verified tokens of *low-margin*
+    /// rows — would stop being a pure function of the committed prefix.
+    /// Re-prefilling the span (teacher-forced committed tokens, chunked
+    /// like ordinary prefill) restores the all-invariant-KV precondition
+    /// the window's determinism argument needs. Wide-margin traffic never
+    /// fires windows, so it never pays this; the cost scales with the
+    /// certified run length preceding a low-margin token, one forward per
+    /// prefill chunk.
+    fn repair_impure_spans(&mut self, lanes: &[SeqId]) -> Result<()> {
+        for &sid in lanes {
+            loop {
+                let (id, start, remaining) = {
+                    let s = &self.store[sid];
+                    let c = s.committed.len();
+                    if s.kv_pure >= c {
+                        break;
+                    }
+                    // impure input positions: [P + kv_pure - 1, P + c - 1)
+                    (s.id, s.prompt_len() + s.kv_pure - 1, c - s.kv_pure)
+                };
+                let chunk = self.pick_chunk(remaining);
+                let real = remaining.min(chunk);
+                let mut tokens: Vec<i32> = Vec::with_capacity(chunk);
+                {
+                    let s = &self.store[sid];
+                    let p = s.prompt_len();
+                    tokens.extend(
+                        (start..start + real).map(|q| s.committed[q - p] as i32),
+                    );
+                    // pad KV is overwritten (by this window or a later
+                    // forward feeding those positions) before anything
+                    // can attend to it — same rule as prefill padding
+                    tokens.resize(chunk, 0);
+                }
+                let copies = self.kv.prepare_write(id, start, start + chunk)?;
+                self.run_cow_copies(&copies)?;
+                let mut tables = Vec::new();
+                self.kv.extend_lane_table(id, &mut tables)?;
+                let artifact = Runtime::window_artifact(1, chunk);
+                self.rt
+                    .forward(&artifact, &tokens, &tables, &[start as i32])?;
+                self.metrics.forward_passes += 1;
+                self.metrics.gate_repair_tokens += real as u64;
+                self.store[sid].kv_pure += real;
+            }
+        }
+        Ok(())
+    }
+
     fn verify_pass_inner(&mut self, lanes: &[SeqId], scr: &mut StepScratch) -> Result<()> {
         let g = self.cfg.verify_group;
         let t = self.cfg.verify_window;
         debug_assert!(lanes.len() <= g);
+        // restore the pure-KV invariant below every lane's window start
+        // (no-op without the margin gate: kv_pure tracks committed then)
+        self.repair_impure_spans(lanes)?;
         scr.tokens.clear();
         scr.tokens.resize(g * t, 0);
         scr.positions.clear();
@@ -1751,12 +1949,21 @@ impl<'rt> Engine<'rt> {
             for i in c..seq.committed.len() {
                 seq.digest = obs::digest_push(seq.digest, seq.committed[i]);
             }
+            // the window just rewrote [P+c-1, ..) with invariant-schedule
+            // KV, so the pure frontier catches up to the committed count —
+            // but only when it was already contiguous up to the window
+            // start; certified positions *below* the window keep their
+            // fast-schedule KV and stay frozen out of the prefix index
+            if seq.kv_pure == c {
+                seq.kv_pure = seq.committed.len();
+            }
             let seq_digest = seq.digest;
             seq.speculative.clear();
             seq.eos_sampled = seq.committed.last() == Some(&eos);
             seq.stall_steps = 0;
             seq.metrics.verify_passes += 1;
             self.metrics.committed_tokens += d.committed() as u64;
+            self.metrics.verified_tokens += d.committed() as u64;
             if d.rolled_back() {
                 seq.metrics.rollbacks += 1;
                 seq.metrics.recomputed_tokens += d.discarded as u64;

@@ -76,6 +76,17 @@ pub struct EngineMetrics {
     pub decoded_tokens: u64,
     /// tokens committed (returned to users)
     pub committed_tokens: u64,
+    /// subset of `committed_tokens` committed straight off the fast path
+    /// under the margin gate (certificate held; no verify window replayed
+    /// them)
+    pub certified_tokens: u64,
+    /// subset of `committed_tokens` committed by verify-pass replay (the
+    /// sparse-verification complement of `certified_tokens`)
+    pub verified_tokens: u64,
+    /// certified-span positions replayed through the invariant graph
+    /// before a verify window could read their fast-schedule KV (the
+    /// margin gate's repair cost; each chunk is one extra forward)
+    pub gate_repair_tokens: u64,
     /// prompt tokens prefilled (excludes padding)
     pub prefill_tokens: u64,
     pub rollbacks: u64,

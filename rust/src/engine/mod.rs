@@ -30,6 +30,7 @@ pub mod scheduler;
 pub mod sequence;
 pub mod store;
 pub mod verify;
+pub mod verify_policy;
 
 pub use engine::{Engine, EngineConfig, FaultPlan, Mode, StepKind, StreamDelta};
 pub use kv::{KvManager, KvStats};
@@ -40,3 +41,4 @@ pub use scheduler::{
 };
 pub use sequence::{FinishReason, Request, RequestOutput};
 pub use store::{SeqId, SequenceStore};
+pub use verify_policy::{VerifyPolicy, VerifyPolicyKind};

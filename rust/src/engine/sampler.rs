@@ -47,16 +47,20 @@ fn argmax_first(logits: &[f32]) -> u32 {
 
 /// Margin between the winning sampling key and the runner-up, in the same
 /// units the flip decision is made in. Used by the Fig. 6 analysis to
-/// relate numerical drift to token-flip probability.
+/// relate numerical drift to token-flip probability, and by the margin
+/// gate's certificate check ([`margin_certifies`]). The greedy arm is the
+/// plain top-1/top-2 logit gap, shared with the rollback-forensics scan so
+/// both consumers agree on one definition (first-max tiebreak: an exact
+/// tie margins 0.0 and never certifies).
 pub fn decision_margin(logits: &[f32], temperature: f32, seed: u64, gen_index: u64) -> f32 {
+    if temperature == 0.0 {
+        return crate::obs::top2_margin(logits);
+    }
+    let inv_t = 1.0 / temperature;
     let mut best = f32::NEG_INFINITY;
     let mut second = f32::NEG_INFINITY;
     for (v, &l) in logits.iter().enumerate() {
-        let key = if temperature == 0.0 {
-            l
-        } else {
-            l / temperature + gumbel_for(seed, gen_index, v as u64)
-        };
+        let key = l * inv_t + gumbel_for(seed, gen_index, v as u64);
         if key > best {
             second = best;
             best = key;
@@ -65,6 +69,31 @@ pub fn decision_margin(logits: &[f32], temperature: f32, seed: u64, gen_index: u
         }
     }
     best - second
+}
+
+/// The margin certificate: true when the sampling decision at this row is
+/// invariant to any per-logit perturbation smaller than `bound` (the
+/// calibrated schedule-perturbation bound from the artifact manifest).
+///
+/// * greedy: a flip needs the runner-up logit to overtake the winner, so a
+///   raw top-1/top-2 gap above `bound` is safe (the bound already carries
+///   the two-sided calibration factor).
+/// * seeded-Gumbel: keys are `logit / T + gumbel(seed, gen_index, v)` and
+///   the Gumbel offsets are exact constants of the replayable draw, so a
+///   logit perturbation of `bound` moves any key by at most `bound / T` —
+///   the key-space margin must clear that scaled bound.
+///
+/// A non-finite bound (`+inf` from a test override, `NaN` from an
+/// uncalibrated manifest) certifies nothing.
+pub fn margin_certifies(
+    logits: &[f32],
+    temperature: f32,
+    seed: u64,
+    gen_index: u64,
+    bound: f32,
+) -> bool {
+    let scaled = if temperature == 0.0 { bound } else { bound / temperature };
+    decision_margin(logits, temperature, seed, gen_index) > scaled
 }
 
 #[cfg(test)]
@@ -139,5 +168,41 @@ mod tests {
         let logits = [0.5f32, 2.0, 1.0];
         assert!(decision_margin(&logits, 0.0, 0, 0) > 0.0);
         assert!((decision_margin(&logits, 0.0, 0, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn greedy_margin_matches_forensics_definition() {
+        // the certificate path and the rollback-forensics scan share one
+        // top-1/top-2 gap definition
+        let logits = [0.5f32, 2.0, 1.0, -3.0];
+        assert_eq!(
+            decision_margin(&logits, 0.0, 7, 3),
+            crate::obs::top2_margin(&logits)
+        );
+        // exact tie: margin 0.0, never certifies
+        assert_eq!(decision_margin(&[4.0f32, 4.0], 0.0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn certificate_respects_the_bound() {
+        let logits = [0.5f32, 2.0, 1.0]; // greedy margin 1.0
+        assert!(margin_certifies(&logits, 0.0, 0, 0, 0.5));
+        assert!(!margin_certifies(&logits, 0.0, 0, 0, 1.0));
+        assert!(!margin_certifies(&logits, 0.0, 0, 0, f32::INFINITY));
+        assert!(!margin_certifies(&logits, 0.0, 0, 0, f32::NAN));
+    }
+
+    #[test]
+    fn certificate_scales_the_bound_into_key_space() {
+        // sampled arm: a key-space margin m certifies exactly when
+        // m > bound / T
+        let logits: Vec<f32> = (0..32).map(|i| ((i * 53) % 17) as f32 * 0.4).collect();
+        let t = 2.0f32;
+        let m = decision_margin(&logits, t, 11, 5);
+        assert!(m > 0.0);
+        let just_below = (m - 1e-4) * t;
+        let just_above = (m + 1e-4) * t;
+        assert!(margin_certifies(&logits, t, 11, 5, just_below));
+        assert!(!margin_certifies(&logits, t, 11, 5, just_above));
     }
 }

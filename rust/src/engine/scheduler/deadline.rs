@@ -26,8 +26,8 @@
 use std::cmp::Ordering;
 
 use crate::engine::scheduler::{
-    compose_plan, preemption_victim, verify_trigger, Action, SchedView,
-    SchedulerPolicy,
+    any_slack_urgent, compose_plan, preemption_victim, verify_trigger, Action,
+    SchedView, SchedulerPolicy,
 };
 use crate::engine::sequence::Phase;
 use crate::engine::store::SeqId;
@@ -78,20 +78,15 @@ impl DeadlineAware {
         sids.extend(keyed.into_iter().map(|(_, _, sid)| sid));
     }
 
-    /// Stall-or-slack urgency over the ready set: the seed stall-step
-    /// bound always applies — a deadline tightens the trigger, never
-    /// loosens it (a loose deadline must not starve a lane of
-    /// verification, i.e. of all token output).
-    fn any_urgent(&self, v: &SchedView, ready: &[SeqId]) -> bool {
-        ready.iter().any(|&sid| {
-            v.lane(sid)
-                .map(|l| {
-                    l.stall_steps >= v.max_stall_steps
-                        || l.urgency_at()
-                            .map_or(false, |at| at - v.now <= self.urgent_slack_secs)
-                })
-                .unwrap_or(false)
-        })
+    /// Urgency over the ready set: the engine's configured
+    /// [`VerifyPolicy`](crate::engine::verify_policy::VerifyPolicy)
+    /// trigger (stall-step bound at minimum) always applies — this
+    /// policy's deadline slack tightens it, never loosens it (a loose
+    /// deadline must not starve a lane of verification, i.e. of all
+    /// token output). Both scans are the shared short-circuit helpers;
+    /// the former per-lane stall recheck here duplicated `any_stalled`.
+    fn any_urgent(&self, v: &SchedView) -> bool {
+        v.verify_policy.urgent(v) || any_slack_urgent(v, self.urgent_slack_secs)
     }
 
     /// Token-budgeted composite plan: the decode batch rides every step,
@@ -114,7 +109,7 @@ impl DeadlineAware {
             if verify_trigger(
                 v,
                 &ready,
-                self.any_urgent(v, &ready),
+                self.any_urgent(v),
                 decode.is_empty() && prefilling.is_empty(),
             ) {
                 Self::sort_by_urgency(v, &mut ready);
@@ -176,8 +171,7 @@ impl SchedulerPolicy for DeadlineAware {
         if v.dvr {
             let mut ready: Vec<SeqId> = v.verify_ready();
             let decodable = v.decodable();
-            if verify_trigger(v, &ready, self.any_urgent(v, &ready), decodable.is_empty())
-            {
+            if verify_trigger(v, &ready, self.any_urgent(v), decodable.is_empty()) {
                 // most-urgent lanes verify first
                 Self::sort_by_urgency(v, &mut ready);
                 return Action::Verify {

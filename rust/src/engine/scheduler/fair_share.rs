@@ -18,8 +18,8 @@
 use std::collections::HashMap;
 
 use crate::engine::scheduler::{
-    any_stalled, compose_plan, preemption_victim, verify_trigger, Action,
-    SchedView, SchedulerPolicy,
+    compose_plan, preemption_victim, verify_trigger, Action, SchedView,
+    SchedulerPolicy,
 };
 use crate::engine::sequence::Phase;
 use crate::engine::store::SeqId;
@@ -115,7 +115,7 @@ impl FairShare {
             if verify_trigger(
                 v,
                 &ready,
-                any_stalled(v, &ready),
+                v.verify_policy.urgent(v),
                 decode.is_empty() && prefill_order.is_empty(),
             ) {
                 let items: Vec<(u8, SeqId)> = ready
@@ -177,7 +177,7 @@ impl SchedulerPolicy for FairShare {
         if v.dvr {
             let ready = v.verify_ready();
             let decodable = v.decodable();
-            if verify_trigger(v, &ready, any_stalled(v, &ready), decodable.is_empty()) {
+            if verify_trigger(v, &ready, v.verify_policy.urgent(v), decodable.is_empty()) {
                 let items: Vec<(u8, SeqId)> = ready
                     .iter()
                     .map(|&sid| (v.lane(sid).expect("ready lane").priority, sid))

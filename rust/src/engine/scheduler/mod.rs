@@ -45,7 +45,13 @@ pub mod prefill_first;
 
 use crate::engine::sequence::Phase;
 use crate::engine::store::SeqId;
+use crate::engine::verify_policy::VerifyPolicy;
 use crate::error::{Error, Result};
+
+// The verification trigger itself lives in `engine::verify_policy`; the
+// scheduler re-exports the stall scan for policies and tests that key on
+// the seed rule directly.
+pub use crate::engine::verify_policy::{any_slack_urgent, any_stalled};
 
 /// A composite step: every phase of work one fused engine step executes.
 ///
@@ -347,6 +353,11 @@ pub struct SchedView {
     pub cached_blocks: usize,
     /// block-granular prefix sharing active
     pub prefix_cache: bool,
+    /// the engine's verification trigger (see
+    /// [`crate::engine::verify_policy`]); policies ask
+    /// `verify_policy.urgent(view)` for urgency instead of hard-coding
+    /// their own stall scans
+    pub verify_policy: VerifyPolicy,
     /// active sequences, ascending request-id (= submission) order
     pub lanes: Vec<LaneView>,
     /// queued requests, FIFO order
@@ -506,17 +517,6 @@ pub fn verify_trigger(
         && (ready.len() >= v.verify_group || urgent || idle_otherwise)
 }
 
-/// The seed stall rule: some ready lane has waited past `max_stall_steps`
-/// (the baseline urgency every policy keeps; deadline-aware scheduling
-/// tightens it with slack, never loosens it).
-pub fn any_stalled(v: &SchedView, ready: &[SeqId]) -> bool {
-    ready.iter().any(|&sid| {
-        v.lane(sid)
-            .map(|l| l.stall_steps >= v.max_stall_steps)
-            .unwrap_or(false)
-    })
-}
-
 /// Which policy to instantiate; selectable from `EngineConfig`, the CLI
 /// (`--policy`), a config file, and the server wire protocol.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -564,7 +564,7 @@ impl PolicyKind {
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
 
     /// Test handle for synthetic views: slot = idx, generation 0.
@@ -623,6 +623,7 @@ mod tests {
             free_blocks: free,
             cached_blocks: 0,
             prefix_cache: false,
+            verify_policy: VerifyPolicy::default(),
             lanes,
             queue,
         }

@@ -13,7 +13,7 @@
 //! verify trigger no longer has to displace a fast-path step.
 
 use crate::engine::scheduler::{
-    any_stalled, compose_plan, verify_trigger, Action, SchedView, SchedulerPolicy,
+    compose_plan, verify_trigger, Action, SchedView, SchedulerPolicy,
 };
 use crate::engine::sequence::Phase;
 use crate::engine::store::SeqId;
@@ -42,7 +42,7 @@ impl PrefillFirst {
             if verify_trigger(
                 v,
                 &ready,
-                any_stalled(v, &ready),
+                v.verify_policy.urgent(v),
                 decode.is_empty() && prefilling.is_empty(),
             ) {
                 verify = ready.into_iter().take(v.verify_group).collect();
@@ -76,7 +76,7 @@ impl SchedulerPolicy for PrefillFirst {
         if v.dvr {
             let ready = v.verify_ready();
             let decodable = v.decodable();
-            if verify_trigger(v, &ready, any_stalled(v, &ready), decodable.is_empty()) {
+            if verify_trigger(v, &ready, v.verify_policy.urgent(v), decodable.is_empty()) {
                 return Action::Verify {
                     lanes: ready.into_iter().take(v.verify_group).collect(),
                 };

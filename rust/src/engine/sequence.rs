@@ -167,6 +167,15 @@ pub struct Sequence {
     /// chain never rewinds; fast-path commits fold in here, verify-pass
     /// commits fold in at the apply site in the executor.
     pub digest: u64,
+    /// committed-token count whose KV entries came from an
+    /// invariant-schedule forward (prefill / verify replay / plain
+    /// fast-path commits, whose KV the next verify window rewrites before
+    /// anyone shares it). Equals `committed.len()` everywhere except past
+    /// margin-certified commits, whose fast-schedule KV must never be
+    /// published into the prefix cache (the executor freezes this counter
+    /// at certified commit sites and re-advances it when a verify pass
+    /// replays through the span).
+    pub kv_pure: usize,
 }
 
 impl Sequence {
@@ -188,6 +197,7 @@ impl Sequence {
             metrics,
             fast_trace: Vec::new(),
             digest: obs::DIGEST_EMPTY,
+            kv_pure: 0,
         }
     }
 
@@ -325,6 +335,10 @@ impl Sequence {
         } else {
             self.committed.push(tok);
             self.digest = obs::digest_push(self.digest, tok);
+            // ordinary commits keep the pure-KV frontier in lockstep;
+            // certified commit sites in the executor save/restore around
+            // this call to freeze it instead
+            self.kv_pure = self.committed.len();
             if tok == eos {
                 self.eos_sampled = true;
                 self.finish(FinishReason::Eos);

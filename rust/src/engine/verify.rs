@@ -35,7 +35,15 @@ impl VerifyDecision {
 
 /// Apply the DVR commit rule for one lane.
 ///
-/// * `committed_len` — tokens already committed before this pass
+/// * `committed_len` — tokens already committed before this pass. Under
+///   the margin gate this includes **certified** fast-path commits, so the
+///   window starts mid-span — at whatever frontier certification advanced
+///   the stream to — rather than at the last *verified* position. The
+///   rule is unchanged: gen indices are absolute (`committed_len + j`),
+///   commits extend the stream append-only, and rollbacks can only ever
+///   discard speculative tokens, never the certified prefix (the engine
+///   repairs the certified span's KV before the window forward, so the
+///   verifier rows are the same pure function of the stream either way).
 /// * `spec` — speculative tokens (never empty; `len <= window - 1`)
 /// * `verifier` — the verifier's sampled tokens for the window rows
 ///   (`len == window`); row `j` is the token at gen index
@@ -219,5 +227,24 @@ mod tests {
     #[should_panic(expected = "window must cover")]
     fn spec_must_fit_window() {
         decide(0, &[1, 2, 3, 4], &[1, 2, 3, 4], EOS, 100, None);
+    }
+
+    #[test]
+    fn mid_span_window_after_certified_commits() {
+        // margin gate: 40 tokens already committed (some certified, none of
+        // which this window replays) — the decision is position-relative,
+        // so a mid-span window behaves exactly like a frontier window, and
+        // a rollback can only discard the speculative run, never reach
+        // into the certified prefix
+        let d = decide(40, &[11, 22, 13], &[11, 99, 0, 0], EOS, 100, None);
+        assert_eq!(d.matched, 1);
+        assert_eq!(d.fresh, Some(99));
+        assert_eq!(d.discarded, 2, "only speculative tokens are discarded");
+        assert_eq!(d.committed(), 2);
+        // length accounting uses the absolute committed_len, certified
+        // commits included
+        let d = decide(40, &[1, 2], &[1, 2, 3, 0], EOS, 43, None);
+        assert_eq!(d.fresh, Some(3));
+        assert_eq!(d.finish, Some(FinishReason::Length));
     }
 }

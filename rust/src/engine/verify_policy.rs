@@ -1,0 +1,206 @@
+//! Pluggable verification triggers — *when* a deterministic lane's
+//! speculative window must be replayed, and *whether* fast-path tokens can
+//! skip replay entirely on a margin certificate.
+//!
+//! The seed engine hard-coded one trigger (the stall rule) inside the
+//! scheduler, and `DeadlineAware` bolted a second (deadline slack) onto its
+//! own planning loop. This module makes the trigger a first-class
+//! [`VerifyPolicy`] carried in the [`SchedView`] snapshot, with three
+//! instances:
+//!
+//! * [`VerifyPolicyKind::Stall`] — the seed rule: verify when the ready
+//!   group is full or some ready lane has stalled past `max_stall_steps`.
+//! * [`VerifyPolicyKind::Slack`] — the stall rule tightened by deadline
+//!   slack: a ready lane whose deadline (or timeout) is within
+//!   `urgent_slack_secs` also fires the trigger, whatever scheduler policy
+//!   is active (previously this rule existed only inside `DeadlineAware`).
+//! * [`VerifyPolicyKind::MarginGate`] — sparse verification via margin
+//!   certificates (MarginGate, arxiv 2605.30218): the executor commits
+//!   fast-path tokens whose top-1/top-2 logit gap exceeds the artifact
+//!   set's calibrated schedule-perturbation bound (`margin_bound` in the
+//!   manifest) without ever entering a verify window; only uncertified
+//!   spans are replayed. Scheduling-side, the trigger is the stall rule —
+//!   spans are rare under the gate, and the stall bound still caps how long
+//!   an uncertified span may wait.
+//!
+//! The *certificate* half of `MarginGate` lives in the executor
+//! (`engine.rs`): certification is a per-row numeric decision made at
+//! decode time, not a scheduling decision. What matters here is that under
+//! the gate every speculative token still queued **is** uncertified (a
+//! certified token with an empty span commits immediately and never
+//! becomes speculative), so the verify groups policies compose out of
+//! `verify_ready` lanes are built from uncertified spans only.
+
+use crate::engine::scheduler::{LaneView, SchedView};
+use crate::error::{Error, Result};
+
+/// Default deadline slack (seconds) under [`VerifyPolicyKind::Slack`] —
+/// matches the `DeadlineAware` scheduler's historical constant.
+pub const DEFAULT_URGENT_SLACK_SECS: f64 = 0.05;
+
+/// Which verification trigger to run; selectable from `EngineConfig`, the
+/// CLI (`--verify-policy`), a config file, and reported by `{"cmd":"stats"}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VerifyPolicyKind {
+    /// Seed behavior: group-full / stall-count / idle trigger.
+    #[default]
+    Stall,
+    /// Stall plus deadline-slack urgency for every scheduler policy.
+    Slack,
+    /// Margin-certified sparse verification (stall trigger for the
+    /// uncertified remainder).
+    MarginGate,
+}
+
+impl VerifyPolicyKind {
+    pub fn parse(s: &str) -> Result<VerifyPolicyKind> {
+        match s {
+            "stall" => Ok(VerifyPolicyKind::Stall),
+            "slack" => Ok(VerifyPolicyKind::Slack),
+            "margin-gate" | "margin_gate" | "margin" | "gate" => {
+                Ok(VerifyPolicyKind::MarginGate)
+            }
+            other => Err(Error::Config(format!(
+                "unknown verify policy '{other}' (stall | slack | margin-gate)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            VerifyPolicyKind::Stall => "stall",
+            VerifyPolicyKind::Slack => "slack",
+            VerifyPolicyKind::MarginGate => "margin-gate",
+        }
+    }
+}
+
+/// The verification trigger carried by every [`SchedView`]: scheduler
+/// policies ask it for urgency instead of hard-coding their own stall
+/// scans. Copy-cheap so snapshots stay plain data.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VerifyPolicy {
+    pub kind: VerifyPolicyKind,
+    /// Deadline slack used by [`VerifyPolicyKind::Slack`] (and by
+    /// `DeadlineAware`'s own tightening, whatever the kind).
+    pub urgent_slack_secs: f64,
+}
+
+impl Default for VerifyPolicy {
+    fn default() -> Self {
+        VerifyPolicy {
+            kind: VerifyPolicyKind::Stall,
+            urgent_slack_secs: DEFAULT_URGENT_SLACK_SECS,
+        }
+    }
+}
+
+impl VerifyPolicy {
+    pub fn new(kind: VerifyPolicyKind) -> VerifyPolicy {
+        VerifyPolicy { kind, ..VerifyPolicy::default() }
+    }
+
+    /// Whether the executor's margin-certificate commit path is active.
+    pub fn gate(&self) -> bool {
+        self.kind == VerifyPolicyKind::MarginGate
+    }
+
+    /// The policy's urgency condition over the ready (verify-eligible)
+    /// lanes of `v` — the `urgent` operand of
+    /// [`verify_trigger`](crate::engine::scheduler::verify_trigger).
+    pub fn urgent(&self, v: &SchedView) -> bool {
+        match self.kind {
+            VerifyPolicyKind::Stall | VerifyPolicyKind::MarginGate => any_stalled(v),
+            VerifyPolicyKind::Slack => {
+                any_stalled(v) || any_slack_urgent(v, self.urgent_slack_secs)
+            }
+        }
+    }
+}
+
+/// The seed stall rule: some verify-ready lane has waited past
+/// `max_stall_steps`. One short-circuiting pass over the view's
+/// phase-ordered lanes — O(first stalled lane), not the former
+/// O(ready × lanes) per-handle lookup (`SchedView::lane` is a linear find).
+pub fn any_stalled(v: &SchedView) -> bool {
+    v.lanes
+        .iter()
+        .any(|l| l.verify_ready && l.stall_steps >= v.max_stall_steps)
+}
+
+/// Deadline-slack urgency over the verify-ready lanes: true when some ready
+/// lane's deadline or timeout is within `slack` seconds of `v.now`.
+pub fn any_slack_urgent(v: &SchedView, slack: f64) -> bool {
+    v.lanes
+        .iter()
+        .any(|l| l.verify_ready && lane_slack_urgent(v.now, l, slack))
+}
+
+/// Per-lane slack rule shared by [`VerifyPolicyKind::Slack`] and the
+/// `DeadlineAware` scheduler (single definition; the scheduler's former
+/// private copy also re-checked stall counts per lane, which the shared
+/// [`any_stalled`] scan now covers).
+pub fn lane_slack_urgent(now: f64, l: &LaneView, slack: f64) -> bool {
+    l.urgency_at().map_or(false, |at| at - now <= slack)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::scheduler::tests::{lane, sid, view};
+
+    #[test]
+    fn kind_parses_and_names() {
+        assert_eq!(VerifyPolicyKind::parse("stall").unwrap(), VerifyPolicyKind::Stall);
+        assert_eq!(VerifyPolicyKind::parse("slack").unwrap(), VerifyPolicyKind::Slack);
+        assert_eq!(
+            VerifyPolicyKind::parse("margin-gate").unwrap(),
+            VerifyPolicyKind::MarginGate
+        );
+        assert_eq!(
+            VerifyPolicyKind::parse("margin_gate").unwrap(),
+            VerifyPolicyKind::MarginGate
+        );
+        assert!(VerifyPolicyKind::parse("wat").is_err());
+        assert_eq!(VerifyPolicyKind::MarginGate.name(), "margin-gate");
+        assert!(VerifyPolicy::new(VerifyPolicyKind::MarginGate).gate());
+        assert!(!VerifyPolicy::default().gate());
+    }
+
+    #[test]
+    fn stall_urgency_requires_a_ready_stalled_lane() {
+        let mut stalled = lane(0, 0, true);
+        stalled.verify_ready = true;
+        stalled.speculative = 4;
+        stalled.stall_steps = 4; // == max_stall_steps in the test view
+        let mut fresh = lane(1, 0, true);
+        fresh.verify_ready = true;
+        fresh.speculative = 4;
+        let v = view(vec![stalled.clone(), fresh.clone()], vec![], 0);
+        assert!(any_stalled(&v));
+        assert!(VerifyPolicy::new(VerifyPolicyKind::Stall).urgent(&v));
+        assert!(VerifyPolicy::new(VerifyPolicyKind::MarginGate).urgent(&v));
+
+        // a stalled lane that is not verify-ready must not fire
+        stalled.verify_ready = false;
+        let v = view(vec![stalled, fresh], vec![], 0);
+        assert!(!any_stalled(&v));
+        assert!(!VerifyPolicy::new(VerifyPolicyKind::Stall).urgent(&v));
+    }
+
+    #[test]
+    fn slack_urgency_fires_on_tight_deadlines_for_any_kind_of_lane() {
+        let mut tight = lane(0, 0, true);
+        tight.verify_ready = true;
+        tight.speculative = 4;
+        // view() sets now = 100.0; arrive_time = 0 for idx 0
+        tight.deadline_ms = Some(100_020.0); // 20ms of slack left
+        let v = view(vec![tight], vec![], 0);
+        assert!(!any_stalled(&v), "no stall: the slack rule alone fires");
+        assert!(!VerifyPolicy::new(VerifyPolicyKind::Stall).urgent(&v));
+        assert!(VerifyPolicy::new(VerifyPolicyKind::Slack).urgent(&v));
+        assert!(any_slack_urgent(&v, DEFAULT_URGENT_SLACK_SECS));
+        assert!(!any_slack_urgent(&v, 0.001), "tighter slack: not urgent yet");
+        assert_eq!(v.lanes[0].sid, sid(0));
+    }
+}

@@ -94,7 +94,8 @@ pub mod util;
 pub mod prelude {
     pub use crate::engine::{
         Engine, EngineConfig, FaultPlan, FinishReason, Mode, PolicyKind,
-        Request, RequestOutput, StepKind, StreamDelta,
+        Request, RequestOutput, StepKind, StreamDelta, VerifyPolicy,
+        VerifyPolicyKind,
     };
     pub use crate::error::{Error, Result};
     pub use crate::manifest::Manifest;

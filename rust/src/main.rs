@@ -30,6 +30,12 @@ COMMON:
   --policy P         scheduling policy: prefill-first (seed behavior),
                      deadline (slack-triggered verification), fair-share
                      (weighted round-robin across priority classes)
+  --verify-policy V  verification trigger: stall (seed behavior), slack
+                     (stall + deadline-slack urgency), margin-gate
+                     (margin-certified sparse verification: fast-path
+                     tokens whose logit margin clears the artifact set's
+                     calibrated bound commit without replay; committed
+                     streams are bitwise identical under every trigger)
   --prefix-cache B   true|false: paged-KV prefix sharing (default false;
                      cache hits skip prefill compute, never verification)
   --block-size N     KV page size; 0 = the artifact set's baked-in value

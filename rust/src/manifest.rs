@@ -27,6 +27,14 @@ pub struct ModelDims {
     /// paged engine requires > 0 — re-run `make artifacts`).
     pub block_size: usize,
     pub logit_scale: f64,
+    /// Schedule-perturbation bound on logits, calibrated at gen-artifacts
+    /// time: fast-path tokens whose top-1/top-2 logit gap exceeds this
+    /// value cannot have their argmax flipped by any reduction-schedule
+    /// change the artifact set can express, so the `MarginGate` verify
+    /// policy may commit them without a verify window. `NaN` on artifact
+    /// sets generated before calibration existed (the gate then refuses
+    /// to run — re-run `make artifacts`).
+    pub margin_bound: f64,
 }
 
 impl ModelDims {
@@ -162,6 +170,12 @@ impl Manifest {
             // absent on pre-paging manifests; 0 means "regenerate to page"
             block_size: m.get("block_size").and_then(|x| x.as_usize()).unwrap_or(0),
             logit_scale: m.f("logit_scale")?,
+            // absent on pre-calibration manifests; NaN means "no margin
+            // certificate available" (MarginGate refuses to run)
+            margin_bound: m
+                .get("margin_bound")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(f64::NAN),
         };
 
         let s = v.req("state")?;
@@ -236,6 +250,13 @@ impl Manifest {
         }
         if self.artifact("extract_r1").is_none() {
             return Err(Error::Manifest("missing extract_r1 artifact".into()));
+        }
+        if m.margin_bound.is_finite() && m.margin_bound <= 0.0 {
+            return Err(Error::Manifest(format!(
+                "margin_bound {} must be positive (a zero or negative bound \
+                 would certify arbitrary tokens); re-run `make artifacts`",
+                m.margin_bound
+            )));
         }
         if m.block_size != 0 {
             if m.max_seq % m.block_size != 0 {
@@ -356,6 +377,7 @@ mod tests {
             max_fwd_tokens: 64,
             block_size: 16,
             logit_scale: 6.0,
+            margin_bound: 0.25,
         };
         assert_eq!(m.kv_dim(), 32);
         assert_eq!(m.user_slots(), 4);

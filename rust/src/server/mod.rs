@@ -76,6 +76,8 @@
 //!       "forward_passes": ..., "tokens_per_forward": ...,
 //!       "forwards_per_committed_token": ..., "fused_steps": ...,
 //!       "fused_tokens": ..., "fused_occupancy": ...,
+//!       "verify_policy": "stall", "certified_tokens": ...,
+//!       "verified_tokens": ..., "gate_repair_tokens": ...,
 //!       "finish_reasons": {"stop": ..., "length": ..., "cancelled": ...,
 //!                          "timeout": ..., "error": ...},
 //!       "store": {"live_seqs": ..., "live_seqs_hwm": ..., "capacity": ...},
@@ -374,12 +376,14 @@ fn hist_json(h: &Histogram) -> Json {
 /// `waiters` is the server's live reply-channel count — it must return to
 /// zero when the engine drains, or a waiter leaked. `obs` supplies the
 /// determinism digest (maintained at every obs level) and the latency
-/// histograms.
+/// histograms. `verify_policy` is the active verification trigger's name
+/// (`stall` | `slack` | `margin-gate`).
 pub fn render_stats(
     m: &EngineMetrics,
     kv: &KvStats,
     waiters: usize,
     obs: &Obs,
+    verify_policy: &str,
 ) -> String {
     let class_keys: Vec<String> =
         m.class_e2e.keys().map(|c| c.to_string()).collect();
@@ -439,6 +443,15 @@ pub fn render_stats(
         ("fused_steps", Json::num(m.fused_steps as f64)),
         ("fused_tokens", Json::num(m.fused_fwd_tokens as f64)),
         ("fused_occupancy", Json::num(m.fused_occupancy())),
+        // sparse-verification accounting: which trigger is active, how
+        // many committed tokens skipped replay on a margin certificate
+        // vs. went through a verify window, and how many certified-span
+        // positions were re-prefilled on the invariant graph before a
+        // window (margin-gate only; all zero under stall/slack)
+        ("verify_policy", Json::str(verify_policy)),
+        ("certified_tokens", Json::num(m.certified_tokens as f64)),
+        ("verified_tokens", Json::num(m.verified_tokens as f64)),
+        ("gate_repair_tokens", Json::num(m.gate_repair_tokens as f64)),
         // request-lifecycle accounting: how every finished request ended,
         // and how many reply channels the server currently holds open
         (
@@ -542,6 +555,21 @@ pub fn render_metrics_prom(
             "recomputed_tokens_total",
             "speculative tokens discarded by rollback",
             m.recomputed_tokens as f64,
+        ),
+        (
+            "certified_tokens_total",
+            "tokens committed on a margin certificate without replay",
+            m.certified_tokens as f64,
+        ),
+        (
+            "verified_tokens_total",
+            "tokens committed through a verify window",
+            m.verified_tokens as f64,
+        ),
+        (
+            "gate_repair_tokens_total",
+            "certified-span positions re-prefilled before a verify window",
+            m.gate_repair_tokens as f64,
         ),
         ("preemptions_total", "KV preemptions", m.preemptions as f64),
         (
@@ -953,6 +981,7 @@ fn handle_msg(
                 &eng.kv_stats(),
                 waiters.len(),
                 &eng.obs,
+                eng.cfg.verify_policy.kind.name(),
             ));
         }
         ToEngine::Events { since, reply } => {
@@ -1617,9 +1646,17 @@ mod tests {
             held_pages: 10,
             ..Default::default()
         };
+        m.certified_tokens = 70;
+        m.verified_tokens = 30;
+        m.gate_repair_tokens = 6;
         let obs = Obs::new(ObsConfig::default()).unwrap();
-        let v = Json::parse(&render_stats(&m, &kv, 5, &obs)).unwrap();
+        let v =
+            Json::parse(&render_stats(&m, &kv, 5, &obs, "margin-gate")).unwrap();
         assert_eq!(v.u("preemptions").unwrap(), 3);
+        assert_eq!(v.s("verify_policy").unwrap(), "margin-gate");
+        assert_eq!(v.u("certified_tokens").unwrap(), 70);
+        assert_eq!(v.u("verified_tokens").unwrap(), 30);
+        assert_eq!(v.u("gate_repair_tokens").unwrap(), 6);
         assert_eq!(v.u("reprefilled_tokens").unwrap(), 40);
         assert_eq!(v.u("queue_depth_hwm").unwrap(), 9);
         assert_eq!(v.u("forward_passes").unwrap(), 40);
@@ -1682,6 +1719,9 @@ mod tests {
         m.prefill_tokens = 111;
         m.rollbacks = 112;
         m.recomputed_tokens = 113;
+        m.certified_tokens = 121;
+        m.verified_tokens = 122;
+        m.gate_repair_tokens = 123;
         m.decode_secs = 1.5;
         m.prefill_secs = 2.5;
         m.verify_secs = 3.5;
@@ -1706,8 +1746,9 @@ mod tests {
         m.finished_timeout = 16;
         m.finished_error = 17;
         let obs = Obs::new(ObsConfig::default()).unwrap();
-        let v = Json::parse(&render_stats(&m, &KvStats::default(), 0, &obs))
-            .unwrap();
+        let v =
+            Json::parse(&render_stats(&m, &KvStats::default(), 0, &obs, "stall"))
+                .unwrap();
         let EngineMetrics {
             steps,
             decode_steps,
@@ -1719,6 +1760,9 @@ mod tests {
             fused_capacity_tokens,
             decoded_tokens,
             committed_tokens,
+            certified_tokens,
+            verified_tokens,
+            gate_repair_tokens,
             prefill_tokens,
             rollbacks,
             recomputed_tokens,
@@ -1767,6 +1811,13 @@ mod tests {
             v.u("recomputed_tokens").unwrap(),
             *recomputed_tokens as usize
         );
+        assert_eq!(v.u("certified_tokens").unwrap(), *certified_tokens as usize);
+        assert_eq!(v.u("verified_tokens").unwrap(), *verified_tokens as usize);
+        assert_eq!(
+            v.u("gate_repair_tokens").unwrap(),
+            *gate_repair_tokens as usize
+        );
+        assert_eq!(v.s("verify_policy").unwrap(), "stall");
         let ph = v.req("phase_secs").unwrap();
         assert!((ph.f("decode").unwrap() - decode_secs).abs() < 1e-12);
         assert!((ph.f("prefill").unwrap() - prefill_secs).abs() < 1e-12);

@@ -298,6 +298,7 @@ fn batch_plan_validation_property() {
             free_blocks: 8,
             cached_blocks: 0,
             prefix_cache: false,
+            verify_policy: Default::default(),
             lanes,
             queue: vec![],
         };

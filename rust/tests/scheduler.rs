@@ -179,6 +179,7 @@ fn prefill_first_plan_matches_seed_rule_on_random_views() {
             free_blocks: 8,
             cached_blocks: 0,
             prefix_cache: false,
+            verify_policy: Default::default(),
             lanes,
             queue,
         };

@@ -1,0 +1,371 @@
+//! Integration tests for the pluggable verification trigger
+//! ([`VerifyPolicy`]) and margin-certified sparse verification.
+//!
+//! The margin gate's contract is the PR's headline invariant: committed
+//! streams AND the engine-wide determinism digest are bitwise identical
+//! with the gate on or off, across every scheduler policy, prefix-cache
+//! setting, step-composer setting, and thread count. The gate may only
+//! change *how many forwards* the engine runs, never what it commits.
+//!
+//! Requires `make artifacts` (the tiny-preset artifact set with a
+//! calibrated `margin_bound`).
+
+use llm42::engine::{
+    Engine, EngineConfig, FaultPlan, Mode, PolicyKind, Request, VerifyPolicy,
+    VerifyPolicyKind,
+};
+use llm42::prelude::*;
+
+fn artifacts_dir() -> String {
+    let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&dir).expect("artifact generation failed");
+    dir
+}
+
+fn cfg(kind: VerifyPolicyKind) -> EngineConfig {
+    EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 4,
+        verify_policy: VerifyPolicy::new(kind),
+        ..Default::default()
+    }
+}
+
+/// A deterministic-only workload mixing greedy and seeded-Gumbel
+/// sampling. All-deterministic matters for the digest comparison: the
+/// engine digest folds every retired request's stream digest, and only
+/// deterministic streams are guaranteed identical across trigger /
+/// policy / cache / fusion / thread settings.
+fn det_workload() -> Vec<Request> {
+    vec![
+        Request {
+            prompt: (10..26).collect(),
+            max_new_tokens: 28,
+            deterministic: true,
+            temperature: 0.0,
+            seed: 0,
+            ..Default::default()
+        },
+        Request {
+            prompt: (40..52).collect(),
+            max_new_tokens: 24,
+            deterministic: true,
+            temperature: 1.0,
+            seed: 7,
+            ..Default::default()
+        },
+        Request {
+            prompt: (60..80).collect(),
+            max_new_tokens: 20,
+            deterministic: true,
+            temperature: 0.0,
+            seed: 0,
+            ..Default::default()
+        },
+        Request {
+            prompt: (90..104).collect(),
+            max_new_tokens: 22,
+            deterministic: true,
+            temperature: 0.5,
+            seed: 13,
+            ..Default::default()
+        },
+    ]
+}
+
+/// Run a workload to completion; return per-request committed streams
+/// (in submit order, independent of id assignment), the engine digest,
+/// and the final metrics.
+fn run(
+    rt: &mut Runtime,
+    c: EngineConfig,
+    reqs: &[Request],
+) -> (Vec<Vec<u32>>, u64, llm42::engine::EngineMetrics) {
+    let mut eng = Engine::new(rt, c).unwrap();
+    let ids: Vec<u64> =
+        reqs.iter().map(|r| eng.submit(r.clone()).unwrap()).collect();
+    eng.run_to_completion().unwrap();
+    let outs = eng.take_finished();
+    assert_eq!(outs.len(), ids.len(), "all requests must finish");
+    let streams: Vec<Vec<u32>> = ids
+        .iter()
+        .map(|id| {
+            outs.iter().find(|o| o.id == *id).expect("missing output").tokens.clone()
+        })
+        .collect();
+    (streams, eng.obs.engine_digest(), eng.metrics.clone())
+}
+
+#[test]
+fn gate_is_bitwise_invisible_across_the_full_matrix() {
+    // streams + engine digest: margin-gate vs stall, across
+    // 3 scheduler policies x cache {off,on} x fusion {off,on} x
+    // threads {1,4}. Every one of the 48 runs must agree with the
+    // canonical baseline (det streams are invariant to all of these).
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let reqs = det_workload();
+
+    let (base_streams, base_digest, base_m) =
+        run(&mut rt, cfg(VerifyPolicyKind::Stall), &reqs);
+    assert!(base_streams.iter().all(|t| !t.is_empty()));
+    assert_eq!(base_m.certified_tokens, 0, "stall trigger never certifies");
+    assert_eq!(base_m.gate_repair_tokens, 0);
+
+    let mut certified_total = 0u64;
+    for policy in [
+        PolicyKind::PrefillFirst,
+        PolicyKind::DeadlineAware,
+        PolicyKind::FairShare,
+    ] {
+        for cache in [false, true] {
+            for fusion in [0usize, 64] {
+                for threads in [1usize, 4] {
+                    for kind in
+                        [VerifyPolicyKind::Stall, VerifyPolicyKind::MarginGate]
+                    {
+                        let mut c = cfg(kind);
+                        c.policy = policy;
+                        c.prefix_cache = cache;
+                        c.max_step_tokens = fusion;
+                        c.threads = threads;
+                        let (streams, digest, m) = run(&mut rt, c, &reqs);
+                        let tag = format!(
+                            "{policy:?} cache={cache} fusion={fusion} \
+                             threads={threads} trigger={}",
+                            kind.name()
+                        );
+                        assert_eq!(streams, base_streams, "streams: {tag}");
+                        assert_eq!(digest, base_digest, "digest: {tag}");
+                        match kind {
+                            VerifyPolicyKind::MarginGate => {
+                                certified_total += m.certified_tokens;
+                                // certified + verified never exceeds the
+                                // committed total (prefill commits the
+                                // gen-0 token outside both buckets)
+                                assert!(
+                                    m.certified_tokens + m.verified_tokens
+                                        <= m.committed_tokens,
+                                    "{tag}"
+                                );
+                            }
+                            _ => {
+                                assert_eq!(m.certified_tokens, 0, "{tag}");
+                                assert_eq!(m.gate_repair_tokens, 0, "{tag}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // the gate must actually fire somewhere, or the whole matrix above
+    // only proved that a dead feature changes nothing
+    assert!(
+        certified_total > 0,
+        "the calibrated margin_bound certified nothing across the matrix"
+    );
+}
+
+#[test]
+fn gate_reduces_verification_work_on_wide_margin_traffic() {
+    // the perf claim, mechanically: greedy traffic with the calibrated
+    // bound certifies most tokens, so the gate runs fewer verify passes
+    // and fewer forwards per committed token than the stall trigger
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let reqs: Vec<Request> = (0..3u32)
+        .map(|i| Request {
+            prompt: (10 + i * 40..26 + i * 40).collect(),
+            max_new_tokens: 32,
+            deterministic: true,
+            temperature: 0.0,
+            seed: 0,
+            ..Default::default()
+        })
+        .collect();
+    let (off_streams, _, off_m) = run(&mut rt, cfg(VerifyPolicyKind::Stall), &reqs);
+    let (on_streams, _, on_m) =
+        run(&mut rt, cfg(VerifyPolicyKind::MarginGate), &reqs);
+    assert_eq!(off_streams, on_streams);
+    assert!(on_m.certified_tokens > 0);
+    assert!(
+        on_m.verify_passes <= off_m.verify_passes,
+        "gate must not add verify passes ({} vs {})",
+        on_m.verify_passes,
+        off_m.verify_passes
+    );
+    assert!(
+        on_m.forward_passes < off_m.forward_passes,
+        "gate must save forwards on wide-margin traffic ({} vs {})",
+        on_m.forward_passes,
+        off_m.forward_passes
+    );
+    assert!(
+        on_m.forwards_per_committed_token() < off_m.forwards_per_committed_token()
+    );
+}
+
+#[test]
+fn gate_streams_survive_nondeterministic_cotraffic() {
+    // mixed traffic: deterministic streams compare gate on vs off even
+    // when nondet co-traffic perturbs bucket trajectories (the engine
+    // digest is NOT compared here — nondet streams legitimately depend
+    // on scheduling, which the gate changes)
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut reqs = det_workload();
+    reqs.push(Request {
+        prompt: (30..42).collect(),
+        max_new_tokens: 40,
+        deterministic: false,
+        temperature: 1.0,
+        seed: 100,
+        ..Default::default()
+    });
+    reqs.push(Request {
+        prompt: (120..132).collect(),
+        max_new_tokens: 16,
+        deterministic: false,
+        temperature: 1.0,
+        seed: 101,
+        ..Default::default()
+    });
+    // streams come back in submit order: the first four are det
+    let (off, _, _) = run(&mut rt, cfg(VerifyPolicyKind::Stall), &reqs);
+    let (on, _, _) = run(&mut rt, cfg(VerifyPolicyKind::MarginGate), &reqs);
+    assert_eq!(off[..4], on[..4]);
+}
+
+#[test]
+fn slack_trigger_is_also_bitwise_invisible() {
+    // the Slack trigger fires verification earlier for deadline-tight
+    // lanes under every scheduler policy; like the gate it may only move
+    // work, never results
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut reqs = det_workload();
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.deadline_ms = Some(50.0 + 100.0 * i as f64);
+    }
+    let (base, base_digest, _) = run(&mut rt, cfg(VerifyPolicyKind::Stall), &reqs);
+    for policy in [PolicyKind::PrefillFirst, PolicyKind::DeadlineAware] {
+        let mut c = cfg(VerifyPolicyKind::Slack);
+        c.policy = policy;
+        let (streams, digest, m) = run(&mut rt, c, &reqs);
+        assert_eq!(streams, base, "{policy:?}");
+        assert_eq!(digest, base_digest, "{policy:?}");
+        assert_eq!(m.certified_tokens, 0, "slack never certifies");
+    }
+}
+
+#[test]
+fn forced_mismatches_roll_back_only_uncertified_tokens() {
+    // fault injection forces every verify window to report a mismatch at
+    // position 0 — maximum rollback pressure. Under the gate, certified
+    // tokens are already committed and committed tokens are append-only,
+    // so the stream still equals the clean gate-off run: rollbacks can
+    // only ever discard speculative (uncertified) tokens.
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let reqs = det_workload();
+
+    let (clean, _, _) = run(&mut rt, cfg(VerifyPolicyKind::Stall), &reqs);
+
+    let fault = FaultPlan::EveryNthLane { every: 1, at_index: 0 };
+    let mut c_off = cfg(VerifyPolicyKind::Stall);
+    c_off.fault = fault;
+    let (off, _, off_m) = run(&mut rt, c_off, &reqs);
+    assert!(off_m.rollbacks > 0, "fault injection must force rollbacks");
+    assert_eq!(off, clean);
+
+    let mut c_on = cfg(VerifyPolicyKind::MarginGate);
+    c_on.fault = fault;
+    let (on, _, on_m) = run(&mut rt, c_on, &reqs);
+    assert_eq!(on, clean, "certified prefixes must never be retracted");
+    assert!(
+        on_m.verified_tokens > 0,
+        "uncertified spans must still replay through windows"
+    );
+    // every rollback discarded speculative tokens only: the recomputed
+    // count can never exceed what was decoded beyond the committed total
+    assert!(on_m.recomputed_tokens <= on_m.decoded_tokens);
+}
+
+/// A corrupted (too-loose) `margin_bound` certifies tokens whose margin
+/// does not actually clear the schedule-perturbation bound. The debug
+/// replay assertion re-derives every certified token on the invariant
+/// graph and must catch the first disagreement — and if no token happens
+/// to disagree, the streams are by definition still bitwise identical.
+/// Debug builds only: release builds skip the replay (the calibrated
+/// bound is the production guarantee).
+#[cfg(debug_assertions)]
+#[test]
+fn corrupted_margin_bound_is_caught_by_the_debug_replay() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let reqs = det_workload();
+    let (reference, _, _) = run(&mut rt, cfg(VerifyPolicyKind::Stall), &reqs);
+
+    let mut c = cfg(VerifyPolicyKind::MarginGate);
+    // tiny positive bound: nearly every row "certifies", including rows
+    // whose fast-path argmax genuinely flips under the invariant schedule
+    // (0.0 would be rejected by Engine::new's calibration check)
+    c.margin_bound_override = Some(1e-9);
+    let result = catch_unwind(AssertUnwindSafe(|| run(&mut rt, c, &reqs)));
+    match result {
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default();
+            assert!(
+                msg.contains("margin certificate violated"),
+                "expected the certificate-replay assertion, got: {msg}"
+            );
+        }
+        Ok((streams, _, m)) => {
+            // no certified token happened to flip: the gate must then have
+            // been genuinely harmless
+            assert_eq!(streams, reference);
+            assert!(m.certified_tokens > 0, "a 1e-9 bound must certify");
+        }
+    }
+}
+
+#[test]
+fn infinite_bound_certifies_nothing_and_changes_nothing() {
+    // the adversarial-traffic configuration used by the benchmark: with
+    // an infinite bound no row certifies, so the gate degrades to the
+    // stall trigger exactly (modulo the O(vocab) margin scan)
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let reqs = det_workload();
+    let (base, base_digest, base_m) =
+        run(&mut rt, cfg(VerifyPolicyKind::Stall), &reqs);
+    let mut c = cfg(VerifyPolicyKind::MarginGate);
+    c.margin_bound_override = Some(f32::INFINITY);
+    let (streams, digest, m) = run(&mut rt, c, &reqs);
+    assert_eq!(streams, base);
+    assert_eq!(digest, base_digest);
+    assert_eq!(m.certified_tokens, 0);
+    assert_eq!(m.gate_repair_tokens, 0);
+    assert_eq!(m.verify_passes, base_m.verify_passes);
+    assert_eq!(m.forward_passes, base_m.forward_passes);
+}
+
+#[test]
+fn gate_rejects_uncalibrated_artifacts() {
+    // a NaN override stands in for a pre-calibration manifest: the gate
+    // must refuse to start instead of silently certifying nothing (or
+    // worse, everything)
+    let mut rt = Runtime::load(artifacts_dir()).unwrap();
+    let mut c = cfg(VerifyPolicyKind::MarginGate);
+    c.margin_bound_override = Some(f32::NAN);
+    assert!(Engine::new(&mut rt, c).is_err());
+    let mut c = cfg(VerifyPolicyKind::MarginGate);
+    c.margin_bound_override = Some(-1.0);
+    assert!(Engine::new(&mut rt, c).is_err());
+    // the stall trigger doesn't care: the bound is never consulted
+    let mut c = cfg(VerifyPolicyKind::Stall);
+    c.margin_bound_override = Some(f32::NAN);
+    assert!(Engine::new(&mut rt, c).is_ok());
+}
