@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: artifacts artifacts-test build test test-threads test-server test-gate fmt-check lint doc bench-check bench-json
+.PHONY: artifacts artifacts-test build test test-threads test-server test-gate test-tp fmt-check lint doc bench-check bench-json
 
 artifacts:
 	cd rust && $(CARGO) run --release -- gen-artifacts --out artifacts --preset tiny
@@ -38,6 +38,26 @@ test-gate:
 		| grep -E '^(audit_digest|det_engine_digest)=' > /tmp/llm42_gate_on
 	diff -u /tmp/llm42_gate_off /tmp/llm42_gate_on
 	@echo "gate on/off deterministic digests identical"
+
+# The tensor-parallel matrix locally (mirrors the CI cross-R audit): the
+# tp suite pins bitwise-identical streams/digests at R=1,2,4 under the
+# tree and multimem collectives (and ring's divergence), then the audit
+# example runs at each R with the tree collective — the engine_digest=
+# lines must be bit-identical across rank counts.
+test-tp:
+	cd rust && $(CARGO) test -q --test tp
+	cd rust && $(CARGO) run --release --example determinism_audit -- \
+		--tp 1 --collective tree \
+		| grep -E '^engine_digest=' > /tmp/llm42_tp_r1
+	cd rust && $(CARGO) run --release --example determinism_audit -- \
+		--tp 2 --collective tree \
+		| grep -E '^engine_digest=' > /tmp/llm42_tp_r2
+	cd rust && $(CARGO) run --release --example determinism_audit -- \
+		--tp 4 --collective tree \
+		| grep -E '^engine_digest=' > /tmp/llm42_tp_r4
+	diff -u /tmp/llm42_tp_r1 /tmp/llm42_tp_r2
+	diff -u /tmp/llm42_tp_r1 /tmp/llm42_tp_r4
+	@echo "cross-R engine digests identical (tree collective)"
 
 # Serving-surface integration: stream + cancel + timeout over a real
 # socket, disconnect detection, poisoned-engine lifecycle, abort matrix.

@@ -161,7 +161,119 @@ fn main() {
     if let Some(j) = observability_overhead(&mut rt) {
         sections.push(("observability", j));
     }
+    if let Some(j) = tp_comparison() {
+        sections.push(("tp", j));
+    }
     write_bench_json(sections);
+}
+
+/// Tensor-parallel benchmark: the identical fused deterministic workload
+/// on sharded artifact sets at R = 1, 2, 4 under the tree collective
+/// (its own test-preset sets — `aot::ensure_tp` — so rows are comparable
+/// across R). Reports tok/s, the allreduce count, and allreduces per
+/// committed token — the TP overhead signal (the simulator executes
+/// ranks on one host, so wall-clock rows chart combine overhead, not
+/// real interconnect cost). The engine digest column must be identical
+/// at every R (asserted): rank count is a deployment shape, not part of
+/// the reproducible configuration.
+fn tp_comparison() -> Option<Json> {
+    use llm42::obs::digest_hex;
+    let base =
+        std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let n_reqs = if reduced() { 4 } else { 12 };
+    let run = |degree: usize| -> Option<(f64, u64, u64, String)> {
+        let dir = format!("{base}-tp{degree}-tree");
+        if let Err(e) = llm42::aot::ensure_tp(&dir, degree, "tree") {
+            eprintln!("tp bench skipped: {e}");
+            return None;
+        }
+        let mut rt = match Runtime::load(&dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("tp bench skipped: {e}");
+                return None;
+            }
+        };
+        let cfg = EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 2,
+            verify_window: 16,
+            max_stall_steps: 4,
+            eos_token: u32::MAX, // full budgets: identical committed volume
+            max_step_tokens: 128,
+            ..Default::default()
+        };
+        let mut eng = match Engine::new(&mut rt, cfg) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("tp bench skipped: {e}");
+                return None;
+            }
+        };
+        let _ = eng.warmup();
+        for i in 0..n_reqs {
+            eng.submit(Request {
+                prompt: (0..96).map(|p| 3 + ((p + i as u32 * 13) % 400)).collect(),
+                max_new_tokens: 12,
+                deterministic: true,
+                temperature: 1.0,
+                seed: 100_000 + i as u64,
+                ..Default::default()
+            })
+            .unwrap();
+        }
+        let t0 = llm42::util::now_secs();
+        if let Err(e) = eng.run_to_completion() {
+            eprintln!("tp bench aborted: {e}");
+            return None;
+        }
+        let wall = llm42::util::now_secs() - t0;
+        eng.take_finished();
+        Some((
+            eng.metrics.committed_tokens as f64 / wall.max(1e-9),
+            eng.metrics.committed_tokens,
+            eng.metrics.tp_allreduces,
+            digest_hex(eng.obs.engine_digest()),
+        ))
+    };
+    let mut tab = Table::new(&[
+        "tp_degree",
+        "tok_s",
+        "allreduces",
+        "allreduce_per_tok",
+        "engine_digest",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base_digest = String::new();
+    for degree in [1usize, 2, 4] {
+        let (tok_s, committed, allreduces, digest) = run(degree)?;
+        if degree == 1 {
+            base_digest = digest.clone();
+        }
+        assert_eq!(
+            digest, base_digest,
+            "tp bench: engine digest diverged at R={degree} (tree collective)"
+        );
+        let per_tok = allreduces as f64 / (committed as f64).max(1.0);
+        tab.row(vec![
+            format!("{degree}"),
+            format!("{tok_s:.1}"),
+            format!("{allreduces}"),
+            format!("{per_tok:.1}"),
+            digest.clone(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("tp_degree", Json::num(degree as f64)),
+            ("collective", Json::str("tree")),
+            ("tok_s", Json::num(tok_s)),
+            ("allreduces", Json::num(allreduces as f64)),
+            ("allreduce_per_committed_token", Json::num(per_tok)),
+            ("engine_digest", Json::str(digest)),
+        ]));
+    }
+    println!("== tensor parallel: R=1/2/4, tree collective ==");
+    println!("{}", tab.render());
+    Some(Json::Arr(rows))
 }
 
 /// Observability overhead: the identical deterministic steady workload at

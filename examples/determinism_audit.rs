@@ -1,7 +1,8 @@
 //! Determinism audit: the paper's headline guarantee, demonstrated.
 //!
 //!     cargo run --release --example determinism_audit -- \
-//!         [--verify-policy stall|slack|margin-gate]
+//!         [--verify-policy stall|slack|margin-gate] \
+//!         [--tp R --collective ring|tree|multimem]
 //!
 //! Runs one audited (deterministic) request under three adversarial
 //! co-traffic schedules — solo, a small crowd, and a large bursty crowd —
@@ -27,6 +28,11 @@
 //! bitwise identical under `--verify-policy stall` vs `margin-gate` —
 //! the certificate path may change how many verification forwards run,
 //! never what commits.
+//!
+//! With `--tp R --collective C` the audit runs on a tensor-parallel
+//! sharded artifact set instead: CI invokes it at R = 1, 2, 4 under the
+//! tree collective and diffs the `engine_digest=` lines across rank
+//! counts — the cross-R face of the same determinism contract.
 
 use llm42::obs::{digest_hex, digest_stream};
 use llm42::prelude::*;
@@ -55,12 +61,30 @@ fn main() -> Result<()> {
     let verify_policy = VerifyPolicy::new(VerifyPolicyKind::parse(
         &args.str_or("verify-policy", "stall"),
     )?);
-    let artifacts =
+    let base =
         std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    llm42::aot::ensure(&artifacts)?;
+    let tp = args.usize_or("tp", 0)?;
+    let artifacts = if tp > 0 {
+        // a sharded set per (R, collective) point, generated on demand —
+        // same test preset, so streams are comparable across R
+        let collective = args.str_or("collective", "tree");
+        let dir = format!("{base}-tp{tp}-{collective}");
+        llm42::aot::ensure_tp(&dir, tp, &collective)?;
+        dir
+    } else {
+        llm42::aot::ensure(&base)?;
+        base
+    };
     let mut rt = Runtime::load(&artifacts)?;
     let vocab = rt.dims().vocab;
     println!("verify policy: {}", verify_policy.kind.name());
+    if rt.tp_collective() != "none" {
+        println!(
+            "tensor parallel: {} ranks, {} collective",
+            rt.tp_degree(),
+            rt.tp_collective()
+        );
+    }
 
     let audited = Request {
         prompt: (100..140).collect(),

@@ -46,7 +46,27 @@ pub struct Preset {
     pub rms_eps: f64,
     pub seed: u64,
     pub decode_buckets: &'static [usize],
+    /// Tensor-parallel rank count the set is sharded for (1 = single
+    /// device). Only meaningful when `collective` is non-empty.
+    pub tp_degree: usize,
+    /// Canonical row-parallel K-shard count ([`TP_SHARDS`] when TP is
+    /// enabled, 1 otherwise). Fixed per artifact set — independent of
+    /// `tp_degree` — so position-invariant collectives combine the same
+    /// shard grid at every R.
+    pub tp_shards: usize,
+    /// Allreduce topology (`ring` | `tree` | `multimem`); empty = TP off
+    /// (the manifest and descriptors then carry no tp fields at all and
+    /// are byte-identical to pre-TP sets).
+    pub collective: String,
 }
+
+/// Canonical K-shard count of row-parallel GEMMs in TP artifact sets.
+/// Every rank folds `TP_SHARDS / R` consecutive shards, so the shard grid
+/// (and its bf16 rounding) is identical at every supported R — the
+/// construction that makes tree/multimem combines bitwise invariant
+/// across TP degrees. 8 divides the row-parallel K dims (`q_dim`,
+/// `ffn_hidden`) of both presets.
+pub const TP_SHARDS: usize = 8;
 
 impl Preset {
     pub fn by_name(name: &str) -> Result<Preset> {
@@ -70,6 +90,9 @@ impl Preset {
                 rms_eps: 1e-5,
                 seed: 42,
                 decode_buckets: &[1, 2, 4, 8],
+                tp_degree: 1,
+                tp_shards: 1,
+                collective: String::new(),
             }),
             "tiny" => Ok(Preset {
                 name: "tiny",
@@ -89,6 +112,9 @@ impl Preset {
                 rms_eps: 1e-5,
                 seed: 42,
                 decode_buckets: &[1, 2, 4, 8, 16],
+                tp_degree: 1,
+                tp_shards: 1,
+                collective: String::new(),
             }),
             other => Err(Error::Config(format!(
                 "unknown artifact preset '{other}' (test | tiny)"
@@ -161,7 +187,7 @@ struct ArtifactDef {
 }
 
 fn dims_lines(p: &Preset) -> Vec<(String, String)> {
-    vec![
+    let mut lines = vec![
         ("vocab".into(), p.vocab.to_string()),
         ("d_model".into(), p.d_model.to_string()),
         ("n_layers".into(), p.n_layers.to_string()),
@@ -176,7 +202,16 @@ fn dims_lines(p: &Preset) -> Vec<(String, String)> {
         ("logit_scale".into(), p.logit_scale.to_string()),
         ("rope_theta".into(), p.rope_theta.to_string()),
         ("rms_eps".into(), p.rms_eps.to_string()),
-    ]
+    ];
+    // TP fields ride in every forward-family descriptor so the verify
+    // path's fixed-shape window graphs replay the *same* sharded combine
+    // as the fast path — absent entirely on non-TP sets (byte-stable)
+    if !p.collective.is_empty() {
+        lines.push(("tp_degree".into(), p.tp_degree.to_string()));
+        lines.push(("tp_shards".into(), p.tp_shards.to_string()));
+        lines.push(("collective".into(), p.collective.clone()));
+    }
+    lines
 }
 
 fn forward_def(
@@ -427,6 +462,32 @@ pub fn generate_opts(
     preset_name: &str,
     block_size: Option<usize>,
 ) -> Result<()> {
+    generate_full(dir, preset_name, block_size, None)
+}
+
+/// Like [`generate_opts`] but emitting a tensor-parallel sharded artifact
+/// set: every forward-family descriptor and the manifest carry
+/// `tp_degree` / `tp_shards` / `collective`, so row-parallel GEMMs (WO,
+/// W_DOWN) run the canonical [`TP_SHARDS`]-shard grid combined through
+/// the named collective as an R-rank allreduce — on the fast *and* the
+/// invariant (verify) graphs alike. `tp_degree` of 1 is valid and is the
+/// baseline of the cross-R determinism matrix.
+pub fn generate_tp(
+    dir: impl AsRef<Path>,
+    preset_name: &str,
+    block_size: Option<usize>,
+    tp_degree: usize,
+    collective: &str,
+) -> Result<()> {
+    generate_full(dir, preset_name, block_size, Some((tp_degree, collective)))
+}
+
+fn generate_full(
+    dir: impl AsRef<Path>,
+    preset_name: &str,
+    block_size: Option<usize>,
+    tp: Option<(usize, &str)>,
+) -> Result<()> {
     let mut p = Preset::by_name(preset_name)?;
     if let Some(bs) = block_size {
         p.block_size = bs;
@@ -436,6 +497,48 @@ pub fn generate_opts(
             "block_size {} must be nonzero and divide max_seq {}",
             p.block_size, p.max_seq
         )));
+    }
+    if let Some((r, collective)) = tp {
+        match collective {
+            "ring" | "tree" | "multimem" => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown collective '{other}' (ring | tree | multimem)"
+                )))
+            }
+        }
+        if r == 0 || TP_SHARDS % r != 0 {
+            return Err(Error::Config(format!(
+                "tp degree {r} must divide the canonical shard grid \
+                 ({TP_SHARDS} K-shards)"
+            )));
+        }
+        if p.n_heads % r != 0 {
+            return Err(Error::Config(format!(
+                "tp degree {r} must divide n_heads {}",
+                p.n_heads
+            )));
+        }
+        // GQA rule: either each rank owns whole KV heads, or each KV head
+        // is replicated across an integer number of ranks
+        if p.n_kv_heads % r != 0 && r % p.n_kv_heads != 0 {
+            return Err(Error::Config(format!(
+                "tp degree {r} incompatible with n_kv_heads {} \
+                 (needs whole-head ownership or integer replication)",
+                p.n_kv_heads
+            )));
+        }
+        if p.q_dim() % TP_SHARDS != 0 || p.ffn_hidden % TP_SHARDS != 0 {
+            return Err(Error::Config(format!(
+                "shard grid {TP_SHARDS} must divide the row-parallel K dims \
+                 (q_dim {}, ffn_hidden {})",
+                p.q_dim(),
+                p.ffn_hidden
+            )));
+        }
+        p.tp_degree = r;
+        p.tp_shards = TP_SHARDS;
+        p.collective = collective.to_string();
     }
     let dir = dir.as_ref();
     std::fs::create_dir_all(dir)?;
@@ -510,6 +613,11 @@ fn manifest_json(
     ];
     if let Some(b) = margin_bound {
         model.push(("margin_bound", Json::num(b)));
+    }
+    if !p.collective.is_empty() {
+        model.push(("tp_degree", Json::num(p.tp_degree as f64)));
+        model.push(("tp_shards", Json::num(p.tp_shards as f64)));
+        model.push(("collective", Json::str(p.collective.as_str())));
     }
     Json::obj(vec![
         ("model", Json::obj(model)),
@@ -729,6 +837,64 @@ pub fn ensure(dir: &str) -> Result<()> {
     }
 }
 
+/// True when the manifest at `man` already carries exactly the requested
+/// TP configuration (degree + collective). Non-TP manifests never match.
+fn manifest_matches_tp(man: &Path, tp_degree: usize, collective: &str) -> bool {
+    let text = match std::fs::read_to_string(man) {
+        Ok(t) => t,
+        Err(_) => return false,
+    };
+    Json::parse(&text)
+        .ok()
+        .and_then(|v| {
+            let m = v.req("model").ok()?;
+            let d = m.get("tp_degree")?.as_usize()?;
+            let c = m.get("collective")?.as_str()?.to_string();
+            Some(d == tp_degree && c == collective)
+        })
+        .unwrap_or(false)
+}
+
+/// TP twin of [`ensure`]: lazily generate (or refresh) a `test`-preset
+/// artifact set sharded for `tp_degree` ranks over `collective` at `dir`.
+/// The same ownership rule applies — only self-bootstrapped `test` sets
+/// are ever regenerated in place; foreign artifact dirs are left alone.
+pub fn ensure_tp(dir: &str, tp_degree: usize, collective: &str) -> Result<()> {
+    let _guard = ENSURE_LOCK.lock().map_err(|_| {
+        Error::Engine("artifact ensure lock poisoned".into())
+    })?;
+    let manifest = Path::new(dir).join("manifest.json");
+    if manifest_is_current(&manifest)
+        && manifest_matches_tp(&manifest, tp_degree, collective)
+    {
+        return Ok(());
+    }
+    if manifest.exists() {
+        if manifest_is_ensure_owned(&manifest) {
+            return generate_tp(dir, "test", None, tp_degree, collective);
+        }
+        return Ok(());
+    }
+    let tmp = format!("{dir}.tmp{}", std::process::id());
+    let _ = std::fs::remove_dir_all(&tmp);
+    generate_tp(&tmp, "test", None, tp_degree, collective)?;
+    match std::fs::rename(&tmp, dir) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_dir_all(&tmp);
+            if manifest_is_current(&manifest)
+                && manifest_matches_tp(&manifest, tp_degree, collective)
+            {
+                Ok(())
+            } else if Path::new(dir).exists() {
+                generate_tp(dir, "test", None, tp_degree, collective)
+            } else {
+                Err(Error::Io(e))
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -770,6 +936,78 @@ mod tests {
     #[test]
     fn unknown_preset_rejected() {
         assert!(Preset::by_name("huge").is_err());
+    }
+
+    #[test]
+    fn tp_set_generates_and_round_trips_tp_fields() {
+        let dir = std::env::temp_dir()
+            .join(format!("llm42-aot-tp-{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        generate_tp(&dir, "test", None, 2, "tree").unwrap();
+        let man = crate::manifest::Manifest::load(&dir).unwrap();
+        assert_eq!(man.model.tp_degree, 2);
+        assert_eq!(man.model.tp_shards, TP_SHARDS);
+        assert_eq!(man.model.collective, "tree");
+        // the descriptor contract: every forward-family graph (fast decode,
+        // invariant decode, verify windows, the fused mixed graph) carries
+        // the same tp fields so verify replays the sharded combine
+        for name in ["decode_fast_b1", "decode_inv_b1", "window_inv_g8_t32", "mixed_inv"] {
+            let art = man.artifact(name).expect(name);
+            let text = std::fs::read_to_string(
+                std::path::Path::new(&dir).join(&art.file),
+            )
+            .unwrap();
+            assert!(text.contains("tp_degree 2"), "{name}: {text}");
+            assert!(
+                text.contains(&format!("tp_shards {TP_SHARDS}")),
+                "{name}: {text}"
+            );
+            assert!(text.contains("collective tree"), "{name}: {text}");
+        }
+        // ensure_tp on a matching current set is a no-op (manifest mtime
+        // aside, it must simply return Ok)
+        ensure_tp(&dir, 2, "tree").unwrap();
+        // and re-sharding an ensure-owned set in place flips the fields
+        ensure_tp(&dir, 4, "multimem").unwrap();
+        let man = crate::manifest::Manifest::load(&dir).unwrap();
+        assert_eq!(man.model.tp_degree, 4);
+        assert_eq!(man.model.collective, "multimem");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn non_tp_manifest_carries_no_tp_fields() {
+        let dir = std::env::temp_dir()
+            .join(format!("llm42-aot-notp-{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        generate(&dir, "test").unwrap();
+        let text = std::fs::read_to_string(
+            std::path::Path::new(&dir).join("manifest.json"),
+        )
+        .unwrap();
+        assert!(!text.contains("tp_degree"), "non-TP sets stay byte-stable");
+        assert!(!text.contains("collective"));
+        let man = crate::manifest::Manifest::load(&dir).unwrap();
+        assert_eq!(man.model.tp_degree, 1, "legacy default");
+        assert_eq!(man.model.collective, "none");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_tp_configs_rejected() {
+        let dir = std::env::temp_dir()
+            .join(format!("llm42-aot-badtp-{}", std::process::id()));
+        // unknown collective name
+        assert!(generate_tp(&dir, "test", None, 2, "butterfly").is_err());
+        // degree must divide the canonical shard grid
+        assert!(generate_tp(&dir, "test", None, 3, "tree").is_err());
+        assert!(generate_tp(&dir, "test", None, 0, "tree").is_err());
+        // degree must divide n_heads (test preset has 4; 8 divides the
+        // shard grid but not the head count)
+        assert!(generate_tp(&dir, "test", None, 8, "tree").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -19,6 +19,12 @@
 /// association orders.
 pub fn ring_allreduce(shards: &[Vec<f32>]) -> Vec<f32> {
     let r = shards.len();
+    if r == 0 {
+        return Vec::new();
+    }
+    if r == 1 {
+        return shards[0].clone();
+    }
     let n = shards[0].len();
     let mut out = vec![0f32; n];
     for e in 0..n {
@@ -35,6 +41,12 @@ pub fn ring_allreduce(shards: &[Vec<f32>]) -> Vec<f32> {
 
 /// Fixed binary-tree combine over ranks (same tree for every element).
 pub fn tree_allreduce(shards: &[Vec<f32>]) -> Vec<f32> {
+    if shards.is_empty() {
+        return Vec::new();
+    }
+    if shards.len() == 1 {
+        return shards[0].clone();
+    }
     let n = shards[0].len();
     let mut level: Vec<Vec<f32>> = shards.to_vec();
     while level.len() > 1 {
@@ -60,6 +72,9 @@ pub fn tree_allreduce(shards: &[Vec<f32>]) -> Vec<f32> {
 /// Switch-mediated in-order accumulation (rank 0, 1, 2, ... for every
 /// element).
 pub fn multimem_allreduce(shards: &[Vec<f32>]) -> Vec<f32> {
+    if shards.is_empty() {
+        return Vec::new();
+    }
     let n = shards[0].len();
     let mut out = shards[0].clone();
     for shard in &shards[1..] {
@@ -163,6 +178,68 @@ mod tests {
         let s = shards(1, 16, 4);
         for f in [ring_allreduce, tree_allreduce, multimem_allreduce] {
             assert_eq!(f(&s), s[0]);
+        }
+    }
+
+    #[test]
+    fn degenerate_shard_sets_do_not_panic() {
+        // zero ranks: the R=1-unchanged rule degenerates to an empty sum
+        let empty: Vec<Vec<f32>> = Vec::new();
+        for f in [ring_allreduce, tree_allreduce, multimem_allreduce] {
+            assert!(f(&empty).is_empty());
+        }
+        // one rank with an empty shard: returned unchanged, no indexing
+        let one_empty = vec![Vec::<f32>::new()];
+        for f in [ring_allreduce, tree_allreduce, multimem_allreduce] {
+            assert!(f(&one_empty).is_empty());
+        }
+        // single rank returns the shard bitwise unchanged (no arithmetic)
+        let s = vec![vec![1e30f32, -0.0, f32::MIN_POSITIVE]];
+        for f in [ring_allreduce, tree_allreduce, multimem_allreduce] {
+            let got = f(&s);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                s[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            );
+        }
+    }
+
+    #[test]
+    fn invariance_classes_hold_at_non_power_of_two_rank_counts() {
+        // Table 2's classes are properties of the reduction *order*, not
+        // of power-of-two rank counts: tree (lopsided at odd R) and
+        // multimem stay position-invariant, ring stays variant, for every
+        // R — the property the sharded runtime's R-validation leans on.
+        for ranks in [3usize, 5, 7] {
+            assert!(
+                !is_position_invariant(ring_allreduce, ranks, 64),
+                "ring must be position-variant at R={ranks}"
+            );
+            assert!(
+                is_position_invariant(tree_allreduce, ranks, 64),
+                "tree must be position-invariant at R={ranks}"
+            );
+            assert!(
+                is_position_invariant(multimem_allreduce, ranks, 64),
+                "multimem must be position-invariant at R={ranks}"
+            );
+        }
+    }
+
+    #[test]
+    fn odd_rank_counts_still_sum_correctly() {
+        for ranks in [3usize, 5, 7] {
+            let s = shards(ranks, 32, ranks as u64);
+            let want: Vec<f32> = (0..32)
+                .map(|e| (0..ranks).map(|r| s[r][e] as f64).sum::<f64>() as f32)
+                .collect();
+            for f in [ring_allreduce, tree_allreduce, multimem_allreduce] {
+                let got = f(&s);
+                assert_eq!(got.len(), 32);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-4, "R={ranks}: {g} vs {w}");
+                }
+            }
         }
     }
 }

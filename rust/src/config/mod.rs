@@ -21,6 +21,8 @@
 //!   "max_step_tokens": 0,
 //!   "request_timeout_ms": 0,
 //!   "threads": 0,
+//!   "tp": 0,
+//!   "collective": "",
 //!   "obs": "counters",
 //!   "trace_out": "",
 //!   "server": { "addr": "127.0.0.1:4242" }
@@ -50,7 +52,13 @@
 //! "timeout"` and their KV reclaimed. `threads` (0 = auto: the
 //! `LLM42_THREADS` env, else available parallelism) sets the simulator
 //! worker-thread count; it changes wall-clock only — committed streams
-//! are bitwise identical at any thread count. `obs` (`off` | `counters`
+//! are bitwise identical at any thread count. `tp` (0 = accept the
+//! artifact set's) asserts the tensor-parallel degree the artifact set
+//! was sharded for, and `collective` ("" = accept) its allreduce
+//! topology — like `block_size`, TP geometry is baked into the compiled
+//! graphs at gen-artifacts time, so these are startup assertions, not
+//! runtime reshards; under `tree`/`multimem` committed streams are
+//! bitwise identical at every supported degree. `obs` (`off` | `counters`
 //! | `events`, default `off`) sets the observability level: `counters`
 //! adds latency histograms and rollback forensics, `events` adds the
 //! bounded step-event journal served by `{"cmd": "events"}`. A non-empty
@@ -124,6 +132,12 @@ impl AppConfig {
         if let Some(t) = v.get("threads").and_then(|x| x.as_usize()) {
             cfg.engine.threads = t;
         }
+        if let Some(d) = v.get("tp").and_then(|x| x.as_usize()) {
+            cfg.engine.tp_degree = d;
+        }
+        if let Some(c) = v.get("collective").and_then(|x| x.as_str()) {
+            cfg.engine.collective = c.to_string();
+        }
         if let Some(o) = v.get("obs").and_then(|x| x.as_str()) {
             cfg.engine.obs.level = ObsLevel::parse(o)?;
         }
@@ -149,7 +163,8 @@ impl AppConfig {
     /// `--verify-policy`, `--group`, `--window`, `--artifacts`,
     /// `--addr`, `--max-stall`, `--eos`,
     /// `--block-size`, `--prefix-cache true|false`, `--max-step-tokens`,
-    /// `--threads`, `--obs off|counters|events`, `--trace-out PATH`).
+    /// `--threads`, `--tp`, `--collective`,
+    /// `--obs off|counters|events`, `--trace-out PATH`).
     pub fn apply_args(mut self, args: &Args) -> Result<AppConfig> {
         if let Some(m) = args.get("mode") {
             self.engine.mode = Mode::parse(m)?;
@@ -175,6 +190,10 @@ impl AppConfig {
         self.engine.request_timeout_ms =
             args.f64_or("request-timeout-ms", self.engine.request_timeout_ms)?;
         self.engine.threads = args.usize_or("threads", self.engine.threads)?;
+        self.engine.tp_degree = args.usize_or("tp", self.engine.tp_degree)?;
+        if let Some(c) = args.get("collective") {
+            self.engine.collective = c.to_string();
+        }
         if let Some(o) = args.get("obs") {
             self.engine.obs.level = ObsLevel::parse(o)?;
         }
@@ -203,8 +222,20 @@ impl AppConfig {
                 "request_timeout_ms must be a non-negative number (0 = off)".into(),
             ));
         }
-        // a nonzero block_size is only a *request*; the engine checks it
-        // against the artifact set's baked-in page size at startup
+        if !self.engine.collective.is_empty()
+            && !matches!(
+                self.engine.collective.as_str(),
+                "ring" | "tree" | "multimem"
+            )
+        {
+            return Err(Error::Config(format!(
+                "unknown collective '{}' (ring | tree | multimem)",
+                self.engine.collective
+            )));
+        }
+        // nonzero block_size / tp / non-empty collective are only
+        // *requests*; the engine checks them against the artifact set's
+        // baked-in geometry at startup
         Ok(())
     }
 
@@ -348,6 +379,23 @@ mod tests {
         assert_eq!(d.engine.obs.trace_out, None);
         assert!(AppConfig::from_json(r#"{"obs": "wat"}"#).is_err());
         assert!(AppConfig::resolve(&args("--obs loud")).is_err());
+    }
+
+    #[test]
+    fn tp_and_collective_from_file_and_flags() {
+        let c = AppConfig::from_json(r#"{"tp": 2, "collective": "tree"}"#)
+            .unwrap();
+        assert_eq!(c.engine.tp_degree, 2);
+        assert_eq!(c.engine.collective, "tree");
+        let c = c.apply_args(&args("--tp 4 --collective multimem")).unwrap();
+        assert_eq!(c.engine.tp_degree, 4);
+        assert_eq!(c.engine.collective, "multimem");
+        // defaults: accept whatever the artifact set was sharded for
+        let d = AppConfig::resolve(&args("")).unwrap();
+        assert_eq!(d.engine.tp_degree, 0);
+        assert!(d.engine.collective.is_empty());
+        assert!(AppConfig::from_json(r#"{"collective": "butterfly"}"#).is_err());
+        assert!(AppConfig::resolve(&args("--collective wat")).is_err());
     }
 
     #[test]

@@ -190,6 +190,14 @@ pub struct EngineConfig {
     /// exercise the debug replay assertion, `Some(f32::INFINITY)` makes
     /// the gate certify nothing (the adversarial low-margin benchmark).
     pub margin_bound_override: Option<f32>,
+    /// Expected tensor-parallel degree. 0 = take whatever the artifact
+    /// set was sharded for (like `block_size`, TP geometry is baked into
+    /// the compiled graphs at gen-artifacts time); a nonzero value is an
+    /// assertion that must match the runtime's loaded degree.
+    pub tp_degree: usize,
+    /// Expected TP collective (`ring` | `tree` | `multimem`). Empty =
+    /// accept the artifact set's; non-empty must match.
+    pub collective: String,
 }
 
 impl Default for EngineConfig {
@@ -210,6 +218,8 @@ impl Default for EngineConfig {
             obs: ObsConfig::default(),
             verify_policy: VerifyPolicy::default(),
             margin_bound_override: None,
+            tp_degree: 0,
+            collective: String::new(),
         }
     }
 }
@@ -367,6 +377,30 @@ impl<'rt> Engine<'rt> {
                 cfg.block_size, dims.block_size, cfg.block_size
             )));
         }
+        // like block_size, TP geometry is baked into the compiled graphs:
+        // a nonzero --tp / non-empty --collective is an assertion against
+        // the loaded artifact set, not a runtime reshard
+        if cfg.tp_degree != 0 && cfg.tp_degree != rt.tp_degree() {
+            return Err(Error::Config(format!(
+                "tp degree {} does not match the artifact set's {} — the \
+                 shard layout is baked into the compiled graphs; regenerate \
+                 artifacts with `gen-artifacts --tp {}`",
+                cfg.tp_degree,
+                rt.tp_degree(),
+                cfg.tp_degree
+            )));
+        }
+        if !cfg.collective.is_empty() && cfg.collective != rt.tp_collective() {
+            return Err(Error::Config(format!(
+                "collective '{}' does not match the artifact set's '{}' — \
+                 regenerate artifacts with `gen-artifacts --tp {} \
+                 --collective {}`",
+                cfg.collective,
+                rt.tp_collective(),
+                rt.tp_degree().max(1),
+                cfg.collective
+            )));
+        }
         let kv = KvManager::new(
             dims.num_pages(),
             dims.block_size,
@@ -382,6 +416,7 @@ impl<'rt> Engine<'rt> {
         rt.set_sim_threads(cfg.threads);
         let metrics = EngineMetrics {
             sim_threads: rt.sim_threads() as u64,
+            tp_degree: rt.tp_degree() as u64,
             ..Default::default()
         };
         let policy = cfg.policy.build();
@@ -712,6 +747,7 @@ impl<'rt> Engine<'rt> {
         // forwards over wall x threads (the knob can change between steps,
         // so the gauge is refreshed too)
         let busy0 = self.rt.sim_busy_ns();
+        let ar0 = self.rt.tp_allreduces();
         let t0 = Instant::now();
         let out = self.step_rounds(&mut vs);
         let wall = t0.elapsed().as_secs_f64();
@@ -719,6 +755,8 @@ impl<'rt> Engine<'rt> {
         self.metrics.sim_busy_secs +=
             self.rt.sim_busy_ns().wrapping_sub(busy0) as f64 * 1e-9;
         self.metrics.sim_threads = self.rt.sim_threads() as u64;
+        self.metrics.tp_allreduces +=
+            self.rt.tp_allreduces().wrapping_sub(ar0);
         self.view_scratch = vs;
         if let Ok(kind) = &out {
             self.obs.on_step_end(self.metrics.steps, kind.as_str(), wall);

@@ -50,6 +50,21 @@
 //! seed — stale KV beyond the committed frontier is never truncated, only
 //! overwritten — COW merely guarantees the overwrite lands in private
 //! memory when the stale page happens to be shared.
+//!
+//! # Tensor parallelism
+//!
+//! Under a sharded runtime (`tp_degree > 1`) the KV pool is **head-sharded
+//! across ranks**: each rank holds the `kv_heads` slice of every page that
+//! [`crate::runtime::RankShard`] assigns it (whole KV heads, or one
+//! replicated head under GQA when R > `n_kv_heads`). The *block tables*
+//! managed here are rank-shared verbatim — a page id means "this page, my
+//! head slice" on every rank — because per-head attention arithmetic never
+//! crosses a head boundary and is therefore identical wherever the head
+//! lives. That placement-invisibility is why admission, COW, prefix
+//! sharing, and rollback need no TP-awareness at all: one logical table
+//! drives R physical shards, and the committed KV a table addresses is
+//! bitwise the same at every supported degree (the cross-R contract
+//! pinned by `tests/tp.rs`).
 
 pub mod pool;
 pub mod prefix;

@@ -143,6 +143,12 @@ pub struct EngineMetrics {
     pub finished_cancelled: u64,
     pub finished_timeout: u64,
     pub finished_error: u64,
+    /// tensor-parallel degree the runtime executes as (gauge, set at
+    /// engine construction; 1 = single device)
+    pub tp_degree: u64,
+    /// cumulative TP allreduce combines inside `step()` (one per
+    /// row-parallel sharded GEMM call; 0 forever on non-TP artifact sets)
+    pub tp_allreduces: u64,
 }
 
 /// Aggregate latency of one priority class.

@@ -21,6 +21,7 @@ USAGE:
                      [--policy prefill-first|deadline|fair-share]
   llm42 experiments  <fig4|fig5|fig6|fig9|fig10|fig11|fig12|table2|all> [opts]
   llm42 gen-artifacts [--out artifacts] [--preset test|tiny] [--block-size N]
+                     [--tp R --collective ring|tree|multimem]
   llm42 info         [--artifacts artifacts]
 
 COMMON:
@@ -51,6 +52,15 @@ COMMON:
                      LLM42_THREADS env, else available parallelism);
                      affects wall-clock only — committed streams are
                      bitwise identical at any thread count
+  --tp R             tensor-parallel degree. On gen-artifacts: shard the
+                     emitted set for R ranks (requires --collective). On
+                     serve/offline: assert the artifact set's degree
+                     (0 = accept whatever it was sharded for); committed
+                     streams are bitwise identical across R under the
+                     tree and multimem collectives
+  --collective C     TP allreduce topology: ring | tree | multimem
+                     (tree/multimem are position-invariant and keep the
+                     cross-R determinism contract; ring does not)
   --obs L            observability level: off (default), counters
                      (latency histograms + rollback forensics), events
                      (+ bounded step-event journal); recording never
@@ -138,8 +148,23 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 0 => None,
                 b => Some(b),
             };
-            llm42::aot::generate_opts(&out, &preset, block_size)?;
-            println!("wrote {preset} artifact set to {out}/");
+            let tp = args.usize_or("tp", 0)?;
+            if tp > 0 {
+                let collective = args.str_or("collective", "tree");
+                llm42::aot::generate_tp(&out, &preset, block_size, tp, &collective)?;
+                println!(
+                    "wrote {preset} artifact set (tp={tp}, {collective}) to {out}/"
+                );
+            } else {
+                if args.get("collective").is_some() {
+                    return Err(Error::Config(
+                        "--collective needs --tp R (a sharded artifact set)"
+                            .into(),
+                    ));
+                }
+                llm42::aot::generate_opts(&out, &preset, block_size)?;
+                println!("wrote {preset} artifact set to {out}/");
+            }
             Ok(())
         }
         "info" => {
@@ -157,6 +182,14 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 man.model.num_pages(),
                 man.model.block_size
             );
+            if man.model.collective != "none" {
+                println!(
+                    "tensor-parallel: {} ranks over {} K-shards, {} collective",
+                    man.model.tp_degree,
+                    man.model.tp_shards,
+                    man.model.collective
+                );
+            }
             println!("{} artifacts:", man.artifacts.len());
             for a in &man.artifacts {
                 println!("  {:30} kind={:?} g={} t={}", a.name, a.kind, a.g, a.t);

@@ -35,6 +35,16 @@ pub struct ModelDims {
     /// sets generated before calibration existed (the gate then refuses
     /// to run — re-run `make artifacts`).
     pub margin_bound: f64,
+    /// Tensor-parallel rank count the artifact set was sharded for.
+    /// 1 (the default on non-TP sets) means single-device execution.
+    pub tp_degree: usize,
+    /// Canonical K-shard count of row-parallel GEMMs under TP — fixed
+    /// per artifact set so position-invariant collectives see the same
+    /// shard grid at every rank count. 1 on non-TP sets.
+    pub tp_shards: usize,
+    /// Allreduce topology combining TP row-shard partials
+    /// (`ring` | `tree` | `multimem`); `none` on non-TP sets.
+    pub collective: String,
 }
 
 impl ModelDims {
@@ -176,6 +186,14 @@ impl Manifest {
                 .get("margin_bound")
                 .and_then(|x| x.as_f64())
                 .unwrap_or(f64::NAN),
+            // absent on non-TP manifests: single-device defaults
+            tp_degree: m.get("tp_degree").and_then(|x| x.as_usize()).unwrap_or(1),
+            tp_shards: m.get("tp_shards").and_then(|x| x.as_usize()).unwrap_or(1),
+            collective: m
+                .get("collective")
+                .and_then(|x| x.as_str())
+                .unwrap_or("none")
+                .to_string(),
         };
 
         let s = v.req("state")?;
@@ -268,6 +286,57 @@ impl Manifest {
             if self.artifact("copy_pages").is_none() {
                 return Err(Error::Manifest(
                     "paged manifest missing copy_pages artifact; re-run `make artifacts`"
+                        .into(),
+                ));
+            }
+        }
+        if m.tp_degree == 0 || m.tp_shards == 0 {
+            return Err(Error::Manifest(
+                "tp_degree/tp_shards must be >= 1".into(),
+            ));
+        }
+        match m.collective.as_str() {
+            "none" | "ring" | "tree" | "multimem" => {}
+            other => {
+                return Err(Error::Manifest(format!(
+                    "unknown collective '{other}' (expected none|ring|tree|multimem)"
+                )))
+            }
+        }
+        if m.tp_degree > 1 || m.tp_shards > 1 {
+            if !m.tp_shards.is_power_of_two() {
+                return Err(Error::Manifest(format!(
+                    "tp_shards {} must be a power of two (the tree collective \
+                     combines the canonical shard grid pairwise)",
+                    m.tp_shards
+                )));
+            }
+            if m.tp_shards % m.tp_degree != 0 {
+                return Err(Error::Manifest(format!(
+                    "tp_degree {} must divide tp_shards {} (each rank owns an \
+                     equal run of consecutive K-shards)",
+                    m.tp_degree, m.tp_shards
+                )));
+            }
+            if m.n_heads % m.tp_degree != 0 {
+                return Err(Error::Manifest(format!(
+                    "tp_degree {} must divide n_heads {} \
+                     (attention is head-sharded across ranks)",
+                    m.tp_degree, m.n_heads
+                )));
+            }
+            // GQA: ranks either own whole KV heads or replicate one
+            if m.n_kv_heads % m.tp_degree != 0 && m.tp_degree % m.n_kv_heads != 0
+            {
+                return Err(Error::Manifest(format!(
+                    "tp_degree {} incompatible with n_kv_heads {} (needs \
+                     whole-head ownership or integer replication)",
+                    m.tp_degree, m.n_kv_heads
+                )));
+            }
+            if m.collective == "none" {
+                return Err(Error::Manifest(
+                    "TP manifest must name its collective (ring|tree|multimem)"
                         .into(),
                 ));
             }
@@ -378,6 +447,9 @@ mod tests {
             block_size: 16,
             logit_scale: 6.0,
             margin_bound: 0.25,
+            tp_degree: 1,
+            tp_shards: 1,
+            collective: "none".into(),
         };
         assert_eq!(m.kv_dim(), 32);
         assert_eq!(m.user_slots(), 4);

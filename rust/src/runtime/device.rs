@@ -1,0 +1,481 @@
+//! The [`Device`] abstraction and its single-device instance.
+//!
+//! The engine talks to execution hardware through the object-safe
+//! [`Device`] trait; [`SimDevice`] is the R=1 instance wrapping one PJRT
+//! client over the vendored simulator. The tensor-parallel
+//! [`super::ShardedRuntime`] implements the same trait by splitting GEMMs
+//! across ranks and combining partials through a collective, which is what
+//! lets the engine, the verify path, and every experiment harness run
+//! unchanged at any TP degree.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use xla::{
+    HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};
+
+use crate::error::{Error, Result};
+use crate::manifest::{ArtifactEntry, Manifest};
+
+/// Timing counters for the §Perf breakdown (per-process totals).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeCounters {
+    pub forward_calls: u64,
+    pub forward_secs: f64,
+    pub extract_calls: u64,
+    pub extract_secs: f64,
+    pub upload_secs: f64,
+    pub compile_calls: u64,
+    pub compile_secs: f64,
+}
+
+/// One execution device (or device group) able to run a compiled artifact
+/// set end to end. Object-safe: the [`super::Runtime`] façade holds a
+/// `Box<dyn Device>` and the engine never learns which instance it got.
+///
+/// The contract every instance must keep: for a fixed artifact set and a
+/// fixed call sequence, all outputs (state evolution and extracted logits)
+/// are **bitwise deterministic** — the property the engine's
+/// verify-rollback machinery is built on.
+pub trait Device {
+    /// Per-process timing counters snapshot.
+    fn counters(&self) -> RuntimeCounters;
+    /// Zero the KV pool + logits region (start of a fresh engine run).
+    fn reset_state(&mut self) -> Result<()>;
+    /// Pre-compile a set of artifacts.
+    fn warmup(&self, names: &[&str]) -> Result<()>;
+    /// Run one forward graph (see [`super::Runtime::forward`]).
+    fn forward(
+        &mut self,
+        artifact: &str,
+        tokens: &[i32],
+        slots: &[i32],
+        start_pos: &[i32],
+    ) -> Result<()>;
+    /// Run the ragged fused forward (see [`super::Runtime::forward_mixed`]).
+    fn forward_mixed(
+        &mut self,
+        tokens: &[i32],
+        counts: &[i32],
+        tables: &[i32],
+        start_pos: &[i32],
+    ) -> Result<()>;
+    /// Device-side KV page copy (see [`super::Runtime::copy_pages`]).
+    fn copy_pages(&mut self, src: &[i32], dst: &[i32]) -> Result<()>;
+    /// Read the first `rows` logits rows back to the host.
+    fn extract_logits(&mut self, rows: usize) -> Result<&[f32]>;
+    /// Run a standalone micro artifact; returns execute wall time.
+    fn run_micro(
+        &self,
+        artifact: &str,
+        x: (&[f32], &[usize]),
+        w: (&[f32], &[usize]),
+    ) -> Result<f64>;
+    /// Like `run_micro` but returning the result values.
+    fn run_micro_values(
+        &self,
+        artifact: &str,
+        x: (&[f32], &[usize]),
+        w: (&[f32], &[usize]),
+    ) -> Result<Vec<f32>>;
+    /// Tensor-parallel rank count this device executes as (1 = single).
+    fn tp_degree(&self) -> usize {
+        1
+    }
+    /// Collective topology combining TP partials (`none` when R=1-only).
+    fn tp_collective(&self) -> &str {
+        "none"
+    }
+    /// Cumulative TP allreduce count since process start (monotonic;
+    /// sample deltas around a step). 0 forever on non-TP devices.
+    fn tp_allreduces(&self) -> u64 {
+        0
+    }
+}
+
+/// The single-device PJRT runtime (R=1): loads AOT artifacts and runs
+/// them on the request path.
+///
+/// Wraps the `xla` crate (PJRT C API): `HloModuleProto::from_text_file` ->
+/// `XlaComputation::from_proto` -> `PjRtClient::compile` -> `execute_b`.
+///
+/// Hot-path invariants established by the build-time spike (DESIGN.md §9):
+///
+/// * Forward graphs take the flat f32 *state* array as parameter 0 with
+///   `input_output_alias` — PJRT donates the buffer, so the multi-MB KV
+///   pool never copies across the host boundary. After each execute the
+///   old handle is dead and the output buffer becomes the new state.
+/// * `CopyRawToHost` is not implemented by the CPU PJRT client, so logits
+///   are read back via tiny compiled `extract_r{n}` graphs that slice the
+///   logits region (only `n * vocab` f32 cross the boundary).
+/// * Executables are compiled lazily on first use and cached for the
+///   process lifetime; experiment harnesses reuse one `Runtime` across
+///   engine configurations.
+pub struct SimDevice {
+    client: PjRtClient,
+    manifest: Manifest,
+    /// weight buffers in manifest order, uploaded once and reused
+    weights: Vec<PjRtBuffer>,
+    executables: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// the threaded state buffer (None only transiently during execute)
+    state: Option<PjRtBuffer>,
+    counters: RefCell<RuntimeCounters>,
+    /// reusable host-side scratch for logits extraction
+    logits_host: Vec<f32>,
+}
+
+impl SimDevice {
+    /// Upload weights and create a zeroed state buffer for an
+    /// already-loaded manifest.
+    pub fn new(manifest: Manifest) -> Result<SimDevice> {
+        let client = PjRtClient::cpu()?;
+        let t0 = Instant::now();
+        let mut weights = Vec::new();
+        for (entry, data) in manifest.load_weights()? {
+            let buf =
+                client.buffer_from_host_buffer(&data, &entry.shape, None)?;
+            weights.push(buf);
+        }
+        let upload_secs = t0.elapsed().as_secs_f64();
+        let mut dev = SimDevice {
+            client,
+            manifest,
+            weights,
+            executables: RefCell::new(HashMap::new()),
+            state: None,
+            counters: RefCell::new(RuntimeCounters {
+                upload_secs,
+                ..Default::default()
+            }),
+            logits_host: Vec::new(),
+        };
+        dev.reset_state()?;
+        Ok(dev)
+    }
+
+    fn get_exe(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.require(name)?.clone();
+        let exe = self.compile_entry(&entry)?;
+        let exe = Rc::new(exe);
+        self.executables
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn compile_entry(
+        &self,
+        entry: &ArtifactEntry,
+    ) -> Result<PjRtLoadedExecutable> {
+        let path = self.manifest.hlo_path(entry);
+        let t0 = Instant::now();
+        let proto =
+            HloModuleProto::from_text_file(path.to_str().ok_or_else(|| {
+                Error::Manifest(format!("non-utf8 path {}", path.display()))
+            })?)?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let mut c = self.counters.borrow_mut();
+        c.compile_calls += 1;
+        c.compile_secs += t0.elapsed().as_secs_f64();
+        Ok(exe)
+    }
+}
+
+impl Device for SimDevice {
+    fn counters(&self) -> RuntimeCounters {
+        self.counters.borrow().clone()
+    }
+
+    fn reset_state(&mut self) -> Result<()> {
+        let n = self.manifest.state.total_floats;
+        let zeros = vec![0f32; n];
+        let t0 = Instant::now();
+        self.state =
+            Some(self.client.buffer_from_host_buffer(&zeros, &[n], None)?);
+        self.counters.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.get_exe(n)?;
+        }
+        Ok(())
+    }
+
+    fn forward(
+        &mut self,
+        artifact: &str,
+        tokens: &[i32],
+        slots: &[i32],
+        start_pos: &[i32],
+    ) -> Result<()> {
+        let entry = self.manifest.require(artifact)?;
+        let bpl = self.manifest.model.blocks_per_lane();
+        let slots_ok =
+            slots.len() == entry.g || (bpl > 0 && slots.len() == entry.g * bpl);
+        if tokens.len() != entry.g * entry.t
+            || !slots_ok
+            || start_pos.len() != entry.g
+        {
+            return Err(Error::Engine(format!(
+                "forward {artifact}: shape mismatch (tokens {}, slots {}, pos {}) \
+                 vs (g={}, t={}, blocks/lane={bpl})",
+                tokens.len(),
+                slots.len(),
+                start_pos.len(),
+                entry.g,
+                entry.t
+            )));
+        }
+        let exe = self.get_exe(artifact)?;
+
+        let t0 = Instant::now();
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(tokens, &[tokens.len()], None)?;
+        let slot_buf = self
+            .client
+            .buffer_from_host_buffer(slots, &[slots.len()], None)?;
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer(start_pos, &[start_pos.len()], None)?;
+        self.counters.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
+
+        let state = self
+            .state
+            .take()
+            .ok_or_else(|| Error::Engine("state buffer missing".into()))?;
+        let mut args: Vec<&PjRtBuffer> =
+            Vec::with_capacity(4 + self.weights.len());
+        args.push(&state);
+        args.push(&tok_buf);
+        args.push(&slot_buf);
+        args.push(&pos_buf);
+        for w in &self.weights {
+            args.push(w);
+        }
+
+        let t0 = Instant::now();
+        let mut out = exe.execute_b(&args)?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut c = self.counters.borrow_mut();
+            c.forward_calls += 1;
+            c.forward_secs += dt;
+        }
+        // single-replica, single (non-tuple) output: the new state
+        let replica = out
+            .pop()
+            .ok_or_else(|| Error::Engine("no replica output".into()))?;
+        let new_state = replica
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Engine("no output buffer".into()))?;
+        // old `state` was donated; dropping the dead handle is safe
+        drop(state);
+        self.state = Some(new_state);
+        Ok(())
+    }
+
+    fn forward_mixed(
+        &mut self,
+        tokens: &[i32],
+        counts: &[i32],
+        tables: &[i32],
+        start_pos: &[i32],
+    ) -> Result<()> {
+        let name = super::Runtime::mixed_artifact();
+        let entry = self.manifest.require(name)?;
+        let bpl = self.manifest.model.blocks_per_lane();
+        let lanes = counts.len();
+        let total: usize = counts.iter().map(|&c| c.max(0) as usize).sum();
+        if lanes == 0
+            || start_pos.len() != lanes
+            || bpl == 0
+            || tables.len() != lanes * bpl
+            || total != tokens.len()
+            || total > entry.g
+        {
+            return Err(Error::Engine(format!(
+                "forward {name}: shape mismatch ({lanes} lanes, {} tokens, {} \
+                 table entries, {} positions) vs (capacity {}, blocks/lane {bpl})",
+                tokens.len(),
+                tables.len(),
+                start_pos.len(),
+                entry.g
+            )));
+        }
+        let exe = self.get_exe(name)?;
+
+        let t0 = Instant::now();
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(tokens, &[tokens.len()], None)?;
+        let cnt_buf = self
+            .client
+            .buffer_from_host_buffer(counts, &[counts.len()], None)?;
+        let tab_buf = self
+            .client
+            .buffer_from_host_buffer(tables, &[tables.len()], None)?;
+        let pos_buf = self
+            .client
+            .buffer_from_host_buffer(start_pos, &[start_pos.len()], None)?;
+        self.counters.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
+
+        let state = self
+            .state
+            .take()
+            .ok_or_else(|| Error::Engine("state buffer missing".into()))?;
+        let mut args: Vec<&PjRtBuffer> =
+            Vec::with_capacity(5 + self.weights.len());
+        args.push(&state);
+        args.push(&tok_buf);
+        args.push(&cnt_buf);
+        args.push(&tab_buf);
+        args.push(&pos_buf);
+        for w in &self.weights {
+            args.push(w);
+        }
+
+        let t0 = Instant::now();
+        let mut out = exe.execute_b(&args)?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut c = self.counters.borrow_mut();
+            c.forward_calls += 1;
+            c.forward_secs += dt;
+        }
+        let replica = out
+            .pop()
+            .ok_or_else(|| Error::Engine("no replica output".into()))?;
+        let new_state = replica
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Engine("no output buffer".into()))?;
+        drop(state);
+        self.state = Some(new_state);
+        Ok(())
+    }
+
+    fn copy_pages(&mut self, src: &[i32], dst: &[i32]) -> Result<()> {
+        if src.len() != dst.len() {
+            return Err(Error::Engine(format!(
+                "copy_pages src/dst length mismatch: {} vs {}",
+                src.len(),
+                dst.len()
+            )));
+        }
+        if src.is_empty() {
+            return Ok(());
+        }
+        let exe = self.get_exe("copy_pages")?;
+        let t0 = Instant::now();
+        let src_buf = self
+            .client
+            .buffer_from_host_buffer(src, &[src.len()], None)?;
+        let dst_buf = self
+            .client
+            .buffer_from_host_buffer(dst, &[dst.len()], None)?;
+        self.counters.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
+
+        let state = self
+            .state
+            .take()
+            .ok_or_else(|| Error::Engine("state buffer missing".into()))?;
+        let t0 = Instant::now();
+        let mut out = exe.execute_b(&[&state, &src_buf, &dst_buf])?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut c = self.counters.borrow_mut();
+            c.forward_calls += 1;
+            c.forward_secs += dt;
+        }
+        let replica = out
+            .pop()
+            .ok_or_else(|| Error::Engine("no replica output".into()))?;
+        let new_state = replica
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Engine("no output buffer".into()))?;
+        drop(state);
+        self.state = Some(new_state);
+        Ok(())
+    }
+
+    fn extract_logits(&mut self, rows: usize) -> Result<&[f32]> {
+        let vocab = self.manifest.state.vocab;
+        let tier = self
+            .manifest
+            .extract_tiers()
+            .into_iter()
+            .find(|&t| t >= rows)
+            .ok_or_else(|| {
+                Error::Engine(format!("no extract tier covers {rows} rows"))
+            })?;
+        let exe = self.get_exe(&format!("extract_r{tier}"))?;
+        let state = self
+            .state
+            .as_ref()
+            .ok_or_else(|| Error::Engine("state buffer missing".into()))?;
+        let t0 = Instant::now();
+        let mut out = exe.execute_b(&[state])?;
+        let buf = out
+            .pop()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| Error::Engine("extract produced no output".into()))?;
+        let lit = buf.to_literal_sync()?;
+        self.logits_host.resize(tier * vocab, 0.0);
+        lit.copy_raw_to(&mut self.logits_host)
+            .map_err(|e| Error::Xla(e.to_string()))?;
+        let mut c = self.counters.borrow_mut();
+        c.extract_calls += 1;
+        c.extract_secs += t0.elapsed().as_secs_f64();
+        Ok(&self.logits_host[..rows * vocab])
+    }
+
+    fn run_micro(
+        &self,
+        artifact: &str,
+        x: (&[f32], &[usize]),
+        w: (&[f32], &[usize]),
+    ) -> Result<f64> {
+        let exe = self.get_exe(artifact)?;
+        let xb = self.client.buffer_from_host_buffer(x.0, x.1, None)?;
+        let wb = self.client.buffer_from_host_buffer(w.0, w.1, None)?;
+        let t0 = Instant::now();
+        let out = exe.execute_b(&[&xb, &wb])?;
+        let dt = t0.elapsed().as_secs_f64();
+        drop(out);
+        Ok(dt)
+    }
+
+    fn run_micro_values(
+        &self,
+        artifact: &str,
+        x: (&[f32], &[usize]),
+        w: (&[f32], &[usize]),
+    ) -> Result<Vec<f32>> {
+        let exe = self.get_exe(artifact)?;
+        let xb = self.client.buffer_from_host_buffer(x.0, x.1, None)?;
+        let wb = self.client.buffer_from_host_buffer(w.0, w.1, None)?;
+        let mut out = exe.execute_b(&[&xb, &wb])?;
+        let buf = out
+            .pop()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| Error::Engine("micro produced no output".into()))?;
+        let lit = buf.to_literal_sync()?;
+        let n = lit.element_count();
+        let mut v = vec![0f32; n];
+        lit.copy_raw_to(&mut v).map_err(|e| Error::Xla(e.to_string()))?;
+        Ok(v)
+    }
+}

@@ -1,86 +1,49 @@
-//! PJRT runtime: loads AOT artifacts and runs them on the request path.
+//! Runtime layer: the [`Device`] abstraction and the [`Runtime`] façade
+//! the engine drives.
 //!
-//! Wraps the `xla` crate (PJRT C API): `HloModuleProto::from_text_file` ->
-//! `XlaComputation::from_proto` -> `PjRtClient::compile` -> `execute_b`.
-//!
-//! Hot-path invariants established by the build-time spike (DESIGN.md §9):
-//!
-//! * Forward graphs take the flat f32 *state* array as parameter 0 with
-//!   `input_output_alias` — PJRT donates the buffer, so the multi-MB KV
-//!   pool never copies across the host boundary. After each execute the old
-//!   handle is dead and the output buffer becomes the new state.
-//! * `CopyRawToHost` is not implemented by the CPU PJRT client, so logits
-//!   are read back via tiny compiled `extract_r{n}` graphs that slice the
-//!   logits region (only `n * vocab` f32 cross the boundary).
-//! * Executables are compiled lazily on first use and cached for the
-//!   process lifetime; experiment harnesses reuse one `Runtime` across
-//!   engine configurations.
+//! [`Runtime::load`] inspects the manifest and picks the concrete device:
+//! a plain [`SimDevice`] (single simulated device, R=1) for ordinary
+//! artifact sets, or a [`ShardedRuntime`] (tensor-parallel device group)
+//! when the manifest carries `tp_degree`/`collective` fields. Either way
+//! the engine sees the same API — forward graphs with donated state
+//! buffers, logits extraction through compiled tiers, lazily compiled and
+//! cached executables (see `device.rs` for the hot-path invariants).
 
-use std::cell::RefCell;
-use std::collections::HashMap;
+mod device;
+mod sharded;
+
+pub use device::{Device, RuntimeCounters, SimDevice};
+pub use sharded::{RankShard, ShardedRuntime};
+
 use std::path::Path;
-use std::time::Instant;
 
-use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use crate::error::Result;
+use crate::manifest::Manifest;
 
-use crate::error::{Error, Result};
-use crate::manifest::{ArtifactEntry, Manifest};
-
-/// Timing counters for the §Perf breakdown (per-process totals).
-#[derive(Debug, Default, Clone)]
-pub struct RuntimeCounters {
-    pub forward_calls: u64,
-    pub forward_secs: f64,
-    pub extract_calls: u64,
-    pub extract_secs: f64,
-    pub upload_secs: f64,
-    pub compile_calls: u64,
-    pub compile_secs: f64,
-}
-
+/// The engine-facing runtime: a manifest plus the [`Device`] executing it.
+/// All execution methods delegate; the concrete device is chosen once at
+/// load time from the manifest's TP fields.
 pub struct Runtime {
-    client: PjRtClient,
+    dev: Box<dyn Device>,
     pub manifest: Manifest,
-    /// weight buffers in manifest order, uploaded once and reused
-    weights: Vec<PjRtBuffer>,
-    executables: RefCell<HashMap<String, std::rc::Rc<PjRtLoadedExecutable>>>,
-    /// the threaded state buffer (None only transiently during execute)
-    state: Option<PjRtBuffer>,
-    counters: RefCell<RuntimeCounters>,
-    /// reusable host-side scratch for logits extraction
-    logits_host: Vec<f32>,
 }
 
 impl Runtime {
     /// Load the manifest, upload weights, create a zeroed state buffer.
+    /// TP manifests (a named `collective`) get a [`ShardedRuntime`];
+    /// everything else the single-device [`SimDevice`].
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = PjRtClient::cpu()?;
-        let t0 = Instant::now();
-        let mut weights = Vec::new();
-        for (entry, data) in manifest.load_weights()? {
-            let buf = client.buffer_from_host_buffer(&data, &entry.shape, None)?;
-            weights.push(buf);
-        }
-        let upload_secs = t0.elapsed().as_secs_f64();
-        let mut rt = Runtime {
-            client,
-            manifest,
-            weights,
-            executables: RefCell::new(HashMap::new()),
-            state: None,
-            counters: RefCell::new(RuntimeCounters {
-                upload_secs,
-                ..Default::default()
-            }),
-            logits_host: Vec::new(),
+        let dev: Box<dyn Device> = if manifest.model.collective != "none" {
+            Box::new(ShardedRuntime::new(manifest.clone())?)
+        } else {
+            Box::new(SimDevice::new(manifest.clone())?)
         };
-        rt.reset_state()?;
-        Ok(rt)
+        Ok(Runtime { dev, manifest })
     }
 
     pub fn counters(&self) -> RuntimeCounters {
-        self.counters.borrow().clone()
+        self.dev.counters()
     }
 
     pub fn dims(&self) -> &crate::manifest::ModelDims {
@@ -89,48 +52,13 @@ impl Runtime {
 
     /// Zero the KV pool + logits region (start of a fresh engine run).
     pub fn reset_state(&mut self) -> Result<()> {
-        let n = self.manifest.state.total_floats;
-        let zeros = vec![0f32; n];
-        let t0 = Instant::now();
-        self.state = Some(self.client.buffer_from_host_buffer(&zeros, &[n], None)?);
-        self.counters.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
-        Ok(())
-    }
-
-    fn get_exe(&self, name: &str) -> Result<std::rc::Rc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.executables.borrow().get(name) {
-            return Ok(exe.clone());
-        }
-        let entry = self.manifest.require(name)?.clone();
-        let exe = self.compile_entry(&entry)?;
-        let exe = std::rc::Rc::new(exe);
-        self.executables
-            .borrow_mut()
-            .insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    fn compile_entry(&self, entry: &ArtifactEntry) -> Result<PjRtLoadedExecutable> {
-        let path = self.manifest.hlo_path(entry);
-        let t0 = Instant::now();
-        let proto = HloModuleProto::from_text_file(path.to_str().ok_or_else(|| {
-            Error::Manifest(format!("non-utf8 path {}", path.display()))
-        })?)?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let mut c = self.counters.borrow_mut();
-        c.compile_calls += 1;
-        c.compile_secs += t0.elapsed().as_secs_f64();
-        Ok(exe)
+        self.dev.reset_state()
     }
 
     /// Pre-compile a set of artifacts (warmup so the serving loop never
     /// pays compilation latency).
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.get_exe(n)?;
-        }
-        Ok(())
+        self.dev.warmup(names)
     }
 
     /// Run one forward graph: tokens are lane-major `[g*t]`, `start_pos`
@@ -144,72 +72,7 @@ impl Runtime {
         slots: &[i32],
         start_pos: &[i32],
     ) -> Result<()> {
-        let entry = self.manifest.require(artifact)?;
-        let bpl = self.manifest.model.blocks_per_lane();
-        let slots_ok =
-            slots.len() == entry.g || (bpl > 0 && slots.len() == entry.g * bpl);
-        if tokens.len() != entry.g * entry.t
-            || !slots_ok
-            || start_pos.len() != entry.g
-        {
-            return Err(Error::Engine(format!(
-                "forward {artifact}: shape mismatch (tokens {}, slots {}, pos {}) \
-                 vs (g={}, t={}, blocks/lane={bpl})",
-                tokens.len(),
-                slots.len(),
-                start_pos.len(),
-                entry.g,
-                entry.t
-            )));
-        }
-        let exe = self.get_exe(artifact)?;
-
-        let t0 = Instant::now();
-        let tok_buf = self
-            .client
-            .buffer_from_host_buffer(tokens, &[tokens.len()], None)?;
-        let slot_buf = self
-            .client
-            .buffer_from_host_buffer(slots, &[slots.len()], None)?;
-        let pos_buf = self
-            .client
-            .buffer_from_host_buffer(start_pos, &[start_pos.len()], None)?;
-        self.counters.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
-
-        let state = self
-            .state
-            .take()
-            .ok_or_else(|| Error::Engine("state buffer missing".into()))?;
-        let mut args: Vec<&PjRtBuffer> =
-            Vec::with_capacity(4 + self.weights.len());
-        args.push(&state);
-        args.push(&tok_buf);
-        args.push(&slot_buf);
-        args.push(&pos_buf);
-        for w in &self.weights {
-            args.push(w);
-        }
-
-        let t0 = Instant::now();
-        let mut out = exe.execute_b(&args)?;
-        let dt = t0.elapsed().as_secs_f64();
-        {
-            let mut c = self.counters.borrow_mut();
-            c.forward_calls += 1;
-            c.forward_secs += dt;
-        }
-        // single-replica, single (non-tuple) output: the new state
-        let replica = out
-            .pop()
-            .ok_or_else(|| Error::Engine("no replica output".into()))?;
-        let new_state = replica
-            .into_iter()
-            .next()
-            .ok_or_else(|| Error::Engine("no output buffer".into()))?;
-        // old `state` was donated; dropping the dead handle is safe
-        drop(state);
-        self.state = Some(new_state);
-        Ok(())
+        self.dev.forward(artifact, tokens, slots, start_pos)
     }
 
     /// Run the ragged lane-major fused forward (the step composer's fast
@@ -226,77 +89,7 @@ impl Runtime {
         tables: &[i32],
         start_pos: &[i32],
     ) -> Result<()> {
-        let name = Self::mixed_artifact();
-        let entry = self.manifest.require(name)?;
-        let bpl = self.manifest.model.blocks_per_lane();
-        let lanes = counts.len();
-        let total: usize = counts.iter().map(|&c| c.max(0) as usize).sum();
-        if lanes == 0
-            || start_pos.len() != lanes
-            || bpl == 0
-            || tables.len() != lanes * bpl
-            || total != tokens.len()
-            || total > entry.g
-        {
-            return Err(Error::Engine(format!(
-                "forward {name}: shape mismatch ({lanes} lanes, {} tokens, {} \
-                 table entries, {} positions) vs (capacity {}, blocks/lane {bpl})",
-                tokens.len(),
-                tables.len(),
-                start_pos.len(),
-                entry.g
-            )));
-        }
-        let exe = self.get_exe(name)?;
-
-        let t0 = Instant::now();
-        let tok_buf = self
-            .client
-            .buffer_from_host_buffer(tokens, &[tokens.len()], None)?;
-        let cnt_buf = self
-            .client
-            .buffer_from_host_buffer(counts, &[counts.len()], None)?;
-        let tab_buf = self
-            .client
-            .buffer_from_host_buffer(tables, &[tables.len()], None)?;
-        let pos_buf = self
-            .client
-            .buffer_from_host_buffer(start_pos, &[start_pos.len()], None)?;
-        self.counters.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
-
-        let state = self
-            .state
-            .take()
-            .ok_or_else(|| Error::Engine("state buffer missing".into()))?;
-        let mut args: Vec<&PjRtBuffer> =
-            Vec::with_capacity(5 + self.weights.len());
-        args.push(&state);
-        args.push(&tok_buf);
-        args.push(&cnt_buf);
-        args.push(&tab_buf);
-        args.push(&pos_buf);
-        for w in &self.weights {
-            args.push(w);
-        }
-
-        let t0 = Instant::now();
-        let mut out = exe.execute_b(&args)?;
-        let dt = t0.elapsed().as_secs_f64();
-        {
-            let mut c = self.counters.borrow_mut();
-            c.forward_calls += 1;
-            c.forward_secs += dt;
-        }
-        let replica = out
-            .pop()
-            .ok_or_else(|| Error::Engine("no replica output".into()))?;
-        let new_state = replica
-            .into_iter()
-            .next()
-            .ok_or_else(|| Error::Engine("no output buffer".into()))?;
-        drop(state);
-        self.state = Some(new_state);
-        Ok(())
+        self.dev.forward_mixed(tokens, counts, tables, start_pos)
     }
 
     /// Copy whole KV pages device-side (`src[i] -> dst[i]`, both pools,
@@ -304,48 +97,7 @@ impl Runtime {
     /// prefix sharing. The state buffer is donated and replaced, exactly
     /// like a forward pass.
     pub fn copy_pages(&mut self, src: &[i32], dst: &[i32]) -> Result<()> {
-        if src.len() != dst.len() {
-            return Err(Error::Engine(format!(
-                "copy_pages src/dst length mismatch: {} vs {}",
-                src.len(),
-                dst.len()
-            )));
-        }
-        if src.is_empty() {
-            return Ok(());
-        }
-        let exe = self.get_exe("copy_pages")?;
-        let t0 = Instant::now();
-        let src_buf = self
-            .client
-            .buffer_from_host_buffer(src, &[src.len()], None)?;
-        let dst_buf = self
-            .client
-            .buffer_from_host_buffer(dst, &[dst.len()], None)?;
-        self.counters.borrow_mut().upload_secs += t0.elapsed().as_secs_f64();
-
-        let state = self
-            .state
-            .take()
-            .ok_or_else(|| Error::Engine("state buffer missing".into()))?;
-        let t0 = Instant::now();
-        let mut out = exe.execute_b(&[&state, &src_buf, &dst_buf])?;
-        let dt = t0.elapsed().as_secs_f64();
-        {
-            let mut c = self.counters.borrow_mut();
-            c.forward_calls += 1;
-            c.forward_secs += dt;
-        }
-        let replica = out
-            .pop()
-            .ok_or_else(|| Error::Engine("no replica output".into()))?;
-        let new_state = replica
-            .into_iter()
-            .next()
-            .ok_or_else(|| Error::Engine("no output buffer".into()))?;
-        drop(state);
-        self.state = Some(new_state);
-        Ok(())
+        self.dev.copy_pages(src, dst)
     }
 
     /// Read the first `rows` logits rows back to the host. Returns a slice
@@ -354,34 +106,7 @@ impl Runtime {
     /// Uses the smallest compiled extract tier >= rows; only that tier's
     /// rows cross the host boundary.
     pub fn extract_logits(&mut self, rows: usize) -> Result<&[f32]> {
-        let vocab = self.manifest.state.vocab;
-        let tier = self
-            .manifest
-            .extract_tiers()
-            .into_iter()
-            .find(|&t| t >= rows)
-            .ok_or_else(|| {
-                Error::Engine(format!("no extract tier covers {rows} rows"))
-            })?;
-        let exe = self.get_exe(&format!("extract_r{tier}"))?;
-        let state = self
-            .state
-            .as_ref()
-            .ok_or_else(|| Error::Engine("state buffer missing".into()))?;
-        let t0 = Instant::now();
-        let mut out = exe.execute_b(&[state])?;
-        let buf = out
-            .pop()
-            .and_then(|r| r.into_iter().next())
-            .ok_or_else(|| Error::Engine("extract produced no output".into()))?;
-        let lit = buf.to_literal_sync()?;
-        self.logits_host.resize(tier * vocab, 0.0);
-        lit.copy_raw_to(&mut self.logits_host)
-            .map_err(|e| Error::Xla(e.to_string()))?;
-        let mut c = self.counters.borrow_mut();
-        c.extract_calls += 1;
-        c.extract_secs += t0.elapsed().as_secs_f64();
-        Ok(&self.logits_host[..rows * vocab])
+        self.dev.extract_logits(rows)
     }
 
     /// Run a standalone micro artifact (Fig. 4 kernel benchmarks) with
@@ -392,14 +117,7 @@ impl Runtime {
         x: (&[f32], &[usize]),
         w: (&[f32], &[usize]),
     ) -> Result<f64> {
-        let exe = self.get_exe(artifact)?;
-        let xb = self.client.buffer_from_host_buffer(x.0, x.1, None)?;
-        let wb = self.client.buffer_from_host_buffer(w.0, w.1, None)?;
-        let t0 = Instant::now();
-        let out = exe.execute_b(&[&xb, &wb])?;
-        let dt = t0.elapsed().as_secs_f64();
-        drop(out);
-        Ok(dt)
+        self.dev.run_micro(artifact, x, w)
     }
 
     /// Like `run_micro` but also returns the result values (for the
@@ -410,19 +128,25 @@ impl Runtime {
         x: (&[f32], &[usize]),
         w: (&[f32], &[usize]),
     ) -> Result<Vec<f32>> {
-        let exe = self.get_exe(artifact)?;
-        let xb = self.client.buffer_from_host_buffer(x.0, x.1, None)?;
-        let wb = self.client.buffer_from_host_buffer(w.0, w.1, None)?;
-        let mut out = exe.execute_b(&[&xb, &wb])?;
-        let buf = out
-            .pop()
-            .and_then(|r| r.into_iter().next())
-            .ok_or_else(|| Error::Engine("micro produced no output".into()))?;
-        let lit = buf.to_literal_sync()?;
-        let n = lit.element_count();
-        let mut v = vec![0f32; n];
-        lit.copy_raw_to(&mut v).map_err(|e| Error::Xla(e.to_string()))?;
-        Ok(v)
+        self.dev.run_micro_values(artifact, x, w)
+    }
+
+    /// Tensor-parallel rank count the loaded device executes as (1 on
+    /// single-device artifact sets).
+    pub fn tp_degree(&self) -> usize {
+        self.dev.tp_degree()
+    }
+
+    /// Collective combining TP partials (`none` on single-device sets).
+    pub fn tp_collective(&self) -> &str {
+        self.dev.tp_collective()
+    }
+
+    /// Cumulative TP allreduce count since process start (monotonic;
+    /// sample deltas around a step, like [`Runtime::sim_busy_ns`]).
+    /// Always 0 on non-TP devices.
+    pub fn tp_allreduces(&self) -> u64 {
+        self.dev.tp_allreduces()
     }
 
     /// Name of the decode artifact for a bucket under a mode.

@@ -1,0 +1,266 @@
+//! Tensor-parallel sharded execution over the [`Device`] abstraction.
+//!
+//! [`ShardedRuntime`] runs an artifact set generated with
+//! `aot::generate_tp`: every forward-family descriptor carries
+//! `tp_degree` / `tp_shards` / `collective`, which routes the simulator's
+//! row-parallel GEMMs (attention output `WO`, FFN `W_DOWN`) through
+//! `gemm_tp` — per-(rank, shard) bf16-rounded partials computed on the
+//! existing worker pool and combined by the named collective as an
+//! R-rank allreduce. Column-parallel GEMMs (QKV / gate / up / lm_head)
+//! shard output columns (= attention heads) across ranks; each column is
+//! a full-K dot product, so their arithmetic is identical at every R and
+//! needs no combine.
+//!
+//! ## Why tree/multimem are bitwise invariant across R
+//!
+//! The partial grid is *canonical*: always `tp_shards` K-shards (8),
+//! regardless of R. Each rank owns `tp_shards / R` consecutive shards.
+//! A position-invariant collective (tree over the flat shard grid,
+//! multimem's in-order fold) combines the same shards in the same order
+//! whether one rank computed all 8 or four ranks computed 2 each — the
+//! float sequence fed to the adder is identical, so the committed stream
+//! and `engine_digest` are bitwise equal at R=1, 2, 4. The ring
+//! collective instead folds each rank's local run first and then walks
+//! the ring from a per-element start offset, so its association
+//! *grouping* depends on R — R=2 genuinely diverges from R=1 (pinned as
+//! a negative test in `tests/tp.rs`).
+//!
+//! The verify path needs no special casing: window graphs carry the same
+//! tp descriptor fields, so a verify replay combines partials through
+//! the exact schedule the fast path used — the determinism contract
+//! holds across R for the same reason it holds across thread counts.
+
+use crate::error::{Error, Result};
+use crate::manifest::Manifest;
+
+use super::device::{Device, RuntimeCounters, SimDevice};
+
+/// One rank's slice of the model under tensor parallelism — the sharding
+/// plan the engine and KV layer reason about. Ranges are half-open.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankShard {
+    pub rank: usize,
+    /// Query heads owned (column-parallel WQ slice / row-parallel WO rows).
+    pub heads: std::ops::Range<usize>,
+    /// KV heads served. Under GQA replication (R > n_kv_heads) several
+    /// ranks share one KV head; the KV block table rows for these heads
+    /// are the per-rank head-sharded view of the pool.
+    pub kv_heads: std::ops::Range<usize>,
+    /// Column slice of `q_dim` this rank produces in column-parallel Q.
+    pub q_cols: std::ops::Range<usize>,
+    /// Column slice of `ffn_hidden` this rank produces in gate/up.
+    pub ffn_cols: std::ops::Range<usize>,
+    /// Run of consecutive canonical K-shards this rank folds locally in
+    /// row-parallel GEMMs (always `tp_shards / R` of them).
+    pub k_shards: std::ops::Range<usize>,
+}
+
+/// Tensor-parallel device group: R logical ranks executing one sharded
+/// artifact set over the shared worker pool, partials combined by the
+/// manifest's collective. Implements [`Device`], so the engine drives it
+/// exactly like the single simulator.
+pub struct ShardedRuntime {
+    core: SimDevice,
+    degree: usize,
+    collective: String,
+    shards: Vec<RankShard>,
+}
+
+impl ShardedRuntime {
+    /// Validate the manifest's TP configuration, build the per-rank
+    /// sharding plan, and bring up the underlying execution core.
+    pub fn new(manifest: Manifest) -> Result<ShardedRuntime> {
+        let m = &manifest.model;
+        let degree = m.tp_degree;
+        let collective = m.collective.clone();
+        if collective == "none" || degree == 0 {
+            return Err(Error::Manifest(
+                "ShardedRuntime needs a TP manifest (tp_degree >= 1 and a \
+                 named collective); re-run gen-artifacts with --tp"
+                    .into(),
+            ));
+        }
+        if m.tp_shards % degree != 0 {
+            return Err(Error::Manifest(format!(
+                "tp_degree {degree} must divide the canonical shard grid {}",
+                m.tp_shards
+            )));
+        }
+        if m.n_heads % degree != 0 || m.ffn_hidden % degree != 0 {
+            return Err(Error::Manifest(format!(
+                "tp_degree {degree} must divide n_heads {} and ffn_hidden {}",
+                m.n_heads, m.ffn_hidden
+            )));
+        }
+        let heads_per = m.n_heads / degree;
+        let ffn_per = m.ffn_hidden / degree;
+        let local_shards = m.tp_shards / degree;
+        let shards = (0..degree)
+            .map(|r| {
+                let kv_heads = if m.n_kv_heads % degree == 0 {
+                    let per = m.n_kv_heads / degree;
+                    r * per..(r + 1) * per
+                } else {
+                    // GQA replication: `degree / n_kv_heads` ranks share
+                    // each KV head
+                    let rep = degree / m.n_kv_heads;
+                    let h = r / rep;
+                    h..h + 1
+                };
+                RankShard {
+                    rank: r,
+                    heads: r * heads_per..(r + 1) * heads_per,
+                    kv_heads,
+                    q_cols: r * heads_per * m.head_dim
+                        ..(r + 1) * heads_per * m.head_dim,
+                    ffn_cols: r * ffn_per..(r + 1) * ffn_per,
+                    k_shards: r * local_shards..(r + 1) * local_shards,
+                }
+            })
+            .collect();
+        let core = SimDevice::new(manifest)?;
+        Ok(ShardedRuntime { core, degree, collective, shards })
+    }
+
+    /// The per-rank sharding plan (length = TP degree).
+    pub fn rank_shards(&self) -> &[RankShard] {
+        &self.shards
+    }
+}
+
+impl Device for ShardedRuntime {
+    fn counters(&self) -> RuntimeCounters {
+        self.core.counters()
+    }
+
+    fn reset_state(&mut self) -> Result<()> {
+        self.core.reset_state()
+    }
+
+    fn warmup(&self, names: &[&str]) -> Result<()> {
+        self.core.warmup(names)
+    }
+
+    fn forward(
+        &mut self,
+        artifact: &str,
+        tokens: &[i32],
+        slots: &[i32],
+        start_pos: &[i32],
+    ) -> Result<()> {
+        self.core.forward(artifact, tokens, slots, start_pos)
+    }
+
+    fn forward_mixed(
+        &mut self,
+        tokens: &[i32],
+        counts: &[i32],
+        tables: &[i32],
+        start_pos: &[i32],
+    ) -> Result<()> {
+        self.core.forward_mixed(tokens, counts, tables, start_pos)
+    }
+
+    fn copy_pages(&mut self, src: &[i32], dst: &[i32]) -> Result<()> {
+        self.core.copy_pages(src, dst)
+    }
+
+    fn extract_logits(&mut self, rows: usize) -> Result<&[f32]> {
+        self.core.extract_logits(rows)
+    }
+
+    fn run_micro(
+        &self,
+        artifact: &str,
+        x: (&[f32], &[usize]),
+        w: (&[f32], &[usize]),
+    ) -> Result<f64> {
+        self.core.run_micro(artifact, x, w)
+    }
+
+    fn run_micro_values(
+        &self,
+        artifact: &str,
+        x: (&[f32], &[usize]),
+        w: (&[f32], &[usize]),
+    ) -> Result<Vec<f32>> {
+        self.core.run_micro_values(artifact, x, w)
+    }
+
+    fn tp_degree(&self) -> usize {
+        self.degree
+    }
+
+    fn tp_collective(&self) -> &str {
+        &self.collective
+    }
+
+    fn tp_allreduces(&self) -> u64 {
+        xla::tp_allreduce_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_plan_partitions_the_model() {
+        let dir = std::env::temp_dir()
+            .join(format!("llm42-sharded-plan-{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        crate::aot::generate_tp(&dir, "test", None, 2, "tree").unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let sr = ShardedRuntime::new(man).unwrap();
+        let plan = sr.rank_shards();
+        assert_eq!(plan.len(), 2);
+        // test preset: 4 heads, 2 kv heads, head_dim 16, ffn 128, 8 shards
+        assert_eq!(plan[0].heads, 0..2);
+        assert_eq!(plan[1].heads, 2..4);
+        assert_eq!(plan[0].kv_heads, 0..1);
+        assert_eq!(plan[1].kv_heads, 1..2);
+        assert_eq!(plan[0].q_cols, 0..32);
+        assert_eq!(plan[1].q_cols, 32..64);
+        assert_eq!(plan[0].ffn_cols, 0..64);
+        assert_eq!(plan[1].ffn_cols, 64..128);
+        assert_eq!(plan[0].k_shards, 0..4);
+        assert_eq!(plan[1].k_shards, 4..8);
+        assert_eq!(sr.tp_degree(), 2);
+        assert_eq!(sr.tp_collective(), "tree");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gqa_replication_plan_at_r4() {
+        let dir = std::env::temp_dir()
+            .join(format!("llm42-sharded-gqa-{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        crate::aot::generate_tp(&dir, "test", None, 4, "multimem").unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let sr = ShardedRuntime::new(man).unwrap();
+        let plan = sr.rank_shards();
+        assert_eq!(plan.len(), 4);
+        // 2 kv heads over 4 ranks: each kv head replicated on 2 ranks
+        assert_eq!(plan[0].kv_heads, 0..1);
+        assert_eq!(plan[1].kv_heads, 0..1);
+        assert_eq!(plan[2].kv_heads, 1..2);
+        assert_eq!(plan[3].kv_heads, 1..2);
+        // each rank folds 2 of the 8 canonical K-shards
+        assert_eq!(plan[3].k_shards, 6..8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn non_tp_manifest_rejected() {
+        let dir = std::env::temp_dir()
+            .join(format!("llm42-sharded-notp-{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        crate::aot::generate(&dir, "test").unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        assert!(ShardedRuntime::new(man).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -377,13 +377,15 @@ fn hist_json(h: &Histogram) -> Json {
 /// zero when the engine drains, or a waiter leaked. `obs` supplies the
 /// determinism digest (maintained at every obs level) and the latency
 /// histograms. `verify_policy` is the active verification trigger's name
-/// (`stall` | `slack` | `margin-gate`).
+/// (`stall` | `slack` | `margin-gate`); `tp_collective` is the runtime's
+/// allreduce topology (`none` on single-device artifact sets).
 pub fn render_stats(
     m: &EngineMetrics,
     kv: &KvStats,
     waiters: usize,
     obs: &Obs,
     verify_policy: &str,
+    tp_collective: &str,
 ) -> String {
     let class_keys: Vec<String> =
         m.class_e2e.keys().map(|c| c.to_string()).collect();
@@ -431,6 +433,19 @@ pub fn render_stats(
         // count never changes committed tokens, only these numbers)
         ("sim_threads", Json::num(m.sim_threads as f64)),
         ("parallel_efficiency", Json::num(m.parallel_efficiency())),
+        // tensor parallelism: rank count the loaded artifact set is
+        // sharded for, its collective, and how many sharded-GEMM
+        // allreduces the engine's steps performed (degree and collective
+        // never change committed tokens under tree/multimem — the cross-R
+        // determinism contract pinned by tests/tp.rs)
+        (
+            "tp",
+            Json::obj(vec![
+                ("degree", Json::num(m.tp_degree as f64)),
+                ("collective", Json::str(tp_collective)),
+                ("allreduce_count", Json::num(m.tp_allreduces as f64)),
+            ]),
+        ),
         // step-composer counters: how many model forwards the engine
         // issued per committed token, and how full fused steps kept the
         // token budget
@@ -578,6 +593,11 @@ pub fn render_metrics_prom(
             m.cache_hit_tokens as f64,
         ),
         (
+            "tp_allreduces_total",
+            "tensor-parallel allreduce combines in sharded GEMMs",
+            m.tp_allreduces as f64,
+        ),
+        (
             "finished_requests_total",
             "requests finished for any reason",
             (m.finished_stop
@@ -599,6 +619,11 @@ pub fn render_metrics_prom(
             waiters as f64,
         ),
         ("kv_free_pages", "free KV pages", kv.free_pages as f64),
+        (
+            "tp_degree",
+            "tensor-parallel rank count of the loaded artifact set",
+            m.tp_degree.max(1) as f64,
+        ),
         (
             "kv_cached_pages",
             "KV pages held only by the prefix cache",
@@ -982,6 +1007,7 @@ fn handle_msg(
                 waiters.len(),
                 &eng.obs,
                 eng.cfg.verify_policy.kind.name(),
+                eng.runtime().tp_collective(),
             ));
         }
         ToEngine::Events { since, reply } => {
@@ -1650,8 +1676,8 @@ mod tests {
         m.verified_tokens = 30;
         m.gate_repair_tokens = 6;
         let obs = Obs::new(ObsConfig::default()).unwrap();
-        let v =
-            Json::parse(&render_stats(&m, &kv, 5, &obs, "margin-gate")).unwrap();
+        let v = Json::parse(&render_stats(&m, &kv, 5, &obs, "margin-gate", "none"))
+            .unwrap();
         assert_eq!(v.u("preemptions").unwrap(), 3);
         assert_eq!(v.s("verify_policy").unwrap(), "margin-gate");
         assert_eq!(v.u("certified_tokens").unwrap(), 70);
@@ -1745,10 +1771,18 @@ mod tests {
         m.finished_cancelled = 15;
         m.finished_timeout = 16;
         m.finished_error = 17;
+        m.tp_degree = 2;
+        m.tp_allreduces = 18;
         let obs = Obs::new(ObsConfig::default()).unwrap();
-        let v =
-            Json::parse(&render_stats(&m, &KvStats::default(), 0, &obs, "stall"))
-                .unwrap();
+        let v = Json::parse(&render_stats(
+            &m,
+            &KvStats::default(),
+            0,
+            &obs,
+            "stall",
+            "tree",
+        ))
+        .unwrap();
         let EngineMetrics {
             steps,
             decode_steps,
@@ -1789,6 +1823,8 @@ mod tests {
             finished_cancelled,
             finished_timeout,
             finished_error,
+            tp_degree,
+            tp_allreduces,
         } = &m;
         assert_eq!(v.u("steps").unwrap(), *steps as usize);
         assert_eq!(v.u("decode_steps").unwrap(), *decode_steps as usize);
@@ -1856,6 +1892,10 @@ mod tests {
         assert_eq!(fr.u("cancelled").unwrap(), *finished_cancelled as usize);
         assert_eq!(fr.u("timeout").unwrap(), *finished_timeout as usize);
         assert_eq!(fr.u("error").unwrap(), *finished_error as usize);
+        let tp = v.req("tp").unwrap();
+        assert_eq!(tp.u("degree").unwrap(), *tp_degree as usize);
+        assert_eq!(tp.s("collective").unwrap(), "tree");
+        assert_eq!(tp.u("allreduce_count").unwrap(), *tp_allreduces as usize);
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Cross-TP-degree determinism tests: the tensor-parallel rank count is
+//! a deployment shape, not part of the reproducible configuration — with
+//! a position-invariant collective (tree / multimem), committed streams
+//! and engine digests are bitwise identical at R = 1, 2, 4 for every
+//! scheduler policy x prefix-cache x fusion x verify-policy combination,
+//! including under forced-mismatch rollbacks. The ring collective's
+//! reduction grouping depends on R, so it demonstrably breaks the
+//! contract (pinned here as a negative test).
+//!
+//! Self-bootstraps one sharded `test`-preset artifact set per (R,
+//! collective) point via `aot::ensure_tp`.
+
+use llm42::engine::{
+    Engine, EngineConfig, FaultPlan, Mode, PolicyKind, Request, VerifyPolicy,
+    VerifyPolicyKind,
+};
+use llm42::obs::digest_hex;
+use llm42::prelude::*;
+
+/// Artifact dir for one (degree, collective) point, generated on demand.
+/// Distinct from the plain `artifacts` dir so non-TP tests never race it.
+fn tp_dir(degree: usize, collective: &str) -> String {
+    let base =
+        std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let dir = format!("{base}-tp{degree}-{collective}");
+    llm42::aot::ensure_tp(&dir, degree, collective)
+        .expect("TP artifact generation failed");
+    dir
+}
+
+/// Mixed workload: shared 32-token prefix (two full KV blocks so the
+/// prefix cache genuinely adopts pages), det and nondet lanes, one greedy.
+fn workload() -> Vec<Request> {
+    let shared: Vec<u32> = (100..132).collect();
+    let mk = |extra: u32, n: usize, det: bool, seed: u64| {
+        let mut prompt = shared.clone();
+        prompt.extend(extra..extra + 4);
+        Request {
+            prompt,
+            max_new_tokens: n,
+            deterministic: det,
+            temperature: 1.0,
+            seed,
+            ..Default::default()
+        }
+    };
+    vec![
+        mk(200, 20, true, 11),
+        mk(210, 16, true, 12),
+        mk(220, 12, false, 13),
+        Request {
+            prompt: (10..22).collect(),
+            max_new_tokens: 18,
+            deterministic: true,
+            temperature: 0.0,
+            seed: 0,
+            ..Default::default()
+        },
+    ]
+}
+
+/// Run the workload to completion under one configuration; return every
+/// committed stream (sorted by id), the rollback count, and the engine
+/// digest — the three things that must be R-invisible.
+fn run_matrix(
+    rt: &mut Runtime,
+    policy: PolicyKind,
+    cache: bool,
+    fusion: bool,
+    vp: VerifyPolicyKind,
+    fault: FaultPlan,
+) -> (Vec<(u64, Vec<u32>)>, u64, String) {
+    let c = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 4,
+        policy,
+        prefix_cache: cache,
+        max_step_tokens: if fusion { 48 } else { 0 },
+        verify_policy: VerifyPolicy { kind: vp, ..Default::default() },
+        fault,
+        ..Default::default()
+    };
+    let mut eng = Engine::new(rt, c).unwrap();
+    for r in workload() {
+        eng.submit(r).unwrap();
+    }
+    eng.run_to_completion().unwrap();
+    let rollbacks = eng.metrics.rollbacks;
+    let digest = digest_hex(eng.obs.engine_digest());
+    let mut outs: Vec<(u64, Vec<u32>)> = eng
+        .take_finished()
+        .into_iter()
+        .map(|o| (o.id, o.tokens))
+        .collect();
+    outs.sort();
+    (outs, rollbacks, digest)
+}
+
+#[test]
+fn committed_streams_are_bitwise_identical_across_tp_degrees() {
+    // The acceptance matrix: R in {1, 2, 4} x {tree, multimem} x all
+    // three policies x cache on/off x fusion on/off x all three verify
+    // policies. Every stream — deterministic and not — and the engine
+    // digest must match the R=1 run bitwise: the canonical 8-shard
+    // partial grid feeds a position-invariant combine the same floats in
+    // the same order at every rank count.
+    for collective in ["tree", "multimem"] {
+        let mut base_rt = Runtime::load(tp_dir(1, collective)).unwrap();
+        assert_eq!(base_rt.tp_degree(), 1);
+        assert_eq!(base_rt.tp_collective(), collective);
+        for degree in [2usize, 4] {
+            let mut rt = Runtime::load(tp_dir(degree, collective)).unwrap();
+            assert_eq!(rt.tp_degree(), degree);
+            for policy in [
+                PolicyKind::PrefillFirst,
+                PolicyKind::DeadlineAware,
+                PolicyKind::FairShare,
+            ] {
+                for cache in [false, true] {
+                    for fusion in [false, true] {
+                        for vp in [
+                            VerifyPolicyKind::Stall,
+                            VerifyPolicyKind::Slack,
+                            VerifyPolicyKind::MarginGate,
+                        ] {
+                            let base = run_matrix(
+                                &mut base_rt,
+                                policy,
+                                cache,
+                                fusion,
+                                vp,
+                                FaultPlan::None,
+                            );
+                            assert_eq!(base.0.len(), 4);
+                            assert!(base.0.iter().all(|(_, t)| !t.is_empty()));
+                            let got = run_matrix(
+                                &mut rt,
+                                policy,
+                                cache,
+                                fusion,
+                                vp,
+                                FaultPlan::None,
+                            );
+                            assert_eq!(
+                                base, got,
+                                "{collective} R={degree} {policy:?} \
+                                 cache={cache} fusion={fusion} {vp:?}: \
+                                 diverged from R=1"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_rollbacks_are_tp_degree_invariant() {
+    // Fault injection forces a verifier mismatch on every verify lane —
+    // maximum rollback/recompute pressure. The verify windows replay the
+    // same sharded combine schedule the fast path used, so rollback
+    // counts and post-rollback streams are R-invisible too.
+    let fault = FaultPlan::EveryNthLane { every: 1, at_index: 0 };
+    for collective in ["tree", "multimem"] {
+        let mut base_rt = Runtime::load(tp_dir(1, collective)).unwrap();
+        for fusion in [false, true] {
+            let base = run_matrix(
+                &mut base_rt,
+                PolicyKind::PrefillFirst,
+                false,
+                fusion,
+                VerifyPolicyKind::Stall,
+                fault,
+            );
+            assert!(
+                base.1 > 0,
+                "{collective} fusion={fusion}: fault must force rollbacks"
+            );
+            for degree in [2usize, 4] {
+                let mut rt =
+                    Runtime::load(tp_dir(degree, collective)).unwrap();
+                let got = run_matrix(
+                    &mut rt,
+                    PolicyKind::PrefillFirst,
+                    false,
+                    fusion,
+                    VerifyPolicyKind::Stall,
+                    fault,
+                );
+                assert_eq!(
+                    base, got,
+                    "{collective} R={degree} fusion={fusion}: \
+                     rollback story diverged from R=1"
+                );
+            }
+        }
+    }
+}
+
+/// Prefill one position-sensitive prompt through a window graph and
+/// return the raw logits bits of the last row.
+fn window_logit_bits(rt: &mut Runtime) -> Vec<u32> {
+    rt.reset_state().unwrap();
+    let prompt: Vec<i32> = (0..32).map(|i| 7 + (i * 13) % 256).collect();
+    rt.forward("window_inv_g1_t32", &prompt, &[0], &[0]).unwrap();
+    rt.extract_logits(1)
+        .unwrap()
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+#[test]
+fn ring_collective_breaks_cross_tp_invariance() {
+    // The negative pin (paper Table 2): ring's reduce-scatter folds each
+    // rank's local shard run first and then walks the ring from a
+    // chunk-dependent start, so its reduction *grouping* changes with R.
+    // At R=1 it degenerates to the in-order fold; at R=2 the same window
+    // forward must produce different logit bits somewhere. Tree on the
+    // same workload is the positive control.
+    let mut ring1 = Runtime::load(tp_dir(1, "ring")).unwrap();
+    let mut ring2 = Runtime::load(tp_dir(2, "ring")).unwrap();
+    let bits1 = window_logit_bits(&mut ring1);
+    let bits2 = window_logit_bits(&mut ring2);
+    assert_eq!(bits1.len(), bits2.len());
+    assert_ne!(
+        bits1, bits2,
+        "ring R=2 must diverge bitwise from R=1 on a position-sensitive \
+         prefill (if this ever passes, the ring model stopped being \
+         R-dependent and Table 2 needs revisiting)"
+    );
+
+    let mut tree1 = Runtime::load(tp_dir(1, "tree")).unwrap();
+    let mut tree2 = Runtime::load(tp_dir(2, "tree")).unwrap();
+    assert_eq!(
+        window_logit_bits(&mut tree1),
+        window_logit_bits(&mut tree2),
+        "control: tree must be bitwise R-invariant on the same workload"
+    );
+}
+
+#[test]
+fn engine_asserts_tp_config_against_the_artifact_set() {
+    // Like block_size, --tp / --collective are startup assertions against
+    // the loaded artifact set's baked-in shard geometry.
+    let mut rt = Runtime::load(tp_dir(2, "tree")).unwrap();
+    let ok = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        tp_degree: 2,
+        collective: "tree".into(),
+        ..Default::default()
+    };
+    assert!(Engine::new(&mut rt, ok).is_ok());
+    let wrong_degree = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        tp_degree: 4,
+        ..Default::default()
+    };
+    assert!(Engine::new(&mut rt, wrong_degree).is_err());
+    let wrong_collective = EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        collective: "multimem".into(),
+        ..Default::default()
+    };
+    assert!(Engine::new(&mut rt, wrong_collective).is_err());
+}
+
+#[test]
+fn tp_metrics_reach_the_stats_surface() {
+    // The engine samples allreduce deltas per step (the overhead signal
+    // the bench layer charts) and reports the degree gauge.
+    let mut rt = Runtime::load(tp_dir(2, "tree")).unwrap();
+    let (streams, _, _) = {
+        let c = EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 2,
+            verify_window: 16,
+            max_stall_steps: 4,
+            ..Default::default()
+        };
+        let mut eng = Engine::new(&mut rt, c).unwrap();
+        for r in workload() {
+            eng.submit(r).unwrap();
+        }
+        eng.run_to_completion().unwrap();
+        assert_eq!(eng.metrics.tp_degree, 2);
+        assert!(
+            eng.metrics.tp_allreduces > 0,
+            "sharded forwards must count allreduces"
+        );
+        let outs: Vec<(u64, Vec<u32>)> = eng
+            .take_finished()
+            .into_iter()
+            .map(|o| (o.id, o.tokens))
+            .collect();
+        (outs, 0u64, String::new())
+    };
+    assert_eq!(streams.len(), 4);
+}

@@ -153,6 +153,42 @@ impl Dims {
     }
 }
 
+/// Allreduce topology used to combine tensor-parallel row-shard partials
+/// (mirrors the paper's Table 2 reduction classes). `Tree` and `Multimem`
+/// combine the *canonical shard grid* in an order fixed by shard index —
+/// independent of how shards are assigned to ranks — so they are
+/// position-invariant across TP degrees. `Ring` folds each rank's local
+/// shards first and then walks rank partials starting at a
+/// chunk-dependent rank, so both the grouping and the order depend on R:
+/// it is deliberately position-variant (the negative class).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Collective {
+    Ring,
+    Tree,
+    Multimem,
+}
+
+impl Collective {
+    pub fn parse(s: &str) -> Result<Collective> {
+        match s {
+            "ring" => Ok(Collective::Ring),
+            "tree" => Ok(Collective::Tree),
+            "multimem" => Ok(Collective::Multimem),
+            other => err(format!(
+                "unknown collective '{other}' (expected ring|tree|multimem)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Collective::Ring => "ring",
+            Collective::Tree => "tree",
+            Collective::Multimem => "multimem",
+        }
+    }
+}
+
 /// The reduction schedule of one compiled graph (mirrors
 /// `python/compile/config.py::Strategy`).
 #[derive(Debug, Clone)]
@@ -167,6 +203,15 @@ struct Schedule {
     seq_chunks: usize,
     /// round cross-split partials to bf16 (the drift source)
     bf16_partials: bool,
+    /// tensor-parallel rank count this graph was sharded for (1 = single
+    /// device; row-parallel GEMMs then use plain split-K)
+    tp_degree: usize,
+    /// canonical K-shard count of row-parallel GEMMs under TP. Fixed per
+    /// artifact set and independent of `tp_degree`, so tree/multimem
+    /// combines see the identical shard grid at every R.
+    tp_shards: usize,
+    /// allreduce topology combining the row-shard partials
+    collective: Collective,
 }
 
 impl Default for Schedule {
@@ -179,6 +224,9 @@ impl Default for Schedule {
             norm_splits: 1,
             seq_chunks: 8,
             bf16_partials: true,
+            tp_degree: 1,
+            tp_shards: 1,
+            collective: Collective::Tree,
         }
     }
 }
@@ -273,6 +321,10 @@ fn parse_descriptor(text: &str) -> Result<Descriptor> {
     };
 
     let kind = kv.get("strategy").cloned().unwrap_or_else(|| "inv".into());
+    let collective = match kv.get("collective") {
+        None => Collective::Tree,
+        Some(c) => Collective::parse(c)?,
+    };
     let sched = Schedule {
         kind: kind.clone(),
         ffn_splits: opt_usize("ffn_splits", 1)?,
@@ -281,7 +333,27 @@ fn parse_descriptor(text: &str) -> Result<Descriptor> {
         norm_splits: opt_usize("norm_splits", 1)?,
         seq_chunks: opt_usize("seq_chunks", 8)?,
         bf16_partials: kv.get("partial").map(|p| p == "bf16").unwrap_or(true),
+        tp_degree: opt_usize("tp_degree", 1)?,
+        tp_shards: opt_usize("tp_shards", 1)?,
+        collective,
     };
+    if sched.tp_degree == 0 || sched.tp_shards == 0 {
+        return err("descriptor tp_degree/tp_shards must be >= 1");
+    }
+    if sched.tp_shards > 1 {
+        if !sched.tp_shards.is_power_of_two() {
+            return err(format!(
+                "descriptor tp_shards {} must be a power of two",
+                sched.tp_shards
+            ));
+        }
+        if sched.tp_shards % sched.tp_degree != 0 {
+            return err(format!(
+                "descriptor tp_degree {} must divide tp_shards {}",
+                sched.tp_degree, sched.tp_shards
+            ));
+        }
+    }
 
     let dims = if matches!(
         op,
@@ -790,6 +862,146 @@ fn gemm(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, sched: &Schedule, ns
     out
 }
 
+/// Combine a row's canonical shard-grid partials (`nshards` slabs of
+/// `width` f32 values, flat in `parts`) through the configured collective,
+/// modelling an R-rank allreduce. The result lands in `parts[..width]`.
+///
+/// * `Tree`: the fixed pairwise combine tree keyed on shard index —
+///   identical arithmetic at every rank count (R never appears).
+/// * `Multimem`: in-order fold shard 0,1,2,… — R-invisible likewise.
+/// * `Ring`: each rank first left-folds its `nshards / ranks` consecutive
+///   shards (plain f32), then every element walks the R rank partials
+///   starting at rank `(chunk(e) + 1) % R` — the reduce-scatter order of a
+///   real ring. Both the rank-local *grouping* and the walk order depend
+///   on R, so ring results differ across TP degrees (Table 2's
+///   position-variant class). At R=1 ring degenerates to multimem.
+fn collective_combine(
+    parts: &mut [f32],
+    nshards: usize,
+    width: usize,
+    ranks: usize,
+    collective: Collective,
+) {
+    debug_assert!(parts.len() >= nshards * width);
+    match collective {
+        Collective::Tree => combine_tree_flat(parts, nshards, width),
+        Collective::Multimem => {
+            let (head, tail) = parts.split_at_mut(width);
+            for s in 1..nshards {
+                let src = &tail[(s - 1) * width..s * width];
+                for (o, &v) in head.iter_mut().zip(src.iter()) {
+                    *o += v;
+                }
+            }
+        }
+        Collective::Ring => {
+            assert!(
+                ranks >= 1 && nshards % ranks == 0,
+                "ring: ranks {ranks} must divide shard count {nshards}"
+            );
+            let local = nshards / ranks;
+            // rank-local fold: rank r's partial accumulates its `local`
+            // consecutive shards in order, landing at the slab head
+            for r in 0..ranks {
+                let base = r * local * width;
+                for s in 1..local {
+                    for e in 0..width {
+                        let v = parts[base + s * width + e];
+                        parts[base + e] += v;
+                    }
+                }
+            }
+            if ranks > 1 {
+                // per-element ring walk over the rank partials. Writing
+                // parts[e] only clobbers rank 0's element e, which no
+                // later element reads (element e' reads parts[e']).
+                for e in 0..width {
+                    let start = (e * ranks / width + 1) % ranks;
+                    let mut acc = parts[start * local * width + e];
+                    for i in 1..ranks {
+                        let r = (start + i) % ranks;
+                        acc += parts[r * local * width + e];
+                    }
+                    parts[e] = acc;
+                }
+            }
+        }
+    }
+}
+
+/// Global allreduce counter: one per tensor-parallel row-sharded GEMM
+/// (i.e. per modelled allreduce). The engine samples deltas around each
+/// step to report `tp.allreduce_count`.
+static TP_ALLREDUCES: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(0);
+
+/// Cumulative count of modelled tensor-parallel allreduces.
+pub fn tp_allreduce_count() -> u64 {
+    TP_ALLREDUCES.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Tensor-parallel row-sharded GEMM: x [m, k] @ w [k, n] with the K
+/// dimension split into the *canonical shard grid* of `sched.tp_shards`
+/// slabs — fixed per artifact set, independent of the rank count — each
+/// bf16-rounded exactly like a split-K partial, then combined through the
+/// configured collective as an R-rank allreduce. Because the shard grid
+/// (and its rounding) never changes with R, tree/multimem combines are
+/// bitwise identical at every TP degree; ring's rank-local fold makes R
+/// visible. Runs on the worker pool with the same disjoint-output
+/// contract as [`gemm_fast_splitk`].
+fn gemm_tp(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, sched: &Schedule) -> Vec<f32> {
+    let nshards = sched.tp_shards;
+    let ranks = sched.tp_degree;
+    assert!(k % nshards == 0, "K={k} not divisible by tp_shards={nshards}");
+    let ck = k / nshards;
+    let mut out = vec![0.0f32; m * n];
+    TP_ALLREDUCES.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    SCRATCH.with(|s| {
+        let scr = &mut *s.borrow_mut();
+        let parts = grab(&mut scr.parts, m * nshards * n);
+        let pview = RawSlice::new(parts);
+        pool::parallel_for(m * nshards, |item| {
+            let (r, shard) = (item / nshards, item % nshards);
+            // SAFETY: item indices are unique per worker; chunks disjoint.
+            let p = unsafe { pview.chunk(item, n) };
+            splitk_partial(&x[r * k..(r + 1) * k], w, n, ck, shard, sched.bf16_partials, p);
+        });
+        let oview = RawSlice::new(&mut out);
+        pool::parallel_for(m, |r| {
+            // SAFETY: row indices are unique per worker; chunks disjoint.
+            let row_parts = unsafe { pview.chunk(r, nshards * n) };
+            collective_combine(row_parts, nshards, n, ranks, sched.collective);
+            let o_row = unsafe { oview.chunk(r, n) };
+            o_row.copy_from_slice(&row_parts[..n]);
+        });
+    });
+    out
+}
+
+/// Dispatch for the *row-parallel* projections (attention output WO and
+/// FFN down WD, whose K dimension is head-/feature-sharded across ranks
+/// under tensor parallelism). TP off: the ordinary strategy-dispatched
+/// [`gemm`]. TP on: both fast and invariant graphs run the identical
+/// canonical-shard-grid [`gemm_tp`] — the verify path replays the exact
+/// sharded combine of the fast path, which is what keeps the determinism
+/// contract intact across R (drift between fast and invariant schedules
+/// still comes from the unsharded QKV/gate/up/attention/norm reductions).
+fn gemm_row_parallel(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    sched: &Schedule,
+    nsplits: usize,
+) -> Vec<f32> {
+    if sched.tp_shards > 1 {
+        gemm_tp(x, w, m, k, n, sched)
+    } else {
+        gemm(x, w, m, k, n, sched, nsplits)
+    }
+}
+
 /// RMSNorm over rows: x [m, d], weight [d]; `nsplit`-way feature-dim
 /// reduction combined by the fixed pairwise tree (rmsnorm.py). Rows are
 /// independent pool items.
@@ -1153,7 +1365,7 @@ fn forward_core(
         }
 
         let wo = &w[W_WO][layer * qd * dm..(layer + 1) * qd * dm];
-        let proj = gemm(&attn, wo, n, qd, dm, sched, sched.ffn_splits);
+        let proj = gemm_row_parallel(&attn, wo, n, qd, dm, sched, sched.ffn_splits);
         for i in 0..n * dm {
             h[i] += proj[i];
         }
@@ -1191,7 +1403,7 @@ fn forward_core(
                 }
             });
         }
-        let down = gemm(&act, wd, n, fh, dm, sched, sched.ffn_splits);
+        let down = gemm_row_parallel(&act, wd, n, fh, dm, sched, sched.ffn_splits);
         for i in 0..n * dm {
             h[i] += down[i];
         }
@@ -1650,6 +1862,157 @@ mod tests {
         assert_eq!(d.sched.norm_splits, 1);
         assert_eq!(d.sched.seq_chunks, 8);
         assert_eq!(d.dims.blocks_per_lane(), 8);
+    }
+
+    /// Build an adversarial shard slab: shard partials spanning many
+    /// magnitudes so any change in fold grouping or order flips low bits.
+    fn adversarial_parts(nshards: usize, width: usize) -> Vec<f32> {
+        (0..nshards * width)
+            .map(|i| {
+                let s = i / width;
+                match s % 4 {
+                    0 => 1e8 + (i % 97) as f32,
+                    1 => -(1e8 - 1.0) - (i % 89) as f32,
+                    2 => 1e-3 * (i % 31 + 1) as f32,
+                    _ => 7e4 + 0.37 * (i % 53) as f32,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tree_and_multimem_combines_are_rank_count_invariant() {
+        // the collective sees the same canonical shard grid at every R,
+        // and tree/multimem never consult R — bitwise identity is by
+        // construction, pinned here against regressions
+        let (nshards, width) = (8usize, 16usize);
+        let base = adversarial_parts(nshards, width);
+        for col in [Collective::Tree, Collective::Multimem] {
+            let mut r1 = base.clone();
+            collective_combine(&mut r1, nshards, width, 1, col);
+            for ranks in [2usize, 4, 8] {
+                let mut rr = base.clone();
+                collective_combine(&mut rr, nshards, width, ranks, col);
+                assert_eq!(
+                    r1[..width].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    rr[..width].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{col:?} @ R={ranks} diverged from R=1"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_combine_depends_on_rank_count() {
+        let (nshards, width) = (8usize, 16usize);
+        let base = adversarial_parts(nshards, width);
+        // R=1 ring is the in-order fold — bitwise multimem
+        let mut ring1 = base.clone();
+        collective_combine(&mut ring1, nshards, width, 1, Collective::Ring);
+        let mut mm = base.clone();
+        collective_combine(&mut mm, nshards, width, 1, Collective::Multimem);
+        assert_eq!(
+            ring1[..width].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            mm[..width].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+        // R=2: the rank-local fold regroups the f32 additions — some
+        // element must flip bits vs the R=1 left fold
+        let mut ring2 = base.clone();
+        collective_combine(&mut ring2, nshards, width, 2, Collective::Ring);
+        assert_ne!(
+            ring1[..width].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            ring2[..width].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "ring must be position-variant across rank counts"
+        );
+        // numerically the topologies still agree (drift is low-bit)
+        for e in 0..width {
+            assert!((ring1[e] - ring2[e]).abs() <= 1e3, "{} vs {}", ring1[e], ring2[e]);
+        }
+    }
+
+    #[test]
+    fn gemm_tp_is_thread_count_invariant_and_matches_splitk_grid() {
+        let (m, k, n) = (3usize, 64, 8);
+        // shard-dependent magnitudes (K positions 8s..8s+8 belong to shard
+        // s) make any regrouping of the partial fold visible in low bits
+        let x: Vec<f32> = (0..m * k)
+            .map(|i| {
+                let scale = [1e4f32, 1.0, 1e-4, 37.0][(i % k) / 8 % 4];
+                ((i * 37 % 11) as f32 - 5.0) * 0.13 * scale
+            })
+            .collect();
+        let w: Vec<f32> = (0..k * n).map(|i| ((i * 17 % 13) as f32 - 6.0) * 0.07).collect();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let sched = |ranks: usize, col: Collective| Schedule {
+            kind: "fast".into(),
+            tp_degree: ranks,
+            tp_shards: 8,
+            collective: col,
+            ..Default::default()
+        };
+        // tree combine over the 8-shard grid == the plain 8-way split-K
+        // fast GEMM (same partials, same pairwise tree)
+        let tp = gemm_tp(&x, &w, m, k, n, &sched(1, Collective::Tree));
+        let fast = Schedule { kind: "fast".into(), ..Default::default() };
+        let splitk = gemm(&x, &w, m, k, n, &fast, 8);
+        assert_eq!(bits(&splitk), bits(&tp));
+        // thread count is invisible; R is invisible under tree/multimem
+        for col in [Collective::Tree, Collective::Multimem, Collective::Ring] {
+            let base = gemm_tp(&x, &w, m, k, n, &sched(1, col));
+            for threads in [1usize, 2, 4] {
+                pool::set_threads(threads);
+                let got = gemm_tp(&x, &w, m, k, n, &sched(1, col));
+                assert_eq!(bits(&base), bits(&got), "{col:?} @ {threads} threads");
+            }
+            pool::set_threads(0);
+            for ranks in [2usize, 4] {
+                let got = gemm_tp(&x, &w, m, k, n, &sched(ranks, col));
+                if col == Collective::Ring {
+                    assert_ne!(bits(&base), bits(&got), "ring R={ranks} must differ");
+                } else {
+                    assert_eq!(bits(&base), bits(&got), "{col:?} R={ranks}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tp_allreduce_counter_advances_per_sharded_gemm() {
+        let (m, k, n) = (2usize, 16, 4);
+        let x = vec![0.5f32; m * k];
+        let w = vec![0.25f32; k * n];
+        let sched = Schedule {
+            kind: "fast".into(),
+            tp_degree: 2,
+            tp_shards: 8,
+            ..Default::default()
+        };
+        let before = tp_allreduce_count();
+        let _ = gemm_tp(&x, &w, m, k, n, &sched);
+        let _ = gemm_tp(&x, &w, m, k, n, &sched);
+        assert!(tp_allreduce_count() >= before + 2);
+    }
+
+    #[test]
+    fn descriptor_parses_and_validates_tp_fields() {
+        let base = "llm42-sim v1\nop forward\ng 1\nt 1\nstrategy fast\n\
+                    vocab 256\nd_model 64\nn_layers 2\nn_heads 4\nn_kv_heads 2\nhead_dim 16\n\
+                    ffn_hidden 128\nmax_seq 128\nslots 5\nmax_fwd_tokens 256\nblock_size 16\n\
+                    logit_scale 6.0\nrope_theta 10000.0\nrms_eps 1e-5\n";
+        // absent fields default to the single-device schedule
+        let d = parse_descriptor(base).unwrap();
+        assert_eq!((d.sched.tp_degree, d.sched.tp_shards), (1, 1));
+        assert_eq!(d.sched.collective, Collective::Tree);
+        let with = format!("{base}tp_degree 2\ntp_shards 8\ncollective multimem\n");
+        let d = parse_descriptor(&with).unwrap();
+        assert_eq!((d.sched.tp_degree, d.sched.tp_shards), (2, 8));
+        assert_eq!(d.sched.collective, Collective::Multimem);
+        // rejects: unknown collective, non-power-of-two grid, degree
+        // not dividing the grid
+        assert!(parse_descriptor(&format!("{base}collective butterfly\n")).is_err());
+        assert!(parse_descriptor(&format!("{base}tp_degree 2\ntp_shards 6\n")).is_err());
+        assert!(parse_descriptor(&format!("{base}tp_degree 3\ntp_shards 8\n")).is_err());
+        assert!(parse_descriptor(&format!("{base}tp_degree 0\n")).is_err());
     }
 
     #[test]
