@@ -4,7 +4,7 @@
 
 CARGO ?= cargo
 
-.PHONY: artifacts artifacts-test build test test-threads test-server test-gate test-tp fmt-check lint doc bench-check bench-json
+.PHONY: artifacts artifacts-test build test test-threads test-server test-gate test-tp test-router fmt-check lint doc bench-check bench-json
 
 artifacts:
 	cd rust && $(CARGO) run --release -- gen-artifacts --out artifacts --preset tiny
@@ -58,6 +58,25 @@ test-tp:
 	diff -u /tmp/llm42_tp_r1 /tmp/llm42_tp_r2
 	diff -u /tmp/llm42_tp_r1 /tmp/llm42_tp_r4
 	@echo "cross-R engine digests identical (tree collective)"
+
+# The multi-replica matrix locally (mirrors the CI router job): the
+# router suite (cross-replica determinism, failover/poisoning, the
+# affinity soak, backpressure shedding) at 1 and 4 simulator threads,
+# then the audit example at 1, 2, 4 replicas — the fleet_digest= lines
+# (the router's fold over global ids) must be bit-identical across
+# replica counts.
+test-router:
+	cd rust && LLM42_THREADS=1 $(CARGO) test -q --test router
+	cd rust && LLM42_THREADS=4 $(CARGO) test -q --test router
+	cd rust && $(CARGO) run --release --example determinism_audit -- \
+		--replicas 1 | grep -E '^fleet_' > /tmp/llm42_router_n1
+	cd rust && $(CARGO) run --release --example determinism_audit -- \
+		--replicas 2 | grep -E '^fleet_' > /tmp/llm42_router_n2
+	cd rust && $(CARGO) run --release --example determinism_audit -- \
+		--replicas 4 | grep -E '^fleet_' > /tmp/llm42_router_n4
+	diff -u /tmp/llm42_router_n1 /tmp/llm42_router_n2
+	diff -u /tmp/llm42_router_n1 /tmp/llm42_router_n4
+	@echo "cross-replica fleet digests identical"
 
 # Serving-surface integration: stream + cancel + timeout over a real
 # socket, disconnect detection, poisoned-engine lifecycle, abort matrix.

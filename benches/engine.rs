@@ -164,7 +164,218 @@ fn main() {
     if let Some(j) = tp_comparison() {
         sections.push(("tp", j));
     }
+    if let Some(j) = router_comparison(dims.vocab) {
+        sections.push(("router", j));
+    }
     write_bench_json(sections);
+}
+
+/// Multi-replica router benchmark: the identical deterministic multi-turn
+/// workload (sessions sharing a 32-token prefix, submitted in turn waves
+/// from one thread) through a 1-, 2-, and 4-replica fleet over the same
+/// baked artifacts. Reports tok/s, the prefix-affinity hit rate, and the
+/// shed counter per row; the fleet digest column must be identical at
+/// every replica count (asserted) — under single-threaded submission the
+/// global ids are a pure function of submission order, so replica count
+/// is a deployment shape, not part of the reproducible configuration. A
+/// final backpressure row bursts a 2-replica fleet with a 2-deep
+/// admission queue: the overflow must shed with `overloaded` instead of
+/// queueing without bound.
+fn router_comparison(vocab: usize) -> Option<Json> {
+    use llm42::obs::digest_hex;
+    use llm42::router::{ConnEvent, Router};
+    use llm42::tokenizer::Tokenizer;
+    use std::sync::{mpsc, Arc};
+
+    let artifacts =
+        std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let tok = match Tokenizer::default_trained(vocab) {
+        Ok(t) => Arc::new(t),
+        Err(e) => {
+            eprintln!("router bench skipped: {e}");
+            return None;
+        }
+    };
+    let sessions = if reduced() { 4 } else { 12 };
+    let turns = if reduced() { 3 } else { 8 };
+
+    // one session turn: the shared 32-token prefix (two complete KV
+    // blocks — what the affinity table keys on) plus a short turn tail
+    let prompt = |s: usize, turn: usize| -> Vec<u32> {
+        let mut p: Vec<u32> =
+            (0..32).map(|i| 3 + ((s * 37 + i) as u32 % 400)).collect();
+        for k in 0..4usize {
+            p.push(3 + ((turn * 13 + k) as u32 % 400));
+        }
+        p
+    };
+
+    // drain one reply channel to its Done line; (committed tokens, shed?)
+    let drain = |rx: &mpsc::Receiver<ConnEvent>| -> Option<(usize, bool)> {
+        loop {
+            match rx.recv().ok()? {
+                ConnEvent::Done(line) => {
+                    let v = Json::parse(&line).ok()?;
+                    if v.get("error").is_some() {
+                        eprintln!("router bench request failed: {line}");
+                        return None;
+                    }
+                    let shed = v.s("finish_reason").ok()? == "overloaded";
+                    return Some((v.arr("tokens").ok()?.len(), shed));
+                }
+                ConnEvent::Accepted(_) | ConnEvent::Line(_) => {}
+            }
+        }
+    };
+
+    let run = |replicas: usize| -> Option<(f64, u64, f64, u64, String)> {
+        let cfg = EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 2,
+            verify_window: 16,
+            max_stall_steps: 4,
+            eos_token: u32::MAX, // full budgets: identical committed volume
+            max_step_tokens: 128,
+            prefix_cache: true,
+            replicas,
+            router_queue: 1024, // ample: this matrix never sheds
+            ..Default::default()
+        };
+        let router = Router::new(&artifacts, &cfg, tok.clone());
+        let t0 = llm42::util::now_secs();
+        let mut tokens = 0usize;
+        for turn in 0..turns {
+            let mut rxs = Vec::with_capacity(sessions);
+            for s in 0..sessions {
+                let (tx, rx) = mpsc::channel();
+                router.submit(
+                    Request {
+                        prompt: prompt(s, turn),
+                        max_new_tokens: 8,
+                        deterministic: true,
+                        temperature: 1.0,
+                        seed: (turn * sessions + s) as u64,
+                        ..Default::default()
+                    },
+                    tx,
+                );
+                rxs.push(rx);
+            }
+            for rx in &rxs {
+                tokens += drain(rx)?.0;
+            }
+        }
+        let wall = llm42::util::now_secs() - t0;
+        let c = router.counters();
+        router.join();
+        Some((
+            tokens as f64 / wall.max(1e-9),
+            c.routed,
+            c.affinity_hits as f64 / (c.routed as f64).max(1.0),
+            c.shed,
+            digest_hex(c.fleet_digest),
+        ))
+    };
+
+    let mut tab = Table::new(&[
+        "replicas",
+        "tok_s",
+        "affinity_hit_%",
+        "shed",
+        "fleet_digest",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut base_digest = String::new();
+    for replicas in [1usize, 2, 4] {
+        let (tok_s, routed, hit_rate, shed, digest) = run(replicas)?;
+        if replicas == 1 {
+            base_digest = digest.clone();
+        }
+        assert_eq!(
+            digest, base_digest,
+            "router bench: fleet digest diverged at {replicas} replicas"
+        );
+        tab.row(vec![
+            format!("{replicas}"),
+            format!("{tok_s:.1}"),
+            format!("{:.0}", hit_rate * 100.0),
+            format!("{shed}"),
+            digest.clone(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("replicas", Json::num(replicas as f64)),
+            ("tok_s", Json::num(tok_s)),
+            ("routed", Json::num(routed as f64)),
+            ("affinity_hit_rate", Json::num(hit_rate)),
+            ("shed", Json::num(shed as f64)),
+            ("fleet_digest", Json::str(digest)),
+        ]));
+    }
+
+    // backpressure: burst a 2-replica fleet with a 2-deep admission queue
+    // — once each replica holds a long decode, further priority-0 arrivals
+    // shed immediately with `overloaded` instead of queueing without bound
+    let burst = {
+        let cfg = EngineConfig {
+            mode: Mode::Llm42,
+            verify_group: 2,
+            verify_window: 16,
+            max_stall_steps: 4,
+            eos_token: u32::MAX,
+            max_step_tokens: 128,
+            replicas: 2,
+            router_queue: 2,
+            router_affinity: false,
+            ..Default::default()
+        };
+        let router = Router::new(&artifacts, &cfg, tok.clone());
+        let n_burst = 10usize;
+        let mut rxs = Vec::with_capacity(n_burst);
+        for i in 0..n_burst {
+            let (tx, rx) = mpsc::channel();
+            router.submit(
+                Request {
+                    prompt: (0..32)
+                        .map(|p| 3 + ((p + i as u32 * 13) % 400))
+                        .collect(),
+                    max_new_tokens: 64,
+                    deterministic: false,
+                    temperature: 0.0,
+                    ..Default::default()
+                },
+                tx,
+            );
+            rxs.push(rx);
+        }
+        let mut served = 0usize;
+        let mut shed = 0usize;
+        for rx in &rxs {
+            let (_, overloaded) = drain(rx)?;
+            if overloaded {
+                shed += 1;
+            } else {
+                served += 1;
+            }
+        }
+        router.join();
+        println!(
+            "burst of {n_burst} at router_queue=2 x 2 replicas: \
+             {served} served, {shed} shed"
+        );
+        Json::obj(vec![
+            ("burst", Json::num(n_burst as f64)),
+            ("router_queue", Json::num(2.0)),
+            ("served", Json::num(served as f64)),
+            ("shed", Json::num(shed as f64)),
+        ])
+    };
+
+    println!("== multi-replica router: 1/2/4 replicas ==");
+    println!("{}", tab.render());
+    Some(Json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("backpressure", burst),
+    ]))
 }
 
 /// Tensor-parallel benchmark: the identical fused deterministic workload

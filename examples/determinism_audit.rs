@@ -33,6 +33,14 @@
 //! sharded artifact set instead: CI invokes it at R = 1, 2, 4 under the
 //! tree collective and diffs the `engine_digest=` lines across rank
 //! counts — the cross-R face of the same determinism contract.
+//!
+//! With `--replicas N` the deterministic-only workload is additionally
+//! routed through an N-replica [`Router`] fleet. Global request ids are a
+//! pure function of submission order, so the router's fleet digest —
+//! `fold_stream(global_id, stream_digest)` over deterministic streams —
+//! must be bitwise identical at any replica count: CI invokes this at
+//! N = 1, 2, 4 and diffs the `fleet_digest=` lines, the cross-replica
+//! face of the contract.
 
 use llm42::obs::{digest_hex, digest_stream};
 use llm42::prelude::*;
@@ -185,6 +193,69 @@ fn main() -> Result<()> {
             eng.metrics.verify_passes,
         );
         println!("det_engine_digest={}", digest_hex(eng.obs.engine_digest()));
+    }
+
+    // multi-replica fleet audit: the same deterministic workload through
+    // N engine replicas. Per-replica engine digests fold engine-local ids
+    // and legitimately differ across N; the fleet digest folds global ids
+    // and must not. CI diffs the fleet_digest= lines across --replicas.
+    let replicas = args.usize_or("replicas", 0)?;
+    if replicas > 0 {
+        let tok = std::sync::Arc::new(
+            llm42::tokenizer::Tokenizer::default_trained(vocab)?,
+        );
+        let cfg = EngineConfig {
+            mode: Mode::Llm42,
+            verify_policy,
+            replicas,
+            ..Default::default()
+        };
+        let router = Router::new(&artifacts, &cfg, tok);
+        let mut reqs = vec![audited.clone()];
+        for i in 0..3u32 {
+            reqs.push(Request {
+                prompt: (200 + 20 * i..216 + 20 * i).collect(),
+                max_new_tokens: 24 + 4 * i as usize,
+                deterministic: true,
+                temperature: if i == 0 { 0.0 } else { 1.0 },
+                seed: 9000 + i as u64,
+                ..Default::default()
+            });
+        }
+        let mut rxs = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let (tx, rx) = std::sync::mpsc::channel();
+            router.submit(r, tx);
+            rxs.push(rx);
+        }
+        for rx in &rxs {
+            loop {
+                match rx.recv().expect("replica reply channel closed") {
+                    ConnEvent::Done(line) => {
+                        assert!(
+                            !line.contains("\"error\""),
+                            "fleet audit request failed: {line}"
+                        );
+                        break;
+                    }
+                    ConnEvent::Accepted(_) | ConnEvent::Line(_) => {}
+                }
+            }
+        }
+        println!("schedule  fleet-of-{replicas}:");
+        for (i, (live, snap)) in router.snapshots().into_iter().enumerate() {
+            if let Some(s) = snap {
+                println!(
+                    "  replica[{i}] live={live} streams={} engine_digest={}",
+                    s.digest_seqs,
+                    digest_hex(s.engine_digest)
+                );
+            }
+        }
+        let c = router.counters();
+        println!("fleet_digest={}", digest_hex(c.fleet_digest));
+        println!("fleet_sequences={}", c.fleet_seqs);
+        router.join();
     }
 
     println!();

@@ -5,7 +5,8 @@
 //!         [--policy prefill-first|deadline|fair-share] [--det-priority 4] \
 //!         [--det-deadline-ms 400] [--workload sharegpt|arxiv|multiturn] \
 //!         [--prefix-cache true|false] [--max-step-tokens N] \
-//!         [--verify-policy stall|slack|margin-gate]
+//!         [--verify-policy stall|slack|margin-gate] \
+//!         [--replicas N] [--router-queue N] [--router-affinity true|false]
 //!
 //! Serves an online ShareGPT-shaped workload (Poisson arrivals) with a
 //! mixed deterministic ratio through the full three-layer stack — rust
@@ -16,8 +17,15 @@
 //! `--det-deadline-ms` so the deadline / fair-share policies have classes
 //! to arbitrate. Compares against the non-deterministic ceiling and the
 //! batch-invariant baseline when `--compare` is passed.
+//!
+//! With `--replicas N` (N > 1) the same trace is served through the
+//! multi-replica [`Router`] instead of a single engine: prefix-affinity
+//! placement, per-priority backpressure (shed requests finish
+//! `overloaded`), per-replica engine digests, and the replica-count-
+//! invariant fleet digest.
 
 use llm42::engine::{EngineConfig, Mode, PolicyKind, StepKind, VerifyPolicy, VerifyPolicyKind};
+use llm42::obs::digest_hex;
 use llm42::prelude::*;
 use llm42::trace::{LengthProfile, TraceSpec};
 use llm42::util::cli::Args;
@@ -65,6 +73,7 @@ fn main() -> Result<()> {
     let det_priority = args.usize_or("det-priority", 4)?.min(255) as u8;
     let det_deadline_ms = args.f64_or("det-deadline-ms", 400.0)?;
 
+    let replicas = args.usize_or("replicas", 1)?;
     for mode in modes {
         let cfg = EngineConfig {
             mode,
@@ -76,10 +85,118 @@ fn main() -> Result<()> {
             // 0 = seed-exclusive steps; N fuses prefill chunks + the
             // decode batch into one forward per step (verify overlapped)
             max_step_tokens: args.usize_or("max-step-tokens", 0)?,
+            replicas,
+            router_queue: args.usize_or("router-queue", 32)?,
+            router_affinity: args.bool_or("router-affinity", true)?,
             ..Default::default()
         };
-        serve(&mut rt, cfg, &spec, det_priority, det_deadline_ms)?;
+        if replicas > 1 {
+            serve_fleet(&artifacts, cfg, &spec, det_priority, det_deadline_ms, dims.vocab)?;
+        } else {
+            serve(&mut rt, cfg, &spec, det_priority, det_deadline_ms)?;
+        }
     }
+    Ok(())
+}
+
+/// Serve the trace through the multi-replica router: same Poisson
+/// arrivals, routed by prefix affinity with per-priority backpressure.
+fn serve_fleet(
+    artifacts: &str,
+    cfg: EngineConfig,
+    spec: &TraceSpec,
+    det_priority: u8,
+    det_deadline_ms: f64,
+    vocab: usize,
+) -> Result<()> {
+    println!(
+        "== mode {:?}, policy {}, {} replicas (queue {}, affinity {}) ==",
+        cfg.mode,
+        cfg.policy.name(),
+        cfg.replicas,
+        cfg.router_queue,
+        if cfg.router_affinity { "on" } else { "off" }
+    );
+    let mut trace = spec.generate();
+    for tr in trace.iter_mut() {
+        if tr.req.deterministic {
+            tr.req.priority = det_priority;
+            tr.req.deadline_ms = Some(det_deadline_ms);
+        }
+    }
+    let tok = std::sync::Arc::new(
+        llm42::tokenizer::Tokenizer::default_trained(vocab)?,
+    );
+    let router = Router::new(artifacts, &cfg, tok);
+
+    let start = now_secs();
+    let mut rxs = Vec::with_capacity(trace.len());
+    for tr in &trace {
+        let wait = tr.arrival_offset - (now_secs() - start);
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        router.submit(tr.req.clone(), tx);
+        rxs.push(rx);
+    }
+    let (mut done, mut overloaded, mut errors) = (0u64, 0u64, 0u64);
+    for rx in &rxs {
+        loop {
+            match rx.recv().expect("router reply channel closed") {
+                ConnEvent::Done(line) => {
+                    let v = llm42::util::json::Json::parse(&line)?;
+                    if v.get("error").is_some() {
+                        errors += 1;
+                    } else if v.s("finish_reason")? == "overloaded" {
+                        overloaded += 1;
+                    }
+                    done += 1;
+                    break;
+                }
+                ConnEvent::Accepted(_) | ConnEvent::Line(_) => {}
+            }
+        }
+    }
+    let wall = now_secs() - start;
+
+    let c = router.counters();
+    println!(
+        "  {done} requests in {wall:.1}s ({overloaded} shed 'overloaded', \
+         {errors} errors)"
+    );
+    let hit_rate = if c.routed > 0 {
+        c.affinity_hits as f64 / c.routed as f64 * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "  router: routed {} | affinity hits {} ({hit_rate:.0}%) | shed {}",
+        c.routed, c.affinity_hits, c.shed
+    );
+    let mut committed = 0u64;
+    for (i, (live, snap)) in router.snapshots().into_iter().enumerate() {
+        if let Some(s) = snap {
+            committed += s.metrics.committed_tokens;
+            println!(
+                "    replica[{i}] live={live}: {} steps, {} committed tokens, \
+                 engine_digest={}",
+                s.metrics.steps,
+                s.metrics.committed_tokens,
+                digest_hex(s.engine_digest)
+            );
+        }
+    }
+    println!(
+        "  throughput: {:.1} output tok/s across the fleet",
+        committed as f64 / wall
+    );
+    println!(
+        "  fleet_digest={} ({} deterministic streams)\n",
+        digest_hex(c.fleet_digest),
+        c.fleet_seqs
+    );
+    router.join();
     Ok(())
 }
 

@@ -25,6 +25,9 @@
 //!   "collective": "",
 //!   "obs": "counters",
 //!   "trace_out": "",
+//!   "replicas": 1,
+//!   "router_queue": 32,
+//!   "router_affinity": true,
 //!   "server": { "addr": "127.0.0.1:4242" }
 //! }
 //! ```
@@ -65,6 +68,14 @@
 //! `trace_out` path tees every journal event to that file as JSON lines
 //! (and implies `events`). Recording never changes committed streams —
 //! stream digests are maintained at every level, including `off`.
+//! `replicas` (default 1) sets how many engine replicas the server's
+//! router spawns over the same artifact directory; any deterministic
+//! request produces the same committed stream on every replica, so the
+//! count is pure capacity, never a determinism knob. `router_queue`
+//! bounds each replica's admission queue (low-priority requests shed
+//! with `finish_reason: "overloaded"` before the bound is reached — see
+//! `rust/src/router`), and `router_affinity` toggles prefix-affinity
+//! placement (off = pure least-loaded).
 
 use crate::engine::{EngineConfig, FaultPlan, Mode, PolicyKind, VerifyPolicyKind};
 use crate::error::{Error, Result};
@@ -146,6 +157,15 @@ impl AppConfig {
                 cfg.engine.obs.trace_out = Some(p.to_string());
             }
         }
+        if let Some(r) = v.get("replicas").and_then(|x| x.as_usize()) {
+            cfg.engine.replicas = r;
+        }
+        if let Some(q) = v.get("router_queue").and_then(|x| x.as_usize()) {
+            cfg.engine.router_queue = q;
+        }
+        if let Some(a) = v.get("router_affinity").and_then(|x| x.as_bool()) {
+            cfg.engine.router_affinity = a;
+        }
         if let Some(srv) = v.get("server") {
             if let Some(a) = srv.get("addr").and_then(|x| x.as_str()) {
                 cfg.server_addr = a.to_string();
@@ -164,7 +184,8 @@ impl AppConfig {
     /// `--addr`, `--max-stall`, `--eos`,
     /// `--block-size`, `--prefix-cache true|false`, `--max-step-tokens`,
     /// `--threads`, `--tp`, `--collective`,
-    /// `--obs off|counters|events`, `--trace-out PATH`).
+    /// `--obs off|counters|events`, `--trace-out PATH`,
+    /// `--replicas`, `--router-queue`, `--router-affinity true|false`).
     pub fn apply_args(mut self, args: &Args) -> Result<AppConfig> {
         if let Some(m) = args.get("mode") {
             self.engine.mode = Mode::parse(m)?;
@@ -201,10 +222,16 @@ impl AppConfig {
             self.engine.obs.trace_out =
                 if p.is_empty() { None } else { Some(p.to_string()) };
         }
+        self.engine.replicas = args.usize_or("replicas", self.engine.replicas)?;
+        self.engine.router_queue =
+            args.usize_or("router-queue", self.engine.router_queue)?;
+        self.engine.router_affinity =
+            args.bool_or("router-affinity", self.engine.router_affinity)?;
         self.artifacts = args.str_or("artifacts", &self.artifacts);
         self.server_addr = args.str_or("addr", &self.server_addr);
         self.engine.fault = FaultPlan::None; // never configurable in prod
         self.engine.margin_bound_override = None; // test-only, like fault
+        self.engine.fault_replica = None; // test-only, like fault
         self.validate()?;
         Ok(self)
     }
@@ -232,6 +259,15 @@ impl AppConfig {
                 "unknown collective '{}' (ring | tree | multimem)",
                 self.engine.collective
             )));
+        }
+        if self.engine.replicas == 0 {
+            return Err(Error::Config("replicas must be >= 1".into()));
+        }
+        if self.engine.router_queue == 0 {
+            return Err(Error::Config(
+                "router_queue must be >= 1 (per-replica admission bound)"
+                    .into(),
+            ));
         }
         // nonzero block_size / tp / non-empty collective are only
         // *requests*; the engine checks them against the artifact set's
@@ -409,5 +445,35 @@ mod tests {
     fn fault_plan_never_from_config() {
         let c = AppConfig::resolve(&args("")).unwrap();
         assert_eq!(c.engine.fault, FaultPlan::None);
+        assert_eq!(c.engine.fault_replica, None);
+    }
+
+    #[test]
+    fn router_knobs_from_file_and_flags() {
+        let c = AppConfig::from_json(
+            r#"{"replicas": 4, "router_queue": 8, "router_affinity": false}"#,
+        )
+        .unwrap();
+        assert_eq!(c.engine.replicas, 4);
+        assert_eq!(c.engine.router_queue, 8);
+        assert!(!c.engine.router_affinity);
+        let c = c
+            .apply_args(&args(
+                "--replicas 2 --router-queue 16 --router-affinity true",
+            ))
+            .unwrap();
+        assert_eq!(c.engine.replicas, 2);
+        assert_eq!(c.engine.router_queue, 16);
+        assert!(c.engine.router_affinity);
+        // defaults: one replica (single-engine wire compatibility),
+        // affinity on
+        let d = AppConfig::resolve(&args("")).unwrap();
+        assert_eq!(d.engine.replicas, 1);
+        assert_eq!(d.engine.router_queue, 32);
+        assert!(d.engine.router_affinity);
+        // zero is a configuration error, not a silent clamp
+        assert!(AppConfig::from_json(r#"{"replicas": 0}"#).is_err());
+        assert!(AppConfig::resolve(&args("--router-queue 0")).is_err());
+        assert!(AppConfig::resolve(&args("--router-affinity wat")).is_err());
     }
 }

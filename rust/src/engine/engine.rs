@@ -198,6 +198,27 @@ pub struct EngineConfig {
     /// Expected TP collective (`ring` | `tree` | `multimem`). Empty =
     /// accept the artifact set's; non-empty must match.
     pub collective: String,
+    /// Engine replicas the in-process [`crate::router`] spreads traffic
+    /// over (each replica is its own `Engine` + runtime over the shared
+    /// baked artifacts dir). 1 (the default) = a single engine; the
+    /// server's wire behavior at 1 replica is unchanged.
+    pub replicas: usize,
+    /// Per-replica admission-queue bound: how many in-flight (queued +
+    /// running) requests one replica accepts before the router's
+    /// per-priority-class backpressure starts shedding. The threshold
+    /// scales with priority class, so background traffic sheds first.
+    pub router_queue: usize,
+    /// Prefix-affinity routing: hash the prompt's leading block-aligned
+    /// token blocks so multiturn sessions land on the replica holding
+    /// their published KV. Off = pure least-loaded routing (the soak
+    /// test's baseline). Routing never affects committed tokens — any
+    /// replica produces the bitwise-identical stream.
+    pub router_affinity: bool,
+    /// Test-only (like [`FaultPlan`], never configurable from config files
+    /// or the CLI): confine `fault` to one replica index. `None` = every
+    /// replica gets `fault`; `Some(r)` = only replica `r` does, which is
+    /// how the failover test poisons a single replica mid-traffic.
+    pub fault_replica: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -220,6 +241,10 @@ impl Default for EngineConfig {
             margin_bound_override: None,
             tp_degree: 0,
             collective: String::new(),
+            replicas: 1,
+            router_queue: 32,
+            router_affinity: true,
+            fault_replica: None,
         }
     }
 }

@@ -108,6 +108,25 @@ impl KvStats {
     pub fn available_pages(&self) -> usize {
         self.free_pages + self.cached_pages
     }
+
+    /// Merge another replica's snapshot into this one for the router's
+    /// fleet-level stats view. Page gauges and traffic counters sum
+    /// (replicas own disjoint pools); `block_size` is baked into the
+    /// shared artifact set, so it agrees across replicas — keep the first
+    /// nonzero value.
+    pub fn absorb(&mut self, other: &KvStats) {
+        if self.block_size == 0 {
+            self.block_size = other.block_size;
+        }
+        self.user_pages += other.user_pages;
+        self.free_pages += other.free_pages;
+        self.cached_pages += other.cached_pages;
+        self.held_pages += other.held_pages;
+        self.cache_hits += other.cache_hits;
+        self.cache_hit_tokens += other.cache_hit_tokens;
+        self.cow_copies += other.cow_copies;
+        self.evicted_pages += other.evicted_pages;
+    }
 }
 
 #[derive(Debug)]

@@ -143,6 +143,10 @@ pub struct EngineMetrics {
     pub finished_cancelled: u64,
     pub finished_timeout: u64,
     pub finished_error: u64,
+    /// requests shed at admission by the multi-replica router (always 0
+    /// from an engine itself — shed requests never reach one; the router
+    /// adds its shed count when it merges per-replica metrics)
+    pub finished_overloaded: u64,
     /// tensor-parallel degree the runtime executes as (gauge, set at
     /// engine construction; 1 = single device)
     pub tp_degree: u64,
@@ -253,12 +257,119 @@ impl EngineMetrics {
             FinishReason::Cancelled => self.finished_cancelled += 1,
             FinishReason::Timeout => self.finished_timeout += 1,
             FinishReason::Error => self.finished_error += 1,
+            FinishReason::Overloaded => self.finished_overloaded += 1,
         }
     }
 
     /// Requests that finished without delivering a natural result.
     pub fn aborted(&self) -> u64 {
-        self.finished_cancelled + self.finished_timeout + self.finished_error
+        self.finished_cancelled
+            + self.finished_timeout
+            + self.finished_error
+            + self.finished_overloaded
+    }
+
+    /// Merge another engine's counters into this one — the router's
+    /// fleet-level stats view is `absorb` folded over every replica's
+    /// metrics. Counters sum; occupancy gauges sum (fleet totals);
+    /// high-water marks take the worst replica; `sim_threads` and
+    /// `tp_degree` take the max (replicas share the process-wide pool and
+    /// the baked artifact set, so these agree across replicas anyway).
+    ///
+    /// The exhaustive destructure is deliberate: adding an `EngineMetrics`
+    /// field without deciding its merge rule must not compile.
+    pub fn absorb(&mut self, other: &EngineMetrics) {
+        let EngineMetrics {
+            steps,
+            decode_steps,
+            prefill_chunks,
+            verify_passes,
+            forward_passes,
+            fused_steps,
+            fused_fwd_tokens,
+            fused_capacity_tokens,
+            decoded_tokens,
+            committed_tokens,
+            certified_tokens,
+            verified_tokens,
+            gate_repair_tokens,
+            prefill_tokens,
+            rollbacks,
+            recomputed_tokens,
+            decode_secs,
+            prefill_secs,
+            verify_secs,
+            verify_lanes,
+            preemptions,
+            reprefilled_tokens,
+            queue_depth_hwm,
+            live_seqs,
+            live_seqs_hwm,
+            store_capacity,
+            cache_hits,
+            cache_hit_tokens,
+            reprefill_saved_tokens,
+            cow_copies,
+            class_e2e,
+            sim_threads,
+            sim_busy_secs,
+            sim_wall_secs,
+            finished_stop,
+            finished_length,
+            finished_cancelled,
+            finished_timeout,
+            finished_error,
+            finished_overloaded,
+            tp_degree,
+            tp_allreduces,
+        } = other;
+        self.steps += steps;
+        self.decode_steps += decode_steps;
+        self.prefill_chunks += prefill_chunks;
+        self.verify_passes += verify_passes;
+        self.forward_passes += forward_passes;
+        self.fused_steps += fused_steps;
+        self.fused_fwd_tokens += fused_fwd_tokens;
+        self.fused_capacity_tokens += fused_capacity_tokens;
+        self.decoded_tokens += decoded_tokens;
+        self.committed_tokens += committed_tokens;
+        self.certified_tokens += certified_tokens;
+        self.verified_tokens += verified_tokens;
+        self.gate_repair_tokens += gate_repair_tokens;
+        self.prefill_tokens += prefill_tokens;
+        self.rollbacks += rollbacks;
+        self.recomputed_tokens += recomputed_tokens;
+        self.decode_secs += decode_secs;
+        self.prefill_secs += prefill_secs;
+        self.verify_secs += verify_secs;
+        self.verify_lanes += verify_lanes;
+        self.preemptions += preemptions;
+        self.reprefilled_tokens += reprefilled_tokens;
+        self.queue_depth_hwm = self.queue_depth_hwm.max(*queue_depth_hwm);
+        self.live_seqs += live_seqs;
+        self.live_seqs_hwm += live_seqs_hwm;
+        self.store_capacity += store_capacity;
+        self.cache_hits += cache_hits;
+        self.cache_hit_tokens += cache_hit_tokens;
+        self.reprefill_saved_tokens += reprefill_saved_tokens;
+        self.cow_copies += cow_copies;
+        for (&class, c) in class_e2e {
+            let mine = self.class_e2e.entry(class).or_default();
+            mine.finished += c.finished;
+            mine.total_e2e_secs += c.total_e2e_secs;
+            mine.max_e2e_secs = mine.max_e2e_secs.max(c.max_e2e_secs);
+        }
+        self.sim_threads = self.sim_threads.max(*sim_threads);
+        self.sim_busy_secs += sim_busy_secs;
+        self.sim_wall_secs += sim_wall_secs;
+        self.finished_stop += finished_stop;
+        self.finished_length += finished_length;
+        self.finished_cancelled += finished_cancelled;
+        self.finished_timeout += finished_timeout;
+        self.finished_error += finished_error;
+        self.finished_overloaded += finished_overloaded;
+        self.tp_degree = self.tp_degree.max(*tp_degree);
+        self.tp_allreduces += tp_allreduces;
     }
 
     pub fn note_queue_depth(&mut self, depth: usize) {
@@ -340,12 +451,56 @@ mod tests {
         m.record_finish_reason(FinishReason::Cancelled);
         m.record_finish_reason(FinishReason::Timeout);
         m.record_finish_reason(FinishReason::Error);
+        m.record_finish_reason(FinishReason::Overloaded);
         assert_eq!(m.finished_stop, 2);
         assert_eq!(m.finished_length, 1);
         assert_eq!(m.finished_cancelled, 1);
         assert_eq!(m.finished_timeout, 1);
         assert_eq!(m.finished_error, 1);
-        assert_eq!(m.aborted(), 3);
+        assert_eq!(m.finished_overloaded, 1);
+        assert_eq!(m.aborted(), 4);
+    }
+
+    #[test]
+    fn absorb_merges_counters_hwms_and_classes() {
+        let mut a = EngineMetrics {
+            steps: 10,
+            committed_tokens: 100,
+            queue_depth_hwm: 3,
+            live_seqs: 2,
+            sim_threads: 4,
+            tp_degree: 2,
+            finished_stop: 5,
+            ..Default::default()
+        };
+        a.record_finished(0, 1.0);
+        let mut b = EngineMetrics {
+            steps: 7,
+            committed_tokens: 50,
+            queue_depth_hwm: 9,
+            live_seqs: 1,
+            sim_threads: 4,
+            tp_degree: 2,
+            finished_stop: 2,
+            finished_overloaded: 3,
+            ..Default::default()
+        };
+        b.record_finished(0, 3.0);
+        b.record_finished(2, 0.5);
+        a.absorb(&b);
+        assert_eq!(a.steps, 17);
+        assert_eq!(a.committed_tokens, 150);
+        assert_eq!(a.queue_depth_hwm, 9, "hwm takes the worst replica");
+        assert_eq!(a.live_seqs, 3, "gauges sum to fleet totals");
+        assert_eq!(a.sim_threads, 4, "shared pool: max, not sum");
+        assert_eq!(a.tp_degree, 2);
+        assert_eq!(a.finished_stop, 7);
+        assert_eq!(a.finished_overloaded, 3);
+        let c0 = &a.class_e2e[&0];
+        assert_eq!(c0.finished, 2);
+        assert!((c0.total_e2e_secs - 4.0).abs() < 1e-12);
+        assert!((c0.max_e2e_secs - 3.0).abs() < 1e-12);
+        assert_eq!(a.class_e2e[&2].finished, 1);
     }
 
     #[test]

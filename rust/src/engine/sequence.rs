@@ -35,11 +35,16 @@ pub enum FinishReason {
     Timeout,
     /// aborted because the engine could no longer serve it
     Error,
+    /// shed at admission by the multi-replica router: every live replica's
+    /// admission queue was over this priority class's threshold, so the
+    /// request was rejected before it ever entered an engine. Carries zero
+    /// tokens and an empty stream digest.
+    Overloaded,
 }
 
 impl FinishReason {
     /// Wire name, as reported in `RequestOutput` JSON and per-reason
-    /// counters: stop | length | cancelled | timeout | error.
+    /// counters: stop | length | cancelled | timeout | error | overloaded.
     pub fn as_str(self) -> &'static str {
         match self {
             FinishReason::Eos => "stop",
@@ -47,6 +52,7 @@ impl FinishReason {
             FinishReason::Cancelled => "cancelled",
             FinishReason::Timeout => "timeout",
             FinishReason::Error => "error",
+            FinishReason::Overloaded => "overloaded",
         }
     }
 
@@ -55,7 +61,10 @@ impl FinishReason {
     pub fn is_abort(self) -> bool {
         matches!(
             self,
-            FinishReason::Cancelled | FinishReason::Timeout | FinishReason::Error
+            FinishReason::Cancelled
+                | FinishReason::Timeout
+                | FinishReason::Error
+                | FinishReason::Overloaded
         )
     }
 }
@@ -555,10 +564,12 @@ mod tests {
         assert_eq!(FinishReason::Cancelled.as_str(), "cancelled");
         assert_eq!(FinishReason::Timeout.as_str(), "timeout");
         assert_eq!(FinishReason::Error.as_str(), "error");
+        assert_eq!(FinishReason::Overloaded.as_str(), "overloaded");
         assert!(!FinishReason::Eos.is_abort());
         assert!(!FinishReason::Length.is_abort());
         assert!(FinishReason::Cancelled.is_abort());
         assert!(FinishReason::Timeout.is_abort());
         assert!(FinishReason::Error.is_abort());
+        assert!(FinishReason::Overloaded.is_abort());
     }
 }

@@ -85,6 +85,7 @@ pub mod engine;
 pub mod error;
 pub mod manifest;
 pub mod obs;
+pub mod router;
 pub mod runtime;
 pub mod server;
 pub mod tokenizer;
@@ -100,5 +101,6 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::manifest::Manifest;
     pub use crate::obs::{ObsConfig, ObsLevel};
+    pub use crate::router::{ConnEvent, ReplicaSnapshot, Router, RouterCounters};
     pub use crate::runtime::Runtime;
 }

@@ -16,6 +16,7 @@ llm42 — determinism in LLM inference via verified speculation
 USAGE:
   llm42 serve        [--addr 127.0.0.1:4242] [--mode llm42] [--group 8] [--window 32]
                      [--policy prefill-first|deadline|fair-share]
+                     [--replicas N] [--router-queue N] [--router-affinity B]
   llm42 offline      [--profile sharegpt|arxiv] [--requests 64] [--det-ratio 0.1]
                      [--mode nondet|batch-invariant|llm42] [--qps Q] [--temp 1.0]
                      [--policy prefill-first|deadline|fair-share]
@@ -67,6 +68,15 @@ COMMON:
                      changes committed streams
   --trace-out PATH   tee every journal event to PATH as JSON lines
                      (implies --obs events)
+  --replicas N       serve: engine replicas behind the router (default 1);
+                     deterministic requests produce bitwise-identical
+                     streams on every replica, so N is pure capacity
+  --router-queue N   per-replica admission bound (default 32); low
+                     priorities shed with finish_reason 'overloaded'
+                     before the bound is reached
+  --router-affinity B  true|false (default true): prefix-affinity routing
+                     — multiturn sessions return to the replica holding
+                     their published KV; false = pure least-loaded
   --seed S           trace seed (default 42)
 
 SERVER PROTOCOL (JSON lines; see rust/src/server):
@@ -74,7 +84,8 @@ SERVER PROTOCOL (JSON lines; see rust/src/server):
   (streamed text is never rolled back), \"timeout_ms\", \"priority\",
   \"deadline_ms\"; {\"cmd\":\"cancel\",\"id\":N} aborts a request,
   {\"cmd\":\"stats\"} reports per-reason finish counters, KV occupancy,
-  latency quantiles, and the engine-wide determinism digest,
+  latency quantiles, the engine-wide determinism digest, and the router
+  section (per-replica digests, affinity/shed counters, fleet digest),
   {\"cmd\":\"events\",\"since\":N} drains the step-event journal past
   cursor N, {\"cmd\":\"metrics\"} returns Prometheus text exposition.
 ";

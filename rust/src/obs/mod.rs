@@ -68,6 +68,17 @@ fn mix64(mut x: u64) -> u64 {
     x ^ (x >> 31)
 }
 
+/// Mix one retired stream's `(id, stream digest)` pair for a commutative
+/// XOR fold. The engine-wide digest is built from exactly this per-stream
+/// contribution; the router reuses it over *global* request ids to build
+/// a fleet digest that is invariant to how streams were spread over
+/// replicas (XOR is commutative, so retirement order and replica
+/// assignment both wash out).
+#[inline]
+pub fn fold_stream(id: u64, digest: u64) -> u64 {
+    mix64(id ^ mix64(digest))
+}
+
 /// Render a digest the way the wire shows it: JSON numbers are f64, which
 /// silently truncates above 2^53, so digests travel as hex strings.
 pub fn digest_hex(d: u64) -> String {
@@ -220,6 +231,20 @@ impl Histogram {
 
     pub fn max(&self) -> Option<f64> {
         (self.count > 0).then_some(self.max)
+    }
+
+    /// Merge another histogram into this one bucket-wise. Aggregating
+    /// per-replica histograms this way yields exactly the histogram a
+    /// single recorder would have produced over the union of samples
+    /// (buckets are fixed, so merge order never matters).
+    pub fn absorb(&mut self, other: &Histogram) {
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
     }
 
     /// Estimate the q-quantile (q in [0, 1]) in seconds, linearly
@@ -646,7 +671,7 @@ impl Obs {
             // Commutative fold: XOR of mixed (id, digest) pairs, so the
             // engine-wide digest is invariant to retirement order —
             // policy and timing reorder retirements, never streams.
-            self.engine_digest ^= mix64(id ^ mix64(digest));
+            self.engine_digest ^= fold_stream(id, digest);
             self.digest_seqs += 1;
         }
         if self.counters_on() {
@@ -809,6 +834,40 @@ mod tests {
         assert!((0.9..=1.0).contains(&p99), "p99={p99}");
         assert_eq!(h.quantile(0.0).unwrap(), 0.001, "q0 clamps to min");
         assert_eq!(h.quantile(1.0).unwrap(), 1.0, "q1 clamps to max");
+    }
+
+    #[test]
+    fn histogram_absorb_matches_single_recorder() {
+        let mut whole = Histogram::default();
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        for ms in 1..=500u64 {
+            whole.record_secs(ms as f64 / 1e3);
+            a.record_secs(ms as f64 / 1e3);
+        }
+        for ms in 501..=1000u64 {
+            whole.record_secs(ms as f64 / 1e3);
+            b.record_secs(ms as f64 / 1e3);
+        }
+        a.absorb(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        assert_eq!(a.quantile(0.5), whole.quantile(0.5));
+        assert_eq!(a.quantile(0.99), whole.quantile(0.99));
+        // absorbing an empty histogram is a no-op
+        let before = a.count();
+        a.absorb(&Histogram::default());
+        assert_eq!(a.count(), before);
+        assert_eq!(a.min(), whole.min());
+    }
+
+    #[test]
+    fn fold_stream_matches_engine_fold() {
+        let mut obs = Obs::new(ObsConfig::default()).unwrap();
+        obs.on_retire(0, 7, "stop", false, 3, 42, None, 0.1, None);
+        obs.on_retire(0, 9, "stop", false, 3, 99, None, 0.1, None);
+        assert_eq!(obs.engine_digest(), fold_stream(7, 42) ^ fold_stream(9, 99));
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Prefix-affinity table: route multiturn sessions back to the replica
+//! that already holds their published KV.
+//!
+//! The table maps **chain hashes of block-aligned prompt prefixes** to the
+//! replica that last served a request with that prefix. Hashing mirrors
+//! the prefix cache's indexing granularity: a prompt of `L` tokens
+//! contributes one hash per *complete* `block_size` block, where the hash
+//! of block `k` chains over tokens `0..(k+1)*block_size` (FNV-1a 64 via
+//! [`crate::obs::digest_push`], same primitive as the stream digests). A
+//! follow-up turn whose prompt extends a previous conversation shares all
+//! of the older prompt's complete blocks, so the *longest known prefix*
+//! lookup lands it on the replica whose radix tree already holds those
+//! pages — turning a cross-replica cache miss into an intra-replica
+//! [`crate::engine::kv`] prefix hit.
+//!
+//! The table is routing *advice*, never correctness: a stale entry (the
+//! replica since evicted the pages, or died) only costs a re-prefill on
+//! whichever replica the router settles on. Entries are bounded by an
+//! insertion-order eviction queue so a long-running fleet cannot grow the
+//! table without limit.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::obs::{digest_push, DIGEST_EMPTY};
+
+/// Chain hashes of every complete `block_size`-aligned prefix of `prompt`.
+///
+/// `hashes[k]` covers tokens `0..(k+1)*block_size`; a trailing partial
+/// block contributes nothing (its KV is never published block-aligned, so
+/// it cannot be shared). `block_size == 0` yields no hashes.
+pub fn block_hashes(prompt: &[u32], block_size: usize) -> Vec<u64> {
+    if block_size == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(prompt.len() / block_size);
+    let mut h = DIGEST_EMPTY;
+    for (i, &tok) in prompt.iter().enumerate() {
+        h = digest_push(h, tok);
+        if (i + 1) % block_size == 0 {
+            out.push(h);
+        }
+    }
+    out
+}
+
+/// Bounded map from block-prefix chain hash to owning replica.
+#[derive(Debug)]
+pub struct AffinityTable {
+    map: HashMap<u64, usize>,
+    /// insertion order for eviction; keys are pushed once, on first insert
+    order: VecDeque<u64>,
+    cap: usize,
+}
+
+impl AffinityTable {
+    /// `cap` bounds the number of tracked prefix blocks (entries, not
+    /// prompts). A cap of 0 disables the table entirely.
+    pub fn new(cap: usize) -> AffinityTable {
+        AffinityTable { map: HashMap::new(), order: VecDeque::new(), cap }
+    }
+
+    /// Longest-known-prefix lookup: the replica recorded for the deepest
+    /// complete block of `prompt` present in the table, plus how many
+    /// blocks matched. `None` when no prefix block is known.
+    pub fn lookup(
+        &self,
+        prompt: &[u32],
+        block_size: usize,
+    ) -> Option<(usize, usize)> {
+        let mut best = None;
+        for (k, h) in block_hashes(prompt, block_size).iter().enumerate() {
+            if let Some(&replica) = self.map.get(h) {
+                best = Some((replica, k + 1));
+            }
+        }
+        best
+    }
+
+    /// Record that `replica` now holds the published KV for every complete
+    /// block of `prompt`. Existing entries are re-pointed (the most recent
+    /// server of a prefix is the best bet for live pages).
+    pub fn record(&mut self, prompt: &[u32], block_size: usize, replica: usize) {
+        if self.cap == 0 {
+            return;
+        }
+        for h in block_hashes(prompt, block_size) {
+            if self.map.insert(h, replica).is_none() {
+                self.order.push_back(h);
+            }
+        }
+        while self.map.len() > self.cap {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Drop every entry pointing at `replica` (used when a replica is
+    /// drained from rotation; its KV is gone, so the advice is pure
+    /// misdirection).
+    pub fn purge_replica(&mut self, replica: usize) {
+        self.map.retain(|_, r| *r != replica);
+        // stale order entries are harmless: eviction skips keys that are
+        // no longer in the map only at the cost of an early pop, and the
+        // queue itself is bounded by total insertions still mapped.
+        self.order.retain(|h| self.map.contains_key(h));
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_hashes_cover_complete_blocks_only() {
+        let prompt: Vec<u32> = (0..37).collect();
+        let hs = block_hashes(&prompt, 16);
+        assert_eq!(hs.len(), 2, "37 tokens / 16 = 2 complete blocks");
+        // chain property: the k-th hash equals a fresh chain over the
+        // first (k+1)*block_size tokens
+        let mut h = DIGEST_EMPTY;
+        for &t in &prompt[..16] {
+            h = digest_push(h, t);
+        }
+        assert_eq!(hs[0], h);
+        for &t in &prompt[16..32] {
+            h = digest_push(h, t);
+        }
+        assert_eq!(hs[1], h);
+        assert!(block_hashes(&prompt[..15], 16).is_empty());
+        assert!(block_hashes(&prompt, 0).is_empty());
+    }
+
+    #[test]
+    fn longest_prefix_wins() {
+        let mut t = AffinityTable::new(1024);
+        let base: Vec<u32> = (100..132).collect(); // 2 blocks @ 16
+        let mut long = base.clone();
+        long.extend(200..232); // 4 blocks @ 16
+        t.record(&base, 16, 1);
+        t.record(&long, 16, 3);
+        // a prompt extending `long` matches replica 3 at depth 4, even
+        // though its shallow blocks now also point at 3
+        let mut probe = long.clone();
+        probe.extend(300..310);
+        assert_eq!(t.lookup(&probe, 16), Some((3, 4)));
+        // a prompt sharing only the base prefix follows the most recent
+        // recorder of those blocks
+        let mut other = base.clone();
+        other.extend(900..940);
+        assert_eq!(t.lookup(&other, 16), Some((3, 2)));
+        // an unrelated prompt misses
+        let cold: Vec<u32> = (500..540).collect();
+        assert_eq!(t.lookup(&cold, 16), None);
+    }
+
+    #[test]
+    fn eviction_bounds_the_table() {
+        let mut t = AffinityTable::new(4);
+        for i in 0..100u32 {
+            let prompt: Vec<u32> = (i * 16..i * 16 + 16).collect();
+            t.record(&prompt, 16, (i % 3) as usize);
+            assert!(t.len() <= 4);
+        }
+        // most recent entries survive
+        let last: Vec<u32> = (99 * 16..99 * 16 + 16).collect();
+        assert!(t.lookup(&last, 16).is_some());
+    }
+
+    #[test]
+    fn purge_replica_removes_its_entries() {
+        let mut t = AffinityTable::new(1024);
+        let a: Vec<u32> = (0..16).collect();
+        let b: Vec<u32> = (50..66).collect();
+        t.record(&a, 16, 0);
+        t.record(&b, 16, 2);
+        t.purge_replica(2);
+        assert_eq!(t.lookup(&a, 16), Some((0, 1)));
+        assert_eq!(t.lookup(&b, 16), None);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn zero_cap_disables_recording() {
+        let mut t = AffinityTable::new(0);
+        let a: Vec<u32> = (0..16).collect();
+        t.record(&a, 16, 0);
+        assert!(t.is_empty());
+        assert_eq!(t.lookup(&a, 16), None);
+    }
+}

@@ -1,0 +1,809 @@
+//! Multi-replica router: one front door over N engine replicas.
+//!
+//! The server no longer owns a single engine thread; it owns a [`Router`]
+//! that owns `cfg.replicas` **replica threads**, each running its own
+//! [`crate::runtime::Runtime`] + [`crate::engine::Engine`] over the same
+//! baked artifacts directory (the PJRT client is not `Send`, so — exactly
+//! like the old engine thread — each runtime is created *inside* the
+//! thread that drives it). Connection handlers call [`Router::submit`] /
+//! [`Router::cancel`] / [`Router::stats`] instead of talking to an engine
+//! channel.
+//!
+//! # Routing
+//!
+//! Placement is **prefix-affinity first**: the prompt's complete
+//! `block_size`-aligned prefix blocks are chain-hashed
+//! ([`affinity::AffinityTable`]) and looked up longest-prefix-first, so a
+//! multiturn session lands on the replica whose prefix cache already
+//! holds its published KV. On a miss — or when the affine replica is dead
+//! or over its admission threshold — the router falls back to the
+//! least-loaded live replica (lowest in-flight count, ties to the lowest
+//! index, so single-threaded submission is deterministic).
+//!
+//! # Backpressure & shedding
+//!
+//! Each replica has a bounded admission queue of `cfg.router_queue`
+//! requests. Admission is priority-tiered: a request of priority class
+//! `p` may only enter a replica whose in-flight count is below
+//! `queue * (2 + min(p, 2)) / 4` — background traffic (p=0) sheds at half
+//! the queue, p=1 at three quarters, p≥2 at the full bound — so load
+//! shedding degrades the fleet from the bottom of the priority ladder up.
+//! When **no** live replica is under the caller's threshold the request
+//! is rejected immediately with a synthesized wire response:
+//! `finish_reason: "overloaded"`, zero tokens, and an empty stream digest
+//! ([`crate::obs::DIGEST_EMPTY`]). Shed requests still consume a global
+//! id, count into `router.shed`, and fold into nothing.
+//!
+//! # Global ids & the fleet digest
+//!
+//! The router assigns **global** request ids (starting at 1, like a
+//! single engine) and each replica thread rewrites its engine-local ids
+//! to global ids in every wire line, so clients see one id space
+//! regardless of replica count. Because the per-engine digest fold mixes
+//! engine-local ids, XOR-ing replica `engine_digest`s is *not* invariant
+//! across replica counts; the router therefore maintains its own **fleet
+//! digest**, folding `fold_stream(global_id, stream_digest)`
+//! ([`crate::obs::fold_stream`]) for every *deterministic, non-aborted*
+//! stream at retire time. Under single-threaded submission the global ids
+//! are a pure function of submission order, so the same deterministic
+//! workload produces the same `fleet_digest` at 1, 2, or 4 replicas —
+//! that invariance is pinned by `tests/router.rs` and the
+//! `determinism_audit --replicas` example.
+//!
+//! # Failure containment
+//!
+//! A replica whose engine fails to start, or whose `step()` errors
+//! (e.g. [`crate::engine::FaultPlan::FailStepAt`], targetable at one
+//! replica via `EngineConfig::fault_replica`), is **drained from
+//! rotation**: its in-flight requests finish with `finish_reason:
+//! "error"`, its affinity entries are purged, a final
+//! [`ReplicaSnapshot`] is parked for stats continuity, and the router
+//! simply stops routing to it. Other replicas are untouched — their
+//! committed streams stay bitwise identical to an undisturbed run. Only
+//! when *every* replica is dead does the server report itself poisoned,
+//! matching the single-engine lifecycle.
+
+pub mod affinity;
+mod replica;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::engine::{
+    Engine, EngineConfig, EngineMetrics, FaultPlan, FinishReason, KvStats,
+    PolicyKind, Request, RequestOutput, SeqMetrics,
+};
+use crate::obs::{digest_hex, fold_stream, Histogram, Obs, ObsLevel, DIGEST_EMPTY};
+use crate::server::{error_line, render_metrics_prom, render_output, render_stats};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
+use crate::util::now_secs;
+
+use affinity::AffinityTable;
+use replica::{replica_thread_main, ToReplica};
+
+/// Affinity hashing granularity when `cfg.block_size == 0` (manifest
+/// default). Affinity quality degrades gracefully if this differs from
+/// the engine's actual KV block size — routing advice, not correctness.
+const FALLBACK_AFFINITY_BLOCK: usize = 16;
+
+/// Bound on tracked prefix blocks in the affinity table.
+const AFFINITY_TABLE_CAP: usize = 65_536;
+
+/// How long the router waits for a replica to answer a snapshot /
+/// cancel / policy round-trip before giving up on it for that call.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Events a submission's reply channel receives: `Accepted` once (global
+/// id), zero or more `Line`s (stream deltas, wire-encoded), then exactly
+/// one `Done` (final wire line). Shed and failed submissions skip
+/// `Accepted` and go straight to `Done`.
+#[derive(Debug)]
+pub enum ConnEvent {
+    Accepted(u64),
+    Line(String),
+    Done(String),
+}
+
+/// Point-in-time copy of one replica's observable state — everything
+/// [`render_stats`] / [`render_metrics_prom`] need, detached from the
+/// engine so snapshots can be merged ([`ReplicaSnapshot::absorb`]) and
+/// parked for dead replicas.
+#[derive(Debug, Clone)]
+pub struct ReplicaSnapshot {
+    pub metrics: EngineMetrics,
+    pub kv: KvStats,
+    /// streaming connections attached to this replica right now
+    pub waiters: usize,
+    pub verify_policy: &'static str,
+    pub tp_collective: String,
+    pub obs_level: ObsLevel,
+    /// the replica's own engine digest (folds engine-*local* ids)
+    pub engine_digest: u64,
+    pub digest_seqs: u64,
+    /// latency histograms in wire order (ttft, e2e, queue_wait,
+    /// step_wall, verify_wall)
+    pub hists: Vec<(&'static str, Histogram)>,
+}
+
+impl ReplicaSnapshot {
+    /// Snapshot with empty observability state (unit tests, placeholders).
+    pub fn new(
+        metrics: EngineMetrics,
+        kv: KvStats,
+        waiters: usize,
+        verify_policy: &'static str,
+        tp_collective: &str,
+    ) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            metrics,
+            kv,
+            waiters,
+            verify_policy,
+            tp_collective: tp_collective.to_string(),
+            obs_level: ObsLevel::Off,
+            engine_digest: 0,
+            digest_seqs: 0,
+            hists: vec![
+                ("ttft", Histogram::default()),
+                ("e2e", Histogram::default()),
+                ("queue_wait", Histogram::default()),
+                ("step_wall", Histogram::default()),
+                ("verify_wall", Histogram::default()),
+            ],
+        }
+    }
+
+    /// Snapshot with the digest and histograms copied out of `obs`.
+    pub fn from_obs(
+        metrics: EngineMetrics,
+        kv: KvStats,
+        waiters: usize,
+        verify_policy: &'static str,
+        tp_collective: &str,
+        obs: &Obs,
+    ) -> ReplicaSnapshot {
+        let mut s =
+            ReplicaSnapshot::new(metrics, kv, waiters, verify_policy, tp_collective);
+        s.obs_level = obs.level();
+        s.engine_digest = obs.engine_digest();
+        s.digest_seqs = obs.digest_seqs();
+        s.hists = obs
+            .histograms()
+            .iter()
+            .map(|(name, h)| (*name, (*h).clone()))
+            .collect();
+        s
+    }
+
+    pub fn from_engine(eng: &Engine<'_>, waiters: usize) -> ReplicaSnapshot {
+        ReplicaSnapshot::from_obs(
+            eng.metrics.clone(),
+            eng.kv_stats(),
+            waiters,
+            eng.cfg.verify_policy.kind.name(),
+            eng.runtime().tp_collective(),
+            &eng.obs,
+        )
+    }
+
+    /// Fold another replica's snapshot into this one: counters sum,
+    /// high-water marks max, histograms merge bucket-wise, engine digests
+    /// XOR (order-independent), digest sequence counts sum.
+    pub fn absorb(&mut self, other: &ReplicaSnapshot) {
+        self.metrics.absorb(&other.metrics);
+        self.kv.absorb(&other.kv);
+        self.waiters += other.waiters;
+        self.obs_level = self.obs_level.max(other.obs_level);
+        self.engine_digest ^= other.engine_digest;
+        self.digest_seqs += other.digest_seqs;
+        for ((_, h), (_, o)) in self.hists.iter_mut().zip(other.hists.iter()) {
+            h.absorb(o);
+        }
+    }
+}
+
+/// Router-level counters, exposed for tests / examples without going
+/// through the JSON stats surface.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouterCounters {
+    pub replicas: usize,
+    pub live_replicas: usize,
+    pub routed: u64,
+    pub affinity_hits: u64,
+    pub shed: u64,
+    pub fleet_digest: u64,
+    pub fleet_seqs: u64,
+}
+
+/// Routing state shared between caller threads (routing decisions) and
+/// replica threads (retire bookkeeping). Every critical section is a few
+/// map operations — nothing blocks while holding the lock.
+pub(crate) struct Shared {
+    next_id: u64,
+    /// global id -> replica index, while the request is in flight
+    owner: HashMap<u64, usize>,
+    inflight: Vec<usize>,
+    live: Vec<bool>,
+    senders: Vec<Sender<ToReplica>>,
+    affinity: AffinityTable,
+    affinity_on: bool,
+    block: usize,
+    queue_cap: usize,
+    routed: u64,
+    affinity_hits: u64,
+    shed: u64,
+    fleet_digest: u64,
+    fleet_seqs: u64,
+    /// final snapshot of each dead replica (None while live, or if the
+    /// engine never came up)
+    final_snaps: Vec<Option<ReplicaSnapshot>>,
+    /// first failure message; the poisoned-server error once all are dead
+    poison_msg: Option<String>,
+    poisoned: Arc<AtomicBool>,
+}
+
+impl Shared {
+    fn any_live(&self) -> bool {
+        self.live.iter().any(|&l| l)
+    }
+
+    /// Admission bound for priority class `p`:
+    /// `queue * (2 + min(p, 2)) / 4` — p0 sheds at half the queue, p1 at
+    /// three quarters, p>=2 at the full bound.
+    fn threshold(&self, p: u8) -> usize {
+        let c = self.queue_cap.max(1);
+        (c * (2 + p.min(2) as usize) / 4).max(1)
+    }
+
+    /// Pick a replica for `req`: affinity hit if the affine replica is
+    /// live and under threshold, else least-loaded live replica under
+    /// threshold (ties to the lowest index), else `None` (shed).
+    fn pick(&self, req: &Request) -> Option<(usize, bool)> {
+        let thr = self.threshold(req.priority);
+        if self.affinity_on {
+            if let Some((r, _depth)) = self.affinity.lookup(&req.prompt, self.block)
+            {
+                if self.live[r] && self.inflight[r] < thr {
+                    return Some((r, true));
+                }
+            }
+        }
+        let mut best: Option<usize> = None;
+        for r in 0..self.live.len() {
+            if self.live[r]
+                && self.inflight[r] < thr
+                && best.map_or(true, |b| self.inflight[r] < self.inflight[b])
+            {
+                best = Some(r);
+            }
+        }
+        best.map(|r| (r, false))
+    }
+
+    /// Retire bookkeeping, called by replica threads for every finished
+    /// request: free the slot and fold deterministic, non-aborted streams
+    /// into the fleet digest over the *global* id.
+    pub(crate) fn finish(
+        &mut self,
+        replica: usize,
+        gid: u64,
+        deterministic: bool,
+        aborted: bool,
+        stream_digest: u64,
+    ) {
+        self.owner.remove(&gid);
+        if self.inflight[replica] > 0 {
+            self.inflight[replica] -= 1;
+        }
+        if deterministic && !aborted {
+            self.fleet_digest ^= fold_stream(gid, stream_digest);
+            self.fleet_seqs += 1;
+        }
+    }
+
+    /// Bookkeeping for a routed request that never entered an engine
+    /// (submit error, shutdown reject, dead-replica race).
+    pub(crate) fn finish_unrouted(&mut self, replica: usize, gid: u64) {
+        self.owner.remove(&gid);
+        if self.inflight[replica] > 0 {
+            self.inflight[replica] -= 1;
+        }
+    }
+
+    /// Drain `replica` from rotation: stop routing to it, drop its
+    /// affinity entries and owner map entries, park its final snapshot,
+    /// and flip the fleet to poisoned if it was the last one standing.
+    pub(crate) fn mark_dead(
+        &mut self,
+        replica: usize,
+        snap: Option<ReplicaSnapshot>,
+        msg: &str,
+    ) {
+        self.live[replica] = false;
+        self.inflight[replica] = 0;
+        self.owner.retain(|_, r| *r != replica);
+        self.affinity.purge_replica(replica);
+        self.final_snaps[replica] = snap;
+        if self.poison_msg.is_none() {
+            self.poison_msg = Some(msg.to_string());
+        }
+        if !self.any_live() {
+            self.poisoned.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+/// The `{ok, id, cancelled}` ack line shared by live-engine and
+/// router-resolved cancels.
+pub(crate) fn cancel_ack(id: u64, cancelled: bool) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::num(id as f64)),
+        ("cancelled", Json::Bool(cancelled)),
+    ])
+    .dump()
+}
+
+/// In-process front door over N engine replicas. Cheap to share: all
+/// methods take `&self`; routing state lives behind one mutex and the
+/// engines behind per-replica channels.
+pub struct Router {
+    shared: Arc<Mutex<Shared>>,
+    stop: Arc<AtomicBool>,
+    poisoned: Arc<AtomicBool>,
+    tok: Arc<Tokenizer>,
+    replicas: usize,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Router {
+    /// Spawn `cfg.replicas` replica threads over `artifacts_dir`. Engine
+    /// startup happens inside each thread; a replica that fails to come
+    /// up is born dead (drained from rotation) rather than failing the
+    /// router.
+    pub fn new(
+        artifacts_dir: &str,
+        cfg: &EngineConfig,
+        tok: Arc<Tokenizer>,
+    ) -> Router {
+        Router::with_flags(
+            artifacts_dir,
+            cfg,
+            tok,
+            Arc::new(AtomicBool::new(false)),
+            Arc::new(AtomicBool::new(false)),
+        )
+    }
+
+    /// As [`Router::new`], with caller-owned stop / poisoned flags (the
+    /// server shares these with its accept loop).
+    pub fn with_flags(
+        artifacts_dir: &str,
+        cfg: &EngineConfig,
+        tok: Arc<Tokenizer>,
+        stop: Arc<AtomicBool>,
+        poisoned: Arc<AtomicBool>,
+    ) -> Router {
+        let n = cfg.replicas.max(1);
+        let block = if cfg.block_size > 0 {
+            cfg.block_size
+        } else {
+            FALLBACK_AFFINITY_BLOCK
+        };
+        let mut txs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let shared = Arc::new(Mutex::new(Shared {
+            next_id: 1,
+            owner: HashMap::new(),
+            inflight: vec![0; n],
+            live: vec![true; n],
+            senders: txs,
+            affinity: AffinityTable::new(AFFINITY_TABLE_CAP),
+            affinity_on: cfg.router_affinity,
+            block,
+            queue_cap: cfg.router_queue.max(1),
+            routed: 0,
+            affinity_hits: 0,
+            shed: 0,
+            fleet_digest: 0,
+            fleet_seqs: 0,
+            final_snaps: vec![None; n],
+            poison_msg: None,
+            poisoned: poisoned.clone(),
+        }));
+        let mut threads = Vec::with_capacity(n);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let mut rcfg = cfg.clone();
+            // a targeted fault plan poisons exactly one replica
+            if let Some(target) = cfg.fault_replica {
+                if target != i {
+                    rcfg.fault = FaultPlan::None;
+                }
+            }
+            let dir = artifacts_dir.to_string();
+            let tok_i = tok.clone();
+            let stop_i = stop.clone();
+            let shared_i = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("llm42-replica-{i}"))
+                .spawn(move || {
+                    replica_thread_main(i, dir, rcfg, tok_i, rx, stop_i, shared_i)
+                })
+                .expect("spawn replica thread");
+            threads.push(handle);
+        }
+        Router {
+            shared,
+            stop,
+            poisoned,
+            tok,
+            replicas: n,
+            threads: Mutex::new(threads),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// True once every replica is dead — the single-engine "poisoned"
+    /// lifecycle, generalized.
+    pub fn poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+
+    fn poison_line(&self) -> String {
+        let msg = self
+            .shared
+            .lock()
+            .unwrap()
+            .poison_msg
+            .clone()
+            .unwrap_or_else(|| "no live replicas".to_string());
+        error_line(&format!("engine poisoned: {msg}"))
+    }
+
+    /// Route a request. The reply channel receives `Accepted(global_id)`
+    /// then `Line`s then `Done` — or just `Done` for shed / rejected
+    /// submissions.
+    pub fn submit(&self, req: Request, reply: Sender<ConnEvent>) {
+        let routed = {
+            let mut sh = self.shared.lock().unwrap();
+            if !sh.any_live() {
+                drop(sh);
+                let _ = reply.send(ConnEvent::Done(self.poison_line()));
+                return;
+            }
+            match sh.pick(&req) {
+                Some((r, aff)) => {
+                    let gid = sh.next_id;
+                    sh.next_id += 1;
+                    sh.routed += 1;
+                    if aff {
+                        sh.affinity_hits += 1;
+                    }
+                    sh.inflight[r] += 1;
+                    sh.owner.insert(gid, r);
+                    if sh.affinity_on {
+                        let block = sh.block;
+                        sh.affinity.record(&req.prompt, block, r);
+                    }
+                    Ok((gid, r, sh.senders[r].clone()))
+                }
+                None => {
+                    let gid = sh.next_id;
+                    sh.next_id += 1;
+                    sh.shed += 1;
+                    Err(gid)
+                }
+            }
+        };
+        match routed {
+            Ok((gid, r, tx)) => {
+                if let Err(send_err) = tx.send(ToReplica::Submit { gid, req, reply })
+                {
+                    // replica thread already gone (shutdown race): undo
+                    // the slot and fail the submission explicitly
+                    self.shared.lock().unwrap().finish_unrouted(r, gid);
+                    if let ToReplica::Submit { reply, .. } = send_err.0 {
+                        let _ = reply
+                            .send(ConnEvent::Done(error_line("engine unavailable")));
+                    }
+                }
+            }
+            Err(gid) => {
+                let _ = reply.send(ConnEvent::Done(self.shed_done(gid, &req)));
+            }
+        }
+    }
+
+    /// The synthesized wire line for a shed request: `overloaded`, zero
+    /// tokens, empty stream digest.
+    fn shed_done(&self, gid: u64, req: &Request) -> String {
+        let now = now_secs();
+        let out = RequestOutput {
+            id: gid,
+            deterministic: req.deterministic,
+            priority: req.priority,
+            tokens: Vec::new(),
+            finish_reason: FinishReason::Overloaded,
+            metrics: SeqMetrics {
+                arrive_time: now,
+                finish_time: now,
+                ..SeqMetrics::default()
+            },
+            fast_trace: Vec::new(),
+            stream_digest: DIGEST_EMPTY,
+        };
+        render_output(&out, &self.tok)
+    }
+
+    /// Cancel by global id, resolving the owning replica; unknown or
+    /// already-finished ids ack `cancelled: false` (idempotent).
+    pub fn cancel(&self, gid: u64) -> String {
+        let target = {
+            let sh = self.shared.lock().unwrap();
+            if !sh.any_live() {
+                drop(sh);
+                return self.poison_line();
+            }
+            sh.owner.get(&gid).map(|&r| sh.senders[r].clone())
+        };
+        if let Some(tx) = target {
+            let (rtx, rrx) = mpsc::channel();
+            if tx
+                .send(ToReplica::Cancel { gid, reply: Some(rtx) })
+                .is_ok()
+            {
+                if let Ok(line) = rrx.recv_timeout(REPLY_TIMEOUT) {
+                    return line;
+                }
+            }
+        }
+        cancel_ack(gid, false)
+    }
+
+    /// Fire-and-forget cancel (client disconnected mid-stream).
+    pub fn cancel_silent(&self, gid: u64) {
+        let target = {
+            let sh = self.shared.lock().unwrap();
+            sh.owner.get(&gid).map(|&r| sh.senders[r].clone())
+        };
+        if let Some(tx) = target {
+            let _ = tx.send(ToReplica::Cancel { gid, reply: None });
+        }
+    }
+
+    /// Broadcast a scheduler policy switch to every live replica.
+    pub fn set_policy(&self, kind: PolicyKind) -> String {
+        let senders = {
+            let sh = self.shared.lock().unwrap();
+            if !sh.any_live() {
+                drop(sh);
+                return self.poison_line();
+            }
+            sh.live
+                .iter()
+                .zip(sh.senders.iter())
+                .filter(|(l, _)| **l)
+                .map(|(_, tx)| tx.clone())
+                .collect::<Vec<_>>()
+        };
+        let mut last = None;
+        for tx in senders {
+            let (rtx, rrx) = mpsc::channel();
+            if tx.send(ToReplica::SetPolicy(kind, rtx)).is_ok() {
+                if let Ok(line) = rrx.recv_timeout(REPLY_TIMEOUT) {
+                    last = Some(line);
+                }
+            }
+        }
+        last.unwrap_or_else(|| error_line("engine unavailable"))
+    }
+
+    /// Observability events from one replica's ring buffer (dead replicas
+    /// answer with their poison line until shutdown).
+    pub fn events(&self, since: u64, replica: usize) -> String {
+        let tx = {
+            let sh = self.shared.lock().unwrap();
+            match sh.senders.get(replica) {
+                Some(tx) => tx.clone(),
+                None => {
+                    drop(sh);
+                    return error_line(&format!(
+                        "events 'replica' must be an integer in 0..{}",
+                        self.replicas
+                    ));
+                }
+            }
+        };
+        let (rtx, rrx) = mpsc::channel();
+        if tx.send(ToReplica::Events { since, reply: rtx }).is_ok() {
+            if let Ok(line) = rrx.recv_timeout(REPLY_TIMEOUT) {
+                return line;
+            }
+        }
+        error_line("engine unavailable")
+    }
+
+    /// Per-replica snapshots: live replicas are polled, dead replicas
+    /// return their parked final snapshot (None if the engine never came
+    /// up). Index `i` is replica `i`.
+    pub fn snapshots(&self) -> Vec<(bool, Option<ReplicaSnapshot>)> {
+        let (live, senders, finals) = {
+            let sh = self.shared.lock().unwrap();
+            (sh.live.clone(), sh.senders.clone(), sh.final_snaps.clone())
+        };
+        let mut out = Vec::with_capacity(live.len());
+        for r in 0..live.len() {
+            if !live[r] {
+                out.push((false, finals[r].clone()));
+                continue;
+            }
+            let (rtx, rrx) = mpsc::channel();
+            let snap = if senders[r].send(ToReplica::Snapshot(rtx)).is_ok() {
+                rrx.recv_timeout(REPLY_TIMEOUT).ok()
+            } else {
+                None
+            };
+            match snap {
+                Some(s) => out.push((true, Some(s))),
+                // the replica died between the live check and the poll:
+                // fall back to its parked snapshot
+                None => {
+                    let sh = self.shared.lock().unwrap();
+                    out.push((sh.live[r], sh.final_snaps[r].clone()));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn counters(&self) -> RouterCounters {
+        let sh = self.shared.lock().unwrap();
+        RouterCounters {
+            replicas: self.replicas,
+            live_replicas: sh.live.iter().filter(|&&l| l).count(),
+            routed: sh.routed,
+            affinity_hits: sh.affinity_hits,
+            shed: sh.shed,
+            fleet_digest: sh.fleet_digest,
+            fleet_seqs: sh.fleet_seqs,
+        }
+    }
+
+    /// The replica-count-invariant fleet digest (see module docs).
+    pub fn fleet_digest(&self) -> u64 {
+        self.shared.lock().unwrap().fleet_digest
+    }
+
+    /// Aggregated `{"cmd":"stats"}` line: engine sections merged across
+    /// replicas plus the `router` section. Poisoned once all replicas are
+    /// dead, like the single-engine server.
+    pub fn stats(&self) -> String {
+        if self.poisoned() {
+            return self.poison_line();
+        }
+        let snaps = self.snapshots();
+        let counters = self.counters();
+        let inflight = self.shared.lock().unwrap().inflight.clone();
+        let mut merged: Option<ReplicaSnapshot> = None;
+        let mut per_replica = Vec::with_capacity(snaps.len());
+        for (r, (live, snap)) in snaps.iter().enumerate() {
+            let mut entry = vec![
+                ("replica", Json::num(r as f64)),
+                ("live", Json::Bool(*live)),
+                ("inflight", Json::num(inflight[r] as f64)),
+            ];
+            if let Some(s) = snap {
+                entry.push(("waiters", Json::num(s.waiters as f64)));
+                entry.push(("steps", Json::num(s.metrics.steps as f64)));
+                entry.push((
+                    "committed_tokens",
+                    Json::num(s.metrics.committed_tokens as f64),
+                ));
+                entry.push(("live_seqs", Json::num(s.metrics.live_seqs as f64)));
+                entry.push((
+                    "kv_available_pages",
+                    Json::num(s.kv.available_pages() as f64),
+                ));
+                entry.push(("engine_digest", Json::str(digest_hex(s.engine_digest))));
+                entry.push(("digest_sequences", Json::num(s.digest_seqs as f64)));
+                match &mut merged {
+                    Some(m) => m.absorb(s),
+                    None => merged = Some(s.clone()),
+                }
+            }
+            per_replica.push(Json::obj(entry));
+        }
+        let Some(mut merged) = merged else {
+            return self.poison_line();
+        };
+        // shed requests never reach an engine; surface them in the merged
+        // finish-reason counters so the fleet view adds up
+        merged.metrics.finished_overloaded += counters.shed;
+        let router = Json::obj(vec![
+            ("replicas", Json::num(counters.replicas as f64)),
+            ("live_replicas", Json::num(counters.live_replicas as f64)),
+            ("routed", Json::num(counters.routed as f64)),
+            ("affinity_hits", Json::num(counters.affinity_hits as f64)),
+            ("shed", Json::num(counters.shed as f64)),
+            ("fleet_digest", Json::str(digest_hex(counters.fleet_digest))),
+            ("fleet_sequences", Json::num(counters.fleet_seqs as f64)),
+            ("per_replica", Json::Arr(per_replica)),
+        ]);
+        render_stats(&merged, Some(router))
+    }
+
+    /// Aggregated Prometheus exposition wrapped in the `{"cmd":"metrics"}`
+    /// reply envelope, with `llm42_router_*` series appended.
+    pub fn metrics(&self) -> String {
+        if self.poisoned() {
+            return self.poison_line();
+        }
+        let snaps = self.snapshots();
+        let counters = self.counters();
+        let mut merged: Option<ReplicaSnapshot> = None;
+        for (_, snap) in snaps.iter() {
+            if let Some(s) = snap {
+                match &mut merged {
+                    Some(m) => m.absorb(s),
+                    None => merged = Some(s.clone()),
+                }
+            }
+        }
+        let Some(mut merged) = merged else {
+            return self.poison_line();
+        };
+        merged.metrics.finished_overloaded += counters.shed;
+        let mut body = render_metrics_prom(&merged);
+        body.push_str(&format!(
+            "# TYPE llm42_router_replicas gauge\nllm42_router_replicas {}\n\
+             # TYPE llm42_router_live_replicas gauge\nllm42_router_live_replicas {}\n\
+             # TYPE llm42_router_routed_total counter\nllm42_router_routed_total {}\n\
+             # TYPE llm42_router_affinity_hits_total counter\nllm42_router_affinity_hits_total {}\n\
+             # TYPE llm42_router_shed_total counter\nllm42_router_shed_total {}\n\
+             # TYPE llm42_router_fleet_digest_info gauge\nllm42_router_fleet_digest_info{{digest=\"{}\"}} 1\n",
+            counters.replicas,
+            counters.live_replicas,
+            counters.routed,
+            counters.affinity_hits,
+            counters.shed,
+            digest_hex(counters.fleet_digest),
+        ));
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("content_type", Json::str("text/plain; version=0.0.4")),
+            ("metrics", Json::str(body)),
+        ])
+        .dump()
+    }
+
+    /// Signal stop and join every replica thread (idempotent). Replicas
+    /// finish their in-flight work before exiting, like the old engine
+    /// thread.
+    pub fn join(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.threads.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.join();
+    }
+}

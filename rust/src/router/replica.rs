@@ -1,0 +1,306 @@
+//! One engine replica: a thread owning its own `Runtime` + `Engine`
+//! (the PJRT client is not `Send`, so both are created inside the thread
+//! that drives them), fed by a per-replica channel from the [`Router`].
+//!
+//! The thread mirrors the old single-engine server loop — drain messages,
+//! step when not idle, route stream deltas and finished outputs to their
+//! waiters — with one addition: it maintains global↔local id maps and
+//! rewrites engine-local ids to the router's **global** ids in every wire
+//! line, and reports every retirement back to the shared router state
+//! ([`super::Shared::finish`]) so in-flight gauges and the fleet digest
+//! stay exact.
+//!
+//! On an engine failure the thread fails its waiters with
+//! `finish_reason: "error"`, parks a final [`ReplicaSnapshot`], marks
+//! itself dead in the shared state, and then keeps draining its channel
+//! with poisoned replies until shutdown — so racing senders always get an
+//! answer instead of a hang.
+//!
+//! [`Router`]: super::Router
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::engine::{Engine, EngineConfig, FinishReason, PolicyKind, Request};
+use crate::runtime::Runtime;
+use crate::server::{
+    error_line, render_delta_line, render_events, render_output, utf8_holdback,
+};
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Json;
+
+use super::{cancel_ack, ConnEvent, ReplicaSnapshot, Shared};
+
+/// Messages from the router to one replica thread.
+pub(crate) enum ToReplica {
+    Submit {
+        gid: u64,
+        req: Request,
+        reply: Sender<ConnEvent>,
+    },
+    Cancel {
+        gid: u64,
+        /// None = fire-and-forget (client disconnect)
+        reply: Option<Sender<String>>,
+    },
+    Snapshot(Sender<ReplicaSnapshot>),
+    Events {
+        since: u64,
+        reply: Sender<String>,
+    },
+    SetPolicy(PolicyKind, Sender<String>),
+}
+
+/// A streaming connection waiting on one request, keyed by engine-local
+/// id; `gid` is the wire-visible global id.
+struct Waiter {
+    gid: u64,
+    tx: Sender<ConnEvent>,
+    /// decoded-but-unsent bytes held back at UTF-8 boundaries
+    pending: Vec<u8>,
+}
+
+pub(crate) fn replica_thread_main(
+    index: usize,
+    artifacts_dir: String,
+    cfg: EngineConfig,
+    tok: Arc<Tokenizer>,
+    rx: Receiver<ToReplica>,
+    stop: Arc<AtomicBool>,
+    shared: Arc<Mutex<Shared>>,
+) {
+    let mut rt = match Runtime::load(&artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let msg = format!("engine failed to start: {e}");
+            shared.lock().unwrap().mark_dead(index, None, &msg);
+            dead_drain(index, &rx, &stop, &shared, &msg);
+            return;
+        }
+    };
+    let mut eng = match Engine::new(&mut rt, cfg) {
+        Ok(eng) => eng,
+        Err(e) => {
+            let msg = format!("engine failed to start: {e}");
+            shared.lock().unwrap().mark_dead(index, None, &msg);
+            dead_drain(index, &rx, &stop, &shared, &msg);
+            return;
+        }
+    };
+
+    let mut waiters: HashMap<u64, Waiter> = HashMap::new();
+    let mut l2g: HashMap<u64, u64> = HashMap::new();
+    let mut g2l: HashMap<u64, u64> = HashMap::new();
+
+    loop {
+        let stopping = stop.load(Ordering::SeqCst);
+
+        if eng.idle() && !stopping {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(msg) => handle_msg(
+                    index, msg, &mut eng, &mut waiters, &mut l2g, &mut g2l,
+                    &shared, false,
+                ),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    if eng.idle() {
+                        return;
+                    }
+                }
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => handle_msg(
+                    index, msg, &mut eng, &mut waiters, &mut l2g, &mut g2l,
+                    &shared, stopping,
+                ),
+                Err(_) => break,
+            }
+        }
+
+        if !eng.idle() {
+            if let Err(e) = eng.step() {
+                let msg = format!("engine failed: {e}");
+                let line = Json::obj(vec![
+                    ("error", Json::str(msg.clone())),
+                    ("finish_reason", Json::str("error")),
+                ])
+                .dump();
+                for (_, w) in waiters.drain() {
+                    let _ = w.tx.send(ConnEvent::Done(line.clone()));
+                }
+                let snap = ReplicaSnapshot::from_engine(&eng, 0);
+                shared.lock().unwrap().mark_dead(index, Some(snap), &msg);
+                dead_drain(index, &rx, &stop, &shared, &msg);
+                return;
+            }
+        }
+
+        // stream deltas: decode through the per-waiter byte buffer with
+        // UTF-8 holdback, rewriting ids to global
+        for d in eng.take_stream_deltas() {
+            let Some(w) = waiters.get_mut(&d.id) else { continue };
+            tok.decode_bytes(&d.tokens, &mut w.pending);
+            let emit = w.pending.len() - utf8_holdback(&w.pending);
+            if emit == 0 {
+                continue;
+            }
+            let text = String::from_utf8_lossy(&w.pending[..emit]).into_owned();
+            w.pending.drain(..emit);
+            let gid = w.gid;
+            if w.tx
+                .send(ConnEvent::Line(render_delta_line(gid, &d.tokens, &text)))
+                .is_err()
+            {
+                // client vanished mid-stream: reclaim the lane; retire
+                // bookkeeping happens when the abort output surfaces
+                waiters.remove(&d.id);
+                let _ = eng.abort(d.id, FinishReason::Cancelled);
+            }
+        }
+
+        for mut out in eng.take_finished() {
+            let local = out.id;
+            let gid = l2g.remove(&local).unwrap_or(local);
+            g2l.remove(&gid);
+            out.id = gid;
+            shared.lock().unwrap().finish(
+                index,
+                gid,
+                out.deterministic,
+                out.finish_reason.is_abort(),
+                out.stream_digest,
+            );
+            if let Some(mut w) = waiters.remove(&local) {
+                if !w.pending.is_empty() {
+                    let text = String::from_utf8_lossy(&w.pending).into_owned();
+                    let _ = w
+                        .tx
+                        .send(ConnEvent::Line(render_delta_line(gid, &[], &text)));
+                }
+                let _ = w.tx.send(ConnEvent::Done(render_output(&out, &tok)));
+            }
+        }
+
+        if stop.load(Ordering::SeqCst) && eng.idle() {
+            return;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_msg(
+    index: usize,
+    msg: ToReplica,
+    eng: &mut Engine<'_>,
+    waiters: &mut HashMap<u64, Waiter>,
+    l2g: &mut HashMap<u64, u64>,
+    g2l: &mut HashMap<u64, u64>,
+    shared: &Arc<Mutex<Shared>>,
+    stopping: bool,
+) {
+    match msg {
+        ToReplica::Submit { gid, req, reply } => {
+            if stopping {
+                let _ = reply
+                    .send(ConnEvent::Done(error_line("server is shutting down")));
+                shared.lock().unwrap().finish_unrouted(index, gid);
+                return;
+            }
+            match eng.submit(req) {
+                Ok(local) => {
+                    l2g.insert(local, gid);
+                    g2l.insert(gid, local);
+                    if reply.send(ConnEvent::Accepted(gid)).is_err() {
+                        // client gone before the ack: reclaim immediately;
+                        // the abort output settles the shared bookkeeping
+                        let _ = eng.abort(local, FinishReason::Cancelled);
+                    } else {
+                        waiters.insert(
+                            local,
+                            Waiter { gid, tx: reply, pending: Vec::new() },
+                        );
+                    }
+                }
+                Err(e) => {
+                    let _ =
+                        reply.send(ConnEvent::Done(error_line(&e.to_string())));
+                    shared.lock().unwrap().finish_unrouted(index, gid);
+                }
+            }
+        }
+        ToReplica::Cancel { gid, reply } => {
+            let cancelled = match g2l.get(&gid) {
+                Some(&local) => {
+                    eng.abort(local, FinishReason::Cancelled).unwrap_or(false)
+                }
+                None => false,
+            };
+            if let Some(r) = reply {
+                let _ = r.send(cancel_ack(gid, cancelled));
+            }
+        }
+        ToReplica::Snapshot(reply) => {
+            let _ = reply.send(ReplicaSnapshot::from_engine(eng, waiters.len()));
+        }
+        ToReplica::Events { since, reply } => {
+            let _ = reply.send(render_events(&eng.obs, since));
+        }
+        ToReplica::SetPolicy(kind, reply) => {
+            eng.set_policy(kind);
+            let _ = reply.send(
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("policy", Json::str(kind.name())),
+                ])
+                .dump(),
+            );
+        }
+    }
+}
+
+/// Terminal state of a dead replica: answer everything with the poison
+/// line until shutdown so racing senders never hang. The router stops
+/// routing here the moment `mark_dead` runs; anything that still arrives
+/// lost a race.
+fn dead_drain(
+    index: usize,
+    rx: &Receiver<ToReplica>,
+    stop: &Arc<AtomicBool>,
+    shared: &Arc<Mutex<Shared>>,
+    msg: &str,
+) {
+    eprintln!("replica {index} drained from rotation: {msg}");
+    let line = error_line(&format!("engine poisoned: {msg}"));
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(ToReplica::Submit { gid, reply, .. }) => {
+                let _ = reply.send(ConnEvent::Done(line.clone()));
+                shared.lock().unwrap().finish_unrouted(index, gid);
+            }
+            Ok(ToReplica::Cancel { gid, reply }) => {
+                if let Some(r) = reply {
+                    let _ = r.send(cancel_ack(gid, false));
+                }
+            }
+            // drop the reply channel: the router falls back to the
+            // parked final snapshot
+            Ok(ToReplica::Snapshot(_)) => {}
+            Ok(ToReplica::Events { reply, .. }) => {
+                let _ = reply.send(line.clone());
+            }
+            Ok(ToReplica::SetPolicy(_, reply)) => {
+                let _ = reply.send(line.clone());
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}

@@ -2,9 +2,12 @@
 //!
 //! The offline vendor set has no tokio/hyper, so the frontend is a plain
 //! `std::net` threaded server: connection threads parse one JSON request
-//! per line and forward it over an mpsc channel to the single engine
-//! thread (the PJRT client is not `Send`, so the engine owns its thread);
-//! finished outputs are routed back per-request.
+//! per line and submit it through the [`crate::router::Router`], which
+//! owns `replicas` engine threads (the PJRT client is not `Send`, so each
+//! engine owns its thread) and places requests by prefix affinity with
+//! least-loaded fallback; finished outputs are routed back per-request.
+//! With `replicas = 1` (the default) the wire behavior is identical to
+//! the historical single-engine server.
 //!
 //! Wire protocol (one JSON object per line):
 //!   -> {"text": "...", "max_new_tokens": 32, "deterministic": true,
@@ -22,7 +25,10 @@
 //! when the request was aborted before its first committed token.
 //!
 //! `finish_reason` is one of `stop` (stop token), `length` (budget
-//! reached), `cancelled`, `timeout`, or `error`.
+//! reached), `cancelled`, `timeout`, `error`, or `overloaded` (shed at
+//! admission by the router: every replica's bounded queue was above the
+//! request's priority-class threshold — the reply carries zero tokens and
+//! an empty `stream_digest`, and arrives immediately).
 //!
 //! With `"stream": true`, commit-boundary delta lines precede the final
 //! object:
@@ -79,7 +85,7 @@
 //!       "verify_policy": "stall", "certified_tokens": ...,
 //!       "verified_tokens": ..., "gate_repair_tokens": ...,
 //!       "finish_reasons": {"stop": ..., "length": ..., "cancelled": ...,
-//!                          "timeout": ..., "error": ...},
+//!                          "timeout": ..., "error": ..., "overloaded": ...},
 //!       "store": {"live_seqs": ..., "live_seqs_hwm": ..., "capacity": ...},
 //!       "class_e2e": {"0": {...}, ...},
 //!       "kv": {"block_size": ..., "user_pages": ..., "free_pages": ...,
@@ -90,10 +96,28 @@
 //!              "evicted_pages": ...},
 //!       "obs_level": "counters",
 //!       "digest": {"engine": "0x...", "sequences": ...},
+//!       "router": {"replicas": ..., "live_replicas": ..., "routed": ...,
+//!                  "affinity_hits": ..., "shed": ...,
+//!                  "fleet_digest": "0x...", "fleet_sequences": ...,
+//!                  "per_replica": [{"replica": 0, "live": true,
+//!                                   "inflight": ..., "waiters": ...,
+//!                                   "steps": ..., "committed_tokens": ...,
+//!                                   "live_seqs": ...,
+//!                                   "kv_available_pages": ...,
+//!                                   "engine_digest": "0x...",
+//!                                   "digest_sequences": ...}, ...]},
 //!       "latency": {"ttft": {...}, "e2e": {...}, "queue_wait": {...},
 //!                   "step_wall": {...}, "verify_wall": {...}}, ...}
 //!   -> {"cmd": "set_policy", "policy": "fair-share"}
 //!   <- {"ok": true, "policy": "fair-share"}
+//!
+//! With `replicas > 1`, engine-level stats sections are *merged* across
+//! replicas (counters sum, high-water marks max, histograms merge,
+//! `digest.engine` XORs the per-replica engine digests) and the `router`
+//! section breaks them out per replica. `router.fleet_digest` is the
+//! replica-count-invariant determinism digest folded over *global*
+//! request ids — see [`crate::router`] — and `set_policy` broadcasts to
+//! every live replica.
 //!
 //! `digest.engine` is the engine-wide determinism digest: an
 //! order-independent fold of every retired (non-aborted) request's
@@ -104,9 +128,11 @@
 //! / `p90_ms` / `p99_ms` / `max_ms` (`null` until a sample lands).
 //!
 //! Observability commands (see [`crate::obs`] for the event schema):
-//!   -> {"cmd": "events", "since": 0}
+//!   -> {"cmd": "events", "since": 0, "replica": 0}
 //!   <- {"ok": true, "events": [...], "next": 42, "dropped": 0}
-//! drains the bounded step-event journal past cursor `since`
+//! drains one replica's bounded step-event journal past cursor `since`
+//! (`replica` defaults to 0; each replica keeps its own journal and
+//! cursor space)
 //! (non-destructive — multiple readers can cursor independently; pass
 //! the returned `next` as the following `since`). `dropped` counts
 //! events that aged out of the ring before this cursor reached them.
@@ -123,14 +149,17 @@
 //! never results — committed tokens of deterministic requests are
 //! policy-independent, so switching is always safe.
 //!
-//! Lifecycle: the engine thread parks on its channel when idle (no busy
+//! Lifecycle: replica threads park on their channels when idle (no busy
 //! poll), `shutdown()`/`Drop` stop the accept loop, reject new
-//! submissions, drain in-flight requests, and join both threads. If
-//! `Engine::step` ever fails, every pending waiter receives an error
-//! object and the server flips a poisoned flag ([`Server::poisoned`]):
-//! subsequent submissions are rejected immediately instead of hanging.
+//! submissions, drain in-flight requests, and join every thread. If one
+//! replica's `Engine::step` fails, its pending waiters receive an error
+//! object and the router drains that replica from rotation — traffic
+//! continues on the survivors, bitwise unchanged. Only when *every*
+//! replica has failed does the server flip its poisoned flag
+//! ([`Server::poisoned`]): subsequent submissions are rejected
+//! immediately instead of hanging (with `replicas = 1` this is exactly
+//! the historical single-engine poisoned lifecycle).
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -139,12 +168,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::engine::{
-    Engine, EngineConfig, EngineMetrics, FinishReason, KvStats, PolicyKind,
-    Request, RequestOutput, StreamDelta,
+    EngineConfig, PolicyKind, Request, RequestOutput, StreamDelta,
 };
 use crate::error::{Error, Result};
 use crate::obs::{self, Histogram, Obs};
-use crate::runtime::Runtime;
+use crate::router::{ConnEvent, ReplicaSnapshot, Router};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::Json;
 
@@ -372,21 +400,17 @@ fn hist_json(h: &Histogram) -> Json {
     ])
 }
 
-/// Serialize engine-wide counters for the `{"cmd": "stats"}` wire command.
-/// `waiters` is the server's live reply-channel count — it must return to
-/// zero when the engine drains, or a waiter leaked. `obs` supplies the
-/// determinism digest (maintained at every obs level) and the latency
-/// histograms. `verify_policy` is the active verification trigger's name
-/// (`stall` | `slack` | `margin-gate`); `tp_collective` is the runtime's
-/// allreduce topology (`none` on single-device artifact sets).
-pub fn render_stats(
-    m: &EngineMetrics,
-    kv: &KvStats,
-    waiters: usize,
-    obs: &Obs,
-    verify_policy: &str,
-    tp_collective: &str,
-) -> String {
+/// Serialize engine-wide counters for the `{"cmd": "stats"}` wire
+/// command from a [`ReplicaSnapshot`] — one replica's state, or several
+/// merged via [`ReplicaSnapshot::absorb`] (counters sum, HWMs max,
+/// engine digests XOR). `snap.waiters` is the live reply-channel count —
+/// it must return to zero when the engines drain, or a waiter leaked.
+/// `router`, when present, is appended as the `"router"` section (the
+/// [`crate::router::Router`] builds it; single-engine embedders pass
+/// `None`).
+pub fn render_stats(snap: &ReplicaSnapshot, router: Option<Json>) -> String {
+    let m = &snap.metrics;
+    let kv = &snap.kv;
     let class_keys: Vec<String> =
         m.class_e2e.keys().map(|c| c.to_string()).collect();
     let class_e2e = Json::obj(
@@ -405,7 +429,7 @@ pub fn render_stats(
             })
             .collect(),
     );
-    Json::obj(vec![
+    let mut fields = vec![
         ("steps", Json::num(m.steps as f64)),
         ("decode_steps", Json::num(m.decode_steps as f64)),
         ("prefill_chunks", Json::num(m.prefill_chunks as f64)),
@@ -442,7 +466,7 @@ pub fn render_stats(
             "tp",
             Json::obj(vec![
                 ("degree", Json::num(m.tp_degree as f64)),
-                ("collective", Json::str(tp_collective)),
+                ("collective", Json::str(snap.tp_collective.as_str())),
                 ("allreduce_count", Json::num(m.tp_allreduces as f64)),
             ]),
         ),
@@ -463,7 +487,7 @@ pub fn render_stats(
         // vs. went through a verify window, and how many certified-span
         // positions were re-prefilled on the invariant graph before a
         // window (margin-gate only; all zero under stall/slack)
-        ("verify_policy", Json::str(verify_policy)),
+        ("verify_policy", Json::str(snap.verify_policy)),
         ("certified_tokens", Json::num(m.certified_tokens as f64)),
         ("verified_tokens", Json::num(m.verified_tokens as f64)),
         ("gate_repair_tokens", Json::num(m.gate_repair_tokens as f64)),
@@ -477,9 +501,10 @@ pub fn render_stats(
                 ("cancelled", Json::num(m.finished_cancelled as f64)),
                 ("timeout", Json::num(m.finished_timeout as f64)),
                 ("error", Json::num(m.finished_error as f64)),
+                ("overloaded", Json::num(m.finished_overloaded as f64)),
             ]),
         ),
-        ("waiters", Json::num(waiters as f64)),
+        ("waiters", Json::num(snap.waiters as f64)),
         // sequence-store occupancy: live gauge, live high-water mark, and
         // slab capacity. Capacity tracks the live HWM, never cumulative
         // request count — the O(live) scaling contract for long-lived
@@ -518,34 +543,34 @@ pub fn render_stats(
         // two runs of the same deterministic workload agree on it at any
         // policy / thread count / cache setting. Maintained at every obs
         // level, including `off`.
-        ("obs_level", Json::str(obs.level().as_str())),
+        ("obs_level", Json::str(snap.obs_level.as_str())),
         (
             "digest",
             Json::obj(vec![
-                ("engine", Json::str(obs::digest_hex(obs.engine_digest()))),
-                ("sequences", Json::num(obs.digest_seqs() as f64)),
+                ("engine", Json::str(obs::digest_hex(snap.engine_digest))),
+                ("sequences", Json::num(snap.digest_seqs as f64)),
             ]),
         ),
-        (
-            "latency",
-            Json::obj(
-                obs.histograms().iter().map(|(n, h)| (*n, hist_json(h))).collect(),
-            ),
-        ),
-    ])
-    .dump()
+    ];
+    if let Some(r) = router {
+        fields.push(("router", r));
+    }
+    fields.push((
+        "latency",
+        Json::obj(snap.hists.iter().map(|(n, h)| (*n, hist_json(h))).collect()),
+    ));
+    Json::obj(fields).dump()
 }
 
 /// Render engine counters, gauges, and latency summaries in the
-/// Prometheus text exposition format. Served by `{"cmd": "metrics"}` as
-/// a JSON string field so the wire stays one JSON object per line.
-pub fn render_metrics_prom(
-    m: &EngineMetrics,
-    kv: &KvStats,
-    waiters: usize,
-    obs: &Obs,
-) -> String {
+/// Prometheus text exposition format from a [`ReplicaSnapshot`] (one
+/// replica, or a fleet merged via [`ReplicaSnapshot::absorb`]). Served by
+/// `{"cmd": "metrics"}` as a JSON string field so the wire stays one JSON
+/// object per line; the router appends its `llm42_router_*` series.
+pub fn render_metrics_prom(snap: &ReplicaSnapshot) -> String {
     use std::fmt::Write as _;
+    let m = &snap.metrics;
+    let kv = &snap.kv;
     let mut s = String::new();
     let counters: &[(&str, &str, f64)] = &[
         ("steps_total", "engine steps executed", m.steps as f64),
@@ -604,7 +629,8 @@ pub fn render_metrics_prom(
                 + m.finished_length
                 + m.finished_cancelled
                 + m.finished_timeout
-                + m.finished_error) as f64,
+                + m.finished_error
+                + m.finished_overloaded) as f64,
         ),
     ];
     let gauges: &[(&str, &str, f64)] = &[
@@ -616,7 +642,7 @@ pub fn render_metrics_prom(
         (
             "waiters",
             "reply channels the server holds open",
-            waiters as f64,
+            snap.waiters as f64,
         ),
         ("kv_free_pages", "free KV pages", kv.free_pages as f64),
         (
@@ -632,7 +658,7 @@ pub fn render_metrics_prom(
         (
             "digest_sequences",
             "retired sequences folded into the engine digest",
-            obs.digest_seqs() as f64,
+            snap.digest_seqs as f64,
         ),
     ];
     for (name, help, v) in counters {
@@ -647,7 +673,7 @@ pub fn render_metrics_prom(
     }
     // histograms as summaries (quantiles computed server-side) rather
     // than native histograms: 5 series instead of 496 buckets each
-    for (name, h) in obs.histograms() {
+    for (name, h) in snap.hists.iter() {
         let _ = writeln!(s, "# HELP llm42_{name}_seconds {name} latency");
         let _ = writeln!(s, "# TYPE llm42_{name}_seconds summary");
         for q in [0.5, 0.9, 0.99] {
@@ -669,7 +695,7 @@ pub fn render_metrics_prom(
     let _ = writeln!(
         s,
         "llm42_engine_digest_info{{digest=\"{}\"}} 1",
-        obs::digest_hex(obs.engine_digest())
+        obs::digest_hex(snap.engine_digest)
     );
     s
 }
@@ -706,55 +732,19 @@ fn sleep_observing_stop(stop: &AtomicBool, total: Duration) {
     }
 }
 
-enum ToEngine {
-    Submit(Request, mpsc::Sender<ConnEvent>),
-    /// Abort a queued/live request. `reply` is present for the explicit
-    /// `{"cmd":"cancel"}` command and absent for implicit disconnect
-    /// cancellation (nobody is left to read the acknowledgement).
-    Cancel { id: u64, reply: Option<mpsc::Sender<String>> },
-    Stats(mpsc::Sender<String>),
-    SetPolicy(PolicyKind, mpsc::Sender<String>),
-    /// Drain the step-event journal past cursor `since`.
-    Events { since: u64, reply: mpsc::Sender<String> },
-    /// Prometheus text exposition (wrapped in a JSON object line).
-    Metrics(mpsc::Sender<String>),
-}
-
-/// Per-request server state while the engine owns the request: the reply
-/// channel plus the streamed-byte accumulator (tokens whose bytes end
-/// mid-UTF-8-character are held back until the character completes, so
-/// delta text concatenates bitwise to the final text).
-struct Waiter {
-    tx: mpsc::Sender<ConnEvent>,
-    pending: Vec<u8>,
-}
-
-/// Engine-to-connection events for one submitted request, in order:
-/// `Accepted` once, then zero or more `Line`s (stream deltas), then one
-/// `Done` (the final output or an error object).
-enum ConnEvent {
-    /// The engine accepted the request under this id. Not written to the
-    /// wire — the handler records it so a failed socket write can cancel
-    /// the in-flight request.
-    Accepted(u64),
-    /// One wire line to forward now (commit-boundary stream delta).
-    Line(String),
-    /// The final wire line; the request is complete.
-    Done(String),
-}
-
 /// A running server; `shutdown()` (and `Drop`) stops the accept loop,
-/// drains in-flight requests, and joins both threads.
+/// drains in-flight requests, and joins the accept and replica threads.
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     poisoned: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
-    engine_thread: Option<std::thread::JoinHandle<()>>,
+    router: Option<Arc<Router>>,
 }
 
 impl Server {
-    /// Bind `addr` (e.g. "127.0.0.1:0") and spin up the engine thread.
+    /// Bind `addr` (e.g. "127.0.0.1:0") and spin up `cfg.replicas` engine
+    /// replicas behind the router.
     pub fn start(
         artifacts_dir: String,
         cfg: EngineConfig,
@@ -766,16 +756,17 @@ impl Server {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let poisoned = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = mpsc::channel::<ToEngine>();
         let tok = Arc::new(tok);
 
-        // engine thread: owns the PJRT client; submits + steps + routes
-        let stop_e = stop.clone();
-        let poisoned_e = poisoned.clone();
-        let tok_e = tok.clone();
-        let engine_thread = std::thread::spawn(move || {
-            engine_thread_main(artifacts_dir, cfg, tok_e, rx, stop_e, poisoned_e);
-        });
+        // replica threads: each owns its PJRT client; the router places
+        // requests and aggregates stats
+        let router = Arc::new(Router::with_flags(
+            &artifacts_dir,
+            &cfg,
+            tok.clone(),
+            stop.clone(),
+            poisoned.clone(),
+        ));
 
         // accept thread: one handler thread per connection. Idle polls
         // (WouldBlock) back off exponentially — 1 ms doubling to the
@@ -783,16 +774,17 @@ impl Server {
         // burns fewer wakeups while a busy one stays at 1 ms latency;
         // every sleep observes the stop flag within ~1 ms.
         let stop_a = stop.clone();
+        let router_a = router.clone();
         let accept_thread = std::thread::spawn(move || {
             let mut backoff = ACCEPT_BACKOFF_MIN;
             while !stop_a.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         backoff = ACCEPT_BACKOFF_MIN;
-                        let tx = tx.clone();
+                        let router = router_a.clone();
                         let tok = tok.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_conn(stream, tx, &tok);
+                            let _ = handle_conn(stream, &router, &tok);
                         });
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -809,20 +801,22 @@ impl Server {
             stop,
             poisoned,
             accept_thread: Some(accept_thread),
-            engine_thread: Some(engine_thread),
+            router: Some(router),
         })
     }
 
-    /// True once the engine thread has failed: pending waiters were failed
-    /// with an error object and new submissions are rejected.
+    /// True once *every* replica has failed: pending waiters were failed
+    /// with an error object and new submissions are rejected. A partial
+    /// failure (some replicas dead, some live) does not poison the server
+    /// — the router routes around the dead ones.
     pub fn poisoned(&self) -> bool {
         self.poisoned.load(Ordering::Relaxed)
     }
 
     /// Stop accepting, reject new submissions, drain in-flight requests,
-    /// and join both threads. Idempotent with `Drop` (which calls the same
-    /// routine), so tests can never exit while the engine thread still
-    /// owns the runtime.
+    /// and join every thread. Idempotent with `Drop` (which calls the same
+    /// routine), so tests can never exit while a replica thread still
+    /// owns its runtime.
     pub fn shutdown(mut self) {
         self.shutdown_impl();
     }
@@ -832,8 +826,8 @@ impl Server {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        if let Some(t) = self.engine_thread.take() {
-            let _ = t.join();
+        if let Some(r) = self.router.take() {
+            r.join();
         }
     }
 }
@@ -844,247 +838,13 @@ impl Drop for Server {
     }
 }
 
-/// The engine thread: owns the runtime, drains the command channel
-/// (parking on it when idle instead of busy-polling), steps the engine,
-/// and routes stream deltas and finished outputs back to their waiters.
-fn engine_thread_main(
-    artifacts_dir: String,
-    cfg: EngineConfig,
-    tok: Arc<Tokenizer>,
-    rx: mpsc::Receiver<ToEngine>,
-    stop: Arc<AtomicBool>,
-    poisoned: Arc<AtomicBool>,
-) {
-    let mut rt = match Runtime::load(&artifacts_dir) {
-        Ok(rt) => rt,
-        Err(e) => {
-            return poisoned_drain(&rx, &stop, &poisoned, &format!("engine failed to start: {e}"))
-        }
-    };
-    let mut eng = match Engine::new(&mut rt, cfg) {
-        Ok(eng) => eng,
-        Err(e) => {
-            return poisoned_drain(&rx, &stop, &poisoned, &format!("engine failed to start: {e}"))
-        }
-    };
-    let mut waiters: HashMap<u64, Waiter> = HashMap::new();
-    loop {
-        let stopping = stop.load(Ordering::Relaxed);
-        // park on the channel while idle — no work to step, so the only
-        // thing that can change engine state is a message (or shutdown)
-        if eng.idle() && !stopping {
-            match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(msg) => handle_msg(msg, &mut eng, &mut waiters, false),
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                // every sender is gone (accept loop died): nothing can
-                // ever arrive and nothing is in flight — exit
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
-            }
-        }
-        while let Ok(msg) = rx.try_recv() {
-            handle_msg(msg, &mut eng, &mut waiters, stopping);
-        }
-        if !eng.idle() {
-            if let Err(e) = eng.step() {
-                // fail loudly instead of leaving every client hung: flip
-                // the poisoned flag first (submissions racing the failure
-                // are rejected), then fail all pending waiters
-                poisoned.store(true, Ordering::Relaxed);
-                let msg = format!("engine failed: {e}");
-                let line = Json::obj(vec![
-                    ("error", Json::str(msg.clone())),
-                    ("finish_reason", Json::str("error")),
-                ])
-                .dump();
-                for (_, w) in waiters.drain() {
-                    let _ = w.tx.send(ConnEvent::Done(line.clone()));
-                }
-                return poisoned_drain(&rx, &stop, &poisoned, &msg);
-            }
-        }
-        // route commit-boundary deltas; a dead receiver here means the
-        // connection is gone — abort the sequence instead of decoding to
-        // completion into a closed channel
-        for d in eng.take_stream_deltas() {
-            let dead = match waiters.get_mut(&d.id) {
-                Some(w) => {
-                    // accumulate bytes and emit only what is final: a
-                    // token run ending mid-UTF-8-character is held back
-                    // so delta text concatenates bitwise to the final
-                    // text no matter where commits land
-                    tok.decode_bytes(&d.tokens, &mut w.pending);
-                    let emit = w.pending.len() - utf8_holdback(&w.pending);
-                    let text =
-                        String::from_utf8_lossy(&w.pending[..emit]).into_owned();
-                    w.pending.drain(..emit);
-                    w.tx.send(ConnEvent::Line(render_delta_line(
-                        d.id, &d.tokens, &text,
-                    )))
-                    .is_err()
-                }
-                None => false,
-            };
-            if dead {
-                waiters.remove(&d.id);
-                let _ = eng.abort(d.id, FinishReason::Cancelled);
-            }
-        }
-        for out in eng.take_finished() {
-            if let Some(w) = waiters.remove(&out.id) {
-                if !w.pending.is_empty() {
-                    // final flush: whatever bytes were held back decode
-                    // now exactly as the full text's tail does (nothing
-                    // can follow them anymore)
-                    let text = String::from_utf8_lossy(&w.pending).into_owned();
-                    let _ = w
-                        .tx
-                        .send(ConnEvent::Line(render_delta_line(out.id, &[], &text)));
-                }
-                let _ = w.tx.send(ConnEvent::Done(render_output(&out, &tok)));
-            }
-        }
-        // the shutdown exit sits *after* routing: work finished or
-        // cancelled during the drain (e.g. a cancel handled above) must
-        // still reach its waiter before the thread goes away
-        if stop.load(Ordering::Relaxed) && eng.idle() {
-            return;
-        }
-    }
-}
-
-fn handle_msg(
-    msg: ToEngine,
-    eng: &mut Engine<'_>,
-    waiters: &mut HashMap<u64, Waiter>,
-    stopping: bool,
-) {
-    match msg {
-        ToEngine::Submit(req, reply) => {
-            if stopping {
-                let _ = reply.send(ConnEvent::Done(error_line(
-                    "server is shutting down",
-                )));
-                return;
-            }
-            match eng.submit(req) {
-                Ok(id) => {
-                    if reply.send(ConnEvent::Accepted(id)).is_err() {
-                        // the connection died before the engine even
-                        // accepted: don't run a request nobody will read
-                        let _ = eng.abort(id, FinishReason::Cancelled);
-                    } else {
-                        waiters.insert(id, Waiter { tx: reply, pending: Vec::new() });
-                    }
-                }
-                Err(e) => {
-                    let _ = reply.send(ConnEvent::Done(error_line(&e.to_string())));
-                }
-            }
-        }
-        ToEngine::Cancel { id, reply } => {
-            let cancelled = match eng.abort(id, FinishReason::Cancelled) {
-                Ok(hit) => hit,
-                Err(e) => {
-                    eprintln!("cancel of request {id} failed: {e}");
-                    false
-                }
-            };
-            if let Some(r) = reply {
-                let _ = r.send(
-                    Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("id", Json::num(id as f64)),
-                        ("cancelled", Json::Bool(cancelled)),
-                    ])
-                    .dump(),
-                );
-            }
-        }
-        ToEngine::Stats(reply) => {
-            let _ = reply.send(render_stats(
-                &eng.metrics,
-                &eng.kv_stats(),
-                waiters.len(),
-                &eng.obs,
-                eng.cfg.verify_policy.kind.name(),
-                eng.runtime().tp_collective(),
-            ));
-        }
-        ToEngine::Events { since, reply } => {
-            let _ = reply.send(render_events(&eng.obs, since));
-        }
-        ToEngine::Metrics(reply) => {
-            let body = render_metrics_prom(
-                &eng.metrics,
-                &eng.kv_stats(),
-                waiters.len(),
-                &eng.obs,
-            );
-            let _ = reply.send(
-                Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("content_type", Json::str("text/plain; version=0.0.4")),
-                    ("metrics", Json::str(body)),
-                ])
-                .dump(),
-            );
-        }
-        ToEngine::SetPolicy(kind, reply) => {
-            eng.set_policy(kind);
-            let _ = reply.send(
-                Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("policy", Json::str(kind.name())),
-                ])
-                .dump(),
-            );
-        }
-    }
-}
-
-/// Terminal state after an engine failure: keep answering the channel with
-/// errors (clients see a reason instead of a hang) until shutdown.
-fn poisoned_drain(
-    rx: &mpsc::Receiver<ToEngine>,
-    stop: &AtomicBool,
-    poisoned: &AtomicBool,
-    msg: &str,
-) {
-    poisoned.store(true, Ordering::Relaxed);
-    eprintln!("engine thread poisoned: {msg}");
-    let line = error_line(&format!("engine poisoned: {msg}"));
-    loop {
-        match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(ToEngine::Submit(_, reply)) => {
-                let _ = reply.send(ConnEvent::Done(line.clone()));
-            }
-            Ok(ToEngine::Cancel { reply: Some(r), .. }) => {
-                let _ = r.send(line.clone());
-            }
-            Ok(ToEngine::Cancel { reply: None, .. }) => {}
-            Ok(ToEngine::Stats(r))
-            | Ok(ToEngine::SetPolicy(_, r))
-            | Ok(ToEngine::Events { reply: r, .. })
-            | Ok(ToEngine::Metrics(r)) => {
-                let _ = r.send(line.clone());
-            }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                if stop.load(Ordering::Relaxed) {
-                    return;
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => return,
-        }
-    }
-}
-
-fn error_line(msg: &str) -> String {
+pub(crate) fn error_line(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).dump()
 }
 
 fn handle_conn(
     stream: TcpStream,
-    tx: mpsc::Sender<ToEngine>,
+    router: &Router,
     tok: &Tokenizer,
 ) -> Result<()> {
     let mut writer = stream.try_clone()?;
@@ -1108,20 +868,8 @@ fn handle_conn(
         // non-request commands: stats / set_policy / cancel
         if let Some(cmd) = parsed.get("cmd").and_then(|c| c.as_str()) {
             let reply = match cmd {
-                "stats" => {
-                    let (rtx, rrx) = mpsc::channel();
-                    tx.send(ToEngine::Stats(rtx))
-                        .map_err(|_| Error::Server("engine gone".into()))?;
-                    rrx.recv()
-                        .map_err(|_| Error::Server("engine dropped reply".into()))?
-                }
-                "metrics" => {
-                    let (rtx, rrx) = mpsc::channel();
-                    tx.send(ToEngine::Metrics(rtx))
-                        .map_err(|_| Error::Server("engine gone".into()))?;
-                    rrx.recv()
-                        .map_err(|_| Error::Server("engine dropped reply".into()))?
-                }
+                "stats" => router.stats(),
+                "metrics" => router.metrics(),
                 "events" => {
                     // "since" defaults to 0 (everything still retained)
                     let since = match parsed.get("since") {
@@ -1134,19 +882,33 @@ fn handle_conn(
                             })
                             .map(|n| n as u64),
                     };
-                    match since {
-                        Some(since) => {
-                            let (rtx, rrx) = mpsc::channel();
-                            tx.send(ToEngine::Events { since, reply: rtx })
-                                .map_err(|_| Error::Server("engine gone".into()))?;
-                            rrx.recv().map_err(|_| {
-                                Error::Server("engine dropped reply".into())
-                            })?
+                    // "replica" defaults to 0: the journal is per-replica
+                    // (event sequence numbers are engine-local)
+                    let replica = match parsed.get("replica") {
+                        None => Some(0usize),
+                        Some(x) => x
+                            .as_f64()
+                            .filter(|n| {
+                                n.fract() == 0.0
+                                    && (0.0..=usize::MAX as f64).contains(n)
+                            })
+                            .map(|n| n as usize),
+                    };
+                    match (since, replica) {
+                        (Some(since), Some(replica)) => {
+                            router.events(since, replica)
                         }
-                        None => Json::obj(vec![(
+                        (None, _) => Json::obj(vec![(
                             "error",
                             Json::str(
                                 "events needs a non-negative integer 'since'",
+                            ),
+                        )])
+                        .dump(),
+                        (_, None) => Json::obj(vec![(
+                            "error",
+                            Json::str(
+                                "events needs a non-negative integer 'replica'",
                             ),
                         )])
                         .dump(),
@@ -1158,14 +920,7 @@ fn handle_conn(
                         .and_then(|i| i.as_f64())
                         .filter(|n| n.fract() == 0.0 && (0.0..=u64::MAX as f64).contains(n));
                     match id {
-                        Some(id) => {
-                            let (rtx, rrx) = mpsc::channel();
-                            tx.send(ToEngine::Cancel { id: id as u64, reply: Some(rtx) })
-                                .map_err(|_| Error::Server("engine gone".into()))?;
-                            rrx.recv().map_err(|_| {
-                                Error::Server("engine dropped reply".into())
-                            })?
-                        }
+                        Some(id) => router.cancel(id as u64),
                         None => Json::obj(vec![(
                             "error",
                             Json::str("cancel needs a non-negative integer 'id'"),
@@ -1180,14 +935,7 @@ fn handle_conn(
                         .ok_or(())
                         .and_then(|s| PolicyKind::parse(s).map_err(|_| ()));
                     match kind {
-                        Ok(kind) => {
-                            let (rtx, rrx) = mpsc::channel();
-                            tx.send(ToEngine::SetPolicy(kind, rtx))
-                                .map_err(|_| Error::Server("engine gone".into()))?;
-                            rrx.recv().map_err(|_| {
-                                Error::Server("engine dropped reply".into())
-                            })?
-                        }
+                        Ok(kind) => router.set_policy(kind),
                         Err(()) => Json::obj(vec![(
                             "error",
                             Json::str(
@@ -1210,11 +958,10 @@ fn handle_conn(
         match parse_request_value(&parsed, tok) {
             Ok(req) => {
                 let (rtx, rrx) = mpsc::channel();
-                tx.send(ToEngine::Submit(req, rtx))
-                    .map_err(|_| Error::Server("engine gone".into()))?;
+                router.submit(req, rtx);
                 // forward events until the request completes; a failed
                 // socket write means the client is gone — cancel the
-                // in-flight request so it stops consuming the engine
+                // in-flight request so it stops consuming its replica
                 let mut cur_id: Option<u64> = None;
                 loop {
                     match rrx.recv() {
@@ -1222,7 +969,7 @@ fn handle_conn(
                         Ok(ConnEvent::Line(s)) => {
                             if writeln!(writer, "{s}").is_err() {
                                 if let Some(id) = cur_id {
-                                    let _ = tx.send(ToEngine::Cancel { id, reply: None });
+                                    router.cancel_silent(id);
                                 }
                                 return Err(Error::Server(
                                     "client disconnected mid-stream".into(),
@@ -1239,7 +986,7 @@ fn handle_conn(
                             break;
                         }
                         Err(_) => {
-                            // engine thread gone (shutdown mid-request)
+                            // replica thread gone (shutdown mid-request)
                             let _ = writeln!(writer, "{}", error_line("engine unavailable"));
                             return Ok(());
                         }
@@ -1408,6 +1155,7 @@ fn parse_delta(v: &Json) -> Result<StreamEvent> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{EngineMetrics, FinishReason, KvStats};
     use crate::obs::{ObsConfig, ObsLevel};
     use crate::tokenizer::FIRST_MERGE;
 
@@ -1675,9 +1423,8 @@ mod tests {
         m.certified_tokens = 70;
         m.verified_tokens = 30;
         m.gate_repair_tokens = 6;
-        let obs = Obs::new(ObsConfig::default()).unwrap();
-        let v = Json::parse(&render_stats(&m, &kv, 5, &obs, "margin-gate", "none"))
-            .unwrap();
+        let snap = ReplicaSnapshot::new(m, kv, 5, "margin-gate", "none");
+        let v = Json::parse(&render_stats(&snap, None)).unwrap();
         assert_eq!(v.u("preemptions").unwrap(), 3);
         assert_eq!(v.s("verify_policy").unwrap(), "margin-gate");
         assert_eq!(v.u("certified_tokens").unwrap(), 70);
@@ -1702,6 +1449,7 @@ mod tests {
         assert_eq!(fr.u("cancelled").unwrap(), 3);
         assert_eq!(fr.u("timeout").unwrap(), 1);
         assert_eq!(fr.u("error").unwrap(), 0);
+        assert_eq!(fr.u("overloaded").unwrap(), 0);
         let st = v.req("store").unwrap();
         assert_eq!(st.u("live_seqs").unwrap(), 6);
         assert_eq!(st.u("live_seqs_hwm").unwrap(), 11);
@@ -1771,18 +1519,17 @@ mod tests {
         m.finished_cancelled = 15;
         m.finished_timeout = 16;
         m.finished_error = 17;
+        m.finished_overloaded = 19;
         m.tp_degree = 2;
         m.tp_allreduces = 18;
-        let obs = Obs::new(ObsConfig::default()).unwrap();
-        let v = Json::parse(&render_stats(
-            &m,
-            &KvStats::default(),
+        let snap = ReplicaSnapshot::new(
+            m.clone(),
+            KvStats::default(),
             0,
-            &obs,
             "stall",
             "tree",
-        ))
-        .unwrap();
+        );
+        let v = Json::parse(&render_stats(&snap, None)).unwrap();
         let EngineMetrics {
             steps,
             decode_steps,
@@ -1823,6 +1570,7 @@ mod tests {
             finished_cancelled,
             finished_timeout,
             finished_error,
+            finished_overloaded,
             tp_degree,
             tp_allreduces,
         } = &m;
@@ -1892,6 +1640,7 @@ mod tests {
         assert_eq!(fr.u("cancelled").unwrap(), *finished_cancelled as usize);
         assert_eq!(fr.u("timeout").unwrap(), *finished_timeout as usize);
         assert_eq!(fr.u("error").unwrap(), *finished_error as usize);
+        assert_eq!(fr.u("overloaded").unwrap(), *finished_overloaded as usize);
         let tp = v.req("tp").unwrap();
         assert_eq!(tp.u("degree").unwrap(), *tp_degree as usize);
         assert_eq!(tp.s("collective").unwrap(), "tree");
@@ -1927,12 +1676,14 @@ mod tests {
                 .unwrap();
         assert!(v2.arr("events").unwrap().is_empty());
 
-        let text = render_metrics_prom(
-            &EngineMetrics::default(),
-            &KvStats::default(),
+        let text = render_metrics_prom(&ReplicaSnapshot::from_obs(
+            EngineMetrics::default(),
+            KvStats::default(),
             0,
+            "stall",
+            "none",
             &obs,
-        );
+        ));
         assert!(text.contains("# TYPE llm42_steps_total counter"));
         assert!(text.contains("llm42_e2e_seconds_count 1"));
         assert!(text.contains("llm42_engine_digest_info{digest=\"0x"));

@@ -1,0 +1,591 @@
+//! Multi-replica router integration: the cross-replica determinism
+//! matrix, failover/poisoning, prefix-affinity soak, and backpressure
+//! shedding.
+//!
+//! The headline contract mirrors `tests/tp.rs` for tensor parallelism:
+//! the replica count is a *capacity* knob, never part of the reproducible
+//! configuration. The same deterministic workload submitted in the same
+//! order produces bitwise-identical committed streams, per-stream
+//! digests, and router fleet digests at 1, 2, and 4 replicas — across
+//! scheduler policies, prefix-cache settings, verify policies, and under
+//! forced-mismatch rollbacks. Failures are contained per replica: a
+//! poisoned replica drains from rotation while the survivors' streams
+//! stay bitwise unchanged, and only an all-dead fleet reports poisoned.
+
+use std::sync::mpsc::{self, Receiver};
+use std::sync::Arc;
+
+use llm42::engine::{
+    EngineConfig, FaultPlan, Mode, PolicyKind, Request, VerifyPolicy,
+    VerifyPolicyKind,
+};
+use llm42::obs::DIGEST_EMPTY;
+use llm42::prelude::*;
+use llm42::tokenizer::{Tokenizer, FIRST_MERGE};
+use llm42::util::json::Json;
+
+fn artifacts_dir() -> String {
+    let dir = std::env::var("LLM42_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    llm42::aot::ensure(&dir).expect("artifact generation failed");
+    dir
+}
+
+fn tok() -> Arc<Tokenizer> {
+    Arc::new(Tokenizer::default_trained(FIRST_MERGE as usize + 64).unwrap())
+}
+
+fn base_cfg() -> EngineConfig {
+    EngineConfig {
+        mode: Mode::Llm42,
+        verify_group: 2,
+        verify_window: 16,
+        max_stall_steps: 4,
+        ..Default::default()
+    }
+}
+
+/// Deterministic-only workload with a shared 32-token prefix (two full KV
+/// blocks, so prefix affinity and the prefix cache both engage) plus one
+/// unrelated prompt. All-deterministic matters: the fleet digest folds
+/// only deterministic streams, and only those are guaranteed identical
+/// across replica counts (nondet streams are batch-composition-dependent
+/// by design).
+fn det_workload() -> Vec<Request> {
+    let shared: Vec<u32> = (100..132).collect();
+    let mk = |extra: u32, n: usize, seed: u64| {
+        let mut prompt = shared.clone();
+        prompt.extend(extra..extra + 4);
+        Request {
+            prompt,
+            max_new_tokens: n,
+            deterministic: true,
+            temperature: 1.0,
+            seed,
+            ..Default::default()
+        }
+    };
+    vec![
+        mk(200, 20, 11),
+        mk(210, 16, 12),
+        mk(220, 12, 13),
+        Request {
+            prompt: (10..22).collect(),
+            max_new_tokens: 18,
+            deterministic: true,
+            temperature: 0.0,
+            seed: 0,
+            ..Default::default()
+        },
+    ]
+}
+
+/// One finished stream as it crossed the wire: global id, committed
+/// tokens, per-stream digest (hex), finish reason.
+type Stream = (u64, Vec<u32>, String, String);
+
+fn parse_done(line: &str) -> Stream {
+    let v = Json::parse(line).unwrap_or_else(|e| panic!("bad line {line}: {e}"));
+    if let Some(e) = v.get("error") {
+        panic!("request failed: {e:?}");
+    }
+    let tokens = v
+        .arr("tokens")
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap() as u32)
+        .collect();
+    (
+        v.u("id").unwrap() as u64,
+        tokens,
+        v.s("stream_digest").unwrap().to_string(),
+        v.s("finish_reason").unwrap().to_string(),
+    )
+}
+
+fn drain_done(rx: &Receiver<ConnEvent>) -> String {
+    loop {
+        match rx.recv().expect("reply channel closed without Done") {
+            ConnEvent::Done(line) => return line,
+            ConnEvent::Accepted(_) | ConnEvent::Line(_) => {}
+        }
+    }
+}
+
+/// Submit `reqs` sequentially (global ids are then a pure function of
+/// submission order), drain every stream, and return the sorted streams
+/// plus the router's fleet digest and fold count.
+fn run_fleet(
+    dir: &str,
+    cfg: &EngineConfig,
+    reqs: Vec<Request>,
+) -> (Vec<Stream>, u64, u64) {
+    let router = Router::new(dir, cfg, tok());
+    let mut rxs = Vec::with_capacity(reqs.len());
+    for r in reqs {
+        let (tx, rx) = mpsc::channel();
+        router.submit(r, tx);
+        rxs.push(rx);
+    }
+    let mut outs: Vec<Stream> =
+        rxs.iter().map(|rx| parse_done(&drain_done(rx))).collect();
+    outs.sort();
+    let c = router.counters();
+    router.join();
+    (outs, c.fleet_digest, c.fleet_seqs)
+}
+
+#[test]
+fn committed_streams_are_bitwise_identical_across_replica_counts() {
+    // The acceptance matrix: replicas {1, 2, 4} x all three scheduler
+    // policies x prefix cache on/off x verify policy {stall, margin-gate}.
+    // Streams are keyed by global id, so "identical" means the same
+    // request (by submission order) produced the same bytes — and the
+    // fleet digest, which folds (global id, stream digest) pairs, must
+    // come out equal as a single-line summary of the same fact.
+    let dir = artifacts_dir();
+    for policy in [
+        PolicyKind::PrefillFirst,
+        PolicyKind::DeadlineAware,
+        PolicyKind::FairShare,
+    ] {
+        for cache in [false, true] {
+            for vp in [VerifyPolicyKind::Stall, VerifyPolicyKind::MarginGate] {
+                let mut cfg = base_cfg();
+                cfg.policy = policy;
+                cfg.prefix_cache = cache;
+                cfg.verify_policy = VerifyPolicy::new(vp);
+                cfg.replicas = 1;
+                let base = run_fleet(&dir, &cfg, det_workload());
+                assert_eq!(base.0.len(), 4);
+                assert!(base.0.iter().all(|(_, t, _, _)| !t.is_empty()));
+                assert_eq!(
+                    base.2, 4,
+                    "every deterministic stream must fold into the fleet digest"
+                );
+                for replicas in [2usize, 4] {
+                    cfg.replicas = replicas;
+                    let got = run_fleet(&dir, &cfg, det_workload());
+                    assert_eq!(
+                        base, got,
+                        "replicas={replicas} {policy:?} cache={cache} {vp:?}: \
+                         diverged from the single-replica run"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_rollbacks_are_replica_count_invariant() {
+    // Fault injection forces a verifier mismatch on every verify lane of
+    // every replica — maximum rollback pressure. Rollbacks replay and
+    // rewrite speculative tokens *before* they commit, so the wire
+    // streams and fleet digest stay bitwise identical at every count.
+    let dir = artifacts_dir();
+    let mut cfg = base_cfg();
+    cfg.fault = FaultPlan::EveryNthLane { every: 1, at_index: 0 };
+    cfg.replicas = 1;
+    let base = run_fleet(&dir, &cfg, det_workload());
+    assert!(base.0.iter().all(|(_, t, _, _)| !t.is_empty()));
+    for replicas in [2usize, 4] {
+        cfg.replicas = replicas;
+        let got = run_fleet(&dir, &cfg, det_workload());
+        assert_eq!(
+            base, got,
+            "replicas={replicas}: rollback story diverged from one replica"
+        );
+    }
+    // the fault genuinely fired: visible in the merged stats surface
+    cfg.replicas = 2;
+    let router = Router::new(&dir, &cfg, tok());
+    let mut rxs = Vec::new();
+    for r in det_workload() {
+        let (tx, rx) = mpsc::channel();
+        router.submit(r, tx);
+        rxs.push(rx);
+    }
+    for rx in &rxs {
+        let _ = drain_done(rx);
+    }
+    let stats = Json::parse(&router.stats()).unwrap();
+    assert!(
+        stats.u("rollbacks").unwrap() > 0,
+        "EveryNthLane must force rollbacks: {stats:?}"
+    );
+    router.join();
+}
+
+#[test]
+fn dead_replica_drains_from_rotation_without_disturbing_the_rest() {
+    let dir = artifacts_dir();
+
+    // undisturbed control: same workload, same replica count, no fault
+    let mk_reqs = || -> Vec<Request> {
+        (0..6u32)
+            .map(|i| Request {
+                prompt: (10 + i * 20..10 + i * 20 + 8).collect(),
+                max_new_tokens: 40,
+                deterministic: true,
+                temperature: 1.0,
+                seed: 100 + i as u64,
+                ..Default::default()
+            })
+            .collect()
+    };
+    let mut cfg = base_cfg();
+    cfg.replicas = 3;
+    cfg.router_affinity = false; // spread-by-load placement
+    cfg.eos_token = 9999; // no natural EOS: budgets run to completion
+    let control = run_fleet(&dir, &cfg, mk_reqs());
+    assert_eq!(control.0.len(), 6);
+
+    // poison exactly replica 1: it fails on its 3rd engine step
+    cfg.fault = FaultPlan::FailStepAt { at_step: 3 };
+    cfg.fault_replica = Some(1);
+    let router = Router::new(&dir, &cfg, tok());
+    let mut rxs = Vec::new();
+    for r in mk_reqs() {
+        let (tx, rx) = mpsc::channel();
+        router.submit(r, tx);
+        rxs.push(rx);
+    }
+    let mut errored = 0usize;
+    let mut survived: Vec<Stream> = Vec::new();
+    for rx in &rxs {
+        let line = drain_done(rx);
+        let v = Json::parse(&line).unwrap();
+        if let Some(e) = v.get("error") {
+            // the dead replica's in-flight requests fail loudly
+            assert_eq!(v.s("finish_reason").unwrap(), "error", "{line}");
+            assert!(
+                e.as_str().unwrap().contains("engine failed"),
+                "error must carry the step failure: {line}"
+            );
+            errored += 1;
+        } else {
+            survived.push(parse_done(&line));
+        }
+    }
+    assert!(
+        errored >= 1,
+        "least-loaded placement over 3 replicas must land work on the \
+         poisoned one"
+    );
+    assert_eq!(errored + survived.len(), 6);
+
+    // survivors are bitwise identical to the undisturbed run, matched by
+    // global id (ids are submission-order, identical in both runs)
+    for s in &survived {
+        let c = control
+            .0
+            .iter()
+            .find(|c| c.0 == s.0)
+            .expect("control run has every id");
+        assert_eq!(c, s, "a live replica's stream changed because a \
+                          *different* replica died");
+    }
+
+    // The fleet is degraded, not poisoned. The error Done lines are sent
+    // a hair before the replica marks itself dead, so give the drain a
+    // bounded moment to land.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while router.counters().live_replicas != 2 {
+        assert!(std::time::Instant::now() < deadline, "replica 1 never drained");
+        std::thread::yield_now();
+    }
+    let c = router.counters();
+    assert_eq!(c.replicas, 3);
+    assert_eq!(c.live_replicas, 2);
+    assert!(!router.poisoned());
+    let stats = Json::parse(&router.stats()).unwrap();
+    let per = stats.req("router").unwrap().arr("per_replica").unwrap();
+    assert_eq!(per.len(), 3);
+    let lives: Vec<bool> = per
+        .iter()
+        .map(|e| e.req("live").unwrap().as_bool().unwrap())
+        .collect();
+    assert_eq!(lives, vec![true, false, true]);
+
+    // new submissions route around the corpse
+    let (tx, rx) = mpsc::channel();
+    router.submit(
+        Request {
+            prompt: (300..308).collect(),
+            max_new_tokens: 6,
+            deterministic: true,
+            temperature: 0.0,
+            seed: 0,
+            ..Default::default()
+        },
+        tx,
+    );
+    let after = parse_done(&drain_done(&rx));
+    assert!(!after.1.is_empty());
+
+    // cancel resolves the owning replica regardless of which one it is:
+    // park a long request, cancel it by global id from "outside"
+    let (tx, rx) = mpsc::channel();
+    router.submit(
+        Request {
+            prompt: (400..408).collect(),
+            max_new_tokens: 200,
+            deterministic: true,
+            temperature: 1.0,
+            seed: 77,
+            ..Default::default()
+        },
+        tx,
+    );
+    let gid = loop {
+        match rx.recv().unwrap() {
+            ConnEvent::Accepted(id) => break id,
+            ConnEvent::Done(line) => panic!("finished before accept: {line}"),
+            ConnEvent::Line(_) => {}
+        }
+    };
+    let ack = Json::parse(&router.cancel(gid)).unwrap();
+    assert_eq!(ack.u("id").unwrap() as u64, gid);
+    assert!(ack.req("cancelled").unwrap().as_bool().unwrap(), "{ack:?}");
+    let fin = parse_done(&drain_done(&rx));
+    assert_eq!(fin.3, "cancelled");
+    // cancelling a finished / unknown id is an acknowledged no-op
+    let ack = Json::parse(&router.cancel(gid)).unwrap();
+    assert!(!ack.req("cancelled").unwrap().as_bool().unwrap());
+    let ack = Json::parse(&router.cancel(999_999)).unwrap();
+    assert!(!ack.req("cancelled").unwrap().as_bool().unwrap());
+
+    router.join();
+}
+
+#[test]
+fn all_replicas_dead_reports_poisoned_like_the_single_engine() {
+    let dir = artifacts_dir();
+    let mut cfg = base_cfg();
+    cfg.replicas = 2;
+    cfg.fault = FaultPlan::FailStepAt { at_step: 2 };
+    // fault_replica = None: every replica carries the fault plan
+    let router = Router::new(&dir, &cfg, tok());
+    let mut rxs = Vec::new();
+    for i in 0..4u32 {
+        let (tx, rx) = mpsc::channel();
+        router.submit(
+            Request {
+                prompt: (10 + i..18 + i).collect(),
+                max_new_tokens: 30,
+                deterministic: true,
+                temperature: 1.0,
+                seed: i as u64,
+                ..Default::default()
+            },
+            tx,
+        );
+        rxs.push(rx);
+    }
+    for rx in &rxs {
+        let v = Json::parse(&drain_done(rx)).unwrap();
+        assert!(v.get("error").is_some(), "every request must fail: {v:?}");
+    }
+    // join first: the replica threads finish their mark_dead bookkeeping
+    // before exiting, so the poisoned flag is settled afterwards
+    router.join();
+    assert!(router.poisoned());
+    let stats = Json::parse(&router.stats()).unwrap();
+    assert!(
+        stats.s("error").unwrap().contains("poisoned"),
+        "poisoned fleet stats: {stats:?}"
+    );
+    // routing rejects new work without any live thread in the loop
+    let (tx, rx) = mpsc::channel();
+    router.submit(Request::greedy(vec![5, 6], 2, false), tx);
+    let v = Json::parse(&drain_done(&rx)).unwrap();
+    assert!(v.s("error").unwrap().contains("poisoned"), "{v:?}");
+}
+
+#[test]
+fn affinity_soak_multiturn_churn_hits_and_never_leaks() {
+    // 10k-request multiturn churn through 4 replicas: 40 sessions, 250
+    // turns each, submitted in per-turn waves. Every session's turn
+    // shares its 32-token prefix (two complete KV blocks) with the
+    // previous turn, so after the first turn, prefix-affinity should pin
+    // the session to one replica.
+    let dir = artifacts_dir();
+    let mut cfg = base_cfg();
+    cfg.mode = Mode::NonDeterministic; // cheapest path: churn, not determinism
+    cfg.replicas = 4;
+    cfg.prefix_cache = true;
+    cfg.router_queue = 4096; // never shed in this phase
+    cfg.eos_token = 9999;
+    let router = Router::new(&dir, &cfg, tok());
+
+    let sessions = 40usize;
+    let turns = 250usize;
+    let prefix = |s: usize| -> Vec<u32> {
+        (0..32).map(|i| (40 + s * 32 + i) as u32 % 400 + 3).collect()
+    };
+    let mut served = 0usize;
+    for t in 0..turns {
+        let mut rxs = Vec::with_capacity(sessions);
+        for s in 0..sessions {
+            let mut prompt = prefix(s);
+            // the turn-specific tail lives in a partial block: it never
+            // changes the complete-block prefix hashes
+            prompt.extend([(t % 300) as u32 + 5, (s % 300) as u32 + 5]);
+            let (tx, rx) = mpsc::channel();
+            router.submit(Request::greedy(prompt, 1, false), tx);
+            rxs.push(rx);
+        }
+        for rx in &rxs {
+            let v = Json::parse(&drain_done(rx)).unwrap();
+            assert!(v.get("error").is_none(), "churn request failed: {v:?}");
+            served += 1;
+        }
+    }
+    assert_eq!(served, sessions * turns);
+    assert_eq!(served, 10_000, "the soak must actually be 10k requests");
+
+    let c = router.counters();
+    assert_eq!(c.routed, served as u64);
+    assert_eq!(c.shed, 0, "nothing sheds under an uncontended queue");
+    // Round-robin / least-loaded placement would co-locate a session's
+    // next turn with probability ~1/replicas = 0.25. Affinity must beat
+    // that decisively; structurally every turn after a session's first is
+    // a hit, so the rate should approach (turns-1)/turns.
+    let hit_rate = c.affinity_hits as f64 / c.routed as f64;
+    assert!(
+        hit_rate > 0.9,
+        "affinity hit rate {hit_rate:.3} not above round-robin baseline 0.25"
+    );
+
+    // zero KV leaks per replica: everything drained, every page returned
+    for (i, (live, snap)) in router.snapshots().into_iter().enumerate() {
+        assert!(live, "replica {i} died during the soak");
+        let snap = snap.expect("live replica answers the snapshot poll");
+        assert_eq!(snap.kv.held_pages, 0, "replica {i} leaked KV pages");
+        assert_eq!(snap.metrics.live_seqs, 0, "replica {i} holds live seqs");
+        assert!(
+            snap.metrics.steps > 0,
+            "replica {i} never served anything — placement is broken"
+        );
+    }
+    router.join();
+}
+
+#[test]
+fn backpressure_sheds_with_overloaded_on_the_wire() {
+    let dir = artifacts_dir();
+    let mut cfg = base_cfg();
+    cfg.replicas = 2;
+    cfg.router_queue = 2; // p0 threshold = 1, p>=2 threshold = 2
+    cfg.router_affinity = false;
+    cfg.eos_token = 9999;
+    let router = Router::new(&dir, &cfg, tok());
+
+    // fill both replicas to the p0 threshold with long-running requests
+    let long = |seed: u64| Request {
+        prompt: (10..26).collect(),
+        max_new_tokens: 100,
+        deterministic: true,
+        temperature: 1.0,
+        seed,
+        ..Default::default()
+    };
+    let mut fillers = Vec::new();
+    for i in 0..2 {
+        let (tx, rx) = mpsc::channel();
+        router.submit(long(i), tx);
+        fillers.push(rx);
+    }
+
+    // every further p0 request sheds immediately, with the synthesized
+    // wire shape: overloaded, zero tokens, the empty stream digest
+    for i in 0..4u64 {
+        let (tx, rx) = mpsc::channel();
+        router.submit(long(50 + i), tx);
+        let v = Json::parse(&drain_done(&rx)).unwrap();
+        assert_eq!(v.s("finish_reason").unwrap(), "overloaded", "{v:?}");
+        assert!(v.arr("tokens").unwrap().is_empty());
+        assert_eq!(
+            v.s("stream_digest").unwrap(),
+            llm42::obs::digest_hex(DIGEST_EMPTY)
+        );
+    }
+
+    // priority classes shed from the bottom: a p2 request still routes at
+    // the same occupancy that shed the p0s
+    let (tx, rx) = mpsc::channel();
+    let mut urgent = long(99);
+    urgent.priority = 2;
+    urgent.max_new_tokens = 4;
+    router.submit(urgent, tx);
+    let v = Json::parse(&drain_done(&rx)).unwrap();
+    assert!(
+        v.get("error").is_none()
+            && v.s("finish_reason").unwrap() != "overloaded",
+        "p2 must clear the p0 shed threshold: {v:?}"
+    );
+
+    // counters + merged stats agree with what crossed the wire
+    let c = router.counters();
+    assert_eq!(c.shed, 4);
+    assert_eq!(c.routed, 3);
+    for rx in &fillers {
+        let _ = drain_done(rx);
+    }
+    let stats = Json::parse(&router.stats()).unwrap();
+    let fr = stats.req("finish_reasons").unwrap();
+    assert_eq!(fr.u("overloaded").unwrap(), 4);
+    let r = stats.req("router").unwrap();
+    assert_eq!(r.u("shed").unwrap(), 4);
+    assert_eq!(r.u("replicas").unwrap(), 2);
+    router.join();
+}
+
+#[test]
+fn router_stats_aggregate_replicas_and_expose_the_fleet_digest() {
+    let dir = artifacts_dir();
+    let mut cfg = base_cfg();
+    cfg.replicas = 2;
+    let router = Router::new(&dir, &cfg, tok());
+    let mut rxs = Vec::new();
+    for r in det_workload() {
+        let (tx, rx) = mpsc::channel();
+        router.submit(r, tx);
+        rxs.push(rx);
+    }
+    let streams: Vec<Stream> =
+        rxs.iter().map(|rx| parse_done(&drain_done(rx))).collect();
+    assert_eq!(streams.len(), 4);
+
+    let stats = Json::parse(&router.stats()).unwrap();
+    let r = stats.req("router").unwrap();
+    assert_eq!(r.u("replicas").unwrap(), 2);
+    assert_eq!(r.u("live_replicas").unwrap(), 2);
+    assert_eq!(r.u("routed").unwrap(), 4);
+    assert_eq!(r.u("fleet_sequences").unwrap(), 4);
+    assert_eq!(
+        r.s("fleet_digest").unwrap(),
+        llm42::obs::digest_hex(router.fleet_digest())
+    );
+    let per = r.arr("per_replica").unwrap();
+    assert_eq!(per.len(), 2);
+    let mut per_committed = 0usize;
+    for e in per {
+        assert!(e.req("live").unwrap().as_bool().unwrap());
+        assert!(e.get("engine_digest").is_some());
+        assert!(e.get("kv_available_pages").is_some());
+        per_committed += e.u("committed_tokens").unwrap();
+    }
+    // the merged engine counters are the sum of the per-replica ones
+    assert_eq!(stats.u("committed_tokens").unwrap(), per_committed);
+    assert!(per_committed > 0);
+
+    // Prometheus exposition carries the router series
+    let m = Json::parse(&router.metrics()).unwrap();
+    let body = m.s("metrics").unwrap();
+    assert!(body.contains("llm42_router_replicas 2"));
+    assert!(body.contains("llm42_router_routed_total 4"));
+    assert!(body.contains("llm42_router_shed_total 0"));
+    assert!(body.contains("llm42_router_fleet_digest_info{digest=\"0x"));
+    router.join();
+}
